@@ -1,0 +1,152 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+  train_step.hlo.txt  — one Adam step of the SAE (flat arg list)
+  predict.hlo.txt     — forward pass (logits, xhat)
+  project.hlo.txt     — bi-level l1inf projection of w1 via the Pallas
+                        kernels (interpret=True -> plain HLO)
+  manifest.txt        — key=value description (dims, arg ordering) parsed
+                        by rust/src/runtime/artifact.rs
+
+Run: ``cd python && python -m compile.aot [--d 2000 --h 128 --k 2 ...]``
+(``make artifacts`` wraps this and skips the rebuild when inputs are
+unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.model import Dims
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_train_step(dims: Dims, activation: str) -> str:
+    """Flat-argument train step: 8 params, 8 m, 8 v, step, x, y, mask, lr, alpha."""
+    shapes = model.param_shapes(dims)
+
+    def flat_step(*args):
+        params = args[0:8]
+        m_state = args[8:16]
+        v_state = args[16:24]
+        step, x, y_onehot, mask, lr, alpha = args[24:30]
+        new_p, new_m, new_v, new_step, loss, acc = model.train_step(
+            params, m_state, v_state, step, x, y_onehot, mask, lr, alpha,
+            activation,
+        )
+        return (*new_p, *new_m, *new_v, new_step, loss, acc)
+
+    specs = (
+        [_spec(s) for s in shapes] * 3
+        + [
+            _spec(()),                       # step
+            _spec((dims.batch, dims.d)),     # x
+            _spec((dims.batch, dims.k)),     # y one-hot
+            _spec((dims.d,)),                # feature mask
+            _spec(()),                       # lr
+            _spec(()),                       # alpha
+        ]
+    )
+    return to_hlo_text(jax.jit(flat_step).lower(*specs))
+
+
+def lower_predict(dims: Dims, activation: str, batch: int) -> str:
+    shapes = model.param_shapes(dims)
+
+    def flat_predict(*args):
+        params = args[0:8]
+        x = args[8]
+        return model.predict(params, x, activation)
+
+    specs = [_spec(s) for s in shapes] + [_spec((batch, dims.d))]
+    return to_hlo_text(jax.jit(flat_predict).lower(*specs))
+
+
+def lower_project(dims: Dims) -> str:
+    def proj(w1, eta):
+        return (model.project_w1(w1, eta),)
+
+    return to_hlo_text(
+        jax.jit(proj).lower(_spec((dims.d, dims.h)), _spec(()))
+    )
+
+
+def write_manifest(path: str, dims: Dims, activation: str, eval_batch: int):
+    lines = [
+        f"version={MANIFEST_VERSION}",
+        f"d={dims.d}",
+        f"h={dims.h}",
+        f"k={dims.k}",
+        f"batch={dims.batch}",
+        f"eval_batch={eval_batch}",
+        f"activation={activation}",
+        "param_order=" + ",".join(model.PARAM_NAMES),
+        "train_step=train_step.hlo.txt",
+        "predict=predict.hlo.txt",
+        "project=project.hlo.txt",
+        # train_step arg layout: params(8), m(8), v(8), step, x, y, mask, lr, alpha
+        "train_step_args=params8,m8,v8,step,x,y,mask,lr,alpha",
+        "train_step_outs=params8,m8,v8,step,loss,acc",
+    ]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--d", type=int, default=2000, help="input features")
+    ap.add_argument("--h", type=int, default=128, help="hidden width")
+    ap.add_argument("--k", type=int, default=2, help="classes / latent dim")
+    ap.add_argument("--batch", type=int, default=100, help="train batch")
+    ap.add_argument("--eval-batch", type=int, default=100, help="predict batch")
+    ap.add_argument("--activation", choices=("silu", "relu"), default="silu")
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+
+    dims = Dims(d=args.d, h=args.h, k=args.k, batch=args.batch)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in (
+        ("train_step", lower_train_step(dims, args.activation)),
+        ("predict", lower_predict(dims, args.activation, args.eval_batch)),
+        ("project", lower_project(dims)),
+    ):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    write_manifest(
+        os.path.join(args.out_dir, "manifest.txt"), dims, args.activation,
+        args.eval_batch,
+    )
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

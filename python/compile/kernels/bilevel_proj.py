@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernels for the bi-level l_{1,inf} projection.
+
+The paper's parallel decomposition (CPU thread-pool over columns, Figure 4)
+maps onto the TPU as a Pallas *grid over column tiles* (DESIGN.md
+par.Hardware-Adaptation):
+
+* ``colmax_pallas``   — step 1 of Algorithm 2: per-column max-abs,
+  grid over column tiles, each (n, TILE_M) block reduced inside VMEM.
+* ``l1simplex_pallas`` — step 2: soft-threshold/projection of the
+  aggregated vector v onto the l1 ball (single block: m floats fit VMEM).
+* ``clip_pallas``     — step 3: clamp column j to [-u_j, u_j], grid over
+  column tiles again.
+* ``bilevel_l1inf_pallas`` — the composed projection; this is what
+  ``model.project_weights`` lowers into the AOT artifact.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO ops that the
+Rust runtime executes. Real-TPU perf is *estimated* (EXPERIMENTS.md
+par.Perf-L1) from the VMEM/bytes schedule, which is what we optimize here.
+
+VMEM sizing: a (n, TILE_M) f32 block is n*TILE_M*4 bytes; TILE_M=256 keeps
+blocks of n=4096-row matrices at 4 MiB, inside the ~16 MiB VMEM budget with
+double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-tile width. Multiple of 128 (TPU lane width); see module docstring.
+TILE_M = 256
+
+
+def _colmax_kernel(y_ref, o_ref):
+    """o[j] = max_i |y[i, j]| for the tile's columns."""
+    o_ref[...] = jnp.max(jnp.abs(y_ref[...]), axis=0)
+
+
+def colmax_pallas(y: jnp.ndarray) -> jnp.ndarray:
+    """Per-column infinity norm via a Pallas grid over column tiles."""
+    n, m = y.shape
+    tile = min(TILE_M, m)
+    grid = (pl.cdiv(m, tile),)
+    return pl.pallas_call(
+        _colmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, tile), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((tile,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m,), y.dtype),
+        interpret=True,
+    )(y)
+
+
+def _l1simplex_kernel(v_ref, eta_ref, u_ref):
+    """u = P^1_eta(v) for nonnegative v (the aggregated norms).
+
+    Sort + cumsum inside the (single) block; identical math to
+    ``ref.project_l1_ball`` restricted to v >= 0.
+    """
+    v = v_ref[...]
+    eta = eta_ref[0]
+    inside = jnp.sum(v) <= eta
+    s = jnp.sort(v)[::-1]
+    css = jnp.cumsum(s)
+    k = jnp.arange(1, s.shape[0] + 1, dtype=v.dtype)
+    cand = (css - eta) / k
+    active = s > cand
+    rho = jnp.maximum(jnp.sum(active) - 1, 0)
+    tau = jnp.maximum(cand[rho], 0.0)
+    tau = jnp.where(inside, jnp.zeros_like(tau), tau)
+    u_ref[...] = jnp.maximum(v - tau, 0.0)
+
+
+def l1simplex_pallas(v: jnp.ndarray, eta: jnp.ndarray) -> jnp.ndarray:
+    """Project the (nonnegative) aggregate vector onto the l1 ball."""
+    (m,) = v.shape
+    eta = jnp.asarray(eta, dtype=v.dtype).reshape((1,))
+    return pl.pallas_call(
+        _l1simplex_kernel,
+        in_specs=[
+            pl.BlockSpec((m,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
+        interpret=True,
+    )(v, eta)
+
+
+def _clip_kernel(y_ref, u_ref, o_ref):
+    """o[:, j] = clamp(y[:, j], -u[j], u[j]) for the tile's columns."""
+    u = u_ref[...]
+    o_ref[...] = jnp.clip(y_ref[...], -u[None, :], u[None, :])
+
+
+def clip_pallas(y: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Per-column clamp via a Pallas grid over column tiles."""
+    n, m = y.shape
+    tile = min(TILE_M, m)
+    grid = (pl.cdiv(m, tile),)
+    return pl.pallas_call(
+        _clip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, tile), lambda j: (0, j)),
+            pl.BlockSpec((tile,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((n, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), y.dtype),
+        interpret=True,
+    )(y, u)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bilevel_l1inf_pallas(y: jnp.ndarray, eta: jnp.ndarray) -> jnp.ndarray:
+    """Bi-level l_{1,inf} projection composed from the three kernels.
+
+    The three-stage pipeline reads Y twice and writes X once (3*n*m*4
+    bytes of HBM traffic) — the bandwidth-roofline schedule the Rust
+    implementation also follows.
+    """
+    v = colmax_pallas(y)
+    u = l1simplex_pallas(v, eta)
+    return clip_pallas(y, u)

@@ -1,0 +1,121 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests/``; the same functions define the semantics the Rust
+projection library mirrors (golden vectors in ``python/tests/test_golden.py``
+are generated from here and cross-checked by ``rust/tests/xlayer.rs``).
+
+All functions are shape-polymorphic, jit-able, pure jnp.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def col_max_abs(y: jnp.ndarray) -> jnp.ndarray:
+    """Per-column infinity norm of ``y`` (n, m) -> (m,).
+
+    Step 1 of the paper's Algorithm 2 (aggregation by the q = inf norm).
+    """
+    return jnp.max(jnp.abs(y), axis=0)
+
+
+def col_l1(y: jnp.ndarray) -> jnp.ndarray:
+    """Per-column l1 norm (aggregation for Algorithm 3)."""
+    return jnp.sum(jnp.abs(y), axis=0)
+
+
+def col_l2(y: jnp.ndarray) -> jnp.ndarray:
+    """Per-column l2 norm (aggregation for Algorithm 4)."""
+    return jnp.sqrt(jnp.sum(y * y, axis=0))
+
+
+def l1_ball_threshold(v: jnp.ndarray, eta) -> jnp.ndarray:
+    """Soft threshold tau >= 0 with sum((|v_i| - tau)_+) = eta.
+
+    Sort-based simplex threshold (Held et al. / Duchi et al.): the jnp
+    analogue of the Rust ``l1::threshold_sort``. Returns a scalar; 0 when
+    ``v`` is already inside the ball.
+    """
+    a = jnp.abs(v)
+    inside = jnp.sum(a) <= eta
+    u = jnp.sort(a)[::-1]
+    css = jnp.cumsum(u)
+    k = jnp.arange(1, u.shape[0] + 1, dtype=v.dtype)
+    cand = (css - eta) / k
+    active = u > cand
+    # rho = last active index; when not inside the ball at least index 0 is
+    # active (u_0 > (u_0 - eta)/1 whenever eta > 0).
+    rho = jnp.maximum(jnp.sum(active) - 1, 0)
+    tau = jnp.maximum(cand[rho], 0.0)
+    return jnp.where(inside, jnp.zeros_like(tau), tau)
+
+
+def project_l1_ball(v: jnp.ndarray, eta) -> jnp.ndarray:
+    """Euclidean projection of a vector onto the l1 ball of radius eta."""
+    tau = l1_ball_threshold(v, eta)
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+
+
+def clip_columns(y: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Clamp column j of ``y`` to [-u_j, u_j] (per-column l-inf ball
+    projection; step 3 of Algorithm 2)."""
+    return jnp.clip(y, -u[None, :], u[None, :])
+
+
+def bilevel_l1inf(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Bi-level l_{1,inf} projection (paper Algorithm 2), pure jnp.
+
+    Mirrors ``mlproj::projection::bilevel::bilevel_l1inf``.
+    """
+    v = col_max_abs(y)
+    u = project_l1_ball(v, eta)
+    return clip_columns(y, u)
+
+
+def _colwise_l1_threshold(y: jnp.ndarray, etas: jnp.ndarray) -> jnp.ndarray:
+    """Per-column soft thresholds: column j projected to radius etas[j]."""
+    a = jnp.abs(y)
+    u = jnp.sort(a, axis=0)[::-1, :]
+    css = jnp.cumsum(u, axis=0)
+    n = y.shape[0]
+    k = jnp.arange(1, n + 1, dtype=y.dtype)[:, None]
+    cand = (css - etas[None, :]) / k
+    active = u > cand
+    rho = jnp.maximum(jnp.sum(active, axis=0) - 1, 0)
+    tau = jnp.take_along_axis(cand, rho[None, :], axis=0)[0]
+    inside = jnp.sum(a, axis=0) <= etas
+    return jnp.where(inside, 0.0, jnp.maximum(tau, 0.0))
+
+
+def bilevel_l11(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Bi-level l_{1,1} projection (Algorithm 3), pure jnp."""
+    v = col_l1(y)
+    u = project_l1_ball(v, eta)
+    tau_j = _colwise_l1_threshold(y, u)
+    return jnp.sign(y) * jnp.maximum(jnp.abs(y) - tau_j[None, :], 0.0)
+
+
+def bilevel_l12(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Bi-level l_{1,2} projection (Algorithm 4) == exact l_{1,2}."""
+    v = col_l2(y)
+    u = project_l1_ball(v, eta)
+    safe = jnp.maximum(v, 1e-30)
+    scale = jnp.where(v > u, u / safe, 1.0)
+    return y * scale[None, :]
+
+
+def l1inf_norm(y: jnp.ndarray):
+    """The l_{1,inf} norm (Eq. 10): sum of column max-abs."""
+    return jnp.sum(col_max_abs(y))
+
+
+def l11_norm(y: jnp.ndarray):
+    """The l_{1,1} norm: sum of absolute entries."""
+    return jnp.sum(jnp.abs(y))
+
+
+def l12_norm(y: jnp.ndarray):
+    """The l_{1,2} norm: sum of column l2 norms."""
+    return jnp.sum(col_l2(y))

@@ -1,0 +1,161 @@
+"""Layer-2: the paper's supervised auto-encoder (SAE) in JAX.
+
+Architecture (par.7.3.1): symmetric fully-connected SAE
+  encoder:  x (d) -> hidden (h, SiLU/ReLU) -> latent z (k = #classes)
+  decoder:  z -> hidden (h, SiLU/ReLU) -> xhat (d)
+loss (Eq. 18):  phi = alpha * Huber(x, xhat) + CrossEntropy(y, z)
+
+The optimizer is hand-rolled Adam (optax is not in the image). Everything
+here is *build-time only*: ``aot.py`` lowers ``train_step`` / ``predict`` /
+``project_w1`` to HLO text once; the Rust coordinator executes the
+artifacts through PJRT on the request path.
+
+Parameter / optimizer-state ordering is the tuple order of PARAM_NAMES —
+the Rust side (coordinator/params.rs) relies on it; change it only together
+with the manifest version.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bilevel_proj import bilevel_l1inf_pallas
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+HUBER_DELTA = 1.0
+
+
+class Dims(NamedTuple):
+    """Static model dimensions baked into the artifact."""
+
+    d: int  # input features
+    h: int  # hidden width
+    k: int  # latent size == number of classes
+    batch: int  # fixed lowering batch size
+
+
+def param_shapes(dims: Dims):
+    """Shapes of the 8 parameter arrays, in PARAM_NAMES order."""
+    d, h, k = dims.d, dims.h, dims.k
+    return (
+        (d, h),  # w1
+        (h,),  # b1
+        (h, k),  # w2
+        (k,),  # b2
+        (k, h),  # w3
+        (h,),  # b3
+        (h, d),  # w4
+        (d,),  # b4
+    )
+
+
+def init_params(dims: Dims, key):
+    """He-style init, matching the Rust-side fallback initializer."""
+    shapes = param_shapes(dims)
+    keys = jax.random.split(key, len(shapes))
+    params = []
+    for shp, kk in zip(shapes, keys):
+        if len(shp) == 2:
+            scale = jnp.sqrt(2.0 / shp[0])
+            params.append(scale * jax.random.normal(kk, shp, dtype=jnp.float32))
+        else:
+            params.append(jnp.zeros(shp, dtype=jnp.float32))
+    return tuple(params)
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    return jax.nn.silu(x)  # paper's tables use SiLU
+
+
+def forward(params, x, activation: str = "silu"):
+    """Forward pass: returns (logits z, reconstruction xhat)."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    hid = _act(x @ w1 + b1, activation)
+    z = hid @ w2 + b2  # latent == logits (k = #classes)
+    dec = _act(z @ w3 + b3, activation)
+    xhat = dec @ w4 + b4
+    return z, xhat
+
+
+def huber(x, xhat, delta: float = HUBER_DELTA):
+    """Smooth-l1 (Huber) reconstruction loss (mean over batch and dims)."""
+    r = jnp.abs(x - xhat)
+    quad = 0.5 * r * r
+    lin = delta * (r - 0.5 * delta)
+    return jnp.mean(jnp.where(r <= delta, quad, lin))
+
+
+def cross_entropy(y_onehot, logits):
+    """Mean cross entropy between one-hot labels and latent logits."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def loss_fn(params, x, y_onehot, alpha, activation: str = "silu"):
+    """Eq. 18 objective phi = alpha*Huber + CE; returns (loss, (z, xhat))."""
+    z, xhat = forward(params, x, activation)
+    return alpha * huber(x, xhat) + cross_entropy(y_onehot, z), (z, xhat)
+
+
+def train_step(params, m_state, v_state, step, x, y_onehot, mask, lr, alpha,
+               activation: str = "silu"):
+    """One Adam step with a frozen-support feature mask.
+
+    ``mask`` (d,) multiplies the rows of w1 *and* the columns of w4 after
+    the update — the paper's double-descent second phase keeps zeroed
+    features frozen (Alg. 8 line 8); with mask = 1 this is a plain step.
+
+    Returns (params', m', v', step', loss, batch_accuracy).
+    """
+    (loss, (z, _)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y_onehot, alpha, activation
+    )
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * (g * g)
+        update = lr * (m / bc1) / (jnp.sqrt(v / bc2) + ADAM_EPS)
+        new_params.append(p - update)
+        new_m.append(m)
+        new_v.append(v)
+    # Freeze masked-out features: rows of w1, columns of w4.
+    new_params[0] = new_params[0] * mask[:, None]
+    new_params[6] = new_params[6] * mask[None, :]
+    acc = jnp.mean(
+        (jnp.argmax(z, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32)
+    )
+    return tuple(new_params), tuple(new_m), tuple(new_v), step, loss, acc
+
+
+def predict(params, x, activation: str = "silu"):
+    """Inference entry point: (logits, xhat)."""
+    return forward(params, x, activation)
+
+
+def project_w1(w1, eta):
+    """Bi-level l_{1,inf} projection of the input layer, feature-major.
+
+    Features are *rows* of w1 (d, h); the paper's projection zeroes
+    feature columns, so we project the transpose through the Layer-1
+    Pallas kernel and transpose back. This function is lowered to its own
+    artifact and used by the cross-layer equivalence tests; the Rust
+    trainer's hot path runs the native implementation.
+    """
+    return bilevel_l1inf_pallas(w1.T, eta).T
+
+
+def feature_norms(w1):
+    """Per-feature infinity norms of w1 (for mask extraction): (d,)."""
+    return jnp.max(jnp.abs(w1), axis=1)

@@ -1,0 +1,65 @@
+"""Golden cross-layer vectors.
+
+Generates deterministic projection inputs/outputs from the jnp oracle into
+``<repo>/golden/*.csv``; the Rust integration test ``rust/tests/xlayer.rs``
+replays the same inputs through the native implementation and asserts
+equality. If the files already exist this test verifies they still match
+the oracle (guarding against silent semantic drift on either side).
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "golden")
+
+CASES = [
+    # (name, n, m, eta, seed)
+    ("small", 5, 7, 2.0, 1),
+    ("tall", 50, 4, 1.0, 2),
+    ("wide", 4, 60, 3.5, 3),
+    ("square", 24, 24, 0.25, 4),
+]
+
+
+def matrix_for(seed, n, m):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0, (n, m)).astype(np.float32)
+
+
+def write_csv(path, arr):
+    np.savetxt(path, arr.reshape(arr.shape[0], -1), delimiter=",", fmt="%.9g")
+
+
+def read_csv(path):
+    return np.loadtxt(path, delimiter=",", dtype=np.float32)
+
+
+def test_generate_and_verify_golden():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, n, m, eta, seed in CASES:
+        y = matrix_for(seed, n, m)
+        out = {
+            "bilevel_l1inf": np.asarray(ref.bilevel_l1inf(jnp.asarray(y), eta)),
+            "bilevel_l11": np.asarray(ref.bilevel_l11(jnp.asarray(y), eta)),
+            "bilevel_l12": np.asarray(ref.bilevel_l12(jnp.asarray(y), eta)),
+        }
+        in_path = os.path.join(GOLDEN_DIR, f"{name}_input.csv")
+        if not os.path.exists(in_path):
+            write_csv(in_path, y)
+            with open(os.path.join(GOLDEN_DIR, f"{name}_meta.txt"), "w") as f:
+                f.write(f"n={n}\nm={m}\neta={eta}\nseed={seed}\n")
+        stored = read_csv(in_path).reshape(n, m)
+        np.testing.assert_allclose(stored, y, atol=1e-6)
+        for kind, arr in out.items():
+            path = os.path.join(GOLDEN_DIR, f"{name}_{kind}.csv")
+            if not os.path.exists(path):
+                write_csv(path, arr)
+            stored = read_csv(path).reshape(n, m)
+            np.testing.assert_allclose(
+                stored, arr, atol=2e-5,
+                err_msg=f"golden drift in {name}/{kind}",
+            )

@@ -1,0 +1,162 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and radii; explicit cases cover the adversarial
+tie / boundary structure the threshold search is sensitive to.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bilevel_proj import (
+    bilevel_l1inf_pallas,
+    clip_pallas,
+    colmax_pallas,
+    l1simplex_pallas,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand_matrix(seed, n, m, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, (n, m)), dtype=jnp.float32)
+
+
+# ---------- colmax ----------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 70),
+    m=st.integers(1, 600),
+)
+def test_colmax_matches_ref(seed, n, m):
+    y = rand_matrix(seed, n, m, -3.0, 3.0)
+    got = np.asarray(colmax_pallas(y))
+    want = np.asarray(ref.col_max_abs(y))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_colmax_negative_dominated():
+    y = jnp.asarray([[-5.0, 1.0], [2.0, -0.5]], dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(colmax_pallas(y)), [5.0, 1.0])
+
+
+# ---------- l1 simplex projection -------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 500),
+    eta=st.floats(0.01, 50.0),
+)
+def test_l1simplex_matches_ref(seed, m, eta):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.uniform(0.0, 2.0, (m,)), dtype=jnp.float32)
+    got = np.asarray(l1simplex_pallas(v, jnp.float32(eta)))
+    want = np.asarray(ref.project_l1_ball(v, eta))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    assert got.sum() <= eta + 1e-3
+
+
+def test_l1simplex_inside_ball_is_identity():
+    v = jnp.asarray([0.1, 0.2, 0.3], dtype=jnp.float32)
+    got = np.asarray(l1simplex_pallas(v, jnp.float32(10.0)))
+    np.testing.assert_allclose(got, np.asarray(v))
+
+
+def test_l1simplex_all_ties():
+    v = jnp.ones((8,), dtype=jnp.float32)
+    got = np.asarray(l1simplex_pallas(v, jnp.float32(4.0)))
+    np.testing.assert_allclose(got, 0.5 * np.ones(8), atol=1e-6)
+
+
+# ---------- clip -------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 50),
+    m=st.integers(1, 520),
+)
+def test_clip_matches_ref(seed, n, m):
+    y = rand_matrix(seed, n, m, -2.0, 2.0)
+    rng = np.random.default_rng(seed + 1)
+    u = jnp.asarray(rng.uniform(0.0, 1.5, (m,)), dtype=jnp.float32)
+    got = np.asarray(clip_pallas(y, u))
+    want = np.asarray(ref.clip_columns(y, u))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+# ---------- composed bi-level l1inf ------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 40),
+    m=st.integers(1, 400),
+    eta=st.floats(0.01, 20.0),
+)
+def test_bilevel_l1inf_matches_ref(seed, n, m, eta):
+    y = rand_matrix(seed, n, m)
+    got = np.asarray(bilevel_l1inf_pallas(y, jnp.float32(eta)))
+    want = np.asarray(ref.bilevel_l1inf(y, eta))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), eta=st.floats(0.05, 5.0))
+def test_bilevel_l1inf_feasible(seed, eta):
+    y = rand_matrix(seed, 30, 300)
+    x = bilevel_l1inf_pallas(y, jnp.float32(eta))
+    assert float(ref.l1inf_norm(x)) <= eta + 1e-3
+
+
+def test_bilevel_l1inf_idempotent():
+    y = rand_matrix(7, 20, 100)
+    once = bilevel_l1inf_pallas(y, jnp.float32(1.5))
+    twice = bilevel_l1inf_pallas(once, jnp.float32(1.5))
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_bilevel_l1inf_zeroes_columns():
+    # tight radius -> structured sparsity
+    y = rand_matrix(11, 20, 50, 0.2, 1.0)
+    x = np.asarray(bilevel_l1inf_pallas(y, jnp.float32(0.5)))
+    zero_cols = int((np.abs(x).max(axis=0) == 0).sum())
+    assert zero_cols > 0
+
+
+def test_tile_boundary_shapes():
+    # m exactly at / around the 256-wide tile boundary
+    for m in (255, 256, 257, 512, 513):
+        y = rand_matrix(m, 9, m)
+        got = np.asarray(bilevel_l1inf_pallas(y, jnp.float32(2.0)))
+        want = np.asarray(ref.bilevel_l1inf(y, 2.0))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------- ref internal consistency -----------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), eta=st.floats(0.05, 10.0))
+def test_ref_bilevel_l11_feasible(seed, eta):
+    y = rand_matrix(seed, 15, 40)
+    x = ref.bilevel_l11(y, eta)
+    assert float(ref.l11_norm(x)) <= eta + 1e-3
+
+
+@given(seed=st.integers(0, 2**31 - 1), eta=st.floats(0.05, 10.0))
+def test_ref_bilevel_l12_feasible(seed, eta):
+    y = rand_matrix(seed, 15, 40)
+    x = ref.bilevel_l12(y, eta)
+    assert float(ref.l12_norm(x)) <= eta + 1e-3
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ref_l1_threshold_kkt(seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.uniform(-2, 2, (50,)), dtype=jnp.float32)
+    eta = 0.5 * float(jnp.sum(jnp.abs(v)))
+    if eta == 0.0:
+        return
+    x = ref.project_l1_ball(v, eta)
+    assert abs(float(jnp.sum(jnp.abs(x))) - eta) < 1e-3 * (1 + eta)

@@ -1,0 +1,61 @@
+//! Figure 1: projection time as a function of the radius η.
+//!
+//! Paper setup: Y ∈ R^{1000×10000}, entries U[0,1], η ∈ [0.25, 4];
+//! series = bi-level ℓ1,∞ vs the exact semismooth-Newton baseline
+//! (Chu et al. stand-in) vs the exact sort-scan.
+//!
+//! Expected shape (paper): bi-level ≥2.5× faster and nearly flat in η.
+//!
+//! `MLPROJ_BENCH_FAST=1 cargo bench --bench fig1_radius` for a quick pass.
+
+use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::projection::bilevel::bilevel_l1inf_inplace;
+use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let (n, m) = if fast { (250, 2500) } else { (1000, 10000) };
+    let radii = [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0];
+
+    let mut rng = Rng::new(1);
+    let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+    let b = Bencher::from_env();
+
+    let mut bilevel = Series::new("bi-level l1inf");
+    let mut newton = Series::new("exact newton (Chu)");
+    let mut sortscan = Series::new("exact sort-scan");
+
+    for &eta in &radii {
+        bilevel.points.push(b.measure(format!("{eta}"), || {
+            let mut x = y.clone();
+            bilevel_l1inf_inplace(&mut x, eta);
+            black_box(&x);
+        }));
+        newton.points.push(b.measure(format!("{eta}"), || {
+            black_box(project_l1inf_newton(&y, eta));
+        }));
+        sortscan.points.push(b.measure(format!("{eta}"), || {
+            black_box(project_l1inf_sortscan(&y, eta));
+        }));
+    }
+
+    let mut rep = Report::new(
+        format!("Figure 1 — time vs radius (Y {n}x{m}, U[0,1])"),
+        "eta",
+    );
+    rep.series.push(bilevel);
+    rep.series.push(newton);
+    rep.series.push(sortscan);
+    rep.emit("fig1_radius.csv");
+
+    // Paper's headline: >= 2.5x over the fastest exact method at every radius.
+    let min_speedup = rep.series[1]
+        .points
+        .iter()
+        .zip(&rep.series[0].points)
+        .map(|(ex, bl)| ex.median.as_secs_f64() / bl.median.as_secs_f64())
+        .fold(f64::INFINITY, f64::min);
+    println!("minimum bi-level speedup vs exact newton across radii: {min_speedup:.2}x");
+}

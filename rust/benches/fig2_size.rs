@@ -1,0 +1,55 @@
+//! Figure 2: projection time as a function of the matrix size.
+//!
+//! Paper setup: m = 1000 columns and η = 1 fixed, n (rows) swept;
+//! bi-level ℓ1,∞ vs exact Newton. Expected shape: both linear-ish in n,
+//! bi-level ≥2.5× faster at every size.
+
+use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::projection::bilevel::bilevel_l1inf_inplace;
+use mlproj::projection::l1inf_exact::project_l1inf_newton;
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let m = 1000usize;
+    let eta = 1.0;
+    let sizes: &[usize] = if fast {
+        &[500, 1000, 2000]
+    } else {
+        &[1000, 2000, 5000, 10000, 20000]
+    };
+
+    let b = Bencher::from_env();
+    let mut bilevel = Series::new("bi-level l1inf");
+    let mut newton = Series::new("exact newton (Chu)");
+
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64);
+        let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+        bilevel.points.push(b.measure(format!("{n}"), || {
+            let mut x = y.clone();
+            bilevel_l1inf_inplace(&mut x, eta);
+            black_box(&x);
+        }));
+        newton.points.push(b.measure(format!("{n}"), || {
+            black_box(project_l1inf_newton(&y, eta));
+        }));
+    }
+
+    let mut rep = Report::new(
+        format!("Figure 2 — time vs rows n (m = {m}, eta = {eta})"),
+        "n",
+    );
+    rep.series.push(bilevel);
+    rep.series.push(newton);
+    rep.emit("fig2_size.csv");
+
+    let speedups: Vec<String> = rep.series[1]
+        .points
+        .iter()
+        .zip(&rep.series[0].points)
+        .map(|(ex, bl)| format!("{:.2}x", ex.median.as_secs_f64() / bl.median.as_secs_f64()))
+        .collect();
+    println!("bi-level speedup per size: {}", speedups.join(" "));
+}

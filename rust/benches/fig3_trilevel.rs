@@ -1,0 +1,60 @@
+//! Figure 3: tri-level projection time vs tensor size.
+//!
+//! Paper setup: order-3 tensor, d(=c)=32 channels and n=1000 fixed, m
+//! swept; series = ℓ_{1,1,1} and ℓ_{1,∞,∞}. Expected shape: both grow
+//! linearly in m and stay within a small factor of each other.
+
+use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::core::rng::Rng;
+use mlproj::core::tensor::Tensor;
+use mlproj::projection::multilevel::{trilevel_l111, trilevel_l1infinf};
+use mlproj::projection::norms::multilevel_norm;
+use mlproj::projection::Norm;
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let (c, n) = (32usize, 1000usize);
+    let ms: &[usize] = if fast { &[8, 16, 32] } else { &[16, 32, 64, 128, 256] };
+
+    let b = Bencher::from_env();
+    let mut s_inf = Series::new("trilevel l1,inf,inf");
+    let mut s_111 = Series::new("trilevel l1,1,1");
+
+    let mut rng = Rng::new(5);
+    for &m in ms {
+        let mut data = vec![0.0f32; c * n * m];
+        rng.fill_uniform(&mut data, 0.0, 1.0);
+        let y = Tensor::from_vec(vec![c, n, m], data).unwrap();
+        // radius = 10% of the full mass, so real work happens at any size
+        let eta_inf = 0.1 * multilevel_norm(&y, &[Norm::Linf, Norm::Linf, Norm::L1]);
+        let eta_111 = 0.1 * multilevel_norm(&y, &[Norm::L1, Norm::L1, Norm::L1]);
+
+        s_inf.points.push(b.measure(format!("{m}"), || {
+            black_box(trilevel_l1infinf(&y, eta_inf));
+        }));
+        s_111.points.push(b.measure(format!("{m}"), || {
+            black_box(trilevel_l111(&y, eta_111));
+        }));
+    }
+
+    let mut rep = Report::new(
+        format!("Figure 3 — tri-level time vs m (c = {c}, n = {n})"),
+        "m",
+    );
+    rep.series.push(s_inf);
+    rep.series.push(s_111);
+    rep.emit("fig3_trilevel.csv");
+
+    // Linearity check: time(m=max) / time(m=min) vs size ratio.
+    for s in &rep.series {
+        let first = &s.points[0];
+        let last = s.points.last().unwrap();
+        let t_ratio = last.median.as_secs_f64() / first.median.as_secs_f64();
+        let m_ratio: f64 =
+            last.x.parse::<f64>().unwrap() / first.x.parse::<f64>().unwrap();
+        println!(
+            "{}: size x{m_ratio:.0} -> time x{t_ratio:.1} (linear would be x{m_ratio:.0})",
+            s.name
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Hot-path micro-benchmarks (§Perf driver): per-stage decomposition of
+//! the bi-level ℓ1,∞ projection and a shoot-out of the three ℓ1
+//! threshold algorithms. This is the profile the optimization loop in
+//! EXPERIMENTS.md §Perf iterates on.
+
+use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::core::sort::max_abs;
+use mlproj::projection::bilevel::bilevel_l1inf_inplace;
+use mlproj::projection::l1::{soft_threshold, L1Algo};
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let (n, m) = if fast { (250, 2500) } else { (1000, 10000) };
+    let eta = 1.0;
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(9);
+    let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+
+    // --- stage decomposition -------------------------------------------
+    let mut stages = Series::new(format!("bilevel stages {n}x{m}"));
+    stages.points.push(b.measure("total(inplace+clone)", || {
+        let mut x = y.clone();
+        bilevel_l1inf_inplace(&mut x, eta);
+        black_box(&x);
+    }));
+    stages.points.push(b.measure("colmax", || {
+        let v: Vec<f32> = (0..m).map(|j| max_abs(y.col(j))).collect();
+        black_box(v);
+    }));
+    let v: Vec<f32> = (0..m).map(|j| max_abs(y.col(j))).collect();
+    stages.points.push(b.measure("threshold(condat)", || {
+        black_box(soft_threshold(&v, eta, L1Algo::Condat));
+    }));
+    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    let mut scratch = y.clone();
+    stages.points.push(b.measure("clip", || {
+        for j in 0..m {
+            let u = v[j] - tau;
+            let col = scratch.col_mut(j);
+            if u <= 0.0 {
+                col.fill(0.0);
+            } else {
+                for x in col.iter_mut() {
+                    *x = x.clamp(-u, u);
+                }
+            }
+        }
+        black_box(&scratch);
+    }));
+    stages.points.push(b.measure("memcpy(roofline)", || {
+        scratch.data_mut().copy_from_slice(y.data());
+        black_box(&scratch);
+    }));
+
+    // --- l1 threshold algorithms over big vectors ----------------------
+    let mut l1algos = Series::new("l1 threshold (1M elems)");
+    let len = if fast { 100_000 } else { 1_000_000 };
+    let mut big = vec![0.0f32; len];
+    rng.fill_uniform(&mut big, 0.0, 1.0);
+    for (label, algo) in [
+        ("condat", L1Algo::Condat),
+        ("sort", L1Algo::Sort),
+        ("michelot", L1Algo::Michelot),
+    ] {
+        l1algos.points.push(b.measure(label, || {
+            black_box(soft_threshold(&big, eta, algo));
+        }));
+    }
+
+    let mut rep = Report::new("Hot-path micro-benchmarks", "stage");
+    rep.series.push(stages);
+    rep.series.push(l1algos);
+    // table layout is per-series x-label here, so print manually:
+    for s in &rep.series {
+        println!("# {}", s.name);
+        for p in &s.points {
+            println!("  {:24} {:10.3} ms  (iters {})", p.x, p.median_ms(), p.iters);
+        }
+    }
+    let csv = rep.to_csv();
+    std::fs::create_dir_all("target/bench_out").ok();
+    std::fs::write("target/bench_out/micro_hotpath.csv", csv).ok();
+    println!("csv -> target/bench_out/micro_hotpath.csv");
+}

@@ -1,0 +1,96 @@
+//! Table 1: empirical complexity of every projection, checked against the
+//! theoretical orders the paper lists.
+//!
+//! For each method we sweep matrix sizes at a fixed aspect ratio and fit
+//! the log-log slope of time vs element count. Expected slopes:
+//!   bi-level ℓ1,∞ / ℓ1,1 / ℓ1,2, exact ℓ1,1, exact ℓ1,2 → ≈1 (O(nm))
+//!   exact ℓ1,∞ (newton / sort-scan)                    → ≈1.0–1.2
+//!                                                         (O(nm log nm))
+
+use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::projection::bilevel::{
+    bilevel_l11_inplace, bilevel_l12_inplace, bilevel_l1inf_inplace,
+};
+use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
+use mlproj::projection::l1l2_exact::project_l11_inplace;
+
+type Method = (&'static str, &'static str, fn(&Matrix, f64));
+
+fn run_bilevel_l1inf(y: &Matrix, eta: f64) {
+    let mut x = y.clone();
+    bilevel_l1inf_inplace(&mut x, eta);
+    black_box(&x);
+}
+fn run_bilevel_l11(y: &Matrix, eta: f64) {
+    let mut x = y.clone();
+    bilevel_l11_inplace(&mut x, eta);
+    black_box(&x);
+}
+fn run_bilevel_l12(y: &Matrix, eta: f64) {
+    let mut x = y.clone();
+    bilevel_l12_inplace(&mut x, eta);
+    black_box(&x);
+}
+fn run_exact_l11(y: &Matrix, eta: f64) {
+    let mut x = y.clone();
+    project_l11_inplace(&mut x, eta);
+    black_box(&x);
+}
+fn run_newton(y: &Matrix, eta: f64) {
+    black_box(project_l1inf_newton(y, eta));
+}
+fn run_sortscan(y: &Matrix, eta: f64) {
+    black_box(project_l1inf_sortscan(y, eta));
+}
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    // fixed aspect: m = 2n, sizes double element count each step
+    let ns: &[usize] = if fast { &[100, 200, 400] } else { &[200, 400, 800, 1600] };
+    let eta = 1.0;
+    let b = Bencher::from_env();
+
+    let methods: &[Method] = &[
+        ("bi-level l1inf", "O(nm)", run_bilevel_l1inf),
+        ("bi-level l11", "O(nm)", run_bilevel_l11),
+        ("bi-level l12 (=exact)", "O(nm)", run_bilevel_l12),
+        ("exact l11 (flat l1)", "O(nm)", run_exact_l11),
+        ("exact l1inf newton", "O(nm log nm)", run_newton),
+        ("exact l1inf sort-scan", "O(nm log nm)", run_sortscan),
+    ];
+
+    let mut rep = Report::new("Table 1 — measured complexity (m = 2n)", "n");
+    let mut slopes = Vec::new();
+
+    for (name, theory, f) in methods {
+        let mut series = Series::new(*name);
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for &n in ns {
+            let m = 2 * n;
+            let mut rng = Rng::new(n as u64);
+            let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+            let meas = b.measure(format!("{n}"), || f(&y, eta));
+            pts.push(((n * m) as f64, meas.median.as_secs_f64()));
+            series.points.push(meas);
+        }
+        // least-squares slope in log-log space
+        let logs: Vec<(f64, f64)> = pts.iter().map(|(x, t)| (x.ln(), t.ln())).collect();
+        let n_pts = logs.len() as f64;
+        let sx: f64 = logs.iter().map(|(x, _)| x).sum();
+        let sy: f64 = logs.iter().map(|(_, y)| y).sum();
+        let sxx: f64 = logs.iter().map(|(x, _)| x * x).sum();
+        let sxy: f64 = logs.iter().map(|(x, y)| x * y).sum();
+        let slope = (n_pts * sxy - sx * sy) / (n_pts * sxx - sx * sx);
+        slopes.push((*name, *theory, slope));
+        rep.series.push(series);
+    }
+
+    rep.emit("table1_complexity.csv");
+    println!("\nmethod                  theory          fitted log-log slope (vs nm)");
+    for (name, theory, slope) in slopes {
+        println!("{name:22}  {theory:14}  {slope:.3}");
+    }
+    println!("(slope ≈ 1 ⇒ linear in the element count; the paper's Table 1.)");
+}

@@ -1,0 +1,255 @@
+//! Benchmark harness (criterion is not in the offline crate set).
+//!
+//! Provides warmup + repeated timing with median / IQR reporting, a
+//! `black_box` to defeat dead-code elimination, and CSV emission so every
+//! paper figure/table series can be regenerated and archived under
+//! `target/bench_out/`.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of the std black box for benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One measured series point.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label of the x-axis value (radius, size, workers, …).
+    pub x: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// First quartile.
+    pub q1: Duration,
+    /// Third quartile.
+    pub q3: Duration,
+    /// Number of timed iterations.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Median in milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Maximum number of timed iterations.
+    pub max_iters: usize,
+    /// Target total measurement time per point.
+    pub target_time: Duration,
+    /// Warmup iterations before timing.
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_iters: 5,
+            max_iters: 100,
+            target_time: Duration::from_millis(1500),
+            warmup_iters: 2,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs (`MLPROJ_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("MLPROJ_BENCH_FAST").is_ok() {
+            Bencher {
+                min_iters: 3,
+                max_iters: 10,
+                target_time: Duration::from_millis(300),
+                warmup_iters: 1,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f` and return a `Measurement` labelled `x`.
+    ///
+    /// `f` is called once per iteration; use `black_box` on its result in
+    /// the closure. Setup should be done *outside* (the closure may borrow
+    /// prepared inputs).
+    pub fn measure<F: FnMut()>(&self, x: impl Into<String>, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed() < self.target_time && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let n = times.len();
+        Measurement {
+            x: x.into(),
+            median: times[n / 2],
+            q1: times[n / 4],
+            q3: times[(3 * n) / 4],
+            iters: n,
+        }
+    }
+}
+
+/// A named series (one line in a paper figure).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    /// Series name (e.g. "bi-level l1inf").
+    pub name: String,
+    /// Measured points.
+    pub points: Vec<Measurement>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: vec![] }
+    }
+}
+
+/// A full figure/table report: several series over a common x-axis.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Report title (e.g. "Figure 1 — time vs radius").
+    pub title: String,
+    /// Name of the x-axis.
+    pub x_label: String,
+    /// All series.
+    pub series: Vec<Series>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>) -> Self {
+        Report { title: title.into(), x_label: x_label.into(), series: vec![] }
+    }
+
+    /// Render an aligned text table (x, then one median-ms column per series).
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        let mut header = vec![self.x_label.clone()];
+        for s in &self.series {
+            header.push(format!("{} ms (median)", s.name));
+        }
+        let xs: Vec<&str> = self
+            .series
+            .first()
+            .map(|s| s.points.iter().map(|p| p.x.as_str()).collect())
+            .unwrap_or_default();
+        let mut rows: Vec<Vec<String>> = vec![header];
+        for (i, x) in xs.iter().enumerate() {
+            let mut row = vec![x.to_string()];
+            for s in &self.series {
+                row.push(
+                    s.points
+                        .get(i)
+                        .map(|p| format!("{:.3}", p.median_ms()))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            rows.push(row);
+        }
+        let widths: Vec<usize> = (0..rows[0].len())
+            .map(|c| rows.iter().map(|r| r[c].len()).max().unwrap_or(0))
+            .collect();
+        for r in &rows {
+            let line: Vec<String> =
+                r.iter().zip(&widths).map(|(cell, w)| format!("{cell:>w$}")).collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV dump: `x,series,median_ms,q1_ms,q3_ms,iters`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("x,series,median_ms,q1_ms,q3_ms,iters\n");
+        for s in &self.series {
+            for p in &s.points {
+                out.push_str(&format!(
+                    "{},{},{:.6},{:.6},{:.6},{}\n",
+                    p.x,
+                    s.name,
+                    p.median_ms(),
+                    p.q1.as_secs_f64() * 1e3,
+                    p.q3.as_secs_f64() * 1e3,
+                    p.iters
+                ));
+            }
+        }
+        out
+    }
+
+    /// Write the CSV under `target/bench_out/<file>` and print the table.
+    pub fn emit(&self, file: &str) {
+        println!("{}", self.to_table());
+        let dir = std::path::Path::new("target/bench_out");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(file);
+            if std::fs::write(&path, self.to_csv()).is_ok() {
+                println!("csv -> {}", path.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_ordered_quartiles() {
+        let b = Bencher {
+            min_iters: 5,
+            max_iters: 8,
+            target_time: Duration::from_millis(1),
+            warmup_iters: 1,
+        };
+        let m = b.measure("x", || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.q1 <= m.median && m.median <= m.q3);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn report_table_and_csv() {
+        let mut rep = Report::new("t", "n");
+        let mut s = Series::new("a");
+        s.points.push(Measurement {
+            x: "10".into(),
+            median: Duration::from_millis(2),
+            q1: Duration::from_millis(1),
+            q3: Duration::from_millis(3),
+            iters: 7,
+        });
+        rep.series.push(s);
+        let table = rep.to_table();
+        assert!(table.contains("a ms (median)"));
+        assert!(table.contains("2.000"));
+        let csv = rep.to_csv();
+        assert!(csv.starts_with("x,series"));
+        assert!(csv.contains("10,a,2.000000"));
+    }
+
+    #[test]
+    fn fast_env_has_lower_budget() {
+        let def = Bencher::default();
+        assert!(def.max_iters >= 10);
+    }
+}

@@ -1,0 +1,5 @@
+//! Benchmark substrate (from-scratch criterion replacement; DESIGN.md §5).
+
+pub mod harness;
+
+pub use harness::{black_box, Bencher, Measurement, Report, Series};

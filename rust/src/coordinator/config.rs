@@ -1,0 +1,327 @@
+//! Experiment configuration: a TOML-subset parser (flat `key = value`
+//! lines, `#` comments, strings/numbers/bools) plus the typed configs the
+//! trainer and sweep presets consume. serde/toml are not in the offline
+//! crate set — DESIGN.md §5.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::core::error::{MlprojError, Result};
+use crate::projection::Norm;
+
+/// Which projection constrains the SAE input layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// Unconstrained baseline (paper's "Baseline" column).
+    None,
+    /// Bi-level ℓ_{1,∞} (Algorithm 2) — the paper's method.
+    BilevelL1Inf,
+    /// Bi-level ℓ_{1,1} (Algorithm 3).
+    BilevelL11,
+    /// Bi-level ℓ_{1,2} (Algorithm 4; == exact ℓ_{1,2}).
+    BilevelL12,
+    /// Bi-level ℓ_{2,1} (Algorithm 7).
+    BilevelL21,
+    /// Exact ℓ_{1,∞}, semismooth Newton (the "Chu et al." baseline).
+    ExactL1InfNewton,
+    /// Exact ℓ_{1,∞}, sort-scan (Quattoni-style).
+    ExactL1InfSortScan,
+    /// Exact ℓ_{1,1} (flattened ℓ1; unstructured comparator).
+    ExactL11,
+    /// Bi-level ℓ_{1,∞} through the AOT Pallas artifact (PJRT path).
+    PallasHlo,
+}
+
+impl ProjectionKind {
+    /// Parse a config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "baseline" => ProjectionKind::None,
+            "bilevel_l1inf" | "bilevel-l1inf" => ProjectionKind::BilevelL1Inf,
+            "bilevel_l11" => ProjectionKind::BilevelL11,
+            "bilevel_l12" => ProjectionKind::BilevelL12,
+            "bilevel_l21" => ProjectionKind::BilevelL21,
+            "exact_l1inf" | "exact_l1inf_newton" | "chu" => ProjectionKind::ExactL1InfNewton,
+            "exact_l1inf_sortscan" | "quattoni" => ProjectionKind::ExactL1InfSortScan,
+            "exact_l11" | "l11" => ProjectionKind::ExactL11,
+            "pallas" | "pallas_hlo" => ProjectionKind::PallasHlo,
+            other => {
+                return Err(MlprojError::Config(format!("unknown projection `{other}`")))
+            }
+        })
+    }
+
+    /// Display name used in tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProjectionKind::None => "baseline",
+            ProjectionKind::BilevelL1Inf => "bilevel_l1inf",
+            ProjectionKind::BilevelL11 => "bilevel_l11",
+            ProjectionKind::BilevelL12 => "bilevel_l12",
+            ProjectionKind::BilevelL21 => "bilevel_l21",
+            ProjectionKind::ExactL1InfNewton => "exact_l1inf",
+            ProjectionKind::ExactL1InfSortScan => "exact_l1inf_sortscan",
+            ProjectionKind::ExactL11 => "exact_l11",
+            ProjectionKind::PallasHlo => "pallas_hlo",
+        }
+    }
+
+    /// The (p, q) pair when this is a bi-level method.
+    pub fn norms(&self) -> Option<(Norm, Norm)> {
+        match self {
+            ProjectionKind::BilevelL1Inf | ProjectionKind::PallasHlo => {
+                Some((Norm::L1, Norm::Linf))
+            }
+            ProjectionKind::BilevelL11 => Some((Norm::L1, Norm::L1)),
+            ProjectionKind::BilevelL12 => Some((Norm::L1, Norm::L2)),
+            ProjectionKind::BilevelL21 => Some((Norm::L2, Norm::L1)),
+            _ => None,
+        }
+    }
+}
+
+/// Which dataset the experiment runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// `make_classification` clone (paper §7.3.2 synthetic).
+    Synthetic,
+    /// Simulated LUNG metabolomics cohort.
+    Lung,
+}
+
+impl DatasetKind {
+    /// Parse a config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "synthetic" => DatasetKind::Synthetic,
+            "lung" => DatasetKind::Lung,
+            other => return Err(MlprojError::Config(format!("unknown dataset `{other}`"))),
+        })
+    }
+}
+
+/// Full training-experiment configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Dataset selector.
+    pub dataset: DatasetKind,
+    /// Projection used between the two descents.
+    pub projection: ProjectionKind,
+    /// Ball radius η.
+    pub eta: f64,
+    /// Epochs of the first descent.
+    pub epochs1: usize,
+    /// Epochs of the second (masked) descent.
+    pub epochs2: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Reconstruction-loss weight α (Eq. 18).
+    pub alpha: f32,
+    /// Test-set fraction.
+    pub test_frac: f64,
+    /// Base RNG seed (data split + init).
+    pub seed: u64,
+    /// Repeats with different seeds (tables report mean ± std).
+    pub repeats: usize,
+    /// Worker threads for the projection.
+    pub workers: usize,
+    /// Artifact directory.
+    pub artifact_dir: String,
+    /// Also project every `project_every` epochs during descent 1
+    /// (0 = only at the end, the plain double-descent of Alg. 8).
+    pub project_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: DatasetKind::Synthetic,
+            projection: ProjectionKind::BilevelL1Inf,
+            eta: 1.0,
+            epochs1: 30,
+            epochs2: 30,
+            lr: 1e-3,
+            alpha: 0.2,
+            test_frac: 0.25,
+            seed: 42,
+            repeats: 1,
+            workers: crate::parallel::default_workers(),
+            artifact_dir: "artifacts".into(),
+            project_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse from TOML-subset text, starting from defaults.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_kv(&kv)?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply key/value overrides (used for both files and CLI `--key val`).
+    pub fn apply_kv(&mut self, kv: &HashMap<String, String>) -> Result<()> {
+        for (key, value) in kv {
+            self.apply(key, value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a single override.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key {
+            "dataset" => self.dataset = DatasetKind::parse(v)?,
+            "projection" => self.projection = ProjectionKind::parse(v)?,
+            "eta" => self.eta = parse_num(key, v)?,
+            "epochs1" => self.epochs1 = parse_num::<f64>(key, v)? as usize,
+            "epochs2" => self.epochs2 = parse_num::<f64>(key, v)? as usize,
+            "lr" => self.lr = parse_num::<f64>(key, v)? as f32,
+            "alpha" => self.alpha = parse_num::<f64>(key, v)? as f32,
+            "test_frac" => self.test_frac = parse_num(key, v)?,
+            "seed" => self.seed = parse_num::<f64>(key, v)? as u64,
+            "repeats" => self.repeats = parse_num::<f64>(key, v)? as usize,
+            "workers" => self.workers = parse_num::<f64>(key, v)? as usize,
+            "artifact_dir" => self.artifact_dir = v.to_string(),
+            "project_every" => self.project_every = parse_num::<f64>(key, v)? as usize,
+            other => {
+                return Err(MlprojError::Config(format!("unknown config key `{other}`")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.eta < 0.0 {
+            return Err(MlprojError::Config("eta must be >= 0".into()));
+        }
+        if !(0.0 < self.test_frac && self.test_frac < 1.0) {
+            return Err(MlprojError::Config("test_frac must be in (0,1)".into()));
+        }
+        if self.repeats == 0 {
+            return Err(MlprojError::Config("repeats must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>()
+        .map_err(|e| MlprojError::Config(format!("config `{key}` = `{v}`: {e}")))
+}
+
+/// Parse flat `key = value` lines (TOML subset: comments, blank lines,
+/// quoted strings; no sections/arrays).
+pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            MlprojError::Config(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let mut value = value.trim();
+        // strip trailing comment (not inside quotes)
+        if !value.starts_with('"') {
+            if let Some(pos) = value.find('#') {
+                value = value[..pos].trim();
+            }
+        }
+        out.insert(key.trim().to_string(), value.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = TrainConfig::parse(
+            "# experiment\n\
+             dataset = \"lung\"\n\
+             projection = bilevel_l1inf\n\
+             eta = 1.5   # radius\n\
+             epochs1 = 10\n\
+             epochs2 = 20\n\
+             lr = 0.01\n\
+             alpha = 0.5\n\
+             seed = 7\n\
+             repeats = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::Lung);
+        assert_eq!(cfg.projection, ProjectionKind::BilevelL1Inf);
+        assert!((cfg.eta - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.epochs1, 10);
+        assert_eq!(cfg.epochs2, 20);
+        assert_eq!(cfg.repeats, 3);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(TrainConfig::parse("frobnicate = 1").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(TrainConfig::parse("eta = banana").is_err());
+        assert!(TrainConfig::parse("projection = l99").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_ranges() {
+        let mut cfg = TrainConfig::default();
+        cfg.eta = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.test_frac = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn projection_kind_tokens() {
+        assert_eq!(ProjectionKind::parse("chu").unwrap(), ProjectionKind::ExactL1InfNewton);
+        assert_eq!(
+            ProjectionKind::parse("Quattoni").unwrap(),
+            ProjectionKind::ExactL1InfSortScan
+        );
+        assert_eq!(ProjectionKind::parse("baseline").unwrap(), ProjectionKind::None);
+        for k in [
+            ProjectionKind::None,
+            ProjectionKind::BilevelL1Inf,
+            ProjectionKind::BilevelL11,
+            ProjectionKind::BilevelL12,
+            ProjectionKind::BilevelL21,
+            ProjectionKind::ExactL1InfNewton,
+            ProjectionKind::ExactL1InfSortScan,
+            ProjectionKind::ExactL11,
+            ProjectionKind::PallasHlo,
+        ] {
+            assert_eq!(ProjectionKind::parse(k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn kv_parser_edge_cases() {
+        let kv = parse_kv("a = 1\n\n# c\nb = \"x # y\"\n").unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["b"], "\"x # y\"");
+        assert!(parse_kv("no_equals_here").is_err());
+    }
+}

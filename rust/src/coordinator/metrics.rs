@@ -1,0 +1,140 @@
+//! Evaluation metrics and run summaries.
+
+/// Accuracy from row-major logits `(n, k)` vs integer labels, counting
+/// only the first `n_real` rows (eval batches wrap-pad to a fixed size).
+pub fn accuracy(logits: &[f32], k: usize, labels: &[usize], n_real: usize) -> f64 {
+    if n_real == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n_real {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_real as f64
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Test accuracy in percent.
+    pub accuracy_pct: f64,
+    /// Structured sparsity in percent (features zeroed).
+    pub sparsity_pct: f64,
+    /// Loss trace (one entry per epoch, both descents concatenated).
+    pub loss_curve: Vec<f32>,
+    /// Surviving feature count after projection.
+    pub features_alive: usize,
+    /// Wall time of the whole run in seconds.
+    pub wall_secs: f64,
+    /// Wall time spent inside the projection in milliseconds.
+    pub projection_ms: f64,
+}
+
+/// Aggregated over repeats (what the paper's tables report).
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    /// Method label.
+    pub label: String,
+    /// Radius used.
+    pub eta: f64,
+    /// Mean accuracy %.
+    pub acc_mean: f64,
+    /// Std of accuracy %.
+    pub acc_std: f64,
+    /// Mean sparsity %.
+    pub sparsity_mean: f64,
+    /// Std of sparsity %.
+    pub sparsity_std: f64,
+    /// Mean projection time (ms).
+    pub proj_ms_mean: f64,
+    /// Number of runs aggregated.
+    pub runs: usize,
+}
+
+impl Aggregate {
+    /// Aggregate repeat results under a label.
+    pub fn from_runs(label: impl Into<String>, eta: f64, runs: &[RunResult]) -> Self {
+        let accs: Vec<f64> = runs.iter().map(|r| r.accuracy_pct).collect();
+        let sps: Vec<f64> = runs.iter().map(|r| r.sparsity_pct).collect();
+        let pms: Vec<f64> = runs.iter().map(|r| r.projection_ms).collect();
+        let (acc_mean, acc_std) = mean_std(&accs);
+        let (sparsity_mean, sparsity_std) = mean_std(&sps);
+        let (proj_ms_mean, _) = mean_std(&pms);
+        Aggregate {
+            label: label.into(),
+            eta,
+            acc_mean,
+            acc_std,
+            sparsity_mean,
+            sparsity_std,
+            proj_ms_mean,
+            runs: runs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_correctly() {
+        // logits rows: argmax = 1, 0, 1
+        let logits = vec![0.1, 0.9, 0.8, 0.2, 0.3, 0.7];
+        let labels = vec![1, 0, 0];
+        assert!((accuracy(&logits, 2, &labels, 3) - 2.0 / 3.0).abs() < 1e-12);
+        // only first 2 rows counted
+        assert!((accuracy(&logits, 2, &labels, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_empty() {
+        assert_eq!(accuracy(&[], 2, &[], 0), 0.0);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn aggregate_from_runs() {
+        let runs: Vec<RunResult> = [90.0, 94.0]
+            .iter()
+            .map(|&a| RunResult {
+                accuracy_pct: a,
+                sparsity_pct: 50.0,
+                loss_curve: vec![],
+                features_alive: 10,
+                wall_secs: 1.0,
+                projection_ms: 2.0,
+            })
+            .collect();
+        let agg = Aggregate::from_runs("x", 1.0, &runs);
+        assert!((agg.acc_mean - 92.0).abs() < 1e-12);
+        assert!((agg.acc_std - 2.0).abs() < 1e-12);
+        assert_eq!(agg.runs, 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 coordinator: config system, SAE double-descent trainer,
+//! metrics, experiment presets and report rendering.
+
+pub mod config;
+pub mod metrics;
+pub mod params;
+pub mod report;
+pub mod sweeps;
+pub mod trainer;
+
+pub use config::{DatasetKind, ProjectionKind, TrainConfig};
+pub use metrics::{Aggregate, RunResult};
+pub use trainer::Trainer;

@@ -1,0 +1,236 @@
+//! SAE parameter state: host-side mirror of the JAX model parameters and
+//! Adam moments, with literal (de)serialization in the exact flat order
+//! the `train_step` artifact expects (see `python/compile/model.py`
+//! PARAM_NAMES and the manifest's `train_step_args`).
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+use crate::runtime::{HostArray, Manifest};
+
+/// Number of parameter arrays (w1,b1,w2,b2,w3,b3,w4,b4).
+pub const N_PARAMS: usize = 8;
+
+/// Host-side SAE training state.
+#[derive(Debug, Clone)]
+pub struct SaeState {
+    /// Parameter arrays in PARAM_NAMES order.
+    pub params: Vec<HostArray>,
+    /// Adam first moments (same shapes).
+    pub m: Vec<HostArray>,
+    /// Adam second moments.
+    pub v: Vec<HostArray>,
+    /// Step counter (f32 inside the artifact).
+    pub step: f32,
+    /// Feature mask (d,), 1.0 = active.
+    pub mask: Vec<f32>,
+    /// Dims copied from the manifest.
+    pub d: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Classes.
+    pub k: usize,
+}
+
+/// The parameter shapes for the manifest dims, PARAM_NAMES order.
+pub fn param_shapes(d: usize, h: usize, k: usize) -> [Vec<usize>; N_PARAMS] {
+    [
+        vec![d, h],
+        vec![h],
+        vec![h, k],
+        vec![k],
+        vec![k, h],
+        vec![h],
+        vec![h, d],
+        vec![d],
+    ]
+}
+
+impl SaeState {
+    /// He-style init matching `model.init_params` in spirit (the exact
+    /// draws differ — determinism within Rust is what matters here).
+    pub fn init(man: &Manifest, rng: &mut Rng) -> Self {
+        let (d, h, k) = (man.d, man.h, man.k);
+        let mut params = Vec::with_capacity(N_PARAMS);
+        for shape in param_shapes(d, h, k) {
+            let mut a = HostArray::zeros(&shape);
+            if shape.len() == 2 {
+                let scale = (2.0 / shape[0] as f64).sqrt() as f32;
+                rng.fill_normal(&mut a.data, 0.0, scale);
+            }
+            params.push(a);
+        }
+        let m = params.iter().map(|p| HostArray::zeros(&p.shape)).collect();
+        let v = params.iter().map(|p| HostArray::zeros(&p.shape)).collect();
+        SaeState { params, m, v, step: 0.0, mask: vec![1.0; d], d, h, k }
+    }
+
+    /// Build the 30-literal input list for one train step:
+    /// params(8), m(8), v(8), step, x, y_onehot, mask, lr, alpha.
+    pub fn train_inputs(
+        &self,
+        x: &[f32],
+        y_onehot: &[f32],
+        batch: usize,
+        lr: f32,
+        alpha: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(30);
+        for group in [&self.params, &self.m, &self.v] {
+            for a in group {
+                lits.push(a.to_literal()?);
+            }
+        }
+        lits.push(HostArray::scalar(self.step).to_literal()?);
+        lits.push(HostArray::mat(batch, self.d, x.to_vec())?.to_literal()?);
+        lits.push(HostArray::mat(batch, self.k, y_onehot.to_vec())?.to_literal()?);
+        lits.push(HostArray::vec1(self.mask.clone()).to_literal()?);
+        lits.push(HostArray::scalar(lr).to_literal()?);
+        lits.push(HostArray::scalar(alpha).to_literal()?);
+        Ok(lits)
+    }
+
+    /// Absorb the 27 outputs of one train step:
+    /// params(8), m(8), v(8), step, loss, acc. Returns (loss, batch_acc).
+    pub fn absorb_outputs(&mut self, outs: &[xla::Literal]) -> Result<(f32, f32)> {
+        if outs.len() != 3 * N_PARAMS + 3 {
+            return Err(MlprojError::Runtime(format!(
+                "train_step returned {} outputs, expected {}",
+                outs.len(),
+                3 * N_PARAMS + 3
+            )));
+        }
+        for (i, slot) in self.params.iter_mut().enumerate() {
+            *slot = HostArray::from_literal(&outs[i])?;
+        }
+        for (i, slot) in self.m.iter_mut().enumerate() {
+            *slot = HostArray::from_literal(&outs[N_PARAMS + i])?;
+        }
+        for (i, slot) in self.v.iter_mut().enumerate() {
+            *slot = HostArray::from_literal(&outs[2 * N_PARAMS + i])?;
+        }
+        self.step = HostArray::from_literal(&outs[3 * N_PARAMS])?.data[0];
+        let loss = HostArray::from_literal(&outs[3 * N_PARAMS + 1])?.data[0];
+        let acc = HostArray::from_literal(&outs[3 * N_PARAMS + 2])?.data[0];
+        Ok((loss, acc))
+    }
+
+    /// Inputs for the `predict` artifact: params(8) + x.
+    pub fn predict_inputs(&self, x: &[f32], batch: usize) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(N_PARAMS + 1);
+        for a in &self.params {
+            lits.push(a.to_literal()?);
+        }
+        lits.push(HostArray::mat(batch, self.d, x.to_vec())?.to_literal()?);
+        Ok(lits)
+    }
+
+    /// Feature-major view of w1 — columns are features (zero-copy layout
+    /// trick documented at `HostArray::as_feature_matrix`).
+    pub fn w1_feature_matrix(&self) -> Result<Matrix> {
+        self.params[0].as_feature_matrix()
+    }
+
+    /// Write a projected feature-major w1 back, refresh the feature mask
+    /// from its zero columns, and zero the matching w4 columns. Returns
+    /// the number of surviving (nonzero) features.
+    pub fn set_projected_w1(&mut self, projected: &Matrix) -> Result<usize> {
+        let (d, h) = (self.d, self.h);
+        self.params[0] = HostArray::from_feature_matrix(projected, d, h)?;
+        let mut alive = 0usize;
+        for j in 0..d {
+            let dead = projected.col(j).iter().all(|&x| x == 0.0);
+            self.mask[j] = if dead { 0.0 } else { 1.0 };
+            if !dead {
+                alive += 1;
+            }
+        }
+        // Freeze decoder columns of dead features too (w4 is (h, d)).
+        let w4 = &mut self.params[6];
+        for r in 0..h {
+            for j in 0..d {
+                if self.mask[j] == 0.0 {
+                    w4.data[r * d + j] = 0.0;
+                }
+            }
+        }
+        Ok(alive)
+    }
+
+    /// Structured sparsity in percent: share of masked-out features
+    /// (the paper's "Sparsity %": columns/features set to zero).
+    pub fn sparsity_pct(&self) -> f64 {
+        let dead = self.mask.iter().filter(|&&m| m == 0.0).count();
+        100.0 * dead as f64 / self.d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            "version=1\nd=6\nh=4\nk=2\nbatch=3\neval_batch=3\nactivation=silu\n\
+             train_step=t\npredict=p\nproject=j\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_shapes() {
+        let man = manifest();
+        let st = SaeState::init(&man, &mut Rng::new(1));
+        assert_eq!(st.params.len(), 8);
+        assert_eq!(st.params[0].shape, vec![6, 4]);
+        assert_eq!(st.params[7].shape, vec![6]);
+        assert_eq!(st.mask, vec![1.0; 6]);
+        // biases start at zero, weights don't
+        assert!(st.params[1].data.iter().all(|&v| v == 0.0));
+        assert!(st.params[0].data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn train_inputs_arity() {
+        let man = manifest();
+        let st = SaeState::init(&man, &mut Rng::new(1));
+        let x = vec![0.0; 3 * 6];
+        let y = vec![0.0; 3 * 2];
+        let lits = st.train_inputs(&x, &y, 3, 1e-3, 0.5).unwrap();
+        assert_eq!(lits.len(), 30);
+    }
+
+    #[test]
+    fn projected_w1_roundtrip_and_mask() {
+        let man = manifest();
+        let mut st = SaeState::init(&man, &mut Rng::new(2));
+        let mut fm = st.w1_feature_matrix().unwrap();
+        assert_eq!((fm.rows(), fm.cols()), (4, 6));
+        // kill features 1 and 3
+        fm.col_mut(1).fill(0.0);
+        fm.col_mut(3).fill(0.0);
+        let alive = st.set_projected_w1(&fm).unwrap();
+        assert_eq!(alive, 4);
+        assert_eq!(st.mask, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        assert!((st.sparsity_pct() - 100.0 * 2.0 / 6.0).abs() < 1e-9);
+        // w4 columns for dead features zeroed
+        let w4 = &st.params[6];
+        for r in 0..4 {
+            assert_eq!(w4.data[r * 6 + 1], 0.0);
+            assert_eq!(w4.data[r * 6 + 3], 0.0);
+        }
+    }
+
+    #[test]
+    fn feature_matrix_matches_w1_rows() {
+        let man = manifest();
+        let st = SaeState::init(&man, &mut Rng::new(3));
+        let fm = st.w1_feature_matrix().unwrap();
+        // column j of fm == row j of w1 (d, h)
+        for j in 0..6 {
+            for r in 0..4 {
+                assert_eq!(fm.get(r, j), st.params[0].data[j * 4 + r]);
+            }
+        }
+    }
+}

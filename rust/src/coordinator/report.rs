@@ -1,0 +1,129 @@
+//! Table / figure-series rendering for the SAE experiments
+//! (markdown for EXPERIMENTS.md, CSV for archival).
+
+use crate::coordinator::metrics::Aggregate;
+
+/// Render Table 2/3/4/5-style markdown: one column per method.
+pub fn table_markdown(title: &str, rows: &[Aggregate]) -> String {
+    let mut out = format!("### {title}\n\n");
+    out.push_str("| metric |");
+    for r in rows {
+        out.push_str(&format!(" {} |", r.label));
+    }
+    out.push_str("\n|---|");
+    for _ in rows {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    out.push_str("| Radius η |");
+    for r in rows {
+        out.push_str(&format!(" {} |", trim_float(r.eta)));
+    }
+    out.push('\n');
+    out.push_str("| Accuracy % |");
+    for r in rows {
+        out.push_str(&format!(" {:.2} ± {:.2} |", r.acc_mean, r.acc_std));
+    }
+    out.push('\n');
+    out.push_str("| Sparsity % |");
+    for r in rows {
+        if r.label == "baseline" {
+            out.push_str(" – |");
+        } else {
+            out.push_str(&format!(" {:.2} ± {:.2} |", r.sparsity_mean, r.sparsity_std));
+        }
+    }
+    out.push('\n');
+    out.push_str("| Projection ms |");
+    for r in rows {
+        if r.label == "baseline" {
+            out.push_str(" – |");
+        } else {
+            out.push_str(&format!(" {:.2} |", r.proj_ms_mean));
+        }
+    }
+    out.push('\n');
+    out
+}
+
+/// Render a radius-sweep (Figures 5–6) as markdown: rows = η values.
+pub fn sweep_markdown(title: &str, rows: &[Aggregate]) -> String {
+    let mut out = format!("### {title}\n\n");
+    out.push_str("| η | accuracy % | sparsity % |\n|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.2} ± {:.2} | {:.2} ± {:.2} |\n",
+            trim_float(r.eta),
+            r.acc_mean,
+            r.acc_std,
+            r.sparsity_mean,
+            r.sparsity_std
+        ));
+    }
+    out
+}
+
+/// CSV dump of aggregates.
+pub fn to_csv(rows: &[Aggregate]) -> String {
+    let mut out =
+        String::from("label,eta,acc_mean,acc_std,sparsity_mean,sparsity_std,proj_ms,runs\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
+            r.label, r.eta, r.acc_mean, r.acc_std, r.sparsity_mean, r.sparsity_std,
+            r.proj_ms_mean, r.runs
+        ));
+    }
+    out
+}
+
+fn trim_float(x: f64) -> String {
+    if (x - x.round()).abs() < 1e-9 {
+        format!("{}", x.round() as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(label: &str, eta: f64) -> Aggregate {
+        Aggregate {
+            label: label.into(),
+            eta,
+            acc_mean: 94.0,
+            acc_std: 1.4,
+            sparsity_mean: 94.6,
+            sparsity_std: 0.02,
+            proj_ms_mean: 3.2,
+            runs: 3,
+        }
+    }
+
+    #[test]
+    fn table_contains_all_methods() {
+        let md = table_markdown("Table 2", &[agg("baseline", 0.0), agg("bilevel_l1inf", 1.0)]);
+        assert!(md.contains("baseline"));
+        assert!(md.contains("bilevel_l1inf"));
+        assert!(md.contains("94.00 ± 1.40"));
+        assert!(md.contains("| Radius η | 0 | 1 |"));
+        // baseline sparsity is dashed out
+        assert!(md.contains("– |"));
+    }
+
+    #[test]
+    fn sweep_lists_each_eta() {
+        let md = sweep_markdown("Fig 5", &[agg("bilevel_l1inf", 0.5), agg("bilevel_l1inf", 1.0)]);
+        assert_eq!(md.matches("| 0.5 |").count(), 1);
+        assert_eq!(md.matches("| 1 |").count(), 1);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&[agg("x", 1.0)]);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("x,1,94.0000"));
+    }
+}

@@ -1,0 +1,250 @@
+//! The double-descent SAE trainer (paper Algorithm 8 + §7.3).
+//!
+//! Orchestration (all Rust; Python never runs here):
+//!
+//! 1. build + preprocess the dataset (log-transform for LUNG,
+//!    standardization for both), split train/test;
+//! 2. **descent 1**: `epochs1` epochs of the AOT `train_step` executable
+//!    through PJRT;
+//! 3. **projection**: pull `w1`, project its feature-major view with the
+//!    configured method (this is where the paper's contribution runs —
+//!    on the pool for the bi-level methods), extract the support mask,
+//!    freeze dead features;
+//! 4. **descent 2**: `epochs2` masked epochs (the artifact re-applies the
+//!    mask after every Adam update);
+//! 5. evaluate accuracy on the held-out set via the `predict` executable.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::config::{DatasetKind, ProjectionKind, TrainConfig};
+use crate::coordinator::metrics::{accuracy, Aggregate, RunResult};
+use crate::coordinator::params::SaeState;
+use crate::core::error::{MlprojError, Result};
+use crate::core::rng::Rng;
+use crate::data::dataset::Dataset;
+use crate::data::lung::{make_lung, LungSpec};
+use crate::data::synthetic::{make_classification, SyntheticSpec};
+use crate::parallel::WorkerPool;
+use crate::projection::{bilevel, l1inf_exact, l1l2_exact, parallel as proj_par, Norm};
+use crate::runtime::{ArtifactStore, HostArray};
+
+/// The training coordinator: owns the PJRT artifact store and the worker
+/// pool, and runs experiments described by [`TrainConfig`].
+pub struct Trainer {
+    store: ArtifactStore,
+    pool: WorkerPool,
+    cfg: TrainConfig,
+    /// Per-epoch log lines when true.
+    pub verbose: bool,
+}
+
+impl Trainer {
+    /// Open the artifact directory for the configured dataset and build
+    /// the worker pool.
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let dir = artifact_dir_for(&cfg);
+        let store = ArtifactStore::open(Path::new(&dir))?;
+        let pool = WorkerPool::new(cfg.workers);
+        Ok(Trainer { store, pool, cfg, verbose: false })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.store.manifest
+    }
+
+    /// Run all configured repeats; returns per-run results + aggregate.
+    pub fn run(&mut self) -> Result<(Vec<RunResult>, Aggregate)> {
+        let mut runs = Vec::with_capacity(self.cfg.repeats);
+        for rep in 0..self.cfg.repeats {
+            let seed = self.cfg.seed + 1000 * rep as u64;
+            runs.push(self.run_once(seed)?);
+        }
+        let label = self.cfg.projection.label().to_string();
+        let agg = Aggregate::from_runs(label, self.cfg.eta, &runs);
+        Ok((runs, agg))
+    }
+
+    /// One full double-descent run with the given seed.
+    pub fn run_once(&mut self, seed: u64) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(seed);
+        let (train, test) = self.build_dataset(&mut rng)?;
+        let man = self.store.manifest.clone();
+        if train.d != man.d {
+            return Err(MlprojError::Config(format!(
+                "dataset d={} but artifacts were lowered for d={} (run `make artifacts`)",
+                train.d, man.d
+            )));
+        }
+        let mut state = SaeState::init(&man, &mut rng);
+        let mut loss_curve = Vec::new();
+
+        // Descent 1.
+        for epoch in 0..self.cfg.epochs1 {
+            let loss = self.run_epoch(&mut state, &train)?;
+            loss_curve.push(loss);
+            if self.verbose {
+                eprintln!("[descent1] epoch {epoch:3} loss {loss:.5}");
+            }
+            if self.cfg.project_every > 0
+                && (epoch + 1) % self.cfg.project_every == 0
+                && self.cfg.projection != ProjectionKind::None
+            {
+                self.project_state(&mut state)?;
+            }
+        }
+
+        // Projection + mask extraction (Alg. 8 lines 5–6).
+        let mut projection_ms = 0.0;
+        let mut features_alive = state.d;
+        if self.cfg.projection != ProjectionKind::None {
+            let tp = Instant::now();
+            features_alive = self.project_state(&mut state)?;
+            projection_ms = tp.elapsed().as_secs_f64() * 1e3;
+        }
+
+        // Descent 2 (masked).
+        for epoch in 0..self.cfg.epochs2 {
+            let loss = self.run_epoch(&mut state, &train)?;
+            loss_curve.push(loss);
+            if self.verbose {
+                eprintln!("[descent2] epoch {epoch:3} loss {loss:.5}");
+            }
+        }
+
+        let accuracy_pct = 100.0 * self.evaluate(&state, &test)?;
+        Ok(RunResult {
+            accuracy_pct,
+            sparsity_pct: state.sparsity_pct(),
+            loss_curve,
+            features_alive,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            projection_ms,
+        })
+    }
+
+    /// One epoch of train_step executions; returns mean batch loss.
+    fn run_epoch(&mut self, state: &mut SaeState, train: &Dataset) -> Result<f32> {
+        let man = self.store.manifest.clone();
+        let mut total = 0.0f64;
+        let batches = train.batches(man.batch);
+        let nb = batches.len();
+        for (x, y) in batches {
+            let inputs = state.train_inputs(&x, &y, man.batch, self.cfg.lr, self.cfg.alpha)?;
+            let outs = self.store.run("train_step", &inputs)?;
+            let (loss, _acc) = state.absorb_outputs(&outs)?;
+            total += loss as f64;
+        }
+        Ok((total / nb.max(1) as f64) as f32)
+    }
+
+    /// Apply the configured projection to w1's feature-major view.
+    /// Returns the surviving feature count.
+    fn project_state(&mut self, state: &mut SaeState) -> Result<usize> {
+        let eta = self.cfg.eta;
+        let kind = self.cfg.projection;
+        if kind == ProjectionKind::PallasHlo {
+            // On-"device" path: the AOT Pallas artifact.
+            let w1 = state.params[0].to_literal()?;
+            let eta_lit = HostArray::scalar(eta as f32).to_literal()?;
+            let outs = self.store.run("project", &[w1, eta_lit])?;
+            let projected = HostArray::from_literal(&outs[0])?;
+            let fm = projected.as_feature_matrix()?;
+            return state.set_projected_w1(&fm);
+        }
+        let mut fm = state.w1_feature_matrix()?;
+        match kind {
+            ProjectionKind::BilevelL1Inf => {
+                proj_par::bilevel_l1inf_par_inplace(&mut fm, eta, &self.pool)
+            }
+            ProjectionKind::BilevelL11 => {
+                proj_par::bilevel_par_inplace(&mut fm, eta, Norm::L1, Norm::L1, &self.pool)
+            }
+            ProjectionKind::BilevelL12 => {
+                proj_par::bilevel_par_inplace(&mut fm, eta, Norm::L1, Norm::L2, &self.pool)
+            }
+            ProjectionKind::BilevelL21 => bilevel::bilevel_l21_inplace(&mut fm, eta),
+            ProjectionKind::ExactL1InfNewton => {
+                fm = l1inf_exact::project_l1inf_newton(&fm, eta);
+            }
+            ProjectionKind::ExactL1InfSortScan => {
+                fm = l1inf_exact::project_l1inf_sortscan(&fm, eta);
+            }
+            ProjectionKind::ExactL11 => l1l2_exact::project_l11_inplace(&mut fm, eta),
+            ProjectionKind::None | ProjectionKind::PallasHlo => unreachable!(),
+        }
+        state.set_projected_w1(&fm)
+    }
+
+    /// Held-out accuracy via the `predict` executable (wrap-padded
+    /// fixed-size batches; each test sample counted exactly once).
+    fn evaluate(&mut self, state: &SaeState, test: &Dataset) -> Result<f64> {
+        let man = self.store.manifest.clone();
+        let eb = man.eval_batch;
+        let nb = test.n.div_ceil(eb);
+        let mut correct_weighted = 0.0f64;
+        for b in 0..nb {
+            let mut x = Vec::with_capacity(eb * test.d);
+            let mut labels = Vec::with_capacity(eb);
+            for s in 0..eb {
+                let i = (b * eb + s) % test.n;
+                x.extend_from_slice(test.row(i));
+                labels.push(test.y[i]);
+            }
+            let n_real = eb.min(test.n.saturating_sub(b * eb));
+            let inputs = state.predict_inputs(&x, eb)?;
+            let outs = self.store.run("predict", &inputs)?;
+            let logits = HostArray::from_literal(&outs[0])?;
+            let acc = accuracy(&logits.data, man.k, &labels, n_real);
+            correct_weighted += acc * n_real as f64;
+        }
+        Ok(correct_weighted / test.n as f64)
+    }
+
+    /// Build + preprocess the configured dataset.
+    fn build_dataset(&self, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
+        let raw = match self.cfg.dataset {
+            DatasetKind::Synthetic => {
+                let spec = SyntheticSpec { seed: rng.next_u64(), ..Default::default() };
+                make_classification(&spec).dataset
+            }
+            DatasetKind::Lung => {
+                let spec = LungSpec { seed: rng.next_u64(), ..Default::default() };
+                let mut ds = make_lung(&spec).dataset;
+                ds.log1p(); // the paper's heteroscedasticity reduction
+                ds
+            }
+        };
+        let (mut train, mut test) = raw.split(self.cfg.test_frac, rng);
+        let (mean, std) = train.fit_standardize();
+        train.apply_standardize(&mean, &std);
+        test.apply_standardize(&mean, &std);
+        Ok((train, test))
+    }
+}
+
+/// Artifact directory layout: `<artifact_dir>/<dataset>/manifest.txt`.
+pub fn artifact_dir_for(cfg: &TrainConfig) -> String {
+    let sub = match cfg.dataset {
+        DatasetKind::Synthetic => "synthetic",
+        DatasetKind::Lung => "lung",
+    };
+    format!("{}/{}", cfg.artifact_dir.trim_end_matches('/'), sub)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_dir_layout() {
+        let mut cfg = TrainConfig::default();
+        cfg.artifact_dir = "artifacts/".into();
+        assert_eq!(artifact_dir_for(&cfg), "artifacts/synthetic");
+        cfg.dataset = DatasetKind::Lung;
+        assert_eq!(artifact_dir_for(&cfg), "artifacts/lung");
+    }
+}

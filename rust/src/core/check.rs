@@ -1,0 +1,103 @@
+//! Minimal property-based testing helper.
+//!
+//! `proptest` is not in the offline crate set, so this module provides the
+//! slice of it the test suite needs: run a property over many randomly
+//! generated cases (seeded, reproducible), and on failure report the seed
+//! and case index so the exact input can be regenerated.
+
+use crate::core::rng::Rng;
+
+/// Default number of random cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// Panics with the failing case index + seed on the first violation
+/// (properties return `Err(description)` to fail).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Random vector generator: length in [1, max_len], values U[-scale, scale].
+pub fn gen_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    let mut v = vec![0.0f32; n];
+    rng.fill_uniform(&mut v, -scale, scale);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            32,
+            |r| r.uniform(),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        forall(2, 8, |r| r.uniform(), |u| {
+            if *u < 2.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v = gen_vec(&mut rng, 20, 2.0);
+            assert!(!v.is_empty() && v.len() <= 20);
+            assert!(v.iter().all(|&x| (-2.0..2.0).contains(&x)));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Error types shared across the library.
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Debug, Error)]
+pub enum MlprojError {
+    /// A shape mismatch between tensors/matrices.
+    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
+    ShapeMismatch {
+        /// The shape the operation required.
+        expected: Vec<usize>,
+        /// The shape it received.
+        got: Vec<usize>,
+    },
+
+    /// An invalid argument (e.g. negative radius).
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Configuration parse / validation error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset construction / IO error.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// PJRT runtime error (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying IO error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, MlprojError>;
+
+impl MlprojError {
+    /// Shorthand for an `InvalidArgument` error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        MlprojError::InvalidArgument(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shape_mismatch() {
+        let e = MlprojError::ShapeMismatch {
+            expected: vec![2, 3],
+            got: vec![3, 2],
+        };
+        let s = format!("{e}");
+        assert!(s.contains("[2, 3]"));
+        assert!(s.contains("[3, 2]"));
+    }
+
+    #[test]
+    fn display_invalid() {
+        let e = MlprojError::invalid("radius must be >= 0");
+        assert_eq!(format!("{e}"), "invalid argument: radius must be >= 0");
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: MlprojError = io.into();
+        assert!(matches!(e, MlprojError::Io(_)));
+    }
+}

@@ -1,0 +1,252 @@
+//! Column-major dense `f32` matrices.
+//!
+//! The paper's algorithms are column-structured: aggregate each column
+//! with a q-norm, project the aggregate vector, then re-project each
+//! column independently. Column-major storage makes every one of those
+//! steps a scan over contiguous memory, which matters both for the
+//! sequential hot path and for splitting columns across workers.
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::rng::Rng;
+
+/// Dense column-major matrix: `rows` × `cols`, column `j` contiguous.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from column-major data.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![rows * cols],
+                got: vec![data.len()],
+            });
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from row-major data (transposing copy).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![rows * cols],
+                got: vec![data.len()],
+            });
+        }
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[j * rows + i] = data[i * cols + j];
+            }
+        }
+        Ok(m)
+    }
+
+    /// Random U[lo, hi) matrix (the workload of the paper's Figures 1–2).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Random N(mean, std) matrix.
+    pub fn random_normal(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, mean, std);
+        m
+    }
+
+    /// Number of rows (n in the paper).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (m in the paper).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the matrix has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat column-major data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable column-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[j * self.rows + i]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Contiguous view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Contiguous mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Iterator over column views.
+    pub fn cols_iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.rows.max(1))
+    }
+
+    /// Split all columns into disjoint mutable chunks of `cols_per_chunk`
+    /// columns — the unit handed to pool workers.
+    pub fn col_chunks_mut(&mut self, cols_per_chunk: usize) -> Vec<&mut [f32]> {
+        let rows = self.rows.max(1);
+        self.data.chunks_mut(rows * cols_per_chunk.max(1)).collect()
+    }
+
+    /// Row-major copy (for interchange with the PJRT runtime, which uses
+    /// row-major literals).
+    pub fn to_row_major(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.data.len()];
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out[i * self.cols + j] = self.data[j * self.rows + i];
+            }
+        }
+        out
+    }
+
+    /// Number of columns that are exactly all-zero — the paper's
+    /// *structured sparsity* count ("number of columns or features set
+    /// to zero").
+    pub fn zero_cols(&self) -> usize {
+        (0..self.cols).filter(|&j| self.col(j).iter().all(|&x| x == 0.0)).count()
+    }
+
+    /// Structured sparsity in percent (paper's "Sparsity %").
+    pub fn col_sparsity_pct(&self) -> f64 {
+        if self.cols == 0 {
+            return 0.0;
+        }
+        100.0 * self.zero_cols() as f64 / self.cols as f64
+    }
+
+    /// Fraction of exactly-zero entries (unstructured sparsity).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Squared Frobenius distance to another matrix.
+    pub fn dist2(&self, other: &Matrix) -> f64 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a as f64) - (*b as f64);
+                d * d
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        // columns: [1,2], [3,4], [5,6]
+        Matrix::from_col_major(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn col_major_layout() {
+        let m = sample();
+        assert_eq!(m.col(0), &[1.0, 2.0]);
+        assert_eq!(m.col(2), &[5.0, 6.0]);
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn row_major_roundtrip() {
+        let rm = vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]; // 2x3 row-major
+        let m = Matrix::from_row_major(2, 3, &rm).unwrap();
+        assert_eq!(m, sample());
+        assert_eq!(m.to_row_major(), rm);
+    }
+
+    #[test]
+    fn shape_check() {
+        assert!(Matrix::from_col_major(2, 3, vec![0.0; 5]).is_err());
+        assert!(Matrix::from_row_major(2, 3, &[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn zero_cols_counts_structured_sparsity() {
+        let mut m = sample();
+        m.col_mut(1).fill(0.0);
+        assert_eq!(m.zero_cols(), 1);
+        assert!((m.col_sparsity_pct() - 100.0 / 3.0).abs() < 1e-9);
+        // a single zero entry is not a zero column
+        m.set(0, 0, 0.0);
+        assert_eq!(m.zero_cols(), 1);
+    }
+
+    #[test]
+    fn chunks_cover_all_columns() {
+        let mut m = Matrix::zeros(4, 10);
+        let chunks = m.col_chunks_mut(3);
+        assert_eq!(chunks.len(), 4); // 3+3+3+1 columns
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 40);
+    }
+
+    #[test]
+    fn random_uniform_in_range() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::random_uniform(10, 10, 0.0, 1.0, &mut rng);
+        assert!(m.data().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn dist2_self_zero() {
+        let m = sample();
+        assert_eq!(m.dist2(&m), 0.0);
+    }
+}

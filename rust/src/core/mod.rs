@@ -1,0 +1,16 @@
+//! Core substrates: tensors, matrices, RNG, sorting, property-test helper.
+//!
+//! Everything here is written from scratch (the build is fully offline);
+//! see DESIGN.md §5 for the substitution rationale.
+
+pub mod check;
+pub mod error;
+pub mod matrix;
+pub mod rng;
+pub mod sort;
+pub mod tensor;
+
+pub use error::{MlprojError, Result};
+pub use matrix::Matrix;
+pub use rng::Rng;
+pub use tensor::Tensor;

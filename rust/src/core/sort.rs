@@ -1,0 +1,158 @@
+//! Sorting utilities for `f32` slices.
+//!
+//! The exact baselines (Quattoni-style sort-scan, Newton with sorted
+//! prefix sums) need descending sorts of magnitudes. `f32` is not `Ord`,
+//! so we provide total-order comparators plus convenience wrappers, and a
+//! branchless insertion path for tiny slices used inside the multi-level
+//! recursion.
+
+/// Total-order comparison treating NaN as smallest (projection inputs are
+/// finite; NaNs sink to the end of a descending sort so they never poison
+/// thresholds).
+#[inline]
+pub fn cmp_f32(a: &f32, b: &f32) -> std::cmp::Ordering {
+    match a.partial_cmp(b) {
+        Some(o) => o,
+        None => {
+            if a.is_nan() && b.is_nan() {
+                std::cmp::Ordering::Equal
+            } else if a.is_nan() {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Greater
+            }
+        }
+    }
+}
+
+/// Sort ascending in place (pattern-defeating quicksort via std).
+#[inline]
+pub fn sort_asc(xs: &mut [f32]) {
+    xs.sort_unstable_by(cmp_f32);
+}
+
+/// Sort descending in place.
+#[inline]
+pub fn sort_desc(xs: &mut [f32]) {
+    xs.sort_unstable_by(|a, b| cmp_f32(b, a));
+}
+
+/// Return a descending-sorted copy.
+pub fn sorted_desc(xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    sort_desc(&mut v);
+    v
+}
+
+/// Descending-sorted copy of absolute values.
+pub fn sorted_abs_desc(xs: &[f32]) -> Vec<f32> {
+    let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    sort_desc(&mut v);
+    v
+}
+
+/// Exclusive-then-inclusive prefix sums in f64 (projection thresholds are
+/// sensitive to cancellation; all scan arithmetic is done in f64).
+/// Returns `c` with `c[k] = sum of xs[0..=k]`.
+pub fn prefix_sums(xs: &[f32]) -> Vec<f64> {
+    let mut c = Vec::with_capacity(xs.len());
+    let mut acc = 0.0f64;
+    for &x in xs {
+        acc += x as f64;
+        c.push(acc);
+    }
+    c
+}
+
+/// Maximum absolute value of a slice (0 for empty).
+///
+/// Eight independent accumulator lanes so the compiler can vectorize the
+/// reduction (a single `fold` with `f32::max` is a serial dependency
+/// chain); measured ~2× on the colmax stage of the bi-level projection
+/// (EXPERIMENTS.md §Perf). `v > acc` comparison ignores NaN like
+/// `f32::max` does.
+#[inline]
+pub fn max_abs(xs: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut chunks = xs.chunks_exact(8);
+    for c in chunks.by_ref() {
+        for (acc, &x) in lanes.iter_mut().zip(c) {
+            let v = x.abs();
+            if v > *acc {
+                *acc = v;
+            }
+        }
+    }
+    let mut m = 0.0f32;
+    for &x in chunks.remainder() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// ℓ1 norm of a slice, accumulated in f64.
+#[inline]
+pub fn l1_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|x| x.abs() as f64).sum()
+}
+
+/// ℓ2 norm of a slice, accumulated in f64.
+#[inline]
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn desc_sorts() {
+        let mut v = vec![1.0, -3.0, 2.0, 0.0];
+        sort_desc(&mut v);
+        assert_eq!(v, vec![2.0, 1.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn asc_sorts() {
+        let mut v = vec![1.0, -3.0, 2.0];
+        sort_asc(&mut v);
+        assert_eq!(v, vec![-3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn abs_desc() {
+        assert_eq!(sorted_abs_desc(&[1.0, -3.0, 2.0]), vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn nan_sinks_in_desc() {
+        let mut v = vec![1.0, f32::NAN, 2.0];
+        sort_desc(&mut v);
+        assert_eq!(v[0], 2.0);
+        assert_eq!(v[1], 1.0);
+        assert!(v[2].is_nan());
+    }
+
+    #[test]
+    fn prefix_sum_values() {
+        let c = prefix_sums(&[1.0, 2.0, 3.0]);
+        assert_eq!(c, vec![1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(max_abs(&[1.0, -5.0, 2.0]), 5.0);
+        assert_eq!(l1_norm(&[1.0, -5.0, 2.0]), 8.0);
+        assert_eq!(l2_norm(&[3.0, -4.0]), 5.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Dense row-major tensors of `f32`.
+//!
+//! A deliberately small tensor type: contiguous storage, shape vector,
+//! row-major (C) layout. The projection algorithms only need contiguous
+//! views, slicing along the leading axis, and leading-axis aggregation —
+//! we implement exactly that, with unit tests, rather than pulling a
+//! full ndarray dependency (unavailable offline anyway).
+
+use crate::core::error::{MlprojError, Result};
+
+/// Dense row-major tensor of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor from shape and data. Errors if sizes don't match.
+    pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![n],
+                got: vec![data.len()],
+            });
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    /// Shape accessor.
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Tensor order (number of axes).
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat immutable data view.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable data view.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat data vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major strides of the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Element access by multi-index (debug-checked).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let flat: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[flat]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(&mut self, shape: Vec<usize>) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![self.data.len()],
+                got: vec![n],
+            });
+        }
+        self.shape = shape;
+        Ok(())
+    }
+
+    /// Size of the leading axis.
+    pub fn leading(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Number of elements in one leading-axis slice.
+    pub fn slice_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Immutable view of the `i`-th leading-axis slice.
+    pub fn slice(&self, i: usize) -> &[f32] {
+        let sl = self.slice_len();
+        &self.data[i * sl..(i + 1) * sl]
+    }
+
+    /// Mutable view of the `i`-th leading-axis slice.
+    pub fn slice_mut(&mut self, i: usize) -> &mut [f32] {
+        let sl = self.slice_len();
+        &mut self.data[i * sl..(i + 1) * sl]
+    }
+
+    /// Aggregate the *leading* axis with `f: &[f32] -> f32` applied to each
+    /// "fiber" (the vector of elements sharing all trailing indices).
+    ///
+    /// For `Y ∈ R^{c×n×m}` this returns `V ∈ R^{n×m}` with
+    /// `V[t] = f(Y[0,t], …, Y[c-1,t])` — exactly the V_q aggregation of the
+    /// paper's multi-level projection (Def. 6.2) for one aggregated axis.
+    pub fn aggregate_leading<F: Fn(&[f32]) -> f32>(&self, f: F) -> Tensor {
+        let c = self.leading();
+        let rest = self.slice_len();
+        let mut out = vec![0.0f32; rest];
+        let mut fiber = vec![0.0f32; c];
+        for t in 0..rest {
+            for (k, fv) in fiber.iter_mut().enumerate() {
+                *fv = self.data[k * rest + t];
+            }
+            out[t] = f(&fiber);
+        }
+        Tensor { shape: self.shape[1..].to_vec(), data: out }
+    }
+
+    /// The fiber along the leading axis at trailing flat-index `t`.
+    pub fn fiber_leading(&self, t: usize) -> Vec<f32> {
+        let c = self.leading();
+        let rest = self.slice_len();
+        (0..c).map(|k| self.data[k * rest + t]).collect()
+    }
+
+    /// Write a fiber along the leading axis at trailing flat-index `t`.
+    pub fn set_fiber_leading(&mut self, t: usize, fiber: &[f32]) {
+        let rest = self.slice_len();
+        for (k, &v) in fiber.iter().enumerate() {
+            self.data[k * rest + t] = v;
+        }
+    }
+
+    /// Maximum absolute element (0 for empty tensors).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// Frobenius (ℓ2,…,2) norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared euclidean distance to another tensor of identical shape.
+    pub fn dist2(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a as f64) - (*b as f64);
+                d * d
+            })
+            .sum()
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn at_indexing() {
+        let t = Tensor::from_vec(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+    }
+
+    #[test]
+    fn slice_views() {
+        let t = Tensor::from_vec(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.slice(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(t.slice(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn aggregate_leading_max_abs() {
+        // Y in R^{2x3}: fibers along axis 0 are columns of length 2.
+        let t = Tensor::from_vec(vec![2, 3], vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]).unwrap();
+        let v = t.aggregate_leading(|f| f.iter().fold(0.0f32, |a, &b| a.max(b.abs())));
+        assert_eq!(v.shape(), &[3]);
+        assert_eq!(v.data(), &[3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregate_leading_order3() {
+        let t = Tensor::from_vec(vec![2, 2, 2], (1..=8).map(|x| x as f32).collect()).unwrap();
+        // fibers: (1,5), (2,6), (3,7), (4,8)
+        let v = t.aggregate_leading(|f| f.iter().sum());
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.data(), &[6.0, 8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn fiber_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set_fiber_leading(2, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.fiber_leading(2), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.at(&[1, 2]), 2.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let mut t = Tensor::from_vec(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(vec![2, 2], vec![3.0, 0.0, 0.0, -4.0]).unwrap();
+        assert_eq!(t.frobenius(), 5.0);
+        assert_eq!(t.max_abs(), 4.0);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        let a = Tensor::from_vec(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(vec![2], vec![4.0, 6.0]).unwrap();
+        assert_eq!(a.dist2(&b), 25.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal CSV read/write (no external crates offline).
+//!
+//! Used for golden-vector interchange with the Python oracle and for
+//! emitting experiment series consumed by EXPERIMENTS.md.
+
+use crate::core::error::{MlprojError, Result};
+use std::path::Path;
+
+/// Write rows of f32 values as CSV.
+pub fn write_matrix(path: &Path, rows: &[Vec<f32>]) -> Result<()> {
+    let mut out = String::new();
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a CSV of f32 values (no header) into rows.
+pub fn read_matrix(path: &Path) -> Result<Vec<Vec<f32>>> {
+    let text = std::fs::read_to_string(path)?;
+    parse_matrix(&text)
+}
+
+/// Parse CSV text into f32 rows.
+pub fn parse_matrix(text: &str) -> Result<Vec<Vec<f32>>> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row: std::result::Result<Vec<f32>, _> =
+            line.split(',').map(|c| c.trim().parse::<f32>()).collect();
+        rows.push(row.map_err(|e| {
+            MlprojError::Data(format!("csv line {}: {e}", lineno + 1))
+        })?);
+    }
+    Ok(rows)
+}
+
+/// Flatten CSV rows into a row-major buffer, checking rectangularity.
+pub fn to_dense(rows: &[Vec<f32>]) -> Result<(Vec<f32>, usize, usize)> {
+    let n = rows.len();
+    if n == 0 {
+        return Ok((vec![], 0, 0));
+    }
+    let d = rows[0].len();
+    let mut out = Vec::with_capacity(n * d);
+    for (i, r) in rows.iter().enumerate() {
+        if r.len() != d {
+            return Err(MlprojError::Data(format!(
+                "ragged csv: row {} has {} cells, expected {d}",
+                i + 1,
+                r.len()
+            )));
+        }
+        out.extend_from_slice(r);
+    }
+    Ok((out, n, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let rows = parse_matrix("1,2,3\n4,5,6\n").unwrap();
+        assert_eq!(rows, vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_matrix("1,x,3").is_err());
+    }
+
+    #[test]
+    fn parse_skips_blank_lines() {
+        let rows = parse_matrix("1,2\n\n3,4\n").unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn dense_checks_rectangular() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0]];
+        assert!(to_dense(&rows).is_err());
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let (flat, n, d) = to_dense(&rows).unwrap();
+        assert_eq!((n, d), (2, 2));
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("mlproj_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        let rows = vec![vec![1.5, -2.25], vec![0.0, 3.0]];
+        write_matrix(&path, &rows).unwrap();
+        let back = read_matrix(&path).unwrap();
+        assert_eq!(rows, back);
+    }
+}

@@ -1,0 +1,247 @@
+//! In-memory dataset container + preprocessing used by the SAE experiments.
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::rng::Rng;
+
+/// A dense supervised dataset: `x` row-major `(n, d)`, integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Features, row-major `(n, d)`.
+    pub x: Vec<f32>,
+    /// Labels in `0..k`.
+    pub y: Vec<usize>,
+    /// Number of samples.
+    pub n: usize,
+    /// Number of features.
+    pub d: usize,
+    /// Number of classes.
+    pub k: usize,
+}
+
+impl Dataset {
+    /// Construct with consistency checks.
+    pub fn new(x: Vec<f32>, y: Vec<usize>, d: usize, k: usize) -> Result<Self> {
+        if y.is_empty() || x.len() != y.len() * d {
+            return Err(MlprojError::Data(format!(
+                "inconsistent dataset: |x|={} |y|={} d={d}",
+                x.len(),
+                y.len()
+            )));
+        }
+        if let Some(&bad) = y.iter().find(|&&l| l >= k) {
+            return Err(MlprojError::Data(format!("label {bad} >= k={k}")));
+        }
+        let n = y.len();
+        Ok(Dataset { x, y, n, d, k })
+    }
+
+    /// Row view of sample `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Shuffle samples in place.
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let mut order: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut order);
+        let mut x = vec![0.0f32; self.x.len()];
+        let mut y = vec![0usize; self.n];
+        for (new_i, &old_i) in order.iter().enumerate() {
+            x[new_i * self.d..(new_i + 1) * self.d].copy_from_slice(self.row(old_i));
+            y[new_i] = self.y[old_i];
+        }
+        self.x = x;
+        self.y = y;
+    }
+
+    /// Split into (train, test) with `test_frac` of samples held out.
+    pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let mut order: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut order);
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        let n_test = n_test.clamp(1, self.n - 1);
+        let take = |idx: &[usize]| -> Dataset {
+            let mut x = Vec::with_capacity(idx.len() * self.d);
+            let mut y = Vec::with_capacity(idx.len());
+            for &i in idx {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset { x, y, n: idx.len(), d: self.d, k: self.k }
+        };
+        (take(&order[n_test..]), take(&order[..n_test]))
+    }
+
+    /// log(1 + x) transform (the paper's metabolomics preprocessing,
+    /// "classical log-transform for reducing heteroscedasticity").
+    /// Requires nonnegative data.
+    pub fn log1p(&mut self) {
+        for v in self.x.iter_mut() {
+            *v = (1.0 + v.max(0.0)).ln();
+        }
+    }
+
+    /// Per-feature standardization statistics `(mean, std)` fit on self.
+    pub fn fit_standardize(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut mean = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (m, &v) in mean.iter_mut().zip(self.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.n as f64;
+        }
+        let mut var = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for ((s, &m), &v) in var.iter_mut().zip(&mean).zip(self.row(i)) {
+                let dv = v as f64 - m;
+                *s += dv * dv;
+            }
+        }
+        let std: Vec<f32> = var
+            .iter()
+            .map(|&s| ((s / self.n as f64).sqrt().max(1e-8)) as f32)
+            .collect();
+        (mean.iter().map(|&m| m as f32).collect(), std)
+    }
+
+    /// Apply standardization statistics in place.
+    pub fn apply_standardize(&mut self, mean: &[f32], std: &[f32]) {
+        for i in 0..self.n {
+            let row = &mut self.x[i * self.d..(i + 1) * self.d];
+            for ((v, &m), &s) in row.iter_mut().zip(mean).zip(std) {
+                *v = (*v - m) / s;
+            }
+        }
+    }
+
+    /// One-hot encode labels as row-major `(n, k)` f32.
+    pub fn one_hot(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * self.k];
+        for (i, &l) in self.y.iter().enumerate() {
+            out[i * self.k + l] = 1.0;
+        }
+        out
+    }
+
+    /// Exact-size batches `(x, y_onehot)` of `batch` samples; the tail
+    /// wraps around to keep every batch full (the HLO batch dim is static).
+    pub fn batches(&self, batch: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let nb = self.n.div_ceil(batch);
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let mut x = Vec::with_capacity(batch * self.d);
+            let mut y = vec![0.0f32; batch * self.k];
+            for s in 0..batch {
+                let i = (b * batch + s) % self.n;
+                x.extend_from_slice(self.row(i));
+                y[s * self.k + self.y[i]] = 1.0;
+            }
+            out.push((x, y));
+        }
+        out
+    }
+
+    /// Class balance counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.k];
+        for &l in &self.y {
+            counts[l] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+            vec![0, 1, 0, 1],
+            2,
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_validates() {
+        assert!(Dataset::new(vec![0.0; 6], vec![0, 1], 3, 2).is_ok());
+        assert!(Dataset::new(vec![0.0; 5], vec![0, 1], 3, 2).is_err());
+        assert!(Dataset::new(vec![0.0; 6], vec![0, 2], 3, 2).is_err());
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut ds = tiny();
+        let pairs_before: Vec<(Vec<f32>, usize)> =
+            (0..ds.n).map(|i| (ds.row(i).to_vec(), ds.y[i])).collect();
+        ds.shuffle(&mut Rng::new(1));
+        for i in 0..ds.n {
+            let pair = (ds.row(i).to_vec(), ds.y[i]);
+            assert!(pairs_before.contains(&pair));
+        }
+    }
+
+    #[test]
+    fn split_sizes() {
+        let ds = tiny();
+        let (train, test) = ds.split(0.25, &mut Rng::new(2));
+        assert_eq!(train.n, 3);
+        assert_eq!(test.n, 1);
+        assert_eq!(train.d, 2);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = tiny();
+        let (mean, std) = ds.fit_standardize();
+        ds.apply_standardize(&mean, &std);
+        let (m2, s2) = ds.fit_standardize();
+        for v in m2 {
+            assert!(v.abs() < 1e-5);
+        }
+        for v in s2 {
+            assert!((v - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let ds = tiny();
+        let oh = ds.one_hot();
+        assert_eq!(oh, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn batches_full_and_wrapping() {
+        let ds = tiny();
+        let bs = ds.batches(3);
+        assert_eq!(bs.len(), 2);
+        for (x, y) in &bs {
+            assert_eq!(x.len(), 3 * 2);
+            assert_eq!(y.len(), 3 * 2);
+        }
+        // last batch: sample 3, then wraps to samples 0 and 1
+        assert_eq!(&bs[1].0[0..2], &[7.0, 8.0]);
+        assert_eq!(&bs[1].0[2..4], &[1.0, 2.0]);
+        assert_eq!(&bs[1].0[4..6], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn log1p_monotone_nonneg() {
+        let mut ds = Dataset::new(vec![0.0, 1.0, 10.0, 100.0], vec![0, 0], 2, 1).unwrap();
+        ds.log1p();
+        assert_eq!(ds.x[0], 0.0);
+        assert!(ds.x[1] < ds.x[2] && ds.x[2] < ds.x[3]);
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let ds = tiny();
+        assert_eq!(ds.class_counts(), vec![2, 2]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Simulated LUNG metabolomics cohort (DESIGN.md §5 substitution).
+//!
+//! The paper's LUNG dataset (Mathe et al. 2014) is clinical urine
+//! metabolomics: 469 NSCLC cases + 536 controls (=1005 samples; the
+//! paper's "10005" is a typo), m = 2944 metabolomic features, log-
+//! transformed before training. The raw data is not redistributable, so
+//! we simulate the same statistical shape:
+//!
+//! * intensities are log-normal with feature-specific location/scale
+//!   (heteroscedastic — this is *why* the log-transform matters);
+//! * a small discriminative panel (~40 metabolites) shifts location in
+//!   cases, with per-feature effect sizes drawn once;
+//! * a mild per-sample "batch/dilution" effect multiplies all features
+//!   (urine concentration varies), which the log-transform turns into an
+//!   additive nuisance;
+//! * everything else is nuisance.
+//!
+//! The experiment's conclusion — the structured projection finds a small
+//! panel without losing accuracy (Table 3/5, Figures 5–6) — depends only
+//! on this shape.
+
+use crate::core::rng::Rng;
+use crate::data::dataset::Dataset;
+
+/// Parameters for [`make_lung`].
+#[derive(Debug, Clone)]
+pub struct LungSpec {
+    /// NSCLC case count (paper: 469).
+    pub n_cases: usize,
+    /// Control count (paper: 536).
+    pub n_controls: usize,
+    /// Metabolomic feature count (paper: 2944).
+    pub n_features: usize,
+    /// Discriminative panel size.
+    pub n_panel: usize,
+    /// Mean |log-scale shift| of panel features in cases.
+    pub effect: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LungSpec {
+    fn default() -> Self {
+        LungSpec {
+            n_cases: 469,
+            n_controls: 536,
+            n_features: 2944,
+            n_panel: 40,
+            // Effect size tuned so a well-regularized classifier lands in
+            // the paper's ~77–82% accuracy band (urine metabolomics is a
+            // weak-signal modality) rather than saturating.
+            effect: 0.22,
+            seed: 2024,
+        }
+    }
+}
+
+/// Result of [`make_lung`].
+pub struct Lung {
+    /// Raw (non-log) intensity dataset; labels 1 = NSCLC, 0 = control.
+    pub dataset: Dataset,
+    /// Indices of the discriminative panel.
+    pub panel_idx: Vec<usize>,
+}
+
+/// Simulate the cohort. Returns *raw intensities* — callers apply
+/// `Dataset::log1p()` + standardization, mirroring the paper's pipeline.
+pub fn make_lung(spec: &LungSpec) -> Lung {
+    let mut rng = Rng::new(spec.seed);
+    let d = spec.n_features;
+    let n = spec.n_cases + spec.n_controls;
+
+    // Per-feature log-location and log-scale (heteroscedastic).
+    let mu: Vec<f64> = (0..d).map(|_| rng.normal_ms(2.0, 1.2)).collect();
+    let sigma: Vec<f64> = (0..d).map(|_| rng.uniform_range(0.25, 0.8)).collect();
+
+    // Discriminative panel: distinct indices, signed effect sizes.
+    let panel_idx = rng.sample_indices(d, spec.n_panel);
+    let mut shift = vec![0.0f64; d];
+    for &j in &panel_idx {
+        let magnitude = spec.effect * rng.uniform_range(0.5, 1.5);
+        shift[j] = if rng.bernoulli(0.5) { magnitude } else { -magnitude };
+    }
+
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0usize; n];
+    for i in 0..n {
+        let is_case = i < spec.n_cases;
+        y[i] = usize::from(is_case);
+        // per-sample dilution (batch) effect, additive in log space
+        let dilution = rng.normal_ms(0.0, 0.3);
+        let row = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            let class_shift = if is_case { shift[j] } else { 0.0 };
+            let logv = mu[j] + class_shift + dilution + sigma[j] * rng.normal();
+            row[j] = logv.exp() as f32;
+        }
+    }
+
+    Lung {
+        dataset: Dataset::new(x, y, d, 2).expect("consistent by construction"),
+        panel_idx,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> LungSpec {
+        LungSpec {
+            n_cases: 60,
+            n_controls: 70,
+            n_features: 200,
+            n_panel: 10,
+            effect: 1.2,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let l = make_lung(&small_spec());
+        assert_eq!(l.dataset.n, 130);
+        assert_eq!(l.dataset.d, 200);
+        assert_eq!(l.dataset.class_counts(), vec![70, 60]);
+    }
+
+    #[test]
+    fn intensities_positive_and_skewed() {
+        let l = make_lung(&small_spec());
+        assert!(l.dataset.x.iter().all(|&v| v > 0.0));
+        // log-normal => mean > median (right skew) on most features
+        let ds = &l.dataset;
+        let mut skewed = 0;
+        for j in 0..ds.d {
+            let mut vals: Vec<f32> = (0..ds.n).map(|i| ds.row(i)[j]).collect();
+            vals.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = vals[ds.n / 2];
+            let mean: f32 = vals.iter().sum::<f32>() / ds.n as f32;
+            if mean > median {
+                skewed += 1;
+            }
+        }
+        assert!(skewed > ds.d / 2, "skewed={skewed}");
+    }
+
+    #[test]
+    fn panel_separates_after_log() {
+        let l = make_lung(&small_spec());
+        let mut ds = l.dataset.clone();
+        ds.log1p();
+        let counts = ds.class_counts();
+        let mut mean_diff = vec![0.0f64; ds.d];
+        for i in 0..ds.n {
+            let sign = if ds.y[i] == 1 { 1.0 } else { -1.0 };
+            let w = sign / counts[ds.y[i]] as f64;
+            for (md, &v) in mean_diff.iter_mut().zip(ds.row(i)) {
+                *md += w * v as f64;
+            }
+        }
+        let panel: f64 =
+            l.panel_idx.iter().map(|&j| mean_diff[j].abs()).sum::<f64>() / l.panel_idx.len() as f64;
+        let rest: f64 = (0..ds.d)
+            .filter(|j| !l.panel_idx.contains(j))
+            .map(|j| mean_diff[j].abs())
+            .sum::<f64>()
+            / (ds.d - l.panel_idx.len()) as f64;
+        assert!(panel > 3.0 * rest, "panel={panel} rest={rest}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = make_lung(&small_spec());
+        let b = make_lung(&small_spec());
+        assert_eq!(a.dataset.x, b.dataset.x);
+        assert_eq!(a.panel_idx, b.panel_idx);
+    }
+
+    #[test]
+    fn paper_scale_default() {
+        let s = LungSpec::default();
+        assert_eq!(s.n_cases + s.n_controls, 1005);
+        assert_eq!(s.n_features, 2944);
+    }
+}

@@ -1,0 +1,11 @@
+//! Datasets: synthetic `make_classification` clone, simulated LUNG
+//! metabolomics cohort, preprocessing, CSV interchange.
+
+pub mod csv;
+pub mod dataset;
+pub mod lung;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use lung::{make_lung, Lung, LungSpec};
+pub use synthetic::{make_classification, Synthetic, SyntheticSpec};

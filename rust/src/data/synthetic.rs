@@ -1,0 +1,237 @@
+//! Synthetic classification data — a from-scratch clone of scikit-learn's
+//! `make_classification`, matching the paper's §7.3.2 workload:
+//! n=1000 samples, m=2000 features, 64 informative, separability 0.8.
+//!
+//! Generation follows sklearn's recipe: class centroids on hypercube
+//! vertices (scaled by `class_sep`) in an informative subspace, standard
+//! normal within-class noise, a random linear mixing of the informative
+//! block, pure-noise nuisance features, optional label flips, and a random
+//! permutation of feature columns so the informative set is hidden.
+
+use crate::core::rng::Rng;
+use crate::data::dataset::Dataset;
+
+/// Parameters for [`make_classification`].
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Number of samples.
+    pub n_samples: usize,
+    /// Total features.
+    pub n_features: usize,
+    /// Informative features.
+    pub n_informative: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Centroid separation (paper: 0.8).
+    pub class_sep: f64,
+    /// Fraction of labels randomly flipped (sklearn default 0.01).
+    pub flip_y: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        // The paper's synthetic benchmark ("typical range for biological
+        // data"): 1000 x 2000, 64 informative, separability 0.8.
+        SyntheticSpec {
+            n_samples: 1000,
+            n_features: 2000,
+            n_informative: 64,
+            n_classes: 2,
+            class_sep: 0.8,
+            flip_y: 0.01,
+            seed: 42,
+        }
+    }
+}
+
+/// Result of [`make_classification`]: the dataset plus the ground-truth
+/// indices of informative features (after permutation), used to score
+/// support recovery.
+pub struct Synthetic {
+    /// The generated dataset.
+    pub dataset: Dataset,
+    /// Column indices that carry class signal.
+    pub informative_idx: Vec<usize>,
+}
+
+/// Generate the synthetic dataset.
+pub fn make_classification(spec: &SyntheticSpec) -> Synthetic {
+    let mut rng = Rng::new(spec.seed);
+    let (n, d, di, k) = (spec.n_samples, spec.n_features, spec.n_informative, spec.n_classes);
+    assert!(di <= d && k >= 2);
+
+    // Class centroids: hypercube-ish vertices in the informative subspace.
+    let mut centroids = vec![vec![0.0f64; di]; k];
+    for (c, cent) in centroids.iter_mut().enumerate() {
+        for (j, v) in cent.iter_mut().enumerate() {
+            // Deterministic +-1 pattern decorrelated across classes, then
+            // jittered so no coordinate is degenerate.
+            let sign = if ((j + c * 7) / (c + 1)) % 2 == 0 { 1.0 } else { -1.0 };
+            *v = spec.class_sep * sign * (0.75 + 0.5 * rng.uniform());
+        }
+    }
+
+    // Random mixing matrix A (di x di): informative block is x_inf = (z + c) A
+    // with z ~ N(0, I), giving correlated informative features like sklearn.
+    let mut mix = vec![0.0f64; di * di];
+    for v in mix.iter_mut() {
+        *v = rng.normal() / (di as f64).sqrt();
+    }
+    // Keep A well-conditioned-ish: add identity.
+    for j in 0..di {
+        mix[j * di + j] += 1.0;
+    }
+
+    // Assign balanced classes, then generate.
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0usize; n];
+    let mut zbuf = vec![0.0f64; di];
+    for i in 0..n {
+        let c = i % k;
+        y[i] = c;
+        for z in zbuf.iter_mut() {
+            *z = rng.normal();
+        }
+        let row = &mut x[i * d..(i + 1) * d];
+        // informative block (pre-permutation: first di columns)
+        for jcol in 0..di {
+            let mut acc = 0.0f64;
+            for jrow in 0..di {
+                acc += (zbuf[jrow] + centroids[c][jrow]) * mix[jrow * di + jcol];
+            }
+            row[jcol] = acc as f32;
+        }
+        // nuisance features: pure standard normal
+        for v in row[di..].iter_mut() {
+            *v = rng.normal() as f32;
+        }
+    }
+
+    // Label noise.
+    for label in y.iter_mut() {
+        if rng.bernoulli(spec.flip_y) {
+            *label = rng.below(k);
+        }
+    }
+
+    // Random feature permutation (hide the informative block).
+    let mut perm: Vec<usize> = (0..d).collect();
+    rng.shuffle(&mut perm);
+    let mut xp = vec![0.0f32; n * d];
+    for i in 0..n {
+        let src = &x[i * d..(i + 1) * d];
+        let dst = &mut xp[i * d..(i + 1) * d];
+        for (orig_j, &new_j) in perm.iter().enumerate() {
+            dst[new_j] = src[orig_j];
+        }
+    }
+    let informative_idx: Vec<usize> = perm[..di].to_vec();
+
+    Synthetic {
+        dataset: Dataset::new(xp, y, d, k).expect("consistent by construction"),
+        informative_idx,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SyntheticSpec {
+        SyntheticSpec {
+            n_samples: 200,
+            n_features: 50,
+            n_informative: 8,
+            n_classes: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn shapes_and_balance() {
+        let s = make_classification(&small_spec());
+        assert_eq!(s.dataset.n, 200);
+        assert_eq!(s.dataset.d, 50);
+        let counts = s.dataset.class_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 200);
+        assert!(counts.iter().all(|&c| c >= 90), "{counts:?}");
+    }
+
+    #[test]
+    fn informative_idx_valid_and_distinct() {
+        let s = make_classification(&small_spec());
+        assert_eq!(s.informative_idx.len(), 8);
+        let mut sorted = s.informative_idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+        assert!(sorted.iter().all(|&j| j < 50));
+    }
+
+    #[test]
+    fn informative_features_separate_classes() {
+        // Mean difference between classes should be much larger on
+        // informative features than on nuisance ones.
+        let s = make_classification(&small_spec());
+        let ds = &s.dataset;
+        let mut mean_diff = vec![0.0f64; ds.d];
+        let counts = ds.class_counts();
+        for i in 0..ds.n {
+            let sign = if ds.y[i] == 0 { 1.0 } else { -1.0 };
+            let w = sign / counts[ds.y[i]] as f64;
+            for (md, &v) in mean_diff.iter_mut().zip(ds.row(i)) {
+                *md += w * v as f64;
+            }
+        }
+        let info: f64 = s
+            .informative_idx
+            .iter()
+            .map(|&j| mean_diff[j].abs())
+            .sum::<f64>()
+            / s.informative_idx.len() as f64;
+        let noise: f64 = (0..ds.d)
+            .filter(|j| !s.informative_idx.contains(j))
+            .map(|j| mean_diff[j].abs())
+            .sum::<f64>()
+            / (ds.d - s.informative_idx.len()) as f64;
+        assert!(info > 3.0 * noise, "info={info} noise={noise}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = make_classification(&small_spec());
+        let b = make_classification(&small_spec());
+        assert_eq!(a.dataset.x, b.dataset.x);
+        assert_eq!(a.dataset.y, b.dataset.y);
+    }
+
+    #[test]
+    fn flip_y_injects_noise() {
+        let mut spec = small_spec();
+        spec.flip_y = 0.5;
+        let noisy = make_classification(&spec);
+        spec.flip_y = 0.0;
+        let clean = make_classification(&spec);
+        let diffs = noisy
+            .dataset
+            .y
+            .iter()
+            .zip(&clean.dataset.y)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diffs > 20, "diffs={diffs}");
+    }
+
+    #[test]
+    fn paper_scale_default() {
+        let spec = SyntheticSpec::default();
+        assert_eq!(spec.n_samples, 1000);
+        assert_eq!(spec.n_features, 2000);
+        assert_eq!(spec.n_informative, 64);
+        assert!((spec.class_sep - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,31 @@
+//! # mlproj
+//!
+//! Full reproduction of *"Multi-level projection with exponential parallel
+//! speedup; Application to sparse auto-encoders neural networks"*
+//! (Perez & Barlaud, 2024) as a three-layer Rust + JAX + Pallas system.
+//!
+//! * [`projection`] — the paper's contribution: bi-level / multi-level
+//!   ℓ_{p,q} projections plus every exact baseline they are compared to.
+//! * [`parallel`] — worker pool realizing the parallel decomposition.
+//! * [`data`] — synthetic `make_classification` and simulated LUNG cohorts.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX model.
+//! * [`coordinator`] — the SAE double-descent trainer and experiment sweeps.
+//! * [`bench`] — timing harness used by all paper-figure benches.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod parallel;
+pub mod projection;
+pub mod runtime;
+
+pub use crate::core::{Matrix, MlprojError, Result, Rng, Tensor};
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

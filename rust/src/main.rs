@@ -1,0 +1,284 @@
+//! mlproj CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//!   train   — one SAE double-descent experiment (config file + overrides)
+//!   sweep   — a paper preset (table2..table5, fig5_synthetic, fig5_lung)
+//!   project — project a random matrix, compare methods (quick demo)
+//!   datagen — emit a dataset as CSV
+//!   info    — artifact/platform diagnostics
+//!
+//! clap is not in the offline crate set; arguments are `--key value` pairs
+//! parsed by [`Args`].
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use mlproj::coordinator::{report, sweeps, TrainConfig, Trainer};
+use mlproj::core::error::Result;
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::data::{csv, make_classification, make_lung, LungSpec, SyntheticSpec};
+use mlproj::projection::{bilevel, l1inf_exact, norms};
+
+/// Minimal `--key value` argument parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "\
+mlproj — multi-level projection reproduction (Perez & Barlaud 2024)
+
+USAGE:
+  mlproj train [--config FILE] [--dataset synthetic|lung] [--projection P]
+               [--eta F] [--epochs1 N] [--epochs2 N] [--repeats N] [--verbose]
+  mlproj sweep --preset NAME [--repeats N] [--out FILE]
+               presets: table2 table3 table4 table5 fig5_synthetic fig5_lung
+  mlproj project [--n N] [--m M] [--eta F] [--workers W]
+  mlproj datagen --dataset synthetic|lung --out DIR
+  mlproj info [--dataset synthetic|lung]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "project" => cmd_project(&args),
+        "datagen" => cmd_datagen(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Build a TrainConfig from `--config FILE` plus CLI overrides.
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    for key in [
+        "dataset", "projection", "eta", "epochs1", "epochs2", "lr", "alpha", "test_frac",
+        "seed", "repeats", "workers", "artifact_dir", "project_every",
+    ] {
+        if let Some(v) = args.get(key) {
+            cfg.apply(key, v)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    eprintln!(
+        "train: dataset={:?} projection={} eta={} epochs={}+{} repeats={}",
+        cfg.dataset,
+        cfg.projection.label(),
+        cfg.eta,
+        cfg.epochs1,
+        cfg.epochs2,
+        cfg.repeats
+    );
+    let mut trainer = Trainer::new(cfg)?;
+    trainer.verbose = args.get("verbose").is_some();
+    let (runs, agg) = trainer.run()?;
+    for (i, r) in runs.iter().enumerate() {
+        println!(
+            "run {i}: accuracy {:.2}%  sparsity {:.2}%  alive {}  proj {:.2} ms  wall {:.1}s",
+            r.accuracy_pct, r.sparsity_pct, r.features_alive, r.projection_ms, r.wall_secs
+        );
+    }
+    println!(
+        "aggregate [{} η={}]: accuracy {:.2} ± {:.2} %   sparsity {:.2} ± {:.2} %",
+        agg.label, agg.eta, agg.acc_mean, agg.acc_std, agg.sparsity_mean, agg.sparsity_std
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let name = args.get("preset").unwrap_or("table2");
+    let repeats = args.usize_or("repeats", 3);
+    let preset = sweeps::preset(name, repeats)?;
+    eprintln!("sweep `{}`: {} runs x {repeats} repeats", preset.name, preset.configs.len());
+    let mut aggs = Vec::new();
+    for cfg in &preset.configs {
+        let t0 = Instant::now();
+        let mut trainer = Trainer::new(cfg.clone())?;
+        let (_, agg) = trainer.run()?;
+        eprintln!(
+            "  {} η={}: acc {:.2}±{:.2}% sparsity {:.2}% [{:.1}s]",
+            agg.label,
+            agg.eta,
+            agg.acc_mean,
+            agg.acc_std,
+            agg.sparsity_mean,
+            t0.elapsed().as_secs_f64()
+        );
+        aggs.push(agg);
+    }
+    let md = match preset.mode {
+        sweeps::RenderMode::Table => report::table_markdown(&preset.title, &aggs),
+        sweeps::RenderMode::Sweep => report::sweep_markdown(&preset.title, &aggs),
+    };
+    println!("{md}");
+    let out_dir = Path::new("target/experiments");
+    std::fs::create_dir_all(out_dir)?;
+    let csv_path = out_dir.join(format!("{}.csv", preset.name));
+    std::fs::write(&csv_path, report::to_csv(&aggs))?;
+    let md_path = out_dir.join(format!("{}.md", preset.name));
+    std::fs::write(&md_path, &md)?;
+    eprintln!("wrote {} and {}", csv_path.display(), md_path.display());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &md)?;
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 1000);
+    let m = args.usize_or("m", 10000);
+    let eta = args.f64_or("eta", 1.0);
+    let workers = args.usize_or("workers", mlproj::parallel::default_workers());
+    let mut rng = Rng::new(args.usize_or("seed", 0) as u64);
+    let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+    println!("Y: {n}x{m}, ‖Y‖(1,∞) = {:.3}, η = {eta}", norms::l1inf_norm(&y));
+
+    let t0 = Instant::now();
+    let bl = bilevel::bilevel_l1inf(&y, eta);
+    let t_bl = t0.elapsed();
+    let pool = mlproj::parallel::WorkerPool::new(workers);
+    let t0 = Instant::now();
+    let blp = mlproj::projection::parallel::bilevel_l1inf_par(&y, eta, &pool);
+    let t_blp = t0.elapsed();
+    let t0 = Instant::now();
+    let ex = l1inf_exact::project_l1inf_newton(&y, eta);
+    let t_ex = t0.elapsed();
+
+    println!(
+        "bi-level       : {:8.3} ms  zero-cols {:5}  dist² {:.4}",
+        t_bl.as_secs_f64() * 1e3,
+        bl.zero_cols(),
+        y.dist2(&bl)
+    );
+    println!(
+        "bi-level ({workers}w) : {:8.3} ms  (identical: {})",
+        t_blp.as_secs_f64() * 1e3,
+        bl.data() == blp.data()
+    );
+    println!(
+        "exact (newton) : {:8.3} ms  zero-cols {:5}  dist² {:.4}",
+        t_ex.as_secs_f64() * 1e3,
+        ex.zero_cols(),
+        y.dist2(&ex)
+    );
+    println!(
+        "speedup bi-level vs exact: {:.2}x",
+        t_ex.as_secs_f64() / t_bl.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let out = Path::new(args.get_or("out", "target/data"));
+    std::fs::create_dir_all(out)?;
+    let dataset = args.get_or("dataset", "synthetic");
+    let (ds, name) = match dataset {
+        "lung" => {
+            let mut l = make_lung(&LungSpec::default()).dataset;
+            l.log1p();
+            (l, "lung")
+        }
+        _ => (make_classification(&SyntheticSpec::default()).dataset, "synthetic"),
+    };
+    let rows: Vec<Vec<f32>> = (0..ds.n).map(|i| ds.row(i).to_vec()).collect();
+    csv::write_matrix(&out.join(format!("{name}_x.csv")), &rows)?;
+    let labels: Vec<Vec<f32>> = ds.y.iter().map(|&l| vec![l as f32]).collect();
+    csv::write_matrix(&out.join(format!("{name}_y.csv")), &labels)?;
+    println!("wrote {}/{name}_x.csv ({}x{}) and labels", out.display(), ds.n, ds.d);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    if let Some(d) = args.get("dataset") {
+        cfg.apply("dataset", d)?;
+    }
+    let dir = mlproj::coordinator::trainer::artifact_dir_for(&cfg);
+    println!("mlproj {}", mlproj::version());
+    println!("artifact dir: {dir}");
+    match mlproj::runtime::ArtifactStore::open(Path::new(&dir)) {
+        Ok(store) => {
+            let man = &store.manifest;
+            println!("platform: {}", store.platform());
+            println!(
+                "manifest: d={} h={} k={} batch={} eval_batch={} activation={}",
+                man.d, man.h, man.k, man.batch, man.eval_batch, man.activation
+            );
+            println!("entry points: {:?}", man.files.keys().collect::<Vec<_>>());
+        }
+        Err(e) => println!("artifacts not available: {e}\n(run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Workload-splitting policies for the worker pool.
+//!
+//! The paper's parallel decomposition splits columns across workers; the
+//! right chunk size trades scheduling overhead against load imbalance.
+//! These helpers centralize the policy so benches can sweep it.
+
+/// Split `total` items into at most `parts` near-equal contiguous ranges.
+/// Returns `(start, end)` pairs covering `0..total` exactly.
+pub fn even_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return vec![];
+    }
+    let parts = parts.clamp(1, total);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Column-chunk size targeting `per_worker_chunks` chunks per worker so
+/// the pool can balance uneven column costs (the exact ℓ1 projections
+/// inside bi-level ℓ1,1 have data-dependent cost).
+pub fn cols_per_chunk(cols: usize, workers: usize, per_worker_chunks: usize) -> usize {
+    let target = (workers * per_worker_chunks).max(1);
+    cols.div_ceil(target).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for total in [0usize, 1, 7, 100, 101] {
+            for parts in [1usize, 3, 8, 200] {
+                let rs = even_ranges(total, parts);
+                if total == 0 {
+                    assert!(rs.is_empty());
+                    continue;
+                }
+                assert_eq!(rs[0].0, 0);
+                assert_eq!(rs.last().unwrap().1, total);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                // near-equal: lengths differ by at most 1
+                let lens: Vec<usize> = rs.iter().map(|(a, b)| b - a).collect();
+                let mn = lens.iter().min().unwrap();
+                let mx = lens.iter().max().unwrap();
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_size_sane() {
+        assert_eq!(cols_per_chunk(100, 4, 4), 7);
+        assert_eq!(cols_per_chunk(3, 8, 4), 1);
+        assert!(cols_per_chunk(0, 4, 4) >= 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Parallel execution substrate: the worker pool realizing the paper's
+//! computation-tree decomposition (§7.2, Figure 4; Prop. 6.4).
+
+pub mod chunks;
+pub mod pool;
+
+pub use pool::{default_workers, WorkerPool};

@@ -1,0 +1,425 @@
+//! Bi-level ℓ_{p,q} projections — the paper's central contribution (§3–§5).
+//!
+//! `BP_η^{p,q}(Y)` (Eq. 5) splits the matrix projection into
+//!
+//! 1. **aggregate**: `v_q = (‖y_1‖_q, …, ‖y_m‖_q)` — one q-norm per column;
+//! 2. **outer project**: `u = P_η^p(v_q)` — a vector projection;
+//! 3. **inner project**: `x_j = P_{u_j}^q(y_j)` — independent per column.
+//!
+//! For `p=1, q=∞` (Algorithm 2) every step is linear, giving O(nm) total
+//! and O(n+m) on the critical path with full parallelism (Table 1). The
+//! result is feasible (`X ∈ B_η^{p,q}`) but in general *not* the Euclidean
+//! projection — the trade the paper makes for speed and structure.
+//!
+//! All functions operate in place on a [`Matrix`] (column-major, so every
+//! step is a contiguous scan); `*_new` wrappers clone.
+
+use crate::core::matrix::Matrix;
+use crate::core::sort::{l1_norm, l2_norm, max_abs};
+use crate::projection::l1::{project_l1_inplace, soft_threshold, L1Algo};
+use crate::projection::l2::project_l2_inplace;
+use crate::projection::Norm;
+
+/// Bi-level ℓ_{1,∞} projection (Algorithm 2), in place. O(nm).
+///
+/// Step 1 computes the column max-abs vector `v_∞`, step 2 projects it
+/// onto the ℓ1 ball (Condat, linear), step 3 clamps each column to
+/// `[-u_j, u_j]`. Columns with `u_j == v_j` are untouched and skipped.
+pub fn bilevel_l1inf_inplace(y: &mut Matrix, eta: f64) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    // Step 1: v = per-column ‖·‖_∞ (contiguous scans).
+    let mut v: Vec<f32> = Vec::with_capacity(m);
+    for j in 0..m {
+        v.push(max_abs(y.col(j)));
+    }
+    // Step 2: u = P^1_η(v). v is nonnegative, so the soft threshold applies
+    // directly: u_j = (v_j − τ)_+.
+    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    if tau <= 0.0 {
+        return; // already inside the ball
+    }
+    // Step 3: clamp column j to u_j = (v_j − τ)_+; skip untouched columns.
+    for j in 0..m {
+        let u = v[j] - tau;
+        let col = y.col_mut(j);
+        if u <= 0.0 {
+            col.fill(0.0);
+        } else {
+            for x in col.iter_mut() {
+                *x = x.clamp(-u, u);
+            }
+        }
+    }
+}
+
+/// Bi-level ℓ_{1,1} projection (Algorithm 3), in place.
+///
+/// Aggregates columns by ℓ1 norm, projects the aggregate onto the ℓ1 ball,
+/// then ℓ1-projects each column to its own radius `u_j`. Yields *structured*
+/// sparsity (whole columns zeroed), unlike the exact ℓ_{1,1} projection.
+pub fn bilevel_l11_inplace(y: &mut Matrix, eta: f64) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    let v: Vec<f32> = (0..m).map(|j| l1_norm(y.col(j)) as f32).collect();
+    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    if tau <= 0.0 {
+        return;
+    }
+    for j in 0..m {
+        let u = (v[j] - tau).max(0.0);
+        let col = y.col_mut(j);
+        if u == 0.0 {
+            col.fill(0.0);
+        } else {
+            project_l1_inplace(col, u as f64);
+        }
+    }
+}
+
+/// Bi-level ℓ_{1,2} projection (Algorithm 4), in place.
+///
+/// Aggregates columns by ℓ2 norm, ℓ1-projects the aggregate, rescales each
+/// column to its radius. For `q = 2` this *coincides* with the exact
+/// Euclidean ℓ_{1,2} projection (block soft thresholding) — tested in
+/// `l1l2_exact`.
+pub fn bilevel_l12_inplace(y: &mut Matrix, eta: f64) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    let v: Vec<f32> = (0..m).map(|j| l2_norm(y.col(j)) as f32).collect();
+    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    if tau <= 0.0 {
+        return;
+    }
+    for j in 0..m {
+        let u = (v[j] - tau).max(0.0);
+        let col = y.col_mut(j);
+        if u == 0.0 {
+            col.fill(0.0);
+        } else if v[j] > u {
+            let s = u / v[j];
+            for x in col.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+}
+
+/// Bi-level ℓ_{2,1} projection (Algorithm 7, appendix — the exclusive-LASSO
+/// flavour), in place: ℓ2-project the vector of column ℓ1 norms, then
+/// ℓ1-project each column to its radius.
+pub fn bilevel_l21_inplace(y: &mut Matrix, eta: f64) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    let mut t: Vec<f32> = (0..m).map(|j| l1_norm(y.col(j)) as f32).collect();
+    let before = t.clone();
+    project_l2_inplace(&mut t, eta);
+    for j in 0..m {
+        if t[j] < before[j] {
+            project_l1_inplace(y.col_mut(j), t[j] as f64);
+        }
+    }
+}
+
+/// Generic bi-level `BP_η^{p,q}` (Algorithm 1) for any supported (p, q).
+///
+/// Dispatches to the specialized kernels above when they exist; otherwise
+/// runs the three generic steps. In place.
+pub fn bilevel_inplace(y: &mut Matrix, eta: f64, p: Norm, q: Norm) {
+    match (p, q) {
+        (Norm::L1, Norm::Linf) => bilevel_l1inf_inplace(y, eta),
+        (Norm::L1, Norm::L1) => bilevel_l11_inplace(y, eta),
+        (Norm::L1, Norm::L2) => bilevel_l12_inplace(y, eta),
+        (Norm::L2, Norm::L1) => bilevel_l21_inplace(y, eta),
+        _ => {
+            let m = y.cols();
+            if m == 0 || y.rows() == 0 {
+                return;
+            }
+            let v: Vec<f32> = (0..m).map(|j| q.eval(y.col(j)) as f32).collect();
+            let mut u = v.clone();
+            p.project(&mut u, eta);
+            for j in 0..m {
+                if u[j] < v[j] {
+                    q.project(y.col_mut(j), u[j] as f64);
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-place convenience wrappers.
+pub fn bilevel_l1inf(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l1inf_inplace(&mut x, eta);
+    x
+}
+
+/// Out-of-place bi-level ℓ_{1,1}.
+pub fn bilevel_l11(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l11_inplace(&mut x, eta);
+    x
+}
+
+/// Out-of-place bi-level ℓ_{1,2}.
+pub fn bilevel_l12(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l12_inplace(&mut x, eta);
+    x
+}
+
+/// Out-of-place bi-level ℓ_{2,1}.
+pub fn bilevel_l21(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l21_inplace(&mut x, eta);
+    x
+}
+
+/// Out-of-place generic bi-level.
+pub fn bilevel(y: &Matrix, eta: f64, p: Norm, q: Norm) -> Matrix {
+    let mut x = y.clone();
+    bilevel_inplace(&mut x, eta, p, q);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::forall;
+    use crate::core::rng::Rng;
+    use crate::projection::norms::{l11_norm, l12_norm, l1inf_norm, lpq_norm};
+
+    fn rand_matrix(r: &mut Rng, max_n: usize, max_m: usize, scale: f32) -> Matrix {
+        let n = 1 + r.below(max_n);
+        let m = 1 + r.below(max_m);
+        Matrix::random_uniform(n, m, -scale, scale, r)
+    }
+
+    #[test]
+    fn l1inf_hand_example() {
+        // Y = [[3],[1]] single column, eta = 2: v=[3], u=[2], clip to 2.
+        let y = Matrix::from_col_major(2, 1, vec![3.0, 1.0]).unwrap();
+        let x = bilevel_l1inf(&y, 2.0);
+        assert_eq!(x.col(0), &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn l1inf_two_columns_redistribute() {
+        // v = [3, 1], eta = 2 -> tau = 1, u = [2, 0]: column 2 zeroed.
+        let y = Matrix::from_col_major(2, 2, vec![3.0, -1.5, 1.0, 0.5]).unwrap();
+        let x = bilevel_l1inf(&y, 2.0);
+        assert_eq!(x.col(0), &[2.0, -1.5]);
+        assert_eq!(x.col(1), &[0.0, 0.0]);
+        assert!((l1inf_norm(&x) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l1inf_identity_inside() {
+        let y = Matrix::from_col_major(2, 2, vec![0.1, 0.2, 0.3, 0.1]).unwrap();
+        assert_eq!(bilevel_l1inf(&y, 10.0), y);
+    }
+
+    #[test]
+    fn l1inf_zero_radius_zeroes_matrix() {
+        let y = Matrix::from_col_major(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let x = bilevel_l1inf(&y, 0.0);
+        assert!(x.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_l1inf_feasible_and_tight() {
+        forall(
+            401,
+            96,
+            |r| {
+                let y = rand_matrix(r, 12, 12, 5.0);
+                let eta = r.uniform_range(0.0, 10.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l1inf(y, *eta);
+                let n = l1inf_norm(&x);
+                if n > eta + 1e-4 {
+                    return Err(format!("infeasible: {n} > {eta}"));
+                }
+                // If the projection actually cut, the constraint is tight.
+                if l1inf_norm(y) > *eta && (n - eta).abs() > 1e-3 * (1.0 + eta) {
+                    return Err(format!("not tight: {n} vs {eta}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l1inf_idempotent() {
+        forall(
+            402,
+            64,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 3.0);
+                let eta = r.uniform_range(0.1, 5.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let once = bilevel_l1inf(y, *eta);
+                let twice = bilevel_l1inf(&once, *eta);
+                crate::core::check::assert_close(once.data(), twice.data(), 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l1inf_structured_sparsity_grows_as_radius_shrinks() {
+        forall(
+            403,
+            32,
+            |r| rand_matrix(r, 8, 16, 1.0),
+            |y| {
+                let tight = bilevel_l1inf(y, 0.3);
+                let loose = bilevel_l1inf(y, 3.0);
+                if tight.zero_cols() >= loose.zero_cols() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "tight radius gave fewer zero cols: {} < {}",
+                        tight.zero_cols(),
+                        loose.zero_cols()
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l11_feasible() {
+        forall(
+            404,
+            64,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.0, 8.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l11(y, *eta);
+                if l11_norm(&x) <= eta + 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("infeasible: {}", l11_norm(&x)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l12_feasible() {
+        forall(
+            405,
+            64,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.0, 8.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l12(y, *eta);
+                if l12_norm(&x) <= eta + 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("infeasible: {}", l12_norm(&x)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l21_feasible() {
+        forall(
+            406,
+            64,
+            |r| {
+                let y = rand_matrix(r, 8, 8, 3.0);
+                let eta = r.uniform_range(0.1, 6.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l21(y, *eta);
+                let n = lpq_norm(&x, Norm::L2, Norm::L1);
+                if n <= eta + 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("infeasible: {n} > {eta}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generic_matches_specialized() {
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let y = rand_matrix(&mut rng, 8, 8, 2.0);
+            let eta = rng.uniform_range(0.1, 4.0);
+            for (p, q) in [
+                (Norm::L1, Norm::Linf),
+                (Norm::L1, Norm::L1),
+                (Norm::L1, Norm::L2),
+                (Norm::L2, Norm::L1),
+            ] {
+                let a = bilevel(&y, eta, p, q);
+                // generic fallback path:
+                let mut b = y.clone();
+                let m = b.cols();
+                let v: Vec<f32> = (0..m).map(|j| q.eval(b.col(j)) as f32).collect();
+                let mut u = v.clone();
+                p.project(&mut u, eta);
+                for j in 0..m {
+                    if u[j] < v[j] {
+                        q.project(b.col_mut(j), u[j] as f64);
+                    }
+                }
+                crate::core::check::assert_close(a.data(), b.data(), 2e-4).unwrap_or_else(
+                    |e| panic!("({p},{q}) specialized != generic: {e}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l1inf_column_zeroing_is_structured() {
+        // Small columns die entirely -> structured sparsity.
+        let mut rng = Rng::new(17);
+        let y = Matrix::random_uniform(50, 40, 0.0, 1.0, &mut rng);
+        let x = bilevel_l1inf(&y, 2.0);
+        assert!(x.zero_cols() > 0, "expected zeroed columns");
+        assert!((l1inf_norm(&x) - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_matrix_noop() {
+        let mut y = Matrix::zeros(0, 0);
+        bilevel_l1inf_inplace(&mut y, 1.0);
+        let mut y2 = Matrix::zeros(3, 0);
+        bilevel_l11_inplace(&mut y2, 1.0);
+    }
+
+    #[test]
+    fn generic_unsupported_combo_still_feasible() {
+        let mut rng = Rng::new(23);
+        let y = Matrix::random_uniform(6, 6, -1.0, 1.0, &mut rng);
+        // p = inf, q = l2 has no specialization — generic path.
+        let x = bilevel(&y, 0.5, Norm::Linf, Norm::L2);
+        let n = lpq_norm(&x, Norm::Linf, Norm::L2);
+        assert!(n <= 0.5 + 1e-4, "n={n}");
+    }
+}

@@ -1,0 +1,467 @@
+//! Projection onto the ℓ1 ball (and the simplex threshold underneath it).
+//!
+//! Three algorithms, as surveyed in the paper's references:
+//!
+//! * [`threshold_sort`] — classic sort + prefix-scan, O(n log n)
+//!   (Duchi et al. / Held et al. pivot rule).
+//! * [`threshold_michelot`] — Michelot's iterative set reduction,
+//!   worst-case O(n²) but fast in practice.
+//! * [`threshold_condat`] — Condat (2016), the linear-time scan the paper
+//!   builds its bi-level ℓ_{1,∞} on ("fast ℓ1 projection algorithms of
+//!   [14, 15] which are of linear complexity").
+//!
+//! All three compute the same soft threshold τ ≥ 0 with
+//! `Σ_i (|y_i| − τ)_+ = η`; the ball projection is then
+//! `x_i = sign(y_i)·(|y_i| − τ)_+`. Threshold arithmetic is carried in f64
+//! — projection radii feed the SAE mask, so cancellation matters.
+
+use crate::core::sort::{prefix_sums, sort_desc};
+
+/// Which ℓ1 algorithm to use (benches sweep this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum L1Algo {
+    /// Sort + prefix scan.
+    Sort,
+    /// Michelot's iterative algorithm.
+    Michelot,
+    /// Condat's linear-time scan (default).
+    Condat,
+}
+
+/// Soft threshold via descending sort + prefix sums.
+///
+/// Input `abs` must be the *absolute values*; `eta > 0`; assumes
+/// `Σ abs > eta` (callers check feasibility first).
+pub fn threshold_sort(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    let mut u = abs.to_vec();
+    sort_desc(&mut u);
+    let c = prefix_sums(&u);
+    // Largest k with u_{k-1} > (c_{k-1} - eta) / k  (0-based).
+    let mut tau = 0.0f64;
+    for k in 0..u.len() {
+        let t = (c[k] - eta) / (k + 1) as f64;
+        if (u[k] as f64) > t {
+            tau = t;
+        } else {
+            break;
+        }
+    }
+    tau.max(0.0)
+}
+
+/// Soft threshold via Michelot's iterative set reduction.
+pub fn threshold_michelot(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    let mut v: Vec<f64> = abs.iter().map(|&x| x as f64).collect();
+    let mut sum: f64 = v.iter().sum();
+    let mut tau = (sum - eta) / v.len() as f64;
+    loop {
+        let before = v.len();
+        let mut removed_sum = 0.0;
+        v.retain(|&x| {
+            if x <= tau {
+                removed_sum += x;
+                false
+            } else {
+                true
+            }
+        });
+        if v.is_empty() {
+            // eta == 0 (or numerically so): everything is clipped away.
+            return tau.max(0.0);
+        }
+        sum -= removed_sum;
+        tau = (sum - eta) / v.len() as f64;
+        if v.len() == before {
+            return tau.max(0.0);
+        }
+    }
+}
+
+/// Soft threshold via Condat's linear-time scan (Algorithm 1 of
+/// "Fast projection onto the simplex and the ℓ1 ball", Math. Prog. 2016).
+pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    // Active list `v` is maintained as (count, sum); its members live in
+    // `active`, the waiting list in `waiting`.
+    let mut active: Vec<f64> = Vec::with_capacity(64);
+    let mut waiting: Vec<f64> = Vec::with_capacity(abs.len() / 2);
+    let y0 = abs[0] as f64;
+    active.push(y0);
+    let mut sum = y0;
+    let mut rho = y0 - eta;
+    // Pass 1: scan with premature filtering.
+    for &yf in &abs[1..] {
+        let y = yf as f64;
+        if y > rho {
+            rho += (y - rho) / (active.len() as f64 + 1.0);
+            if rho > y - eta {
+                active.push(y);
+                sum += y;
+            } else {
+                // Flush the active set to the waiting list; restart from y.
+                waiting.append(&mut active);
+                active.push(y);
+                sum = y;
+                rho = y - eta;
+            }
+        }
+    }
+    // Pass 2: reconsider the waiting list.
+    for &y in &waiting {
+        if y > rho {
+            active.push(y);
+            sum += y;
+            rho += (y - rho) / active.len() as f64;
+        }
+    }
+    // Pass 3: pruning passes until the active set is stable.
+    loop {
+        let before = active.len();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i] <= rho {
+                let y = active.swap_remove(i);
+                sum -= y;
+                if active.is_empty() {
+                    return rho.max(0.0);
+                }
+                rho = (sum - eta) / active.len() as f64;
+            } else {
+                i += 1;
+            }
+        }
+        // Recompute rho from the exact invariant to cancel drift.
+        rho = (sum - eta) / active.len() as f64;
+        if active.len() == before {
+            break;
+        }
+    }
+    rho.max(0.0)
+}
+
+/// Compute the soft threshold with the chosen algorithm, handling the
+/// "already feasible" case (returns 0.0 so the projection is the identity).
+pub fn soft_threshold(ys: &[f32], eta: f64, algo: L1Algo) -> f64 {
+    if ys.is_empty() || eta < 0.0 {
+        return 0.0;
+    }
+    let abs: Vec<f32> = ys.iter().map(|y| y.abs()).collect();
+    let norm: f64 = abs.iter().map(|&a| a as f64).sum();
+    if norm <= eta {
+        return 0.0;
+    }
+    if eta == 0.0 {
+        // Project to 0: any tau >= max works.
+        return abs.iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    }
+    match algo {
+        L1Algo::Sort => threshold_sort(&abs, eta),
+        L1Algo::Michelot => threshold_michelot(&abs, eta),
+        L1Algo::Condat => threshold_condat(&abs, eta),
+    }
+}
+
+/// Project `xs` in place onto the ℓ1 ball of radius `eta` (Condat).
+pub fn project_l1_inplace(xs: &mut [f32], eta: f64) {
+    project_l1_inplace_with(xs, eta, L1Algo::Condat);
+}
+
+/// Project `xs` in place with a chosen algorithm.
+pub fn project_l1_inplace_with(xs: &mut [f32], eta: f64, algo: L1Algo) {
+    if xs.is_empty() {
+        return;
+    }
+    if eta <= 0.0 {
+        xs.fill(0.0);
+        return;
+    }
+    let norm: f64 = xs.iter().map(|x| x.abs() as f64).sum();
+    if norm <= eta {
+        return;
+    }
+    let abs: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let tau = match algo {
+        L1Algo::Sort => threshold_sort(&abs, eta),
+        L1Algo::Michelot => threshold_michelot(&abs, eta),
+        L1Algo::Condat => threshold_condat(&abs, eta),
+    };
+    shrink(xs, tau);
+}
+
+/// Apply the soft-threshold shrinkage `x_i = sign(y_i)(|y_i| − τ)_+`.
+#[inline]
+pub fn shrink(xs: &mut [f32], tau: f64) {
+    let t = tau as f32;
+    for x in xs.iter_mut() {
+        let a = x.abs() - t;
+        *x = if a > 0.0 { a.copysign(*x) } else { 0.0 };
+    }
+}
+
+/// Projection returning a new vector.
+pub fn project_l1(xs: &[f32], eta: f64) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    project_l1_inplace(&mut v, eta);
+    v
+}
+
+/// Weighted-ℓ1 projection: minimize ½‖x−y‖² s.t. Σ w_i|x_i| ≤ η, w_i > 0.
+///
+/// Solution `x_i = sign(y_i)(|y_i| − τ·w_i)_+` with τ from a sort of
+/// `|y_i|/w_i` (the ℓ_{w1} of the paper's §3 list of "linear algorithms").
+pub fn project_weighted_l1(ys: &[f32], w: &[f32], eta: f64) -> Vec<f32> {
+    assert_eq!(ys.len(), w.len());
+    let mut x = ys.to_vec();
+    if x.is_empty() {
+        return x;
+    }
+    if eta <= 0.0 {
+        x.fill(0.0);
+        return x;
+    }
+    let norm: f64 = ys.iter().zip(w).map(|(y, wi)| (y.abs() * wi) as f64).sum();
+    if norm <= eta {
+        return x;
+    }
+    // Sort ratios |y|/w descending; find the active prefix.
+    let mut order: Vec<usize> = (0..ys.len()).collect();
+    let ratio: Vec<f64> = ys.iter().zip(w).map(|(y, wi)| (y.abs() / wi) as f64).collect();
+    order.sort_unstable_by(|&a, &b| ratio[b].partial_cmp(&ratio[a]).unwrap());
+    // τ for prefix k: (Σ w_i|y_i| − η) / Σ w_i².
+    let mut num = -eta;
+    let mut den = 0.0f64;
+    let mut tau = 0.0f64;
+    for &i in &order {
+        let wy = (w[i] * ys[i].abs()) as f64;
+        let ww = (w[i] * w[i]) as f64;
+        let t = (num + wy) / (den + ww);
+        if ratio[i] > t {
+            num += wy;
+            den += ww;
+            tau = t;
+        } else {
+            break;
+        }
+    }
+    let tau = tau.max(0.0);
+    for (xi, wi) in x.iter_mut().zip(w) {
+        let a = xi.abs() - (tau as f32) * wi;
+        *xi = if a > 0.0 { a.copysign(*xi) } else { 0.0 };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::{forall, gen_vec};
+    use crate::core::sort::l1_norm;
+
+    const ALGOS: [L1Algo; 3] = [L1Algo::Sort, L1Algo::Michelot, L1Algo::Condat];
+
+    #[test]
+    fn identity_when_inside_ball() {
+        for algo in ALGOS {
+            let y = vec![0.3f32, -0.2, 0.1];
+            let mut x = y.clone();
+            project_l1_inplace_with(&mut x, 1.0, algo);
+            assert_eq!(x, y, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn hand_worked_example() {
+        // y = [3, 1], eta = 2 -> tau = 1, x = [2, 0].
+        for algo in ALGOS {
+            let mut x = vec![3.0f32, 1.0];
+            project_l1_inplace_with(&mut x, 2.0, algo);
+            assert!((x[0] - 2.0).abs() < 1e-6, "{algo:?}: {x:?}");
+            assert!(x[1].abs() < 1e-6, "{algo:?}: {x:?}");
+        }
+    }
+
+    #[test]
+    fn signs_preserved() {
+        for algo in ALGOS {
+            let mut x = vec![-3.0f32, 2.0, -1.0];
+            project_l1_inplace_with(&mut x, 2.0, algo);
+            assert!(x[0] <= 0.0 && x[1] >= 0.0, "{algo:?}: {x:?}");
+            assert!((l1_norm(&x) - 2.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_radius_zeroes() {
+        for algo in ALGOS {
+            let mut x = vec![1.0f32, -2.0];
+            project_l1_inplace_with(&mut x, 0.0, algo);
+            assert_eq!(x, vec![0.0, 0.0], "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn exact_norm_boundary_is_identity() {
+        let y = vec![1.0f32, 1.0];
+        for algo in ALGOS {
+            let mut x = y.clone();
+            project_l1_inplace_with(&mut x, 2.0, algo);
+            assert_eq!(x, y, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn all_equal_values() {
+        // ties everywhere: y = [1,1,1,1], eta = 2 -> x_i = 0.5.
+        for algo in ALGOS {
+            let mut x = vec![1.0f32; 4];
+            project_l1_inplace_with(&mut x, 2.0, algo);
+            for v in &x {
+                assert!((v - 0.5).abs() < 1e-6, "{algo:?}: {x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        for algo in ALGOS {
+            let mut x = vec![-5.0f32];
+            project_l1_inplace_with(&mut x, 2.0, algo);
+            assert!((x[0] + 2.0).abs() < 1e-6, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn prop_feasibility_and_agreement() {
+        forall(
+            101,
+            128,
+            |r| {
+                let v = gen_vec(r, 64, 10.0);
+                let eta = r.uniform_range(0.0, 12.0);
+                (v, eta)
+            },
+            |(v, eta)| {
+                let a = project_l1(v, *eta);
+                if l1_norm(&a) > eta + 1e-4 {
+                    return Err(format!("condat infeasible: {} > {eta}", l1_norm(&a)));
+                }
+                let mut b = v.clone();
+                project_l1_inplace_with(&mut b, *eta, L1Algo::Sort);
+                let mut c = v.clone();
+                project_l1_inplace_with(&mut c, *eta, L1Algo::Michelot);
+                crate::core::check::assert_close(&a, &b, 1e-4)?;
+                crate::core::check::assert_close(&a, &c, 1e-4)?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            102,
+            64,
+            |r| {
+                let v = gen_vec(r, 48, 5.0);
+                let eta = r.uniform_range(0.1, 6.0);
+                (v, eta)
+            },
+            |(v, eta)| {
+                let once = project_l1(v, *eta);
+                let twice = project_l1(&once, *eta);
+                crate::core::check::assert_close(&once, &twice, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_nonexpansive() {
+        // ‖P(a) − P(b)‖ ≤ ‖a − b‖ for the exact Euclidean projection.
+        forall(
+            103,
+            64,
+            |r| {
+                let n = 1 + r.below(32);
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                r.fill_uniform(&mut a, -5.0, 5.0);
+                r.fill_uniform(&mut b, -5.0, 5.0);
+                let eta = r.uniform_range(0.1, 8.0);
+                (a, b, eta)
+            },
+            |(a, b, eta)| {
+                let pa = project_l1(a, *eta);
+                let pb = project_l1(b, *eta);
+                let d_in: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+                let d_out: f64 = pa.iter().zip(&pb).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+                if d_out <= d_in + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("expansive: {d_out} > {d_in}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_kkt_norm_tight_when_projected() {
+        forall(
+            104,
+            64,
+            |r| {
+                let v = gen_vec(r, 40, 3.0);
+                (v,)
+            },
+            |(v,)| {
+                let eta = l1_norm(v) * 0.5;
+                if eta == 0.0 {
+                    return Ok(());
+                }
+                let x = project_l1(v, eta);
+                if (l1_norm(&x) - eta).abs() < 1e-4 * (1.0 + eta) {
+                    Ok(())
+                } else {
+                    Err(format!("norm not tight: {} vs {eta}", l1_norm(&x)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn weighted_reduces_to_plain_when_unit_weights() {
+        let y = vec![3.0f32, -1.0, 0.5];
+        let w = vec![1.0f32; 3];
+        let a = project_weighted_l1(&y, &w, 2.0);
+        let b = project_l1(&y, 2.0);
+        crate::core::check::assert_close(&a, &b, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn weighted_feasible_and_identity() {
+        let y = vec![2.0f32, -3.0];
+        let w = vec![0.5f32, 2.0];
+        let x = project_weighted_l1(&y, &w, 1.0);
+        let wnorm: f64 = x.iter().zip(&w).map(|(xi, wi)| (xi.abs() * wi) as f64).sum();
+        assert!(wnorm <= 1.0 + 1e-5, "wnorm={wnorm}");
+        // inside ball -> identity
+        let y2 = vec![0.1f32, 0.1];
+        assert_eq!(project_weighted_l1(&y2, &w, 1.0), y2);
+    }
+
+    #[test]
+    fn condat_handles_adversarial_descending() {
+        // Strictly descending input exercises the restart branch.
+        let y: Vec<f32> = (0..100).map(|i| 100.0 - i as f32).collect();
+        let x = project_l1(&y, 50.0);
+        assert!((l1_norm(&x) - 50.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn condat_handles_ascending() {
+        let y: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let x = project_l1(&y, 50.0);
+        assert!((l1_norm(&x) - 50.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,431 @@
+//! Exact Euclidean projection onto the ℓ_{1,∞} ball — the baselines the
+//! paper compares its bi-level method against (§4.2, §7.1).
+//!
+//! KKT structure (Quattoni et al. 2009): writing `a_ij = |y_ij|`, the
+//! solution is `x_ij = sign(y_ij)·min(a_ij, t_j)` with per-column caps
+//! `t_j ≥ 0`. Let `s_j(t) = Σ_i (a_ij − t)_+` (the ℓ1 mass shaved above
+//! `t`). Optimality: there is a multiplier `λ > 0` with
+//! `s_j(t_j) = λ` for every active column (`t_j > 0`), `t_j = 0` for
+//! columns with `‖y_j‖_1 ≤ λ`, and `Σ_j t_j = η`.
+//!
+//! Both solvers find the root of `θ(λ) = Σ_j t_j(λ) − η` (piecewise
+//! linear, convex, decreasing):
+//!
+//! * [`project_l1inf_sortscan`] — sort all `nm` λ-breakpoints and sweep
+//!   (Quattoni-style, O(nm log nm) worst case);
+//! * [`project_l1inf_newton`] — semismooth Newton on `θ` with per-column
+//!   sorted prefix sums (Chau/Chu-style; finite convergence). This is the
+//!   stand-in for the Chu et al. reference implementation (DESIGN.md §5).
+
+use crate::core::matrix::Matrix;
+use crate::core::sort::{prefix_sums, sort_desc};
+
+/// Per-column sorted magnitudes + prefix sums (f64 scan arithmetic).
+struct ColPrep {
+    /// |y| sorted descending.
+    sorted: Vec<f32>,
+    /// prefix[k] = Σ sorted[0..=k].
+    prefix: Vec<f64>,
+}
+
+impl ColPrep {
+    fn new(col: &[f32]) -> Self {
+        let mut sorted: Vec<f32> = col.iter().map(|x| x.abs()).collect();
+        sort_desc(&mut sorted);
+        let prefix = prefix_sums(&sorted);
+        ColPrep { sorted, prefix }
+    }
+
+    /// Column ℓ1 norm (the λ at which the column dies).
+    #[inline]
+    fn total(&self) -> f64 {
+        *self.prefix.last().unwrap_or(&0.0)
+    }
+
+    /// Column ℓ∞ norm.
+    #[inline]
+    fn vmax(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0) as f64
+    }
+
+    /// Breakpoint `g(k) = s value when the cap sits at sorted[k]`
+    /// (`k` in 1..=n, with sorted[n] := 0). Increasing in k.
+    #[inline]
+    fn breakpoint(&self, k: usize) -> f64 {
+        let n = self.sorted.len();
+        debug_assert!(k >= 1 && k <= n);
+        let next = if k < n { self.sorted[k] as f64 } else { 0.0 };
+        self.prefix[k - 1] - k as f64 * next
+    }
+
+    /// For a given λ, the optimal cap t(λ) and the active count k
+    /// (0 means the column is dead: t = 0).
+    fn cap(&self, lambda: f64) -> (f64, usize) {
+        if lambda >= self.total() {
+            return (0.0, 0);
+        }
+        if lambda <= 0.0 {
+            return (self.vmax(), self.active_at_top());
+        }
+        // Binary search smallest k in [1, n] with breakpoint(k) >= lambda.
+        let n = self.sorted.len();
+        let (mut lo, mut hi) = (1usize, n);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.breakpoint(mid) >= lambda {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let k = lo;
+        let t = (self.prefix[k - 1] - lambda) / k as f64;
+        (t.max(0.0), k)
+    }
+
+    /// Number of entries tied at the column max (initial active count).
+    fn active_at_top(&self) -> usize {
+        let top = self.sorted[0];
+        self.sorted.iter().take_while(|&&v| v == top).count().max(1)
+    }
+}
+
+/// Apply per-column caps: `x_ij = sign(y_ij) · min(|y_ij|, t_j)`.
+fn apply_caps(y: &Matrix, caps: &[f64]) -> Matrix {
+    let mut x = y.clone();
+    for j in 0..x.cols() {
+        let t = caps[j] as f32;
+        let col = x.col_mut(j);
+        if t <= 0.0 {
+            col.fill(0.0);
+        } else {
+            for v in col.iter_mut() {
+                *v = v.clamp(-t, t);
+            }
+        }
+    }
+    x
+}
+
+/// Exact projection via semismooth Newton on `θ(λ) = Σ_j t_j(λ) − η`.
+///
+/// θ is convex, piecewise linear and decreasing; starting from λ = 0 the
+/// Newton iterates increase monotonically and terminate in finitely many
+/// steps. Each iteration costs O(m log n) after the O(nm log n) sort.
+pub fn project_l1inf_newton(y: &Matrix, eta: f64) -> Matrix {
+    project_l1inf_newton_stats(y, eta).0
+}
+
+/// Newton variant also reporting the iteration count (for EXPERIMENTS.md).
+pub fn project_l1inf_newton_stats(y: &Matrix, eta: f64) -> (Matrix, usize) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return (y.clone(), 0);
+    }
+    if eta <= 0.0 {
+        return (Matrix::zeros(y.rows(), y.cols()), 0);
+    }
+    let preps: Vec<ColPrep> = (0..m).map(|j| ColPrep::new(y.col(j))).collect();
+    let norm: f64 = preps.iter().map(|p| p.vmax()).sum();
+    if norm <= eta {
+        return (y.clone(), 0);
+    }
+    let tol = 1e-10 * (1.0 + eta);
+    let mut lambda = 0.0f64;
+    let mut caps = vec![0.0f64; m];
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        let mut theta = -eta;
+        let mut slope = 0.0f64; // θ'(λ) = -Σ 1/k over active columns
+        for (j, p) in preps.iter().enumerate() {
+            let (t, k) = p.cap(lambda);
+            caps[j] = t;
+            theta += t;
+            if k > 0 {
+                slope -= 1.0 / k as f64;
+            }
+        }
+        if theta.abs() <= tol || slope == 0.0 || iters > 200 {
+            break;
+        }
+        let next = lambda - theta / slope;
+        if !(next > lambda) {
+            break; // converged to machine precision
+        }
+        lambda = next;
+    }
+    (apply_caps(y, &caps), iters)
+}
+
+/// Exact projection via a global breakpoint sort + sweep (Quattoni-style,
+/// O(nm log nm)).
+///
+/// All `nm` λ-breakpoints are sorted ascending; sweeping λ upward
+/// maintains `A = Σ prefix_j[k_j−1]/k_j` and `B = Σ 1/k_j` over active
+/// columns so `θ(λ) = A − λB − η` is linear in each segment; the first
+/// segment whose linear root lies inside it yields the exact λ*.
+pub fn project_l1inf_sortscan(y: &Matrix, eta: f64) -> Matrix {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return y.clone();
+    }
+    if eta <= 0.0 {
+        return Matrix::zeros(y.rows(), y.cols());
+    }
+    let preps: Vec<ColPrep> = (0..m).map(|j| ColPrep::new(y.col(j))).collect();
+    let norm: f64 = preps.iter().map(|p| p.vmax()).sum();
+    if norm <= eta {
+        return y.clone();
+    }
+    let n = y.rows();
+
+    // Event list: (lambda at which column j moves from k to k+1 actives —
+    // or dies at k = n), ascending.
+    let mut events: Vec<(f64, u32, u32)> = Vec::with_capacity(n * m);
+    for (j, p) in preps.iter().enumerate() {
+        for k in p.active_at_top()..=n {
+            events.push((p.breakpoint(k), j as u32, k as u32));
+        }
+    }
+    // Tied breakpoints of the *same column* must be processed in ascending
+    // k order (each event advances k by exactly one), so k is a tiebreaker.
+    events.sort_unstable_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+
+    // State per column: current active count k_j (0 = dead).
+    let mut kcur: Vec<usize> = preps.iter().map(|p| p.active_at_top()).collect();
+    let mut a_sum: f64 = preps
+        .iter()
+        .zip(&kcur)
+        .map(|(p, &k)| p.prefix[k - 1] / k as f64)
+        .sum();
+    let mut b_sum: f64 = kcur.iter().map(|&k| 1.0 / k as f64).sum();
+
+    let mut lo = 0.0f64;
+    for &(ev_lambda, j, k) in &events {
+        if ev_lambda > lo {
+            // Candidate root in segment [lo, ev_lambda]: θ(λ) = A − λB − η.
+            let lambda = (a_sum - eta) / b_sum;
+            if lambda >= lo - 1e-12 && lambda <= ev_lambda + 1e-12 {
+                let caps: Vec<f64> =
+                    preps.iter().map(|p| p.cap(lambda.max(0.0)).0).collect();
+                return apply_caps(y, &caps);
+            }
+            lo = ev_lambda;
+        }
+        // Apply the transition of column j: k -> k+1 (or death at k = n).
+        let j = j as usize;
+        let k = k as usize;
+        if kcur[j] != k {
+            continue; // stale event (tied breakpoints already advanced k)
+        }
+        let p = &preps[j];
+        a_sum -= p.prefix[k - 1] / k as f64;
+        b_sum -= 1.0 / k as f64;
+        if k < n {
+            kcur[j] = k + 1;
+            a_sum += p.prefix[k] / (k + 1) as f64;
+            b_sum += 1.0 / (k + 1) as f64;
+        } else {
+            kcur[j] = 0; // dead
+        }
+    }
+    // Root beyond the last event can only be η -> 0⁺; all columns dead.
+    apply_caps(y, &vec![0.0; m])
+}
+
+/// Events may fire in bursts for tied breakpoints; a column whose k has
+/// already advanced past an event's k is skipped above. This keeps the
+/// sweep O(nm) after the sort.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::forall;
+    use crate::core::rng::Rng;
+    use crate::projection::bilevel::bilevel_l1inf;
+    use crate::projection::norms::l1inf_norm;
+
+    fn rand_matrix(r: &mut Rng, max_n: usize, max_m: usize, scale: f32) -> Matrix {
+        let n = 1 + r.below(max_n);
+        let m = 1 + r.below(max_m);
+        Matrix::random_uniform(n, m, -scale, scale, r)
+    }
+
+    #[test]
+    fn hand_worked_2x2() {
+        // Y columns (3,1), (1,1); eta = 2 -> lambda = 4/3, caps (5/3, 1/3).
+        let y = Matrix::from_col_major(2, 2, vec![3.0, 1.0, 1.0, 1.0]).unwrap();
+        for f in [project_l1inf_newton, project_l1inf_sortscan] {
+            let x = f(&y, 2.0);
+            assert!((x.get(0, 0) - 5.0 / 3.0).abs() < 1e-5, "{x:?}");
+            assert!((x.get(1, 0) - 1.0).abs() < 1e-5);
+            assert!((x.get(0, 1) - 1.0 / 3.0).abs() < 1e-5);
+            assert!((x.get(1, 1) - 1.0 / 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_column_is_linf_clip_with_radius_eta() {
+        let y = Matrix::from_col_major(3, 1, vec![3.0, -1.0, 0.5]).unwrap();
+        for f in [project_l1inf_newton, project_l1inf_sortscan] {
+            let x = f(&y, 2.0);
+            assert_eq!(x.col(0), &[2.0, -1.0, 0.5]);
+        }
+    }
+
+    #[test]
+    fn identity_inside_ball() {
+        let y = Matrix::from_col_major(2, 2, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        assert_eq!(project_l1inf_newton(&y, 5.0), y);
+        assert_eq!(project_l1inf_sortscan(&y, 5.0), y);
+    }
+
+    #[test]
+    fn zero_radius() {
+        let y = Matrix::from_col_major(2, 1, vec![1.0, 2.0]).unwrap();
+        assert!(project_l1inf_newton(&y, 0.0).data().iter().all(|&v| v == 0.0));
+        assert!(project_l1inf_sortscan(&y, 0.0).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_newton_equals_sortscan() {
+        forall(
+            501,
+            96,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.01, 8.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let a = project_l1inf_newton(y, *eta);
+                let b = project_l1inf_sortscan(y, *eta);
+                crate::core::check::assert_close(a.data(), b.data(), 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_feasible_and_tight() {
+        forall(
+            502,
+            64,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.01, 6.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = project_l1inf_newton(y, *eta);
+                let nx = l1inf_norm(&x);
+                if nx > eta + 1e-4 {
+                    return Err(format!("infeasible {nx} > {eta}"));
+                }
+                if l1inf_norm(y) > *eta && (nx - eta).abs() > 1e-3 * (1.0 + eta) {
+                    return Err(format!("not tight: {nx} vs {eta}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_exact_at_least_as_close_as_bilevel() {
+        // The defining property: the exact projection minimizes the
+        // distance, so dist(exact) <= dist(bi-level) always.
+        forall(
+            503,
+            96,
+            |r| {
+                let y = rand_matrix(r, 8, 8, 3.0);
+                let eta = r.uniform_range(0.05, 5.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let exact = project_l1inf_newton(y, *eta);
+                let bl = bilevel_l1inf(y, *eta);
+                let de = y.dist2(&exact);
+                let db = y.dist2(&bl);
+                if de <= db + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("exact farther than bilevel: {de} > {db}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_nonexpansive() {
+        forall(
+            504,
+            48,
+            |r| {
+                let n = 1 + r.below(6);
+                let m = 1 + r.below(6);
+                let a = Matrix::random_uniform(n, m, -3.0, 3.0, r);
+                let b = Matrix::random_uniform(n, m, -3.0, 3.0, r);
+                let eta = r.uniform_range(0.1, 4.0);
+                (a, b, eta)
+            },
+            |(a, b, eta)| {
+                let pa = project_l1inf_newton(a, *eta);
+                let pb = project_l1inf_newton(b, *eta);
+                if pa.dist2(&pb) <= a.dist2(b) + 1e-5 {
+                    Ok(())
+                } else {
+                    Err("expansive".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            505,
+            48,
+            |r| {
+                let y = rand_matrix(r, 8, 8, 3.0);
+                let eta = r.uniform_range(0.1, 4.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let once = project_l1inf_newton(y, *eta);
+                let twice = project_l1inf_newton(&once, *eta);
+                crate::core::check::assert_close(once.data(), twice.data(), 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn ties_at_column_max() {
+        // Columns with repeated maxima exercise active_at_top > 1.
+        let y = Matrix::from_col_major(3, 2, vec![2.0, 2.0, 1.0, 2.0, 2.0, 2.0]).unwrap();
+        for f in [project_l1inf_newton, project_l1inf_sortscan] {
+            let x = f(&y, 1.0);
+            assert!(l1inf_norm(&x) <= 1.0 + 1e-5);
+            assert!((l1inf_norm(&x) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn newton_iterations_bounded() {
+        let mut rng = Rng::new(77);
+        let y = Matrix::random_uniform(100, 50, 0.0, 1.0, &mut rng);
+        let (_, iters) = project_l1inf_newton_stats(&y, 1.0);
+        assert!(iters < 100, "iters={iters}");
+    }
+
+    #[test]
+    fn columns_of_zeros_stay_zero() {
+        let mut y = Matrix::zeros(3, 3);
+        y.set(0, 1, 5.0);
+        let x = project_l1inf_newton(&y, 1.0);
+        assert!(x.col(0).iter().all(|&v| v == 0.0));
+        assert!(x.col(2).iter().all(|&v| v == 0.0));
+        assert!((x.get(0, 1) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,185 @@
+//! Exact Euclidean ℓ_{1,1} and ℓ_{1,2} matrix projections.
+//!
+//! * `‖X‖_{1,1} = Σ_{ij} |x_ij|` is just the ℓ1 norm of the flattened
+//!   matrix, so the exact projection is a single vector ℓ1 projection —
+//!   O(nm) with Condat. This is the paper's *unstructured* comparator
+//!   (Table 1, "ℓ_{1,1}" column): sparsity spreads over entries, whole
+//!   columns rarely die.
+//! * The exact ℓ_{1,2} (Group-LASSO ball, Eq. 19) decomposes by columns:
+//!   project the vector of column ℓ2 norms onto the ℓ1 ball, then rescale
+//!   each column — which is *identical* to the bi-level ℓ_{1,2}
+//!   (Algorithm 4). Table 1 writes "(bi-level/usual) ℓ_{1,2}" for exactly
+//!   this reason; the property test below pins it down.
+
+use crate::core::matrix::Matrix;
+use crate::projection::l1::project_l1_inplace;
+
+/// Exact ℓ_{1,1} projection: ℓ1-project the flattened matrix. In place.
+pub fn project_l11_inplace(y: &mut Matrix, eta: f64) {
+    project_l1_inplace(y.data_mut(), eta);
+}
+
+/// Exact ℓ_{1,1} projection, out of place.
+pub fn project_l11(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    project_l11_inplace(&mut x, eta);
+    x
+}
+
+/// Exact ℓ_{1,2} projection (= bi-level ℓ_{1,2}), out of place.
+pub fn project_l12(y: &Matrix, eta: f64) -> Matrix {
+    crate::projection::bilevel::bilevel_l12(y, eta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::forall;
+    use crate::core::rng::Rng;
+    use crate::projection::bilevel::{bilevel_l11, bilevel_l12};
+    use crate::projection::norms::{l11_norm, l12_norm};
+
+    fn rand_matrix(r: &mut Rng, max_n: usize, max_m: usize) -> Matrix {
+        let n = 1 + r.below(max_n);
+        let m = 1 + r.below(max_m);
+        Matrix::random_uniform(n, m, -3.0, 3.0, r)
+    }
+
+    #[test]
+    fn prop_l11_feasible_tight() {
+        forall(
+            601,
+            64,
+            |r| {
+                let y = rand_matrix(r, 8, 8);
+                let eta = r.uniform_range(0.01, 6.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = project_l11(y, *eta);
+                let n = l11_norm(&x);
+                if n > eta + 1e-3 {
+                    return Err(format!("infeasible {n}"));
+                }
+                if l11_norm(y) > *eta && (n - eta).abs() > 1e-3 * (1.0 + eta) {
+                    return Err(format!("not tight {n} vs {eta}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_exact_l11_at_least_as_close_as_bilevel() {
+        forall(
+            602,
+            64,
+            |r| {
+                let y = rand_matrix(r, 8, 8);
+                let eta = r.uniform_range(0.05, 5.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let exact = project_l11(y, *eta);
+                let bl = bilevel_l11(y, *eta);
+                if y.dist2(&exact) <= y.dist2(&bl) + 1e-6 {
+                    Ok(())
+                } else {
+                    Err("exact farther than bi-level".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_bilevel_l12_is_exact() {
+        // The coincidence the paper relies on: bi-level == exact for q=2.
+        // Verified against first-order optimality: X feasible, and
+        // Y−X ∈ N_ball(X), i.e. Y−X = λ·∂‖·‖_{1,2}(X) on active columns.
+        forall(
+            603,
+            64,
+            |r| {
+                let y = rand_matrix(r, 6, 8);
+                let eta = r.uniform_range(0.05, 4.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l12(y, *eta);
+                let n = l12_norm(&x);
+                if n > eta + 1e-3 {
+                    return Err("infeasible".into());
+                }
+                if l12_norm(y) <= *eta {
+                    return Ok(()); // identity, trivially optimal
+                }
+                // Active columns must share one multiplier λ = ‖y_j − x_j‖2
+                // (block soft threshold); dead columns need ‖y_j‖2 <= λ.
+                let mut lambdas = vec![];
+                for j in 0..y.cols() {
+                    let xn = crate::core::sort::l2_norm(x.col(j));
+                    let d: f64 = y
+                        .col(j)
+                        .iter()
+                        .zip(x.col(j))
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt();
+                    if xn > 1e-6 {
+                        lambdas.push(d);
+                    }
+                }
+                if lambdas.is_empty() {
+                    return Ok(());
+                }
+                let mean = lambdas.iter().sum::<f64>() / lambdas.len() as f64;
+                for l in &lambdas {
+                    if (l - mean).abs() > 1e-3 * (1.0 + mean) {
+                        return Err(format!("multipliers differ: {l} vs {mean}"));
+                    }
+                }
+                for j in 0..y.cols() {
+                    let xn = crate::core::sort::l2_norm(x.col(j));
+                    if xn <= 1e-6 {
+                        let yn = crate::core::sort::l2_norm(y.col(j));
+                        if yn > mean + 1e-3 * (1.0 + mean) {
+                            return Err(format!("dead column with ‖y‖={yn} > λ={mean}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn l11_unstructured_vs_bilevel_structured() {
+        // The motivating contrast (§5.1): at equal radius the bi-level
+        // ℓ1,1 zeroes whole columns, the exact one spreads zeros. Build
+        // "weak" columns whose total mass is small but which contain one
+        // strong entry: exact ℓ1,1 keeps the strong entry (column stays
+        // alive), bi-level kills the whole weak column.
+        let mut y = Matrix::zeros(20, 30);
+        for j in 0..30 {
+            if j < 15 {
+                for i in 0..20 {
+                    y.set(i, j, 0.01);
+                }
+                y.set(0, j, 0.9); // lone strong entry in a weak column
+            } else {
+                for i in 0..20 {
+                    y.set(i, j, 0.9);
+                }
+            }
+        }
+        let eta = 10.0;
+        let exact = project_l11(&y, eta);
+        let bl = bilevel_l11(&y, eta);
+        assert!(
+            bl.zero_cols() > exact.zero_cols(),
+            "bi-level {} vs exact {} zero cols",
+            bl.zero_cols(),
+            exact.zero_cols()
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Projection onto the ℓ2 ball: rescale when outside.
+
+use crate::core::sort::l2_norm;
+
+/// Project `xs` in place onto the ℓ2 ball of radius `eta`.
+pub fn project_l2_inplace(xs: &mut [f32], eta: f64) {
+    if eta <= 0.0 {
+        xs.fill(0.0);
+        return;
+    }
+    let n = l2_norm(xs);
+    if n <= eta {
+        return;
+    }
+    let s = (eta / n) as f32;
+    for x in xs.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Projection returning a new vector.
+pub fn project_l2(xs: &[f32], eta: f64) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    project_l2_inplace(&mut v, eta);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::{forall, gen_vec};
+
+    #[test]
+    fn identity_inside() {
+        let y = vec![0.3f32, 0.4];
+        assert_eq!(project_l2(&y, 1.0), y);
+    }
+
+    #[test]
+    fn rescales_outside() {
+        let x = project_l2(&[3.0, 4.0], 1.0);
+        assert!((x[0] - 0.6).abs() < 1e-6);
+        assert!((x[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_radius() {
+        assert_eq!(project_l2(&[1.0, 2.0], 0.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_feasible_idempotent_nonexpansive() {
+        forall(
+            201,
+            96,
+            |r| {
+                let v = gen_vec(r, 48, 8.0);
+                let eta = r.uniform_range(0.05, 10.0);
+                (v, eta)
+            },
+            |(v, eta)| {
+                let x = project_l2(v, *eta);
+                if l2_norm(&x) > eta + 1e-4 {
+                    return Err("infeasible".into());
+                }
+                let xx = project_l2(&x, *eta);
+                crate::core::check::assert_close(&x, &xx, 1e-5)?;
+                // direction preserved
+                for (a, b) in v.iter().zip(&x) {
+                    if *b != 0.0 && a.signum() != b.signum() {
+                        return Err("sign flipped".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Projection onto the ℓ∞ ball: elementwise clamp.
+//!
+//! This is the inner projector of the paper's bi-level ℓ_{1,∞}
+//! (`P^∞_{u_i}(y) = (min(y_i, u_i) …)`, §4.1) — the entire per-column step
+//! of Algorithm 2 is this clamp, which is why the bi-level method is a
+//! single pass over the matrix.
+
+/// Project `xs` in place onto the ℓ∞ ball of radius `eta`.
+#[inline]
+pub fn project_linf_inplace(xs: &mut [f32], eta: f64) {
+    let e = eta.max(0.0) as f32;
+    for x in xs.iter_mut() {
+        *x = x.clamp(-e, e);
+    }
+}
+
+/// Projection returning a new vector.
+pub fn project_linf(xs: &[f32], eta: f64) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    project_linf_inplace(&mut v, eta);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::{forall, gen_vec};
+    use crate::core::sort::max_abs;
+
+    #[test]
+    fn clamps_both_sides() {
+        assert_eq!(project_linf(&[3.0, -2.0, 0.5], 1.0), vec![1.0, -1.0, 0.5]);
+    }
+
+    #[test]
+    fn zero_radius_zeroes() {
+        assert_eq!(project_linf(&[3.0, -2.0], 0.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn negative_radius_treated_as_zero() {
+        assert_eq!(project_linf(&[1.0], -1.0), vec![0.0]);
+    }
+
+    #[test]
+    fn prop_feasible_idempotent() {
+        forall(
+            301,
+            96,
+            |r| {
+                let v = gen_vec(r, 64, 5.0);
+                let eta = r.uniform_range(0.0, 6.0);
+                (v, eta)
+            },
+            |(v, eta)| {
+                let x = project_linf(v, *eta);
+                if (max_abs(&x) as f64) > eta + 1e-6 {
+                    return Err("infeasible".into());
+                }
+                let xx = project_linf(&x, *eta);
+                crate::core::check::assert_close(&x, &xx, 0.0)
+            },
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! Projection operators onto norm balls.
+//!
+//! This is the paper's core subject matter. The module tree mirrors the
+//! paper's structure:
+//!
+//! * [`l1`], [`l2`], [`linf`] — the scalar (vector) ball projections the
+//!   bi-level method composes (ℓ1 in three variants: sort, Michelot,
+//!   Condat; plus weighted-ℓ1).
+//! * [`bilevel`] — the new bi-level `BP_η^{p,q}` family (Algorithms 1–4, 7).
+//! * [`l1inf_exact`] — exact Euclidean `P^{1,∞}` baselines (sort-scan
+//!   Quattoni-style; semismooth-Newton Chu/Chau-style).
+//! * [`l1l2_exact`] — exact `P^{1,1}` and `P^{1,2}` (which coincides with
+//!   the bi-level ℓ1,2).
+//! * [`multilevel`] — tri-level and generic multi-level tensor projection
+//!   (Algorithms 5, 6, 9, 10).
+//! * [`parallel`] — pool-parallel versions realizing Prop. 6.4.
+//! * [`norms`] — `ℓ_p`, `ℓ_{p,q}` and multi-level norm evaluation.
+
+pub mod bilevel;
+pub mod l1;
+pub mod l1inf_exact;
+pub mod l1l2_exact;
+pub mod l2;
+pub mod linf;
+pub mod multilevel;
+pub mod norms;
+pub mod parallel;
+
+/// The norms supported at each level of a (bi/multi)-level projection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Norm {
+    /// ℓ1 (sum of absolute values).
+    L1,
+    /// ℓ2 (Euclidean).
+    L2,
+    /// ℓ∞ (max absolute value).
+    Linf,
+}
+
+impl Norm {
+    /// Evaluate the norm of a vector (f64 accumulation).
+    pub fn eval(&self, xs: &[f32]) -> f64 {
+        match self {
+            Norm::L1 => crate::core::sort::l1_norm(xs),
+            Norm::L2 => crate::core::sort::l2_norm(xs),
+            Norm::Linf => crate::core::sort::max_abs(xs) as f64,
+        }
+    }
+
+    /// Project `xs` in place onto the ball of this norm with radius `eta`.
+    pub fn project(&self, xs: &mut [f32], eta: f64) {
+        match self {
+            Norm::L1 => l1::project_l1_inplace(xs, eta),
+            Norm::L2 => l2::project_l2_inplace(xs, eta),
+            Norm::Linf => linf::project_linf_inplace(xs, eta),
+        }
+    }
+
+    /// Parse from a config token ("l1" | "l2" | "linf" | "inf" | "∞").
+    pub fn parse(s: &str) -> Option<Norm> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "l1" | "1" => Some(Norm::L1),
+            "l2" | "2" => Some(Norm::L2),
+            "linf" | "inf" | "∞" | "max" => Some(Norm::Linf),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Norm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Norm::L1 => write!(f, "l1"),
+            Norm::L2 => write!(f, "l2"),
+            Norm::Linf => write!(f, "linf"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matches_direct() {
+        let v = [3.0, -4.0, 0.0];
+        assert_eq!(Norm::L1.eval(&v), 7.0);
+        assert_eq!(Norm::L2.eval(&v), 5.0);
+        assert_eq!(Norm::Linf.eval(&v), 4.0);
+    }
+
+    #[test]
+    fn parse_tokens() {
+        assert_eq!(Norm::parse("L1"), Some(Norm::L1));
+        assert_eq!(Norm::parse(" inf "), Some(Norm::Linf));
+        assert_eq!(Norm::parse("2"), Some(Norm::L2));
+        assert_eq!(Norm::parse("l3"), None);
+    }
+
+    #[test]
+    fn project_dispatch_feasible() {
+        for norm in [Norm::L1, Norm::L2, Norm::Linf] {
+            let mut v = vec![5.0f32, -3.0, 2.0];
+            norm.project(&mut v, 1.0);
+            assert!(norm.eval(&v) <= 1.0 + 1e-5, "{norm} infeasible");
+        }
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for norm in [Norm::L1, Norm::L2, Norm::Linf] {
+            assert_eq!(Norm::parse(&norm.to_string()), Some(norm));
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Multi-level tensor projection (§6 of the paper): tri-level and the
+//! generic `MP_η^ν` of Definition 6.2 / Algorithms 6 & 10.
+//!
+//! Convention: a tensor `Y ∈ R^{d_1 × … × d_r}` is stored row-major; the
+//! norm list `ν = [q_1, …, q_r]` is applied **leading axis first** (q_1
+//! aggregates axis d_1, q_2 aggregates d_2 of the aggregated tensor, …)
+//! and the *last* norm is the final vector projection with radius η. So:
+//!
+//! * `ν = [Linf, L1]` on a matrix stored `(n, m)` = bi-level ℓ_{1,∞};
+//! * `ν = [Linf, Linf, L1]` on `(c, n, m)` = tri-level ℓ_{1,∞,∞} (Alg. 5);
+//! * `ν = [q]` = the plain projection `P^q_η` (Prop. 6.3).
+//!
+//! Each recursion level is (aggregate → recurse → expand); both aggregate
+//! and expand are embarrassingly parallel across trailing indices, which
+//! is Prop. 6.4's exponential speedup (measured in `fig4_parallel` /
+//! `examples/parallel_scaling.rs`).
+
+use crate::core::tensor::Tensor;
+use crate::projection::norms::aggregate_leading_norm;
+use crate::projection::{l1, Norm};
+
+/// Generic multi-level projection `MP_η^ν(Y)` (Algorithm 6), recursive.
+pub fn multilevel(y: &Tensor, norms: &[Norm], eta: f64) -> Tensor {
+    assert!(
+        norms.len() == y.ndim() || norms.len() == 1,
+        "need one norm per axis (got {} norms for order-{} tensor)",
+        norms.len(),
+        y.ndim()
+    );
+    let mut x = y.clone();
+    multilevel_inplace(&mut x, norms, eta);
+    x
+}
+
+/// In-place generic multi-level projection.
+pub fn multilevel_inplace(y: &mut Tensor, norms: &[Norm], eta: f64) {
+    if y.is_empty() {
+        return;
+    }
+    if norms.len() == 1 {
+        // Base case (Prop. 6.3): plain projection of the flattened tensor.
+        norms[0].project(y.data_mut(), eta);
+        return;
+    }
+    // Aggregate the leading axis with q_1 …
+    let v = aggregate_leading_norm(y, norms[0]);
+    // … recurse on the aggregated tensor with the remaining norms …
+    let mut u = v.clone();
+    multilevel_inplace(&mut u, &norms[1..], eta);
+    // … expand: per trailing index t, project the fiber onto the q_1 ball
+    // of radius u_t. v (the fiber's current norm) lets untouched fibers
+    // be skipped entirely.
+    expand_fibers(y, v.data(), u.data(), norms[0]);
+}
+
+/// Project every leading-axis fiber of `y` onto the `norm`-ball with its
+/// own radius `u[t]`, given current fiber norms `v[t]`.
+///
+/// ℓ∞ (clamp) and ℓ2 (scale) stream in slice order — no fiber gather; ℓ1
+/// gathers each shrinking fiber to run the threshold scan.
+fn expand_fibers(y: &mut Tensor, v: &[f32], u: &[f32], norm: Norm) {
+    let c = y.leading();
+    let rest = y.slice_len();
+    match norm {
+        Norm::Linf => {
+            for k in 0..c {
+                let s = y.slice_mut(k);
+                for (x, (&ut, &vt)) in s.iter_mut().zip(u.iter().zip(v)) {
+                    if ut < vt {
+                        *x = x.clamp(-ut, ut);
+                    }
+                }
+            }
+        }
+        Norm::L2 => {
+            // scale factor per fiber
+            let scale: Vec<f32> = u
+                .iter()
+                .zip(v)
+                .map(|(&ut, &vt)| if vt > ut { if vt > 0.0 { ut / vt } else { 0.0 } } else { 1.0 })
+                .collect();
+            for k in 0..c {
+                let s = y.slice_mut(k);
+                for (x, &f) in s.iter_mut().zip(&scale) {
+                    *x *= f;
+                }
+            }
+        }
+        Norm::L1 => {
+            let mut fiber = vec![0.0f32; c];
+            for t in 0..rest {
+                if u[t] >= v[t] {
+                    continue; // fiber already feasible
+                }
+                for (k, fv) in fiber.iter_mut().enumerate() {
+                    *fv = y.data()[k * rest + t];
+                }
+                l1::project_l1_inplace(&mut fiber, u[t] as f64);
+                for (k, fv) in fiber.iter().enumerate() {
+                    y.data_mut()[k * rest + t] = *fv;
+                }
+            }
+        }
+    }
+}
+
+/// Tri-level ℓ_{1,∞,∞} projection (Algorithm 5) of an order-3 tensor
+/// `Y ∈ R^{c×n×m}`.
+pub fn trilevel_l1infinf(y: &Tensor, eta: f64) -> Tensor {
+    assert_eq!(y.ndim(), 3, "tri-level needs an order-3 tensor");
+    multilevel(y, &[Norm::Linf, Norm::Linf, Norm::L1], eta)
+}
+
+/// Tri-level ℓ_{1,1,1} projection (the second series of Figure 3).
+pub fn trilevel_l111(y: &Tensor, eta: f64) -> Tensor {
+    assert_eq!(y.ndim(), 3, "tri-level needs an order-3 tensor");
+    multilevel(y, &[Norm::L1, Norm::L1, Norm::L1], eta)
+}
+
+/// The multi-level norm a projection output must satisfy (feasibility
+/// check used by tests and the trainer).
+pub fn multilevel_norm(y: &Tensor, norms: &[Norm]) -> f64 {
+    crate::projection::norms::multilevel_norm(y, norms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::forall;
+    use crate::core::matrix::Matrix;
+    use crate::core::rng::Rng;
+    use crate::projection::bilevel::bilevel_l1inf;
+
+    fn rand_tensor(r: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut d = vec![0.0f32; n];
+        r.fill_uniform(&mut d, -scale, scale);
+        Tensor::from_vec(shape.to_vec(), d).unwrap()
+    }
+
+    #[test]
+    fn single_norm_is_plain_projection() {
+        // Prop. 6.3.
+        let mut rng = Rng::new(1);
+        let t = rand_tensor(&mut rng, &[4, 5], 3.0);
+        let x = multilevel(&t, &[Norm::L1], 2.0);
+        let mut flat = t.data().to_vec();
+        l1::project_l1_inplace(&mut flat, 2.0);
+        crate::core::check::assert_close(x.data(), &flat, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn bilevel_on_matrix_matches_matrix_impl() {
+        let mut rng = Rng::new(2);
+        let n = 7;
+        let m = 9;
+        // Matrix (col-major) and tensor (n leading, row-major) hold the
+        // same logical Y: tensor[i*m + j] = Y[i,j].
+        let mat = Matrix::random_uniform(n, m, -2.0, 2.0, &mut rng);
+        let mut td = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                td[i * m + j] = mat.get(i, j);
+            }
+        }
+        let t = Tensor::from_vec(vec![n, m], td).unwrap();
+        for eta in [0.5, 2.0, 10.0, 1e6] {
+            let xt = multilevel(&t, &[Norm::Linf, Norm::L1], eta);
+            let xm = bilevel_l1inf(&mat, eta);
+            for i in 0..n {
+                for j in 0..m {
+                    let a = xt.data()[i * m + j];
+                    let b = xm.get(i, j);
+                    assert!((a - b).abs() < 1e-5, "eta={eta} ({i},{j}): {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trilevel_hand_shape() {
+        let mut rng = Rng::new(3);
+        let t = rand_tensor(&mut rng, &[3, 4, 5], 1.0);
+        let x = trilevel_l1infinf(&t, 1.5);
+        assert_eq!(x.shape(), t.shape());
+        let n = multilevel_norm(&x, &[Norm::Linf, Norm::Linf, Norm::L1]);
+        assert!(n <= 1.5 + 1e-4, "n={n}");
+    }
+
+    #[test]
+    fn prop_trilevel_feasible_both_norms() {
+        forall(
+            701,
+            48,
+            |r| {
+                let c = 1 + r.below(4);
+                let n = 1 + r.below(5);
+                let m = 1 + r.below(6);
+                let t = rand_tensor(r, &[c, n, m], 2.0);
+                let eta = r.uniform_range(0.01, 4.0);
+                (t, eta)
+            },
+            |(t, eta)| {
+                let a = trilevel_l1infinf(t, *eta);
+                let na = multilevel_norm(&a, &[Norm::Linf, Norm::Linf, Norm::L1]);
+                if na > eta + 1e-3 {
+                    return Err(format!("l1infinf infeasible: {na}"));
+                }
+                let b = trilevel_l111(t, *eta);
+                let nb = multilevel_norm(&b, &[Norm::L1, Norm::L1, Norm::L1]);
+                if nb > eta + 1e-3 {
+                    return Err(format!("l111 infeasible: {nb}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_multilevel_idempotent() {
+        forall(
+            702,
+            32,
+            |r| {
+                let t = rand_tensor(r, &[3, 4, 5], 2.0);
+                let eta = r.uniform_range(0.1, 3.0);
+                (t, eta)
+            },
+            |(t, eta)| {
+                let once = trilevel_l1infinf(t, *eta);
+                let twice = trilevel_l1infinf(&once, *eta);
+                crate::core::check::assert_close(once.data(), twice.data(), 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_identity_inside_ball() {
+        forall(
+            703,
+            32,
+            |r| rand_tensor(r, &[2, 3, 4], 1.0),
+            |t| {
+                let norms = [Norm::Linf, Norm::Linf, Norm::L1];
+                let eta = multilevel_norm(t, &norms) + 1.0;
+                let x = multilevel(t, &norms, eta);
+                crate::core::check::assert_close(x.data(), t.data(), 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn order4_mixed_norms() {
+        let mut rng = Rng::new(5);
+        let t = rand_tensor(&mut rng, &[2, 3, 4, 5], 2.0);
+        let norms = [Norm::L2, Norm::Linf, Norm::L2, Norm::L1];
+        let x = multilevel(&t, &norms, 1.0);
+        let n = multilevel_norm(&x, &norms);
+        assert!(n <= 1.0 + 1e-4, "n={n}");
+        // idempotent there too
+        let xx = multilevel(&x, &norms, 1.0);
+        crate::core::check::assert_close(x.data(), xx.data(), 1e-5).unwrap();
+    }
+
+    #[test]
+    fn zero_radius_zeroes_tensor() {
+        let mut rng = Rng::new(6);
+        let t = rand_tensor(&mut rng, &[2, 3, 4], 1.0);
+        let x = trilevel_l1infinf(&t, 0.0);
+        assert!(x.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn channel_structured_sparsity() {
+        // Tri-level with tight radius zeroes whole (i,j) pixels across all
+        // channels — the structured pattern §6 motivates for images.
+        let mut rng = Rng::new(7);
+        let t = rand_tensor(&mut rng, &[3, 8, 8], 1.0);
+        let x = trilevel_l1infinf(&t, 0.2);
+        let c = 3;
+        let rest = 64;
+        let mut zero_pixels = 0;
+        for tix in 0..rest {
+            if (0..c).all(|k| x.data()[k * rest + tix] == 0.0) {
+                zero_pixels += 1;
+            }
+        }
+        assert!(zero_pixels > 0, "expected whole-pixel sparsity");
+    }
+
+    #[test]
+    #[should_panic(expected = "need one norm per axis")]
+    fn wrong_norm_count_panics() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        let _ = multilevel(&t, &[Norm::L1, Norm::L1], 1.0);
+    }
+}

@@ -1,0 +1,409 @@
+//! Pool-parallel projections — the measured realization of Prop. 6.4.
+//!
+//! The bi-level computation tree has two embarrassingly parallel stages
+//! (column aggregation, column re-projection) around one short sequential
+//! vector projection. With W workers the wall time drops from O(nm) to
+//! O(nm/W + m); with "full parallel power" (W ≥ max(n, m)) the critical
+//! path is O(n + m) (Table 1, "LP complexity"). Figure 4 sweeps W.
+//!
+//! Results are **bit-identical** to the sequential versions: workers only
+//! partition columns; no floating-point reassociation crosses a column.
+
+use crate::core::matrix::Matrix;
+use crate::core::sort::{l1_norm, l2_norm, max_abs};
+use crate::parallel::chunks::{cols_per_chunk, even_ranges};
+use crate::parallel::pool::WorkerPool;
+use crate::projection::l1::{project_l1_inplace, soft_threshold, L1Algo};
+use crate::projection::Norm;
+
+/// How many chunks per worker the column splits target (load balancing
+/// for data-dependent inner projections).
+const CHUNKS_PER_WORKER: usize = 4;
+
+/// Parallel per-column aggregation: `v_j = q(y_j)`.
+fn aggregate_cols_par(y: &Matrix, q: Norm, pool: &WorkerPool) -> Vec<f32> {
+    let m = y.cols();
+    let mut v = vec![0.0f32; m];
+    let chunk = cols_per_chunk(m, pool.workers(), CHUNKS_PER_WORKER);
+    let ranges = even_ranges(m, m.div_ceil(chunk));
+    let vchunks: Vec<&mut [f32]> = {
+        // Split v according to `ranges` (contiguous).
+        let mut rest: &mut [f32] = &mut v;
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut consumed = 0usize;
+        for &(s, e) in &ranges {
+            debug_assert_eq!(s, consumed);
+            let (head, tail) = rest.split_at_mut(e - s);
+            out.push(head);
+            rest = tail;
+            consumed = e;
+        }
+        out
+    };
+    let tasks: Vec<_> = vchunks
+        .into_iter()
+        .zip(ranges.iter().copied())
+        .map(|(vc, (s, _e))| {
+            move || {
+                for (k, slot) in vc.iter_mut().enumerate() {
+                    let col = y.col(s + k);
+                    *slot = match q {
+                        Norm::Linf => max_abs(col),
+                        Norm::L1 => l1_norm(col) as f32,
+                        Norm::L2 => l2_norm(col) as f32,
+                    };
+                }
+            }
+        })
+        .collect();
+    pool.run_scoped(tasks);
+    v
+}
+
+/// Parallel bi-level ℓ_{1,∞} (Algorithm 2 over the pool), in place.
+pub fn bilevel_l1inf_par_inplace(y: &mut Matrix, eta: f64, pool: &WorkerPool) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    // Step 1 (parallel): v = column ∞-norms.
+    let v = aggregate_cols_par(y, Norm::Linf, pool);
+    // Step 2 (sequential, O(m)): soft threshold of the aggregated vector.
+    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    if tau <= 0.0 {
+        return;
+    }
+    // Step 3 (parallel): clamp each column to u_j = (v_j − τ)_+.
+    let rows = y.rows();
+    let chunk = cols_per_chunk(m, pool.workers(), CHUNKS_PER_WORKER);
+    let chunks = y.col_chunks_mut(chunk);
+    let v = &v;
+    let tasks: Vec<_> = chunks
+        .into_iter()
+        .enumerate()
+        .map(|(ci, cols)| {
+            move || {
+                let base = ci * chunk;
+                for (local_j, col) in cols.chunks_exact_mut(rows).enumerate() {
+                    let u = v[base + local_j] - tau;
+                    if u <= 0.0 {
+                        col.fill(0.0);
+                    } else {
+                        for x in col.iter_mut() {
+                            *x = x.clamp(-u, u);
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    pool.run_scoped(tasks);
+}
+
+/// Parallel generic bi-level `BP^{p,q}` over the pool, in place.
+pub fn bilevel_par_inplace(y: &mut Matrix, eta: f64, p: Norm, q: Norm, pool: &WorkerPool) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    let v = aggregate_cols_par(y, q, pool);
+    let mut u = v.clone();
+    p.project(&mut u, eta);
+    let rows = y.rows();
+    let chunk = cols_per_chunk(m, pool.workers(), CHUNKS_PER_WORKER);
+    let chunks = y.col_chunks_mut(chunk);
+    let (v, u) = (&v, &u);
+    let tasks: Vec<_> = chunks
+        .into_iter()
+        .enumerate()
+        .map(|(ci, cols)| {
+            move || {
+                let base = ci * chunk;
+                for (local_j, col) in cols.chunks_exact_mut(rows).enumerate() {
+                    let j = base + local_j;
+                    if u[j] < v[j] {
+                        match q {
+                            Norm::Linf => {
+                                let e = u[j].max(0.0);
+                                for x in col.iter_mut() {
+                                    *x = x.clamp(-e, e);
+                                }
+                            }
+                            Norm::L2 => {
+                                let s = if v[j] > 0.0 { (u[j] / v[j]).max(0.0) } else { 0.0 };
+                                for x in col.iter_mut() {
+                                    *x *= s;
+                                }
+                            }
+                            Norm::L1 => project_l1_inplace(col, u[j].max(0.0) as f64),
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    pool.run_scoped(tasks);
+}
+
+/// Out-of-place parallel bi-level ℓ_{1,∞}.
+pub fn bilevel_l1inf_par(y: &Matrix, eta: f64, pool: &WorkerPool) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l1inf_par_inplace(&mut x, eta, pool);
+    x
+}
+
+/// Parallel multi-level projection: aggregate/expand stages split across
+/// trailing-index ranges.
+pub fn multilevel_par_inplace(
+    y: &mut crate::core::tensor::Tensor,
+    norms: &[Norm],
+    eta: f64,
+    pool: &WorkerPool,
+) {
+    if y.is_empty() {
+        return;
+    }
+    if norms.len() == 1 {
+        norms[0].project(y.data_mut(), eta);
+        return;
+    }
+    let v = aggregate_leading_par(y, norms[0], pool);
+    let mut u = v.clone();
+    multilevel_par_inplace(&mut u, &norms[1..], eta, pool);
+    expand_fibers_par(y, v.data(), u.data(), norms[0], pool);
+}
+
+/// Parallel streaming aggregation over trailing-index ranges.
+fn aggregate_leading_par(
+    y: &crate::core::tensor::Tensor,
+    norm: Norm,
+    pool: &WorkerPool,
+) -> crate::core::tensor::Tensor {
+    let c = y.leading();
+    let rest = y.slice_len();
+    let mut acc = vec![0.0f32; rest];
+    let ranges = even_ranges(rest, pool.workers() * CHUNKS_PER_WORKER);
+    let achunks: Vec<&mut [f32]> = split_by_ranges(&mut acc, &ranges);
+    let tasks: Vec<_> = achunks
+        .into_iter()
+        .zip(ranges.iter().copied())
+        .map(|(ac, (s, e))| {
+            move || {
+                match norm {
+                    Norm::Linf => {
+                        for k in 0..c {
+                            let seg = &y.data()[k * rest + s..k * rest + e];
+                            for (a, &v) in ac.iter_mut().zip(seg) {
+                                let av = v.abs();
+                                if av > *a {
+                                    *a = av;
+                                }
+                            }
+                        }
+                    }
+                    Norm::L1 => {
+                        for k in 0..c {
+                            let seg = &y.data()[k * rest + s..k * rest + e];
+                            for (a, &v) in ac.iter_mut().zip(seg) {
+                                *a += v.abs();
+                            }
+                        }
+                    }
+                    Norm::L2 => {
+                        for k in 0..c {
+                            let seg = &y.data()[k * rest + s..k * rest + e];
+                            for (a, &v) in ac.iter_mut().zip(seg) {
+                                *a += v * v;
+                            }
+                        }
+                        for a in ac.iter_mut() {
+                            *a = a.sqrt();
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    pool.run_scoped(tasks);
+    crate::core::tensor::Tensor::from_vec(y.shape()[1..].to_vec(), acc).expect("shape")
+}
+
+/// Parallel fiber expansion over trailing-index ranges.
+fn expand_fibers_par(
+    y: &mut crate::core::tensor::Tensor,
+    v: &[f32],
+    u: &[f32],
+    norm: Norm,
+    pool: &WorkerPool,
+) {
+    let c = y.leading();
+    let rest = y.slice_len();
+    let ranges = even_ranges(rest, pool.workers() * CHUNKS_PER_WORKER);
+    // SAFETY of the split: each task touches y.data[k*rest + s .. k*rest+e]
+    // for all k — disjoint across tasks because the (s, e) ranges are
+    // disjoint. We hand out raw pointers wrapped in a Send shim.
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let base = SendPtr(y.data_mut().as_mut_ptr());
+    let base = &base;
+    let tasks: Vec<_> = ranges
+        .iter()
+        .copied()
+        .map(|(s, e)| {
+            move || {
+                let ptr = base.0;
+                match norm {
+                    Norm::Linf => {
+                        for k in 0..c {
+                            for t in s..e {
+                                let ut = u[t];
+                                if ut < v[t] {
+                                    unsafe {
+                                        let p = ptr.add(k * rest + t);
+                                        *p = (*p).clamp(-ut, ut);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Norm::L2 => {
+                        for k in 0..c {
+                            for t in s..e {
+                                if v[t] > u[t] {
+                                    let f = if v[t] > 0.0 { u[t] / v[t] } else { 0.0 };
+                                    unsafe {
+                                        let p = ptr.add(k * rest + t);
+                                        *p *= f;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Norm::L1 => {
+                        let mut fiber = vec![0.0f32; c];
+                        for t in s..e {
+                            if u[t] >= v[t] {
+                                continue;
+                            }
+                            for (k, fv) in fiber.iter_mut().enumerate() {
+                                unsafe {
+                                    *fv = *ptr.add(k * rest + t);
+                                }
+                            }
+                            project_l1_inplace(&mut fiber, u[t].max(0.0) as f64);
+                            for (k, fv) in fiber.iter().enumerate() {
+                                unsafe {
+                                    *ptr.add(k * rest + t) = *fv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    pool.run_scoped(tasks);
+}
+
+/// Split a mutable slice into chunks matching contiguous `ranges`.
+fn split_by_ranges<'a, T>(xs: &'a mut [T], ranges: &[(usize, usize)]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = xs;
+    let mut consumed = 0usize;
+    for &(s, e) in ranges {
+        debug_assert_eq!(s, consumed);
+        let (head, tail) = rest.split_at_mut(e - s);
+        out.push(head);
+        rest = tail;
+        consumed = e;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::core::tensor::Tensor;
+    use crate::projection::bilevel::{bilevel, bilevel_l1inf};
+    use crate::projection::multilevel::multilevel;
+
+    #[test]
+    fn par_l1inf_matches_sequential_bitwise() {
+        let mut rng = Rng::new(41);
+        for workers in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(workers);
+            for _ in 0..10 {
+                let n = 1 + rng.below(40);
+                let m = 1 + rng.below(60);
+                let y = Matrix::random_uniform(n, m, -2.0, 2.0, &mut rng);
+                let eta = rng.uniform_range(0.05, 5.0);
+                let seq = bilevel_l1inf(&y, eta);
+                let par = bilevel_l1inf_par(&y, eta, &pool);
+                assert_eq!(seq.data(), par.data(), "workers={workers} n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_generic_matches_sequential() {
+        let mut rng = Rng::new(43);
+        let pool = WorkerPool::new(3);
+        for (p, q) in [
+            (Norm::L1, Norm::L1),
+            (Norm::L1, Norm::L2),
+            (Norm::L2, Norm::L1),
+        ] {
+            let y = Matrix::random_uniform(20, 30, -1.0, 1.0, &mut rng);
+            let eta = 3.0;
+            let seq = bilevel(&y, eta, p, q);
+            let mut par = y.clone();
+            bilevel_par_inplace(&mut par, eta, p, q, &pool);
+            crate::core::check::assert_close(seq.data(), par.data(), 1e-5)
+                .unwrap_or_else(|e| panic!("({p},{q}): {e}"));
+        }
+    }
+
+    #[test]
+    fn par_multilevel_matches_sequential() {
+        let mut rng = Rng::new(47);
+        let pool = WorkerPool::new(4);
+        for norms in [
+            vec![Norm::Linf, Norm::Linf, Norm::L1],
+            vec![Norm::L1, Norm::L1, Norm::L1],
+            vec![Norm::L2, Norm::Linf, Norm::L1],
+        ] {
+            let mut data = vec![0.0f32; 4 * 10 * 15];
+            rng.fill_uniform(&mut data, -1.0, 1.0);
+            let y = Tensor::from_vec(vec![4, 10, 15], data).unwrap();
+            let eta = 2.0;
+            let seq = multilevel(&y, &norms, eta);
+            let mut par = y.clone();
+            multilevel_par_inplace(&mut par, &norms, eta, &pool);
+            crate::core::check::assert_close(seq.data(), par.data(), 1e-5)
+                .unwrap_or_else(|e| panic!("{norms:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let pool = WorkerPool::new(2);
+        let mut y = Matrix::zeros(0, 5);
+        bilevel_l1inf_par_inplace(&mut y, 1.0, &pool);
+        let mut y2 = Matrix::zeros(5, 1);
+        y2.col_mut(0).copy_from_slice(&[5.0, 0.0, 0.0, 0.0, 0.0]);
+        bilevel_l1inf_par_inplace(&mut y2, 1.0, &pool);
+        assert_eq!(y2.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn many_workers_few_columns() {
+        let mut rng = Rng::new(53);
+        let pool = WorkerPool::new(12);
+        let y = Matrix::random_uniform(8, 3, -1.0, 1.0, &mut rng);
+        let seq = bilevel_l1inf(&y, 0.5);
+        let par = bilevel_l1inf_par(&y, 0.5, &pool);
+        assert_eq!(seq.data(), par.data());
+    }
+}

@@ -1,0 +1,222 @@
+//! AOT artifact loading: manifest parsing + HLO-text compilation cache.
+//!
+//! `make artifacts` (python/compile/aot.py) emits `artifacts/*.hlo.txt`
+//! plus `manifest.txt`; this module parses the manifest, compiles each
+//! HLO module once on the PJRT CPU client, and hands out executables.
+//! Python never runs at this point — the interchange is the HLO text.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::core::error::{MlprojError, Result};
+
+/// Parsed `manifest.txt` (key=value lines, written by aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Input feature count the artifacts were lowered for.
+    pub d: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Latent / class count.
+    pub k: usize,
+    /// Training batch size baked into `train_step`.
+    pub batch: usize,
+    /// Evaluation batch size baked into `predict`.
+    pub eval_batch: usize,
+    /// Activation ("silu" | "relu").
+    pub activation: String,
+    /// HLO file names per entry point.
+    pub files: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Parse a manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| MlprojError::Config(format!("bad manifest line: {line}")))?;
+            kv.insert(key.to_string(), value.to_string());
+        }
+        let get_usize = |key: &str| -> Result<usize> {
+            kv.get(key)
+                .ok_or_else(|| MlprojError::Config(format!("manifest missing {key}")))?
+                .parse()
+                .map_err(|e| MlprojError::Config(format!("manifest {key}: {e}")))
+        };
+        let mut files = HashMap::new();
+        for ep in ["train_step", "predict", "project"] {
+            if let Some(f) = kv.get(ep) {
+                files.insert(ep.to_string(), f.clone());
+            }
+        }
+        Ok(Manifest {
+            d: get_usize("d")?,
+            h: get_usize("h")?,
+            k: get_usize("k")?,
+            batch: get_usize("batch")?,
+            eval_batch: get_usize("eval_batch")?,
+            activation: kv.get("activation").cloned().unwrap_or_else(|| "silu".into()),
+            files,
+        })
+    }
+}
+
+/// A compiled-executable store over an artifact directory.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (must contain `manifest.txt`) on a fresh
+    /// PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| MlprojError::Runtime(format!("PJRT cpu client: {e}")))?;
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        Ok(ArtifactStore { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    /// The PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an entry point by manifest name, memoized.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let file = self
+                .manifest
+                .files
+                .get(name)
+                .ok_or_else(|| MlprojError::Config(format!("no artifact named {name}")))?;
+            let path = self.dir.join(file);
+            let exe = compile_hlo_file(&self.client, &path)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an entry point with literal inputs; returns the decomposed
+    /// output tuple as literals.
+    ///
+    /// Inputs are staged through caller-owned `PjRtBuffer`s and
+    /// `execute_b` rather than `execute`: the vendored C++ `execute`
+    /// creates one device buffer per input literal and `release()`s it
+    /// without ever deleting it — ~input-size bytes leaked per call,
+    /// which OOM-killed long training sweeps. With `execute_b` the
+    /// buffers are dropped (and freed) on the Rust side.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for lit in inputs {
+            buffers.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| MlprojError::Runtime(format!("stage input: {e}")))?,
+            );
+        }
+        self.run_buffers(name, &buffers)
+    }
+
+    /// Execute with pre-staged device buffers (hot path; avoids literal
+    /// round-trips for inputs the caller can build directly).
+    pub fn run_buffers(
+        &mut self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
+            .map_err(|e| MlprojError::Runtime(format!("execute {name}: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| MlprojError::Runtime(format!("readback {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        lit.to_tuple()
+            .map_err(|e| MlprojError::Runtime(format!("untuple {name}: {e}")))
+    }
+
+    /// Stage a host f32 array as a device buffer.
+    pub fn stage(&self, a: &crate::runtime::HostArray) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&a.data, &a.shape, None)
+            .map_err(|e| MlprojError::Runtime(format!("stage host array: {e}")))
+    }
+}
+
+/// Compile one HLO text file on a client.
+pub fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| MlprojError::invalid("non-utf8 path"))?,
+    )
+    .map_err(|e| MlprojError::Runtime(format!("parse {}: {e}", path.display())))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| MlprojError::Runtime(format!("compile {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version=1
+d=2000
+h=128
+k=2
+batch=100
+eval_batch=250
+activation=silu
+param_order=w1,b1,w2,b2,w3,b3,w4,b4
+train_step=train_step.hlo.txt
+predict=predict.hlo.txt
+project=project.hlo.txt
+train_step_args=params8,m8,v8,step,x,y,mask,lr,alpha
+train_step_outs=params8,m8,v8,step,loss,acc
+";
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.d, 2000);
+        assert_eq!(m.h, 128);
+        assert_eq!(m.k, 2);
+        assert_eq!(m.batch, 100);
+        assert_eq!(m.eval_batch, 250);
+        assert_eq!(m.activation, "silu");
+        assert_eq!(m.files["train_step"], "train_step.hlo.txt");
+        assert_eq!(m.files.len(), 3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Manifest::parse("not a manifest").is_err());
+        assert!(Manifest::parse("d=2000").is_err()); // missing keys
+    }
+
+    #[test]
+    fn parse_ignores_comments_and_blanks() {
+        let text = format!("# header\n\n{SAMPLE}");
+        assert!(Manifest::parse(&text).is_ok());
+    }
+}

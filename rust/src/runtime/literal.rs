@@ -1,0 +1,145 @@
+//! Conversions between Rust-side arrays and XLA literals.
+//!
+//! PJRT literals are row-major; [`crate::core::Matrix`] is column-major.
+//! The helpers here centralize the transposition rules so the coordinator
+//! never juggles layouts by hand.
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::matrix::Matrix;
+
+/// A host-side f32 array with shape, converted to/from `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostArray {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl HostArray {
+    /// Scalar array.
+    pub fn scalar(v: f32) -> Self {
+        HostArray { data: vec![v], shape: vec![] }
+    }
+
+    /// 1-D array.
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len();
+        HostArray { data, shape: vec![n] }
+    }
+
+    /// 2-D array from row-major data.
+    pub fn mat(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![rows * cols],
+                got: vec![data.len()],
+            });
+        }
+        Ok(HostArray { data, shape: vec![rows, cols] })
+    }
+
+    /// All-zeros array.
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostArray { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an `xla::Literal` (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // () scalar: reshape to rank-0
+            return lit.reshape(&[]).map_err(wrap);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(wrap)
+    }
+
+    /// Read back from an `xla::Literal`.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(wrap)?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(wrap)?;
+        Ok(HostArray { data, shape: dims })
+    }
+
+    /// Interpret a 2-D `(rows, cols)` row-major array as a column-major
+    /// [`Matrix`] whose columns are the *rows* of this array — the
+    /// zero-copy feature-major view used for projecting `w1 (d, h)`:
+    /// column `i` of the result is feature `i`'s weight vector.
+    pub fn as_feature_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            return Err(MlprojError::invalid("as_feature_matrix needs rank 2"));
+        }
+        // (d, h) row-major data IS (h, d) column-major data.
+        Matrix::from_col_major(self.shape[1], self.shape[0], self.data.clone())
+    }
+
+    /// Inverse of [`Self::as_feature_matrix`].
+    pub fn from_feature_matrix(m: &Matrix, d: usize, h: usize) -> Result<Self> {
+        if m.rows() != h || m.cols() != d {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![h, d],
+                got: vec![m.rows(), m.cols()],
+            });
+        }
+        HostArray::mat(d, h, m.data().to_vec())
+    }
+}
+
+fn wrap(e: xla::Error) -> MlprojError {
+    MlprojError::Runtime(e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_vec_mat_shapes() {
+        assert_eq!(HostArray::scalar(2.0).shape, Vec::<usize>::new());
+        assert_eq!(HostArray::vec1(vec![1.0, 2.0]).shape, vec![2]);
+        assert!(HostArray::mat(2, 3, vec![0.0; 6]).is_ok());
+        assert!(HostArray::mat(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn feature_matrix_view_roundtrip() {
+        // w1 (d=3, h=2) row-major: feature i = row i.
+        let w1 = HostArray::mat(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let fm = w1.as_feature_matrix().unwrap();
+        assert_eq!(fm.rows(), 2);
+        assert_eq!(fm.cols(), 3);
+        assert_eq!(fm.col(0), &[1.0, 2.0]); // feature 0's weights
+        assert_eq!(fm.col(2), &[5.0, 6.0]);
+        let back = HostArray::from_feature_matrix(&fm, 3, 2).unwrap();
+        assert_eq!(back, w1);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let a = HostArray::mat(2, 3, (0..6).map(|x| x as f32).collect()).unwrap();
+        let lit = a.to_literal().unwrap();
+        let b = HostArray::from_literal(&lit).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let a = HostArray::scalar(1.5);
+        let lit = a.to_literal().unwrap();
+        let b = HostArray::from_literal(&lit).unwrap();
+        assert_eq!(b.data, vec![1.5]);
+        assert!(b.shape.is_empty());
+    }
+}

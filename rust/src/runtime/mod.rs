@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the text
+//! parser reassigns instruction ids).
+
+pub mod artifact;
+pub mod literal;
+
+pub use artifact::{compile_hlo_file, ArtifactStore, Manifest};
+pub use literal::HostArray;

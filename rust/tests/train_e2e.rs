@@ -1,0 +1,105 @@
+//! End-to-end training integration test: the full three-layer stack on a
+//! short synthetic run. Skips when artifacts are absent.
+
+use std::path::Path;
+
+use mlproj::coordinator::{ProjectionKind, TrainConfig, Trainer};
+
+fn artifacts_ready() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/synthetic/manifest.txt")
+        .exists()
+}
+
+fn short_cfg(projection: ProjectionKind, eta: f64) -> TrainConfig {
+    TrainConfig {
+        projection,
+        eta,
+        epochs1: 6,
+        epochs2: 6,
+        repeats: 1,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn bilevel_projection_training_learns_and_sparsifies() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let mut trainer = Trainer::new(short_cfg(ProjectionKind::BilevelL1Inf, 2.0)).unwrap();
+    let r = trainer.run_once(11).unwrap();
+    assert!(r.accuracy_pct > 65.0, "accuracy {:.2}%", r.accuracy_pct);
+    assert!(r.sparsity_pct > 20.0, "sparsity {:.2}%", r.sparsity_pct);
+    assert!(r.features_alive < 2000);
+    // loss decreased over descent 1
+    let first = r.loss_curve[0];
+    let mid = r.loss_curve[5];
+    assert!(mid < first, "loss did not decrease: {first} -> {mid}");
+}
+
+#[test]
+fn baseline_training_has_no_sparsity() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let mut trainer = Trainer::new(short_cfg(ProjectionKind::None, 0.0)).unwrap();
+    let r = trainer.run_once(11).unwrap();
+    assert_eq!(r.sparsity_pct, 0.0);
+    assert_eq!(r.features_alive, 2000);
+    assert!(r.accuracy_pct > 65.0, "accuracy {:.2}%", r.accuracy_pct);
+}
+
+#[test]
+fn exact_projection_also_works() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let mut trainer = Trainer::new(short_cfg(ProjectionKind::ExactL1InfNewton, 2.0)).unwrap();
+    let r = trainer.run_once(11).unwrap();
+    assert!(r.accuracy_pct > 65.0, "accuracy {:.2}%", r.accuracy_pct);
+    assert!(r.sparsity_pct > 0.0);
+}
+
+#[test]
+fn pallas_hlo_projection_path_works() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    // The on-"device" path: projection runs through the AOT Pallas HLO.
+    let mut trainer = Trainer::new(short_cfg(ProjectionKind::PallasHlo, 2.0)).unwrap();
+    let r = trainer.run_once(11).unwrap();
+    assert!(r.sparsity_pct > 20.0, "sparsity {:.2}%", r.sparsity_pct);
+
+    // It must agree with the native path on the same seed (same data,
+    // same init, numerically identical projection).
+    let mut native = Trainer::new(short_cfg(ProjectionKind::BilevelL1Inf, 2.0)).unwrap();
+    let rn = native.run_once(11).unwrap();
+    assert!(
+        (r.accuracy_pct - rn.accuracy_pct).abs() < 1e-9,
+        "pallas {} vs native {}",
+        r.accuracy_pct,
+        rn.accuracy_pct
+    );
+    assert!((r.sparsity_pct - rn.sparsity_pct).abs() < 1e-9);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let mut t1 = Trainer::new(short_cfg(ProjectionKind::BilevelL1Inf, 1.0)).unwrap();
+    let a = t1.run_once(99).unwrap();
+    let mut t2 = Trainer::new(short_cfg(ProjectionKind::BilevelL1Inf, 1.0)).unwrap();
+    let b = t2.run_once(99).unwrap();
+    assert_eq!(a.accuracy_pct, b.accuracy_pct);
+    assert_eq!(a.sparsity_pct, b.sparsity_pct);
+    assert_eq!(a.loss_curve, b.loss_curve);
+}

@@ -1,0 +1,168 @@
+//! Cross-layer integration tests: Rust native projections vs the
+//! Python/JAX oracle (golden vectors) and vs the AOT-compiled Pallas
+//! projection executed through PJRT.
+//!
+//! Requires `make artifacts` (for the PJRT tests) and `make golden`
+//! (for the golden-vector tests); tests skip with a message otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use mlproj::core::matrix::Matrix;
+use mlproj::data::csv;
+use mlproj::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+use mlproj::runtime::{ArtifactStore, HostArray};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn golden_dir() -> PathBuf {
+    repo_root().join("golden")
+}
+
+fn load_meta(path: &Path) -> Option<(usize, usize, f64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut n = None;
+    let mut m = None;
+    let mut eta = None;
+    for line in text.lines() {
+        let (k, v) = line.split_once('=')?;
+        match k {
+            "n" => n = v.parse().ok(),
+            "m" => m = v.parse().ok(),
+            "eta" => eta = v.parse().ok(),
+            _ => {}
+        }
+    }
+    Some((n?, m?, eta?))
+}
+
+/// Load a golden CSV (row-major n x m) as a column-major Matrix.
+fn load_matrix(path: &Path, n: usize, m: usize) -> Matrix {
+    let rows = csv::read_matrix(path).unwrap();
+    let (flat, rn, rm) = csv::to_dense(&rows).unwrap();
+    assert_eq!((rn, rm), (n, m), "{}", path.display());
+    Matrix::from_row_major(n, m, &flat).unwrap()
+}
+
+fn assert_matrices_close(a: &Matrix, b: &Matrix, tol: f32, ctx: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{ctx}");
+    for j in 0..a.cols() {
+        for (i, (x, y)) in a.col(j).iter().zip(b.col(j)).enumerate() {
+            assert!(
+                (x - y).abs() <= tol,
+                "{ctx}: ({i},{j}) {x} vs {y} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_vectors_match_python_oracle() {
+    let dir = golden_dir();
+    if !dir.exists() {
+        eprintln!("skipping: golden/ missing (run `make golden`)");
+        return;
+    }
+    let mut checked = 0;
+    for case in ["small", "tall", "wide", "square"] {
+        let meta = dir.join(format!("{case}_meta.txt"));
+        let Some((n, m, eta)) = load_meta(&meta) else {
+            continue;
+        };
+        let y = load_matrix(&dir.join(format!("{case}_input.csv")), n, m);
+        for (kind, f) in [
+            ("bilevel_l1inf", bilevel_l1inf as fn(&Matrix, f64) -> Matrix),
+            ("bilevel_l11", bilevel_l11),
+            ("bilevel_l12", bilevel_l12),
+        ] {
+            let want = load_matrix(&dir.join(format!("{case}_{kind}.csv")), n, m);
+            let got = f(&y, eta);
+            assert_matrices_close(&got, &want, 3e-5, &format!("{case}/{kind}"));
+            checked += 1;
+        }
+    }
+    assert!(checked >= 12, "only {checked} golden cases checked");
+}
+
+#[test]
+fn pjrt_project_artifact_matches_native() {
+    let dir = repo_root().join("artifacts/synthetic");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let mut store = ArtifactStore::open(&dir).expect("open artifact store");
+    let (d, h) = (store.manifest.d, store.manifest.h);
+
+    // Deterministic w1 (d, h) row-major.
+    let mut rng = mlproj::core::rng::Rng::new(12345);
+    let mut w1 = vec![0.0f32; d * h];
+    rng.fill_uniform(&mut w1, -0.5, 0.5);
+    let eta = 1.5f32;
+
+    // PJRT path: project.hlo.txt (Pallas kernels, interpret-lowered).
+    let w1_lit = HostArray::mat(d, h, w1.clone()).unwrap().to_literal().unwrap();
+    let eta_lit = HostArray::scalar(eta).to_literal().unwrap();
+    let outs = store.run("project", &[w1_lit, eta_lit]).expect("run project");
+    let got = HostArray::from_literal(&outs[0]).unwrap();
+    assert_eq!(got.shape, vec![d, h]);
+
+    // Native path: bi-level l1inf on the feature-major view.
+    let fm = HostArray::mat(d, h, w1).unwrap().as_feature_matrix().unwrap();
+    let native = bilevel_l1inf(&fm, eta as f64);
+    let native_rm = HostArray::from_feature_matrix(&native, d, h).unwrap();
+
+    let max_diff = got
+        .data
+        .iter()
+        .zip(&native_rm.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff <= 1e-5, "PJRT vs native max diff {max_diff}");
+
+    // And the result is feasible under the l1inf norm on features.
+    let norm = mlproj::projection::norms::l1inf_norm(&native);
+    assert!(norm <= eta as f64 + 1e-3);
+}
+
+#[test]
+fn pjrt_predict_artifact_runs() {
+    let dir = repo_root().join("artifacts/synthetic");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let mut store = ArtifactStore::open(&dir).expect("open artifact store");
+    let man = store.manifest.clone();
+    let (d, h, k, eb) = (man.d, man.h, man.k, man.eval_batch);
+    let mut rng = mlproj::core::rng::Rng::new(7);
+
+    let mut inputs = Vec::new();
+    for shape in [
+        vec![d, h],
+        vec![h],
+        vec![h, k],
+        vec![k],
+        vec![k, h],
+        vec![h],
+        vec![h, d],
+        vec![d],
+    ] {
+        let mut data = vec![0.0f32; shape.iter().product()];
+        rng.fill_uniform(&mut data, -0.1, 0.1);
+        inputs.push(HostArray { data, shape }.to_literal().unwrap());
+    }
+    let mut x = vec![0.0f32; eb * d];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    inputs.push(HostArray::mat(eb, d, x).unwrap().to_literal().unwrap());
+
+    let outs = store.run("predict", &inputs).expect("run predict");
+    let logits = HostArray::from_literal(&outs[0]).unwrap();
+    let xhat = HostArray::from_literal(&outs[1]).unwrap();
+    assert_eq!(logits.shape, vec![eb, k]);
+    assert_eq!(xhat.shape, vec![eb, d]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    assert!(xhat.data.iter().all(|v| v.is_finite()));
+}
