@@ -10,9 +10,8 @@ use std::time::Instant;
 
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
-use mlproj::parallel::WorkerPool;
 use mlproj::projection::bilevel::bilevel_l1inf;
-use mlproj::projection::parallel::bilevel_l1inf_par;
+use mlproj::projection::{ExecBackend, ProjectionSpec};
 
 fn time_ms<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     // median of `reps`
@@ -48,11 +47,18 @@ fn main() {
         println!("\nmatrix {n}x{m}: sequential {t_seq:.2} ms");
         println!("workers   time(ms)   gain");
         for w in 1..=max_workers {
-            let pool = WorkerPool::new(w);
+            // One compiled plan per worker count: the pool lives inside
+            // the backend, the workspace is reused across repetitions.
+            let mut plan = ProjectionSpec::l1inf(eta)
+                .with_backend(ExecBackend::pool(w))
+                .compile_for_matrix(y.rows(), y.cols())
+                .expect("compile l1inf plan");
+            let mut x = y.clone();
             let t_par = time_ms(
                 || {
-                    let x = bilevel_l1inf_par(&y, eta, &pool);
-                    std::hint::black_box(x);
+                    x.data_mut().copy_from_slice(y.data());
+                    plan.project_matrix_inplace(&mut x).expect("project");
+                    std::hint::black_box(&x);
                 },
                 5,
             );

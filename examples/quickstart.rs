@@ -9,9 +9,9 @@ use std::time::Instant;
 
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
-use mlproj::projection::bilevel::bilevel_l1inf;
 use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
 use mlproj::projection::norms::l1inf_norm;
+use mlproj::projection::ProjectionSpec;
 
 fn main() {
     // The paper's Figure-1 workload, scaled down for a quick demo:
@@ -22,8 +22,10 @@ fn main() {
     println!("Y ∈ R^{n}×{m},  ‖Y‖₁,∞ = {:.2},  η = {eta}", l1inf_norm(&y));
     println!();
 
+    // The operator layer: describe the projection, compile it for the
+    // shape, run it. `ν = [Linf, L1]` is the paper's bi-level ℓ_{1,∞}.
     let t = Instant::now();
-    let bl = bilevel_l1inf(&y, eta);
+    let bl = ProjectionSpec::l1inf(eta).project_matrix(&y).expect("bi-level projection");
     let t_bl = t.elapsed();
 
     let t = Instant::now();

@@ -11,11 +11,9 @@ use std::time::Instant;
 
 use mlproj::core::rng::Rng;
 use mlproj::core::tensor::Tensor;
-use mlproj::parallel::WorkerPool;
 use mlproj::projection::multilevel::{multilevel, trilevel_l111, trilevel_l1infinf};
 use mlproj::projection::norms::multilevel_norm;
-use mlproj::projection::parallel::multilevel_par_inplace;
-use mlproj::projection::Norm;
+use mlproj::projection::{ExecBackend, Norm, ProjectionSpec};
 
 fn zero_pixels(x: &Tensor) -> usize {
     let c = x.shape()[0];
@@ -50,10 +48,11 @@ fn main() {
     let eta = 0.1 * full;
 
     let t = Instant::now();
-    let x_inf = trilevel_l1infinf(&y, eta);
+    let x_inf = trilevel_l1infinf(&y, eta).expect("trilevel l1infinf");
     let dt_inf = t.elapsed();
     let t = Instant::now();
-    let x_111 = trilevel_l111(&y, 0.1 * multilevel_norm(&y, &[Norm::L1, Norm::L1, Norm::L1]));
+    let x_111 = trilevel_l111(&y, 0.1 * multilevel_norm(&y, &[Norm::L1, Norm::L1, Norm::L1]))
+        .expect("trilevel l111");
     let dt_111 = t.elapsed();
 
     println!("projection      time       zero-elems   zero-pixels(all c)");
@@ -66,15 +65,18 @@ fn main() {
         );
     }
 
-    // Parallel version produces the same result.
-    let pool = WorkerPool::new(mlproj::parallel::default_workers());
+    // The pool backend of the same compiled plan is bit-identical.
+    let workers = mlproj::parallel::default_workers();
+    let mut plan = ProjectionSpec::new(norms_inf.to_vec(), eta)
+        .with_backend(ExecBackend::pool(workers))
+        .compile(y.shape())
+        .expect("compile trilevel plan");
     let mut x_par = y.clone();
     let t = Instant::now();
-    multilevel_par_inplace(&mut x_par, &norms_inf, eta, &pool);
+    plan.project_tensor_inplace(&mut x_par).expect("pool projection");
     let dt_par = t.elapsed();
     println!(
-        "\nparallel ℓ1,∞,∞ ({} workers): {:.2} ms, identical = {}",
-        pool.workers(),
+        "\nparallel ℓ1,∞,∞ ({workers} workers): {:.2} ms, identical = {}",
         dt_par.as_secs_f64() * 1e3,
         x_par.data() == x_inf.data()
     );
@@ -87,7 +89,7 @@ fn main() {
     })
     .unwrap();
     let norms4 = [Norm::L2, Norm::Linf, Norm::Linf, Norm::L1];
-    let x4 = multilevel(&t4, &norms4, 4.0);
+    let x4 = multilevel(&t4, &norms4, 4.0).expect("order-4 projection");
     println!(
         "\norder-4 ν=(2,∞,∞,1): ‖X‖ν = {:.3} (η = 4.0), feasible = {}",
         multilevel_norm(&x4, &norms4),

@@ -30,10 +30,10 @@ fn main() {
         let eta_111 = 0.1 * multilevel_norm(&y, &[Norm::L1, Norm::L1, Norm::L1]);
 
         s_inf.points.push(b.measure(format!("{m}"), || {
-            black_box(trilevel_l1infinf(&y, eta_inf));
+            black_box(trilevel_l1infinf(&y, eta_inf).expect("trilevel l1infinf"));
         }));
         s_111.points.push(b.measure(format!("{m}"), || {
-            black_box(trilevel_l111(&y, eta_111));
+            black_box(trilevel_l111(&y, eta_111).expect("trilevel l111"));
         }));
     }
 

@@ -15,6 +15,7 @@
 //!       measured curve converges to this model; the model is what
 //!       regenerates the paper's figure shape.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use mlproj::bench::{black_box, Bencher, Report, Series};
@@ -23,7 +24,7 @@ use mlproj::core::rng::Rng;
 use mlproj::core::sort::max_abs;
 use mlproj::parallel::WorkerPool;
 use mlproj::projection::l1::{soft_threshold, L1Algo};
-use mlproj::projection::parallel::bilevel_l1inf_par;
+use mlproj::projection::{ExecBackend, ProjectionSpec};
 
 /// Median-of-5 stage timer.
 fn time_med<F: FnMut()>(mut f: F) -> f64 {
@@ -103,10 +104,17 @@ fn main() {
         let t_seq = t_agg + t_thresh + t_clip;
 
         for w in 1..=max_workers {
-            let pool = WorkerPool::new(w);
+            let pool = Arc::new(WorkerPool::new(w));
             let overhead = pool_task_overhead(&pool);
+            let mut plan = ProjectionSpec::l1inf(eta)
+                .with_backend(ExecBackend::Pool(Arc::clone(&pool)))
+                .compile_for_matrix(n, m)
+                .expect("compile l1inf plan");
+            let mut x = y.clone();
             let p = b.measure(format!("{w}"), || {
-                black_box(bilevel_l1inf_par(&y, eta, &pool));
+                x.data_mut().copy_from_slice(y.data());
+                plan.project_matrix_inplace(&mut x).expect("project");
+                black_box(&x);
             });
             meas.points.push(p.clone());
             // Critical-path model: parallel stages split across w workers,

@@ -1,0 +1,113 @@
+//! Operator-layer benchmark: compiled-plan reuse vs one-shot calls, for
+//! matrix and tensor specs on serial and pool backends.
+//!
+//! Emits `target/bench_out/BENCH_operator.json` — a flat, machine-readable
+//! record set `{size, norms, backend, ns_per_op}` — so future PRs can
+//! track the perf trajectory of the operator hot path without parsing
+//! human-oriented tables.
+//!
+//! Perf note (acceptance for the operator refactor): the "plan" rows
+//! measure `ProjectionPlan::project_*_inplace` on a pre-compiled plan,
+//! whose multi-level engine performs no per-call tensor allocation — the
+//! old clone-per-recursion-level implementation allocated two tensors per
+//! level per call. The "oneshot" rows include compile + workspace
+//! allocation each call, bounding what plan reuse saves.
+//!
+//! `MLPROJ_BENCH_FAST=1 cargo bench --bench operator_perf` for a quick pass.
+
+use mlproj::bench::{black_box, emit_json, Bencher, OpRecord};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::core::tensor::Tensor;
+use mlproj::projection::operator::fmt_norms;
+use mlproj::projection::{ExecBackend, Norm, ProjectionSpec};
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(11);
+    let mut records: Vec<OpRecord> = Vec::new();
+    let workers = 4usize;
+
+    // --- matrix specs --------------------------------------------------
+    let (n, m) = if fast { (250, 2500) } else { (1000, 10000) };
+    let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+    let eta = 1.0;
+    let matrix_specs: Vec<(Vec<Norm>, &str)> = vec![
+        (vec![Norm::Linf, Norm::L1], "bilevel l1inf"),
+        (vec![Norm::L1, Norm::L1], "bilevel l11"),
+        (vec![Norm::L2, Norm::L1], "bilevel l12"),
+    ];
+    for (norms, label) in &matrix_specs {
+        for backend in [ExecBackend::Serial, ExecBackend::pool(workers)] {
+            let spec = ProjectionSpec::new(norms.clone(), eta).with_backend(backend);
+            let mut plan = spec.compile_for_matrix(n, m).expect("compile");
+            let mut x = y.clone();
+            let meas = b.measure(format!("{label} plan"), || {
+                x.data_mut().copy_from_slice(y.data());
+                plan.project_matrix_inplace(&mut x).expect("project");
+                black_box(&x);
+            });
+            println!(
+                "{label:14} {:10} plan    {:10.3} ms",
+                plan.spec().backend.label(),
+                meas.median_ms()
+            );
+            records.push(OpRecord {
+                size: format!("{n}x{m}"),
+                norms: fmt_norms(norms),
+                backend: plan.spec().backend.label(),
+                ns_per_op: meas.median.as_nanos() as f64,
+            });
+        }
+    }
+
+    // --- tensor specs (tri-level) --------------------------------------
+    let (c, tn, tm) = if fast { (8, 250, 16) } else { (32, 1000, 64) };
+    let mut data = vec![0.0f32; c * tn * tm];
+    rng.fill_uniform(&mut data, 0.0, 1.0);
+    let t = Tensor::from_vec(vec![c, tn, tm], data).unwrap();
+    let tri = vec![Norm::Linf, Norm::Linf, Norm::L1];
+    let eta_t = 0.1 * mlproj::projection::norms::multilevel_norm(&t, &tri);
+
+    for backend in [ExecBackend::Serial, ExecBackend::pool(workers)] {
+        let spec = ProjectionSpec::new(tri.clone(), eta_t).with_backend(backend);
+        let mut plan = spec.compile(t.shape()).expect("compile");
+        let backend_label = plan.spec().backend.label();
+        let mut x = t.clone();
+        let meas = b.measure("trilevel plan", || {
+            x.data_mut().copy_from_slice(t.data());
+            plan.project_tensor_inplace(&mut x).expect("project");
+            black_box(&x);
+        });
+        println!(
+            "trilevel       {backend_label:10} plan    {:10.3} ms (workspace {} B)",
+            meas.median_ms(),
+            plan.workspace_bytes()
+        );
+        records.push(OpRecord {
+            size: format!("{c}x{tn}x{tm}"),
+            norms: fmt_norms(&tri),
+            backend: backend_label,
+            ns_per_op: meas.median.as_nanos() as f64,
+        });
+    }
+
+    // One-shot comparator: compile + workspace allocation per call.
+    let spec = ProjectionSpec::new(tri.clone(), eta_t);
+    let meas = b.measure("trilevel oneshot", || {
+        black_box(spec.project_tensor(&t).expect("project"));
+    });
+    println!(
+        "trilevel       oneshot    compile {:10.3} ms",
+        meas.median_ms()
+    );
+    records.push(OpRecord {
+        size: format!("{c}x{tn}x{tm}"),
+        norms: fmt_norms(&tri),
+        backend: "oneshot".into(),
+        ns_per_op: meas.median.as_nanos() as f64,
+    });
+
+    emit_json("BENCH_operator.json", &records);
+}

@@ -208,6 +208,64 @@ impl Report {
     }
 }
 
+/// One machine-readable operator benchmark record. Serialized into
+/// `target/bench_out/BENCH_operator.json` by the `operator_perf` bench so
+/// future PRs can track the perf trajectory without parsing tables.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    /// Shape label (e.g. "1000x10000" or "32x64x64").
+    pub size: String,
+    /// Norm list ν (e.g. "linf,l1").
+    pub norms: String,
+    /// Backend label (e.g. "serial", "pool(8)").
+    pub backend: String,
+    /// Median nanoseconds per projection call.
+    pub ns_per_op: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize records as a JSON array (no external crates: the schema is
+/// flat, so hand-rolled emission is exact).
+pub fn records_to_json(records: &[OpRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"size\": \"{}\", \"norms\": \"{}\", \"backend\": \"{}\", \"ns_per_op\": {:.1}}}{}\n",
+            json_escape(&r.size),
+            json_escape(&r.norms),
+            json_escape(&r.backend),
+            r.ns_per_op,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write records under `target/bench_out/<file>` and report the path.
+pub fn emit_json(file: &str, records: &[OpRecord]) {
+    let dir = std::path::Path::new("target/bench_out");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(file);
+        if std::fs::write(&path, records_to_json(records)).is_ok() {
+            println!("json -> {}", path.display());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +309,36 @@ mod tests {
     fn fast_env_has_lower_budget() {
         let def = Bencher::default();
         assert!(def.max_iters >= 10);
+    }
+
+    #[test]
+    fn op_records_serialize_to_json() {
+        let recs = vec![
+            OpRecord {
+                size: "10x20".into(),
+                norms: "linf,l1".into(),
+                backend: "serial".into(),
+                ns_per_op: 1234.5,
+            },
+            OpRecord {
+                size: "2x3x4".into(),
+                norms: "linf,linf,l1".into(),
+                backend: "pool(4)".into(),
+                ns_per_op: 99.0,
+            },
+        ];
+        let json = records_to_json(&recs);
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"size\": \"10x20\""));
+        assert!(json.contains("\"ns_per_op\": 1234.5"));
+        assert!(json.contains("\"backend\": \"pool(4)\""));
+        // exactly one comma separator for two records
+        assert_eq!(json.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 }

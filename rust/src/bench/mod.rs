@@ -2,4 +2,6 @@
 
 pub mod harness;
 
-pub use harness::{black_box, Bencher, Measurement, Report, Series};
+pub use harness::{
+    black_box, emit_json, records_to_json, Bencher, Measurement, OpRecord, Report, Series,
+};

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::core::error::{MlprojError, Result};
+use crate::projection::operator::{Method, ProjectionSpec};
 use crate::projection::Norm;
 
 /// Which projection constrains the SAE input layer.
@@ -64,6 +65,41 @@ impl ProjectionKind {
             ProjectionKind::ExactL11 => "exact_l11",
             ProjectionKind::PallasHlo => "pallas_hlo",
         }
+    }
+
+    /// The operator-layer spec this kind denotes (serial backend; callers
+    /// attach a pool via [`ProjectionSpec::with_backend`]). `None` for the
+    /// unconstrained baseline and for [`ProjectionKind::PallasHlo`], which
+    /// runs through the AOT artifact instead of the native operator.
+    pub fn spec(&self, eta: f64) -> Option<ProjectionSpec> {
+        match self {
+            ProjectionKind::None | ProjectionKind::PallasHlo => None,
+            ProjectionKind::BilevelL1Inf => Some(ProjectionSpec::l1inf(eta)),
+            ProjectionKind::BilevelL11 => Some(ProjectionSpec::bilevel(Norm::L1, Norm::L1, eta)),
+            ProjectionKind::BilevelL12 => Some(ProjectionSpec::bilevel(Norm::L1, Norm::L2, eta)),
+            ProjectionKind::BilevelL21 => Some(ProjectionSpec::bilevel(Norm::L2, Norm::L1, eta)),
+            ProjectionKind::ExactL1InfNewton => {
+                Some(ProjectionSpec::l1inf(eta).with_method(Method::ExactNewton))
+            }
+            ProjectionKind::ExactL1InfSortScan => {
+                Some(ProjectionSpec::l1inf(eta).with_method(Method::ExactSortScan))
+            }
+            ProjectionKind::ExactL11 => Some(
+                ProjectionSpec::bilevel(Norm::L1, Norm::L1, eta)
+                    .with_method(Method::ExactFlatL1),
+            ),
+        }
+    }
+
+    /// True when the kind benefits from the worker pool (the bi-level
+    /// kernels whose aggregate/re-project stages parallelize per column).
+    pub fn pooled(&self) -> bool {
+        matches!(
+            self,
+            ProjectionKind::BilevelL1Inf
+                | ProjectionKind::BilevelL11
+                | ProjectionKind::BilevelL12
+        )
     }
 
     /// The (p, q) pair when this is a bi-level method.
@@ -315,6 +351,32 @@ mod tests {
         ] {
             assert_eq!(ProjectionKind::parse(k.label()).unwrap(), k);
         }
+    }
+
+    #[test]
+    fn projection_kind_specs_map_to_operator() {
+        let spec = ProjectionKind::BilevelL1Inf.spec(1.5).unwrap();
+        assert_eq!(spec.norms, vec![Norm::Linf, Norm::L1]);
+        assert_eq!(spec.method, Method::Compositional);
+        assert!((spec.eta - 1.5).abs() < 1e-12);
+
+        let spec = ProjectionKind::BilevelL21.spec(1.0).unwrap();
+        assert_eq!(spec.norms, vec![Norm::L1, Norm::L2]);
+
+        let spec = ProjectionKind::ExactL1InfNewton.spec(2.0).unwrap();
+        assert_eq!(spec.method, Method::ExactNewton);
+        assert_eq!(spec.norms, vec![Norm::Linf, Norm::L1]);
+
+        let spec = ProjectionKind::ExactL11.spec(2.0).unwrap();
+        assert_eq!(spec.method, Method::ExactFlatL1);
+
+        assert!(ProjectionKind::None.spec(1.0).is_none());
+        assert!(ProjectionKind::PallasHlo.spec(1.0).is_none());
+
+        assert!(ProjectionKind::BilevelL1Inf.pooled());
+        assert!(ProjectionKind::BilevelL12.pooled());
+        assert!(!ProjectionKind::BilevelL21.pooled());
+        assert!(!ProjectionKind::ExactL11.pooled());
     }
 
     #[test]

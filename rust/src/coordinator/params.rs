@@ -6,6 +6,7 @@
 use crate::core::error::{MlprojError, Result};
 use crate::core::matrix::Matrix;
 use crate::core::rng::Rng;
+use crate::runtime::xla;
 use crate::runtime::{HostArray, Manifest};
 
 /// Number of parameter arrays (w1,b1,w2,b2,w3,b3,w4,b4).

@@ -15,6 +15,7 @@
 //! 5. evaluate accuracy on the held-out set via the `predict` executable.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::config::{DatasetKind, ProjectionKind, TrainConfig};
@@ -26,15 +27,22 @@ use crate::data::dataset::Dataset;
 use crate::data::lung::{make_lung, LungSpec};
 use crate::data::synthetic::{make_classification, SyntheticSpec};
 use crate::parallel::WorkerPool;
-use crate::projection::{bilevel, l1inf_exact, l1l2_exact, parallel as proj_par, Norm};
+use crate::projection::operator::{ExecBackend, ProjectionPlan};
 use crate::runtime::{ArtifactStore, HostArray};
 
 /// The training coordinator: owns the PJRT artifact store and the worker
 /// pool, and runs experiments described by [`TrainConfig`].
+///
+/// The projection of step 3 routes through the compiled operator layer:
+/// the [`ProjectionPlan`] (kernel choice + preallocated workspace) is
+/// compiled once for w1's feature-major shape and reused for every
+/// projection across epochs, repeats and descents.
 pub struct Trainer {
     store: ArtifactStore,
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     cfg: TrainConfig,
+    /// Lazily compiled projection plan (shape is fixed by the manifest).
+    plan: Option<ProjectionPlan>,
     /// Per-epoch log lines when true.
     pub verbose: bool,
 }
@@ -46,8 +54,8 @@ impl Trainer {
         cfg.validate()?;
         let dir = artifact_dir_for(&cfg);
         let store = ArtifactStore::open(Path::new(&dir))?;
-        let pool = WorkerPool::new(cfg.workers);
-        Ok(Trainer { store, pool, cfg, verbose: false })
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        Ok(Trainer { store, pool, cfg, plan: None, verbose: false })
     }
 
     /// The loaded manifest.
@@ -156,26 +164,30 @@ impl Trainer {
             return state.set_projected_w1(&fm);
         }
         let mut fm = state.w1_feature_matrix()?;
-        match kind {
-            ProjectionKind::BilevelL1Inf => {
-                proj_par::bilevel_l1inf_par_inplace(&mut fm, eta, &self.pool)
+        if self.plan.is_none() {
+            let mut spec = kind.spec(eta).ok_or_else(|| {
+                MlprojError::Config(format!(
+                    "projection kind `{}` has no native operator",
+                    kind.label()
+                ))
+            })?;
+            if kind.pooled() {
+                spec = spec.with_backend(ExecBackend::Pool(Arc::clone(&self.pool)));
             }
-            ProjectionKind::BilevelL11 => {
-                proj_par::bilevel_par_inplace(&mut fm, eta, Norm::L1, Norm::L1, &self.pool)
+            let plan = spec.compile_for_matrix(fm.rows(), fm.cols())?;
+            if self.verbose {
+                eprintln!(
+                    "[projection] {} (workspace {} B)",
+                    plan.describe(),
+                    plan.workspace_bytes()
+                );
             }
-            ProjectionKind::BilevelL12 => {
-                proj_par::bilevel_par_inplace(&mut fm, eta, Norm::L1, Norm::L2, &self.pool)
-            }
-            ProjectionKind::BilevelL21 => bilevel::bilevel_l21_inplace(&mut fm, eta),
-            ProjectionKind::ExactL1InfNewton => {
-                fm = l1inf_exact::project_l1inf_newton(&fm, eta);
-            }
-            ProjectionKind::ExactL1InfSortScan => {
-                fm = l1inf_exact::project_l1inf_sortscan(&fm, eta);
-            }
-            ProjectionKind::ExactL11 => l1l2_exact::project_l11_inplace(&mut fm, eta),
-            ProjectionKind::None | ProjectionKind::PallasHlo => unreachable!(),
+            self.plan = Some(plan);
         }
+        self.plan
+            .as_mut()
+            .expect("plan compiled above")
+            .project_matrix_inplace(&mut fm)?;
         state.set_projected_w1(&fm)
     }
 

@@ -1,12 +1,12 @@
 //! Error types shared across the library.
-
-use thiserror::Error;
+//!
+//! `Display`/`Error` are hand-implemented (`thiserror` is not in the
+//! offline crate set).
 
 /// Library-wide error type.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum MlprojError {
     /// A shape mismatch between tensors/matrices.
-    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
     ShapeMismatch {
         /// The shape the operation required.
         expected: Vec<usize>,
@@ -14,25 +14,65 @@ pub enum MlprojError {
         got: Vec<usize>,
     },
 
+    /// A norm list whose length does not match the tensor order (the
+    /// multi-level `ν` must carry one norm per axis, or a single norm for
+    /// the flattened projection of Prop. 6.3).
+    NormCountMismatch {
+        /// Number of norms supplied.
+        norms: usize,
+        /// Tensor order (number of axes).
+        ndim: usize,
+    },
+
     /// An invalid argument (e.g. negative radius).
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Configuration parse / validation error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Dataset construction / IO error.
-    #[error("data error: {0}")]
     Data(String),
 
     /// PJRT runtime error (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Underlying IO error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for MlprojError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MlprojError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected:?}, got {got:?}")
+            }
+            MlprojError::NormCountMismatch { norms, ndim } => write!(
+                f,
+                "norm list has {norms} entries but tensor has {ndim} axes \
+                 (need one norm per axis, or a single norm)"
+            ),
+            MlprojError::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            MlprojError::Config(msg) => write!(f, "config error: {msg}"),
+            MlprojError::Data(msg) => write!(f, "data error: {msg}"),
+            MlprojError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            MlprojError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for MlprojError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MlprojError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MlprojError {
+    fn from(e: std::io::Error) -> Self {
+        MlprojError::Io(e)
+    }
 }
 
 /// Library-wide result alias.
@@ -64,6 +104,14 @@ mod tests {
     fn display_invalid() {
         let e = MlprojError::invalid("radius must be >= 0");
         assert_eq!(format!("{e}"), "invalid argument: radius must be >= 0");
+    }
+
+    #[test]
+    fn display_norm_count_mismatch() {
+        let e = MlprojError::NormCountMismatch { norms: 2, ndim: 3 };
+        let s = format!("{e}");
+        assert!(s.contains("2 entries"));
+        assert!(s.contains("3 axes"));
     }
 
     #[test]

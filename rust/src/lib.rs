@@ -6,6 +6,10 @@
 //!
 //! * [`projection`] — the paper's contribution: bi-level / multi-level
 //!   ℓ_{p,q} projections plus every exact baseline they are compared to.
+//!   All call sites route through [`projection::operator`]: a
+//!   [`projection::ProjectionSpec`] compiles against a shape into a
+//!   [`projection::ProjectionPlan`] (kernel choice + reusable workspace)
+//!   with a pluggable serial/pool [`projection::ExecBackend`].
 //! * [`parallel`] — worker pool realizing the parallel decomposition.
 //! * [`data`] — synthetic `make_classification` and simulated LUNG cohorts.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX model.

@@ -13,7 +13,9 @@
 //!   the bi-level ℓ1,2).
 //! * [`multilevel`] — tri-level and generic multi-level tensor projection
 //!   (Algorithms 5, 6, 9, 10).
-//! * [`parallel`] — pool-parallel versions realizing Prop. 6.4.
+//! * [`operator`] — the compiled operator layer (spec → plan → execute)
+//!   every call site routes through; its [`operator::ExecBackend`]
+//!   subsumes the former standalone pool-parallel variants (Prop. 6.4).
 //! * [`norms`] — `ℓ_p`, `ℓ_{p,q}` and multi-level norm evaluation.
 
 pub mod bilevel;
@@ -24,7 +26,9 @@ pub mod l2;
 pub mod linf;
 pub mod multilevel;
 pub mod norms;
-pub mod parallel;
+pub mod operator;
+
+pub use operator::{ExecBackend, Method, ProjectionPlan, ProjectionSpec, Projector, Workspace};
 
 /// The norms supported at each level of a (bi/multi)-level projection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,8 +53,14 @@ impl Norm {
 
     /// Project `xs` in place onto the ball of this norm with radius `eta`.
     pub fn project(&self, xs: &mut [f32], eta: f64) {
+        self.project_with(xs, eta, l1::L1Algo::Condat);
+    }
+
+    /// Like [`Norm::project`], with an explicit ℓ1 threshold algorithm
+    /// (ignored for ℓ2/ℓ∞, which have closed-form projections).
+    pub fn project_with(&self, xs: &mut [f32], eta: f64, algo: l1::L1Algo) {
         match self {
-            Norm::L1 => l1::project_l1_inplace(xs, eta),
+            Norm::L1 => l1::project_l1_inplace_with(xs, eta, algo),
             Norm::L2 => l2::project_l2_inplace(xs, eta),
             Norm::Linf => linf::project_linf_inplace(xs, eta),
         }

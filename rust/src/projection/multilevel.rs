@@ -10,110 +10,49 @@
 //! * `ν = [Linf, Linf, L1]` on `(c, n, m)` = tri-level ℓ_{1,∞,∞} (Alg. 5);
 //! * `ν = [q]` = the plain projection `P^q_η` (Prop. 6.3).
 //!
-//! Each recursion level is (aggregate → recurse → expand); both aggregate
-//! and expand are embarrassingly parallel across trailing indices, which
-//! is Prop. 6.4's exponential speedup (measured in `fig4_parallel` /
-//! `examples/parallel_scaling.rs`).
+//! These free functions are one-shot conveniences over the compiled
+//! operator layer ([`crate::projection::operator`]): each call builds a
+//! [`ProjectionSpec`], compiles a plan (allocating its workspace once)
+//! and runs it. Hot paths that project the same shape repeatedly should
+//! hold a [`crate::projection::ProjectionPlan`] instead — the plan's
+//! iterative engine reuses its per-level buffers and performs **no
+//! per-call tensor clones**, unlike the historic clone-per-recursion
+//! implementation this module used to contain.
+//!
+//! A norm list that doesn't match the tensor order is reported as
+//! [`MlprojError::NormCountMismatch`] rather than a panic, so the CLI can
+//! surface bad `--norms` cleanly.
 
+use crate::core::error::Result;
 use crate::core::tensor::Tensor;
-use crate::projection::norms::aggregate_leading_norm;
-use crate::projection::{l1, Norm};
+use crate::projection::{Norm, ProjectionSpec};
 
-/// Generic multi-level projection `MP_η^ν(Y)` (Algorithm 6), recursive.
-pub fn multilevel(y: &Tensor, norms: &[Norm], eta: f64) -> Tensor {
-    assert!(
-        norms.len() == y.ndim() || norms.len() == 1,
-        "need one norm per axis (got {} norms for order-{} tensor)",
-        norms.len(),
-        y.ndim()
-    );
-    let mut x = y.clone();
-    multilevel_inplace(&mut x, norms, eta);
-    x
+#[allow(unused_imports)] // referenced by the module docs
+use crate::core::error::MlprojError;
+
+/// Generic multi-level projection `MP_η^ν(Y)` (Algorithm 6), out of place.
+///
+/// Errors with [`MlprojError::NormCountMismatch`] unless `norms` has one
+/// entry per axis (or is a single norm, the flattened case of Prop. 6.3).
+pub fn multilevel(y: &Tensor, norms: &[Norm], eta: f64) -> Result<Tensor> {
+    ProjectionSpec::new(norms.to_vec(), eta).project_tensor(y)
 }
 
 /// In-place generic multi-level projection.
-pub fn multilevel_inplace(y: &mut Tensor, norms: &[Norm], eta: f64) {
-    if y.is_empty() {
-        return;
-    }
-    if norms.len() == 1 {
-        // Base case (Prop. 6.3): plain projection of the flattened tensor.
-        norms[0].project(y.data_mut(), eta);
-        return;
-    }
-    // Aggregate the leading axis with q_1 …
-    let v = aggregate_leading_norm(y, norms[0]);
-    // … recurse on the aggregated tensor with the remaining norms …
-    let mut u = v.clone();
-    multilevel_inplace(&mut u, &norms[1..], eta);
-    // … expand: per trailing index t, project the fiber onto the q_1 ball
-    // of radius u_t. v (the fiber's current norm) lets untouched fibers
-    // be skipped entirely.
-    expand_fibers(y, v.data(), u.data(), norms[0]);
-}
-
-/// Project every leading-axis fiber of `y` onto the `norm`-ball with its
-/// own radius `u[t]`, given current fiber norms `v[t]`.
-///
-/// ℓ∞ (clamp) and ℓ2 (scale) stream in slice order — no fiber gather; ℓ1
-/// gathers each shrinking fiber to run the threshold scan.
-fn expand_fibers(y: &mut Tensor, v: &[f32], u: &[f32], norm: Norm) {
-    let c = y.leading();
-    let rest = y.slice_len();
-    match norm {
-        Norm::Linf => {
-            for k in 0..c {
-                let s = y.slice_mut(k);
-                for (x, (&ut, &vt)) in s.iter_mut().zip(u.iter().zip(v)) {
-                    if ut < vt {
-                        *x = x.clamp(-ut, ut);
-                    }
-                }
-            }
-        }
-        Norm::L2 => {
-            // scale factor per fiber
-            let scale: Vec<f32> = u
-                .iter()
-                .zip(v)
-                .map(|(&ut, &vt)| if vt > ut { if vt > 0.0 { ut / vt } else { 0.0 } } else { 1.0 })
-                .collect();
-            for k in 0..c {
-                let s = y.slice_mut(k);
-                for (x, &f) in s.iter_mut().zip(&scale) {
-                    *x *= f;
-                }
-            }
-        }
-        Norm::L1 => {
-            let mut fiber = vec![0.0f32; c];
-            for t in 0..rest {
-                if u[t] >= v[t] {
-                    continue; // fiber already feasible
-                }
-                for (k, fv) in fiber.iter_mut().enumerate() {
-                    *fv = y.data()[k * rest + t];
-                }
-                l1::project_l1_inplace(&mut fiber, u[t] as f64);
-                for (k, fv) in fiber.iter().enumerate() {
-                    y.data_mut()[k * rest + t] = *fv;
-                }
-            }
-        }
-    }
+pub fn multilevel_inplace(y: &mut Tensor, norms: &[Norm], eta: f64) -> Result<()> {
+    ProjectionSpec::new(norms.to_vec(), eta)
+        .compile(y.shape())?
+        .project_tensor_inplace(y)
 }
 
 /// Tri-level ℓ_{1,∞,∞} projection (Algorithm 5) of an order-3 tensor
 /// `Y ∈ R^{c×n×m}`.
-pub fn trilevel_l1infinf(y: &Tensor, eta: f64) -> Tensor {
-    assert_eq!(y.ndim(), 3, "tri-level needs an order-3 tensor");
+pub fn trilevel_l1infinf(y: &Tensor, eta: f64) -> Result<Tensor> {
     multilevel(y, &[Norm::Linf, Norm::Linf, Norm::L1], eta)
 }
 
 /// Tri-level ℓ_{1,1,1} projection (the second series of Figure 3).
-pub fn trilevel_l111(y: &Tensor, eta: f64) -> Tensor {
-    assert_eq!(y.ndim(), 3, "tri-level needs an order-3 tensor");
+pub fn trilevel_l111(y: &Tensor, eta: f64) -> Result<Tensor> {
     multilevel(y, &[Norm::L1, Norm::L1, Norm::L1], eta)
 }
 
@@ -130,6 +69,7 @@ mod tests {
     use crate::core::matrix::Matrix;
     use crate::core::rng::Rng;
     use crate::projection::bilevel::bilevel_l1inf;
+    use crate::projection::l1;
 
     fn rand_tensor(r: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
         let n: usize = shape.iter().product();
@@ -143,7 +83,7 @@ mod tests {
         // Prop. 6.3.
         let mut rng = Rng::new(1);
         let t = rand_tensor(&mut rng, &[4, 5], 3.0);
-        let x = multilevel(&t, &[Norm::L1], 2.0);
+        let x = multilevel(&t, &[Norm::L1], 2.0).unwrap();
         let mut flat = t.data().to_vec();
         l1::project_l1_inplace(&mut flat, 2.0);
         crate::core::check::assert_close(x.data(), &flat, 1e-6).unwrap();
@@ -165,7 +105,7 @@ mod tests {
         }
         let t = Tensor::from_vec(vec![n, m], td).unwrap();
         for eta in [0.5, 2.0, 10.0, 1e6] {
-            let xt = multilevel(&t, &[Norm::Linf, Norm::L1], eta);
+            let xt = multilevel(&t, &[Norm::Linf, Norm::L1], eta).unwrap();
             let xm = bilevel_l1inf(&mat, eta);
             for i in 0..n {
                 for j in 0..m {
@@ -181,7 +121,7 @@ mod tests {
     fn trilevel_hand_shape() {
         let mut rng = Rng::new(3);
         let t = rand_tensor(&mut rng, &[3, 4, 5], 1.0);
-        let x = trilevel_l1infinf(&t, 1.5);
+        let x = trilevel_l1infinf(&t, 1.5).unwrap();
         assert_eq!(x.shape(), t.shape());
         let n = multilevel_norm(&x, &[Norm::Linf, Norm::Linf, Norm::L1]);
         assert!(n <= 1.5 + 1e-4, "n={n}");
@@ -201,12 +141,12 @@ mod tests {
                 (t, eta)
             },
             |(t, eta)| {
-                let a = trilevel_l1infinf(t, *eta);
+                let a = trilevel_l1infinf(t, *eta).map_err(|e| e.to_string())?;
                 let na = multilevel_norm(&a, &[Norm::Linf, Norm::Linf, Norm::L1]);
                 if na > eta + 1e-3 {
                     return Err(format!("l1infinf infeasible: {na}"));
                 }
-                let b = trilevel_l111(t, *eta);
+                let b = trilevel_l111(t, *eta).map_err(|e| e.to_string())?;
                 let nb = multilevel_norm(&b, &[Norm::L1, Norm::L1, Norm::L1]);
                 if nb > eta + 1e-3 {
                     return Err(format!("l111 infeasible: {nb}"));
@@ -227,8 +167,8 @@ mod tests {
                 (t, eta)
             },
             |(t, eta)| {
-                let once = trilevel_l1infinf(t, *eta);
-                let twice = trilevel_l1infinf(&once, *eta);
+                let once = trilevel_l1infinf(t, *eta).map_err(|e| e.to_string())?;
+                let twice = trilevel_l1infinf(&once, *eta).map_err(|e| e.to_string())?;
                 crate::core::check::assert_close(once.data(), twice.data(), 1e-5)
             },
         );
@@ -243,7 +183,7 @@ mod tests {
             |t| {
                 let norms = [Norm::Linf, Norm::Linf, Norm::L1];
                 let eta = multilevel_norm(t, &norms) + 1.0;
-                let x = multilevel(t, &norms, eta);
+                let x = multilevel(t, &norms, eta).map_err(|e| e.to_string())?;
                 crate::core::check::assert_close(x.data(), t.data(), 0.0)
             },
         );
@@ -254,11 +194,11 @@ mod tests {
         let mut rng = Rng::new(5);
         let t = rand_tensor(&mut rng, &[2, 3, 4, 5], 2.0);
         let norms = [Norm::L2, Norm::Linf, Norm::L2, Norm::L1];
-        let x = multilevel(&t, &norms, 1.0);
+        let x = multilevel(&t, &norms, 1.0).unwrap();
         let n = multilevel_norm(&x, &norms);
         assert!(n <= 1.0 + 1e-4, "n={n}");
         // idempotent there too
-        let xx = multilevel(&x, &norms, 1.0);
+        let xx = multilevel(&x, &norms, 1.0).unwrap();
         crate::core::check::assert_close(x.data(), xx.data(), 1e-5).unwrap();
     }
 
@@ -266,7 +206,7 @@ mod tests {
     fn zero_radius_zeroes_tensor() {
         let mut rng = Rng::new(6);
         let t = rand_tensor(&mut rng, &[2, 3, 4], 1.0);
-        let x = trilevel_l1infinf(&t, 0.0);
+        let x = trilevel_l1infinf(&t, 0.0).unwrap();
         assert!(x.data().iter().all(|&v| v == 0.0));
     }
 
@@ -276,7 +216,7 @@ mod tests {
         // channels — the structured pattern §6 motivates for images.
         let mut rng = Rng::new(7);
         let t = rand_tensor(&mut rng, &[3, 8, 8], 1.0);
-        let x = trilevel_l1infinf(&t, 0.2);
+        let x = trilevel_l1infinf(&t, 0.2).unwrap();
         let c = 3;
         let rest = 64;
         let mut zero_pixels = 0;
@@ -289,9 +229,15 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "need one norm per axis")]
-    fn wrong_norm_count_panics() {
+    fn wrong_norm_count_is_an_error() {
         let t = Tensor::zeros(&[2, 3, 4]);
-        let _ = multilevel(&t, &[Norm::L1, Norm::L1], 1.0);
+        let err = multilevel(&t, &[Norm::L1, Norm::L1], 1.0).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                crate::core::error::MlprojError::NormCountMismatch { norms: 2, ndim: 3 }
+            ),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -1,0 +1,1032 @@
+//! Compiled projection operators: spec → plan → execute.
+//!
+//! This module unifies the repo's projection family — bi-level `BP_η^{p,q}`
+//! (Algorithms 1–4, 7), tri-level and generic multi-level `MP_η^ν`
+//! (Algorithms 5–6, 9–10) and the exact Euclidean baselines — behind one
+//! callable abstraction:
+//!
+//! 1. [`ProjectionSpec`] describes *what* to project onto: the norm list
+//!    `ν = [q_1, …, q_r]` (leading-axis norm first, the final vector norm
+//!    last), the radius `η`, the ℓ1 threshold algorithm, the method
+//!    family, and the execution backend.
+//! 2. [`ProjectionSpec::compile`] / [`ProjectionSpec::compile_for_matrix`]
+//!    validate the spec against a concrete shape and produce a
+//!    [`ProjectionPlan`]: the selected kernel plus a preallocated
+//!    [`Workspace`] (per-level aggregate buffers, f64 accumulation
+//!    scratch, fiber-gather stripes). Bad norm lists surface as
+//!    [`MlprojError::NormCountMismatch`] instead of panicking.
+//! 3. [`ProjectionPlan::project_inplace`] (and the `Matrix`/`Tensor`
+//!    convenience wrappers) run the projection. Repeated calls reuse the
+//!    workspace: the multi-level hot path performs **no per-call tensor
+//!    allocations or clones** after compilation (verified by
+//!    `tests/operator_alloc.rs`), unlike the old clone-per-recursion-level
+//!    implementation.
+//!
+//! Spec ↔ paper mapping:
+//!
+//! | spec                                      | paper                           |
+//! |-------------------------------------------|---------------------------------|
+//! | `ν = [q]`                                 | plain `P^q_η` (Prop. 6.3)       |
+//! | `ν = [Linf, L1]` on a matrix              | bi-level ℓ_{1,∞} (Algorithm 2)  |
+//! | `ν = [L1, L1]` / `[L2, L1]` / `[L1, L2]`  | Algorithms 3, 4, 7              |
+//! | `ν = [Linf, Linf, L1]` on an order-3 tensor | tri-level ℓ_{1,∞,∞} (Alg. 5)  |
+//! | `ν = [q_1, …, q_r]`                       | `MP_η^ν` (Definition 6.2, Alg. 6) |
+//! | `Method::ExactNewton` / `ExactSortScan`   | exact Euclidean `P^{1,∞}` (§4.2) |
+//! | `Method::ExactFlatL1`                     | exact ℓ_{1,1} (flattened ℓ1)    |
+//! | `ExecBackend::Pool`                       | Prop. 6.4 parallel decomposition |
+//!
+//! Serial and pool execution share one code path: every parallel stage is
+//! expressed as a partition of trailing/column ranges, and the serial
+//! backend simply runs the single full range inline. Aggregation carries
+//! f64 accumulators per output element regardless of backend, so pool
+//! results are **bit-identical** to serial results.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::matrix::Matrix;
+use crate::core::sort::{l1_norm, l2_norm, max_abs};
+use crate::core::tensor::Tensor;
+use crate::parallel::chunks::even_ranges;
+use crate::parallel::pool::WorkerPool;
+use crate::projection::l1::{self, L1Algo};
+use crate::projection::{l1inf_exact, Norm};
+
+/// Chunks per worker the range partitions target (load balancing for
+/// data-dependent inner ℓ1 projections).
+const CHUNKS_PER_WORKER: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Backend
+// ---------------------------------------------------------------------------
+
+/// Execution backend: run partitioned stages inline, or fan them out over
+/// a shared [`WorkerPool`] (the measured realization of Prop. 6.4).
+#[derive(Clone, Default)]
+pub enum ExecBackend {
+    /// Single-threaded execution (one full range per stage).
+    #[default]
+    Serial,
+    /// Scoped tasks on a fixed-size worker pool.
+    Pool(Arc<WorkerPool>),
+}
+
+impl ExecBackend {
+    /// Convenience: a fresh pool backend with `workers` threads.
+    pub fn pool(workers: usize) -> Self {
+        ExecBackend::Pool(Arc::new(WorkerPool::new(workers)))
+    }
+
+    /// Short label for reports ("serial" / "pool(8)").
+    pub fn label(&self) -> String {
+        match self {
+            ExecBackend::Serial => "serial".into(),
+            ExecBackend::Pool(p) => format!("pool({})", p.workers()),
+        }
+    }
+
+    /// Upper bound on the number of ranges a stage is split into.
+    fn parts_hint(&self) -> usize {
+        match self {
+            ExecBackend::Serial => 1,
+            ExecBackend::Pool(p) => (p.workers() * CHUNKS_PER_WORKER).max(1),
+        }
+    }
+}
+
+impl fmt::Debug for ExecBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecBackend::Serial => write!(f, "Serial"),
+            ExecBackend::Pool(p) => write!(f, "Pool({} workers)", p.workers()),
+        }
+    }
+}
+
+/// Raw mutable pointer wrapper for range-disjoint parallel writes.
+///
+/// SAFETY contract: every task produced by [`run_partitioned`] receives a
+/// disjoint `(start, end)` range, and tasks only touch elements derived
+/// from indices inside their own range, so no two tasks alias.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Run `f` over disjoint contiguous ranges covering `0..total`: inline for
+/// [`ExecBackend::Serial`] (one full range), scoped pool tasks otherwise.
+/// `f` receives `(range_index, (start, end))`.
+fn run_partitioned<F>(backend: &ExecBackend, total: usize, f: F)
+where
+    F: Fn(usize, (usize, usize)) + Send + Sync,
+{
+    if total == 0 {
+        return;
+    }
+    match backend {
+        ExecBackend::Serial => f(0, (0, total)),
+        ExecBackend::Pool(pool) => {
+            let ranges = even_ranges(total, pool.workers() * CHUNKS_PER_WORKER);
+            let fr = &f;
+            let tasks: Vec<_> = ranges
+                .iter()
+                .copied()
+                .enumerate()
+                .map(|(i, r)| move || fr(i, r))
+                .collect();
+            pool.run_scoped(tasks);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+/// Which algorithm family realizes the projection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Method {
+    /// The paper's compositional bi-/multi-level family (default): fast,
+    /// feasible, structured — but not the Euclidean projection.
+    #[default]
+    Compositional,
+    /// Exact Euclidean ℓ_{1,∞} via semismooth Newton (Chu/Chau baseline).
+    /// Requires `ν = [Linf, L1]` and the matrix layout.
+    ExactNewton,
+    /// Exact Euclidean ℓ_{1,∞} via sort-scan (Quattoni baseline).
+    /// Requires `ν = [Linf, L1]` and the matrix layout.
+    ExactSortScan,
+    /// Exact ℓ_{1,1}: a single flattened-ℓ1 projection. Requires
+    /// `ν = [L1, L1]` (or a single `[L1]`).
+    ExactFlatL1,
+}
+
+impl Method {
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Compositional => "compositional",
+            Method::ExactNewton => "exact_newton",
+            Method::ExactSortScan => "exact_sortscan",
+            Method::ExactFlatL1 => "exact_flat_l1",
+        }
+    }
+}
+
+/// Declarative description of a projection: norms, radius, ℓ1 algorithm,
+/// method family, backend. Compile against a shape to obtain a
+/// [`ProjectionPlan`].
+#[derive(Debug, Clone)]
+pub struct ProjectionSpec {
+    /// Norm list `ν = [q_1, …, q_r]`, leading-axis norm first; the last
+    /// entry is the final vector projection carrying the radius `η`.
+    pub norms: Vec<Norm>,
+    /// Ball radius `η` (≤ 0 projects to the origin, like the kernels).
+    pub eta: f64,
+    /// ℓ1 threshold algorithm for every inner/outer ℓ1 step.
+    pub l1_algo: L1Algo,
+    /// Algorithm family.
+    pub method: Method,
+    /// Execution backend.
+    pub backend: ExecBackend,
+}
+
+impl ProjectionSpec {
+    /// New compositional spec with the default (Condat, serial) settings.
+    pub fn new(norms: Vec<Norm>, eta: f64) -> Self {
+        ProjectionSpec {
+            norms,
+            eta,
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            backend: ExecBackend::Serial,
+        }
+    }
+
+    /// Bi-level ℓ_{1,∞} (Algorithm 2): `ν = [Linf, L1]`.
+    pub fn l1inf(eta: f64) -> Self {
+        ProjectionSpec::new(vec![Norm::Linf, Norm::L1], eta)
+    }
+
+    /// Generic bi-level `BP_η^{p,q}` (Algorithm 1): `ν = [q, p]`.
+    pub fn bilevel(p: Norm, q: Norm, eta: f64) -> Self {
+        ProjectionSpec::new(vec![q, p], eta)
+    }
+
+    /// Tri-level ℓ_{1,∞,∞} (Algorithm 5): `ν = [Linf, Linf, L1]`.
+    pub fn trilevel_l1infinf(eta: f64) -> Self {
+        ProjectionSpec::new(vec![Norm::Linf, Norm::Linf, Norm::L1], eta)
+    }
+
+    /// Plain single-norm projection `P^q_η` (Prop. 6.3).
+    pub fn flat(norm: Norm, eta: f64) -> Self {
+        ProjectionSpec::new(vec![norm], eta)
+    }
+
+    /// Replace the backend.
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Replace the ℓ1 threshold algorithm.
+    pub fn with_l1_algo(mut self, algo: L1Algo) -> Self {
+        self.l1_algo = algo;
+        self
+    }
+
+    /// Replace the method family.
+    pub fn with_method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Compile against a row-major [`Tensor`] shape (one norm per axis,
+    /// or a single norm for the flattened projection).
+    pub fn compile(&self, shape: &[usize]) -> Result<ProjectionPlan> {
+        self.compile_layout(shape, Layout::RowMajorTensor)
+    }
+
+    /// Compile against a column-major [`Matrix`] of `rows × cols`
+    /// (`ν = [q, p]`: `q` aggregates within columns, `p` across them).
+    pub fn compile_for_matrix(&self, rows: usize, cols: usize) -> Result<ProjectionPlan> {
+        self.compile_layout(&[rows, cols], Layout::ColMajorMatrix)
+    }
+
+    /// One-shot convenience: compile for `y` and project a copy.
+    pub fn project_matrix(&self, y: &Matrix) -> Result<Matrix> {
+        let mut plan = self.compile_for_matrix(y.rows(), y.cols())?;
+        let mut x = y.clone();
+        plan.project_matrix_inplace(&mut x)?;
+        Ok(x)
+    }
+
+    /// One-shot convenience: compile for `y` and project a copy.
+    pub fn project_tensor(&self, y: &Tensor) -> Result<Tensor> {
+        let mut plan = self.compile(y.shape())?;
+        let mut x = y.clone();
+        plan.project_tensor_inplace(&mut x)?;
+        Ok(x)
+    }
+
+    fn validate(&self, ndim: usize) -> Result<()> {
+        if self.norms.is_empty() {
+            return Err(MlprojError::invalid("norm list ν must not be empty"));
+        }
+        if !self.eta.is_finite() {
+            return Err(MlprojError::invalid(format!(
+                "radius eta must be finite (got {})",
+                self.eta
+            )));
+        }
+        if self.norms.len() != 1 && self.norms.len() != ndim {
+            return Err(MlprojError::NormCountMismatch {
+                norms: self.norms.len(),
+                ndim,
+            });
+        }
+        Ok(())
+    }
+
+    fn compile_layout(&self, shape: &[usize], layout: Layout) -> Result<ProjectionPlan> {
+        self.validate(shape.len())?;
+        let mut ws = Workspace::default();
+        let kernel: Box<dyn Projector> = match self.method {
+            Method::Compositional => {
+                if self.norms.len() == 1 {
+                    Box::new(FlatKernel {
+                        norm: self.norms[0],
+                        eta: self.eta,
+                        algo: self.l1_algo,
+                    })
+                } else if layout == Layout::ColMajorMatrix {
+                    ws.colnorms = vec![0.0; shape[1]];
+                    // The (ℓ1, ℓ∞) fast path derives radii from one soft
+                    // threshold and never materializes projected norms.
+                    if (self.norms[1], self.norms[0]) != (Norm::L1, Norm::Linf) {
+                        ws.colnorms_proj = vec![0.0; shape[1]];
+                    }
+                    Box::new(BilevelMatrixKernel {
+                        rows: shape[0],
+                        cols: shape[1],
+                        q: self.norms[0],
+                        p: self.norms[1],
+                        eta: self.eta,
+                        algo: self.l1_algo,
+                        backend: self.backend.clone(),
+                    })
+                } else {
+                    let r = self.norms.len();
+                    let mut v = Vec::with_capacity(r - 1);
+                    for k in 1..r {
+                        let len: usize = shape[k..].iter().product();
+                        v.push(vec![0.0f32; len]);
+                    }
+                    ws.acc = vec![0.0f64; v[0].len()];
+                    ws.u = v.clone();
+                    ws.v = v;
+                    ws.max_fiber = shape[..r - 1].iter().copied().max().unwrap_or(0);
+                    if self.norms[..r - 1].contains(&Norm::L1) {
+                        ws.fibers = vec![0.0; self.backend.parts_hint() * ws.max_fiber];
+                    }
+                    Box::new(MultilevelKernel {
+                        shape: shape.to_vec(),
+                        norms: self.norms.clone(),
+                        eta: self.eta,
+                        algo: self.l1_algo,
+                        backend: self.backend.clone(),
+                    })
+                }
+            }
+            Method::ExactNewton | Method::ExactSortScan => {
+                if layout != Layout::ColMajorMatrix {
+                    return Err(MlprojError::invalid(
+                        "exact ℓ1,∞ methods require the matrix layout \
+                         (use compile_for_matrix)",
+                    ));
+                }
+                if self.norms != [Norm::Linf, Norm::L1] {
+                    return Err(MlprojError::invalid(format!(
+                        "{} requires ν = [linf, l1], got {}",
+                        self.method.label(),
+                        fmt_norms(&self.norms)
+                    )));
+                }
+                Box::new(ExactL1InfKernel {
+                    rows: shape[0],
+                    cols: shape[1],
+                    eta: self.eta,
+                    newton: self.method == Method::ExactNewton,
+                })
+            }
+            Method::ExactFlatL1 => {
+                let ok = self.norms == [Norm::L1, Norm::L1] || self.norms == [Norm::L1];
+                if !ok {
+                    return Err(MlprojError::invalid(format!(
+                        "exact_flat_l1 requires ν = [l1, l1] (or [l1]), got {}",
+                        fmt_norms(&self.norms)
+                    )));
+                }
+                Box::new(ExactFlatL1Kernel { eta: self.eta, algo: self.l1_algo })
+            }
+        };
+        Ok(ProjectionPlan {
+            spec: self.clone(),
+            shape: shape.to_vec(),
+            layout,
+            kernel,
+            ws,
+        })
+    }
+}
+
+/// Render a norm list as "linf,l1".
+pub fn fmt_norms(norms: &[Norm]) -> String {
+    norms.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Parse a comma-separated norm list ("linf,l1" → `[Linf, L1]`).
+pub fn parse_norms(s: &str) -> Result<Vec<Norm>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let norm = Norm::parse(tok).ok_or_else(|| {
+            MlprojError::invalid(format!(
+                "unknown norm `{}` in norm list `{s}` (expected l1 | l2 | linf)",
+                tok.trim()
+            ))
+        })?;
+        out.push(norm);
+    }
+    if out.is_empty() {
+        return Err(MlprojError::invalid("empty norm list"));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Plan + workspace
+// ---------------------------------------------------------------------------
+
+/// Data layout a plan was compiled for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Layout {
+    /// Column-major [`Matrix`] data, shape `[rows, cols]`.
+    ColMajorMatrix,
+    /// Row-major [`Tensor`] data, axes aligned with the norm list.
+    RowMajorTensor,
+}
+
+/// Preallocated scratch owned by a [`ProjectionPlan`]. All buffers are
+/// sized at compile time; projection calls only read/write them.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Original per-level aggregates `V_k` (level-k tensor, k = 1..r-1).
+    v: Vec<Vec<f32>>,
+    /// Projected per-level aggregates `U_k`.
+    u: Vec<Vec<f32>>,
+    /// f64 accumulators for one aggregation pass (largest level length).
+    acc: Vec<f64>,
+    /// Column q-norms for the bi-level matrix path.
+    colnorms: Vec<f32>,
+    /// Outer-projected column norms.
+    colnorms_proj: Vec<f32>,
+    /// Fiber-gather scratch: `parts` disjoint stripes of `max_fiber`.
+    fibers: Vec<f32>,
+    /// Length of one fiber stripe (max leading-axis size).
+    max_fiber: usize,
+}
+
+impl Workspace {
+    /// Total bytes held by the workspace buffers.
+    pub fn bytes(&self) -> usize {
+        let f32s = self.v.iter().map(Vec::len).sum::<usize>()
+            + self.u.iter().map(Vec::len).sum::<usize>()
+            + self.colnorms.len()
+            + self.colnorms_proj.len()
+            + self.fibers.len();
+        f32s * std::mem::size_of::<f32>() + self.acc.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// A projection kernel executing against a caller-provided flat buffer
+/// and a plan-owned [`Workspace`].
+pub trait Projector: Send {
+    /// Project `data` in place.
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()>;
+
+    /// Human-readable description of the selected path.
+    fn describe(&self) -> String;
+}
+
+/// A compiled projection: selected kernel + preallocated workspace for
+/// one shape. Reuse across calls to amortize all setup.
+pub struct ProjectionPlan {
+    spec: ProjectionSpec,
+    shape: Vec<usize>,
+    layout: Layout,
+    kernel: Box<dyn Projector>,
+    ws: Workspace,
+}
+
+impl ProjectionPlan {
+    /// The spec this plan was compiled from.
+    pub fn spec(&self) -> &ProjectionSpec {
+        &self.spec
+    }
+
+    /// The shape this plan was compiled for.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Bytes of preallocated workspace.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.bytes()
+    }
+
+    /// Selected kernel + backend, for logs and the CLI.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {:?} [{}]",
+            self.kernel.describe(),
+            self.shape,
+            self.spec.backend.label()
+        )
+    }
+
+    /// Project a flat buffer in place (layout must match the compile
+    /// call: column-major for matrix plans, row-major for tensor plans).
+    pub fn project_inplace(&mut self, data: &mut [f32]) -> Result<()> {
+        let want: usize = self.shape.iter().product();
+        if data.len() != want {
+            return Err(MlprojError::ShapeMismatch {
+                expected: vec![want],
+                got: vec![data.len()],
+            });
+        }
+        self.kernel.project_inplace(data, &mut self.ws)
+    }
+
+    /// Project a column-major matrix in place.
+    pub fn project_matrix_inplace(&mut self, y: &mut Matrix) -> Result<()> {
+        if self.layout != Layout::ColMajorMatrix {
+            return Err(MlprojError::invalid(
+                "plan was compiled for tensor layout; use project_tensor_inplace",
+            ));
+        }
+        if self.shape != [y.rows(), y.cols()] {
+            return Err(MlprojError::ShapeMismatch {
+                expected: self.shape.clone(),
+                got: vec![y.rows(), y.cols()],
+            });
+        }
+        self.kernel.project_inplace(y.data_mut(), &mut self.ws)
+    }
+
+    /// Project a row-major tensor in place.
+    pub fn project_tensor_inplace(&mut self, y: &mut Tensor) -> Result<()> {
+        if self.layout != Layout::RowMajorTensor {
+            return Err(MlprojError::invalid(
+                "plan was compiled for matrix layout; use project_matrix_inplace",
+            ));
+        }
+        if y.shape() != &self.shape[..] {
+            return Err(MlprojError::ShapeMismatch {
+                expected: self.shape.clone(),
+                got: y.shape().to_vec(),
+            });
+        }
+        self.kernel.project_inplace(y.data_mut(), &mut self.ws)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// Plain single-norm projection of the flattened buffer (Prop. 6.3).
+struct FlatKernel {
+    norm: Norm,
+    eta: f64,
+    algo: L1Algo,
+}
+
+impl Projector for FlatKernel {
+    fn project_inplace(&self, data: &mut [f32], _ws: &mut Workspace) -> Result<()> {
+        self.norm.project_with(data, self.eta, self.algo);
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("flat P^{} η={}", self.norm, self.eta)
+    }
+}
+
+/// Bi-level `BP_η^{p,q}` over a column-major matrix (Algorithms 1–4, 7),
+/// with the `(p, q) = (ℓ1, ℓ∞)` fast path of Algorithm 2. Serial and pool
+/// backends share the same partitioned stages.
+struct BilevelMatrixKernel {
+    rows: usize,
+    cols: usize,
+    /// Inner (within-column) norm `q`.
+    q: Norm,
+    /// Outer (across-column) norm `p`.
+    p: Norm,
+    eta: f64,
+    algo: L1Algo,
+    backend: ExecBackend,
+}
+
+impl Projector for BilevelMatrixKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        let (rows, cols) = (self.rows, self.cols);
+        if rows == 0 || cols == 0 {
+            return Ok(());
+        }
+        // Stage 1 (partitioned): v_j = q(y_j), contiguous column scans.
+        {
+            let d: &[f32] = data;
+            let q = self.q;
+            let vp = SendPtr(ws.colnorms.as_mut_ptr());
+            let vp = &vp;
+            run_partitioned(&self.backend, cols, move |_, (s, e)| {
+                for j in s..e {
+                    let col = &d[j * rows..(j + 1) * rows];
+                    let n = match q {
+                        Norm::Linf => max_abs(col),
+                        Norm::L1 => l1_norm(col) as f32,
+                        Norm::L2 => l2_norm(col) as f32,
+                    };
+                    unsafe {
+                        *vp.get().add(j) = n;
+                    }
+                }
+            });
+        }
+        if (self.p, self.q) == (Norm::L1, Norm::Linf) {
+            // Algorithm 2 fast path: one soft threshold, then clamp.
+            let tau = l1::soft_threshold(&ws.colnorms, self.eta, self.algo) as f32;
+            if tau <= 0.0 {
+                return Ok(());
+            }
+            let v: &[f32] = &ws.colnorms;
+            let dp = SendPtr(data.as_mut_ptr());
+            let dp = &dp;
+            run_partitioned(&self.backend, cols, move |_, (s, e)| {
+                for j in s..e {
+                    let u = v[j] - tau;
+                    let col =
+                        unsafe { std::slice::from_raw_parts_mut(dp.get().add(j * rows), rows) };
+                    if u <= 0.0 {
+                        col.fill(0.0);
+                    } else {
+                        for x in col.iter_mut() {
+                            *x = x.clamp(-u, u);
+                        }
+                    }
+                }
+            });
+            return Ok(());
+        }
+        // Generic path: u = P^p_η(v), then per-column q re-projection.
+        ws.colnorms_proj.copy_from_slice(&ws.colnorms);
+        self.p.project_with(&mut ws.colnorms_proj, self.eta, self.algo);
+        let v: &[f32] = &ws.colnorms;
+        let u: &[f32] = &ws.colnorms_proj;
+        let q = self.q;
+        let algo = self.algo;
+        let dp = SendPtr(data.as_mut_ptr());
+        let dp = &dp;
+        run_partitioned(&self.backend, cols, move |_, (s, e)| {
+            for j in s..e {
+                if u[j] < v[j] {
+                    let col =
+                        unsafe { std::slice::from_raw_parts_mut(dp.get().add(j * rows), rows) };
+                    match q {
+                        Norm::Linf => {
+                            let cap = u[j].max(0.0);
+                            for x in col.iter_mut() {
+                                *x = x.clamp(-cap, cap);
+                            }
+                        }
+                        Norm::L2 => {
+                            let scale = if v[j] > 0.0 { (u[j] / v[j]).max(0.0) } else { 0.0 };
+                            for x in col.iter_mut() {
+                                *x *= scale;
+                            }
+                        }
+                        Norm::L1 => {
+                            l1::project_l1_inplace_with(col, u[j].max(0.0) as f64, algo)
+                        }
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("bilevel BP^{{{},{}}} η={}", self.p, self.q, self.eta)
+    }
+}
+
+/// Generic multi-level `MP_η^ν` (Algorithms 6 & 10), iterative with full
+/// workspace reuse: forward aggregation `V_1 … V_{r-1}`, one final vector
+/// projection, backward fiber expansion `U_{r-1} … U_1` and finally the
+/// input buffer itself. No per-call tensor allocation.
+struct MultilevelKernel {
+    shape: Vec<usize>,
+    norms: Vec<Norm>,
+    eta: f64,
+    algo: L1Algo,
+    backend: ExecBackend,
+}
+
+impl Projector for MultilevelKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let r = self.norms.len();
+        let Workspace { v, u, acc, fibers, max_fiber, .. } = ws;
+        // Forward: V_k = aggregate(V_{k-1}, q_k), with V_0 = data.
+        for k in 0..r - 1 {
+            let c = self.shape[k];
+            let (head, tail) = v.split_at_mut(k);
+            let dst = &mut tail[0];
+            let rest = dst.len();
+            let src: &[f32] = if k == 0 { &*data } else { &head[k - 1] };
+            aggregate_level(&self.backend, self.norms[k], src, c, rest, &mut acc[..rest], dst);
+        }
+        // Final vector projection: U_{r-1} = P^{q_r}_η(V_{r-1}).
+        let top = r - 2;
+        u[top].copy_from_slice(&v[top]);
+        self.norms[r - 1].project_with(&mut u[top], self.eta, self.algo);
+        // Backward: expand each level's fibers to its projected radii.
+        for k in (0..r - 1).rev() {
+            let c = self.shape[k];
+            if k == 0 {
+                expand_level(
+                    &self.backend,
+                    self.norms[0],
+                    &mut *data,
+                    c,
+                    v[0].len(),
+                    &v[0],
+                    &u[0],
+                    fibers.as_mut_slice(),
+                    *max_fiber,
+                    self.algo,
+                );
+            } else {
+                let (uh, ut) = u.split_at_mut(k);
+                uh[k - 1].copy_from_slice(&v[k - 1]);
+                let rest = v[k].len();
+                expand_level(
+                    &self.backend,
+                    self.norms[k],
+                    &mut uh[k - 1],
+                    c,
+                    rest,
+                    &v[k],
+                    &ut[0],
+                    fibers.as_mut_slice(),
+                    *max_fiber,
+                    self.algo,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("multilevel MP^[{}] η={}", fmt_norms(&self.norms), self.eta)
+    }
+}
+
+/// Aggregate the leading axis of `src` (`c` slices of `rest`) with `norm`
+/// into `dst`, using f64 accumulators in `acc`. Partition-invariant: each
+/// output element accumulates over `k` in a fixed order, so serial and
+/// pool backends produce bit-identical results.
+fn aggregate_level(
+    backend: &ExecBackend,
+    norm: Norm,
+    src: &[f32],
+    c: usize,
+    rest: usize,
+    acc: &mut [f64],
+    dst: &mut [f32],
+) {
+    let ap = SendPtr(acc.as_mut_ptr());
+    let dp = SendPtr(dst.as_mut_ptr());
+    let (ap, dp) = (&ap, &dp);
+    run_partitioned(backend, rest, move |_, (s, e)| {
+        let a = unsafe { std::slice::from_raw_parts_mut(ap.get().add(s), e - s) };
+        a.fill(0.0);
+        match norm {
+            Norm::Linf => {
+                for k in 0..c {
+                    let seg = &src[k * rest + s..k * rest + e];
+                    for (ai, &y) in a.iter_mut().zip(seg) {
+                        let m = y.abs() as f64;
+                        if m > *ai {
+                            *ai = m;
+                        }
+                    }
+                }
+            }
+            Norm::L1 => {
+                for k in 0..c {
+                    let seg = &src[k * rest + s..k * rest + e];
+                    for (ai, &y) in a.iter_mut().zip(seg) {
+                        *ai += y.abs() as f64;
+                    }
+                }
+            }
+            Norm::L2 => {
+                for k in 0..c {
+                    let seg = &src[k * rest + s..k * rest + e];
+                    for (ai, &y) in a.iter_mut().zip(seg) {
+                        *ai += (y as f64) * (y as f64);
+                    }
+                }
+                for ai in a.iter_mut() {
+                    *ai = ai.sqrt();
+                }
+            }
+        }
+        let d = unsafe { std::slice::from_raw_parts_mut(dp.get().add(s), e - s) };
+        for (di, &ai) in d.iter_mut().zip(a.iter()) {
+            *di = ai as f32;
+        }
+    });
+}
+
+/// Project every leading-axis fiber of `tgt` onto the `norm`-ball with
+/// its own radius `un[t]`, given current fiber norms `vn[t]`. ℓ∞ clamps
+/// and ℓ2 scales stream in place; ℓ1 gathers each shrinking fiber into a
+/// per-partition stripe of `fibers`.
+#[allow(clippy::too_many_arguments)]
+fn expand_level(
+    backend: &ExecBackend,
+    norm: Norm,
+    tgt: &mut [f32],
+    c: usize,
+    rest: usize,
+    vn: &[f32],
+    un: &[f32],
+    fibers: &mut [f32],
+    max_fiber: usize,
+    algo: L1Algo,
+) {
+    let tp = SendPtr(tgt.as_mut_ptr());
+    let fp = SendPtr(fibers.as_mut_ptr());
+    let (tp, fp) = (&tp, &fp);
+    run_partitioned(backend, rest, move |part, (s, e)| {
+        let ptr = tp.get();
+        match norm {
+            Norm::Linf => {
+                for k in 0..c {
+                    for t in s..e {
+                        let ut = un[t];
+                        if ut < vn[t] {
+                            unsafe {
+                                let p = ptr.add(k * rest + t);
+                                *p = (*p).clamp(-ut, ut);
+                            }
+                        }
+                    }
+                }
+            }
+            Norm::L2 => {
+                for k in 0..c {
+                    for t in s..e {
+                        let (ut, vt) = (un[t], vn[t]);
+                        let f = if vt > ut {
+                            if vt > 0.0 {
+                                ut / vt
+                            } else {
+                                0.0
+                            }
+                        } else {
+                            1.0
+                        };
+                        unsafe {
+                            *ptr.add(k * rest + t) *= f;
+                        }
+                    }
+                }
+            }
+            Norm::L1 => {
+                // SAFETY: stripe `part` of `fibers` is touched only by
+                // this partition (disjoint `part` indices).
+                let fiber = unsafe {
+                    std::slice::from_raw_parts_mut(fp.get().add(part * max_fiber), c)
+                };
+                for t in s..e {
+                    if un[t] >= vn[t] {
+                        continue;
+                    }
+                    for (k, fv) in fiber.iter_mut().enumerate() {
+                        unsafe {
+                            *fv = *ptr.add(k * rest + t);
+                        }
+                    }
+                    l1::project_l1_inplace_with(fiber, un[t].max(0.0) as f64, algo);
+                    for (k, fv) in fiber.iter().enumerate() {
+                        unsafe {
+                            *ptr.add(k * rest + t) = *fv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Exact Euclidean ℓ_{1,∞} baseline (Newton or sort-scan). Copies through
+/// a [`Matrix`] because the exact solvers are out-of-place; these are
+/// comparison baselines, not hot paths.
+struct ExactL1InfKernel {
+    rows: usize,
+    cols: usize,
+    eta: f64,
+    newton: bool,
+}
+
+impl Projector for ExactL1InfKernel {
+    fn project_inplace(&self, data: &mut [f32], _ws: &mut Workspace) -> Result<()> {
+        let y = Matrix::from_col_major(self.rows, self.cols, data.to_vec())?;
+        let x = if self.newton {
+            l1inf_exact::project_l1inf_newton(&y, self.eta)
+        } else {
+            l1inf_exact::project_l1inf_sortscan(&y, self.eta)
+        };
+        data.copy_from_slice(x.data());
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "exact P^{{1,∞}} ({}) η={}",
+            if self.newton { "newton" } else { "sort-scan" },
+            self.eta
+        )
+    }
+}
+
+/// Exact ℓ_{1,1}: one flattened-ℓ1 projection (the paper's unstructured
+/// comparator).
+struct ExactFlatL1Kernel {
+    eta: f64,
+    algo: L1Algo,
+}
+
+impl Projector for ExactFlatL1Kernel {
+    fn project_inplace(&self, data: &mut [f32], _ws: &mut Workspace) -> Result<()> {
+        l1::project_l1_inplace_with(data, self.eta, self.algo);
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("exact P^{{1,1}} (flat ℓ1) η={}", self.eta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn spec_builders_set_norm_lists() {
+        assert_eq!(ProjectionSpec::l1inf(1.0).norms, vec![Norm::Linf, Norm::L1]);
+        assert_eq!(
+            ProjectionSpec::bilevel(Norm::L1, Norm::L2, 1.0).norms,
+            vec![Norm::L2, Norm::L1]
+        );
+        assert_eq!(
+            ProjectionSpec::trilevel_l1infinf(1.0).norms,
+            vec![Norm::Linf, Norm::Linf, Norm::L1]
+        );
+        assert_eq!(ProjectionSpec::flat(Norm::L2, 1.0).norms, vec![Norm::L2]);
+    }
+
+    #[test]
+    fn flat_plan_matches_direct_projection() {
+        let mut rng = Rng::new(1);
+        let mut data = vec![0.0f32; 40];
+        rng.fill_uniform(&mut data, -3.0, 3.0);
+        let t = Tensor::from_vec(vec![40], data.clone()).unwrap();
+        let x = ProjectionSpec::flat(Norm::L1, 2.0).project_tensor(&t).unwrap();
+        l1::project_l1_inplace(&mut data, 2.0);
+        assert_eq!(x.data(), &data[..]);
+    }
+
+    #[test]
+    fn plan_rejects_shape_drift() {
+        let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(3, 4).unwrap();
+        let mut wrong = Matrix::zeros(4, 3);
+        assert!(plan.project_matrix_inplace(&mut wrong).is_err());
+        let mut flat = vec![0.0f32; 11];
+        assert!(plan.project_inplace(&mut flat).is_err());
+        // Layout confusion is rejected, not silently misinterpreted.
+        let mut t = Tensor::zeros(&[3, 4]);
+        assert!(plan.project_tensor_inplace(&mut t).is_err());
+    }
+
+    #[test]
+    fn describe_names_kernel_and_backend() {
+        let plan = ProjectionSpec::l1inf(1.5).compile_for_matrix(3, 4).unwrap();
+        let d = plan.describe();
+        assert!(d.contains("bilevel"), "{d}");
+        assert!(d.contains("serial"), "{d}");
+        let plan = ProjectionSpec::trilevel_l1infinf(1.0)
+            .with_backend(ExecBackend::pool(2))
+            .compile(&[2, 3, 4])
+            .unwrap();
+        let d = plan.describe();
+        assert!(d.contains("multilevel"), "{d}");
+        assert!(d.contains("pool(2)"), "{d}");
+    }
+
+    #[test]
+    fn multilevel_workspace_is_preallocated() {
+        // ν = [Linf, Linf, L1]: no ℓ1 *expansion* level, so no fiber
+        // stripes — V + U per level (30 + 6 elements each) and the f64
+        // accumulator (30).
+        let plan = ProjectionSpec::trilevel_l1infinf(1.0).compile(&[4, 5, 6]).unwrap();
+        let expect = 2 * (30 + 6) * std::mem::size_of::<f32>() + 30 * std::mem::size_of::<f64>();
+        assert_eq!(plan.workspace_bytes(), expect);
+        // ν = [L1, L1, L1] expands ℓ1 fibers: one serial stripe of the
+        // max leading dim (5).
+        let plan = ProjectionSpec::new(vec![Norm::L1, Norm::L1, Norm::L1], 1.0)
+            .compile(&[4, 5, 6])
+            .unwrap();
+        let expect =
+            (2 * (30 + 6) + 5) * std::mem::size_of::<f32>() + 30 * std::mem::size_of::<f64>();
+        assert_eq!(plan.workspace_bytes(), expect);
+    }
+
+    #[test]
+    fn parse_and_format_norms_roundtrip() {
+        let norms = parse_norms("linf,linf,l1").unwrap();
+        assert_eq!(fmt_norms(&norms), "linf,linf,l1");
+        assert!(parse_norms("").is_err());
+        assert!(parse_norms("l1,,l2").is_err());
+    }
+
+    #[test]
+    fn backend_labels() {
+        assert_eq!(ExecBackend::Serial.label(), "serial");
+        assert_eq!(ExecBackend::pool(3).label(), "pool(3)");
+    }
+}

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::core::error::{MlprojError, Result};
+use crate::runtime::xla;
 
 /// Parsed `manifest.txt` (key=value lines, written by aot.py).
 #[derive(Debug, Clone)]

@@ -6,6 +6,7 @@
 
 use crate::core::error::{MlprojError, Result};
 use crate::core::matrix::Matrix;
+use crate::runtime::xla;
 
 /// A host-side f32 array with shape, converted to/from `xla::Literal`.
 #[derive(Debug, Clone, PartialEq)]

@@ -5,9 +5,22 @@
 //! `client.compile` → `execute`. HLO *text* is the interchange format
 //! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the text
 //! parser reassigns instruction ids).
+//!
+//! The native binding is feature-gated: without `--features pjrt` the
+//! in-crate [`xla_stub`] provides the same API (host-side literals work;
+//! client creation reports "runtime unavailable"), keeping the whole
+//! crate buildable and testable offline.
 
 pub mod artifact;
 pub mod literal;
+
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use xla_stub as xla;
+
+#[cfg(feature = "pjrt")]
+pub use ::xla;
 
 pub use artifact::{compile_hlo_file, ArtifactStore, Manifest};
 pub use literal::HostArray;
