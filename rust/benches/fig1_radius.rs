@@ -48,7 +48,7 @@ fn main() {
     rep.series.push(bilevel);
     rep.series.push(newton);
     rep.series.push(sortscan);
-    rep.emit("fig1_radius.csv");
+    mlproj::bench::exit_on_emit_error(rep.emit("fig1_radius.csv"));
 
     // Paper's headline: >= 2.5x over the fastest exact method at every radius.
     let min_speedup = rep.series[1]

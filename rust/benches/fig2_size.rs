@@ -43,7 +43,7 @@ fn main() {
     );
     rep.series.push(bilevel);
     rep.series.push(newton);
-    rep.emit("fig2_size.csv");
+    mlproj::bench::exit_on_emit_error(rep.emit("fig2_size.csv"));
 
     let speedups: Vec<String> = rep.series[1]
         .points

@@ -43,7 +43,7 @@ fn main() {
     );
     rep.series.push(s_inf);
     rep.series.push(s_111);
-    rep.emit("fig3_trilevel.csv");
+    mlproj::bench::exit_on_emit_error(rep.emit("fig3_trilevel.csv"));
 
     // Linearity check: time(m=max) / time(m=min) vs size ratio.
     for s in &rep.series {

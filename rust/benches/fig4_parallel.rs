@@ -145,7 +145,7 @@ fn main() {
     );
     rep.series.extend(measured);
     rep.series.extend(modeled);
-    rep.emit("fig4_parallel.csv");
+    mlproj::bench::exit_on_emit_error(rep.emit("fig4_parallel.csv"));
     println!(
         "NOTE: this host has {} CPU(s); measured gain is bounded by that.\n\
          The model column is the Prop. 6.4 critical path from measured stage times.",

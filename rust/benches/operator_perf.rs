@@ -109,5 +109,5 @@ fn main() {
         ns_per_op: meas.median.as_nanos() as f64,
     });
 
-    emit_json("BENCH_operator.json", &records);
+    mlproj::bench::exit_on_emit_error(emit_json("BENCH_operator.json", &records));
 }

@@ -87,7 +87,7 @@ fn main() {
         rep.series.push(series);
     }
 
-    rep.emit("table1_complexity.csv");
+    mlproj::bench::exit_on_emit_error(rep.emit("table1_complexity.csv"));
     println!("\nmethod                  theory          fitted log-log slope (vs nm)");
     for (name, theory, slope) in slopes {
         println!("{name:22}  {theory:14}  {slope:.3}");

@@ -196,16 +196,29 @@ impl Report {
     }
 
     /// Write the CSV under `target/bench_out/<file>` and print the table.
-    pub fn emit(&self, file: &str) {
+    /// I/O failures propagate — a bench whose artifact cannot be written
+    /// must fail loudly, not pretend it archived results.
+    pub fn emit(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
         println!("{}", self.to_table());
-        let dir = std::path::Path::new("target/bench_out");
-        if std::fs::create_dir_all(dir).is_ok() {
-            let path = dir.join(file);
-            if std::fs::write(&path, self.to_csv()).is_ok() {
-                println!("csv -> {}", path.display());
-            }
-        }
+        let path = write_bench_out(std::path::Path::new(BENCH_OUT_DIR), file, &self.to_csv())?;
+        println!("csv -> {}", path.display());
+        Ok(path)
     }
+}
+
+/// Directory all bench artifacts land in.
+pub const BENCH_OUT_DIR: &str = "target/bench_out";
+
+/// Create `dir` and write `contents` to `dir/file`, returning the path.
+fn write_bench_out(
+    dir: &std::path::Path,
+    file: &str,
+    contents: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(file);
+    std::fs::write(&path, contents)?;
+    Ok(path)
 }
 
 /// One machine-readable operator benchmark record. Serialized into
@@ -256,12 +269,45 @@ pub fn records_to_json(records: &[OpRecord]) -> String {
 }
 
 /// Write records under `target/bench_out/<file>` and report the path.
-pub fn emit_json(file: &str, records: &[OpRecord]) {
-    let dir = std::path::Path::new("target/bench_out");
-    if std::fs::create_dir_all(dir).is_ok() {
-        let path = dir.join(file);
-        if std::fs::write(&path, records_to_json(records)).is_ok() {
-            println!("json -> {}", path.display());
+/// I/O failures propagate instead of being swallowed.
+pub fn emit_json(file: &str, records: &[OpRecord]) -> std::io::Result<std::path::PathBuf> {
+    let path =
+        write_bench_out(std::path::Path::new(BENCH_OUT_DIR), file, &records_to_json(records))?;
+    println!("json -> {}", path.display());
+    Ok(path)
+}
+
+/// Serialize scalar metrics as a flat JSON object (`{"p50_ms": 1.25, …}`).
+/// Non-finite values serialize as `null` to keep the output valid JSON.
+pub fn kv_to_json(pairs: &[(&str, f64)]) -> String {
+    let mut out = String::from("{\n");
+    for (i, (name, value)) in pairs.iter().enumerate() {
+        let v = if value.is_finite() { format!("{value}") } else { "null".into() };
+        out.push_str(&format!(
+            "  \"{}\": {v}{}\n",
+            json_escape(name),
+            if i + 1 < pairs.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write scalar metrics as JSON under `target/bench_out/<file>` (the
+/// emitter behind `mlproj loadgen`'s `BENCH_serve.json`).
+pub fn emit_json_kv(file: &str, pairs: &[(&str, f64)]) -> std::io::Result<std::path::PathBuf> {
+    write_bench_out(std::path::Path::new(BENCH_OUT_DIR), file, &kv_to_json(pairs))
+}
+
+/// Unwrap an emit result in a bench `main` (which has no `Result`
+/// plumbing): on failure, print the error to stderr and exit non-zero —
+/// a bench whose artifact was not written must not look green.
+pub fn exit_on_emit_error<T>(res: std::io::Result<T>) -> T {
+    match res {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench emit failed: {e}");
+            std::process::exit(1);
         }
     }
 }
@@ -340,5 +386,41 @@ mod tests {
     #[test]
     fn json_escaping() {
         assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn kv_json_is_flat_object() {
+        let json = kv_to_json(&[
+            ("throughput_rps", 1234.5),
+            ("p50_ms", 0.75),
+            ("bad", f64::NAN),
+        ]);
+        assert!(json.starts_with("{\n"));
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.contains("\"throughput_rps\": 1234.5"));
+        assert!(json.contains("\"p50_ms\": 0.75"));
+        assert!(json.contains("\"bad\": null"));
+        // exactly two comma separators for three pairs
+        assert_eq!(json.matches(",\n").count(), 2);
+        assert_eq!(kv_to_json(&[]), "{\n}\n");
+    }
+
+    #[test]
+    fn write_bench_out_propagates_io_failure() {
+        // A *file* used as the output directory makes create_dir_all fail
+        // deterministically — the error must surface, not vanish.
+        let tmp = std::env::temp_dir().join("mlproj_harness_not_a_dir");
+        std::fs::write(&tmp, b"occupied").unwrap();
+        let err = write_bench_out(&tmp, "out.json", "{}").unwrap_err();
+        assert!(err.kind() != std::io::ErrorKind::NotFound, "{err:?}");
+        let _ = std::fs::remove_file(&tmp);
+    }
+
+    #[test]
+    fn write_bench_out_returns_written_path() {
+        let dir = std::env::temp_dir().join("mlproj_harness_out_test");
+        let path = write_bench_out(&dir, "series.csv", "x,y\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x,y\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

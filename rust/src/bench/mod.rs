@@ -3,5 +3,6 @@
 pub mod harness;
 
 pub use harness::{
-    black_box, emit_json, records_to_json, Bencher, Measurement, OpRecord, Report, Series,
+    black_box, emit_json, emit_json_kv, exit_on_emit_error, kv_to_json, records_to_json, Bencher,
+    Measurement, OpRecord, Report, Series,
 };

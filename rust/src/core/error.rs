@@ -36,6 +36,14 @@ pub enum MlprojError {
     /// PJRT runtime error (artifact loading, compilation, execution).
     Runtime(String),
 
+    /// Malformed or unsupported service wire frame (bad magic, version,
+    /// truncated body, unknown enum byte, …).
+    Protocol(String),
+
+    /// The projection service rejected a request because its job queue is
+    /// at capacity (backpressure; retry later).
+    ServiceBusy,
+
     /// Underlying IO error.
     Io(std::io::Error),
 }
@@ -55,6 +63,10 @@ impl std::fmt::Display for MlprojError {
             MlprojError::Config(msg) => write!(f, "config error: {msg}"),
             MlprojError::Data(msg) => write!(f, "data error: {msg}"),
             MlprojError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            MlprojError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            MlprojError::ServiceBusy => {
+                write!(f, "service busy: job queue at capacity, retry later")
+            }
             MlprojError::Io(e) => write!(f, "{e}"),
         }
     }
@@ -112,6 +124,14 @@ mod tests {
         let s = format!("{e}");
         assert!(s.contains("2 entries"));
         assert!(s.contains("3 axes"));
+    }
+
+    #[test]
+    fn display_service_variants() {
+        let e = MlprojError::Protocol("bad magic".into());
+        assert_eq!(format!("{e}"), "protocol error: bad magic");
+        let e = MlprojError::ServiceBusy;
+        assert!(format!("{e}").contains("busy"));
     }
 
     #[test]

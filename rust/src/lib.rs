@@ -14,6 +14,8 @@
 //! * [`data`] — synthetic `make_classification` and simulated LUNG cohorts.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX model.
 //! * [`coordinator`] — the SAE double-descent trainer and experiment sweeps.
+//! * [`service`] — the batched projection service (`mlproj serve`): wire
+//!   protocol, sharded plan cache, bounded scheduler, server + client.
 //! * [`bench`] — timing harness used by all paper-figure benches.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
@@ -26,6 +28,7 @@ pub mod data;
 pub mod parallel;
 pub mod projection;
 pub mod runtime;
+pub mod service;
 
 pub use crate::core::{Matrix, MlprojError, Result, Rng, Tensor};
 

@@ -4,49 +4,78 @@
 //!   train   — one SAE double-descent experiment (config file + overrides)
 //!   sweep   — a paper preset (table2..table5, fig5_synthetic, fig5_lung)
 //!   project — project a random matrix, compare methods (quick demo)
+//!   serve   — run the batched projection service on a TCP address
+//!   client  — talk to a running service (project | ping | stats | shutdown)
+//!   loadgen — drive a service concurrently and emit BENCH_serve.json
 //!   datagen — emit a dataset as CSV
-//!   info    — artifact/platform diagnostics
+//!   info    — artifact/platform diagnostics (+ live service stats)
 //!
-//! clap is not in the offline crate set; arguments are `--key value` pairs
-//! parsed by [`Args`].
+//! clap is not in the offline crate set; arguments are `--key value` /
+//! `--key=value` pairs parsed by [`Args`] against a per-command allow
+//! list — unknown flags and unparseable values are errors, not no-ops.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
+use mlproj::bench::harness;
 use mlproj::coordinator::{report, sweeps, TrainConfig, Trainer};
-use mlproj::core::error::Result;
+use mlproj::core::error::{MlprojError, Result};
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
 use mlproj::data::{csv, make_classification, make_lung, LungSpec, SyntheticSpec};
 use mlproj::projection::l1::L1Algo;
 use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
 use mlproj::projection::{norms, Norm, ProjectionSpec};
+use mlproj::service::{Client, SchedulerConfig, Server};
 
-/// Minimal `--key value` argument parser.
+/// Minimal strict `--key value` argument parser.
+///
+/// Rules (also documented in `USAGE`):
+/// * flags are `--key value` or `--key=value`;
+/// * a flag followed by another `--flag` (or by nothing) is boolean and
+///   stores `"true"` — a value that itself starts with `--` must use the
+///   `--key=value` form;
+/// * flags not in the command's allow list, duplicated flags, positional
+///   arguments and unparseable numeric values are all hard errors.
 struct Args {
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Self {
+    fn parse(argv: &[String], allowed: &[&str]) -> Result<Self> {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.insert(key.to_string(), "true".to_string());
-                    i += 1;
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(MlprojError::invalid(format!(
+                    "unexpected positional argument `{a}` \
+                     (flags are --key value or --key=value)"
+                )));
+            };
+            let (key, value, consumed) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), v.to_string(), 1),
+                None => {
+                    if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                        (stripped.to_string(), argv[i + 1].clone(), 2)
+                    } else {
+                        (stripped.to_string(), "true".to_string(), 1)
+                    }
                 }
-            } else {
-                i += 1;
+            };
+            if !allowed.contains(&key.as_str()) {
+                return Err(MlprojError::invalid(format!(
+                    "unknown flag `--{key}` for this command (expected one of: {})",
+                    allowed.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(", ")
+                )));
             }
+            if flags.insert(key.clone(), value).is_some() {
+                return Err(MlprojError::invalid(format!("flag `--{key}` given more than once")));
+            }
+            i += consumed;
         }
-        Args { flags }
+        Ok(Args { flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -57,14 +86,42 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--key` as usize, defaulting when absent; a present but
+    /// unparseable value is an error (never a silent default).
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                MlprojError::invalid(format!("--{key} expects an unsigned integer, got `{v}`"))
+            }),
+        }
     }
 
-    fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--key` as f64, defaulting when absent; a present but
+    /// unparseable value is an error (never a silent default).
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                MlprojError::invalid(format!("--{key} expects a number, got `{v}`"))
+            }),
+        }
     }
 }
+
+const TRAIN_FLAGS: &[&str] = &[
+    "config", "dataset", "projection", "eta", "epochs1", "epochs2", "lr", "alpha", "test_frac",
+    "seed", "repeats", "workers", "artifact_dir", "project_every", "verbose",
+];
+const SWEEP_FLAGS: &[&str] = &["preset", "repeats", "out"];
+const PROJECT_FLAGS: &[&str] = &["n", "m", "eta", "workers", "norms", "l1algo", "seed"];
+const DATAGEN_FLAGS: &[&str] = &["dataset", "out"];
+const INFO_FLAGS: &[&str] = &["dataset", "addr"];
+const SERVE_FLAGS: &[&str] =
+    &["addr", "workers", "queue-depth", "batch-max", "cache-cap", "exec-workers"];
+const CLIENT_FLAGS: &[&str] = &["addr", "n", "m", "eta", "norms", "l1algo", "seed"];
+const LOADGEN_FLAGS: &[&str] =
+    &["addr", "clients", "requests", "n", "m", "eta", "norms", "l1algo", "seed"];
 
 const USAGE: &str = "\
 mlproj — multi-level projection reproduction (Perez & Barlaud 2024)
@@ -76,8 +133,20 @@ USAGE:
                presets: table2 table3 table4 table5 fig5_synthetic fig5_lung
   mlproj project [--n N] [--m M] [--eta F] [--workers W] [--norms linf,l1]
                  [--l1algo condat|sort|michelot] [--seed S]
+  mlproj serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
+               [--batch-max N] [--cache-cap N] [--exec-workers N]
+  mlproj client project|ping|stats|shutdown --addr HOST:PORT
+               [--n N] [--m M] [--eta F] [--norms L] [--l1algo A] [--seed S]
+  mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
+                 [--n N] [--m M] [--eta F] [--norms L] [--seed S]
   mlproj datagen --dataset synthetic|lung --out DIR
-  mlproj info [--dataset synthetic|lung]
+  mlproj info [--dataset synthetic|lung] [--addr HOST:PORT]
+
+FLAGS:
+  Flags are `--key value` or `--key=value`. A flag followed by another
+  `--flag` (or by nothing) is boolean and stores \"true\"; a value that
+  itself starts with `--` must use the `--key=value` form. Unknown flags,
+  duplicate flags and unparseable numeric values are errors.
 ";
 
 fn main() {
@@ -97,13 +166,16 @@ fn run(argv: &[String]) -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..]);
+    let rest = &argv[1..];
     match cmd.as_str() {
-        "train" => cmd_train(&args),
-        "sweep" => cmd_sweep(&args),
-        "project" => cmd_project(&args),
-        "datagen" => cmd_datagen(&args),
-        "info" => cmd_info(&args),
+        "train" => cmd_train(&Args::parse(rest, TRAIN_FLAGS)?),
+        "sweep" => cmd_sweep(&Args::parse(rest, SWEEP_FLAGS)?),
+        "project" => cmd_project(&Args::parse(rest, PROJECT_FLAGS)?),
+        "serve" => cmd_serve(&Args::parse(rest, SERVE_FLAGS)?),
+        "client" => cmd_client(rest),
+        "loadgen" => cmd_loadgen(&Args::parse(rest, LOADGEN_FLAGS)?),
+        "datagen" => cmd_datagen(&Args::parse(rest, DATAGEN_FLAGS)?),
+        "info" => cmd_info(&Args::parse(rest, INFO_FLAGS)?),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -112,6 +184,17 @@ fn run(argv: &[String]) -> Result<()> {
             eprintln!("unknown command `{other}`\n{USAGE}");
             std::process::exit(2);
         }
+    }
+}
+
+fn parse_l1_algo(s: &str) -> Result<L1Algo> {
+    match s {
+        "condat" => Ok(L1Algo::Condat),
+        "sort" => Ok(L1Algo::Sort),
+        "michelot" => Ok(L1Algo::Michelot),
+        other => Err(MlprojError::invalid(format!(
+            "unknown --l1algo `{other}` (condat | sort | michelot)"
+        ))),
     }
 }
 
@@ -162,7 +245,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let name = args.get("preset").unwrap_or("table2");
-    let repeats = args.usize_or("repeats", 3);
+    let repeats = args.usize_or("repeats", 3)?;
     let preset = sweeps::preset(name, repeats)?;
     eprintln!("sweep `{}`: {} runs x {repeats} repeats", preset.name, preset.configs.len());
     let mut aggs = Vec::new();
@@ -200,23 +283,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_project(args: &Args) -> Result<()> {
-    let n = args.usize_or("n", 1000);
-    let m = args.usize_or("m", 10000);
-    let eta = args.f64_or("eta", 1.0);
-    let workers = args.usize_or("workers", mlproj::parallel::default_workers());
+    let n = args.usize_or("n", 1000)?;
+    let m = args.usize_or("m", 10000)?;
+    let eta = args.f64_or("eta", 1.0)?;
+    let workers = args.usize_or("workers", mlproj::parallel::default_workers())?;
     // Bad --norms values surface as a clean CLI error (no panic).
     let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
-    let algo = match args.get_or("l1algo", "condat") {
-        "condat" => L1Algo::Condat,
-        "sort" => L1Algo::Sort,
-        "michelot" => L1Algo::Michelot,
-        other => {
-            return Err(mlproj::core::error::MlprojError::invalid(format!(
-                "unknown --l1algo `{other}` (condat | sort | michelot)"
-            )))
-        }
-    };
-    let mut rng = Rng::new(args.usize_or("seed", 0) as u64);
+    let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
+    let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
     let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
     let norm_before = match norm_list.as_slice() {
         [q] => q.eval(y.data()),
@@ -281,6 +355,224 @@ fn cmd_project(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Service verbs
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let cfg = SchedulerConfig {
+        workers: args.usize_or("workers", mlproj::parallel::default_workers().min(8))?,
+        queue_depth: args.usize_or("queue-depth", 64)?,
+        batch_max: args.usize_or("batch-max", 8)?,
+        cache_cap: args.usize_or("cache-cap", 32)?,
+        exec_workers: args.usize_or("exec-workers", 0)?,
+    };
+    let server = Server::bind(addr, &cfg)?;
+    eprintln!(
+        "mlproj serve: listening on {} \
+         (workers {}, queue depth {}, batch max {}, cache {}/shard, exec workers {})",
+        server.local_addr(),
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.batch_max,
+        cfg.cache_cap,
+        cfg.exec_workers
+    );
+    server.run()
+}
+
+/// Shared --addr handling for the client-side verbs.
+fn connect_arg(args: &Args) -> Result<Client> {
+    let Some(addr) = args.get("addr") else {
+        return Err(MlprojError::invalid("--addr HOST:PORT is required"));
+    };
+    Client::connect(addr)
+}
+
+fn print_stats(pairs: &[(String, u64)]) {
+    let width = pairs.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, value) in pairs {
+        println!("{name:width$}  {value}");
+    }
+}
+
+fn cmd_client(rest: &[String]) -> Result<()> {
+    let Some(action) = rest.first() else {
+        return Err(MlprojError::invalid(
+            "client needs an action: project | ping | stats | shutdown",
+        ));
+    };
+    let args = Args::parse(&rest[1..], CLIENT_FLAGS)?;
+    let mut client = connect_arg(&args)?;
+    match action.as_str() {
+        "ping" => {
+            let t0 = Instant::now();
+            client.ping()?;
+            println!("pong in {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
+            Ok(())
+        }
+        "stats" => {
+            print_stats(&client.stats()?);
+            Ok(())
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("server acknowledged shutdown");
+            Ok(())
+        }
+        "project" => {
+            let n = args.usize_or("n", 256)?;
+            let m = args.usize_or("m", 1024)?;
+            let eta = args.f64_or("eta", 1.0)?;
+            let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
+            let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
+            let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
+            let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+            let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+
+            let t0 = Instant::now();
+            let remote = client.project_matrix(&spec, &y)?;
+            let t_remote = t0.elapsed();
+            let local = spec.project_matrix(&y)?;
+            println!(
+                "remote: {n}x{m} in {:.3} ms  zero-cols {}  bit-identical to local: {}",
+                t_remote.as_secs_f64() * 1e3,
+                remote.zero_cols(),
+                remote.data() == local.data()
+            );
+            Ok(())
+        }
+        other => Err(MlprojError::invalid(format!(
+            "unknown client action `{other}` (project | ping | stats | shutdown)"
+        ))),
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted nanosecond series, ms.
+fn percentile_ms(sorted_ns: &[u64], p: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted_ns.len() as f64).ceil() as usize;
+    let idx = rank.clamp(1, sorted_ns.len()) - 1;
+    sorted_ns[idx] as f64 / 1e6
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        return Err(MlprojError::invalid("--addr HOST:PORT is required"));
+    };
+    let addr = addr.to_string();
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 100)?.max(1);
+    let n = args.usize_or("n", 256)?;
+    let m = args.usize_or("m", 1024)?;
+    let eta = args.f64_or("eta", 1.0)?;
+    let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
+    let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+
+    eprintln!(
+        "loadgen: {clients} clients x {requests} requests of {n}x{m} \
+         (norms {}, η={eta}) against {addr}",
+        mlproj::projection::operator::fmt_norms(&spec.norms)
+    );
+
+    // Snapshot server counters up front so the report reflects *this*
+    // run — a long-lived server carries counts from earlier traffic.
+    let mut stat_client = Client::connect(addr.as_str())?;
+    let before = stat_client.stats()?;
+
+    let t_wall = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
+            let mut client = Client::connect(addr.as_str())?;
+            let mut rng = Rng::new(seed + c as u64 + 1);
+            let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+            let mut latencies_ns = Vec::with_capacity(requests);
+            let mut busy_retries = 0u64;
+            for _ in 0..requests {
+                let t0 = Instant::now();
+                loop {
+                    match client.project_matrix(&spec, &y) {
+                        Ok(_) => break,
+                        Err(MlprojError::ServiceBusy) => {
+                            busy_retries += 1;
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                latencies_ns.push(t0.elapsed().as_nanos() as u64);
+            }
+            Ok((latencies_ns, busy_retries))
+        }));
+    }
+    let mut latencies = Vec::with_capacity(clients * requests);
+    let mut busy_retries = 0u64;
+    for h in handles {
+        let (lat, busy) = h
+            .join()
+            .map_err(|_| MlprojError::Runtime("loadgen client thread panicked".into()))??;
+        latencies.extend(lat);
+        busy_retries += busy;
+    }
+    let wall_secs = t_wall.elapsed().as_secs_f64();
+
+    latencies.sort_unstable();
+    let total = latencies.len();
+    let throughput = total as f64 / wall_secs;
+    let p50 = percentile_ms(&latencies, 50.0);
+    let p99 = percentile_ms(&latencies, 99.0);
+
+    // Cache behavior from the server's own counters, as a delta over
+    // this run.
+    let after = stat_client.stats()?;
+    let lookup = |pairs: &[(String, u64)], name: &str| {
+        pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+    };
+    let get = |name: &str| lookup(&after, name).saturating_sub(lookup(&before, name));
+    let (hits, misses) = (get("cache_hits"), get("cache_misses"));
+    let hit_rate = if hits + misses > 0 {
+        hits as f64 / (hits + misses) as f64
+    } else {
+        0.0
+    };
+
+    println!(
+        "throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
+         ({total} requests in {wall_secs:.2}s, {busy_retries} busy retries)"
+    );
+    println!(
+        "server cache: {hits} hits / {misses} misses (hit rate {:.1}%), \
+         batches {}, batched requests {}",
+        hit_rate * 100.0,
+        get("batches"),
+        get("batched_requests")
+    );
+
+    let path = harness::emit_json_kv(
+        "BENCH_serve.json",
+        &[
+            ("clients", clients as f64),
+            ("requests_total", total as f64),
+            ("wall_secs", wall_secs),
+            ("throughput_rps", throughput),
+            ("p50_ms", p50),
+            ("p99_ms", p99),
+            ("cache_hit_rate", hit_rate),
+            ("busy_retries", busy_retries as f64),
+        ],
+    )?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
 fn cmd_datagen(args: &Args) -> Result<()> {
     let out = Path::new(args.get_or("out", "target/data"));
     std::fs::create_dir_all(out)?;
@@ -321,5 +613,97 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
         Err(e) => println!("artifacts not available: {e}\n(run `make artifacts`)"),
     }
+    if let Some(addr) = args.get("addr") {
+        println!("service stats ({addr}):");
+        let mut client = Client::connect(addr)?;
+        print_stats(&client.stats()?);
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_flag_is_rejected_with_hint() {
+        // The motivating typo: `--worker 8` used to be silently ignored.
+        let err = Args::parse(&argv(&["--worker", "8"]), PROJECT_FLAGS).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown flag `--worker`"), "{msg}");
+        assert!(msg.contains("--workers"), "should list valid flags: {msg}");
+    }
+
+    #[test]
+    fn positional_arguments_are_rejected() {
+        let err = Args::parse(&argv(&["oops"]), PROJECT_FLAGS).unwrap_err();
+        assert!(format!("{err}").contains("positional"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_flag_is_rejected() {
+        let err = Args::parse(&argv(&["--n", "1", "--n", "2"]), PROJECT_FLAGS).unwrap_err();
+        assert!(format!("{err}").contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn key_value_forms_and_boolean_trailing() {
+        let args =
+            Args::parse(&argv(&["--n=32", "--m", "64", "--l1algo", "sort"]), PROJECT_FLAGS)
+                .unwrap();
+        assert_eq!(args.get("n"), Some("32"));
+        assert_eq!(args.get("m"), Some("64"));
+        assert_eq!(args.get("l1algo"), Some("sort"));
+        // A trailing flag without a value is boolean "true".
+        let args = Args::parse(&argv(&["--verbose"]), TRAIN_FLAGS).unwrap();
+        assert_eq!(args.get("verbose"), Some("true"));
+        // A flag followed by another flag is also boolean "true".
+        let args = Args::parse(&argv(&["--verbose", "--seed", "3"]), TRAIN_FLAGS).unwrap();
+        assert_eq!(args.get("verbose"), Some("true"));
+        assert_eq!(args.get("seed"), Some("3"));
+    }
+
+    #[test]
+    fn values_starting_with_dashes_use_equals_form() {
+        // `--out --weird-file` parses --out as boolean; = form carries it.
+        let args = Args::parse(&argv(&["--out=--weird-file"]), SWEEP_FLAGS).unwrap();
+        assert_eq!(args.get("out"), Some("--weird-file"));
+        let args = Args::parse(&argv(&["--out", "--preset", "table2"]), SWEEP_FLAGS).unwrap();
+        assert_eq!(args.get("out"), Some("true"));
+        assert_eq!(args.get("preset"), Some("table2"));
+    }
+
+    #[test]
+    fn numeric_parsers_error_instead_of_defaulting() {
+        let args = Args::parse(&argv(&["--n", "abc", "--eta", "fast"]), PROJECT_FLAGS).unwrap();
+        let err = args.usize_or("n", 7).unwrap_err();
+        assert!(format!("{err}").contains("--n"), "{err}");
+        let err = args.f64_or("eta", 1.0).unwrap_err();
+        assert!(format!("{err}").contains("--eta"), "{err}");
+        // Absent flags still default.
+        assert_eq!(args.usize_or("m", 7).unwrap(), 7);
+        assert_eq!(args.f64_or("seed", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn l1algo_parsing() {
+        assert_eq!(parse_l1_algo("condat").unwrap(), L1Algo::Condat);
+        assert_eq!(parse_l1_algo("sort").unwrap(), L1Algo::Sort);
+        assert_eq!(parse_l1_algo("michelot").unwrap(), L1Algo::Michelot);
+        assert!(parse_l1_algo("newton").is_err());
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let ns: Vec<u64> = (1..=100).map(|i| i * 1_000_000).collect();
+        assert_eq!(percentile_ms(&ns, 50.0), 50.0);
+        assert_eq!(percentile_ms(&ns, 99.0), 99.0);
+        assert_eq!(percentile_ms(&ns, 100.0), 100.0);
+        assert_eq!(percentile_ms(&[], 50.0), 0.0);
+        assert_eq!(percentile_ms(&[2_000_000], 99.0), 2.0);
+    }
 }

@@ -18,7 +18,7 @@
 use crate::core::sort::{prefix_sums, sort_desc};
 
 /// Which ℓ1 algorithm to use (benches sweep this).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum L1Algo {
     /// Sort + prefix scan.
     Sort,

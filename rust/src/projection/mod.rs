@@ -31,7 +31,7 @@ pub mod operator;
 pub use operator::{ExecBackend, Method, ProjectionPlan, ProjectionSpec, Projector, Workspace};
 
 /// The norms supported at each level of a (bi/multi)-level projection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Norm {
     /// ℓ1 (sum of absolute values).
     L1,

@@ -152,7 +152,7 @@ where
 // ---------------------------------------------------------------------------
 
 /// Which algorithm family realizes the projection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Method {
     /// The paper's compositional bi-/multi-level family (default): fast,
     /// feasible, structured — but not the Euclidean projection.
@@ -395,6 +395,9 @@ pub fn fmt_norms(norms: &[Norm]) -> String {
 
 /// Parse a comma-separated norm list ("linf,l1" → `[Linf, L1]`).
 pub fn parse_norms(s: &str) -> Result<Vec<Norm>> {
+    if s.trim().is_empty() {
+        return Err(MlprojError::invalid("empty norm list (expected e.g. `linf,l1`)"));
+    }
     let mut out = Vec::new();
     for tok in s.split(',') {
         let norm = Norm::parse(tok).ok_or_else(|| {
@@ -404,9 +407,6 @@ pub fn parse_norms(s: &str) -> Result<Vec<Norm>> {
             ))
         })?;
         out.push(norm);
-    }
-    if out.is_empty() {
-        return Err(MlprojError::invalid("empty norm list"));
     }
     Ok(out)
 }
@@ -1017,11 +1017,42 @@ mod tests {
     }
 
     #[test]
-    fn parse_and_format_norms_roundtrip() {
-        let norms = parse_norms("linf,linf,l1").unwrap();
-        assert_eq!(fmt_norms(&norms), "linf,linf,l1");
-        assert!(parse_norms("").is_err());
-        assert!(parse_norms("l1,,l2").is_err());
+    fn parse_and_format_norms_roundtrip_exhaustive() {
+        // Every supported norm list up to the tri-level depth the paper
+        // uses: fmt → parse must be the identity.
+        let all = [Norm::L1, Norm::L2, Norm::Linf];
+        let mut lists: Vec<Vec<Norm>> = all.iter().map(|&a| vec![a]).collect();
+        for &a in &all {
+            for &b in &all {
+                lists.push(vec![a, b]);
+                for &c in &all {
+                    lists.push(vec![a, b, c]);
+                }
+            }
+        }
+        assert_eq!(lists.len(), 3 + 9 + 27);
+        for list in lists {
+            let s = fmt_norms(&list);
+            assert_eq!(parse_norms(&s).unwrap(), list, "roundtrip of `{s}`");
+        }
+        // Whitespace around tokens is tolerated.
+        assert_eq!(parse_norms(" linf , l1 ").unwrap(), vec![Norm::Linf, Norm::L1]);
+    }
+
+    #[test]
+    fn parse_norms_rejection_messages() {
+        // Empty and all-whitespace inputs name the problem…
+        for input in ["", "   "] {
+            let err = parse_norms(input).unwrap_err();
+            assert!(format!("{err}").contains("empty norm list"), "{input:?}: {err}");
+        }
+        // …and malformed tokens echo both the token and the full list.
+        for input in ["l1,,l2", "l3", "linf,l7,l1", "l1;l2"] {
+            let err = parse_norms(input).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("unknown norm"), "{input:?}: {msg}");
+            assert!(msg.contains(input), "message should echo `{input}`: {msg}");
+        }
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Sharded LRU cache of compiled [`ProjectionPlan`]s.
+//!
+//! The whole point of the service is plan reuse: compiling a
+//! `ProjectionSpec` against a shape allocates workspaces and selects a
+//! kernel, and the paper's projections are cheap enough (O(nm)) that
+//! re-doing that per request would dominate. The cache maps
+//! `(spec, shape)` — everything in [`PlanKey`] — to a ready
+//! `ProjectionPlan` whose preallocated workspace
+//! ([`crate::projection::Workspace`]) is reused in place.
+//!
+//! Sharding: each scheduler worker pins itself to one shard, so the hot
+//! path locks an uncontended mutex (effectively lock-free); callers
+//! without a pinned shard hash the key to pick one. Hit/miss/eviction
+//! counts feed the shared [`ServiceStats`].
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use crate::core::error::Result;
+use crate::projection::l1::L1Algo;
+use crate::projection::{ExecBackend, Method, Norm, ProjectionPlan, ProjectionSpec};
+use crate::service::protocol::{ProjectRequest, WireLayout};
+use crate::service::stats::ServiceStats;
+
+/// Cache key: the full projection spec (minus execution backend, which is
+/// server configuration) plus layout and shape. `eta` is keyed by its bit
+/// pattern so the key stays `Eq + Hash`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Norm list `ν`.
+    pub norms: Vec<Norm>,
+    /// `η` as IEEE-754 bits (exact match; no epsilon aliasing).
+    pub eta_bits: u64,
+    /// ℓ1 threshold algorithm.
+    pub l1_algo: L1Algo,
+    /// Algorithm family.
+    pub method: Method,
+    /// Payload layout.
+    pub layout: WireLayout,
+    /// Compiled shape.
+    pub shape: Vec<usize>,
+}
+
+impl PlanKey {
+    /// Key for a wire request.
+    pub fn from_request(req: &ProjectRequest) -> Self {
+        PlanKey {
+            norms: req.norms.clone(),
+            eta_bits: req.eta.to_bits(),
+            l1_algo: req.l1_algo,
+            method: req.method,
+            layout: req.layout,
+            shape: req.shape.clone(),
+        }
+    }
+
+    /// The radius `η` this key encodes.
+    pub fn eta(&self) -> f64 {
+        f64::from_bits(self.eta_bits)
+    }
+
+    /// Compile a fresh plan for this key on the given backend.
+    pub fn compile(&self, backend: &ExecBackend) -> Result<ProjectionPlan> {
+        let spec = ProjectionSpec::new(self.norms.clone(), self.eta())
+            .with_l1_algo(self.l1_algo)
+            .with_method(self.method)
+            .with_backend(backend.clone());
+        match self.layout {
+            WireLayout::Matrix => {
+                if self.shape.len() != 2 {
+                    return Err(crate::core::error::MlprojError::invalid(format!(
+                        "matrix plan key requires a 2-entry shape, got {:?}",
+                        self.shape
+                    )));
+                }
+                spec.compile_for_matrix(self.shape[0], self.shape[1])
+            }
+            WireLayout::Tensor => spec.compile(&self.shape),
+        }
+    }
+}
+
+struct Entry {
+    plan: ProjectionPlan,
+    /// Monotonic last-use stamp (larger = more recent).
+    tick: u64,
+}
+
+/// One LRU shard: a bounded map from [`PlanKey`] to a compiled plan.
+pub struct PlanCache {
+    map: HashMap<PlanKey, Entry>,
+    cap: usize,
+    tick: u64,
+    stats: Arc<ServiceStats>,
+}
+
+impl PlanCache {
+    /// New cache holding at most `cap` plans (min 1).
+    pub fn new(cap: usize, stats: Arc<ServiceStats>) -> Self {
+        PlanCache { map: HashMap::new(), cap: cap.max(1), tick: 0, stats }
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no plans are cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up (or compile and insert) the plan for `key`, bumping its
+    /// recency. Evicts the least-recently-used plan at capacity.
+    pub fn get_or_compile(
+        &mut self,
+        key: &PlanKey,
+        backend: &ExecBackend,
+    ) -> Result<&mut ProjectionPlan> {
+        self.tick += 1;
+        let tick = self.tick;
+        if self.map.contains_key(key) {
+            ServiceStats::bump(&self.stats.cache_hits);
+            let e = self.map.get_mut(key).expect("checked contains_key");
+            e.tick = tick;
+            return Ok(&mut e.plan);
+        }
+        ServiceStats::bump(&self.stats.cache_misses);
+        // Compile *before* evicting: a failed compile must not disturb
+        // the cache.
+        let plan = key.compile(backend)?;
+        if self.map.len() >= self.cap {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+                ServiceStats::bump(&self.stats.cache_evictions);
+            }
+        }
+        let entry = self.map.entry(key.clone()).or_insert(Entry { plan, tick });
+        Ok(&mut entry.plan)
+    }
+}
+
+/// A fixed set of independently locked [`PlanCache`] shards.
+pub struct ShardedPlanCache {
+    shards: Vec<Mutex<PlanCache>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl ShardedPlanCache {
+    /// `shards` shards (min 1), each holding up to `cap_per_shard` plans.
+    pub fn new(shards: usize, cap_per_shard: usize, stats: Arc<ServiceStats>) -> Self {
+        let n = shards.max(1);
+        let shards = (0..n)
+            .map(|_| Mutex::new(PlanCache::new(cap_per_shard, Arc::clone(&stats))))
+            .collect();
+        ShardedPlanCache { shards, stats }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shared counter block.
+    pub fn stats(&self) -> &Arc<ServiceStats> {
+        &self.stats
+    }
+
+    /// Hash-based shard index for callers without a pinned shard.
+    pub fn shard_for(&self, key: &PlanKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Run `f` with the plan for `key` resident in shard
+    /// `shard_hint % shards` (workers pass their own index so the lock is
+    /// uncontended), or the key's hash shard when `None`.
+    pub fn with_plan<R>(
+        &self,
+        shard_hint: Option<usize>,
+        key: &PlanKey,
+        backend: &ExecBackend,
+        f: impl FnOnce(&mut ProjectionPlan) -> R,
+    ) -> Result<R> {
+        let idx = match shard_hint {
+            Some(i) => i % self.shards.len(),
+            None => self.shard_for(key),
+        };
+        let mut shard = self.shards[idx].lock().expect("plan-cache shard poisoned");
+        let plan = shard.get_or_compile(key, backend)?;
+        Ok(f(plan))
+    }
+
+    /// Total cached plans across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("plan-cache shard poisoned").len()).sum()
+    }
+
+    /// True when every shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn key(shape: Vec<usize>, eta: f64) -> PlanKey {
+        PlanKey {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta_bits: eta.to_bits(),
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape,
+        }
+    }
+
+    #[test]
+    fn hit_miss_counters_and_reuse() {
+        let stats = Arc::new(ServiceStats::new());
+        let mut cache = PlanCache::new(4, Arc::clone(&stats));
+        let k = key(vec![3, 5], 1.0);
+        cache.get_or_compile(&k, &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&k, &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&k, &ExecBackend::Serial).unwrap();
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_eta_or_shape_is_a_distinct_plan() {
+        let stats = Arc::new(ServiceStats::new());
+        let mut cache = PlanCache::new(8, Arc::clone(&stats));
+        cache.get_or_compile(&key(vec![3, 5], 1.0), &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&key(vec![3, 5], 2.0), &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&key(vec![3, 6], 1.0), &ExecBackend::Serial).unwrap();
+        assert_eq!(cache.len(), 3);
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let stats = Arc::new(ServiceStats::new());
+        let mut cache = PlanCache::new(2, Arc::clone(&stats));
+        let (a, b, c) = (key(vec![2, 2], 1.0), key(vec![2, 3], 1.0), key(vec![2, 4], 1.0));
+        cache.get_or_compile(&a, &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&b, &ExecBackend::Serial).unwrap();
+        // Touch `a` so `b` becomes the LRU victim.
+        cache.get_or_compile(&a, &ExecBackend::Serial).unwrap();
+        cache.get_or_compile(&c, &ExecBackend::Serial).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(stats.cache_evictions.load(Ordering::Relaxed), 1);
+        // `a` survives (hit), `b` was evicted (miss on re-fetch).
+        let hits_before = stats.cache_hits.load(Ordering::Relaxed);
+        cache.get_or_compile(&a, &ExecBackend::Serial).unwrap();
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), hits_before + 1);
+        let misses_before = stats.cache_misses.load(Ordering::Relaxed);
+        cache.get_or_compile(&b, &ExecBackend::Serial).unwrap();
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), misses_before + 1);
+    }
+
+    #[test]
+    fn failed_compile_does_not_pollute_cache() {
+        let stats = Arc::new(ServiceStats::new());
+        let mut cache = PlanCache::new(2, Arc::clone(&stats));
+        // 3 norms against a rank-2 matrix shape: NormCountMismatch.
+        let bad = PlanKey {
+            norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![3, 5],
+        };
+        assert!(cache.get_or_compile(&bad, &ExecBackend::Serial).is_err());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cached_plan_projects_correctly() {
+        use crate::core::matrix::Matrix;
+        use crate::core::rng::Rng;
+        let stats = Arc::new(ServiceStats::new());
+        let mut cache = PlanCache::new(2, stats);
+        let mut rng = Rng::new(3);
+        let y = Matrix::random_uniform(8, 16, -1.0, 1.0, &mut rng);
+        let k = key(vec![8, 16], 0.7);
+        let expect = ProjectionSpec::l1inf(0.7).project_matrix(&y).unwrap();
+        let mut got = y.clone();
+        cache
+            .get_or_compile(&k, &ExecBackend::Serial)
+            .unwrap()
+            .project_matrix_inplace(&mut got)
+            .unwrap();
+        assert_eq!(got.data(), expect.data());
+        // Second call reuses the workspace and stays bit-identical.
+        let mut again = y.clone();
+        cache
+            .get_or_compile(&k, &ExecBackend::Serial)
+            .unwrap()
+            .project_matrix_inplace(&mut again)
+            .unwrap();
+        assert_eq!(again.data(), expect.data());
+    }
+
+    #[test]
+    fn sharded_cache_concurrent_access() {
+        let stats = Arc::new(ServiceStats::new());
+        let cache = Arc::new(ShardedPlanCache::new(4, 8, stats));
+        assert_eq!(cache.shards(), 4);
+        let mut handles = Vec::new();
+        for w in 0..4usize {
+            let cache = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..10usize {
+                    let k = key(vec![4, 4 + (round % 3)], 1.0);
+                    let n = cache
+                        .with_plan(Some(w), &k, &ExecBackend::Serial, |plan| plan.shape().to_vec())
+                        .unwrap();
+                    assert_eq!(n, vec![4, 4 + (round % 3)]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(!cache.is_empty());
+        assert!(cache.stats().cache_hits.load(Ordering::Relaxed) > 0);
+    }
+}

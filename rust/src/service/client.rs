@@ -1,0 +1,140 @@
+//! Blocking client for the projection service.
+//!
+//! One [`Client`] owns one TCP connection and speaks request/response in
+//! lockstep: write a frame, read a frame. Server-side `Error` frames are
+//! surfaced as the corresponding [`MlprojError`] (`Busy` →
+//! [`MlprojError::ServiceBusy`], and so on), so callers handle remote
+//! failures exactly like local ones.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::core::error::{MlprojError, Result};
+use crate::core::matrix::Matrix;
+use crate::core::tensor::Tensor;
+use crate::projection::ProjectionSpec;
+use crate::service::protocol::{Frame, ProjectRequest, WireLayout};
+
+/// A connected service client.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a running `mlproj serve` instance.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        // Small request/response frames; Nagle only adds latency here.
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream })
+    }
+
+    /// Send one frame and read the reply, unwrapping `Error` frames.
+    fn call(&mut self, frame: &Frame) -> Result<Frame> {
+        frame.write_to(&mut self.stream)?;
+        match Frame::read_from(&mut self.stream)? {
+            Frame::Error { code, msg } => Err(code.into_error(msg)),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Frame::Ping)? {
+            Frame::Pong => Ok(()),
+            other => Err(MlprojError::Protocol(format!("expected Pong, got {other:?}"))),
+        }
+    }
+
+    /// Fetch the server's counter snapshot.
+    pub fn stats(&mut self) -> Result<Vec<(String, u64)>> {
+        match self.call(&Frame::StatsRequest)? {
+            Frame::StatsResponse(pairs) => Ok(pairs),
+            other => Err(MlprojError::Protocol(format!("expected stats, got {other:?}"))),
+        }
+    }
+
+    /// Ask the server to shut down (acknowledged before it stops).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Frame::Shutdown)? {
+            Frame::ShutdownAck => Ok(()),
+            other => Err(MlprojError::Protocol(format!("expected ShutdownAck, got {other:?}"))),
+        }
+    }
+
+    /// Run one projection job remotely; returns the projected payload.
+    pub fn project(&mut self, req: ProjectRequest) -> Result<Vec<f32>> {
+        let sent = req.payload.len();
+        match self.call(&Frame::Project(req))? {
+            Frame::ProjectOk(payload) => {
+                if payload.len() != sent {
+                    return Err(MlprojError::Protocol(format!(
+                        "server returned {} elements for a {sent}-element request",
+                        payload.len()
+                    )));
+                }
+                Ok(payload)
+            }
+            other => Err(MlprojError::Protocol(format!("expected ProjectOk, got {other:?}"))),
+        }
+    }
+
+    /// Project a column-major matrix under `spec` on the server.
+    pub fn project_matrix(&mut self, spec: &ProjectionSpec, y: &Matrix) -> Result<Matrix> {
+        let req = ProjectRequest {
+            norms: spec.norms.clone(),
+            eta: spec.eta,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Matrix,
+            shape: vec![y.rows(), y.cols()],
+            payload: y.data().to_vec(),
+        };
+        Matrix::from_col_major(y.rows(), y.cols(), self.project(req)?)
+    }
+
+    /// Project a row-major tensor under `spec` on the server.
+    pub fn project_tensor(&mut self, spec: &ProjectionSpec, y: &Tensor) -> Result<Tensor> {
+        let req = ProjectRequest {
+            norms: spec.norms.clone(),
+            eta: spec.eta,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Tensor,
+            shape: y.shape().to_vec(),
+            payload: y.data().to_vec(),
+        };
+        Tensor::from_vec(y.shape().to_vec(), self.project(req)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::projection::Norm;
+    use crate::service::scheduler::SchedulerConfig;
+    use crate::service::server::Server;
+
+    #[test]
+    fn client_round_trip_matches_in_process() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.ping().unwrap();
+
+        let mut rng = Rng::new(21);
+        let y = Matrix::random_uniform(12, 40, -2.0, 2.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(1.2);
+        let expect = spec.project_matrix(&y).unwrap();
+        let got = client.project_matrix(&spec, &y).unwrap();
+        assert_eq!(got.data(), expect.data());
+
+        // Remote errors come back typed: bad norm count -> Invalid.
+        let bad = ProjectionSpec::new(vec![Norm::Linf, Norm::Linf, Norm::L1], 1.0);
+        let err = client.project_matrix(&bad, &y).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,34 @@
+//! The projection service: `mlproj serve` and friends.
+//!
+//! The paper's bi-/multi-level projections are O(nm) and embarrassingly
+//! parallel — cheap enough to sit behind a request/response service. The
+//! performance story across requests is *plan reuse*: compiling a
+//! [`ProjectionSpec`](crate::projection::ProjectionSpec) against a shape
+//! picks a kernel and preallocates workspaces, and repeated traffic with
+//! the same `(spec, shape)` should pay for that exactly once.
+//!
+//! * [`protocol`] — versioned, length-prefixed binary frames
+//!   (`Project`, `Ping`, `Stats`, `Shutdown`, …).
+//! * [`cache`] — sharded LRU `(spec, shape) → ProjectionPlan` cache with
+//!   hit/miss/eviction counters.
+//! * [`scheduler`] — bounded MPSC job queue feeding shard-pinned worker
+//!   threads; `Busy` backpressure past the queue depth; same-key
+//!   micro-batching.
+//! * [`server`] / [`client`] — loopback `TcpListener` server and the
+//!   blocking client behind `mlproj serve` / `client` / `loadgen`.
+//! * [`stats`] — atomics-based counters surfaced through the `Stats`
+//!   frame and `mlproj info --addr`.
+
+pub mod cache;
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod stats;
+
+pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
+pub use client::Client;
+pub use protocol::{ErrorCode, Frame, ProjectRequest, WireLayout};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerHandle};
+pub use stats::ServiceStats;

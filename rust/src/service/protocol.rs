@@ -1,0 +1,775 @@
+//! Wire protocol for the projection service: versioned, length-prefixed
+//! binary frames over a byte stream (TCP in practice).
+//!
+//! Every frame is `header ‖ body`:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  = b"MLPJ"
+//!      4     1  version = 1
+//!      5     1  frame type (see `Frame`)
+//!      6     2  reserved = 0
+//!      8     4  body length in bytes (little-endian)
+//!     12     …  body
+//! ```
+//!
+//! All multi-byte integers and floats are little-endian. The body layout
+//! per frame type is documented on [`Frame`]. Decoding is strict: bad
+//! magic, unknown version/type/enum bytes, truncated or oversized bodies
+//! and shape/payload disagreements all surface as
+//! [`MlprojError::Protocol`] — a malformed frame never panics and never
+//! silently truncates.
+
+use std::io::{Read, Write};
+
+use crate::core::error::{MlprojError, Result};
+use crate::projection::l1::L1Algo;
+use crate::projection::operator::fmt_norms;
+use crate::projection::{Method, Norm};
+
+/// Frame magic: identifies an mlproj service stream.
+pub const MAGIC: [u8; 4] = *b"MLPJ";
+
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Header size in bytes (magic + version + type + reserved + body len).
+pub const HEADER_BYTES: usize = 12;
+
+/// Upper bound on a frame body — guards the server against allocating
+/// unbounded memory on a garbage length prefix (256 MiB ≈ a 64M-element
+/// f32 payload, far above any paper workload).
+pub const MAX_BODY_BYTES: usize = 256 << 20;
+
+fn perr(msg: impl Into<String>) -> MlprojError {
+    MlprojError::Protocol(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Enum wire codes
+// ---------------------------------------------------------------------------
+
+/// Data layout of a projection payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireLayout {
+    /// Column-major matrix, shape `[rows, cols]`.
+    Matrix,
+    /// Row-major tensor, one shape entry per axis.
+    Tensor,
+}
+
+impl WireLayout {
+    fn to_u8(self) -> u8 {
+        match self {
+            WireLayout::Matrix => 0,
+            WireLayout::Tensor => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(WireLayout::Matrix),
+            1 => Ok(WireLayout::Tensor),
+            other => Err(perr(format!("unknown layout byte {other}"))),
+        }
+    }
+}
+
+fn norm_to_u8(n: Norm) -> u8 {
+    match n {
+        Norm::L1 => 0,
+        Norm::L2 => 1,
+        Norm::Linf => 2,
+    }
+}
+
+fn norm_from_u8(b: u8) -> Result<Norm> {
+    match b {
+        0 => Ok(Norm::L1),
+        1 => Ok(Norm::L2),
+        2 => Ok(Norm::Linf),
+        other => Err(perr(format!("unknown norm byte {other}"))),
+    }
+}
+
+fn algo_to_u8(a: L1Algo) -> u8 {
+    match a {
+        L1Algo::Condat => 0,
+        L1Algo::Sort => 1,
+        L1Algo::Michelot => 2,
+    }
+}
+
+fn algo_from_u8(b: u8) -> Result<L1Algo> {
+    match b {
+        0 => Ok(L1Algo::Condat),
+        1 => Ok(L1Algo::Sort),
+        2 => Ok(L1Algo::Michelot),
+        other => Err(perr(format!("unknown l1algo byte {other}"))),
+    }
+}
+
+fn method_to_u8(m: Method) -> u8 {
+    match m {
+        Method::Compositional => 0,
+        Method::ExactNewton => 1,
+        Method::ExactSortScan => 2,
+        Method::ExactFlatL1 => 3,
+    }
+}
+
+fn method_from_u8(b: u8) -> Result<Method> {
+    match b {
+        0 => Ok(Method::Compositional),
+        1 => Ok(Method::ExactNewton),
+        2 => Ok(Method::ExactSortScan),
+        3 => Ok(Method::ExactFlatL1),
+        other => Err(perr(format!("unknown method byte {other}"))),
+    }
+}
+
+/// Error class carried in an [`Frame::Error`] response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Job queue at capacity — backpressure, retry later.
+    Busy,
+    /// The request frame was malformed.
+    Protocol,
+    /// The request was well-formed but semantically invalid (bad norm
+    /// list, shape mismatch, …).
+    Invalid,
+    /// Server-side failure unrelated to the request contents.
+    Internal,
+}
+
+impl ErrorCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::Busy => 1,
+            ErrorCode::Protocol => 2,
+            ErrorCode::Invalid => 3,
+            ErrorCode::Internal => 4,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            1 => Ok(ErrorCode::Busy),
+            2 => Ok(ErrorCode::Protocol),
+            3 => Ok(ErrorCode::Invalid),
+            4 => Ok(ErrorCode::Internal),
+            other => Err(perr(format!("unknown error code {other}"))),
+        }
+    }
+
+    /// Classify a server-side error for the wire.
+    pub fn from_error(e: &MlprojError) -> Self {
+        match e {
+            MlprojError::ServiceBusy => ErrorCode::Busy,
+            MlprojError::Protocol(_) => ErrorCode::Protocol,
+            MlprojError::InvalidArgument(_)
+            | MlprojError::NormCountMismatch { .. }
+            | MlprojError::ShapeMismatch { .. } => ErrorCode::Invalid,
+            _ => ErrorCode::Internal,
+        }
+    }
+
+    /// Reconstruct a client-side error from a wire code + message.
+    pub fn into_error(self, msg: String) -> MlprojError {
+        match self {
+            ErrorCode::Busy => MlprojError::ServiceBusy,
+            ErrorCode::Protocol => MlprojError::Protocol(msg),
+            ErrorCode::Invalid => MlprojError::InvalidArgument(msg),
+            ErrorCode::Internal => MlprojError::Runtime(msg),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request payload
+// ---------------------------------------------------------------------------
+
+/// A projection job as carried on the wire: the full spec (norms, radius,
+/// ℓ1 algorithm, method), the data layout + shape, and the flat `f32`
+/// payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProjectRequest {
+    /// Norm list `ν`, leading-axis norm first.
+    pub norms: Vec<Norm>,
+    /// Ball radius `η`.
+    pub eta: f64,
+    /// ℓ1 threshold algorithm.
+    pub l1_algo: L1Algo,
+    /// Algorithm family.
+    pub method: Method,
+    /// Payload layout.
+    pub layout: WireLayout,
+    /// Shape (`[rows, cols]` for matrices, one entry per axis otherwise).
+    pub shape: Vec<usize>,
+    /// Flat payload, length = product of `shape`.
+    pub payload: Vec<f32>,
+}
+
+impl ProjectRequest {
+    /// Short human-readable label ("linf,l1 η=1 2000x500").
+    pub fn describe(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{} η={} {}", fmt_norms(&self.norms), self.eta, dims.join("x"))
+    }
+
+    /// Encode-side hygiene: refuse to *send* a request whose payload,
+    /// shape and layout disagree. Deliberately not applied on decode —
+    /// see `decode_body`.
+    fn validate(&self) -> Result<()> {
+        let want = self
+            .shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| perr(format!("shape {:?} element count overflows", self.shape)))?;
+        if self.payload.len() != want {
+            return Err(perr(format!(
+                "payload has {} elements but shape {:?} needs {want}",
+                self.payload.len(),
+                self.shape
+            )));
+        }
+        if self.layout == WireLayout::Matrix && self.shape.len() != 2 {
+            return Err(perr(format!(
+                "matrix layout requires a 2-entry shape, got {:?}",
+                self.shape
+            )));
+        }
+        if self.norms.is_empty() || self.norms.len() > u8::MAX as usize {
+            return Err(perr(format!("norm list length {} out of range", self.norms.len())));
+        }
+        if self.shape.is_empty() || self.shape.len() > u8::MAX as usize {
+            return Err(perr(format!("shape rank {} out of range", self.shape.len())));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+const T_PING: u8 = 1;
+const T_PONG: u8 = 2;
+const T_PROJECT: u8 = 3;
+const T_PROJECT_OK: u8 = 4;
+const T_ERROR: u8 = 5;
+const T_STATS_REQ: u8 = 6;
+const T_STATS_RESP: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+const T_SHUTDOWN_ACK: u8 = 9;
+
+/// One protocol frame.
+///
+/// Body layouts (after the 12-byte header):
+///
+/// * `Ping` / `Pong` / `StatsRequest` / `Shutdown` / `ShutdownAck` — empty.
+/// * `Project` — `eta: f64`, `l1algo: u8`, `method: u8`, `layout: u8`,
+///   `nnorms: u8`, `nnorms × u8`, `ndim: u8`, `ndim × u32` dims,
+///   `count: u32`, `count × f32` payload.
+/// * `ProjectOk` — `count: u32`, `count × f32` projected payload.
+/// * `Error` — `code: u8`, `msg_len: u32`, UTF-8 message.
+/// * `StatsResponse` — `n: u32`, then `n ×` (`name_len: u16`, UTF-8 name,
+///   `value: u64`) counter pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Liveness probe.
+    Ping,
+    /// Liveness reply.
+    Pong,
+    /// A projection job.
+    Project(ProjectRequest),
+    /// Successful projection result (same layout/shape as the request).
+    ProjectOk(Vec<f32>),
+    /// Request failed; `code` classifies, `msg` elaborates.
+    Error {
+        /// Error class.
+        code: ErrorCode,
+        /// Human-readable detail.
+        msg: String,
+    },
+    /// Ask the server for its counters.
+    StatsRequest,
+    /// Counter name/value pairs (`requests_total`, `cache_hits`, …).
+    StatsResponse(Vec<(String, u64)>),
+    /// Ask the server to stop accepting connections and drain.
+    Shutdown,
+    /// Shutdown acknowledged; the connection closes after this frame.
+    ShutdownAck,
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Ping => T_PING,
+            Frame::Pong => T_PONG,
+            Frame::Project(_) => T_PROJECT,
+            Frame::ProjectOk(_) => T_PROJECT_OK,
+            Frame::Error { .. } => T_ERROR,
+            Frame::StatsRequest => T_STATS_REQ,
+            Frame::StatsResponse(_) => T_STATS_RESP,
+            Frame::Shutdown => T_SHUTDOWN,
+            Frame::ShutdownAck => T_SHUTDOWN_ACK,
+        }
+    }
+
+    /// Encode the full frame (header + body) into a byte vector.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let body = self.encode_body()?;
+        if body.len() > MAX_BODY_BYTES {
+            return Err(perr(format!(
+                "frame body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+                body.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.type_byte());
+        out.extend_from_slice(&[0u8, 0u8]);
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+
+    fn encode_body(&self) -> Result<Vec<u8>> {
+        let mut b = Vec::new();
+        match self {
+            Frame::Ping
+            | Frame::Pong
+            | Frame::StatsRequest
+            | Frame::Shutdown
+            | Frame::ShutdownAck => {}
+            Frame::Project(req) => {
+                req.validate()?;
+                b.extend_from_slice(&req.eta.to_le_bytes());
+                b.push(algo_to_u8(req.l1_algo));
+                b.push(method_to_u8(req.method));
+                b.push(req.layout.to_u8());
+                b.push(req.norms.len() as u8);
+                for &n in &req.norms {
+                    b.push(norm_to_u8(n));
+                }
+                b.push(req.shape.len() as u8);
+                for &d in &req.shape {
+                    let d = u32::try_from(d)
+                        .map_err(|_| perr(format!("dimension {d} exceeds u32")))?;
+                    b.extend_from_slice(&d.to_le_bytes());
+                }
+                write_f32s(&mut b, &req.payload)?;
+            }
+            Frame::ProjectOk(payload) => {
+                write_f32s(&mut b, payload)?;
+            }
+            Frame::Error { code, msg } => {
+                b.push(code.to_u8());
+                let bytes = msg.as_bytes();
+                let len = u32::try_from(bytes.len())
+                    .map_err(|_| perr("error message exceeds u32 length"))?;
+                b.extend_from_slice(&len.to_le_bytes());
+                b.extend_from_slice(bytes);
+            }
+            Frame::StatsResponse(pairs) => {
+                let n = u32::try_from(pairs.len())
+                    .map_err(|_| perr("too many stats counters"))?;
+                b.extend_from_slice(&n.to_le_bytes());
+                for (name, value) in pairs {
+                    let bytes = name.as_bytes();
+                    let len = u16::try_from(bytes.len())
+                        .map_err(|_| perr(format!("counter name `{name}` too long")))?;
+                    b.extend_from_slice(&len.to_le_bytes());
+                    b.extend_from_slice(bytes);
+                    b.extend_from_slice(&value.to_le_bytes());
+                }
+            }
+        }
+        Ok(b)
+    }
+
+    /// Decode one full frame from `bytes` (must contain exactly one frame).
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(perr(format!("frame shorter than the {HEADER_BYTES}-byte header")));
+        }
+        let (header, body) = bytes.split_at(HEADER_BYTES);
+        let (version, ftype, body_len) = parse_header(header)?;
+        if version != VERSION {
+            return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
+        }
+        if body.len() != body_len {
+            return Err(perr(format!(
+                "header claims {body_len} body bytes but {} are present",
+                body.len()
+            )));
+        }
+        Self::decode_body(ftype, body)
+    }
+
+    fn decode_body(ftype: u8, body: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf: body, pos: 0 };
+        let frame = match ftype {
+            T_PING => Frame::Ping,
+            T_PONG => Frame::Pong,
+            T_PROJECT => {
+                let eta = f64::from_le_bytes(c.take(8)?.try_into().unwrap());
+                let l1_algo = algo_from_u8(c.u8()?)?;
+                let method = method_from_u8(c.u8()?)?;
+                let layout = WireLayout::from_u8(c.u8()?)?;
+                let nnorms = c.u8()? as usize;
+                let mut norms = Vec::with_capacity(nnorms);
+                for _ in 0..nnorms {
+                    norms.push(norm_from_u8(c.u8()?)?);
+                }
+                let ndim = c.u8()? as usize;
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    shape.push(c.u32()? as usize);
+                }
+                let payload = c.f32s()?;
+                // Framing only — semantic checks (payload vs shape, rank
+                // vs layout) are NOT applied here: a fully-framed but
+                // invalid request must get a typed `Invalid` reply from
+                // the plan/projection layer, not a dropped connection.
+                Frame::Project(ProjectRequest {
+                    norms,
+                    eta,
+                    l1_algo,
+                    method,
+                    layout,
+                    shape,
+                    payload,
+                })
+            }
+            T_PROJECT_OK => Frame::ProjectOk(c.f32s()?),
+            T_ERROR => {
+                let code = ErrorCode::from_u8(c.u8()?)?;
+                let len = c.u32()? as usize;
+                let msg = String::from_utf8(c.take(len)?.to_vec())
+                    .map_err(|_| perr("error message is not valid UTF-8"))?;
+                Frame::Error { code, msg }
+            }
+            T_STATS_REQ => Frame::StatsRequest,
+            T_STATS_RESP => {
+                let n = c.u32()? as usize;
+                let mut pairs = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    let len = c.u16()? as usize;
+                    let name = String::from_utf8(c.take(len)?.to_vec())
+                        .map_err(|_| perr("counter name is not valid UTF-8"))?;
+                    let value = c.u64()?;
+                    pairs.push((name, value));
+                }
+                Frame::StatsResponse(pairs)
+            }
+            T_SHUTDOWN => Frame::Shutdown,
+            T_SHUTDOWN_ACK => Frame::ShutdownAck,
+            other => return Err(perr(format!("unknown frame type {other}"))),
+        };
+        if c.pos != body.len() {
+            return Err(perr(format!(
+                "{} trailing bytes after frame body",
+                body.len() - c.pos
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// Serialize this frame to a writer (one syscall-friendly buffer).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let bytes = self.encode()?;
+        w.write_all(&bytes)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame from a reader. A clean EOF before any header byte
+    /// (or mid-frame truncation) surfaces as `MlprojError::Io` with
+    /// `ErrorKind::UnexpectedEof` — connection handlers treat the former
+    /// as a normal disconnect.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Frame> {
+        let mut header = [0u8; HEADER_BYTES];
+        r.read_exact(&mut header)?;
+        let (version, ftype, body_len) = parse_header(&header)?;
+        if version != VERSION {
+            return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
+        }
+        let mut body = vec![0u8; body_len];
+        r.read_exact(&mut body)?;
+        Self::decode_body(ftype, &body)
+    }
+}
+
+/// Parse + validate a 12-byte header; returns (version, type, body_len).
+fn parse_header(h: &[u8]) -> Result<(u8, u8, usize)> {
+    if h[..4] != MAGIC {
+        return Err(perr(format!("bad magic {:?} (not an mlproj service stream)", &h[..4])));
+    }
+    let body_len = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
+    if body_len > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    Ok((h[4], h[5], body_len))
+}
+
+fn write_f32s(b: &mut Vec<u8>, xs: &[f32]) -> Result<()> {
+    let n = u32::try_from(xs.len()).map_err(|_| perr("payload exceeds u32 element count"))?;
+    b.extend_from_slice(&n.to_le_bytes());
+    b.reserve(xs.len() * 4);
+    for &x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(perr(format!(
+                "truncated frame body: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `count: u32` followed by `count` little-endian f32s.
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> ProjectRequest {
+        ProjectRequest {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta: 1.5,
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![2, 3],
+            payload: vec![1.0, -2.0, 3.5, 0.0, -0.25, 7.0],
+        }
+    }
+
+    fn roundtrip(frame: Frame) {
+        let bytes = frame.encode().unwrap();
+        assert_eq!(Frame::decode(&bytes).unwrap(), frame, "byte-slice roundtrip");
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert_eq!(Frame::read_from(&mut cursor).unwrap(), frame, "reader roundtrip");
+    }
+
+    #[test]
+    fn roundtrip_every_frame_type() {
+        roundtrip(Frame::Ping);
+        roundtrip(Frame::Pong);
+        roundtrip(Frame::Project(sample_request()));
+        roundtrip(Frame::ProjectOk(vec![0.5, -1.0, f32::MIN, f32::MAX]));
+        roundtrip(Frame::Error { code: ErrorCode::Busy, msg: "queue full".into() });
+        roundtrip(Frame::Error { code: ErrorCode::Invalid, msg: "η∞ unicode ✓".into() });
+        roundtrip(Frame::StatsRequest);
+        roundtrip(Frame::StatsResponse(vec![
+            ("requests_total".into(), 42),
+            ("cache_hits".into(), u64::MAX),
+        ]));
+        roundtrip(Frame::Shutdown);
+        roundtrip(Frame::ShutdownAck);
+    }
+
+    #[test]
+    fn roundtrip_all_enum_codes() {
+        for method in
+            [Method::Compositional, Method::ExactNewton, Method::ExactSortScan, Method::ExactFlatL1]
+        {
+            for algo in [L1Algo::Condat, L1Algo::Sort, L1Algo::Michelot] {
+                for norm in [Norm::L1, Norm::L2, Norm::Linf] {
+                    let req = ProjectRequest {
+                        norms: vec![norm],
+                        eta: 0.5,
+                        l1_algo: algo,
+                        method,
+                        layout: WireLayout::Tensor,
+                        shape: vec![4],
+                        payload: vec![0.0; 4],
+                    };
+                    roundtrip(Frame::Project(req));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_tensor_request() {
+        let req = ProjectRequest {
+            norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
+            eta: 2.0,
+            l1_algo: L1Algo::Sort,
+            method: Method::Compositional,
+            layout: WireLayout::Tensor,
+            shape: vec![2, 3, 4],
+            payload: (0..24).map(|i| i as f32 * 0.5).collect(),
+        };
+        roundtrip(Frame::Project(req));
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_type() {
+        let mut bytes = Frame::Ping.encode().unwrap();
+        bytes[0] = b'X';
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+
+        let mut bytes = Frame::Ping.encode().unwrap();
+        bytes[4] = 99; // version
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+
+        let mut bytes = Frame::Ping.encode().unwrap();
+        bytes[5] = 200; // frame type
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing_garbage() {
+        let bytes = Frame::Project(sample_request()).encode().unwrap();
+        // Truncated body (fix up the header length so only the body is short).
+        let cut = bytes.len() - 3;
+        assert!(Frame::decode(&bytes[..cut]).is_err());
+        // Trailing garbage inside the declared body length.
+        let mut long = bytes.clone();
+        long.push(0);
+        let body_len = (long.len() - HEADER_BYTES) as u32;
+        long[8..12].copy_from_slice(&body_len.to_le_bytes());
+        assert!(matches!(Frame::decode(&long), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn rejects_oversized_body_length() {
+        let mut bytes = Frame::Ping.encode().unwrap();
+        bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn encode_rejects_shape_payload_disagreement() {
+        let mut req = sample_request();
+        req.payload.pop();
+        assert!(Frame::Project(req).encode().is_err());
+
+        let mut req = sample_request();
+        req.shape = vec![2, 3, 1]; // matrix layout needs rank 2
+        req.payload = vec![0.0; 6];
+        assert!(Frame::Project(req).encode().is_err());
+    }
+
+    #[test]
+    fn decode_accepts_semantically_invalid_but_well_framed_requests() {
+        // A well-framed request whose shape disagrees with its payload
+        // must still *decode* (the projection layer answers `Invalid`
+        // without dropping the connection). Patch the second dim 3 -> 4:
+        // body = eta(8) algo method layout nnorms norms(2) ndim dim0(4).
+        let mut bytes = Frame::Project(sample_request()).encode().unwrap();
+        let dim1_off = HEADER_BYTES + 8 + 1 + 1 + 1 + 1 + 2 + 1 + 4;
+        assert_eq!(bytes[dim1_off], 3);
+        bytes[dim1_off] = 4;
+        match Frame::decode(&bytes).unwrap() {
+            Frame::Project(req) => {
+                assert_eq!(req.shape, vec![2, 4]);
+                assert_eq!(req.payload.len(), 6); // disagrees, by design
+            }
+            other => panic!("expected Project, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_enum_bytes_in_body() {
+        let bytes = Frame::Project(sample_request()).encode().unwrap();
+        // l1algo byte sits right after header (12) + eta (8).
+        let mut bad = bytes.clone();
+        bad[HEADER_BYTES + 8] = 77;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+        // method byte.
+        let mut bad = bytes.clone();
+        bad[HEADER_BYTES + 9] = 77;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+        // layout byte.
+        let mut bad = bytes;
+        bad[HEADER_BYTES + 10] = 77;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn error_code_maps_to_and_from_errors() {
+        assert_eq!(ErrorCode::from_error(&MlprojError::ServiceBusy), ErrorCode::Busy);
+        assert_eq!(
+            ErrorCode::from_error(&MlprojError::Protocol("x".into())),
+            ErrorCode::Protocol
+        );
+        assert_eq!(ErrorCode::from_error(&MlprojError::invalid("x")), ErrorCode::Invalid);
+        assert_eq!(
+            ErrorCode::from_error(&MlprojError::Runtime("x".into())),
+            ErrorCode::Internal
+        );
+        assert!(matches!(ErrorCode::Busy.into_error(String::new()), MlprojError::ServiceBusy));
+        assert!(matches!(
+            ErrorCode::Invalid.into_error("m".into()),
+            MlprojError::InvalidArgument(m) if m == "m"
+        ));
+    }
+
+    #[test]
+    fn request_describe_names_norms_eta_and_shape() {
+        let d = sample_request().describe();
+        assert!(d.contains("linf,l1"), "{d}");
+        assert!(d.contains("η=1.5"), "{d}");
+        assert!(d.contains("2x3"), "{d}");
+    }
+
+    #[test]
+    fn eof_reads_as_io_error() {
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        match Frame::read_from(&mut empty) {
+            Err(MlprojError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("expected EOF Io error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Bounded MPSC job scheduler for the projection service.
+//!
+//! Connection handlers push [`Job`]s into a bounded queue; `N` worker
+//! threads pull from it. Each worker pins itself to one plan-cache shard
+//! (`worker id == shard hint`), so the hot path — plan lookup, in-place
+//! projection, workspace reuse — takes exactly one uncontended mutex and
+//! no shared locks.
+//!
+//! Backpressure: [`Scheduler::try_submit`] never blocks; when the queue
+//! is at `queue_depth` the job is rejected with
+//! [`MlprojError::ServiceBusy`] and the client sees a `Busy` error frame
+//! (retry is the client's decision, not the server's).
+//!
+//! Micro-batching: when a worker dequeues a job it also steals every
+//! queued job with the *same* [`PlanKey`] (up to `batch_max`), then runs
+//! the whole batch against one plan lookup — repeated-shape traffic pays
+//! for one cache access and keeps the workspace hot in cache.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::core::error::{MlprojError, Result};
+use crate::projection::ExecBackend;
+use crate::service::cache::{PlanKey, ShardedPlanCache};
+use crate::service::protocol::{ErrorCode, ProjectRequest};
+use crate::service::stats::ServiceStats;
+
+/// Scheduler + cache sizing knobs (CLI flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Worker threads (and plan-cache shards). Min 1.
+    pub workers: usize,
+    /// Maximum queued (not yet running) jobs before `Busy` rejection.
+    pub queue_depth: usize,
+    /// Maximum jobs coalesced into one same-key micro-batch (1 disables
+    /// coalescing).
+    pub batch_max: usize,
+    /// Plans kept per cache shard.
+    pub cache_cap: usize,
+    /// Per-worker projection pool threads (0 = serial execution; the
+    /// paper's Prop. 6.4 parallelism *inside* one projection).
+    pub exec_workers: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch_max: 8,
+            cache_cap: 32,
+            exec_workers: 0,
+        }
+    }
+}
+
+/// One projection job: cache key, flat payload, and the channel the
+/// result (projected payload or error) is delivered on.
+pub struct Job {
+    /// Plan-cache key derived from the request.
+    pub key: PlanKey,
+    /// Flat payload to project in place.
+    pub payload: Vec<f32>,
+    /// Reply channel back to the connection handler.
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Clone an error by round-tripping it through its wire classification —
+/// one error may need to fan out to every job of a failed batch.
+fn clone_error(e: &MlprojError) -> MlprojError {
+    ErrorCode::from_error(e).into_error(format!("{e}"))
+}
+
+/// Bounded MPMC job queue (mutex + condvar; `try_push` never blocks).
+struct JobQueue {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    depth: usize,
+    shutdown: AtomicBool,
+}
+
+impl JobQueue {
+    fn new(depth: usize) -> Self {
+        JobQueue {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            depth: depth.max(1),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue without blocking; `ServiceBusy` when full or shutting down.
+    fn try_push(&self, job: Job) -> Result<()> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(MlprojError::ServiceBusy);
+        }
+        let mut q = self.queue.lock().expect("job queue poisoned");
+        if q.len() >= self.depth {
+            return Err(MlprojError::ServiceBusy);
+        }
+        q.push_back(job);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once shutdown is signalled *and* the queue
+    /// has drained (pending jobs are always completed).
+    fn pop(&self) -> Option<Job> {
+        let mut q = self.queue.lock().expect("job queue poisoned");
+        loop {
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cv.wait(q).expect("job queue poisoned");
+        }
+    }
+
+    /// Steal every queued job whose key matches `first`, preserving the
+    /// relative order of the rest; at most `batch_max` jobs total.
+    fn take_batch(&self, first: Job, batch_max: usize) -> Vec<Job> {
+        let mut batch = vec![first];
+        if batch_max <= 1 {
+            return batch;
+        }
+        let mut q = self.queue.lock().expect("job queue poisoned");
+        let mut i = 0;
+        while i < q.len() && batch.len() < batch_max {
+            if q[i].key == batch[0].key {
+                batch.push(q.remove(i).expect("index checked"));
+            } else {
+                i += 1;
+            }
+        }
+        batch
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// The projection scheduler: bounded queue + `N` shard-pinned workers.
+pub struct Scheduler {
+    queue: Arc<JobQueue>,
+    cache: Arc<ShardedPlanCache>,
+    stats: Arc<ServiceStats>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Spawn the workers described by `cfg`. The plan cache is sharded
+    /// one-shard-per-worker and shares `stats` with the caller.
+    pub fn new(cfg: &SchedulerConfig, stats: Arc<ServiceStats>) -> Self {
+        let workers = cfg.workers.max(1);
+        let queue = Arc::new(JobQueue::new(cfg.queue_depth));
+        let cache = Arc::new(ShardedPlanCache::new(workers, cfg.cache_cap, Arc::clone(&stats)));
+        let batch_max = cfg.batch_max.max(1);
+        let exec_workers = cfg.exec_workers;
+        let handles = (0..workers)
+            .map(|w| {
+                let queue = Arc::clone(&queue);
+                let cache = Arc::clone(&cache);
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || {
+                    // One execution backend per worker: either inline
+                    // serial kernels or a private pool realizing the
+                    // paper's intra-projection parallelism.
+                    let backend = if exec_workers > 0 {
+                        ExecBackend::pool(exec_workers)
+                    } else {
+                        ExecBackend::Serial
+                    };
+                    while let Some(job) = queue.pop() {
+                        let batch = queue.take_batch(job, batch_max);
+                        run_batch(w, &cache, &stats, &backend, batch);
+                    }
+                })
+            })
+            .collect();
+        Scheduler { queue, cache, stats, handles: Mutex::new(handles) }
+    }
+
+    /// The sharded plan cache (exposed for stats/tests).
+    pub fn cache(&self) -> &Arc<ShardedPlanCache> {
+        &self.cache
+    }
+
+    /// Enqueue a job without blocking; `ServiceBusy` under backpressure.
+    pub fn try_submit(&self, job: Job) -> Result<()> {
+        self.queue.try_push(job).map_err(|e| {
+            ServiceStats::bump(&self.stats.busy_rejections);
+            e
+        })
+    }
+
+    /// Convenience for connection handlers: enqueue a wire request and
+    /// block until its result arrives.
+    pub fn submit_and_wait(&self, req: ProjectRequest) -> Result<Vec<f32>> {
+        let key = PlanKey::from_request(&req);
+        let (tx, rx) = mpsc::channel();
+        self.try_submit(Job { key, payload: req.payload, reply: tx })?;
+        rx.recv()
+            .map_err(|_| MlprojError::Runtime("scheduler worker dropped the job".into()))?
+    }
+
+    /// Signal shutdown, drain the queue, and join every worker.
+    pub fn shutdown(&self) {
+        self.queue.begin_shutdown();
+        let mut handles = self.handles.lock().expect("scheduler handles poisoned");
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Execute one same-key batch against a single plan lookup on the
+/// worker's own cache shard.
+fn run_batch(
+    worker: usize,
+    cache: &ShardedPlanCache,
+    stats: &ServiceStats,
+    backend: &ExecBackend,
+    mut batch: Vec<Job>,
+) {
+    ServiceStats::bump(&stats.batches);
+    if batch.len() >= 2 {
+        ServiceStats::add(&stats.batched_requests, batch.len() as u64);
+    }
+    let key = batch[0].key.clone();
+    let outcome = cache.with_plan(Some(worker), &key, backend, |plan| {
+        for job in batch.iter_mut() {
+            let mut payload = std::mem::take(&mut job.payload);
+            let result = plan.project_inplace(&mut payload).map(|()| payload);
+            // A receiver that hung up is the client's problem, not ours.
+            let _ = job.reply.send(result);
+        }
+    });
+    if let Err(e) = outcome {
+        // Plan compile failed: every job in the batch gets the error.
+        for job in &batch {
+            let _ = job.reply.send(Err(clone_error(&e)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::Matrix;
+    use crate::core::rng::Rng;
+    use crate::projection::{Norm, ProjectionSpec};
+    use crate::service::protocol::WireLayout;
+
+    fn req(y: &Matrix, eta: f64) -> ProjectRequest {
+        ProjectRequest {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta,
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![y.rows(), y.cols()],
+            payload: y.data().to_vec(),
+        }
+    }
+
+    #[test]
+    fn queue_rejects_when_full_and_drains_on_shutdown() {
+        let q = JobQueue::new(2);
+        let (tx, _rx) = mpsc::channel();
+        let key = PlanKey {
+            norms: vec![Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Tensor,
+            shape: vec![4],
+        };
+        let mk = || Job { key: key.clone(), payload: vec![0.0; 4], reply: tx.clone() };
+        q.try_push(mk()).unwrap();
+        q.try_push(mk()).unwrap();
+        assert!(matches!(q.try_push(mk()), Err(MlprojError::ServiceBusy)));
+        // Shutdown still drains queued jobs before pop() returns None.
+        q.begin_shutdown();
+        assert!(matches!(q.try_push(mk()), Err(MlprojError::ServiceBusy)));
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn take_batch_coalesces_only_matching_keys() {
+        let q = JobQueue::new(16);
+        let (tx, _rx) = mpsc::channel();
+        let key_a = PlanKey {
+            norms: vec![Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Tensor,
+            shape: vec![4],
+        };
+        let mut key_b = key_a.clone();
+        key_b.shape = vec![8];
+        let mk = |k: &PlanKey, tag: f32| Job {
+            key: k.clone(),
+            payload: vec![tag; k.shape[0]],
+            reply: tx.clone(),
+        };
+        // Queue: A1 B1 A2 A3; first dequeued job is A0.
+        q.try_push(mk(&key_a, 1.0)).unwrap();
+        q.try_push(mk(&key_b, 9.0)).unwrap();
+        q.try_push(mk(&key_a, 2.0)).unwrap();
+        q.try_push(mk(&key_a, 3.0)).unwrap();
+        let first = mk(&key_a, 0.0);
+        let batch = q.take_batch(first, 3);
+        // batch_max=3: A0 + A1 + A2; A3 and B1 stay queued, order kept.
+        assert_eq!(batch.len(), 3);
+        assert!(batch.iter().all(|j| j.key == key_a));
+        assert_eq!(batch[1].payload[0], 1.0);
+        assert_eq!(batch[2].payload[0], 2.0);
+        let rest_b = q.pop().unwrap();
+        assert_eq!(rest_b.key, key_b);
+        let rest_a = q.pop().unwrap();
+        assert_eq!(rest_a.payload[0], 3.0);
+    }
+
+    #[test]
+    fn take_batch_disabled_at_one() {
+        let q = JobQueue::new(4);
+        let (tx, _rx) = mpsc::channel();
+        let key = PlanKey {
+            norms: vec![Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Tensor,
+            shape: vec![2],
+        };
+        q.try_push(Job { key: key.clone(), payload: vec![0.0; 2], reply: tx.clone() }).unwrap();
+        let batch =
+            q.take_batch(Job { key: key.clone(), payload: vec![1.0; 2], reply: tx }, 1);
+        assert_eq!(batch.len(), 1);
+        assert!(q.pop().is_some());
+    }
+
+    #[test]
+    fn scheduler_results_match_in_process_projection() {
+        let stats = Arc::new(ServiceStats::new());
+        // One worker = one cache shard, so repeated keys are guaranteed
+        // cache hits (with several shards a key may land on a cold one).
+        let sched = Scheduler::new(
+            &SchedulerConfig { workers: 1, ..SchedulerConfig::default() },
+            Arc::clone(&stats),
+        );
+        let mut rng = Rng::new(11);
+        // Distinct radii — each is its own plan key (all misses)…
+        for round in 0..3 {
+            let y = Matrix::random_uniform(16, 32, -2.0, 2.0, &mut rng);
+            let eta = 0.5 + round as f64 * 0.25;
+            let expect = ProjectionSpec::l1inf(eta).project_matrix(&y).unwrap();
+            let got = sched.submit_and_wait(req(&y, eta)).unwrap();
+            assert_eq!(&got[..], expect.data(), "round {round}");
+        }
+        // …then repeated (spec, shape) traffic reuses the cached plan.
+        for round in 0..4 {
+            let y = Matrix::random_uniform(16, 32, -2.0, 2.0, &mut rng);
+            let expect = ProjectionSpec::l1inf(0.5).project_matrix(&y).unwrap();
+            let got = sched.submit_and_wait(req(&y, 0.5)).unwrap();
+            assert_eq!(&got[..], expect.data(), "repeat round {round}");
+        }
+        sched.shutdown();
+        assert_eq!(stats.cache_misses.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn scheduler_reports_compile_errors() {
+        let stats = Arc::new(ServiceStats::new());
+        let sched = Scheduler::new(&SchedulerConfig::default(), stats);
+        // 3 norms against a rank-2 matrix: NormCountMismatch -> Invalid.
+        let bad = ProjectRequest {
+            norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
+            eta: 1.0,
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![3, 4],
+            payload: vec![0.0; 12],
+        };
+        let err = sched.submit_and_wait(bad).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+    }
+
+    #[test]
+    fn scheduler_reports_payload_shape_mismatch() {
+        // Decode no longer rejects payload/shape disagreement (it is
+        // well-framed); the plan's own length check must catch it here.
+        let stats = Arc::new(ServiceStats::new());
+        let sched = Scheduler::new(&SchedulerConfig::default(), stats);
+        let mut bad = ProjectRequest {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta: 1.0,
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![3, 4],
+            payload: vec![0.0; 12],
+        };
+        bad.payload.pop(); // 11 elements for a 3x4 shape
+        let err = sched.submit_and_wait(bad).unwrap_err();
+        assert!(matches!(err, MlprojError::ShapeMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn concurrent_submitters_all_get_correct_results() {
+        let stats = Arc::new(ServiceStats::new());
+        let sched = Arc::new(Scheduler::new(
+            &SchedulerConfig { workers: 3, queue_depth: 256, ..SchedulerConfig::default() },
+            stats,
+        ));
+        let mut handles = Vec::new();
+        for seed in 0..4u64 {
+            let sched = Arc::clone(&sched);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + seed);
+                for _ in 0..8 {
+                    let y = Matrix::random_uniform(8, 24, -1.0, 1.0, &mut rng);
+                    let expect = ProjectionSpec::l1inf(0.8).project_matrix(&y).unwrap();
+                    loop {
+                        match sched.submit_and_wait(req(&y, 0.8)) {
+                            Ok(got) => {
+                                assert_eq!(&got[..], expect.data());
+                                break;
+                            }
+                            Err(MlprojError::ServiceBusy) => std::thread::yield_now(),
+                            Err(e) => panic!("unexpected error: {e}"),
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Loopback TCP server for the projection service.
+//!
+//! One OS thread per connection (clients are few and long-lived; the
+//! interesting concurrency lives in the [`Scheduler`]), frames from
+//! [`protocol`](crate::service::protocol), projection jobs dispatched
+//! through the bounded queue. `Shutdown` acknowledges, stops the accept
+//! loop, lets in-flight connections drain, then joins the workers.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::core::error::{MlprojError, Result};
+use crate::service::protocol::{ErrorCode, Frame};
+use crate::service::scheduler::{Scheduler, SchedulerConfig};
+use crate::service::stats::ServiceStats;
+
+/// A bound (not yet running) projection server.
+pub struct Server {
+    listener: TcpListener,
+    scheduler: Arc<Scheduler>,
+    stats: Arc<ServiceStats>,
+    shutdown: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and spawn
+    /// the scheduler workers described by `cfg`.
+    pub fn bind(addr: &str, cfg: &SchedulerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stats = Arc::new(ServiceStats::new());
+        let scheduler = Arc::new(Scheduler::new(cfg, Arc::clone(&stats)));
+        Ok(Server { listener, scheduler, stats, shutdown: Arc::new(AtomicBool::new(false)), addr })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared counter block.
+    pub fn stats(&self) -> &Arc<ServiceStats> {
+        &self.stats
+    }
+
+    /// Accept and serve connections until a `Shutdown` frame arrives.
+    /// Blocks the calling thread; use [`Server::spawn`] for tests/CLIs
+    /// that need to keep going.
+    pub fn run(self) -> Result<()> {
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        // Socket clones of every live connection, so shutdown can unblock
+        // handlers parked in a blocking read (an idle client must not be
+        // able to stall — or outlive — an acknowledged shutdown). Each
+        // handler removes its own entry when it exits.
+        let peers: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let mut next_conn_id = 0u64;
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("mlproj serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            ServiceStats::bump(&self.stats.connections);
+            let conn_id = next_conn_id;
+            next_conn_id += 1;
+            if let Ok(clone) = stream.try_clone() {
+                peers.lock().expect("peer map poisoned").insert(conn_id, clone);
+            }
+            let scheduler = Arc::clone(&self.scheduler);
+            let stats = Arc::clone(&self.stats);
+            let shutdown = Arc::clone(&self.shutdown);
+            let peers_for_conn = Arc::clone(&peers);
+            let addr = self.addr;
+            conns.push(std::thread::spawn(move || {
+                handle_conn(stream, &scheduler, &stats, &shutdown, addr);
+                peers_for_conn.lock().expect("peer map poisoned").remove(&conn_id);
+            }));
+            // Reap finished handlers so long-running servers don't
+            // accumulate join handles.
+            conns.retain(|h| !h.is_finished());
+        }
+        // Cut off every still-open connection: blocked reads return EOF,
+        // handlers exit, and no client can submit work past shutdown.
+        for (_, peer) in peers.lock().expect("peer map poisoned").drain() {
+            let _ = peer.shutdown(Shutdown::Both);
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        self.scheduler.shutdown();
+        Ok(())
+    }
+
+    /// Run on a background thread; returns a handle carrying the bound
+    /// address and the join point.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let handle = std::thread::spawn(move || self.run());
+        ServerHandle { addr, handle }
+    }
+}
+
+/// Join handle for a server running on a background thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    handle: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    /// The server's bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the server to exit (after a `Shutdown` frame).
+    pub fn join(self) -> Result<()> {
+        self.handle
+            .join()
+            .map_err(|_| MlprojError::Runtime("server thread panicked".into()))?
+    }
+}
+
+/// Serve one connection until disconnect, protocol error, or `Shutdown`.
+fn handle_conn(
+    mut stream: TcpStream,
+    scheduler: &Scheduler,
+    stats: &ServiceStats,
+    shutdown: &AtomicBool,
+    addr: SocketAddr,
+) {
+    loop {
+        let frame = match Frame::read_from(&mut stream) {
+            Ok(f) => f,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return; // clean disconnect
+            }
+            Err(e) => {
+                // Malformed input: best-effort error frame, then close —
+                // after a framing error the stream offset is unreliable.
+                let _ = Frame::Error {
+                    code: ErrorCode::from_error(&e),
+                    msg: format!("{e}"),
+                }
+                .write_to(&mut stream);
+                return;
+            }
+        };
+        ServiceStats::bump(&stats.frames_in);
+        let reply = match frame {
+            Frame::Ping => Frame::Pong,
+            Frame::StatsRequest => Frame::StatsResponse(stats.snapshot()),
+            Frame::Shutdown => {
+                let _ = Frame::ShutdownAck.write_to(&mut stream);
+                shutdown.store(true, Ordering::Release);
+                // Unblock the accept loop so it observes the flag. A
+                // wildcard bind (0.0.0.0 / ::) is not connectable on
+                // every platform — dial loopback on the same port.
+                let mut wake = addr;
+                if wake.ip().is_unspecified() {
+                    wake.set_ip(match wake.ip() {
+                        std::net::IpAddr::V4(_) => {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        }
+                        std::net::IpAddr::V6(_) => {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        }
+                    });
+                }
+                let _ = TcpStream::connect(wake);
+                return;
+            }
+            Frame::Project(req) => {
+                ServiceStats::bump(&stats.requests_total);
+                ServiceStats::add(&stats.payload_bytes_in, 4 * req.payload.len() as u64);
+                let desc = req.describe();
+                match scheduler.submit_and_wait(req) {
+                    Ok(payload) => {
+                        ServiceStats::bump(&stats.responses_ok);
+                        ServiceStats::add(&stats.payload_bytes_out, 4 * payload.len() as u64);
+                        Frame::ProjectOk(payload)
+                    }
+                    Err(e) => {
+                        ServiceStats::bump(&stats.responses_err);
+                        Frame::Error {
+                            code: ErrorCode::from_error(&e),
+                            msg: format!("{e} [request: {desc}]"),
+                        }
+                    }
+                }
+            }
+            // Server-to-client frames arriving at the server are a
+            // client bug; answer once and drop the connection.
+            Frame::Pong
+            | Frame::ProjectOk(_)
+            | Frame::Error { .. }
+            | Frame::StatsResponse(_)
+            | Frame::ShutdownAck => {
+                let _ = Frame::Error {
+                    code: ErrorCode::Protocol,
+                    msg: "unexpected client frame".into(),
+                }
+                .write_to(&mut stream);
+                return;
+            }
+        };
+        if reply.write_to(&mut stream).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_stats_shutdown_over_tcp() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+        Frame::Ping.write_to(&mut stream).unwrap();
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::Pong);
+
+        Frame::StatsRequest.write_to(&mut stream).unwrap();
+        match Frame::read_from(&mut stream).unwrap() {
+            Frame::StatsResponse(pairs) => {
+                assert!(pairs.iter().any(|(n, _)| n == "requests_total"));
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+
+        Frame::Shutdown.write_to(&mut stream).unwrap();
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::ShutdownAck);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_completes_while_an_idle_client_is_still_connected() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        // Park a connection in the server: after the ping round-trip its
+        // handler is provably blocked in a frame read.
+        let mut idle = TcpStream::connect(addr).unwrap();
+        Frame::Ping.write_to(&mut idle).unwrap();
+        assert_eq!(Frame::read_from(&mut idle).unwrap(), Frame::Pong);
+
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        Frame::Shutdown.write_to(&mut ctl).unwrap();
+        assert_eq!(Frame::read_from(&mut ctl).unwrap(), Frame::ShutdownAck);
+        // The server must join its handlers even though `idle` never
+        // disconnected — shutdown actively severs open connections.
+        handle.join().unwrap();
+        drop(idle);
+    }
+
+    #[test]
+    fn garbage_bytes_get_protocol_error() {
+        use std::io::Write;
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        let mut bad = TcpStream::connect(addr).unwrap();
+        bad.write_all(b"GET / HTTP/1.1\r\n\r\n            ").unwrap();
+        bad.flush().unwrap();
+        match Frame::read_from(&mut bad) {
+            Ok(Frame::Error { code: ErrorCode::Protocol, .. }) => {}
+            other => panic!("expected protocol error frame, got {other:?}"),
+        }
+
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        Frame::Shutdown.write_to(&mut ctl).unwrap();
+        assert_eq!(Frame::read_from(&mut ctl).unwrap(), Frame::ShutdownAck);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,105 @@
+//! Service-wide counters: lock-free atomics bumped on the request path,
+//! snapshotted for the `Stats` wire frame and `mlproj info --addr`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomics-based service counters. One instance is shared (via `Arc`)
+/// between the server's connection handlers, the scheduler workers and
+/// the plan cache; every field is monotonically increasing.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    /// Frames of any type received from clients.
+    pub frames_in: AtomicU64,
+    /// Projection requests received.
+    pub requests_total: AtomicU64,
+    /// Projection requests answered with a result payload.
+    pub responses_ok: AtomicU64,
+    /// Projection requests answered with an error frame.
+    pub responses_err: AtomicU64,
+    /// Requests rejected with `Busy` because the job queue was full.
+    pub busy_rejections: AtomicU64,
+    /// Micro-batches executed by scheduler workers.
+    pub batches: AtomicU64,
+    /// Requests that rode in a batch of size ≥ 2.
+    pub batched_requests: AtomicU64,
+    /// Plan-cache hits (request reused a compiled plan + workspace).
+    pub cache_hits: AtomicU64,
+    /// Plan-cache misses (request forced a fresh compile).
+    pub cache_misses: AtomicU64,
+    /// Plans evicted from the cache (capacity pressure).
+    pub cache_evictions: AtomicU64,
+    /// Payload bytes received in project requests.
+    pub payload_bytes_in: AtomicU64,
+    /// Payload bytes returned in project responses.
+    pub payload_bytes_out: AtomicU64,
+    /// Connections accepted.
+    pub connections: AtomicU64,
+}
+
+impl ServiceStats {
+    /// New zeroed counter block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Relaxed increment helper.
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Relaxed add helper.
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Snapshot every counter as stable `(name, value)` pairs — the
+    /// payload of the `StatsResponse` frame.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        vec![
+            ("frames_in".into(), ld(&self.frames_in)),
+            ("requests_total".into(), ld(&self.requests_total)),
+            ("responses_ok".into(), ld(&self.responses_ok)),
+            ("responses_err".into(), ld(&self.responses_err)),
+            ("busy_rejections".into(), ld(&self.busy_rejections)),
+            ("batches".into(), ld(&self.batches)),
+            ("batched_requests".into(), ld(&self.batched_requests)),
+            ("cache_hits".into(), ld(&self.cache_hits)),
+            ("cache_misses".into(), ld(&self.cache_misses)),
+            ("cache_evictions".into(), ld(&self.cache_evictions)),
+            ("payload_bytes_in".into(), ld(&self.payload_bytes_in)),
+            ("payload_bytes_out".into(), ld(&self.payload_bytes_out)),
+            ("connections".into(), ld(&self.connections)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_bumps() {
+        let s = ServiceStats::new();
+        ServiceStats::bump(&s.requests_total);
+        ServiceStats::bump(&s.requests_total);
+        ServiceStats::add(&s.payload_bytes_in, 1024);
+        let snap = s.snapshot();
+        let get = |name: &str| snap.iter().find(|(n, _)| n == name).unwrap().1;
+        assert_eq!(get("requests_total"), 2);
+        assert_eq!(get("payload_bytes_in"), 1024);
+        assert_eq!(get("responses_ok"), 0);
+    }
+
+    #[test]
+    fn snapshot_names_are_unique() {
+        let s = ServiceStats::new();
+        let snap = s.snapshot();
+        let mut names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), snap.len());
+    }
+}

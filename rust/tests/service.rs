@@ -1,0 +1,135 @@
+//! End-to-end loopback tests for the projection service: a real
+//! `TcpListener` server, real blocking clients on separate threads, and
+//! the acceptance bar from the service PR — results round-tripped
+//! through the wire must be **bit-identical** to in-process projection,
+//! for bi-level ℓ1,∞ matrices and tri-level ℓ1,∞,∞ tensors, under ≥ 4
+//! concurrent clients, with plan-cache hits on repeated-shape traffic.
+
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::core::tensor::Tensor;
+use mlproj::core::MlprojError;
+use mlproj::projection::{Method, Norm, ProjectionSpec};
+use mlproj::service::{Client, SchedulerConfig, Server};
+
+fn stat(pairs: &[(String, u64)], name: &str) -> u64 {
+    pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+}
+
+#[test]
+fn concurrent_clients_bit_identical_bilevel_and_trilevel() {
+    let cfg = SchedulerConfig { workers: 3, queue_depth: 128, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    const CLIENTS: u64 = 4;
+    const ROUNDS: usize = 5;
+    let mut joins = Vec::new();
+    for seed in 0..CLIENTS {
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(1000 + seed);
+            for round in 0..ROUNDS {
+                // Bi-level ℓ1,∞ on a matrix (the paper's Algorithm 2).
+                let y = Matrix::random_uniform(20, 50, -2.0, 2.0, &mut rng);
+                let spec = ProjectionSpec::l1inf(1.0 + round as f64 * 0.5);
+                let expect = spec.project_matrix(&y).unwrap();
+                let got = client.project_matrix(&spec, &y).unwrap();
+                assert_eq!(
+                    got.data(),
+                    expect.data(),
+                    "bilevel mismatch: client {seed} round {round}"
+                );
+
+                // Tri-level ℓ1,∞,∞ on an order-3 tensor (Algorithm 5).
+                let mut d = vec![0.0f32; 4 * 6 * 8];
+                rng.fill_uniform(&mut d, -2.0, 2.0);
+                let t = Tensor::from_vec(vec![4, 6, 8], d).unwrap();
+                let spec3 = ProjectionSpec::trilevel_l1infinf(2.0);
+                let expect3 = spec3.project_tensor(&t).unwrap();
+                let got3 = client.project_tensor(&spec3, &t).unwrap();
+                assert_eq!(
+                    got3.data(),
+                    expect3.data(),
+                    "trilevel mismatch: client {seed} round {round}"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    let expected_ok = CLIENTS * (ROUNDS as u64) * 2;
+    assert_eq!(stat(&stats, "responses_ok"), expected_ok);
+    assert_eq!(stat(&stats, "responses_err"), 0);
+    // 4 clients share 5 matrix keys + 1 tensor key: repeated-shape
+    // traffic must hit the plan cache.
+    assert!(
+        stat(&stats, "cache_hits") > 0,
+        "expected plan-cache hits on repeated shapes, stats: {stats:?}"
+    );
+    assert!(stat(&stats, "cache_misses") >= 6);
+
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn exact_and_generic_methods_round_trip_through_the_wire() {
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let handle = server.spawn();
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let mut rng = Rng::new(7);
+    let y = Matrix::random_uniform(10, 30, -1.0, 1.0, &mut rng);
+
+    // Exact Euclidean ℓ1,∞ (Newton) selected via the method byte.
+    let newton = ProjectionSpec::l1inf(1.0).with_method(Method::ExactNewton);
+    assert_eq!(
+        client.project_matrix(&newton, &y).unwrap().data(),
+        newton.project_matrix(&y).unwrap().data()
+    );
+
+    // A generic bi-level combination exercises norm-list encoding.
+    let l2l1 = ProjectionSpec::new(vec![Norm::L2, Norm::L1], 0.8);
+    assert_eq!(
+        client.project_matrix(&l2l1, &y).unwrap().data(),
+        l2l1.project_matrix(&y).unwrap().data()
+    );
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn remote_errors_are_typed_and_connection_survives() {
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let handle = server.spawn();
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let mut rng = Rng::new(9);
+    let y = Matrix::random_uniform(6, 12, -1.0, 1.0, &mut rng);
+
+    // Norm-count mismatch comes back as InvalidArgument…
+    let bad = ProjectionSpec::new(vec![Norm::Linf, Norm::Linf, Norm::L1], 1.0);
+    let err = client.project_matrix(&bad, &y).unwrap_err();
+    assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+
+    // …and the same connection keeps working afterwards.
+    let good = ProjectionSpec::l1inf(0.5);
+    assert_eq!(
+        client.project_matrix(&good, &y).unwrap().data(),
+        good.project_matrix(&y).unwrap().data()
+    );
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "responses_err"), 1);
+    assert_eq!(stat(&stats, "responses_ok"), 1);
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
