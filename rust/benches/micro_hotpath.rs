@@ -1,14 +1,32 @@
-//! Hot-path micro-benchmarks (§Perf driver): per-stage decomposition of
-//! the bi-level ℓ1,∞ projection and a shoot-out of the three ℓ1
-//! threshold algorithms. This is the profile the optimization loop in
-//! EXPERIMENTS.md §Perf iterates on.
+//! Hot-path micro-benchmarks (the EXPERIMENTS.md §Perf driver): per-stage
+//! decomposition of the bi-level ℓ1,∞ projection, fused-vs-decomposed
+//! comparison against the memcpy roofline, and a shoot-out of the three
+//! ℓ1 threshold algorithms.
+//!
+//! Emits `target/bench_out/BENCH_hotpath.json` — flat records
+//! `{size, norms, backend, ns_per_op}` where `backend` names the
+//! measured path (`decomposed`, `fused-plan`, `fused-batch4-per-payload`,
+//! per-stage labels, `memcpy-roofline`) — alongside the CSV. The
+//! perf loop in EXPERIMENTS.md §Perf regenerates this file on every
+//! change to the kernels; CI regenerates it in fast mode on every push.
 
-use mlproj::bench::{black_box, Bencher, Report, Series};
+use mlproj::bench::{black_box, emit_json, Bencher, Measurement, OpRecord, Report, Series};
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
 use mlproj::core::sort::max_abs;
 use mlproj::projection::bilevel::bilevel_l1inf_inplace;
 use mlproj::projection::l1::{soft_threshold, L1Algo};
+use mlproj::projection::ProjectionSpec;
+
+/// Append one machine-readable record for a measured path.
+fn record(records: &mut Vec<OpRecord>, size: &str, label: &str, meas: &Measurement) {
+    records.push(OpRecord {
+        size: size.into(),
+        norms: "linf,l1".into(),
+        backend: label.into(),
+        ns_per_op: meas.median.as_nanos() as f64,
+    });
+}
 
 fn main() {
     let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
@@ -17,14 +35,36 @@ fn main() {
     let b = Bencher::from_env();
     let mut rng = Rng::new(9);
     let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+    let size = format!("{n}x{m}");
+    let mut records: Vec<OpRecord> = Vec::new();
 
-    // --- stage decomposition -------------------------------------------
+    // --- stage decomposition (the seed's colmax -> threshold -> clip) --
     let mut stages = Series::new(format!("bilevel stages {n}x{m}"));
-    stages.points.push(b.measure("total(inplace+clone)", || {
-        let mut x = y.clone();
-        bilevel_l1inf_inplace(&mut x, eta);
-        black_box(&x);
-    }));
+    let mut scratch = y.clone();
+    let decomposed = b.measure("decomposed(3-stage)", || {
+        // Reference decomposition: separate colmax sweep, allocating
+        // soft threshold, clip over every column.
+        let v: Vec<f32> = (0..m).map(|j| max_abs(y.col(j))).collect();
+        let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+        scratch.data_mut().copy_from_slice(y.data());
+        if tau > 0.0 {
+            for j in 0..m {
+                let u = v[j] - tau;
+                let col = scratch.col_mut(j);
+                if u <= 0.0 {
+                    col.fill(0.0);
+                } else {
+                    for x in col.iter_mut() {
+                        *x = x.clamp(-u, u);
+                    }
+                }
+            }
+        }
+        black_box(&scratch);
+    });
+    record(&mut records, &size, "decomposed", &decomposed);
+    stages.points.push(decomposed);
+
     stages.points.push(b.measure("colmax", || {
         let v: Vec<f32> = (0..m).map(|j| max_abs(y.col(j))).collect();
         black_box(v);
@@ -34,7 +74,6 @@ fn main() {
         black_box(soft_threshold(&v, eta, L1Algo::Condat));
     }));
     let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
-    let mut scratch = y.clone();
     stages.points.push(b.measure("clip", || {
         for j in 0..m {
             let u = v[j] - tau;
@@ -49,10 +88,60 @@ fn main() {
         }
         black_box(&scratch);
     }));
-    stages.points.push(b.measure("memcpy(roofline)", || {
+    for p in &stages.points[1..] {
+        records.push(OpRecord {
+            size: size.clone(),
+            norms: "linf,l1".into(),
+            backend: format!("stage:{}", p.x),
+            ns_per_op: p.median.as_nanos() as f64,
+        });
+    }
+
+    // --- fused paths vs the roofline ----------------------------------
+    let mut fused = Series::new(format!("fused vs roofline {n}x{m}"));
+    let free = b.measure("fused-free-fn", || {
+        scratch.data_mut().copy_from_slice(y.data());
+        bilevel_l1inf_inplace(&mut scratch, eta);
+        black_box(&scratch);
+    });
+    record(&mut records, &size, "fused-free-fn", &free);
+    fused.points.push(free);
+
+    let mut plan = ProjectionSpec::l1inf(eta).compile_for_matrix(n, m).expect("compile");
+    let plan_meas = b.measure("fused-plan", || {
+        scratch.data_mut().copy_from_slice(y.data());
+        plan.project_matrix_inplace(&mut scratch).expect("project");
+        black_box(&scratch);
+    });
+    record(&mut records, &size, "fused-plan", &plan_meas);
+    fused.points.push(plan_meas);
+
+    // Cross-request batching: 4 payloads through one pooled call. The
+    // JSON record is normalized to ns per *payload* so it compares
+    // directly against the single-payload backends at the same size.
+    const B: usize = 4;
+    let mut batch: Vec<Vec<f32>> = (0..B).map(|_| y.data().to_vec()).collect();
+    let batch_meas = b.measure(format!("fused-batch{B}(total)"), || {
+        for p in batch.iter_mut() {
+            p.copy_from_slice(y.data());
+        }
+        plan.project_batch_inplace(&mut batch).expect("project");
+        black_box(&batch);
+    });
+    records.push(OpRecord {
+        size: size.clone(),
+        norms: "linf,l1".into(),
+        backend: format!("fused-batch{B}-per-payload"),
+        ns_per_op: batch_meas.median.as_nanos() as f64 / B as f64,
+    });
+    fused.points.push(batch_meas);
+
+    let memcpy = b.measure("memcpy(roofline)", || {
         scratch.data_mut().copy_from_slice(y.data());
         black_box(&scratch);
-    }));
+    });
+    record(&mut records, &size, "memcpy-roofline", &memcpy);
+    fused.points.push(memcpy);
 
     // --- l1 threshold algorithms over big vectors ----------------------
     let mut l1algos = Series::new("l1 threshold (1M elems)");
@@ -71,6 +160,7 @@ fn main() {
 
     let mut rep = Report::new("Hot-path micro-benchmarks", "stage");
     rep.series.push(stages);
+    rep.series.push(fused);
     rep.series.push(l1algos);
     // table layout is per-series x-label here, so print manually:
     for s in &rep.series {
@@ -83,4 +173,5 @@ fn main() {
     std::fs::create_dir_all("target/bench_out").ok();
     std::fs::write("target/bench_out/micro_hotpath.csv", csv).ok();
     println!("csv -> target/bench_out/micro_hotpath.csv");
+    mlproj::bench::exit_on_emit_error(emit_json("BENCH_hotpath.json", &records));
 }

@@ -5,6 +5,7 @@
 
 pub mod check;
 pub mod error;
+pub mod kernels;
 pub mod matrix;
 pub mod rng;
 pub mod sort;

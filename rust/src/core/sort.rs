@@ -64,50 +64,26 @@ pub fn prefix_sums(xs: &[f32]) -> Vec<f64> {
     c
 }
 
-/// Maximum absolute value of a slice (0 for empty).
-///
-/// Eight independent accumulator lanes so the compiler can vectorize the
-/// reduction (a single `fold` with `f32::max` is a serial dependency
-/// chain); measured ~2× on the colmax stage of the bi-level projection
-/// (EXPERIMENTS.md §Perf). `v > acc` comparison ignores NaN like
-/// `f32::max` does.
+/// Maximum absolute value of a slice (0 for empty). Delegates to the
+/// 8-lane reduction in [`crate::core::kernels`] so every caller — the
+/// legacy bi-level free functions and the fused operator kernels alike —
+/// shares bit-identical arithmetic (EXPERIMENTS.md §Perf).
 #[inline]
 pub fn max_abs(xs: &[f32]) -> f32 {
-    let mut lanes = [0.0f32; 8];
-    let mut chunks = xs.chunks_exact(8);
-    for c in chunks.by_ref() {
-        for (acc, &x) in lanes.iter_mut().zip(c) {
-            let v = x.abs();
-            if v > *acc {
-                *acc = v;
-            }
-        }
-    }
-    let mut m = 0.0f32;
-    for &x in chunks.remainder() {
-        let v = x.abs();
-        if v > m {
-            m = v;
-        }
-    }
-    for &l in &lanes {
-        if l > m {
-            m = l;
-        }
-    }
-    m
+    crate::core::kernels::max_abs(xs)
 }
 
-/// ℓ1 norm of a slice, accumulated in f64.
+/// ℓ1 norm of a slice, accumulated in f64 (8-lane, fixed association —
+/// see [`crate::core::kernels::abs_sum`]).
 #[inline]
 pub fn l1_norm(xs: &[f32]) -> f64 {
-    xs.iter().map(|x| x.abs() as f64).sum()
+    crate::core::kernels::abs_sum(xs)
 }
 
-/// ℓ2 norm of a slice, accumulated in f64.
+/// ℓ2 norm of a slice, accumulated in f64 (8-lane, fixed association).
 #[inline]
 pub fn l2_norm(xs: &[f32]) -> f64 {
-    xs.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    crate::core::kernels::sq_sum(xs).sqrt()
 }
 
 #[cfg(test)]

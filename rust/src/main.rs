@@ -543,17 +543,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         0.0
     };
+    // Cross-request batching observables: how many requests rode in a
+    // multi-request batch, and the largest batch one pooled projection
+    // call executed (a lifetime high-water mark, not a per-run delta).
+    let (batches, batched) = (get("batches"), get("batched_requests"));
+    let batch_max = lookup(&after, "batch_size_max");
 
     println!(
         "throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
          ({total} requests in {wall_secs:.2}s, {busy_retries} busy retries)"
     );
     println!(
-        "server cache: {hits} hits / {misses} misses (hit rate {:.1}%), \
-         batches {}, batched requests {}",
-        hit_rate * 100.0,
-        get("batches"),
-        get("batched_requests")
+        "server cache: {hits} hits / {misses} misses (hit rate {:.1}%)",
+        hit_rate * 100.0
+    );
+    println!(
+        "batching: {batches} batches, {batched} batched requests, \
+         max batch size {batch_max}"
     );
 
     let path = harness::emit_json_kv(
@@ -567,6 +573,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ("p99_ms", p99),
             ("cache_hit_rate", hit_rate),
             ("busy_retries", busy_retries as f64),
+            ("batches", batches as f64),
+            ("batched_requests", batched as f64),
+            ("batch_size_max", batch_max as f64),
         ],
     )?;
     println!("json -> {}", path.display());

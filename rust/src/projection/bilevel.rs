@@ -13,60 +13,85 @@
 //!
 //! All functions operate in place on a [`Matrix`] (column-major, so every
 //! step is a contiguous scan); `*_new` wrappers clone.
+//!
+//! The matrix is streamed exactly twice: one fused sweep computes every
+//! column aggregate *and* the outer feasibility sum (so an in-ball input
+//! is detected without a threshold call or a second matrix pass), and one
+//! sweep applies the per-column inner projection (bit-identical to the
+//! seed's decomposition). The threshold itself runs in borrowed
+//! [`L1Scratch`] memory; these one-shot entry points allocate only the
+//! m-length aggregate vector (the compiled operator layer doesn't even do
+//! that — see [`crate::projection::operator`]).
 
+use crate::core::kernels;
 use crate::core::matrix::Matrix;
 use crate::core::sort::{l1_norm, l2_norm, max_abs};
-use crate::projection::l1::{project_l1_inplace, soft_threshold, L1Algo};
+use crate::projection::l1::{project_l1_with_scratch, threshold_on_nonneg, L1Algo, L1Scratch};
 use crate::projection::l2::project_l2_inplace;
 use crate::projection::Norm;
 
 /// Bi-level ℓ_{1,∞} projection (Algorithm 2), in place. O(nm).
 ///
-/// Step 1 computes the column max-abs vector `v_∞`, step 2 projects it
-/// onto the ℓ1 ball (Condat, linear), step 3 clamps each column to
-/// `[-u_j, u_j]`. Columns with `u_j == v_j` are untouched and skipped.
+/// Sweep 1 computes the column max-abs vector `v_∞` fused with its
+/// feasibility sum; the soft threshold runs on borrowed scratch; sweep 2
+/// clamps column j to `u_j = (v_j − τ)_+`. An in-ball input is detected
+/// during sweep 1 and skips the threshold and clamp entirely.
 pub fn bilevel_l1inf_inplace(y: &mut Matrix, eta: f64) {
     let m = y.cols();
     if m == 0 || y.rows() == 0 {
         return;
     }
-    // Step 1: v = per-column ‖·‖_∞ (contiguous scans).
+    // Sweep 1 (fused): v = per-column ‖·‖_∞ and Σ v in one pass.
     let mut v: Vec<f32> = Vec::with_capacity(m);
+    let mut sum = 0.0f64;
     for j in 0..m {
-        v.push(max_abs(y.col(j)));
+        let mx = max_abs(y.col(j));
+        v.push(mx);
+        sum += mx as f64;
     }
-    // Step 2: u = P^1_η(v). v is nonnegative, so the soft threshold applies
+    // u = P^1_η(v). v is nonnegative, so the soft threshold applies
     // directly: u_j = (v_j − τ)_+.
-    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    let mut scratch = L1Scratch::with_capacity(m);
+    let tau = threshold_on_nonneg(&v, sum, eta, L1Algo::Condat, &mut scratch) as f32;
     if tau <= 0.0 {
         return; // already inside the ball
     }
-    // Step 3: clamp column j to u_j = (v_j − τ)_+; skip untouched columns.
+    // Sweep 2: clamp column j to u_j (NOT skipping v_j == 0 columns:
+    // max_abs ignores NaN, so v_j == 0 does not prove the column is
+    // all-zero — the seed's unconditional fill is the bit-exact
+    // behavior, and a fill of an already-zero column costs nothing).
     for j in 0..m {
         let u = v[j] - tau;
         let col = y.col_mut(j);
         if u <= 0.0 {
             col.fill(0.0);
         } else {
-            for x in col.iter_mut() {
-                *x = x.clamp(-u, u);
-            }
+            kernels::clamp_abs(col, u);
         }
     }
 }
 
 /// Bi-level ℓ_{1,1} projection (Algorithm 3), in place.
 ///
-/// Aggregates columns by ℓ1 norm, projects the aggregate onto the ℓ1 ball,
-/// then ℓ1-projects each column to its own radius `u_j`. Yields *structured*
-/// sparsity (whole columns zeroed), unlike the exact ℓ_{1,1} projection.
+/// Aggregates columns by ℓ1 norm (fused with the feasibility sum),
+/// projects the aggregate onto the ℓ1 ball, then ℓ1-projects each column
+/// to its own radius `u_j` — reusing one scratch across columns. Yields
+/// *structured* sparsity (whole columns zeroed), unlike the exact
+/// ℓ_{1,1} projection.
 pub fn bilevel_l11_inplace(y: &mut Matrix, eta: f64) {
     let m = y.cols();
     if m == 0 || y.rows() == 0 {
         return;
     }
-    let v: Vec<f32> = (0..m).map(|j| l1_norm(y.col(j)) as f32).collect();
-    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    let mut v: Vec<f32> = Vec::with_capacity(m);
+    let mut sum = 0.0f64;
+    for j in 0..m {
+        let n = l1_norm(y.col(j)) as f32;
+        v.push(n);
+        sum += n as f64;
+    }
+    let mut scratch = L1Scratch::with_capacity(m.max(y.rows()));
+    let tau = threshold_on_nonneg(&v, sum, eta, L1Algo::Condat, &mut scratch) as f32;
     if tau <= 0.0 {
         return;
     }
@@ -76,24 +101,31 @@ pub fn bilevel_l11_inplace(y: &mut Matrix, eta: f64) {
         if u == 0.0 {
             col.fill(0.0);
         } else {
-            project_l1_inplace(col, u as f64);
+            project_l1_with_scratch(col, u as f64, L1Algo::Condat, &mut scratch);
         }
     }
 }
 
 /// Bi-level ℓ_{1,2} projection (Algorithm 4), in place.
 ///
-/// Aggregates columns by ℓ2 norm, ℓ1-projects the aggregate, rescales each
-/// column to its radius. For `q = 2` this *coincides* with the exact
-/// Euclidean ℓ_{1,2} projection (block soft thresholding) — tested in
-/// `l1l2_exact`.
+/// Aggregates columns by ℓ2 norm (fused with the feasibility sum),
+/// ℓ1-projects the aggregate, rescales each column to its radius. For
+/// `q = 2` this *coincides* with the exact Euclidean ℓ_{1,2} projection
+/// (block soft thresholding) — tested in `l1l2_exact`.
 pub fn bilevel_l12_inplace(y: &mut Matrix, eta: f64) {
     let m = y.cols();
     if m == 0 || y.rows() == 0 {
         return;
     }
-    let v: Vec<f32> = (0..m).map(|j| l2_norm(y.col(j)) as f32).collect();
-    let tau = soft_threshold(&v, eta, L1Algo::Condat) as f32;
+    let mut v: Vec<f32> = Vec::with_capacity(m);
+    let mut sum = 0.0f64;
+    for j in 0..m {
+        let n = l2_norm(y.col(j)) as f32;
+        v.push(n);
+        sum += n as f64;
+    }
+    let mut scratch = L1Scratch::with_capacity(m);
+    let tau = threshold_on_nonneg(&v, sum, eta, L1Algo::Condat, &mut scratch) as f32;
     if tau <= 0.0 {
         return;
     }
@@ -103,17 +135,14 @@ pub fn bilevel_l12_inplace(y: &mut Matrix, eta: f64) {
         if u == 0.0 {
             col.fill(0.0);
         } else if v[j] > u {
-            let s = u / v[j];
-            for x in col.iter_mut() {
-                *x *= s;
-            }
+            kernels::scale(col, u / v[j]);
         }
     }
 }
 
 /// Bi-level ℓ_{2,1} projection (Algorithm 7, appendix — the exclusive-LASSO
 /// flavour), in place: ℓ2-project the vector of column ℓ1 norms, then
-/// ℓ1-project each column to its radius.
+/// ℓ1-project each column to its radius (skipping unshrunk columns).
 pub fn bilevel_l21_inplace(y: &mut Matrix, eta: f64) {
     let m = y.cols();
     if m == 0 || y.rows() == 0 {
@@ -122,9 +151,10 @@ pub fn bilevel_l21_inplace(y: &mut Matrix, eta: f64) {
     let mut t: Vec<f32> = (0..m).map(|j| l1_norm(y.col(j)) as f32).collect();
     let before = t.clone();
     project_l2_inplace(&mut t, eta);
+    let mut scratch = L1Scratch::with_capacity(y.rows());
     for j in 0..m {
         if t[j] < before[j] {
-            project_l1_inplace(y.col_mut(j), t[j] as f64);
+            project_l1_with_scratch(y.col_mut(j), t[j] as f64, L1Algo::Condat, &mut scratch);
         }
     }
 }

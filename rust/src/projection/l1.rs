@@ -14,8 +14,28 @@
 //! `Σ_i (|y_i| − τ)_+ = η`; the ball projection is then
 //! `x_i = sign(y_i)·(|y_i| − τ)_+`. Threshold arithmetic is carried in f64
 //! — projection radii feed the SAE mask, so cancellation matters.
+//!
+//! ## Allocation discipline
+//!
+//! The threshold step is O(n) arithmetic on O(n) data — cheap enough that
+//! a heap allocation per call is measurable. Every algorithm therefore
+//! has an in-place core that borrows its working memory from an
+//! [`L1Scratch`] (abs copy, Michelot/Condat active and waiting lists):
+//!
+//! * [`soft_threshold_into`] — fuses the abs-pass with the feasibility
+//!   sum (one read of the input, no clone) and thresholds in borrowed
+//!   scratch;
+//! * [`threshold_on_nonneg`] — same, for callers that already hold
+//!   nonnegative values (column norms) and their serial feasibility sum;
+//! * [`project_l1_with_scratch`] — the full alloc-free ball projection.
+//!
+//! The historic allocating entry points ([`soft_threshold`],
+//! [`project_l1_inplace_with`], the three `threshold_*` functions) remain
+//! as thin wrappers over the same cores, so fused and legacy paths are
+//! bit-identical by construction (pinned by `tests/fused_reference.rs`).
 
-use crate::core::sort::{prefix_sums, sort_desc};
+use crate::core::kernels;
+use crate::core::sort::sort_desc;
 
 /// Which ℓ1 algorithm to use (benches sweep this).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -28,20 +48,55 @@ pub enum L1Algo {
     Condat,
 }
 
-/// Soft threshold via descending sort + prefix sums.
+/// Reusable working memory for the ℓ1 threshold algorithms.
 ///
-/// Input `abs` must be the *absolute values*; `eta > 0`; assumes
-/// `Σ abs > eta` (callers check feasibility first).
-pub fn threshold_sort(abs: &[f32], eta: f64) -> f64 {
-    debug_assert!(!abs.is_empty());
-    let mut u = abs.to_vec();
-    sort_desc(&mut u);
-    let c = prefix_sums(&u);
-    // Largest k with u_{k-1} > (c_{k-1} - eta) / k  (0-based).
+/// One scratch serves any number of sequential threshold/projection calls
+/// up to its capacity without touching the allocator; undersized scratch
+/// grows once and stays grown. The operator layer's `Workspace` owns one
+/// per concurrent partition.
+#[derive(Debug, Default)]
+pub struct L1Scratch {
+    /// |y| copy (sort algorithm sorts this; the others read it).
+    abs: Vec<f32>,
+    /// Active list (f64) for Michelot / Condat.
+    act: Vec<f64>,
+    /// Waiting list (f64) for Condat's premature-filtering pass.
+    wait: Vec<f64>,
+}
+
+impl L1Scratch {
+    /// Empty scratch (grows on first use).
+    pub fn new() -> Self {
+        L1Scratch::default()
+    }
+
+    /// Scratch pre-sized for inputs of length `n` — no further
+    /// allocation for any algorithm on inputs up to that length.
+    pub fn with_capacity(n: usize) -> Self {
+        L1Scratch {
+            abs: Vec::with_capacity(n),
+            act: Vec::with_capacity(n),
+            wait: Vec::with_capacity(n),
+        }
+    }
+
+    /// Bytes of backing capacity (for workspace accounting).
+    pub fn bytes(&self) -> usize {
+        self.abs.capacity() * std::mem::size_of::<f32>()
+            + (self.act.capacity() + self.wait.capacity()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// Descending-sorted prefix scan: largest k with
+/// `u_{k-1} > (c_{k-1} − η) / k` (0-based), where `c` is the running
+/// prefix sum. `sorted` must be sorted descending.
+fn sort_scan(sorted: &[f32], eta: f64) -> f64 {
     let mut tau = 0.0f64;
-    for k in 0..u.len() {
-        let t = (c[k] - eta) / (k + 1) as f64;
-        if (u[k] as f64) > t {
+    let mut acc = 0.0f64;
+    for (k, &u) in sorted.iter().enumerate() {
+        acc += u as f64;
+        let t = (acc - eta) / (k + 1) as f64;
+        if (u as f64) > t {
             tau = t;
         } else {
             break;
@@ -50,10 +105,8 @@ pub fn threshold_sort(abs: &[f32], eta: f64) -> f64 {
     tau.max(0.0)
 }
 
-/// Soft threshold via Michelot's iterative set reduction.
-pub fn threshold_michelot(abs: &[f32], eta: f64) -> f64 {
-    debug_assert!(!abs.is_empty());
-    let mut v: Vec<f64> = abs.iter().map(|&x| x as f64).collect();
+/// Michelot's set reduction on a pre-filled f64 active list (consumed).
+fn michelot_on(v: &mut Vec<f64>, eta: f64) -> f64 {
     let mut sum: f64 = v.iter().sum();
     let mut tau = (sum - eta) / v.len() as f64;
     loop {
@@ -79,14 +132,10 @@ pub fn threshold_michelot(abs: &[f32], eta: f64) -> f64 {
     }
 }
 
-/// Soft threshold via Condat's linear-time scan (Algorithm 1 of
-/// "Fast projection onto the simplex and the ℓ1 ball", Math. Prog. 2016).
-pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
-    debug_assert!(!abs.is_empty());
-    // Active list `v` is maintained as (count, sum); its members live in
-    // `active`, the waiting list in `waiting`.
-    let mut active: Vec<f64> = Vec::with_capacity(64);
-    let mut waiting: Vec<f64> = Vec::with_capacity(abs.len() / 2);
+/// Condat's linear-time scan on borrowed active/waiting lists.
+fn condat_on(abs: &[f32], eta: f64, active: &mut Vec<f64>, waiting: &mut Vec<f64>) -> f64 {
+    active.clear();
+    waiting.clear();
     let y0 = abs[0] as f64;
     active.push(y0);
     let mut sum = y0;
@@ -101,7 +150,7 @@ pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
                 sum += y;
             } else {
                 // Flush the active set to the waiting list; restart from y.
-                waiting.append(&mut active);
+                waiting.append(active);
                 active.push(y);
                 sum = y;
                 rho = y - eta;
@@ -109,7 +158,7 @@ pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
         }
     }
     // Pass 2: reconsider the waiting list.
-    for &y in &waiting {
+    for &y in waiting.iter() {
         if y > rho {
             active.push(y);
             sum += y;
@@ -141,26 +190,104 @@ pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
     rho.max(0.0)
 }
 
-/// Compute the soft threshold with the chosen algorithm, handling the
-/// "already feasible" case (returns 0.0 so the projection is the identity).
-pub fn soft_threshold(ys: &[f32], eta: f64, algo: L1Algo) -> f64 {
-    if ys.is_empty() || eta < 0.0 {
+/// Soft threshold via descending sort + prefix sums.
+///
+/// Input `abs` must be the *absolute values*; `eta > 0`; assumes
+/// `Σ abs > eta` (callers check feasibility first).
+pub fn threshold_sort(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    let mut u = abs.to_vec();
+    sort_desc(&mut u);
+    sort_scan(&u, eta)
+}
+
+/// Soft threshold via Michelot's iterative set reduction.
+pub fn threshold_michelot(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    let mut v: Vec<f64> = abs.iter().map(|&x| x as f64).collect();
+    michelot_on(&mut v, eta)
+}
+
+/// Soft threshold via Condat's linear-time scan (Algorithm 1 of
+/// "Fast projection onto the simplex and the ℓ1 ball", Math. Prog. 2016).
+pub fn threshold_condat(abs: &[f32], eta: f64) -> f64 {
+    debug_assert!(!abs.is_empty());
+    condat_on(abs, eta, &mut Vec::with_capacity(64), &mut Vec::with_capacity(abs.len() / 2))
+}
+
+/// Threshold already-nonnegative values (column norms) whose serial
+/// feasibility sum the caller computed during aggregation — the fused
+/// outer step of the bi-level kernels. `vals` is left untouched (the
+/// clamp stage still needs it); all working memory comes from `scratch`.
+///
+/// `sum` must be `Σ vals` accumulated serially in f64 over ascending
+/// indices, matching what [`soft_threshold`] computes internally.
+pub fn threshold_on_nonneg(
+    vals: &[f32],
+    sum: f64,
+    eta: f64,
+    algo: L1Algo,
+    scratch: &mut L1Scratch,
+) -> f64 {
+    if vals.is_empty() || eta < 0.0 {
         return 0.0;
     }
-    let abs: Vec<f32> = ys.iter().map(|y| y.abs()).collect();
-    let norm: f64 = abs.iter().map(|&a| a as f64).sum();
-    if norm <= eta {
+    if sum <= eta {
         return 0.0;
     }
     if eta == 0.0 {
         // Project to 0: any tau >= max works.
-        return abs.iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+        return kernels::max_abs(vals) as f64;
     }
     match algo {
-        L1Algo::Sort => threshold_sort(&abs, eta),
-        L1Algo::Michelot => threshold_michelot(&abs, eta),
-        L1Algo::Condat => threshold_condat(&abs, eta),
+        L1Algo::Sort => {
+            scratch.abs.clear();
+            scratch.abs.extend_from_slice(vals);
+            sort_desc(&mut scratch.abs);
+            sort_scan(&scratch.abs, eta)
+        }
+        L1Algo::Michelot => {
+            scratch.act.clear();
+            scratch.act.extend(vals.iter().map(|&x| x as f64));
+            michelot_on(&mut scratch.act, eta)
+        }
+        L1Algo::Condat => condat_on(vals, eta, &mut scratch.act, &mut scratch.wait),
     }
+}
+
+/// Alloc-free soft threshold: one fused pass writes |y| into the scratch
+/// while accumulating the feasibility sum, then thresholds in borrowed
+/// memory. Bit-identical to [`soft_threshold`] (which wraps it).
+pub fn soft_threshold_into(ys: &[f32], eta: f64, algo: L1Algo, scratch: &mut L1Scratch) -> f64 {
+    if ys.is_empty() || eta < 0.0 {
+        return 0.0;
+    }
+    let sum = kernels::abs_into_sum(ys, &mut scratch.abs);
+    if sum <= eta {
+        return 0.0;
+    }
+    if eta == 0.0 {
+        return kernels::max_abs(&scratch.abs) as f64;
+    }
+    let L1Scratch { abs, act, wait } = scratch;
+    match algo {
+        L1Algo::Sort => {
+            sort_desc(abs);
+            sort_scan(abs, eta)
+        }
+        L1Algo::Michelot => {
+            act.clear();
+            act.extend(abs.iter().map(|&x| x as f64));
+            michelot_on(act, eta)
+        }
+        L1Algo::Condat => condat_on(abs, eta, act, wait),
+    }
+}
+
+/// Compute the soft threshold with the chosen algorithm, handling the
+/// "already feasible" case (returns 0.0 so the projection is the identity).
+pub fn soft_threshold(ys: &[f32], eta: f64, algo: L1Algo) -> f64 {
+    soft_threshold_into(ys, eta, algo, &mut L1Scratch::new())
 }
 
 /// Project `xs` in place onto the ℓ1 ball of radius `eta` (Condat).
@@ -170,6 +297,12 @@ pub fn project_l1_inplace(xs: &mut [f32], eta: f64) {
 
 /// Project `xs` in place with a chosen algorithm.
 pub fn project_l1_inplace_with(xs: &mut [f32], eta: f64, algo: L1Algo) {
+    project_l1_with_scratch(xs, eta, algo, &mut L1Scratch::new());
+}
+
+/// Alloc-free ℓ1 ball projection: feasibility, threshold and shrink with
+/// every intermediate borrowed from `scratch`.
+pub fn project_l1_with_scratch(xs: &mut [f32], eta: f64, algo: L1Algo, scratch: &mut L1Scratch) {
     if xs.is_empty() {
         return;
     }
@@ -177,27 +310,30 @@ pub fn project_l1_inplace_with(xs: &mut [f32], eta: f64, algo: L1Algo) {
         xs.fill(0.0);
         return;
     }
-    let norm: f64 = xs.iter().map(|x| x.abs() as f64).sum();
-    if norm <= eta {
+    let sum = kernels::abs_into_sum(xs, &mut scratch.abs);
+    if sum <= eta {
         return;
     }
-    let abs: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let L1Scratch { abs, act, wait } = scratch;
     let tau = match algo {
-        L1Algo::Sort => threshold_sort(&abs, eta),
-        L1Algo::Michelot => threshold_michelot(&abs, eta),
-        L1Algo::Condat => threshold_condat(&abs, eta),
+        L1Algo::Sort => {
+            sort_desc(abs);
+            sort_scan(abs, eta)
+        }
+        L1Algo::Michelot => {
+            act.clear();
+            act.extend(abs.iter().map(|&x| x as f64));
+            michelot_on(act, eta)
+        }
+        L1Algo::Condat => condat_on(abs, eta, act, wait),
     };
-    shrink(xs, tau);
+    kernels::shrink(xs, tau as f32);
 }
 
 /// Apply the soft-threshold shrinkage `x_i = sign(y_i)(|y_i| − τ)_+`.
 #[inline]
 pub fn shrink(xs: &mut [f32], tau: f64) {
-    let t = tau as f32;
-    for x in xs.iter_mut() {
-        let a = x.abs() - t;
-        *x = if a > 0.0 { a.copysign(*x) } else { 0.0 };
-    }
+    kernels::shrink(xs, tau as f32);
 }
 
 /// Projection returning a new vector.
@@ -211,6 +347,11 @@ pub fn project_l1(xs: &[f32], eta: f64) -> Vec<f32> {
 ///
 /// Solution `x_i = sign(y_i)(|y_i| − τ·w_i)_+` with τ from a sort of
 /// `|y_i|/w_i` (the ℓ_{w1} of the paper's §3 list of "linear algorithms").
+/// NaN ratios (NaN input, or zero weight against zero value) sort via the
+/// IEEE total order instead of panicking and are excluded from the
+/// active-prefix scan, so the finite entries still receive the correct
+/// threshold; the NaN entries themselves collapse to 0 (the shrinkage
+/// comparison `a > 0` is false for NaN).
 pub fn project_weighted_l1(ys: &[f32], w: &[f32], eta: f64) -> Vec<f32> {
     assert_eq!(ys.len(), w.len());
     let mut x = ys.to_vec();
@@ -225,15 +366,22 @@ pub fn project_weighted_l1(ys: &[f32], w: &[f32], eta: f64) -> Vec<f32> {
     if norm <= eta {
         return x;
     }
-    // Sort ratios |y|/w descending; find the active prefix.
+    // Sort ratios |y|/w descending; find the active prefix. `total_cmp`
+    // keeps the sort total when a ratio is NaN (regression: this used to
+    // be `partial_cmp().unwrap()`, which panics on NaN input).
     let mut order: Vec<usize> = (0..ys.len()).collect();
     let ratio: Vec<f64> = ys.iter().zip(w).map(|(y, wi)| (y.abs() / wi) as f64).collect();
-    order.sort_unstable_by(|&a, &b| ratio[b].partial_cmp(&ratio[a]).unwrap());
-    // τ for prefix k: (Σ w_i|y_i| − η) / Σ w_i².
+    order.sort_unstable_by(|&a, &b| ratio[b].total_cmp(&ratio[a]));
+    // τ for prefix k: (Σ w_i|y_i| − η) / Σ w_i². NaN ratios sort first
+    // under the descending total order; skipping them (rather than
+    // breaking) keeps the finite prefix intact.
     let mut num = -eta;
     let mut den = 0.0f64;
     let mut tau = 0.0f64;
     for &i in &order {
+        if ratio[i].is_nan() {
+            continue;
+        }
         let wy = (w[i] * ys[i].abs()) as f64;
         let ww = (w[i] * w[i]) as f64;
         let t = (num + wy) / (den + ww);
@@ -430,6 +578,49 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_is_stateless_and_bit_identical() {
+        // One scratch across many calls must behave like fresh scratch
+        // per call, for every algorithm, including capacity growth.
+        let mut rng = crate::core::rng::Rng::new(77);
+        let mut shared = L1Scratch::new();
+        for round in 0..40 {
+            let n = 1 + rng.below(70);
+            let mut v = vec![0.0f32; n];
+            rng.fill_uniform(&mut v, -6.0, 6.0);
+            let eta = rng.uniform_range(0.0, 8.0);
+            for algo in ALGOS {
+                let fresh = soft_threshold(&v, eta, algo);
+                let reused = soft_threshold_into(&v, eta, algo, &mut shared);
+                assert_eq!(fresh.to_bits(), reused.to_bits(), "round {round} {algo:?}");
+                let mut a = v.clone();
+                let mut b = v.clone();
+                project_l1_inplace_with(&mut a, eta, algo);
+                project_l1_with_scratch(&mut b, eta, algo, &mut shared);
+                assert_eq!(a, b, "round {round} {algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_on_nonneg_matches_soft_threshold() {
+        let mut rng = crate::core::rng::Rng::new(78);
+        let mut scratch = L1Scratch::new();
+        for _ in 0..30 {
+            let n = 1 + rng.below(50);
+            let mut v = vec![0.0f32; n];
+            rng.fill_uniform(&mut v, 0.0, 5.0);
+            let eta = rng.uniform_range(0.0, 6.0);
+            // The serial ascending sum soft_threshold computes internally.
+            let sum: f64 = v.iter().map(|&a| a as f64).sum();
+            for algo in ALGOS {
+                let want = soft_threshold(&v, eta, algo);
+                let got = threshold_on_nonneg(&v, sum, eta, algo, &mut scratch);
+                assert_eq!(want.to_bits(), got.to_bits(), "{algo:?}");
+            }
+        }
+    }
+
+    #[test]
     fn weighted_reduces_to_plain_when_unit_weights() {
         let y = vec![3.0f32, -1.0, 0.5];
         let w = vec![1.0f32; 3];
@@ -448,6 +639,33 @@ mod tests {
         // inside ball -> identity
         let y2 = vec![0.1f32, 0.1];
         assert_eq!(project_weighted_l1(&y2, &w, 1.0), y2);
+    }
+
+    #[test]
+    fn weighted_nan_input_does_not_panic_and_projects_finite_entries() {
+        // Regression: the ratio sort used `partial_cmp().unwrap()` and
+        // panicked on NaN. NaN ratios now sort via the total order and
+        // are excluded from the prefix scan, so the finite entries get
+        // the same threshold they would with the NaN entry absent:
+        // plain ℓ1 of [3, 1, -2] at η=2 → τ = 1.5 → [1.5, 0, -0.5].
+        let y = vec![3.0f32, f32::NAN, 1.0, -2.0];
+        let w = vec![1.0f32; 4];
+        let x = project_weighted_l1(&y, &w, 2.0);
+        assert_eq!(x.len(), 4);
+        assert!((x[0] - 1.5).abs() < 1e-6, "{x:?}");
+        assert!(x[2].abs() < 1e-6, "{x:?}");
+        assert!((x[3] + 0.5).abs() < 1e-6, "{x:?}");
+        // The NaN entry shrinks to NaN (sign-preserving shrinkage of NaN).
+        assert!(x[1].is_nan() || x[1] == 0.0, "{x:?}");
+        // NaN weight is the other historic panic path: its entry zeroes
+        // (NaN comparison is false) and the rest still project.
+        let w2 = vec![1.0f32, f32::NAN, 1.0, 1.0];
+        let y2 = vec![3.0f32, 1.0, 1.0, -2.0];
+        let x2 = project_weighted_l1(&y2, &w2, 2.0);
+        assert_eq!(x2[1], 0.0, "{x2:?}");
+        let finite_mass: f64 =
+            [x2[0], x2[2], x2[3]].iter().map(|v| v.abs() as f64).sum();
+        assert!(finite_mass <= 2.0 + 1e-5, "{x2:?}");
     }
 
     #[test]

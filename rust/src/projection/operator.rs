@@ -45,12 +45,15 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::core::error::{MlprojError, Result};
+use crate::core::kernels;
 use crate::core::matrix::Matrix;
 use crate::core::sort::{l1_norm, l2_norm, max_abs};
 use crate::core::tensor::Tensor;
 use crate::parallel::chunks::even_ranges;
 use crate::parallel::pool::WorkerPool;
-use crate::projection::l1::{self, L1Algo};
+use crate::projection::l1::{
+    project_l1_with_scratch, threshold_on_nonneg, L1Algo, L1Scratch,
+};
 use crate::projection::{l1inf_exact, Norm};
 
 /// Chunks per worker the range partitions target (load balancing for
@@ -120,6 +123,19 @@ impl<T> SendPtr<T> {
         self.0
     }
 }
+
+/// Base pointer of one batched payload. Stored in the workspace so a
+/// micro-batch of B same-shape payloads can be partitioned as one
+/// B·cols column space without per-call allocation.
+///
+/// SAFETY contract: pointers are (re)filled from live `&mut` payloads at
+/// the top of every projection call and only dereferenced for column
+/// ranges the partitioning hands to exactly one task.
+#[derive(Debug, Clone, Copy)]
+struct JobPtr(*mut f32);
+
+unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
 
 /// Run `f` over disjoint contiguous ranges covering `0..total`: inline for
 /// [`ExecBackend::Serial`] (one full range), scoped pool tasks otherwise.
@@ -302,6 +318,9 @@ impl ProjectionSpec {
         let kernel: Box<dyn Projector> = match self.method {
             Method::Compositional => {
                 if self.norms.len() == 1 {
+                    if self.norms[0] == Norm::L1 {
+                        ws.l1 = L1Scratch::with_capacity(shape.iter().product());
+                    }
                     Box::new(FlatKernel {
                         norm: self.norms[0],
                         eta: self.eta,
@@ -309,10 +328,20 @@ impl ProjectionSpec {
                     })
                 } else if layout == Layout::ColMajorMatrix {
                     ws.colnorms = vec![0.0; shape[1]];
+                    // Outer soft threshold (and an outer ℓ1 projection on
+                    // the generic path) runs in borrowed scratch.
+                    ws.l1 = L1Scratch::with_capacity(shape[1]);
                     // The (ℓ1, ℓ∞) fast path derives radii from one soft
                     // threshold and never materializes projected norms.
                     if (self.norms[1], self.norms[0]) != (Norm::L1, Norm::Linf) {
                         ws.colnorms_proj = vec![0.0; shape[1]];
+                    }
+                    // Inner per-column ℓ1 projections run partitioned:
+                    // one scratch per concurrent task.
+                    if self.norms[0] == Norm::L1 {
+                        ws.l1s = (0..self.backend.parts_hint())
+                            .map(|_| L1Scratch::with_capacity(shape[0]))
+                            .collect();
                     }
                     Box::new(BilevelMatrixKernel {
                         rows: shape[0],
@@ -336,6 +365,13 @@ impl ProjectionSpec {
                     ws.max_fiber = shape[..r - 1].iter().copied().max().unwrap_or(0);
                     if self.norms[..r - 1].contains(&Norm::L1) {
                         ws.fibers = vec![0.0; self.backend.parts_hint() * ws.max_fiber];
+                        ws.l1s = (0..self.backend.parts_hint())
+                            .map(|_| L1Scratch::with_capacity(ws.max_fiber))
+                            .collect();
+                    }
+                    if self.norms[r - 1] == Norm::L1 {
+                        // Final vector projection over the top aggregate.
+                        ws.l1 = L1Scratch::with_capacity(shape[r - 1]);
                     }
                     Box::new(MultilevelKernel {
                         shape: shape.to_vec(),
@@ -375,6 +411,7 @@ impl ProjectionSpec {
                         fmt_norms(&self.norms)
                     )));
                 }
+                ws.l1 = L1Scratch::with_capacity(shape.iter().product());
                 Box::new(ExactFlatL1Kernel { eta: self.eta, algo: self.l1_algo })
             }
         };
@@ -425,7 +462,11 @@ enum Layout {
 }
 
 /// Preallocated scratch owned by a [`ProjectionPlan`]. All buffers are
-/// sized at compile time; projection calls only read/write them.
+/// sized at compile time; projection calls only read/write them. The
+/// batch-only buffers (`taus`, `job_ptrs`, the tail of `colnorms`) grow
+/// on the first call that batches B > 1 payloads and stay grown, so a
+/// *warm* plan performs zero heap allocation per call — single-payload
+/// or batched (pinned by `tests/operator_alloc.rs`).
 #[derive(Debug, Default)]
 pub struct Workspace {
     /// Original per-level aggregates `V_k` (level-k tensor, k = 1..r-1).
@@ -434,25 +475,41 @@ pub struct Workspace {
     u: Vec<Vec<f32>>,
     /// f64 accumulators for one aggregation pass (largest level length).
     acc: Vec<f64>,
-    /// Column q-norms for the bi-level matrix path.
+    /// Column q-norms for the bi-level matrix path (`B·cols` when a
+    /// batch of B payloads runs through the plan).
     colnorms: Vec<f32>,
-    /// Outer-projected column norms.
+    /// Outer-projected column norms (one payload's worth).
     colnorms_proj: Vec<f32>,
     /// Fiber-gather scratch: `parts` disjoint stripes of `max_fiber`.
     fibers: Vec<f32>,
     /// Length of one fiber stripe (max leading-axis size).
     max_fiber: usize,
+    /// Threshold scratch for outer/final ℓ1 projections (serial stages).
+    l1: L1Scratch,
+    /// Per-partition threshold scratch for inner ℓ1 projections that run
+    /// under the partitioned backend (one entry per concurrent task).
+    l1s: Vec<L1Scratch>,
+    /// Per-payload soft thresholds of a batched bi-level call.
+    taus: Vec<f32>,
+    /// Base pointers of the payloads in the current (batched) call.
+    job_ptrs: Vec<JobPtr>,
 }
 
 impl Workspace {
-    /// Total bytes held by the workspace buffers.
+    /// Total bytes held by the workspace buffers (capacity, since the
+    /// scratch vectors run length-elastic inside a fixed reservation).
     pub fn bytes(&self) -> usize {
         let f32s = self.v.iter().map(Vec::len).sum::<usize>()
             + self.u.iter().map(Vec::len).sum::<usize>()
-            + self.colnorms.len()
+            + self.colnorms.capacity()
             + self.colnorms_proj.len()
-            + self.fibers.len();
-        f32s * std::mem::size_of::<f32>() + self.acc.len() * std::mem::size_of::<f64>()
+            + self.fibers.len()
+            + self.taus.capacity();
+        f32s * std::mem::size_of::<f32>()
+            + self.acc.len() * std::mem::size_of::<f64>()
+            + self.l1.bytes()
+            + self.l1s.iter().map(L1Scratch::bytes).sum::<usize>()
+            + self.job_ptrs.capacity() * std::mem::size_of::<JobPtr>()
     }
 }
 
@@ -461,6 +518,19 @@ impl Workspace {
 pub trait Projector: Send {
     /// Project `data` in place.
     fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()>;
+
+    /// Project a batch of same-shape payloads — each an *independent*
+    /// projection with the plan's radius — in one call. Kernels that can
+    /// partition the whole batch across the backend override this (the
+    /// bi-level matrix kernel treats B payloads as one B·cols column
+    /// space); the default runs payloads sequentially, which is always
+    /// bit-identical to B single calls.
+    fn project_batch(&self, payloads: &mut [Vec<f32>], ws: &mut Workspace) -> Result<()> {
+        for p in payloads.iter_mut() {
+            self.project_inplace(p, ws)?;
+        }
+        Ok(())
+    }
 
     /// Human-readable description of the selected path.
     fn describe(&self) -> String;
@@ -515,6 +585,26 @@ impl ProjectionPlan {
         self.kernel.project_inplace(data, &mut self.ws)
     }
 
+    /// Project a batch of same-shape flat buffers, each independently,
+    /// in one kernel invocation. For the bi-level matrix family the whole
+    /// batch is partitioned across the execution backend as a single
+    /// column space (the service's cross-request batching); results are
+    /// bit-identical to calling [`ProjectionPlan::project_inplace`] on
+    /// each payload. Workspace buffers grow to the largest batch seen and
+    /// are reused, so warm batched calls are allocation-free.
+    pub fn project_batch_inplace(&mut self, payloads: &mut [Vec<f32>]) -> Result<()> {
+        let want: usize = self.shape.iter().product();
+        for p in payloads.iter() {
+            if p.len() != want {
+                return Err(MlprojError::ShapeMismatch {
+                    expected: vec![want],
+                    got: vec![p.len()],
+                });
+            }
+        }
+        self.kernel.project_batch(payloads, &mut self.ws)
+    }
+
     /// Project a column-major matrix in place.
     pub fn project_matrix_inplace(&mut self, y: &mut Matrix) -> Result<()> {
         if self.layout != Layout::ColMajorMatrix {
@@ -560,8 +650,11 @@ struct FlatKernel {
 }
 
 impl Projector for FlatKernel {
-    fn project_inplace(&self, data: &mut [f32], _ws: &mut Workspace) -> Result<()> {
-        self.norm.project_with(data, self.eta, self.algo);
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        match self.norm {
+            Norm::L1 => project_l1_with_scratch(data, self.eta, self.algo, &mut ws.l1),
+            norm => norm.project_with(data, self.eta, self.algo),
+        }
         Ok(())
     }
 
@@ -572,7 +665,12 @@ impl Projector for FlatKernel {
 
 /// Bi-level `BP_η^{p,q}` over a column-major matrix (Algorithms 1–4, 7),
 /// with the `(p, q) = (ℓ1, ℓ∞)` fast path of Algorithm 2. Serial and pool
-/// backends share the same partitioned stages.
+/// backends share the same partitioned stages, and a micro-batch of B
+/// same-shape payloads runs through the *same* stages as one partitioned
+/// B·cols column space: the matrix data is streamed exactly twice
+/// (aggregate, inner-project), every ℓ1 threshold runs in borrowed
+/// scratch, and in-ball payloads skip their clamp — no per-call
+/// allocation once the workspace is warm.
 struct BilevelMatrixKernel {
     rows: usize,
     cols: usize,
@@ -585,92 +683,156 @@ struct BilevelMatrixKernel {
     backend: ExecBackend,
 }
 
-impl Projector for BilevelMatrixKernel {
-    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+impl BilevelMatrixKernel {
+    /// Project the `jobs` payloads whose base pointers sit in
+    /// `ws.job_ptrs`. Each payload is an independent projection with the
+    /// plan's radius; stage partitioning spans all of them.
+    fn run(&self, jobs: usize, ws: &mut Workspace) -> Result<()> {
         let (rows, cols) = (self.rows, self.cols);
-        if rows == 0 || cols == 0 {
+        if rows == 0 || cols == 0 || jobs == 0 {
             return Ok(());
         }
-        // Stage 1 (partitioned): v_j = q(y_j), contiguous column scans.
+        let total = jobs * cols;
+        let Workspace { colnorms, colnorms_proj, l1, l1s, taus, job_ptrs, .. } = ws;
+        if colnorms.len() < total {
+            colnorms.resize(total, 0.0);
+        }
+        let ptrs: &[JobPtr] = job_ptrs;
+        // Stage 1 (partitioned): v_g = q(column g), contiguous scans over
+        // every payload's columns at once.
         {
-            let d: &[f32] = data;
             let q = self.q;
-            let vp = SendPtr(ws.colnorms.as_mut_ptr());
+            let vp = SendPtr(colnorms.as_mut_ptr());
             let vp = &vp;
-            run_partitioned(&self.backend, cols, move |_, (s, e)| {
-                for j in s..e {
-                    let col = &d[j * rows..(j + 1) * rows];
+            run_partitioned(&self.backend, total, move |_, (s, e)| {
+                for g in s..e {
+                    let (b, j) = (g / cols, g % cols);
+                    let col = unsafe {
+                        std::slice::from_raw_parts(ptrs[b].0.add(j * rows), rows)
+                    };
                     let n = match q {
                         Norm::Linf => max_abs(col),
                         Norm::L1 => l1_norm(col) as f32,
                         Norm::L2 => l2_norm(col) as f32,
                     };
                     unsafe {
-                        *vp.get().add(j) = n;
+                        *vp.get().add(g) = n;
                     }
                 }
             });
         }
         if (self.p, self.q) == (Norm::L1, Norm::Linf) {
-            // Algorithm 2 fast path: one soft threshold, then clamp.
-            let tau = l1::soft_threshold(&ws.colnorms, self.eta, self.algo) as f32;
-            if tau <= 0.0 {
-                return Ok(());
+            // Algorithm 2 fast path: one soft threshold per payload
+            // (scratch-borrowed, serial — the aggregate is only `cols`
+            // long), then one partitioned clamp over the whole batch.
+            if taus.len() < jobs {
+                taus.resize(jobs, 0.0);
             }
-            let v: &[f32] = &ws.colnorms;
-            let dp = SendPtr(data.as_mut_ptr());
-            let dp = &dp;
-            run_partitioned(&self.backend, cols, move |_, (s, e)| {
-                for j in s..e {
-                    let u = v[j] - tau;
-                    let col =
-                        unsafe { std::slice::from_raw_parts_mut(dp.get().add(j * rows), rows) };
+            let mut any_cut = false;
+            for b in 0..jobs {
+                let v = &colnorms[b * cols..(b + 1) * cols];
+                // Serial ascending feasibility sum: the order
+                // `soft_threshold` uses, so τ is bit-identical to the
+                // single-payload path on every backend.
+                let mut sum = 0.0f64;
+                for &x in v {
+                    sum += x as f64;
+                }
+                let tau = threshold_on_nonneg(v, sum, self.eta, self.algo, l1) as f32;
+                taus[b] = tau;
+                any_cut |= tau > 0.0;
+            }
+            if !any_cut {
+                return Ok(()); // every payload already inside its ball
+            }
+            let v: &[f32] = colnorms;
+            let taus: &[f32] = taus;
+            run_partitioned(&self.backend, total, move |_, (s, e)| {
+                for g in s..e {
+                    let (b, j) = (g / cols, g % cols);
+                    let tau = taus[b];
+                    // τ ≤ 0: this payload is inside its ball — untouched,
+                    // exactly like the single-payload early return.
+                    if tau <= 0.0 {
+                        continue;
+                    }
+                    let u = v[g] - tau;
+                    let col = unsafe {
+                        std::slice::from_raw_parts_mut(ptrs[b].0.add(j * rows), rows)
+                    };
                     if u <= 0.0 {
                         col.fill(0.0);
                     } else {
-                        for x in col.iter_mut() {
-                            *x = x.clamp(-u, u);
-                        }
+                        kernels::clamp_abs(col, u);
                     }
                 }
             });
             return Ok(());
         }
-        // Generic path: u = P^p_η(v), then per-column q re-projection.
-        ws.colnorms_proj.copy_from_slice(&ws.colnorms);
-        self.p.project_with(&mut ws.colnorms_proj, self.eta, self.algo);
-        let v: &[f32] = &ws.colnorms;
-        let u: &[f32] = &ws.colnorms_proj;
-        let q = self.q;
-        let algo = self.algo;
-        let dp = SendPtr(data.as_mut_ptr());
-        let dp = &dp;
-        run_partitioned(&self.backend, cols, move |_, (s, e)| {
-            for j in s..e {
-                if u[j] < v[j] {
-                    let col =
-                        unsafe { std::slice::from_raw_parts_mut(dp.get().add(j * rows), rows) };
-                    match q {
-                        Norm::Linf => {
-                            let cap = u[j].max(0.0);
-                            for x in col.iter_mut() {
-                                *x = x.clamp(-cap, cap);
+        // Generic path, per payload: u = P^p_η(v), then a partitioned
+        // per-column q re-projection (inner ℓ1 uses one scratch per
+        // concurrent task).
+        for b in 0..jobs {
+            let v_b = &colnorms[b * cols..(b + 1) * cols];
+            colnorms_proj.copy_from_slice(v_b);
+            match self.p {
+                Norm::L1 => {
+                    project_l1_with_scratch(colnorms_proj, self.eta, self.algo, l1)
+                }
+                p => p.project_with(colnorms_proj, self.eta, self.algo),
+            }
+            let u: &[f32] = colnorms_proj;
+            let q = self.q;
+            let algo = self.algo;
+            let base = ptrs[b];
+            let sp = SendPtr(l1s.as_mut_ptr());
+            let sp = &sp;
+            run_partitioned(&self.backend, cols, move |part, (s, e)| {
+                for j in s..e {
+                    if u[j] < v_b[j] {
+                        let col = unsafe {
+                            std::slice::from_raw_parts_mut(base.0.add(j * rows), rows)
+                        };
+                        match q {
+                            Norm::Linf => kernels::clamp_abs(col, u[j].max(0.0)),
+                            Norm::L2 => {
+                                let scale =
+                                    if v_b[j] > 0.0 { (u[j] / v_b[j]).max(0.0) } else { 0.0 };
+                                kernels::scale(col, scale);
                             }
-                        }
-                        Norm::L2 => {
-                            let scale = if v[j] > 0.0 { (u[j] / v[j]).max(0.0) } else { 0.0 };
-                            for x in col.iter_mut() {
-                                *x *= scale;
+                            Norm::L1 => {
+                                // SAFETY: scratch `part` is touched only
+                                // by this partition (disjoint indices).
+                                let scratch = unsafe { &mut *sp.get().add(part) };
+                                project_l1_with_scratch(
+                                    col,
+                                    u[j].max(0.0) as f64,
+                                    algo,
+                                    scratch,
+                                );
                             }
-                        }
-                        Norm::L1 => {
-                            l1::project_l1_inplace_with(col, u[j].max(0.0) as f64, algo)
                         }
                     }
                 }
-            }
-        });
+            });
+        }
         Ok(())
+    }
+}
+
+impl Projector for BilevelMatrixKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        ws.job_ptrs.clear();
+        ws.job_ptrs.push(JobPtr(data.as_mut_ptr()));
+        self.run(1, ws)
+    }
+
+    fn project_batch(&self, payloads: &mut [Vec<f32>], ws: &mut Workspace) -> Result<()> {
+        ws.job_ptrs.clear();
+        for p in payloads.iter_mut() {
+            ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
+        }
+        self.run(payloads.len(), ws)
     }
 
     fn describe(&self) -> String {
@@ -696,7 +858,7 @@ impl Projector for MultilevelKernel {
             return Ok(());
         }
         let r = self.norms.len();
-        let Workspace { v, u, acc, fibers, max_fiber, .. } = ws;
+        let Workspace { v, u, acc, fibers, max_fiber, l1, l1s, .. } = ws;
         // Forward: V_k = aggregate(V_{k-1}, q_k), with V_0 = data.
         for k in 0..r - 1 {
             let c = self.shape[k];
@@ -706,10 +868,14 @@ impl Projector for MultilevelKernel {
             let src: &[f32] = if k == 0 { &*data } else { &head[k - 1] };
             aggregate_level(&self.backend, self.norms[k], src, c, rest, &mut acc[..rest], dst);
         }
-        // Final vector projection: U_{r-1} = P^{q_r}_η(V_{r-1}).
+        // Final vector projection: U_{r-1} = P^{q_r}_η(V_{r-1}), ℓ1 in
+        // borrowed scratch so the whole engine stays allocation-free.
         let top = r - 2;
         u[top].copy_from_slice(&v[top]);
-        self.norms[r - 1].project_with(&mut u[top], self.eta, self.algo);
+        match self.norms[r - 1] {
+            Norm::L1 => project_l1_with_scratch(&mut u[top], self.eta, self.algo, l1),
+            norm => norm.project_with(&mut u[top], self.eta, self.algo),
+        }
         // Backward: expand each level's fibers to its projected radii.
         for k in (0..r - 1).rev() {
             let c = self.shape[k];
@@ -724,6 +890,7 @@ impl Projector for MultilevelKernel {
                     &u[0],
                     fibers.as_mut_slice(),
                     *max_fiber,
+                    l1s,
                     self.algo,
                 );
             } else {
@@ -740,6 +907,7 @@ impl Projector for MultilevelKernel {
                     &ut[0],
                     fibers.as_mut_slice(),
                     *max_fiber,
+                    l1s,
                     self.algo,
                 );
             }
@@ -813,7 +981,8 @@ fn aggregate_level(
 /// Project every leading-axis fiber of `tgt` onto the `norm`-ball with
 /// its own radius `un[t]`, given current fiber norms `vn[t]`. ℓ∞ clamps
 /// and ℓ2 scales stream in place; ℓ1 gathers each shrinking fiber into a
-/// per-partition stripe of `fibers`.
+/// per-partition stripe of `fibers` and thresholds it in that
+/// partition's [`L1Scratch`] — no allocation on any arm.
 #[allow(clippy::too_many_arguments)]
 fn expand_level(
     backend: &ExecBackend,
@@ -825,11 +994,13 @@ fn expand_level(
     un: &[f32],
     fibers: &mut [f32],
     max_fiber: usize,
+    l1s: &mut [L1Scratch],
     algo: L1Algo,
 ) {
     let tp = SendPtr(tgt.as_mut_ptr());
     let fp = SendPtr(fibers.as_mut_ptr());
-    let (tp, fp) = (&tp, &fp);
+    let sp = SendPtr(l1s.as_mut_ptr());
+    let (tp, fp, sp) = (&tp, &fp, &sp);
     run_partitioned(backend, rest, move |part, (s, e)| {
         let ptr = tp.get();
         match norm {
@@ -866,11 +1037,13 @@ fn expand_level(
                 }
             }
             Norm::L1 => {
-                // SAFETY: stripe `part` of `fibers` is touched only by
-                // this partition (disjoint `part` indices).
+                // SAFETY: stripe `part` of `fibers` and scratch `part`
+                // of `l1s` are touched only by this partition (disjoint
+                // `part` indices).
                 let fiber = unsafe {
                     std::slice::from_raw_parts_mut(fp.get().add(part * max_fiber), c)
                 };
+                let scratch = unsafe { &mut *sp.get().add(part) };
                 for t in s..e {
                     if un[t] >= vn[t] {
                         continue;
@@ -880,7 +1053,7 @@ fn expand_level(
                             *fv = *ptr.add(k * rest + t);
                         }
                     }
-                    l1::project_l1_inplace_with(fiber, un[t].max(0.0) as f64, algo);
+                    project_l1_with_scratch(fiber, un[t].max(0.0) as f64, algo, scratch);
                     for (k, fv) in fiber.iter().enumerate() {
                         unsafe {
                             *ptr.add(k * rest + t) = *fv;
@@ -931,8 +1104,8 @@ struct ExactFlatL1Kernel {
 }
 
 impl Projector for ExactFlatL1Kernel {
-    fn project_inplace(&self, data: &mut [f32], _ws: &mut Workspace) -> Result<()> {
-        l1::project_l1_inplace_with(data, self.eta, self.algo);
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        project_l1_with_scratch(data, self.eta, self.algo, &mut ws.l1);
         Ok(())
     }
 
@@ -945,6 +1118,7 @@ impl Projector for ExactFlatL1Kernel {
 mod tests {
     use super::*;
     use crate::core::rng::Rng;
+    use crate::projection::l1;
 
     #[test]
     fn spec_builders_set_norm_lists() {
@@ -1000,20 +1174,73 @@ mod tests {
 
     #[test]
     fn multilevel_workspace_is_preallocated() {
+        let f32b = std::mem::size_of::<f32>();
+        let f64b = std::mem::size_of::<f64>();
+        // One L1Scratch sized for n elements: |y| copy + two f64 lists.
+        let scratch = |n: usize| n * f32b + 2 * n * f64b;
         // ν = [Linf, Linf, L1]: no ℓ1 *expansion* level, so no fiber
-        // stripes — V + U per level (30 + 6 elements each) and the f64
-        // accumulator (30).
+        // stripes — V + U per level (30 + 6 elements each), the f64
+        // accumulator (30), and the final-ℓ1 threshold scratch (6).
         let plan = ProjectionSpec::trilevel_l1infinf(1.0).compile(&[4, 5, 6]).unwrap();
-        let expect = 2 * (30 + 6) * std::mem::size_of::<f32>() + 30 * std::mem::size_of::<f64>();
+        let expect = 2 * (30 + 6) * f32b + 30 * f64b + scratch(6);
         assert_eq!(plan.workspace_bytes(), expect);
-        // ν = [L1, L1, L1] expands ℓ1 fibers: one serial stripe of the
-        // max leading dim (5).
+        // ν = [L1, L1, L1] also expands ℓ1 fibers: one serial stripe of
+        // the max leading dim (5) plus that partition's scratch.
         let plan = ProjectionSpec::new(vec![Norm::L1, Norm::L1, Norm::L1], 1.0)
             .compile(&[4, 5, 6])
             .unwrap();
         let expect =
-            (2 * (30 + 6) + 5) * std::mem::size_of::<f32>() + 30 * std::mem::size_of::<f64>();
+            (2 * (30 + 6) + 5) * f32b + 30 * f64b + scratch(5) + scratch(6);
         assert_eq!(plan.workspace_bytes(), expect);
+    }
+
+    #[test]
+    fn batch_projection_is_bit_identical_to_singles() {
+        // A batch of B same-shape payloads through one plan must equal B
+        // independent single-payload calls exactly, on both backends —
+        // the correctness contract of the service's cross-request
+        // batching. Includes an in-ball payload (τ = 0) mixed into the
+        // batch and a degenerate 1x1 shape.
+        let mut rng = Rng::new(31);
+        for backend in [ExecBackend::Serial, ExecBackend::pool(3)] {
+            for (rows, cols) in [(1usize, 1usize), (7, 11), (16, 40)] {
+                let spec = ProjectionSpec::l1inf(1.3).with_backend(backend.clone());
+                let mut plan = spec.compile_for_matrix(rows, cols).unwrap();
+                let mut batch: Vec<Vec<f32>> = (0..4)
+                    .map(|b| {
+                        let mut d = vec![0.0f32; rows * cols];
+                        // Payload 2 stays inside the ball (tiny values).
+                        let scale = if b == 2 { 1e-4 } else { 2.0 };
+                        rng.fill_uniform(&mut d, -scale, scale);
+                        d
+                    })
+                    .collect();
+                let singles: Vec<Vec<f32>> = batch
+                    .iter()
+                    .map(|d| {
+                        let mut x = d.clone();
+                        plan.project_inplace(&mut x).unwrap();
+                        x
+                    })
+                    .collect();
+                plan.project_batch_inplace(&mut batch).unwrap();
+                for (b, (got, want)) in batch.iter().zip(&singles).enumerate() {
+                    assert_eq!(got, want, "payload {b} ({rows}x{cols})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rejects_wrong_length_payload() {
+        let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(3, 4).unwrap();
+        let mut batch = vec![vec![0.0f32; 12], vec![0.0f32; 11]];
+        assert!(matches!(
+            plan.project_batch_inplace(&mut batch),
+            Err(MlprojError::ShapeMismatch { .. })
+        ));
+        // Empty batches are a no-op.
+        plan.project_batch_inplace(&mut []).unwrap();
     }
 
     #[test]

@@ -55,6 +55,19 @@ impl PlanKey {
         }
     }
 
+    /// Key for a request header decoded on the buffer-reusing server
+    /// path (the payload lives in a recycled buffer, not the meta).
+    pub fn from_meta(meta: &crate::service::protocol::ProjectMeta) -> Self {
+        PlanKey {
+            norms: meta.norms.clone(),
+            eta_bits: meta.eta.to_bits(),
+            l1_algo: meta.l1_algo,
+            method: meta.method,
+            layout: meta.layout,
+            shape: meta.shape.clone(),
+        }
+    }
+
     /// The radius `η` this key encodes.
     pub fn eta(&self) -> f64 {
         f64::from_bits(self.eta_bits)

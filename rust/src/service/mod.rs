@@ -28,7 +28,7 @@ pub mod stats;
 
 pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
 pub use client::Client;
-pub use protocol::{ErrorCode, Frame, ProjectRequest, WireLayout};
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use protocol::{ErrorCode, Frame, ProjectMeta, ProjectRequest, WireLayout};
+pub use scheduler::{Job, ReplySlot, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerHandle};
 pub use stats::ServiceStats;

@@ -189,6 +189,34 @@ impl ErrorCode {
 // Request payload
 // ---------------------------------------------------------------------------
 
+/// The header of a projection request — everything except the payload.
+/// The server's hot path decodes a `Project` frame into a `ProjectMeta`
+/// plus a *reused* payload buffer (see [`decode_server_frame`]) so no
+/// payload-sized vector is allocated per request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProjectMeta {
+    /// Norm list `ν`, leading-axis norm first.
+    pub norms: Vec<Norm>,
+    /// Ball radius `η`.
+    pub eta: f64,
+    /// ℓ1 threshold algorithm.
+    pub l1_algo: L1Algo,
+    /// Algorithm family.
+    pub method: Method,
+    /// Payload layout.
+    pub layout: WireLayout,
+    /// Shape (`[rows, cols]` for matrices, one entry per axis otherwise).
+    pub shape: Vec<usize>,
+}
+
+impl ProjectMeta {
+    /// Short human-readable label ("linf,l1 η=1 2000x500").
+    pub fn describe(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{} η={} {}", fmt_norms(&self.norms), self.eta, dims.join("x"))
+    }
+}
+
 /// A projection job as carried on the wire: the full spec (norms, radius,
 /// ℓ1 algorithm, method), the data layout + shape, and the flat `f32`
 /// payload.
@@ -415,32 +443,19 @@ impl Frame {
             T_PING => Frame::Ping,
             T_PONG => Frame::Pong,
             T_PROJECT => {
-                let eta = f64::from_le_bytes(c.take(8)?.try_into().unwrap());
-                let l1_algo = algo_from_u8(c.u8()?)?;
-                let method = method_from_u8(c.u8()?)?;
-                let layout = WireLayout::from_u8(c.u8()?)?;
-                let nnorms = c.u8()? as usize;
-                let mut norms = Vec::with_capacity(nnorms);
-                for _ in 0..nnorms {
-                    norms.push(norm_from_u8(c.u8()?)?);
-                }
-                let ndim = c.u8()? as usize;
-                let mut shape = Vec::with_capacity(ndim);
-                for _ in 0..ndim {
-                    shape.push(c.u32()? as usize);
-                }
+                let meta = parse_project_meta(&mut c)?;
                 let payload = c.f32s()?;
                 // Framing only — semantic checks (payload vs shape, rank
                 // vs layout) are NOT applied here: a fully-framed but
                 // invalid request must get a typed `Invalid` reply from
                 // the plan/projection layer, not a dropped connection.
                 Frame::Project(ProjectRequest {
-                    norms,
-                    eta,
-                    l1_algo,
-                    method,
-                    layout,
-                    shape,
+                    norms: meta.norms,
+                    eta: meta.eta,
+                    l1_algo: meta.l1_algo,
+                    method: meta.method,
+                    layout: meta.layout,
+                    shape: meta.shape,
                     payload,
                 })
             }
@@ -501,6 +516,126 @@ impl Frame {
         r.read_exact(&mut body)?;
         Self::decode_body(ftype, &body)
     }
+}
+
+/// Parse the spec fields of a `Project` body (everything up to the
+/// payload) — shared by the allocating and buffer-reusing decode paths.
+fn parse_project_meta(c: &mut Cursor) -> Result<ProjectMeta> {
+    let eta = f64::from_le_bytes(c.take(8)?.try_into().unwrap());
+    let l1_algo = algo_from_u8(c.u8()?)?;
+    let method = method_from_u8(c.u8()?)?;
+    let layout = WireLayout::from_u8(c.u8()?)?;
+    let nnorms = c.u8()? as usize;
+    let mut norms = Vec::with_capacity(nnorms);
+    for _ in 0..nnorms {
+        norms.push(norm_from_u8(c.u8()?)?);
+    }
+    let ndim = c.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(c.u32()? as usize);
+    }
+    Ok(ProjectMeta { norms, eta, l1_algo, method, layout, shape })
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy server path
+// ---------------------------------------------------------------------------
+
+/// A frame as seen by the server's buffer-reusing read loop.
+#[derive(Debug, PartialEq)]
+pub enum ServerFrame {
+    /// A projection request; its payload was decoded into the caller's
+    /// reusable buffer, not an owned allocation.
+    Project(ProjectMeta),
+    /// Any other frame, decoded normally.
+    Other(Frame),
+}
+
+/// Read one frame's type byte + raw body into `body` (reused across
+/// calls: after the first few requests of a connection the read path
+/// performs no allocation). EOF before the first header byte surfaces as
+/// `Io(UnexpectedEof)` exactly like [`Frame::read_from`].
+pub fn read_raw_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<u8> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    let (version, ftype, body_len) = parse_header(&header)?;
+    if version != VERSION {
+        return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
+    }
+    body.clear();
+    body.resize(body_len, 0);
+    r.read_exact(body)?;
+    Ok(ftype)
+}
+
+/// Decode a raw frame for the server. `Project` payloads land in
+/// `payload` (cleared and refilled — the receive-buffer→payload copy is
+/// a straight memcpy on little-endian targets); every other frame type
+/// decodes through the normal owned path.
+pub fn decode_server_frame(
+    ftype: u8,
+    body: &[u8],
+    payload: &mut Vec<f32>,
+) -> Result<ServerFrame> {
+    if ftype != T_PROJECT {
+        return Ok(ServerFrame::Other(Frame::decode_body(ftype, body)?));
+    }
+    let mut c = Cursor { buf: body, pos: 0 };
+    let meta = parse_project_meta(&mut c)?;
+    c.f32s_into(payload)?;
+    if c.pos != body.len() {
+        return Err(perr(format!("{} trailing bytes after frame body", body.len() - c.pos)));
+    }
+    Ok(ServerFrame::Project(meta))
+}
+
+/// View an f32 payload as its little-endian wire bytes without copying.
+#[cfg(target_endian = "little")]
+fn payload_bytes(payload: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding or invalid bit patterns as bytes, u8
+    // alignment is 1, and the length arithmetic cannot overflow (the
+    // slice already fits in memory).
+    unsafe {
+        std::slice::from_raw_parts(payload.as_ptr() as *const u8, payload.len() * 4)
+    }
+}
+
+/// Write a `ProjectOk` frame, streaming the payload to the writer
+/// directly from the caller's f32 buffer — on little-endian targets the
+/// projected send buffer IS the wire payload; nothing is re-encoded into
+/// an intermediate frame allocation.
+pub fn write_project_ok<W: Write>(w: &mut W, payload: &[f32]) -> Result<()> {
+    let count = u32::try_from(payload.len())
+        .map_err(|_| perr("payload exceeds u32 element count"))?;
+    let body_len = 4usize + payload.len() * 4;
+    if body_len > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES + 4];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = VERSION;
+    head[5] = T_PROJECT_OK;
+    // bytes 6..8 reserved = 0
+    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
+    head[12..16].copy_from_slice(&count.to_le_bytes());
+    w.write_all(&head)?;
+    #[cfg(target_endian = "little")]
+    w.write_all(payload_bytes(payload))?;
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut buf = [0u8; 4096];
+        for chunk in payload.chunks(buf.len() / 4) {
+            for (i, &x) in chunk.iter().enumerate() {
+                buf[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf[..chunk.len() * 4])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
 }
 
 /// Parse + validate a 12-byte header; returns (version, type, body_len).
@@ -565,13 +700,40 @@ impl<'a> Cursor<'a> {
 
     /// `count: u32` followed by `count` little-endian f32s.
     fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
-        let mut out = Vec::with_capacity(n);
-        for chunk in raw.chunks_exact(4) {
-            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
-        }
+        let mut out = Vec::new();
+        self.f32s_into(&mut out)?;
         Ok(out)
+    }
+
+    /// Like [`Cursor::f32s`], into a caller-reused buffer. On
+    /// little-endian targets the bytes→f32 conversion is one memcpy.
+    fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
+        let n = self.u32()? as usize;
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| perr(format!("payload count {n} overflows the byte length")))?;
+        let raw = self.take(nbytes)?;
+        out.clear();
+        #[cfg(target_endian = "little")]
+        // SAFETY: `raw` holds exactly n*4 initialized bytes, the f32
+        // buffer is a disjoint allocation with reserved room for n
+        // elements, and any byte pattern is a valid f32 — so the
+        // set_len only exposes fully initialized elements. Skipping the
+        // resize avoids zero-filling the payload right before the copy
+        // overwrites it (this is the per-request decode pass).
+        unsafe {
+            out.reserve(n);
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, nbytes);
+            out.set_len(n);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            out.resize(n, 0.0);
+            for (slot, chunk) in out.iter_mut().zip(raw.chunks_exact(4)) {
+                *slot = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        Ok(())
     }
 }
 
@@ -760,6 +922,76 @@ mod tests {
         assert!(d.contains("linf,l1"), "{d}");
         assert!(d.contains("η=1.5"), "{d}");
         assert!(d.contains("2x3"), "{d}");
+    }
+
+    #[test]
+    fn server_read_path_matches_owned_decode() {
+        // read_raw_frame + decode_server_frame must see exactly what the
+        // allocating decoder sees, for Project and non-Project frames.
+        let req = sample_request();
+        let bytes = Frame::Project(req.clone()).encode().unwrap();
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut body = Vec::new();
+        let mut payload = vec![9.9f32; 3]; // stale content must be replaced
+        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
+        match decode_server_frame(ftype, &body, &mut payload).unwrap() {
+            ServerFrame::Project(meta) => {
+                assert_eq!(meta.norms, req.norms);
+                assert_eq!(meta.eta, req.eta);
+                assert_eq!(meta.l1_algo, req.l1_algo);
+                assert_eq!(meta.method, req.method);
+                assert_eq!(meta.layout, req.layout);
+                assert_eq!(meta.shape, req.shape);
+                assert_eq!(payload, req.payload);
+                assert!(meta.describe().contains("2x3"), "{}", meta.describe());
+            }
+            other => panic!("expected Project, got {other:?}"),
+        }
+
+        let bytes = Frame::Ping.encode().unwrap();
+        let mut cursor = std::io::Cursor::new(bytes);
+        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
+        assert_eq!(
+            decode_server_frame(ftype, &body, &mut payload).unwrap(),
+            ServerFrame::Other(Frame::Ping)
+        );
+    }
+
+    #[test]
+    fn server_read_path_is_strict_like_owned_decode() {
+        // Trailing garbage inside a Project body is still rejected.
+        let bytes = Frame::Project(sample_request()).encode().unwrap();
+        let mut long = bytes.clone();
+        long.push(0);
+        let body_len = (long.len() - HEADER_BYTES) as u32;
+        long[8..12].copy_from_slice(&body_len.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(long);
+        let mut body = Vec::new();
+        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
+        assert!(matches!(
+            decode_server_frame(ftype, &body, &mut Vec::new()),
+            Err(MlprojError::Protocol(_))
+        ));
+        // Bad magic fails at the header.
+        let mut bad = bytes;
+        bad[0] = b'X';
+        let mut cursor = std::io::Cursor::new(bad);
+        assert!(matches!(
+            read_raw_frame(&mut cursor, &mut body),
+            Err(MlprojError::Protocol(_))
+        ));
+    }
+
+    #[test]
+    fn write_project_ok_is_a_valid_project_ok_frame() {
+        let payload = vec![0.5f32, -1.25, f32::MIN, f32::MAX, 0.0];
+        let mut out = Vec::new();
+        write_project_ok(&mut out, &payload).unwrap();
+        assert_eq!(Frame::decode(&out).unwrap(), Frame::ProjectOk(payload));
+        // Empty payloads frame correctly too.
+        let mut out = Vec::new();
+        write_project_ok(&mut out, &[]).unwrap();
+        assert_eq!(Frame::decode(&out).unwrap(), Frame::ProjectOk(vec![]));
     }
 
     #[test]

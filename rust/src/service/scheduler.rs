@@ -13,12 +13,26 @@
 //!
 //! Micro-batching: when a worker dequeues a job it also steals every
 //! queued job with the *same* [`PlanKey`] (up to `batch_max`), then runs
-//! the whole batch against one plan lookup — repeated-shape traffic pays
-//! for one cache access and keeps the workspace hot in cache.
+//! the whole batch as **one** [`ProjectionPlan::project_batch_inplace`]
+//! call — the batch's payloads are partitioned jointly across the
+//! worker's execution backend (B·cols columns for the bi-level matrix
+//! family) instead of projecting job-by-job, so a pooled worker keeps
+//! every thread busy across the entire batch and pays one fork/join per
+//! stage rather than one per job.
+//!
+//! Allocation discipline: replies travel through a reusable
+//! [`ReplySlot`] (no channel machinery), each worker owns its batch and
+//! payload buffers, and [`run_batch`] moves payload vectors rather than
+//! copying — a warm worker on the serial execution backend executes a
+//! batch with **zero** heap allocation (pinned by
+//! `tests/operator_alloc.rs`; a pool backend additionally allocates its
+//! per-stage task scaffolding).
+//!
+//! [`ProjectionPlan::project_batch_inplace`]: crate::projection::ProjectionPlan::project_batch_inplace
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::core::error::{MlprojError, Result};
@@ -40,7 +54,8 @@ pub struct SchedulerConfig {
     /// Plans kept per cache shard.
     pub cache_cap: usize,
     /// Per-worker projection pool threads (0 = serial execution; the
-    /// paper's Prop. 6.4 parallelism *inside* one projection).
+    /// paper's Prop. 6.4 parallelism *inside* one projection, which
+    /// micro-batching stretches across the whole batch).
     pub exec_workers: usize,
 }
 
@@ -56,15 +71,88 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// One projection job: cache key, flat payload, and the channel the
-/// result (projected payload or error) is delivered on.
+/// A reusable single-value rendezvous between a submitter and the worker
+/// that completes its job.
+///
+/// One slot serves a whole connection's lifetime: the handler resets it,
+/// submits, blocks in [`ReplySlot::take`], and reuses the slot (and the
+/// payload vector it receives back) for the next request — no channel
+/// allocation per request. A connection speaks the protocol in lockstep,
+/// so at most one job per slot is ever in flight.
+#[derive(Debug, Default)]
+pub struct ReplySlot {
+    cell: Mutex<Option<Result<Vec<f32>>>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    /// Fresh shared slot.
+    pub fn new() -> Arc<ReplySlot> {
+        Arc::new(ReplySlot::default())
+    }
+
+    /// Deposit a result and wake the waiter.
+    pub fn put(&self, result: Result<Vec<f32>>) {
+        let mut cell = self.cell.lock().expect("reply slot poisoned");
+        *cell = Some(result);
+        self.cv.notify_all();
+    }
+
+    /// Block until a result arrives, then take it (leaving the slot
+    /// empty for reuse).
+    pub fn take(&self) -> Result<Vec<f32>> {
+        let mut cell = self.cell.lock().expect("reply slot poisoned");
+        loop {
+            if let Some(result) = cell.take() {
+                return result;
+            }
+            cell = self.cv.wait(cell).expect("reply slot poisoned");
+        }
+    }
+
+    /// Discard any stale result (e.g. the drop-notification of a job the
+    /// queue rejected) before submitting a new job.
+    pub fn reset(&self) {
+        let mut cell = self.cell.lock().expect("reply slot poisoned");
+        *cell = None;
+    }
+}
+
+/// One projection job: cache key, flat payload, and the slot the result
+/// (projected payload or error) is delivered on.
 pub struct Job {
     /// Plan-cache key derived from the request.
     pub key: PlanKey,
     /// Flat payload to project in place.
     pub payload: Vec<f32>,
-    /// Reply channel back to the connection handler.
-    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+    /// Reply slot; `None` once the job has been finished.
+    reply: Option<Arc<ReplySlot>>,
+}
+
+impl Job {
+    /// New job answering on `reply`.
+    pub fn new(key: PlanKey, payload: Vec<f32>, reply: Arc<ReplySlot>) -> Job {
+        Job { key, payload, reply: Some(reply) }
+    }
+
+    /// Deliver the result. Every job is finished exactly once; a job
+    /// dropped unfinished (worker panic, queue teardown) delivers an
+    /// internal error from its `Drop` so no submitter waits forever.
+    pub fn finish(mut self, result: Result<Vec<f32>>) {
+        if let Some(slot) = self.reply.take() {
+            slot.put(result);
+        }
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        if let Some(slot) = self.reply.take() {
+            slot.put(Err(MlprojError::Runtime(
+                "scheduler dropped the job before completion".into(),
+            )));
+        }
+    }
 }
 
 /// Clone an error by round-tripping it through its wire classification —
@@ -121,12 +209,13 @@ impl JobQueue {
         }
     }
 
-    /// Steal every queued job whose key matches `first`, preserving the
-    /// relative order of the rest; at most `batch_max` jobs total.
-    fn take_batch(&self, first: Job, batch_max: usize) -> Vec<Job> {
-        let mut batch = vec![first];
+    /// Steal every queued job whose key matches `batch[0]`, preserving
+    /// the relative order of the rest; at most `batch_max` jobs total.
+    /// `batch` must arrive holding exactly the first job.
+    fn fill_batch(&self, batch: &mut Vec<Job>, batch_max: usize) {
+        debug_assert_eq!(batch.len(), 1);
         if batch_max <= 1 {
-            return batch;
+            return;
         }
         let mut q = self.queue.lock().expect("job queue poisoned");
         let mut i = 0;
@@ -137,7 +226,6 @@ impl JobQueue {
                 i += 1;
             }
         }
-        batch
     }
 
     fn begin_shutdown(&self) {
@@ -171,15 +259,21 @@ impl Scheduler {
                 std::thread::spawn(move || {
                     // One execution backend per worker: either inline
                     // serial kernels or a private pool realizing the
-                    // paper's intra-projection parallelism.
+                    // paper's intra-projection parallelism — which the
+                    // batched run stretches across the whole micro-batch.
                     let backend = if exec_workers > 0 {
                         ExecBackend::pool(exec_workers)
                     } else {
                         ExecBackend::Serial
                     };
+                    // Worker-owned, warm-reused buffers: the batch under
+                    // execution and the payloads moved out of it.
+                    let mut batch: Vec<Job> = Vec::new();
+                    let mut payloads: Vec<Vec<f32>> = Vec::new();
                     while let Some(job) = queue.pop() {
-                        let batch = queue.take_batch(job, batch_max);
-                        run_batch(w, &cache, &stats, &backend, batch);
+                        batch.push(job);
+                        queue.fill_batch(&mut batch, batch_max);
+                        run_batch(w, &cache, &stats, &backend, &mut batch, &mut payloads);
                     }
                 })
             })
@@ -200,14 +294,14 @@ impl Scheduler {
         })
     }
 
-    /// Convenience for connection handlers: enqueue a wire request and
-    /// block until its result arrives.
+    /// Convenience for one-shot callers: enqueue a wire request and
+    /// block until its result arrives. Connection handlers reuse a
+    /// long-lived [`ReplySlot`] instead.
     pub fn submit_and_wait(&self, req: ProjectRequest) -> Result<Vec<f32>> {
         let key = PlanKey::from_request(&req);
-        let (tx, rx) = mpsc::channel();
-        self.try_submit(Job { key, payload: req.payload, reply: tx })?;
-        rx.recv()
-            .map_err(|_| MlprojError::Runtime("scheduler worker dropped the job".into()))?
+        let slot = ReplySlot::new();
+        self.try_submit(Job::new(key, req.payload, Arc::clone(&slot)))?;
+        slot.take()
     }
 
     /// Signal shutdown, drain the queue, and join every worker.
@@ -226,32 +320,70 @@ impl Drop for Scheduler {
     }
 }
 
-/// Execute one same-key batch against a single plan lookup on the
-/// worker's own cache shard.
-fn run_batch(
+/// Execute one same-key batch: a single plan lookup on the worker's own
+/// cache shard, then one pooled [`project_batch_inplace`] over every
+/// payload. `batch` is drained; `payloads` is caller-owned scratch so a
+/// warm worker allocates nothing. Public so the allocation-audit tests
+/// can drive the exact worker body.
+///
+/// [`project_batch_inplace`]: crate::projection::ProjectionPlan::project_batch_inplace
+pub fn run_batch(
     worker: usize,
     cache: &ShardedPlanCache,
     stats: &ServiceStats,
     backend: &ExecBackend,
-    mut batch: Vec<Job>,
+    batch: &mut Vec<Job>,
+    payloads: &mut Vec<Vec<f32>>,
 ) {
+    if batch.is_empty() {
+        return;
+    }
     ServiceStats::bump(&stats.batches);
+    ServiceStats::raise(&stats.batch_size_max, batch.len() as u64);
     if batch.len() >= 2 {
         ServiceStats::add(&stats.batched_requests, batch.len() as u64);
     }
-    let key = batch[0].key.clone();
-    let outcome = cache.with_plan(Some(worker), &key, backend, |plan| {
-        for job in batch.iter_mut() {
-            let mut payload = std::mem::take(&mut job.payload);
-            let result = plan.project_inplace(&mut payload).map(|()| payload);
-            // A receiver that hung up is the client's problem, not ours.
-            let _ = job.reply.send(result);
+    // Answer jobs whose payload length cannot match the plan's shape
+    // individually, so one malformed request never fails its batch.
+    let want = batch[0].key.shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+    let mut i = 0;
+    while i < batch.len() {
+        if Some(batch[i].payload.len()) != want {
+            let job = batch.remove(i);
+            let got = job.payload.len();
+            job.finish(Err(MlprojError::ShapeMismatch {
+                expected: vec![want.unwrap_or(usize::MAX)],
+                got: vec![got],
+            }));
+        } else {
+            i += 1;
         }
-    });
-    if let Err(e) = outcome {
-        // Plan compile failed: every job in the batch gets the error.
-        for job in &batch {
-            let _ = job.reply.send(Err(clone_error(&e)));
+    }
+    if batch.is_empty() {
+        return;
+    }
+    // Move the payloads out of the jobs (buffer reuse, not copies).
+    payloads.clear();
+    for job in batch.iter_mut() {
+        payloads.push(std::mem::take(&mut job.payload));
+    }
+    let outcome = {
+        let key = &batch[0].key;
+        cache.with_plan(Some(worker), key, backend, |plan| plan.project_batch_inplace(payloads))
+    };
+    match outcome {
+        Ok(Ok(())) => {
+            for (job, payload) in batch.drain(..).zip(payloads.drain(..)) {
+                job.finish(Ok(payload));
+            }
+        }
+        // Plan compile or batch projection failed: every job in the
+        // batch gets the (cloned) error.
+        Ok(Err(e)) | Err(e) => {
+            payloads.clear();
+            for job in batch.drain(..) {
+                job.finish(Err(clone_error(&e)));
+            }
         }
     }
 }
@@ -276,19 +408,42 @@ mod tests {
         }
     }
 
-    #[test]
-    fn queue_rejects_when_full_and_drains_on_shutdown() {
-        let q = JobQueue::new(2);
-        let (tx, _rx) = mpsc::channel();
-        let key = PlanKey {
+    fn test_key(shape: Vec<usize>) -> PlanKey {
+        PlanKey {
             norms: vec![Norm::L1],
             eta_bits: 1.0f64.to_bits(),
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Tensor,
-            shape: vec![4],
-        };
-        let mk = || Job { key: key.clone(), payload: vec![0.0; 4], reply: tx.clone() };
+            shape,
+        }
+    }
+
+    #[test]
+    fn reply_slot_round_trips_and_resets() {
+        let slot = ReplySlot::new();
+        slot.put(Ok(vec![1.0, 2.0]));
+        assert_eq!(slot.take().unwrap(), vec![1.0, 2.0]);
+        // A stale value is discarded by reset.
+        slot.put(Err(MlprojError::ServiceBusy));
+        slot.reset();
+        slot.put(Ok(vec![3.0]));
+        assert_eq!(slot.take().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn dropped_job_reports_instead_of_hanging() {
+        let slot = ReplySlot::new();
+        let job = Job::new(test_key(vec![2]), vec![0.0; 2], Arc::clone(&slot));
+        drop(job);
+        assert!(matches!(slot.take(), Err(MlprojError::Runtime(_))));
+    }
+
+    #[test]
+    fn queue_rejects_when_full_and_drains_on_shutdown() {
+        let q = JobQueue::new(2);
+        let slot = ReplySlot::new();
+        let mk = || Job::new(test_key(vec![4]), vec![0.0; 4], Arc::clone(&slot));
         q.try_push(mk()).unwrap();
         q.try_push(mk()).unwrap();
         assert!(matches!(q.try_push(mk()), Err(MlprojError::ServiceBusy)));
@@ -301,31 +456,21 @@ mod tests {
     }
 
     #[test]
-    fn take_batch_coalesces_only_matching_keys() {
+    fn fill_batch_coalesces_only_matching_keys() {
         let q = JobQueue::new(16);
-        let (tx, _rx) = mpsc::channel();
-        let key_a = PlanKey {
-            norms: vec![Norm::L1],
-            eta_bits: 1.0f64.to_bits(),
-            l1_algo: crate::projection::l1::L1Algo::Condat,
-            method: crate::projection::Method::Compositional,
-            layout: WireLayout::Tensor,
-            shape: vec![4],
-        };
-        let mut key_b = key_a.clone();
-        key_b.shape = vec![8];
-        let mk = |k: &PlanKey, tag: f32| Job {
-            key: k.clone(),
-            payload: vec![tag; k.shape[0]],
-            reply: tx.clone(),
+        let slot = ReplySlot::new();
+        let key_a = test_key(vec![4]);
+        let key_b = test_key(vec![8]);
+        let mk = |k: &PlanKey, tag: f32| {
+            Job::new(k.clone(), vec![tag; k.shape[0]], Arc::clone(&slot))
         };
         // Queue: A1 B1 A2 A3; first dequeued job is A0.
         q.try_push(mk(&key_a, 1.0)).unwrap();
         q.try_push(mk(&key_b, 9.0)).unwrap();
         q.try_push(mk(&key_a, 2.0)).unwrap();
         q.try_push(mk(&key_a, 3.0)).unwrap();
-        let first = mk(&key_a, 0.0);
-        let batch = q.take_batch(first, 3);
+        let mut batch = vec![mk(&key_a, 0.0)];
+        q.fill_batch(&mut batch, 3);
         // batch_max=3: A0 + A1 + A2; A3 and B1 stay queued, order kept.
         assert_eq!(batch.len(), 3);
         assert!(batch.iter().all(|j| j.key == key_a));
@@ -338,20 +483,13 @@ mod tests {
     }
 
     #[test]
-    fn take_batch_disabled_at_one() {
+    fn fill_batch_disabled_at_one() {
         let q = JobQueue::new(4);
-        let (tx, _rx) = mpsc::channel();
-        let key = PlanKey {
-            norms: vec![Norm::L1],
-            eta_bits: 1.0f64.to_bits(),
-            l1_algo: crate::projection::l1::L1Algo::Condat,
-            method: crate::projection::Method::Compositional,
-            layout: WireLayout::Tensor,
-            shape: vec![2],
-        };
-        q.try_push(Job { key: key.clone(), payload: vec![0.0; 2], reply: tx.clone() }).unwrap();
-        let batch =
-            q.take_batch(Job { key: key.clone(), payload: vec![1.0; 2], reply: tx }, 1);
+        let slot = ReplySlot::new();
+        let key = test_key(vec![2]);
+        q.try_push(Job::new(key.clone(), vec![0.0; 2], Arc::clone(&slot))).unwrap();
+        let mut batch = vec![Job::new(key, vec![1.0; 2], slot)];
+        q.fill_batch(&mut batch, 1);
         assert_eq!(batch.len(), 1);
         assert!(q.pop().is_some());
     }
@@ -387,6 +525,66 @@ mod tests {
     }
 
     #[test]
+    fn batched_jobs_match_per_job_projection_bitwise() {
+        // Drive the exact worker body with a real multi-job batch and
+        // check every reply against the single-call path.
+        let stats = Arc::new(ServiceStats::new());
+        let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats));
+        let backend = ExecBackend::Serial;
+        let mut rng = Rng::new(12);
+        let key = PlanKey {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta_bits: 0.9f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![8, 20],
+        };
+        let inputs: Vec<Matrix> =
+            (0..5).map(|_| Matrix::random_uniform(8, 20, -2.0, 2.0, &mut rng)).collect();
+        let slots: Vec<Arc<ReplySlot>> = (0..5).map(|_| ReplySlot::new()).collect();
+        let mut batch: Vec<Job> = inputs
+            .iter()
+            .zip(&slots)
+            .map(|(y, s)| Job::new(key.clone(), y.data().to_vec(), Arc::clone(s)))
+            .collect();
+        let mut payloads = Vec::new();
+        run_batch(0, &cache, &stats, &backend, &mut batch, &mut payloads);
+        for (y, slot) in inputs.iter().zip(&slots) {
+            let expect = ProjectionSpec::l1inf(0.9).project_matrix(y).unwrap();
+            assert_eq!(&slot.take().unwrap()[..], expect.data());
+        }
+        use std::sync::atomic::Ordering as O;
+        assert_eq!(stats.batches.load(O::Relaxed), 1);
+        assert_eq!(stats.batched_requests.load(O::Relaxed), 5);
+        assert_eq!(stats.batch_size_max.load(O::Relaxed), 5);
+    }
+
+    #[test]
+    fn bad_payload_in_batch_fails_alone() {
+        let stats = Arc::new(ServiceStats::new());
+        let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats));
+        let backend = ExecBackend::Serial;
+        let key = PlanKey {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![3, 4],
+        };
+        let good_slot = ReplySlot::new();
+        let bad_slot = ReplySlot::new();
+        let mut batch = vec![
+            Job::new(key.clone(), vec![0.5; 12], Arc::clone(&good_slot)),
+            Job::new(key.clone(), vec![0.5; 11], Arc::clone(&bad_slot)),
+        ];
+        run_batch(0, &cache, &stats, &backend, &mut batch, &mut Vec::new());
+        assert!(good_slot.take().is_ok());
+        assert!(matches!(bad_slot.take(), Err(MlprojError::ShapeMismatch { .. })));
+    }
+
+    #[test]
     fn scheduler_reports_compile_errors() {
         let stats = Arc::new(ServiceStats::new());
         let sched = Scheduler::new(&SchedulerConfig::default(), stats);
@@ -407,7 +605,7 @@ mod tests {
     #[test]
     fn scheduler_reports_payload_shape_mismatch() {
         // Decode no longer rejects payload/shape disagreement (it is
-        // well-framed); the plan's own length check must catch it here.
+        // well-framed); the batch pre-check must catch it here.
         let stats = Arc::new(ServiceStats::new());
         let sched = Scheduler::new(&SchedulerConfig::default(), stats);
         let mut bad = ProjectRequest {

@@ -13,8 +13,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::core::error::{MlprojError, Result};
-use crate::service::protocol::{ErrorCode, Frame};
-use crate::service::scheduler::{Scheduler, SchedulerConfig};
+use crate::service::cache::PlanKey;
+use crate::service::protocol::{
+    self, ErrorCode, Frame, ServerFrame,
+};
+use crate::service::scheduler::{Job, ReplySlot, Scheduler, SchedulerConfig};
 use crate::service::stats::ServiceStats;
 
 /// A bound (not yet running) projection server.
@@ -130,6 +133,14 @@ impl ServerHandle {
 }
 
 /// Serve one connection until disconnect, protocol error, or `Shutdown`.
+///
+/// The projection path recycles three connection-lifetime resources so a
+/// warm request touches the allocator only for its (tiny) spec header:
+/// the raw frame body (receive buffer), the f32 payload buffer the body
+/// decodes into — which travels to the scheduler worker, gets projected
+/// in place, and comes back — and the [`ReplySlot`] rendezvous. The
+/// response is then written straight from that projected buffer
+/// ([`protocol::write_project_ok`]); no encode-side frame allocation.
 fn handle_conn(
     mut stream: TcpStream,
     scheduler: &Scheduler,
@@ -137,9 +148,12 @@ fn handle_conn(
     shutdown: &AtomicBool,
     addr: SocketAddr,
 ) {
+    let mut body: Vec<u8> = Vec::new();
+    let mut payload: Vec<f32> = Vec::new();
+    let slot = ReplySlot::new();
     loop {
-        let frame = match Frame::read_from(&mut stream) {
-            Ok(f) => f,
+        let ftype = match protocol::read_raw_frame(&mut stream, &mut body) {
+            Ok(t) => t,
             Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
                 return; // clean disconnect
             }
@@ -155,10 +169,47 @@ fn handle_conn(
             }
         };
         ServiceStats::bump(&stats.frames_in);
+        let frame = match protocol::decode_server_frame(ftype, &body, &mut payload) {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = Frame::Error {
+                    code: ErrorCode::from_error(&e),
+                    msg: format!("{e}"),
+                }
+                .write_to(&mut stream);
+                return;
+            }
+        };
         let reply = match frame {
-            Frame::Ping => Frame::Pong,
-            Frame::StatsRequest => Frame::StatsResponse(stats.snapshot()),
-            Frame::Shutdown => {
+            ServerFrame::Project(meta) => {
+                ServiceStats::bump(&stats.requests_total);
+                ServiceStats::add(&stats.payload_bytes_in, 4 * payload.len() as u64);
+                let key = PlanKey::from_meta(&meta);
+                slot.reset();
+                let job = Job::new(key, std::mem::take(&mut payload), Arc::clone(&slot));
+                match scheduler.try_submit(job).and_then(|()| slot.take()) {
+                    Ok(projected) => {
+                        ServiceStats::bump(&stats.responses_ok);
+                        ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
+                        let ok = protocol::write_project_ok(&mut stream, &projected);
+                        payload = projected; // recycle for the next request
+                        if ok.is_err() {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(e) => {
+                        ServiceStats::bump(&stats.responses_err);
+                        Frame::Error {
+                            code: ErrorCode::from_error(&e),
+                            msg: format!("{e} [request: {}]", meta.describe()),
+                        }
+                    }
+                }
+            }
+            ServerFrame::Other(Frame::Ping) => Frame::Pong,
+            ServerFrame::Other(Frame::StatsRequest) => Frame::StatsResponse(stats.snapshot()),
+            ServerFrame::Other(Frame::Shutdown) => {
                 let _ = Frame::ShutdownAck.write_to(&mut stream);
                 shutdown.store(true, Ordering::Release);
                 // Unblock the accept loop so it observes the flag. A
@@ -178,32 +229,16 @@ fn handle_conn(
                 let _ = TcpStream::connect(wake);
                 return;
             }
-            Frame::Project(req) => {
-                ServiceStats::bump(&stats.requests_total);
-                ServiceStats::add(&stats.payload_bytes_in, 4 * req.payload.len() as u64);
-                let desc = req.describe();
-                match scheduler.submit_and_wait(req) {
-                    Ok(payload) => {
-                        ServiceStats::bump(&stats.responses_ok);
-                        ServiceStats::add(&stats.payload_bytes_out, 4 * payload.len() as u64);
-                        Frame::ProjectOk(payload)
-                    }
-                    Err(e) => {
-                        ServiceStats::bump(&stats.responses_err);
-                        Frame::Error {
-                            code: ErrorCode::from_error(&e),
-                            msg: format!("{e} [request: {desc}]"),
-                        }
-                    }
-                }
-            }
             // Server-to-client frames arriving at the server are a
             // client bug; answer once and drop the connection.
-            Frame::Pong
-            | Frame::ProjectOk(_)
-            | Frame::Error { .. }
-            | Frame::StatsResponse(_)
-            | Frame::ShutdownAck => {
+            ServerFrame::Other(
+                Frame::Pong
+                | Frame::Project(_)
+                | Frame::ProjectOk(_)
+                | Frame::Error { .. }
+                | Frame::StatsResponse(_)
+                | Frame::ShutdownAck,
+            ) => {
                 let _ = Frame::Error {
                     code: ErrorCode::Protocol,
                     msg: "unexpected client frame".into(),

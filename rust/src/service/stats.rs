@@ -22,6 +22,9 @@ pub struct ServiceStats {
     pub batches: AtomicU64,
     /// Requests that rode in a batch of size ≥ 2.
     pub batched_requests: AtomicU64,
+    /// Largest micro-batch executed so far (monotonic high-water mark,
+    /// not a delta — the observable for the cross-request batching win).
+    pub batch_size_max: AtomicU64,
     /// Plan-cache hits (request reused a compiled plan + workspace).
     pub cache_hits: AtomicU64,
     /// Plan-cache misses (request forced a fresh compile).
@@ -54,6 +57,12 @@ impl ServiceStats {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Relaxed monotonic-max helper (high-water marks).
+    #[inline]
+    pub fn raise(counter: &AtomicU64, n: u64) {
+        counter.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// Snapshot every counter as stable `(name, value)` pairs — the
     /// payload of the `StatsResponse` frame.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
@@ -66,6 +75,7 @@ impl ServiceStats {
             ("busy_rejections".into(), ld(&self.busy_rejections)),
             ("batches".into(), ld(&self.batches)),
             ("batched_requests".into(), ld(&self.batched_requests)),
+            ("batch_size_max".into(), ld(&self.batch_size_max)),
             ("cache_hits".into(), ld(&self.cache_hits)),
             ("cache_misses".into(), ld(&self.cache_misses)),
             ("cache_evictions".into(), ld(&self.cache_evictions)),
@@ -91,6 +101,18 @@ mod tests {
         assert_eq!(get("requests_total"), 2);
         assert_eq!(get("payload_bytes_in"), 1024);
         assert_eq!(get("responses_ok"), 0);
+    }
+
+    #[test]
+    fn raise_keeps_the_high_water_mark() {
+        let s = ServiceStats::new();
+        ServiceStats::raise(&s.batch_size_max, 3);
+        ServiceStats::raise(&s.batch_size_max, 1);
+        ServiceStats::raise(&s.batch_size_max, 7);
+        ServiceStats::raise(&s.batch_size_max, 2);
+        assert_eq!(s.batch_size_max.load(Ordering::Relaxed), 7);
+        let snap = s.snapshot();
+        assert!(snap.iter().any(|(n, v)| n == "batch_size_max" && *v == 7));
     }
 
     #[test]

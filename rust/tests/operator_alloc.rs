@@ -1,14 +1,14 @@
-//! Heap-allocation audit for the compiled multi-level engine.
+//! Heap-allocation audit for the compiled projection engine and the
+//! service scheduler's batch executor.
 //!
-//! The acceptance bar for the operator refactor: after plan compilation
-//! (workspace warm-up), the multi-level hot path performs **no per-call
-//! tensor clones**. This test pins the stronger property that holds for
-//! specs whose stages are all closed-form (ℓ∞ clamp / ℓ2 scale): a
-//! projection call performs *zero* heap allocations. Specs with ℓ1
-//! stages allocate only small per-fiber scratch inside the ℓ1 threshold
-//! helpers — never tensor-sized buffers; their ceiling is asserted
-//! relative to the closed-form baseline via the engine sharing one code
-//! path (see `tests/operator.rs` for the numerics cross-checks).
+//! The acceptance bar: after plan compilation (workspace warm-up), a
+//! projection call performs **zero** heap allocations — closed-form
+//! stages *and* ℓ1 stages alike (thresholds borrow `L1Scratch` from the
+//! workspace), single-payload and batched, and all the way up through
+//! `scheduler::run_batch` on a warm plan cache (payloads move
+//! receive-buffer → worker → send-buffer; replies ride a reusable
+//! `ReplySlot`, not a per-request channel). See `tests/operator.rs` and
+//! `tests/fused_reference.rs` for the numerics cross-checks.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -103,4 +103,153 @@ fn warm_matrix_plan_projects_without_heap_allocation() {
     let after = alloc_calls();
     assert_eq!(after - before, 0, "warm bi-level projection allocated");
     assert_ne!(x2.data(), y.data());
+}
+
+#[test]
+fn warm_l1_plans_project_without_heap_allocation() {
+    // ℓ1 stages used to allocate inside the threshold helpers; with
+    // workspace-borrowed L1Scratch the bi-level ℓ1,∞ and ℓ1,1 plans are
+    // pinned to zero per-call allocation, every threshold algorithm.
+    use mlproj::core::matrix::Matrix;
+    use mlproj::projection::l1::L1Algo;
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(44);
+    let y = Matrix::random_uniform(24, 40, -1.0, 1.0, &mut rng);
+    for algo in [L1Algo::Condat, L1Algo::Sort, L1Algo::Michelot] {
+        for norms in [vec![Norm::Linf, Norm::L1], vec![Norm::L1, Norm::L1]] {
+            let mut plan = ProjectionSpec::new(norms.clone(), 1.5)
+                .with_l1_algo(algo)
+                .compile_for_matrix(24, 40)
+                .unwrap();
+            let mut x = y.clone();
+            plan.project_matrix_inplace(&mut x).unwrap();
+
+            let mut x2 = y.clone();
+            let before = alloc_calls();
+            plan.project_matrix_inplace(&mut x2).unwrap();
+            let after = alloc_calls();
+            assert_eq!(
+                after - before,
+                0,
+                "warm {norms:?} ({algo:?}) plan allocated {} times",
+                after - before
+            );
+            assert_ne!(x2.data(), y.data(), "{norms:?} did no work");
+        }
+    }
+}
+
+#[test]
+fn warm_trilevel_l1_final_projects_without_heap_allocation() {
+    // Tri-level ℓ1,∞,∞ — the paper's Algorithm 5 — ends in an ℓ1
+    // projection; with the workspace scratch it is allocation-free too.
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(45);
+    let mut data = vec![0.0f32; 4 * 8 * 16];
+    rng.fill_uniform(&mut data, -1.0, 1.0);
+    let y = Tensor::from_vec(vec![4, 8, 16], data).unwrap();
+    let eta = 0.25 * mlproj::projection::norms::multilevel_norm(
+        &y,
+        &[Norm::Linf, Norm::Linf, Norm::L1],
+    );
+    let mut plan = ProjectionSpec::trilevel_l1infinf(eta).compile(y.shape()).unwrap();
+    let mut x = y.clone();
+    plan.project_tensor_inplace(&mut x).unwrap();
+
+    let mut x2 = y.clone();
+    let before = alloc_calls();
+    plan.project_tensor_inplace(&mut x2).unwrap();
+    let after = alloc_calls();
+    assert_eq!(after - before, 0, "warm tri-level projection allocated");
+    assert_ne!(x2.data(), y.data());
+}
+
+#[test]
+fn warm_batch_projects_without_heap_allocation() {
+    // A batched plan call grows its workspace on the first batch and is
+    // allocation-free afterwards (the service's cross-request batching).
+    use mlproj::core::matrix::Matrix;
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(46);
+    let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(16, 24).unwrap();
+    let mk_batch = |rng: &mut Rng| -> Vec<Vec<f32>> {
+        (0..4)
+            .map(|_| Matrix::random_uniform(16, 24, -1.0, 1.0, rng).data().to_vec())
+            .collect()
+    };
+    let mut warm = mk_batch(&mut rng);
+    plan.project_batch_inplace(&mut warm).unwrap();
+
+    let mut batch = mk_batch(&mut rng);
+    let before = alloc_calls();
+    plan.project_batch_inplace(&mut batch).unwrap();
+    let after = alloc_calls();
+    assert_eq!(after - before, 0, "warm batched projection allocated");
+}
+
+#[test]
+fn warm_scheduler_batch_executes_without_heap_allocation() {
+    // The full service execution path: run_batch with a warm plan cache
+    // moves each job's payload out, projects the whole batch in one
+    // pooled call, and replies through reusable slots — zero allocations
+    // once warm. This is the counting-allocator proof behind the
+    // "receive buffer → send buffer" hot path.
+    use mlproj::core::matrix::Matrix;
+    use mlproj::projection::{ExecBackend, Method};
+    use mlproj::service::scheduler::{run_batch, Job, ReplySlot};
+    use mlproj::service::{PlanKey, ShardedPlanCache, ServiceStats, WireLayout};
+    use std::sync::Arc;
+
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let stats = Arc::new(ServiceStats::new());
+    let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats));
+    let backend = ExecBackend::Serial;
+    let key = PlanKey {
+        norms: vec![Norm::Linf, Norm::L1],
+        eta_bits: 1.0f64.to_bits(),
+        l1_algo: mlproj::projection::l1::L1Algo::Condat,
+        method: Method::Compositional,
+        layout: WireLayout::Matrix,
+        shape: vec![16, 24],
+    };
+    let mut rng = Rng::new(47);
+    const B: usize = 4;
+    let slots: Vec<Arc<ReplySlot>> = (0..B).map(|_| ReplySlot::new()).collect();
+    let payload_for = |rng: &mut Rng| Matrix::random_uniform(16, 24, -1.0, 1.0, rng);
+
+    // Warm pass: compiles + caches the plan, grows every reusable buffer.
+    let mut batch: Vec<Job> = slots
+        .iter()
+        .map(|s| Job::new(key.clone(), payload_for(&mut rng).data().to_vec(), Arc::clone(s)))
+        .collect();
+    let mut payload_bufs: Vec<Vec<f32>> = Vec::with_capacity(B);
+    run_batch(0, &cache, &stats, &backend, &mut batch, &mut payload_bufs);
+    // Recover the payload vectors from the slots: the warm measured pass
+    // reuses them, exactly like a connection handler recycles its buffer.
+    let mut recycled: Vec<Vec<f32>> = slots.iter().map(|s| s.take().unwrap()).collect();
+    for (p, m) in recycled.iter_mut().zip((0..B).map(|_| payload_for(&mut rng))) {
+        p.copy_from_slice(m.data());
+    }
+    assert!(batch.is_empty(), "run_batch must drain its batch");
+    for (slot, payload) in slots.iter().zip(recycled.drain(..)) {
+        batch.push(Job::new(key.clone(), payload, Arc::clone(slot)));
+    }
+
+    let before = alloc_calls();
+    run_batch(0, &cache, &stats, &backend, &mut batch, &mut payload_bufs);
+    let after = alloc_calls();
+    assert_eq!(
+        after - before,
+        0,
+        "warm scheduler batch allocated {} times",
+        after - before
+    );
+    for slot in &slots {
+        assert!(slot.take().is_ok());
+    }
+    assert_eq!(
+        stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "measured pass must hit the warm plan cache"
+    );
 }
