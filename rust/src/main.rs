@@ -27,7 +27,10 @@ use mlproj::data::{csv, make_classification, make_lung, LungSpec, SyntheticSpec}
 use mlproj::projection::l1::L1Algo;
 use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
 use mlproj::projection::{norms, Norm, ProjectionSpec};
-use mlproj::service::{Client, SchedulerConfig, Server};
+use mlproj::service::{
+    Client, ClientPool, PipelinedConn, ProjectRequest, SchedulerConfig, ServeOptions, Server,
+    WireLayout,
+};
 
 /// Minimal strict `--key value` argument parser.
 ///
@@ -117,11 +120,30 @@ const SWEEP_FLAGS: &[&str] = &["preset", "repeats", "out"];
 const PROJECT_FLAGS: &[&str] = &["n", "m", "eta", "workers", "norms", "l1algo", "seed"];
 const DATAGEN_FLAGS: &[&str] = &["dataset", "out"];
 const INFO_FLAGS: &[&str] = &["dataset", "addr"];
-const SERVE_FLAGS: &[&str] =
-    &["addr", "workers", "queue-depth", "batch-max", "cache-cap", "exec-workers"];
-const CLIENT_FLAGS: &[&str] = &["addr", "n", "m", "eta", "norms", "l1algo", "seed"];
-const LOADGEN_FLAGS: &[&str] =
-    &["addr", "clients", "requests", "n", "m", "eta", "norms", "l1algo", "seed"];
+const SERVE_FLAGS: &[&str] = &[
+    "addr",
+    "workers",
+    "queue-depth",
+    "batch-max",
+    "cache-cap",
+    "exec-workers",
+    "max-body-bytes",
+    "max-inflight",
+];
+const CLIENT_FLAGS: &[&str] =
+    &["addr", "n", "m", "eta", "norms", "l1algo", "seed", "chunked", "chunk-elems"];
+const LOADGEN_FLAGS: &[&str] = &[
+    "addr",
+    "clients",
+    "requests",
+    "n",
+    "m",
+    "eta",
+    "norms",
+    "l1algo",
+    "seed",
+    "pipeline-depth",
+];
 
 const USAGE: &str = "\
 mlproj — multi-level projection reproduction (Perez & Barlaud 2024)
@@ -135,10 +157,13 @@ USAGE:
                  [--l1algo condat|sort|michelot] [--seed S]
   mlproj serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
                [--batch-max N] [--cache-cap N] [--exec-workers N]
+               [--max-body-bytes B] [--max-inflight N]
   mlproj client project|ping|stats|shutdown --addr HOST:PORT
                [--n N] [--m M] [--eta F] [--norms L] [--l1algo A] [--seed S]
+               [--chunked] [--chunk-elems N]
   mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
                  [--n N] [--m M] [--eta F] [--norms L] [--seed S]
+                 [--pipeline-depth D]
   mlproj datagen --dataset synthetic|lung --out DIR
   mlproj info [--dataset synthetic|lung] [--addr HOST:PORT]
 
@@ -368,16 +393,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache_cap: args.usize_or("cache-cap", 32)?,
         exec_workers: args.usize_or("exec-workers", 0)?,
     };
-    let server = Server::bind(addr, &cfg)?;
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        max_body_bytes: args.usize_or("max-body-bytes", defaults.max_body_bytes)?,
+        max_inflight: args.usize_or("max-inflight", defaults.max_inflight)?,
+        ..defaults
+    };
+    let server = Server::bind_with(addr, &cfg, opts.clone())?;
     eprintln!(
         "mlproj serve: listening on {} \
-         (workers {}, queue depth {}, batch max {}, cache {}/shard, exec workers {})",
+         (workers {}, queue depth {}, batch max {}, cache {}/shard, exec workers {}, \
+          body cap {} B, max in-flight {})",
         server.local_addr(),
         cfg.workers,
         cfg.queue_depth,
         cfg.batch_max,
         cfg.cache_cap,
-        cfg.exec_workers
+        cfg.exec_workers,
+        opts.max_body_bytes,
+        opts.max_inflight
     );
     server.run()
 }
@@ -404,20 +438,20 @@ fn cmd_client(rest: &[String]) -> Result<()> {
         ));
     };
     let args = Args::parse(&rest[1..], CLIENT_FLAGS)?;
-    let mut client = connect_arg(&args)?;
     match action.as_str() {
         "ping" => {
+            let mut client = connect_arg(&args)?;
             let t0 = Instant::now();
             client.ping()?;
             println!("pong in {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
             Ok(())
         }
         "stats" => {
-            print_stats(&client.stats()?);
+            print_stats(&connect_arg(&args)?.stats()?);
             Ok(())
         }
         "shutdown" => {
-            client.shutdown()?;
+            connect_arg(&args)?.shutdown()?;
             println!("server acknowledged shutdown");
             Ok(())
         }
@@ -431,6 +465,46 @@ fn cmd_client(rest: &[String]) -> Result<()> {
             let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
             let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
 
+            if args.get("chunked").is_some() {
+                // Protocol v2: stream the payload as chunked frames with
+                // an FNV-1a checksum (exercises the oversized-matrix
+                // path regardless of the actual payload size); no v1
+                // connection is opened on this path.
+                let Some(addr) = args.get("addr") else {
+                    return Err(MlprojError::invalid("--addr HOST:PORT is required"));
+                };
+                let chunk_elems = args.usize_or("chunk-elems", 4096)?;
+                let mut conn = PipelinedConn::connect(addr)?;
+                let req = ProjectRequest {
+                    norms: spec.norms.clone(),
+                    eta: spec.eta,
+                    l1_algo: spec.l1_algo,
+                    method: spec.method,
+                    layout: WireLayout::Matrix,
+                    shape: vec![y.rows(), y.cols()],
+                    payload: y.data().to_vec(),
+                };
+                let t0 = Instant::now();
+                let corr = conn.submit_chunked(&req, chunk_elems)?;
+                let (got, result) = conn.recv()?;
+                let t_remote = t0.elapsed();
+                if got != corr {
+                    return Err(MlprojError::Protocol(format!(
+                        "reply corr {got} does not match request corr {corr}"
+                    )));
+                }
+                let remote = result?;
+                let local = spec.project_matrix(&y)?;
+                println!(
+                    "remote (chunked, {chunk_elems}-elem chunks): {n}x{m} in {:.3} ms  \
+                     bit-identical to local: {}",
+                    t_remote.as_secs_f64() * 1e3,
+                    remote == local.data()
+                );
+                return Ok(());
+            }
+
+            let mut client = connect_arg(&args)?;
             let t0 = Instant::now();
             let remote = client.project_matrix(&spec, &y)?;
             let t_remote = t0.elapsed();
@@ -459,36 +533,22 @@ fn percentile_ms(sorted_ns: &[u64], p: f64) -> f64 {
     sorted_ns[idx] as f64 / 1e6
 }
 
-fn cmd_loadgen(args: &Args) -> Result<()> {
-    let Some(addr) = args.get("addr") else {
-        return Err(MlprojError::invalid("--addr HOST:PORT is required"));
-    };
-    let addr = addr.to_string();
-    let clients = args.usize_or("clients", 4)?.max(1);
-    let requests = args.usize_or("requests", 100)?.max(1);
-    let n = args.usize_or("n", 256)?;
-    let m = args.usize_or("m", 1024)?;
-    let eta = args.f64_or("eta", 1.0)?;
-    let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
-    let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
-    let seed = args.usize_or("seed", 0)? as u64;
-    let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
-
-    eprintln!(
-        "loadgen: {clients} clients x {requests} requests of {n}x{m} \
-         (norms {}, η={eta}) against {addr}",
-        mlproj::projection::operator::fmt_norms(&spec.norms)
-    );
-
-    // Snapshot server counters up front so the report reflects *this*
-    // run — a long-lived server carries counts from earlier traffic.
-    let mut stat_client = Client::connect(addr.as_str())?;
-    let before = stat_client.stats()?;
-
+/// Sequential (v1, lockstep) loadgen pass: `clients` threads, each
+/// running `requests` request/response round trips. Returns per-request
+/// latencies (ns), busy-retry count, and wall seconds.
+fn loadgen_sequential(
+    addr: &str,
+    clients: usize,
+    requests: usize,
+    spec: &ProjectionSpec,
+    n: usize,
+    m: usize,
+    seed: u64,
+) -> Result<(Vec<u64>, u64, f64)> {
     let t_wall = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let addr = addr.clone();
+        let addr = addr.to_string();
         let spec = spec.clone();
         handles.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
             let mut client = Client::connect(addr.as_str())?;
@@ -522,13 +582,130 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         latencies.extend(lat);
         busy_retries += busy;
     }
-    let wall_secs = t_wall.elapsed().as_secs_f64();
+    Ok((latencies, busy_retries, t_wall.elapsed().as_secs_f64()))
+}
 
+/// Pipelined (v2) loadgen pass: `clients` threads, each driving one
+/// pooled connection with up to `depth` requests in flight. Busy
+/// rejections are resubmitted. Returns per-request latencies (ns,
+/// submit→reply), busy-retry count, and wall seconds.
+fn loadgen_pipelined(
+    addr: &str,
+    clients: usize,
+    requests: usize,
+    depth: usize,
+    spec: &ProjectionSpec,
+    n: usize,
+    m: usize,
+    seed: u64,
+) -> Result<(Vec<u64>, u64, f64)> {
+    let pool = std::sync::Arc::new(ClientPool::connect(addr, clients)?);
+    let t_wall = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let pool = std::sync::Arc::clone(&pool);
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
+            let mut rng = Rng::new(seed + 2000 + c as u64);
+            let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+            let req = ProjectRequest {
+                norms: spec.norms.clone(),
+                eta: spec.eta,
+                l1_algo: spec.l1_algo,
+                method: spec.method,
+                layout: WireLayout::Matrix,
+                shape: vec![n, m],
+                payload: y.data().to_vec(),
+            };
+            // The whole window replays from scratch if the pool
+            // reconnects mid-run (idempotent requests).
+            pool.with_conn(c, |conn| {
+                let mut latencies_ns = Vec::with_capacity(requests);
+                let mut busy_retries = 0u64;
+                let mut starts: HashMap<u16, Instant> = HashMap::new();
+                let mut submitted = 0usize;
+                while latencies_ns.len() < requests {
+                    while submitted < requests && conn.in_flight() < depth {
+                        let corr = conn.submit(&req)?;
+                        starts.insert(corr, Instant::now());
+                        submitted += 1;
+                    }
+                    let (corr, result) = conn.recv()?;
+                    let t0 = starts.remove(&corr).ok_or_else(|| {
+                        MlprojError::Protocol(format!("untracked correlation id {corr}"))
+                    })?;
+                    match result {
+                        Ok(_) => latencies_ns.push(t0.elapsed().as_nanos() as u64),
+                        Err(MlprojError::ServiceBusy) => {
+                            busy_retries += 1;
+                            submitted -= 1; // resubmit via the window loop
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok((latencies_ns, busy_retries))
+            })
+        }));
+    }
+    let mut latencies = Vec::with_capacity(clients * requests);
+    let mut busy_retries = 0u64;
+    for h in handles {
+        let (lat, busy) = h
+            .join()
+            .map_err(|_| MlprojError::Runtime("loadgen client thread panicked".into()))??;
+        latencies.extend(lat);
+        busy_retries += busy;
+    }
+    Ok((latencies, busy_retries, t_wall.elapsed().as_secs_f64()))
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        return Err(MlprojError::invalid("--addr HOST:PORT is required"));
+    };
+    let addr = addr.to_string();
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 100)?.max(1);
+    let n = args.usize_or("n", 256)?;
+    let m = args.usize_or("m", 1024)?;
+    let eta = args.f64_or("eta", 1.0)?;
+    let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
+    let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let depth = args.usize_or("pipeline-depth", 1)?.max(1);
+    let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+
+    eprintln!(
+        "loadgen: {clients} clients x {requests} requests of {n}x{m} \
+         (norms {}, η={eta}, pipeline depth {depth}) against {addr}",
+        mlproj::projection::operator::fmt_norms(&spec.norms)
+    );
+
+    // Snapshot server counters up front so the report reflects *this*
+    // run — a long-lived server carries counts from earlier traffic.
+    let mut stat_client = Client::connect(addr.as_str())?;
+    let before = stat_client.stats()?;
+
+    // Sequential (v1) series — also the baseline the pipelined series is
+    // compared against.
+    let (mut latencies, busy_retries, wall_secs) =
+        loadgen_sequential(&addr, clients, requests, &spec, n, m, seed)?;
     latencies.sort_unstable();
     let total = latencies.len();
     let throughput = total as f64 / wall_secs;
     let p50 = percentile_ms(&latencies, 50.0);
     let p99 = percentile_ms(&latencies, 99.0);
+
+    // Pipelined (v2) series, when requested.
+    let pipelined = if depth > 1 {
+        let (mut lat, busy, wall) =
+            loadgen_pipelined(&addr, clients, requests, depth, &spec, n, m, seed)?;
+        lat.sort_unstable();
+        let rps = lat.len() as f64 / wall;
+        Some((rps, percentile_ms(&lat, 50.0), percentile_ms(&lat, 99.0), busy, wall))
+    } else {
+        None
+    };
 
     // Cache behavior from the server's own counters, as a delta over
     // this run.
@@ -550,9 +727,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let batch_max = lookup(&after, "batch_size_max");
 
     println!(
-        "throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
+        "sequential: throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
          ({total} requests in {wall_secs:.2}s, {busy_retries} busy retries)"
     );
+    if let Some((rps, pp50, pp99, pbusy, pwall)) = pipelined {
+        println!(
+            "pipelined (depth {depth}): throughput {rps:.1} req/s  p50 {pp50:.3} ms  \
+             p99 {pp99:.3} ms  ({} requests in {pwall:.2}s, {pbusy} busy retries, \
+             speedup {:.2}x)",
+            clients * requests,
+            rps / throughput.max(f64::MIN_POSITIVE)
+        );
+    }
     println!(
         "server cache: {hits} hits / {misses} misses (hit rate {:.1}%)",
         hit_rate * 100.0
@@ -562,22 +748,31 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
          max batch size {batch_max}"
     );
 
-    let path = harness::emit_json_kv(
-        "BENCH_serve.json",
-        &[
-            ("clients", clients as f64),
-            ("requests_total", total as f64),
-            ("wall_secs", wall_secs),
-            ("throughput_rps", throughput),
-            ("p50_ms", p50),
-            ("p99_ms", p99),
-            ("cache_hit_rate", hit_rate),
-            ("busy_retries", busy_retries as f64),
-            ("batches", batches as f64),
-            ("batched_requests", batched as f64),
-            ("batch_size_max", batch_max as f64),
-        ],
-    )?;
+    let mut kv = vec![
+        ("clients", clients as f64),
+        ("requests_total", total as f64),
+        ("wall_secs", wall_secs),
+        ("throughput_rps", throughput),
+        ("p50_ms", p50),
+        ("p99_ms", p99),
+        ("cache_hit_rate", hit_rate),
+        ("busy_retries", busy_retries as f64),
+        ("batches", batches as f64),
+        ("batched_requests", batched as f64),
+        ("batch_size_max", batch_max as f64),
+        ("pipeline_depth", depth as f64),
+    ];
+    if let Some((rps, pp50, pp99, pbusy, pwall)) = pipelined {
+        kv.extend_from_slice(&[
+            ("pipelined_throughput_rps", rps),
+            ("pipelined_p50_ms", pp50),
+            ("pipelined_p99_ms", pp99),
+            ("pipelined_busy_retries", pbusy as f64),
+            ("pipelined_wall_secs", pwall),
+            ("pipelined_speedup", rps / throughput.max(f64::MIN_POSITIVE)),
+        ]);
+    }
+    let path = harness::emit_json_kv("BENCH_serve.json", &kv)?;
     println!("json -> {}", path.display());
     Ok(())
 }

@@ -1,18 +1,35 @@
-//! Blocking client for the projection service.
+//! Clients for the projection service.
 //!
-//! One [`Client`] owns one TCP connection and speaks request/response in
-//! lockstep: write a frame, read a frame. Server-side `Error` frames are
-//! surfaced as the corresponding [`MlprojError`] (`Busy` →
-//! [`MlprojError::ServiceBusy`], and so on), so callers handle remote
-//! failures exactly like local ones.
+//! Three tiers:
+//!
+//! * [`Client`] — one v1 TCP connection in strict lockstep: write a
+//!   frame, read a frame. Server-side `Error` frames are surfaced as the
+//!   corresponding [`MlprojError`] (`Busy` →
+//!   [`MlprojError::ServiceBusy`], and so on), so callers handle remote
+//!   failures exactly like local ones.
+//! * [`PipelinedConn`] — one v2 connection with up to 65536 requests in
+//!   flight, tracked by correlation id. `submit` stamps and sends (auto-
+//!   chunking payloads past the frame-body cap), `recv` returns the next
+//!   completed request *in server completion order* — which may differ
+//!   from submission order.
+//! * [`ClientPool`] — N persistent [`PipelinedConn`]s behind one handle:
+//!   round-robin dispatch, per-connection locking, and transparent
+//!   reconnect-with-retry when a connection dies mid-call (projections
+//!   are idempotent, so a broken pipe simply replays the request on a
+//!   fresh connection).
 
+use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::core::error::{MlprojError, Result};
 use crate::core::matrix::Matrix;
 use crate::core::tensor::Tensor;
 use crate::projection::ProjectionSpec;
-use crate::service::protocol::{Frame, ProjectRequest, WireLayout};
+use crate::service::protocol::{
+    self, ChunkAssembler, Frame, ProjectRequest, WireLayout, MAX_BODY_BYTES, V2,
+};
 
 /// A connected service client.
 pub struct Client {
@@ -107,6 +124,404 @@ impl Client {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Protocol v2: pipelined connection
+// ---------------------------------------------------------------------------
+
+/// Default chunk size for auto-chunked payloads (1 MiB of f32s).
+const DEFAULT_CHUNK_ELEMS: usize = 1 << 18;
+
+/// One protocol-v2 connection with correlation-id-tracked in-flight
+/// requests.
+///
+/// Writes and reads are decoupled: [`PipelinedConn::submit`] sends a
+/// request without waiting, [`PipelinedConn::recv`] blocks for the next
+/// *completed* request — whichever that is. The in-flight map keys every
+/// outstanding request by its correlation id; `recv` matches replies
+/// (including chunked replies) back to it.
+pub struct PipelinedConn {
+    stream: TcpStream,
+    next_corr: u16,
+    /// corr → payload element count of the request (replies must match).
+    inflight: HashMap<u16, usize>,
+    /// Reused raw-frame receive buffer.
+    body: Vec<u8>,
+    /// Requests whose `Project` body would exceed this stream as chunked
+    /// frames instead. Defaults to the protocol-wide cap; lower it to
+    /// match a server running with a smaller `--max-body-bytes` (there
+    /// is no cap negotiation on the wire yet).
+    chunk_threshold: usize,
+}
+
+impl PipelinedConn {
+    /// Connect to a running `mlproj serve` instance (the first frame
+    /// this connection sends pins it to protocol v2).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<PipelinedConn> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(PipelinedConn {
+            stream,
+            // corr 0 is reserved for connection-level server errors that
+            // predate any request; never hand it to a request.
+            next_corr: 1,
+            inflight: HashMap::new(),
+            body: Vec::new(),
+            chunk_threshold: MAX_BODY_BYTES,
+        })
+    }
+
+    /// Number of submitted-but-unanswered requests.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Set the auto-chunk threshold in bytes (clamped to the protocol
+    /// cap): requests whose frame body would exceed it upload as chunked
+    /// streams. Match this to the server's `--max-body-bytes` when that
+    /// is lowered below the default.
+    pub fn set_chunk_threshold(&mut self, bytes: usize) {
+        self.chunk_threshold = bytes.clamp(64, MAX_BODY_BYTES);
+    }
+
+    fn alloc_corr(&mut self) -> Result<u16> {
+        if self.inflight.len() > (u16::MAX as usize) - 1 {
+            return Err(MlprojError::Protocol("65535 requests already in flight".into()));
+        }
+        loop {
+            let corr = self.next_corr;
+            self.next_corr = self.next_corr.wrapping_add(1);
+            if corr != 0 && !self.inflight.contains_key(&corr) {
+                return Ok(corr);
+            }
+        }
+    }
+
+    /// Wire size of the request's `Project` body.
+    fn project_body_len(req: &ProjectRequest) -> usize {
+        13 + req.norms.len() + 4 * req.shape.len() + 4 + 4 * req.payload.len()
+    }
+
+    /// Send one projection request without waiting for its reply;
+    /// returns the correlation id to match against [`PipelinedConn::recv`].
+    /// Payloads past the chunk threshold (default: the frame-body cap)
+    /// stream automatically as chunked frames.
+    pub fn submit(&mut self, req: &ProjectRequest) -> Result<u16> {
+        if Self::project_body_len(req) > self.chunk_threshold {
+            let elems = (self.chunk_threshold / 4).clamp(1, DEFAULT_CHUNK_ELEMS);
+            return self.submit_chunked(req, elems);
+        }
+        let corr = self.alloc_corr()?;
+        protocol::write_project_v2(&mut self.stream, corr, req)?;
+        self.inflight.insert(corr, req.payload.len());
+        Ok(corr)
+    }
+
+    /// Send one projection request as an explicit chunked stream
+    /// (`ProjectBegin` / `ProjectChunk` / checksummed `ProjectEnd`) with
+    /// at most `chunk_elems` elements per chunk, regardless of size.
+    pub fn submit_chunked(&mut self, req: &ProjectRequest, chunk_elems: usize) -> Result<u16> {
+        let corr = self.alloc_corr()?;
+        protocol::write_project_chunked(&mut self.stream, corr, req, chunk_elems)?;
+        self.inflight.insert(corr, req.payload.len());
+        Ok(corr)
+    }
+
+    /// Block for the next completed request, in server completion order.
+    /// Returns its correlation id and its result — a transport-level
+    /// failure is the outer `Err`; a per-request server error (`Busy`,
+    /// `Invalid`, …) is `Ok((corr, Err(_)))` and the connection stays
+    /// usable.
+    pub fn recv(&mut self) -> Result<(u16, Result<Vec<f32>>)> {
+        let (corr, frame) = self.read_v2_frame()?;
+        match frame {
+            Frame::ProjectOk(payload) => {
+                let expected = self.take_inflight(corr)?;
+                if payload.len() != expected {
+                    return Err(MlprojError::Protocol(format!(
+                        "server returned {} elements for a {expected}-element request",
+                        payload.len()
+                    )));
+                }
+                Ok((corr, Ok(payload)))
+            }
+            Frame::ProjectOkBegin { total_elems, checksum } => {
+                let expected = self.take_inflight(corr)?;
+                let payload = self.recv_chunked(corr, total_elems, checksum)?;
+                if payload.len() != expected {
+                    return Err(MlprojError::Protocol(format!(
+                        "server streamed {} elements for a {expected}-element request",
+                        payload.len()
+                    )));
+                }
+                Ok((corr, Ok(payload)))
+            }
+            Frame::Error { code, msg } => {
+                let err = code.into_error(msg);
+                // A corr we are tracking: a per-request failure (also
+                // covers stream-level errors for requests we uploaded
+                // chunked); the connection stays usable. An untracked
+                // corr (the server reserves 0 for pre-request framing
+                // errors) is a connection-level failure.
+                if self.inflight.remove(&corr).is_some() {
+                    Ok((corr, Err(err)))
+                } else {
+                    Err(err)
+                }
+            }
+            other => Err(MlprojError::Protocol(format!(
+                "expected a projection reply, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Reassemble one chunked reply stream (its `ProjectOkBegin` was
+    /// already consumed). The server's writer thread emits a chunked
+    /// reply contiguously, so any interleaved frame is a protocol error.
+    fn recv_chunked(
+        &mut self,
+        corr: u16,
+        total_elems: u64,
+        checksum: protocol::ChecksumKind,
+    ) -> Result<Vec<f32>> {
+        let mut asm = ChunkAssembler::new(total_elems, checksum)?;
+        let mut body = Vec::new();
+        loop {
+            let h = protocol::read_raw_frame(&mut self.stream, &mut body, MAX_BODY_BYTES)?;
+            if h.version != V2 || h.corr != corr {
+                return Err(MlprojError::Protocol(format!(
+                    "interleaved frame (corr {}) inside chunked reply {corr}",
+                    h.corr
+                )));
+            }
+            if h.ftype == protocol::T_PROJECT_CHUNK {
+                // Raw append — no intermediate owned-frame decode.
+                asm.push(&body)?;
+                continue;
+            }
+            match protocol::decode_client_frame(h.version, h.ftype, &body)? {
+                Frame::ProjectEnd { checksum: declared } => {
+                    if !asm.checksum_ok(declared) {
+                        return Err(MlprojError::Protocol(
+                            "chunked reply checksum mismatch".into(),
+                        ));
+                    }
+                    return asm.into_payload();
+                }
+                other => {
+                    return Err(MlprojError::Protocol(format!(
+                        "unexpected frame {other:?} inside chunked reply"
+                    )));
+                }
+            }
+        }
+    }
+
+    fn take_inflight(&mut self, corr: u16) -> Result<usize> {
+        self.inflight.remove(&corr).ok_or_else(|| {
+            MlprojError::Protocol(format!("reply for unknown correlation id {corr}"))
+        })
+    }
+
+    fn read_v2_frame(&mut self) -> Result<(u16, Frame)> {
+        let mut body = std::mem::take(&mut self.body);
+        let h = protocol::read_raw_frame(&mut self.stream, &mut body, MAX_BODY_BYTES);
+        let h = match h {
+            Ok(h) => h,
+            Err(e) => {
+                self.body = body;
+                return Err(e);
+            }
+        };
+        let frame = protocol::decode_client_frame(h.version, h.ftype, &body);
+        self.body = body;
+        let frame = frame?;
+        if h.version != V2 {
+            return Err(MlprojError::Protocol(format!(
+                "server answered a v2 connection with a v{} frame",
+                h.version
+            )));
+        }
+        Ok((h.corr, frame))
+    }
+
+    /// Submit one request and block for *its* reply — lockstep over the
+    /// pipelined transport. Safe alongside other in-flight requests on
+    /// this connection only if the caller also drains those via `recv`;
+    /// replies for other correlation ids arriving first are discarded.
+    pub fn project(&mut self, req: &ProjectRequest) -> Result<Vec<f32>> {
+        let corr = self.submit(req)?;
+        loop {
+            let (got, result) = self.recv()?;
+            if got == corr {
+                return result;
+            }
+        }
+    }
+
+    /// v2 liveness probe (call with no requests in flight).
+    pub fn ping(&mut self) -> Result<()> {
+        let corr = self.alloc_corr()?;
+        Frame::Ping.write_to_v2(&mut self.stream, corr)?;
+        match self.read_v2_frame()? {
+            (got, Frame::Pong) if got == corr => Ok(()),
+            (_, other) => {
+                Err(MlprojError::Protocol(format!("expected Pong, got {other:?}")))
+            }
+        }
+    }
+
+    /// Ask the server to shut down. In-flight requests on this
+    /// connection drain first (their replies — whole-frame or chunked —
+    /// are read and discarded); the acknowledgement is the last frame.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let corr = self.alloc_corr()?;
+        Frame::Shutdown.write_to_v2(&mut self.stream, corr)?;
+        loop {
+            match self.read_v2_frame()? {
+                (got, Frame::ShutdownAck) if got == corr => return Ok(()),
+                (got, Frame::ProjectOk(_) | Frame::Error { .. })
+                    if self.inflight.remove(&got).is_some() => {}
+                (got, Frame::ProjectOkBegin { total_elems, checksum })
+                    if self.inflight.remove(&got).is_some() =>
+                {
+                    // Drain (and discard) the chunked reply so the ack
+                    // that follows it is still reachable.
+                    let _ = self.recv_chunked(got, total_elems, checksum)?;
+                }
+                (_, other) => {
+                    return Err(MlprojError::Protocol(format!(
+                        "expected ShutdownAck, got {other:?}"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Sever the underlying socket, leaving the handle in place — test
+    /// hook for exercising [`ClientPool`]'s reconnect path.
+    #[doc(hidden)]
+    pub fn debug_sever(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection pool
+// ---------------------------------------------------------------------------
+
+/// A pool of N persistent [`PipelinedConn`]s with round-robin dispatch
+/// and transparent reconnect.
+///
+/// Each slot is independently locked, so up to N callers run
+/// concurrently, each owning one connection for the duration of its
+/// call. A transport error (broken pipe, reset, mid-frame EOF) drops the
+/// slot's connection and retries the call on a fresh one — projection
+/// requests are idempotent, so replay is safe. Typed server errors
+/// (`Busy`, `Invalid`, …) are returned as-is; they mean the connection
+/// is healthy.
+pub struct ClientPool {
+    addr: String,
+    slots: Vec<Mutex<Option<PipelinedConn>>>,
+    rr: AtomicUsize,
+    /// Reconnect attempts after a transport error (total tries = 1 + retries).
+    retries: usize,
+    /// Auto-chunk threshold stamped onto every (re)connected connection.
+    chunk_threshold: usize,
+}
+
+impl ClientPool {
+    /// Connect `conns` persistent connections to `addr` (eagerly — a
+    /// server that refuses connections fails here, not mid-traffic).
+    pub fn connect(addr: &str, conns: usize) -> Result<ClientPool> {
+        let n = conns.max(1);
+        let mut slots = Vec::with_capacity(n);
+        for _ in 0..n {
+            slots.push(Mutex::new(Some(PipelinedConn::connect(addr)?)));
+        }
+        Ok(ClientPool {
+            addr: addr.to_string(),
+            slots,
+            rr: AtomicUsize::new(0),
+            retries: 2,
+            chunk_threshold: MAX_BODY_BYTES,
+        })
+    }
+
+    /// Number of pooled connections.
+    pub fn conns(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Set the auto-chunk threshold (see
+    /// [`PipelinedConn::set_chunk_threshold`]) on every current and
+    /// future pooled connection.
+    pub fn set_chunk_threshold(&mut self, bytes: usize) {
+        self.chunk_threshold = bytes.clamp(64, MAX_BODY_BYTES);
+        for slot in &self.slots {
+            if let Some(conn) = slot.lock().expect("client pool slot poisoned").as_mut() {
+                conn.set_chunk_threshold(bytes);
+            }
+        }
+    }
+
+    /// Run `f` against pooled connection `i % conns`, reconnecting and
+    /// retrying (up to the pool's retry budget) when the connection dies
+    /// mid-call. `f` may be re-invoked from scratch after a reconnect —
+    /// callers' work must be idempotent.
+    pub fn with_conn<R>(
+        &self,
+        i: usize,
+        mut f: impl FnMut(&mut PipelinedConn) -> Result<R>,
+    ) -> Result<R> {
+        let slot = &self.slots[i % self.slots.len()];
+        let mut guard = slot.lock().expect("client pool slot poisoned");
+        let mut attempt = 0;
+        loop {
+            if guard.is_none() {
+                match PipelinedConn::connect(self.addr.as_str()) {
+                    Ok(mut conn) => {
+                        conn.set_chunk_threshold(self.chunk_threshold);
+                        *guard = Some(conn);
+                    }
+                    Err(_) if attempt < self.retries => {
+                        attempt += 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            let conn = guard.as_mut().expect("slot populated above");
+            match f(conn) {
+                Ok(r) => return Ok(r),
+                // Transport errors: the connection is gone. Drop it and
+                // (budget permitting) replay on a fresh one.
+                Err(MlprojError::Io(e)) => {
+                    *guard = None;
+                    if attempt < self.retries {
+                        attempt += 1;
+                        continue;
+                    }
+                    return Err(MlprojError::Io(e));
+                }
+                // Protocol confusion poisons the connection but is not
+                // retried — replaying onto a desynced server helps nobody.
+                Err(e @ MlprojError::Protocol(_)) => {
+                    *guard = None;
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Project one request on the next pooled connection (round-robin),
+    /// blocking for its reply; reconnects transparently on broken pipes.
+    pub fn project(&self, req: &ProjectRequest) -> Result<Vec<f32>> {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.with_conn(i, |conn| conn.project(req))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +550,96 @@ mod tests {
         assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
 
         client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
+        ProjectRequest {
+            norms: spec.norms.clone(),
+            eta: spec.eta,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Matrix,
+            shape: vec![y.rows(), y.cols()],
+            payload: y.data().to_vec(),
+        }
+    }
+
+    #[test]
+    fn pipelined_conn_tracks_many_in_flight_requests() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut conn = PipelinedConn::connect(handle.addr()).unwrap();
+        conn.ping().unwrap();
+
+        let mut rng = Rng::new(31);
+        let spec = ProjectionSpec::l1inf(0.9);
+        let mut expected = std::collections::HashMap::new();
+        for _ in 0..6 {
+            let y = Matrix::random_uniform(9, 17, -2.0, 2.0, &mut rng);
+            let corr = conn.submit(&wire_request(&spec, &y)).unwrap();
+            expected.insert(corr, spec.project_matrix(&y).unwrap().data().to_vec());
+        }
+        assert_eq!(conn.in_flight(), 6);
+        while conn.in_flight() > 0 {
+            let (corr, result) = conn.recv().unwrap();
+            assert_eq!(result.unwrap(), expected.remove(&corr).unwrap());
+        }
+        assert!(expected.is_empty());
+
+        conn.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_submit_round_trips_bit_identically() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut conn = PipelinedConn::connect(handle.addr()).unwrap();
+
+        let mut rng = Rng::new(32);
+        let y = Matrix::random_uniform(24, 50, -2.0, 2.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(1.1);
+        let expect = spec.project_matrix(&y).unwrap();
+        // Tiny chunks force a multi-frame stream even for a small matrix.
+        let corr = conn.submit_chunked(&wire_request(&spec, &y), 64).unwrap();
+        let (got_corr, result) = conn.recv().unwrap();
+        assert_eq!(got_corr, corr);
+        assert_eq!(result.unwrap(), expect.data());
+
+        conn.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn client_pool_reconnects_after_a_severed_connection() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+        let pool = ClientPool::connect(&addr.to_string(), 2).unwrap();
+
+        let mut rng = Rng::new(33);
+        let y = Matrix::random_uniform(8, 12, -1.0, 1.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(0.8);
+        let expect = spec.project_matrix(&y).unwrap();
+        let req = wire_request(&spec, &y);
+        assert_eq!(pool.project(&req).unwrap(), expect.data());
+
+        // Kill every pooled socket behind the pool's back; the next
+        // calls must reconnect transparently and still succeed.
+        for i in 0..pool.conns() {
+            pool.with_conn(i, |c| {
+                c.debug_sever();
+                Ok(())
+            })
+            .unwrap();
+        }
+        for _ in 0..4 {
+            assert_eq!(pool.project(&req).unwrap(), expect.data());
+        }
+
+        // Shut the server down through a pooled connection.
+        pool.with_conn(0, |c| c.shutdown()).unwrap();
         handle.join().unwrap();
     }
 }

@@ -8,14 +8,19 @@
 //! the same `(spec, shape)` should pay for that exactly once.
 //!
 //! * [`protocol`] — versioned, length-prefixed binary frames
-//!   (`Project`, `Ping`, `Stats`, `Shutdown`, …).
+//!   (`Project`, `Ping`, `Stats`, `Shutdown`, …); protocol v2 adds
+//!   correlation ids (pipelining) and chunked payload streams with an
+//!   optional FNV-1a checksum.
 //! * [`cache`] — sharded LRU `(spec, shape) → ProjectionPlan` cache with
 //!   hit/miss/eviction counters.
 //! * [`scheduler`] — bounded MPSC job queue feeding shard-pinned worker
 //!   threads; `Busy` backpressure past the queue depth; same-key
-//!   micro-batching.
-//! * [`server`] / [`client`] — loopback `TcpListener` server and the
-//!   blocking client behind `mlproj serve` / `client` / `loadgen`.
+//!   micro-batching; results deliver to a blocking slot (v1) or a
+//!   pipelined connection's writer channel (v2).
+//! * [`server`] / [`client`] — loopback `TcpListener` server (version
+//!   pinned per connection) and the clients behind `mlproj serve` /
+//!   `client` / `loadgen`: the blocking v1 [`Client`], the pipelined v2
+//!   [`PipelinedConn`], and the reconnecting [`ClientPool`].
 //! * [`stats`] — atomics-based counters surfaced through the `Stats`
 //!   frame and `mlproj info --addr`.
 
@@ -27,8 +32,11 @@ pub mod server;
 pub mod stats;
 
 pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
-pub use client::Client;
-pub use protocol::{ErrorCode, Frame, ProjectMeta, ProjectRequest, WireLayout};
-pub use scheduler::{Job, ReplySlot, Scheduler, SchedulerConfig};
-pub use server::{Server, ServerHandle};
+pub use client::{Client, ClientPool, PipelinedConn};
+pub use protocol::{
+    BeginInfo, ChecksumKind, ChunkAssembler, ErrorCode, Frame, ProjectMeta, ProjectRequest,
+    RawHeader, WireLayout,
+};
+pub use scheduler::{ConnReply, Job, ReplySlot, ReplyTo, Scheduler, SchedulerConfig};
+pub use server::{ServeOptions, Server, ServerHandle};
 pub use stats::ServiceStats;

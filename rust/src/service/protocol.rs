@@ -6,12 +6,33 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  = b"MLPJ"
-//!      4     1  version = 1
+//!      4     1  version (1 or 2)
 //!      5     1  frame type (see `Frame`)
-//!      6     2  reserved = 0
+//!      6     2  v1: reserved = 0; v2: correlation id (little-endian u16)
 //!      8     4  body length in bytes (little-endian)
 //!     12     …  body
 //! ```
+//!
+//! Version 1 speaks strict request/response lockstep: one frame out, one
+//! frame back, correlation bytes always zero. Version 2 keeps every v1
+//! body layout bit-identical but adds:
+//!
+//! * **correlation ids** — the client stamps each request with a u16 id
+//!   in the formerly-reserved header bytes; the server echoes the id on
+//!   the reply, so many requests may be in flight per connection and
+//!   replies may return out of order (pipelining);
+//! * **chunked payloads** — a projection whose `Project`/`ProjectOk`
+//!   frame would exceed the body cap streams instead as
+//!   [`Frame::ProjectBegin`] (spec + declared element total + checksum
+//!   kind), any number of [`Frame::ProjectChunk`] frames (raw
+//!   little-endian f32 bytes), and [`Frame::ProjectEnd`] carrying an
+//!   optional FNV-1a-64 checksum of the payload bytes. Replies chunk the
+//!   same way via [`Frame::ProjectOkBegin`]. Reassembly is bounded by
+//!   [`MAX_STREAM_BYTES`] and validated by [`ChunkAssembler`].
+//!
+//! A connection's version is pinned by the first frame the client sends
+//! (see `server.rs`); mixing versions on one connection is a protocol
+//! error.
 //!
 //! All multi-byte integers and floats are little-endian. The body layout
 //! per frame type is documented on [`Frame`]. Decoding is strict: bad
@@ -30,16 +51,28 @@ use crate::projection::{Method, Norm};
 /// Frame magic: identifies an mlproj service stream.
 pub const MAGIC: [u8; 4] = *b"MLPJ";
 
-/// Protocol version this build speaks.
-pub const VERSION: u8 = 1;
+/// Protocol version 1: lockstep request/response, whole-frame payloads.
+pub const V1: u8 = 1;
 
-/// Header size in bytes (magic + version + type + reserved + body len).
+/// Protocol version 2: pipelined (correlation ids) + chunked payloads.
+pub const V2: u8 = 2;
+
+/// The version the plain [`Frame::encode`]/[`Frame::write_to`] path
+/// emits — v1, so every pre-v2 client and test keeps its exact bytes.
+pub const VERSION: u8 = V1;
+
+/// Header size in bytes (magic + version + type + corr + body len).
 pub const HEADER_BYTES: usize = 12;
 
 /// Upper bound on a frame body — guards the server against allocating
 /// unbounded memory on a garbage length prefix (256 MiB ≈ a 64M-element
-/// f32 payload, far above any paper workload).
+/// f32 payload, far above any paper workload). Larger payloads must use
+/// the v2 chunked stream.
 pub const MAX_BODY_BYTES: usize = 256 << 20;
+
+/// Upper bound on one reassembled chunked payload (1 GiB of f32 bytes):
+/// the per-stream limit a `ProjectBegin` total is validated against.
+pub const MAX_STREAM_BYTES: usize = 1 << 30;
 
 fn perr(msg: impl Into<String>) -> MlprojError {
     MlprojError::Protocol(msg.into())
@@ -261,19 +294,7 @@ impl ProjectRequest {
                 self.shape
             )));
         }
-        if self.layout == WireLayout::Matrix && self.shape.len() != 2 {
-            return Err(perr(format!(
-                "matrix layout requires a 2-entry shape, got {:?}",
-                self.shape
-            )));
-        }
-        if self.norms.is_empty() || self.norms.len() > u8::MAX as usize {
-            return Err(perr(format!("norm list length {} out of range", self.norms.len())));
-        }
-        if self.shape.is_empty() || self.shape.len() > u8::MAX as usize {
-            return Err(perr(format!("shape rank {} out of range", self.shape.len())));
-        }
-        Ok(())
+        validate_spec(&self.norms, &self.shape, self.layout)
     }
 }
 
@@ -281,15 +302,85 @@ impl ProjectRequest {
 // Frames
 // ---------------------------------------------------------------------------
 
-const T_PING: u8 = 1;
-const T_PONG: u8 = 2;
-const T_PROJECT: u8 = 3;
-const T_PROJECT_OK: u8 = 4;
-const T_ERROR: u8 = 5;
-const T_STATS_REQ: u8 = 6;
-const T_STATS_RESP: u8 = 7;
-const T_SHUTDOWN: u8 = 8;
-const T_SHUTDOWN_ACK: u8 = 9;
+pub(crate) const T_PING: u8 = 1;
+pub(crate) const T_PONG: u8 = 2;
+pub(crate) const T_PROJECT: u8 = 3;
+pub(crate) const T_PROJECT_OK: u8 = 4;
+pub(crate) const T_ERROR: u8 = 5;
+pub(crate) const T_STATS_REQ: u8 = 6;
+pub(crate) const T_STATS_RESP: u8 = 7;
+pub(crate) const T_SHUTDOWN: u8 = 8;
+pub(crate) const T_SHUTDOWN_ACK: u8 = 9;
+// v2-only frame types (chunked payload streaming).
+pub(crate) const T_PROJECT_BEGIN: u8 = 10;
+pub(crate) const T_PROJECT_CHUNK: u8 = 11;
+pub(crate) const T_PROJECT_END: u8 = 12;
+pub(crate) const T_PROJECT_OK_BEGIN: u8 = 13;
+
+// ---------------------------------------------------------------------------
+// Checksums (v2 chunked streams)
+// ---------------------------------------------------------------------------
+
+/// Payload checksum negotiated on a chunked stream's `Begin` frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChecksumKind {
+    /// No integrity check; `ProjectEnd` must carry 0.
+    None,
+    /// FNV-1a 64-bit over the payload's little-endian bytes in order.
+    Fnv1a64,
+}
+
+impl ChecksumKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            ChecksumKind::None => 0,
+            ChecksumKind::Fnv1a64 => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(ChecksumKind::None),
+            1 => Ok(ChecksumKind::Fnv1a64),
+            other => Err(perr(format!("unknown checksum kind byte {other}"))),
+        }
+    }
+}
+
+/// FNV-1a 64-bit offset basis (the running-hash seed).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a 64-bit hash (chunk-at-a-time
+/// updates compose: hashing chunks in arrival order equals hashing the
+/// concatenated payload).
+pub fn fnv1a64_update(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
+}
+
+/// FNV-1a 64-bit hash of `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET, bytes)
+}
+
+/// Header of a chunked projection request: the full spec (everything a
+/// [`Frame::Project`] carries except the payload), the declared payload
+/// element count, and the checksum the stream closes with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BeginInfo {
+    /// Spec + layout + shape of the incoming payload.
+    pub meta: ProjectMeta,
+    /// Declared payload length in f32 elements (validated against
+    /// [`MAX_STREAM_BYTES`] on decode, and against the received bytes on
+    /// `ProjectEnd`).
+    pub total_elems: u64,
+    /// Checksum the `ProjectEnd` frame will carry.
+    pub checksum: ChecksumKind,
+}
 
 /// One protocol frame.
 ///
@@ -303,6 +394,19 @@ const T_SHUTDOWN_ACK: u8 = 9;
 /// * `Error` — `code: u8`, `msg_len: u32`, UTF-8 message.
 /// * `StatsResponse` — `n: u32`, then `n ×` (`name_len: u16`, UTF-8 name,
 ///   `value: u64`) counter pairs.
+///
+/// v2-only frames (chunked payload streaming; rejected under version 1):
+///
+/// * `ProjectBegin` — the `Project` spec fields (through the dims, no
+///   payload), then `total_elems: u64`, `checksum_kind: u8`.
+/// * `ProjectChunk` — raw little-endian f32 bytes, no count prefix (the
+///   header's body length is the chunk size; must be a non-zero multiple
+///   of 4).
+/// * `ProjectEnd` — `checksum: u64` (FNV-1a 64 of the payload bytes in
+///   stream order; 0 when the kind is `None`).
+/// * `ProjectOkBegin` — `total_elems: u64`, `checksum_kind: u8`; the
+///   reply-direction `Begin`, followed by `ProjectChunk`s and one
+///   `ProjectEnd`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Liveness probe.
@@ -328,6 +432,22 @@ pub enum Frame {
     Shutdown,
     /// Shutdown acknowledged; the connection closes after this frame.
     ShutdownAck,
+    /// v2: open a chunked projection request stream.
+    ProjectBegin(BeginInfo),
+    /// v2: one chunk of a streaming payload (request or reply direction).
+    ProjectChunk(Vec<f32>),
+    /// v2: close a chunked stream; carries the declared checksum.
+    ProjectEnd {
+        /// FNV-1a 64 of the payload bytes (0 when the kind is `None`).
+        checksum: u64,
+    },
+    /// v2: open a chunked projection *reply* stream.
+    ProjectOkBegin {
+        /// Payload length in f32 elements.
+        total_elems: u64,
+        /// Checksum the closing `ProjectEnd` carries.
+        checksum: ChecksumKind,
+    },
 }
 
 impl Frame {
@@ -342,11 +462,43 @@ impl Frame {
             Frame::StatsResponse(_) => T_STATS_RESP,
             Frame::Shutdown => T_SHUTDOWN,
             Frame::ShutdownAck => T_SHUTDOWN_ACK,
+            Frame::ProjectBegin(_) => T_PROJECT_BEGIN,
+            Frame::ProjectChunk(_) => T_PROJECT_CHUNK,
+            Frame::ProjectEnd { .. } => T_PROJECT_END,
+            Frame::ProjectOkBegin { .. } => T_PROJECT_OK_BEGIN,
         }
     }
 
-    /// Encode the full frame (header + body) into a byte vector.
+    /// True for frame types that exist only in protocol v2.
+    fn requires_v2(&self) -> bool {
+        matches!(
+            self,
+            Frame::ProjectBegin(_)
+                | Frame::ProjectChunk(_)
+                | Frame::ProjectEnd { .. }
+                | Frame::ProjectOkBegin { .. }
+        )
+    }
+
+    /// Encode as a v1 frame (header + body, correlation bytes zero) —
+    /// the exact bytes every pre-v2 peer expects. v2-only frame types
+    /// are an error here; use [`Frame::encode_v2`].
     pub fn encode(&self) -> Result<Vec<u8>> {
+        self.encode_versioned(V1, 0)
+    }
+
+    /// Encode as a v2 frame carrying `corr` in the header.
+    pub fn encode_v2(&self, corr: u16) -> Result<Vec<u8>> {
+        self.encode_versioned(V2, corr)
+    }
+
+    fn encode_versioned(&self, version: u8, corr: u16) -> Result<Vec<u8>> {
+        if version == V1 && self.requires_v2() {
+            return Err(perr(format!(
+                "frame type {} requires protocol v2",
+                self.type_byte()
+            )));
+        }
         let body = self.encode_body()?;
         if body.len() > MAX_BODY_BYTES {
             return Err(perr(format!(
@@ -356,9 +508,9 @@ impl Frame {
         }
         let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
         out.extend_from_slice(&MAGIC);
-        out.push(VERSION);
+        out.push(version);
         out.push(self.type_byte());
-        out.extend_from_slice(&[0u8, 0u8]);
+        out.extend_from_slice(&corr.to_le_bytes());
         out.extend_from_slice(&(body.len() as u32).to_le_bytes());
         out.extend_from_slice(&body);
         Ok(out)
@@ -374,21 +526,36 @@ impl Frame {
             | Frame::ShutdownAck => {}
             Frame::Project(req) => {
                 req.validate()?;
-                b.extend_from_slice(&req.eta.to_le_bytes());
-                b.push(algo_to_u8(req.l1_algo));
-                b.push(method_to_u8(req.method));
-                b.push(req.layout.to_u8());
-                b.push(req.norms.len() as u8);
-                for &n in &req.norms {
-                    b.push(norm_to_u8(n));
-                }
-                b.push(req.shape.len() as u8);
-                for &d in &req.shape {
-                    let d = u32::try_from(d)
-                        .map_err(|_| perr(format!("dimension {d} exceeds u32")))?;
-                    b.extend_from_slice(&d.to_le_bytes());
-                }
+                encode_spec_fields(
+                    &mut b, &req.norms, req.eta, req.l1_algo, req.method, req.layout, &req.shape,
+                )?;
                 write_f32s(&mut b, &req.payload)?;
+            }
+            Frame::ProjectBegin(info) => {
+                validate_meta(&info.meta)?;
+                let m = &info.meta;
+                encode_spec_fields(
+                    &mut b, &m.norms, m.eta, m.l1_algo, m.method, m.layout, &m.shape,
+                )?;
+                check_stream_total(info.total_elems)?;
+                b.extend_from_slice(&info.total_elems.to_le_bytes());
+                b.push(info.checksum.to_u8());
+            }
+            Frame::ProjectChunk(payload) => {
+                if payload.is_empty() {
+                    return Err(perr("chunk frames must carry at least one element"));
+                }
+                for &x in payload {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Frame::ProjectEnd { checksum } => {
+                b.extend_from_slice(&checksum.to_le_bytes());
+            }
+            Frame::ProjectOkBegin { total_elems, checksum } => {
+                check_stream_total(*total_elems)?;
+                b.extend_from_slice(&total_elems.to_le_bytes());
+                b.push(checksum.to_u8());
             }
             Frame::ProjectOk(payload) => {
                 write_f32s(&mut b, payload)?;
@@ -418,26 +585,31 @@ impl Frame {
         Ok(b)
     }
 
-    /// Decode one full frame from `bytes` (must contain exactly one frame).
+    /// Decode one full frame from `bytes` (must contain exactly one
+    /// frame). Accepts both protocol versions; v2-only frame types under
+    /// a v1 header are rejected.
     pub fn decode(bytes: &[u8]) -> Result<Frame> {
         if bytes.len() < HEADER_BYTES {
             return Err(perr(format!("frame shorter than the {HEADER_BYTES}-byte header")));
         }
         let (header, body) = bytes.split_at(HEADER_BYTES);
-        let (version, ftype, body_len) = parse_header(header)?;
-        if version != VERSION {
-            return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
-        }
-        if body.len() != body_len {
+        let h = parse_header(header, MAX_BODY_BYTES)?;
+        if body.len() != h.body_len {
             return Err(perr(format!(
-                "header claims {body_len} body bytes but {} are present",
+                "header claims {} body bytes but {} are present",
+                h.body_len,
                 body.len()
             )));
         }
-        Self::decode_body(ftype, body)
+        Self::decode_body(h.version, h.ftype, body)
     }
 
-    fn decode_body(ftype: u8, body: &[u8]) -> Result<Frame> {
+    fn decode_body(version: u8, ftype: u8, body: &[u8]) -> Result<Frame> {
+        if version == V1 && (T_PROJECT_BEGIN..=T_PROJECT_OK_BEGIN).contains(&ftype) {
+            return Err(perr(format!(
+                "frame type {ftype} requires protocol v2 (header says v1)"
+            )));
+        }
         let mut c = Cursor { buf: body, pos: 0 };
         let frame = match ftype {
             T_PING => Frame::Ping,
@@ -482,6 +654,26 @@ impl Frame {
             }
             T_SHUTDOWN => Frame::Shutdown,
             T_SHUTDOWN_ACK => Frame::ShutdownAck,
+            T_PROJECT_BEGIN => {
+                let meta = parse_project_meta(&mut c)?;
+                let total_elems = c.u64()?;
+                check_stream_total(total_elems)?;
+                let checksum = ChecksumKind::from_u8(c.u8()?)?;
+                Frame::ProjectBegin(BeginInfo { meta, total_elems, checksum })
+            }
+            T_PROJECT_CHUNK => {
+                let mut payload = Vec::new();
+                chunk_f32s_append(body, &mut payload)?;
+                c.pos = body.len();
+                Frame::ProjectChunk(payload)
+            }
+            T_PROJECT_END => Frame::ProjectEnd { checksum: c.u64()? },
+            T_PROJECT_OK_BEGIN => {
+                let total_elems = c.u64()?;
+                check_stream_total(total_elems)?;
+                let checksum = ChecksumKind::from_u8(c.u8()?)?;
+                Frame::ProjectOkBegin { total_elems, checksum }
+            }
             other => return Err(perr(format!("unknown frame type {other}"))),
         };
         if c.pos != body.len() {
@@ -493,7 +685,8 @@ impl Frame {
         Ok(frame)
     }
 
-    /// Serialize this frame to a writer (one syscall-friendly buffer).
+    /// Serialize this frame to a writer as v1 (one syscall-friendly
+    /// buffer).
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let bytes = self.encode()?;
         w.write_all(&bytes)?;
@@ -501,21 +694,98 @@ impl Frame {
         Ok(())
     }
 
-    /// Read one frame from a reader. A clean EOF before any header byte
-    /// (or mid-frame truncation) surfaces as `MlprojError::Io` with
-    /// `ErrorKind::UnexpectedEof` — connection handlers treat the former
-    /// as a normal disconnect.
+    /// Serialize this frame to a writer as v2, stamping `corr` into the
+    /// header's correlation bytes.
+    pub fn write_to_v2<W: Write>(&self, w: &mut W, corr: u16) -> Result<()> {
+        let bytes = self.encode_v2(corr)?;
+        w.write_all(&bytes)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame from a reader (either version; the correlation id
+    /// is discarded — callers that need it use [`read_raw_frame`]). A
+    /// clean EOF before any header byte (or mid-frame truncation)
+    /// surfaces as `MlprojError::Io` with `ErrorKind::UnexpectedEof` —
+    /// connection handlers treat the former as a normal disconnect.
     pub fn read_from<R: Read>(r: &mut R) -> Result<Frame> {
         let mut header = [0u8; HEADER_BYTES];
         r.read_exact(&mut header)?;
-        let (version, ftype, body_len) = parse_header(&header)?;
-        if version != VERSION {
-            return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
-        }
-        let mut body = vec![0u8; body_len];
+        let h = parse_header(&header, MAX_BODY_BYTES)?;
+        let mut body = vec![0u8; h.body_len];
         r.read_exact(&mut body)?;
-        Self::decode_body(ftype, &body)
+        Self::decode_body(h.version, h.ftype, &body)
     }
+}
+
+/// Decode one raw frame (as produced by [`read_raw_frame`]) into an
+/// owned [`Frame`] — the client-side companion of
+/// [`decode_server_frame`] for callers that track correlation ids.
+pub fn decode_client_frame(version: u8, ftype: u8, body: &[u8]) -> Result<Frame> {
+    Frame::decode_body(version, ftype, body)
+}
+
+/// Encode the spec fields shared by `Project` and `ProjectBegin` bodies
+/// (everything up to the payload/total).
+fn encode_spec_fields(
+    b: &mut Vec<u8>,
+    norms: &[Norm],
+    eta: f64,
+    l1_algo: L1Algo,
+    method: Method,
+    layout: WireLayout,
+    shape: &[usize],
+) -> Result<()> {
+    b.extend_from_slice(&eta.to_le_bytes());
+    b.push(algo_to_u8(l1_algo));
+    b.push(method_to_u8(method));
+    b.push(layout.to_u8());
+    b.push(norms.len() as u8);
+    for &n in norms {
+        b.push(norm_to_u8(n));
+    }
+    b.push(shape.len() as u8);
+    for &d in shape {
+        let d = u32::try_from(d).map_err(|_| perr(format!("dimension {d} exceeds u32")))?;
+        b.extend_from_slice(&d.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Encode-side hygiene shared by `Project` (via `ProjectRequest::validate`)
+/// and `ProjectBegin`: norm/shape ranges and layout agreement. One
+/// implementation, so whole-frame and chunked uploads can never drift in
+/// what they accept.
+fn validate_spec(norms: &[Norm], shape: &[usize], layout: WireLayout) -> Result<()> {
+    if layout == WireLayout::Matrix && shape.len() != 2 {
+        return Err(perr(format!("matrix layout requires a 2-entry shape, got {shape:?}")));
+    }
+    if norms.is_empty() || norms.len() > u8::MAX as usize {
+        return Err(perr(format!("norm list length {} out of range", norms.len())));
+    }
+    if shape.is_empty() || shape.len() > u8::MAX as usize {
+        return Err(perr(format!("shape rank {} out of range", shape.len())));
+    }
+    Ok(())
+}
+
+/// [`validate_spec`] over a decoded/assembled [`ProjectMeta`].
+fn validate_meta(meta: &ProjectMeta) -> Result<()> {
+    validate_spec(&meta.norms, &meta.shape, meta.layout)
+}
+
+/// Validate a declared chunked-stream element total against the
+/// per-stream byte limit.
+fn check_stream_total(total_elems: u64) -> Result<()> {
+    let bytes = total_elems.checked_mul(4).ok_or_else(|| {
+        perr(format!("chunked stream total {total_elems} overflows the byte length"))
+    })?;
+    if bytes > MAX_STREAM_BYTES as u64 {
+        return Err(perr(format!(
+            "chunked stream of {bytes} bytes exceeds the {MAX_STREAM_BYTES}-byte stream cap"
+        )));
+    }
+    Ok(())
 }
 
 /// Parse the spec fields of a `Project` body (everything up to the
@@ -542,6 +812,19 @@ fn parse_project_meta(c: &mut Cursor) -> Result<ProjectMeta> {
 // Zero-copy server path
 // ---------------------------------------------------------------------------
 
+/// The header fields of one raw frame as read off the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawHeader {
+    /// Protocol version byte ([`V1`] or [`V2`]).
+    pub version: u8,
+    /// Frame type byte.
+    pub ftype: u8,
+    /// Correlation id (always 0 on v1 frames).
+    pub corr: u16,
+    /// Body length in bytes (already validated against the cap).
+    pub body_len: usize,
+}
+
 /// A frame as seen by the server's buffer-reusing read loop.
 #[derive(Debug, PartialEq)]
 pub enum ServerFrame {
@@ -552,21 +835,24 @@ pub enum ServerFrame {
     Other(Frame),
 }
 
-/// Read one frame's type byte + raw body into `body` (reused across
-/// calls: after the first few requests of a connection the read path
-/// performs no allocation). EOF before the first header byte surfaces as
+/// Read one frame's header + raw body into `body` (reused across calls:
+/// after the first few requests of a connection the read path performs
+/// no allocation). Accepts both protocol versions; `max_body` lets a
+/// server bound per-frame allocation below the global
+/// [`MAX_BODY_BYTES`]. EOF before the first header byte surfaces as
 /// `Io(UnexpectedEof)` exactly like [`Frame::read_from`].
-pub fn read_raw_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<u8> {
+pub fn read_raw_frame<R: Read>(
+    r: &mut R,
+    body: &mut Vec<u8>,
+    max_body: usize,
+) -> Result<RawHeader> {
     let mut header = [0u8; HEADER_BYTES];
     r.read_exact(&mut header)?;
-    let (version, ftype, body_len) = parse_header(&header)?;
-    if version != VERSION {
-        return Err(perr(format!("unsupported protocol version {version} (want {VERSION})")));
-    }
+    let h = parse_header(&header, max_body)?;
     body.clear();
-    body.resize(body_len, 0);
+    body.resize(h.body_len, 0);
     r.read_exact(body)?;
-    Ok(ftype)
+    Ok(h)
 }
 
 /// Decode a raw frame for the server. `Project` payloads land in
@@ -574,12 +860,13 @@ pub fn read_raw_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<u8> {
 /// a straight memcpy on little-endian targets); every other frame type
 /// decodes through the normal owned path.
 pub fn decode_server_frame(
+    version: u8,
     ftype: u8,
     body: &[u8],
     payload: &mut Vec<f32>,
 ) -> Result<ServerFrame> {
     if ftype != T_PROJECT {
-        return Ok(ServerFrame::Other(Frame::decode_body(ftype, body)?));
+        return Ok(ServerFrame::Other(Frame::decode_body(version, ftype, body)?));
     }
     let mut c = Cursor { buf: body, pos: 0 };
     let meta = parse_project_meta(&mut c)?;
@@ -588,6 +875,125 @@ pub fn decode_server_frame(
         return Err(perr(format!("{} trailing bytes after frame body", body.len() - c.pos)));
     }
     Ok(ServerFrame::Project(meta))
+}
+
+/// Append a `ProjectChunk` body (raw little-endian f32 bytes) onto
+/// `out` — the server/client reassembly hot path; one memcpy on
+/// little-endian targets. Returns the number of elements appended.
+pub fn chunk_f32s_append(body: &[u8], out: &mut Vec<f32>) -> Result<usize> {
+    if body.is_empty() {
+        return Err(perr("chunk frames must carry at least one element"));
+    }
+    if body.len() % 4 != 0 {
+        return Err(perr(format!(
+            "chunk body of {} bytes is not a whole number of f32s",
+            body.len()
+        )));
+    }
+    let n = body.len() / 4;
+    #[cfg(target_endian = "little")]
+    // SAFETY: `body` holds exactly n*4 initialized bytes, the reserve
+    // guarantees room for n more f32 elements past `len`, and any byte
+    // pattern is a valid f32 — set_len only exposes initialized memory.
+    unsafe {
+        let len = out.len();
+        out.reserve(n);
+        std::ptr::copy_nonoverlapping(
+            body.as_ptr(),
+            (out.as_mut_ptr() as *mut u8).add(len * 4),
+            body.len(),
+        );
+        out.set_len(len + n);
+    }
+    #[cfg(not(target_endian = "little"))]
+    out.extend(
+        body.chunks_exact(4).map(|chunk| f32::from_le_bytes(chunk.try_into().unwrap())),
+    );
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// Chunked-stream reassembly
+// ---------------------------------------------------------------------------
+
+/// Bounded reassembly buffer for one chunked payload stream
+/// (`Begin → Chunk… → End`), shared by the server's request path and the
+/// client's reply path. Enforces the declared element total (no overrun,
+/// no short finish) and maintains the running FNV-1a hash chunk by
+/// chunk.
+#[derive(Debug)]
+pub struct ChunkAssembler {
+    total: usize,
+    kind: ChecksumKind,
+    hash: u64,
+    data: Vec<f32>,
+}
+
+impl ChunkAssembler {
+    /// Initial reservation cap: a garbage `Begin` total must not make the
+    /// receiver pre-allocate the whole declared stream (1 MiB of f32s).
+    const RESERVE_CAP: usize = 1 << 18;
+
+    /// Open a stream declared to carry `total_elems` f32s.
+    pub fn new(total_elems: u64, kind: ChecksumKind) -> Result<ChunkAssembler> {
+        check_stream_total(total_elems)?;
+        let total = total_elems as usize;
+        Ok(ChunkAssembler {
+            total,
+            kind,
+            hash: FNV_OFFSET,
+            data: Vec::with_capacity(total.min(Self::RESERVE_CAP)),
+        })
+    }
+
+    /// Append one chunk body (raw little-endian f32 bytes).
+    pub fn push(&mut self, body: &[u8]) -> Result<()> {
+        let n = body.len() / 4;
+        if body.len() % 4 == 0 && self.data.len() + n > self.total {
+            return Err(perr(format!(
+                "chunked stream overruns its declared total: {} + {n} > {}",
+                self.data.len(),
+                self.total
+            )));
+        }
+        chunk_f32s_append(body, &mut self.data)?;
+        if self.kind == ChecksumKind::Fnv1a64 {
+            self.hash = fnv1a64_update(self.hash, body);
+        }
+        Ok(())
+    }
+
+    /// Elements received so far.
+    pub fn received(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True once exactly the declared total has arrived.
+    pub fn is_complete(&self) -> bool {
+        self.data.len() == self.total
+    }
+
+    /// Verify the `ProjectEnd` checksum against the running hash
+    /// (`None` streams require a declared checksum of 0).
+    pub fn checksum_ok(&self, declared: u64) -> bool {
+        match self.kind {
+            ChecksumKind::None => declared == 0,
+            ChecksumKind::Fnv1a64 => declared == self.hash,
+        }
+    }
+
+    /// Close the stream and take the payload. Errors when the received
+    /// count disagrees with the declared total.
+    pub fn into_payload(self) -> Result<Vec<f32>> {
+        if !self.is_complete() {
+            return Err(perr(format!(
+                "chunked stream ended after {} of {} declared elements",
+                self.data.len(),
+                self.total
+            )));
+        }
+        Ok(self.data)
+    }
 }
 
 /// View an f32 payload as its little-endian wire bytes without copying.
@@ -601,27 +1007,9 @@ fn payload_bytes(payload: &[f32]) -> &[u8] {
     }
 }
 
-/// Write a `ProjectOk` frame, streaming the payload to the writer
-/// directly from the caller's f32 buffer — on little-endian targets the
-/// projected send buffer IS the wire payload; nothing is re-encoded into
-/// an intermediate frame allocation.
-pub fn write_project_ok<W: Write>(w: &mut W, payload: &[f32]) -> Result<()> {
-    let count = u32::try_from(payload.len())
-        .map_err(|_| perr("payload exceeds u32 element count"))?;
-    let body_len = 4usize + payload.len() * 4;
-    if body_len > MAX_BODY_BYTES {
-        return Err(perr(format!(
-            "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
-        )));
-    }
-    let mut head = [0u8; HEADER_BYTES + 4];
-    head[..4].copy_from_slice(&MAGIC);
-    head[4] = VERSION;
-    head[5] = T_PROJECT_OK;
-    // bytes 6..8 reserved = 0
-    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
-    head[12..16].copy_from_slice(&count.to_le_bytes());
-    w.write_all(&head)?;
+/// Write payload f32s as little-endian wire bytes without re-encoding
+/// into an intermediate frame allocation (zero-copy on LE targets).
+fn write_payload_bytes<W: Write>(w: &mut W, payload: &[f32]) -> Result<()> {
     #[cfg(target_endian = "little")]
     w.write_all(payload_bytes(payload))?;
     #[cfg(not(target_endian = "little"))]
@@ -634,22 +1022,207 @@ pub fn write_project_ok<W: Write>(w: &mut W, payload: &[f32]) -> Result<()> {
             w.write_all(&buf[..chunk.len() * 4])?;
         }
     }
-    w.flush()?;
     Ok(())
 }
 
-/// Parse + validate a 12-byte header; returns (version, type, body_len).
-fn parse_header(h: &[u8]) -> Result<(u8, u8, usize)> {
-    if h[..4] != MAGIC {
-        return Err(perr(format!("bad magic {:?} (not an mlproj service stream)", &h[..4])));
-    }
-    let body_len = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
+fn write_project_ok_versioned<W: Write>(
+    w: &mut W,
+    version: u8,
+    corr: u16,
+    payload: &[f32],
+) -> Result<()> {
+    let count = u32::try_from(payload.len())
+        .map_err(|_| perr("payload exceeds u32 element count"))?;
+    let body_len = 4usize + payload.len() * 4;
     if body_len > MAX_BODY_BYTES {
         return Err(perr(format!(
             "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
         )));
     }
-    Ok((h[4], h[5], body_len))
+    let mut head = [0u8; HEADER_BYTES + 4];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = version;
+    head[5] = T_PROJECT_OK;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
+    head[12..16].copy_from_slice(&count.to_le_bytes());
+    w.write_all(&head)?;
+    write_payload_bytes(w, payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a v1 `ProjectOk` frame, streaming the payload to the writer
+/// directly from the caller's f32 buffer — on little-endian targets the
+/// projected send buffer IS the wire payload; nothing is re-encoded into
+/// an intermediate frame allocation.
+pub fn write_project_ok<W: Write>(w: &mut W, payload: &[f32]) -> Result<()> {
+    write_project_ok_versioned(w, V1, 0, payload)
+}
+
+/// Write a v2 `ProjectOk` frame carrying `corr`, with the same zero-copy
+/// payload path as [`write_project_ok`].
+pub fn write_project_ok_v2<W: Write>(w: &mut W, corr: u16, payload: &[f32]) -> Result<()> {
+    write_project_ok_versioned(w, V2, corr, payload)
+}
+
+/// Write a v2 `Project` frame carrying `corr`, streaming the payload
+/// from the borrowed request (no clone of the payload into a `Frame`).
+/// The request must fit the body cap — larger payloads go through
+/// [`write_project_chunked`].
+pub fn write_project_v2<W: Write>(w: &mut W, corr: u16, req: &ProjectRequest) -> Result<()> {
+    req.validate()?;
+    let mut spec = Vec::new();
+    encode_spec_fields(
+        &mut spec, &req.norms, req.eta, req.l1_algo, req.method, req.layout, &req.shape,
+    )?;
+    let count = u32::try_from(req.payload.len())
+        .map_err(|_| perr("payload exceeds u32 element count"))?;
+    let body_len = spec.len() + 4 + req.payload.len() * 4;
+    if body_len > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap \
+             (use the chunked stream)"
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = V2;
+    head[5] = T_PROJECT;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&spec)?;
+    w.write_all(&count.to_le_bytes())?;
+    write_payload_bytes(w, &req.payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one raw `ProjectChunk` frame from a payload slice (no count
+/// prefix; zero-copy on LE targets).
+fn write_chunk_frame<W: Write>(w: &mut W, corr: u16, chunk: &[f32]) -> Result<()> {
+    debug_assert!(!chunk.is_empty());
+    let body_len = chunk.len() * 4;
+    if body_len > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "chunk body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = V2;
+    head[5] = T_PROJECT_CHUNK;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
+    w.write_all(&head)?;
+    write_payload_bytes(w, chunk)?;
+    Ok(())
+}
+
+/// Checksum of a payload as it would travel on the wire (its
+/// little-endian bytes).
+pub fn payload_fnv1a64(payload: &[f32]) -> u64 {
+    #[cfg(target_endian = "little")]
+    {
+        fnv1a64(payload_bytes(payload))
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut hash = FNV_OFFSET;
+        for &x in payload {
+            hash = fnv1a64_update(hash, &x.to_le_bytes());
+        }
+        hash
+    }
+}
+
+/// Stream one projection request as a v2 chunked stream:
+/// `ProjectBegin` (spec + total + FNV-1a checksum kind), `ProjectChunk`
+/// frames of at most `chunk_elems` elements, and `ProjectEnd` carrying
+/// the payload checksum. Used for payloads past the frame-body cap (or
+/// to force chunking for tests/CLI).
+pub fn write_project_chunked<W: Write>(
+    w: &mut W,
+    corr: u16,
+    req: &ProjectRequest,
+    chunk_elems: usize,
+) -> Result<()> {
+    req.validate()?;
+    let begin = Frame::ProjectBegin(BeginInfo {
+        meta: ProjectMeta {
+            norms: req.norms.clone(),
+            eta: req.eta,
+            l1_algo: req.l1_algo,
+            method: req.method,
+            layout: req.layout,
+            shape: req.shape.clone(),
+        },
+        total_elems: req.payload.len() as u64,
+        checksum: ChecksumKind::Fnv1a64,
+    });
+    w.write_all(&begin.encode_v2(corr)?)?;
+    write_payload_chunks(w, corr, &req.payload, chunk_elems)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write `payload` as `ProjectChunk` frames (at most `chunk_elems` per
+/// frame) followed by a checksummed `ProjectEnd` — the shared tail of
+/// chunked requests and chunked replies.
+pub fn write_payload_chunks<W: Write>(
+    w: &mut W,
+    corr: u16,
+    payload: &[f32],
+    chunk_elems: usize,
+) -> Result<()> {
+    let step = chunk_elems.max(1).min(MAX_BODY_BYTES / 4);
+    for chunk in payload.chunks(step) {
+        write_chunk_frame(w, corr, chunk)?;
+    }
+    let end = Frame::ProjectEnd { checksum: payload_fnv1a64(payload) };
+    w.write_all(&end.encode_v2(corr)?)?;
+    Ok(())
+}
+
+/// Stream one projection *reply* as a v2 chunked stream
+/// (`ProjectOkBegin`, `ProjectChunk`s, checksummed `ProjectEnd`) — the
+/// server path for results past the frame-body cap.
+pub fn write_project_ok_chunked<W: Write>(
+    w: &mut W,
+    corr: u16,
+    payload: &[f32],
+    max_chunk_bytes: usize,
+) -> Result<()> {
+    let begin = Frame::ProjectOkBegin {
+        total_elems: payload.len() as u64,
+        checksum: ChecksumKind::Fnv1a64,
+    };
+    w.write_all(&begin.encode_v2(corr)?)?;
+    write_payload_chunks(w, corr, payload, max_chunk_bytes / 4)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Parse + validate a 12-byte header against `max_body`.
+fn parse_header(h: &[u8], max_body: usize) -> Result<RawHeader> {
+    if h[..4] != MAGIC {
+        return Err(perr(format!("bad magic {:?} (not an mlproj service stream)", &h[..4])));
+    }
+    let version = h[4];
+    if version != V1 && version != V2 {
+        return Err(perr(format!(
+            "unsupported protocol version {version} (this build speaks v{V1} and v{V2})"
+        )));
+    }
+    let corr = u16::from_le_bytes(h[6..8].try_into().unwrap());
+    let body_len = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
+    if body_len > max_body {
+        return Err(perr(format!(
+            "frame body of {body_len} bytes exceeds the {max_body}-byte cap"
+        )));
+    }
+    Ok(RawHeader { version, ftype: h[5], corr, body_len })
 }
 
 fn write_f32s(b: &mut Vec<u8>, xs: &[f32]) -> Result<()> {
@@ -933,8 +1506,9 @@ mod tests {
         let mut cursor = std::io::Cursor::new(bytes);
         let mut body = Vec::new();
         let mut payload = vec![9.9f32; 3]; // stale content must be replaced
-        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
-        match decode_server_frame(ftype, &body, &mut payload).unwrap() {
+        let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
+        assert_eq!((h.version, h.corr), (V1, 0));
+        match decode_server_frame(h.version, h.ftype, &body, &mut payload).unwrap() {
             ServerFrame::Project(meta) => {
                 assert_eq!(meta.norms, req.norms);
                 assert_eq!(meta.eta, req.eta);
@@ -950,9 +1524,9 @@ mod tests {
 
         let bytes = Frame::Ping.encode().unwrap();
         let mut cursor = std::io::Cursor::new(bytes);
-        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
+        let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
         assert_eq!(
-            decode_server_frame(ftype, &body, &mut payload).unwrap(),
+            decode_server_frame(h.version, h.ftype, &body, &mut payload).unwrap(),
             ServerFrame::Other(Frame::Ping)
         );
     }
@@ -967,19 +1541,246 @@ mod tests {
         long[8..12].copy_from_slice(&body_len.to_le_bytes());
         let mut cursor = std::io::Cursor::new(long);
         let mut body = Vec::new();
-        let ftype = read_raw_frame(&mut cursor, &mut body).unwrap();
+        let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
         assert!(matches!(
-            decode_server_frame(ftype, &body, &mut Vec::new()),
+            decode_server_frame(h.version, h.ftype, &body, &mut Vec::new()),
             Err(MlprojError::Protocol(_))
         ));
         // Bad magic fails at the header.
-        let mut bad = bytes;
+        let mut bad = bytes.clone();
         bad[0] = b'X';
         let mut cursor = std::io::Cursor::new(bad);
         assert!(matches!(
-            read_raw_frame(&mut cursor, &mut body),
+            read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES),
             Err(MlprojError::Protocol(_))
         ));
+        // A caller-provided cap below the frame size rejects at the
+        // header, before any body allocation.
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_raw_frame(&mut cursor, &mut body, 8),
+            Err(MlprojError::Protocol(_))
+        ));
+    }
+
+    // -- protocol v2 ------------------------------------------------------
+
+    #[test]
+    fn v2_header_carries_and_returns_correlation_ids() {
+        for corr in [0u16, 1, 7, 0xBEEF, u16::MAX] {
+            let bytes = Frame::Project(sample_request()).encode_v2(corr).unwrap();
+            let mut cursor = std::io::Cursor::new(bytes);
+            let mut body = Vec::new();
+            let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
+            assert_eq!((h.version, h.corr), (V2, corr));
+            // The body layout is bit-identical to v1: only header bytes
+            // 4 (version) and 6..8 (corr) differ.
+            let v1 = Frame::Project(sample_request()).encode().unwrap();
+            let v2 = Frame::Project(sample_request()).encode_v2(corr).unwrap();
+            assert_eq!(v1[HEADER_BYTES..], v2[HEADER_BYTES..]);
+            assert_eq!(v1[8..12], v2[8..12]);
+        }
+    }
+
+    #[test]
+    fn v2_only_frames_roundtrip_and_v1_rejects_them() {
+        let begin = Frame::ProjectBegin(BeginInfo {
+            meta: ProjectMeta {
+                norms: vec![Norm::Linf, Norm::L1],
+                eta: 1.5,
+                l1_algo: L1Algo::Condat,
+                method: Method::Compositional,
+                layout: WireLayout::Matrix,
+                shape: vec![2, 3],
+            },
+            total_elems: 6,
+            checksum: ChecksumKind::Fnv1a64,
+        });
+        let chunk = Frame::ProjectChunk(vec![1.0, -2.5, f32::MAX]);
+        let end = Frame::ProjectEnd { checksum: 0xDEAD_BEEF_CAFE_F00D };
+        let ok_begin = Frame::ProjectOkBegin { total_elems: 6, checksum: ChecksumKind::None };
+        for frame in [begin, chunk, end, ok_begin] {
+            // v1 encode refuses v2-only types…
+            assert!(matches!(frame.encode(), Err(MlprojError::Protocol(_))), "{frame:?}");
+            // …v2 round-trips them.
+            let bytes = frame.encode_v2(42).unwrap();
+            assert_eq!(Frame::decode(&bytes).unwrap(), frame, "{frame:?}");
+            // …and a v1 header over a v2-only body is rejected.
+            let mut forged = bytes.clone();
+            forged[4] = V1;
+            assert!(matches!(Frame::decode(&forged), Err(MlprojError::Protocol(_))));
+        }
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference vectors for FNV-1a 64 (Noll's published test values).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Chunked updates compose to the whole-buffer hash.
+        let h = fnv1a64_update(fnv1a64_update(FNV_OFFSET, b"foo"), b"bar");
+        assert_eq!(h, fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn write_project_v2_matches_frame_encoding() {
+        let req = sample_request();
+        let mut streamed = Vec::new();
+        write_project_v2(&mut streamed, 9, &req).unwrap();
+        assert_eq!(streamed, Frame::Project(req).encode_v2(9).unwrap());
+    }
+
+    #[test]
+    fn write_project_ok_v2_is_a_valid_frame_with_corr() {
+        let payload = vec![0.5f32, -1.25, f32::MIN];
+        let mut out = Vec::new();
+        write_project_ok_v2(&mut out, 0x1234, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(out.clone());
+        let mut body = Vec::new();
+        let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
+        assert_eq!((h.version, h.corr), (V2, 0x1234));
+        assert_eq!(Frame::decode(&out).unwrap(), Frame::ProjectOk(payload));
+    }
+
+    /// Parse a byte stream of v2 frames back into (corr, Frame) pairs.
+    fn drain_frames(bytes: &[u8]) -> Vec<(u16, Frame)> {
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut body = Vec::new();
+        let mut out = Vec::new();
+        loop {
+            match read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES) {
+                Ok(h) => out.push((
+                    h.corr,
+                    Frame::decode_body(h.version, h.ftype, &body).unwrap(),
+                )),
+                Err(MlprojError::Io(e))
+                    if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+                {
+                    return out;
+                }
+                Err(e) => panic!("unexpected stream error: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_request_stream_reassembles_bit_identically() {
+        let mut req = sample_request();
+        req.shape = vec![5, 20];
+        req.payload = (0..100).map(|i| (i as f32) * 0.375 - 20.0).collect();
+        for chunk_elems in [1usize, 7, 100, 1000] {
+            let mut wire = Vec::new();
+            write_project_chunked(&mut wire, 3, &req, chunk_elems).unwrap();
+            let frames = drain_frames(&wire);
+            assert!(frames.iter().all(|(corr, _)| *corr == 3));
+            let Frame::ProjectBegin(info) = &frames[0].1 else {
+                panic!("expected Begin, got {:?}", frames[0].1)
+            };
+            assert_eq!(info.total_elems, 100);
+            assert_eq!(info.meta.shape, req.shape);
+            let mut asm =
+                ChunkAssembler::new(info.total_elems, info.checksum).unwrap();
+            let mut closed = false;
+            for (_, frame) in &frames[1..] {
+                match frame {
+                    Frame::ProjectChunk(chunk) => {
+                        assert!(!closed);
+                        assert!(chunk.len() <= chunk_elems);
+                        // Feed the assembler the raw wire bytes, exactly
+                        // like the server's reassembly loop.
+                        let mut raw = Vec::new();
+                        for &x in chunk {
+                            raw.extend_from_slice(&x.to_le_bytes());
+                        }
+                        asm.push(&raw).unwrap();
+                    }
+                    Frame::ProjectEnd { checksum } => {
+                        assert!(asm.is_complete());
+                        assert!(asm.checksum_ok(*checksum));
+                        closed = true;
+                    }
+                    other => panic!("unexpected frame {other:?}"),
+                }
+            }
+            assert!(closed, "stream must end with ProjectEnd");
+            assert_eq!(asm.into_payload().unwrap(), req.payload, "chunk={chunk_elems}");
+        }
+    }
+
+    #[test]
+    fn chunked_reply_stream_reassembles_bit_identically() {
+        let payload: Vec<f32> = (0..77).map(|i| (i as f32).sin()).collect();
+        let mut wire = Vec::new();
+        write_project_ok_chunked(&mut wire, 11, &payload, 64).unwrap();
+        let frames = drain_frames(&wire);
+        let Frame::ProjectOkBegin { total_elems, checksum } = frames[0].1 else {
+            panic!("expected OkBegin, got {:?}", frames[0].1)
+        };
+        let mut asm = ChunkAssembler::new(total_elems, checksum).unwrap();
+        let mut declared = None;
+        for (_, frame) in &frames[1..] {
+            match frame {
+                Frame::ProjectChunk(chunk) => {
+                    // 64-byte cap -> at most 16 elements per chunk.
+                    assert!(chunk.len() <= 16);
+                    let mut raw = Vec::new();
+                    for &x in chunk {
+                        raw.extend_from_slice(&x.to_le_bytes());
+                    }
+                    asm.push(&raw).unwrap();
+                }
+                Frame::ProjectEnd { checksum } => declared = Some(*checksum),
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        let declared = declared.expect("stream must end with ProjectEnd");
+        assert_eq!(declared, payload_fnv1a64(&payload));
+        assert!(asm.checksum_ok(declared));
+        assert_eq!(asm.into_payload().unwrap(), payload);
+    }
+
+    #[test]
+    fn assembler_enforces_limits_and_checksums() {
+        // Declared total past the stream cap is rejected up front.
+        let too_big = (MAX_STREAM_BYTES as u64) / 4 + 1;
+        assert!(matches!(
+            ChunkAssembler::new(too_big, ChecksumKind::None),
+            Err(MlprojError::Protocol(_))
+        ));
+        assert!(matches!(
+            Frame::ProjectOkBegin { total_elems: too_big, checksum: ChecksumKind::None }
+                .encode_v2(0),
+            Err(MlprojError::Protocol(_))
+        ));
+        // Overrun past the declared total.
+        let mut asm = ChunkAssembler::new(2, ChecksumKind::None).unwrap();
+        asm.push(&1.0f32.to_le_bytes()).unwrap();
+        assert!(asm.push(&[0u8; 8]).is_err());
+        // Short stream refuses to finish.
+        let asm = ChunkAssembler::new(3, ChecksumKind::None).unwrap();
+        assert!(!asm.is_complete());
+        assert!(asm.into_payload().is_err());
+        // Misaligned chunk bodies are rejected.
+        let mut asm = ChunkAssembler::new(4, ChecksumKind::None).unwrap();
+        assert!(asm.push(&[0u8; 5]).is_err());
+        assert!(asm.push(&[]).is_err());
+        // Checksum verification: Fnv streams match their running hash,
+        // `None` streams require a declared 0.
+        let mut asm = ChunkAssembler::new(1, ChecksumKind::Fnv1a64).unwrap();
+        let raw = 2.5f32.to_le_bytes();
+        asm.push(&raw).unwrap();
+        assert!(asm.checksum_ok(fnv1a64(&raw)));
+        assert!(!asm.checksum_ok(fnv1a64(&raw) ^ 1));
+        let mut asm = ChunkAssembler::new(1, ChecksumKind::None).unwrap();
+        asm.push(&raw).unwrap();
+        assert!(asm.checksum_ok(0));
+        assert!(!asm.checksum_ok(7));
+        // Empty streams are complete immediately and hash to the offset.
+        let asm = ChunkAssembler::new(0, ChecksumKind::Fnv1a64).unwrap();
+        assert!(asm.is_complete());
+        assert!(asm.checksum_ok(FNV_OFFSET));
+        assert_eq!(asm.into_payload().unwrap(), Vec::<f32>::new());
     }
 
     #[test]

@@ -118,37 +118,101 @@ impl ReplySlot {
     }
 }
 
-/// One projection job: cache key, flat payload, and the slot the result
-/// (projected payload or error) is delivered on.
+/// One completed-request message on a pipelined connection's reply
+/// channel: scheduler workers send `Project` results, the connection's
+/// reader sends `Control` frames (Pong, StatsResponse, ShutdownAck); a
+/// single writer thread serializes both onto the socket.
+#[derive(Debug)]
+pub enum ConnReply {
+    /// A finished projection job (out-of-order delivery is expected; the
+    /// correlation id is the client's matching key).
+    Project {
+        /// Correlation id copied from the request frame.
+        corr: u16,
+        /// Projected payload, or the typed per-request error.
+        result: Result<Vec<f32>>,
+    },
+    /// A non-projection reply the reader wants written in queue order.
+    Control {
+        /// Correlation id copied from the request frame.
+        corr: u16,
+        /// The frame to write.
+        frame: crate::service::protocol::Frame,
+    },
+}
+
+/// Where a job's result is delivered: a blocking [`ReplySlot`]
+/// rendezvous (v1 lockstep connections, in-process callers) or a
+/// pipelined connection's reply channel, tagged with the request's
+/// correlation id (v2 connections).
+#[derive(Debug, Clone)]
+pub enum ReplyTo {
+    /// Blocking single-value rendezvous.
+    Slot(Arc<ReplySlot>),
+    /// Pipelined reply channel + correlation id.
+    Channel {
+        /// Sender half of the connection's writer channel.
+        tx: std::sync::mpsc::Sender<ConnReply>,
+        /// Correlation id of the originating request.
+        corr: u16,
+    },
+}
+
+impl ReplyTo {
+    fn deliver(self, result: Result<Vec<f32>>) {
+        match self {
+            ReplyTo::Slot(slot) => slot.put(result),
+            ReplyTo::Channel { tx, corr } => {
+                // A disconnected writer (client already gone) just drops
+                // the result.
+                let _ = tx.send(ConnReply::Project { corr, result });
+            }
+        }
+    }
+}
+
+/// One projection job: cache key, flat payload, and the reply route the
+/// result (projected payload or error) is delivered on.
 pub struct Job {
     /// Plan-cache key derived from the request.
     pub key: PlanKey,
     /// Flat payload to project in place.
     pub payload: Vec<f32>,
-    /// Reply slot; `None` once the job has been finished.
-    reply: Option<Arc<ReplySlot>>,
+    /// Reply route; `None` once the job has been finished.
+    reply: Option<ReplyTo>,
 }
 
 impl Job {
     /// New job answering on `reply`.
     pub fn new(key: PlanKey, payload: Vec<f32>, reply: Arc<ReplySlot>) -> Job {
-        Job { key, payload, reply: Some(reply) }
+        Job { key, payload, reply: Some(ReplyTo::Slot(reply)) }
+    }
+
+    /// New pipelined job answering on a connection's reply channel,
+    /// tagged with the request's correlation id.
+    pub fn with_channel(
+        key: PlanKey,
+        payload: Vec<f32>,
+        tx: std::sync::mpsc::Sender<ConnReply>,
+        corr: u16,
+    ) -> Job {
+        Job { key, payload, reply: Some(ReplyTo::Channel { tx, corr }) }
     }
 
     /// Deliver the result. Every job is finished exactly once; a job
     /// dropped unfinished (worker panic, queue teardown) delivers an
     /// internal error from its `Drop` so no submitter waits forever.
     pub fn finish(mut self, result: Result<Vec<f32>>) {
-        if let Some(slot) = self.reply.take() {
-            slot.put(result);
+        if let Some(reply) = self.reply.take() {
+            reply.deliver(result);
         }
     }
 }
 
 impl Drop for Job {
     fn drop(&mut self) {
-        if let Some(slot) = self.reply.take() {
-            slot.put(Err(MlprojError::Runtime(
+        if let Some(reply) = self.reply.take() {
+            reply.deliver(Err(MlprojError::Runtime(
                 "scheduler dropped the job before completion".into(),
             )));
         }
@@ -179,13 +243,20 @@ impl JobQueue {
         }
     }
 
-    /// Enqueue without blocking; `ServiceBusy` when full or shutting down.
+    /// Enqueue without blocking; `ServiceBusy` when full or shutting
+    /// down. A rejected job is *finished* with `ServiceBusy` (not merely
+    /// dropped), so channel-routed submitters see a typed `Busy` reply
+    /// with the right correlation id rather than a generic teardown
+    /// error.
     fn try_push(&self, job: Job) -> Result<()> {
         if self.shutdown.load(Ordering::Acquire) {
+            job.finish(Err(MlprojError::ServiceBusy));
             return Err(MlprojError::ServiceBusy);
         }
         let mut q = self.queue.lock().expect("job queue poisoned");
         if q.len() >= self.depth {
+            drop(q);
+            job.finish(Err(MlprojError::ServiceBusy));
             return Err(MlprojError::ServiceBusy);
         }
         q.push_back(job);
@@ -437,6 +508,61 @@ mod tests {
         let job = Job::new(test_key(vec![2]), vec![0.0; 2], Arc::clone(&slot));
         drop(job);
         assert!(matches!(slot.take(), Err(MlprojError::Runtime(_))));
+    }
+
+    #[test]
+    fn channel_jobs_deliver_results_with_their_corr_ids() {
+        let stats = Arc::new(ServiceStats::new());
+        let sched = Scheduler::new(
+            &SchedulerConfig { workers: 1, ..SchedulerConfig::default() },
+            stats,
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut rng = Rng::new(14);
+        let mut expected = std::collections::HashMap::new();
+        for corr in [3u16, 9, 500] {
+            let y = Matrix::random_uniform(6, 10, -1.0, 1.0, &mut rng);
+            let want = ProjectionSpec::l1inf(0.7).project_matrix(&y).unwrap();
+            expected.insert(corr, want.data().to_vec());
+            let r = req(&y, 0.7);
+            let job = Job::with_channel(
+                PlanKey::from_request(&r),
+                r.payload,
+                tx.clone(),
+                corr,
+            );
+            sched.try_submit(job).unwrap();
+        }
+        for _ in 0..3 {
+            match rx.recv().unwrap() {
+                ConnReply::Project { corr, result } => {
+                    assert_eq!(result.unwrap(), expected.remove(&corr).unwrap());
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        assert!(expected.is_empty());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn rejected_channel_job_gets_a_typed_busy_reply() {
+        // A full queue must answer a pipelined job with ServiceBusy on
+        // its own corr id — not a generic teardown error.
+        let q = JobQueue::new(1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let key = test_key(vec![2]);
+        q.try_push(Job::with_channel(key.clone(), vec![0.0; 2], tx.clone(), 1)).unwrap();
+        assert!(matches!(
+            q.try_push(Job::with_channel(key, vec![0.0; 2], tx, 2)),
+            Err(MlprojError::ServiceBusy)
+        ));
+        match rx.recv().unwrap() {
+            ConnReply::Project { corr: 2, result } => {
+                assert!(matches!(result, Err(MlprojError::ServiceBusy)));
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
     }
 
     #[test]

@@ -5,20 +5,73 @@
 //! [`protocol`](crate::service::protocol), projection jobs dispatched
 //! through the bounded queue. `Shutdown` acknowledges, stops the accept
 //! loop, lets in-flight connections drain, then joins the workers.
+//!
+//! ## Version negotiation
+//!
+//! A connection's protocol version is pinned by the **first frame** the
+//! client sends and never changes:
+//!
+//! * **v1** — strict lockstep, exactly the pre-v2 byte behavior: the
+//!   handler thread reads a frame, round-trips the job through a
+//!   blocking [`ReplySlot`], writes the reply, repeats. The three
+//!   connection-lifetime buffers (raw body, f32 payload, reply slot) are
+//!   recycled so a warm request allocates nothing.
+//! * **v2** — pipelined: the handler thread becomes a pure *reader*
+//!   (decode, submit, repeat) and a dedicated *writer* thread owns the
+//!   socket's send side. Scheduler workers deliver finished jobs
+//!   straight onto the writer's channel tagged with the request's
+//!   correlation id, so replies go out as they complete — out of order
+//!   when the scheduler reorders (and the reader is already decoding the
+//!   next request while earlier ones project). Chunked payload streams
+//!   (`ProjectBegin`/`ProjectChunk`/`ProjectEnd`) reassemble in a
+//!   bounded per-connection map; replies past the body cap stream back
+//!   chunked the same way.
+//!
+//! Mixing versions on one connection is a protocol error.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::core::error::{MlprojError, Result};
 use crate::service::cache::PlanKey;
 use crate::service::protocol::{
-    self, ErrorCode, Frame, ServerFrame,
+    self, ChunkAssembler, ErrorCode, Frame, ProjectMeta, RawHeader, ServerFrame, V1, V2,
 };
-use crate::service::scheduler::{Job, ReplySlot, Scheduler, SchedulerConfig};
+use crate::service::scheduler::{ConnReply, Job, ReplySlot, Scheduler, SchedulerConfig};
 use crate::service::stats::ServiceStats;
+
+/// Server-side wire limits (distinct from the scheduler's sizing knobs).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Per-frame body cap in bytes. Frames past this are rejected at the
+    /// header (bounding per-frame allocation); replies past it stream
+    /// back as chunked frames. Defaults to the protocol-wide
+    /// [`protocol::MAX_BODY_BYTES`]; tests and memory-constrained
+    /// deployments lower it.
+    pub max_body_bytes: usize,
+    /// Maximum concurrently open chunked request streams per connection.
+    pub max_streams: usize,
+    /// Maximum requests in flight (submitted, reply not yet written) per
+    /// v2 connection. Past this, requests are answered `Busy` without
+    /// touching the scheduler — it bounds the completed-reply backlog a
+    /// slow-reading client can pile up in the writer channel, keeping
+    /// per-connection memory bounded like v1's lockstep did.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_body_bytes: protocol::MAX_BODY_BYTES,
+            max_streams: 4,
+            max_inflight: 256,
+        }
+    }
+}
 
 /// A bound (not yet running) projection server.
 pub struct Server {
@@ -27,17 +80,31 @@ pub struct Server {
     stats: Arc<ServiceStats>,
     shutdown: Arc<AtomicBool>,
     addr: SocketAddr,
+    opts: ServeOptions,
 }
 
 impl Server {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and spawn
-    /// the scheduler workers described by `cfg`.
+    /// the scheduler workers described by `cfg`, with default wire
+    /// limits.
     pub fn bind(addr: &str, cfg: &SchedulerConfig) -> Result<Server> {
+        Server::bind_with(addr, cfg, ServeOptions::default())
+    }
+
+    /// Like [`Server::bind`], with explicit wire limits.
+    pub fn bind_with(addr: &str, cfg: &SchedulerConfig, opts: ServeOptions) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let stats = Arc::new(ServiceStats::new());
         let scheduler = Arc::new(Scheduler::new(cfg, Arc::clone(&stats)));
-        Ok(Server { listener, scheduler, stats, shutdown: Arc::new(AtomicBool::new(false)), addr })
+        Ok(Server {
+            listener,
+            scheduler,
+            stats,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            addr,
+            opts,
+        })
     }
 
     /// The bound address (resolves the ephemeral port).
@@ -83,8 +150,9 @@ impl Server {
             let shutdown = Arc::clone(&self.shutdown);
             let peers_for_conn = Arc::clone(&peers);
             let addr = self.addr;
+            let opts = self.opts.clone();
             conns.push(std::thread::spawn(move || {
-                handle_conn(stream, &scheduler, &stats, &shutdown, addr);
+                handle_conn(stream, &scheduler, &stats, &shutdown, addr, &opts);
                 peers_for_conn.lock().expect("peer map poisoned").remove(&conn_id);
             }));
             // Reap finished handlers so long-running servers don't
@@ -132,44 +200,87 @@ impl ServerHandle {
     }
 }
 
+/// Flip the shutdown flag and dial the listener once so the accept loop
+/// observes it. A wildcard bind (0.0.0.0 / ::) is not connectable on
+/// every platform — dial loopback on the same port.
+fn trigger_shutdown(shutdown: &AtomicBool, addr: SocketAddr) {
+    shutdown.store(true, Ordering::Release);
+    let mut wake = addr;
+    if wake.ip().is_unspecified() {
+        wake.set_ip(match wake.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect(wake);
+}
+
 /// Serve one connection until disconnect, protocol error, or `Shutdown`.
-///
-/// The projection path recycles three connection-lifetime resources so a
-/// warm request touches the allocator only for its (tiny) spec header:
-/// the raw frame body (receive buffer), the f32 payload buffer the body
-/// decodes into — which travels to the scheduler worker, gets projected
-/// in place, and comes back — and the [`ReplySlot`] rendezvous. The
-/// response is then written straight from that projected buffer
-/// ([`protocol::write_project_ok`]); no encode-side frame allocation.
+/// The first frame pins the connection's protocol version.
 fn handle_conn(
+    mut stream: TcpStream,
+    scheduler: &Arc<Scheduler>,
+    stats: &Arc<ServiceStats>,
+    shutdown: &AtomicBool,
+    addr: SocketAddr,
+    opts: &ServeOptions,
+) {
+    let mut body: Vec<u8> = Vec::new();
+    let first = match protocol::read_raw_frame(&mut stream, &mut body, opts.max_body_bytes) {
+        Ok(h) => h,
+        Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return; // clean disconnect before the first frame
+        }
+        Err(e) => {
+            let _ = Frame::Error { code: ErrorCode::from_error(&e), msg: format!("{e}") }
+                .write_to(&mut stream);
+            return;
+        }
+    };
+    match first.version {
+        V2 => serve_v2(stream, scheduler, stats, shutdown, addr, opts, first, body),
+        _ => serve_v1(stream, scheduler, stats, shutdown, addr, opts, first, body),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1: lockstep request/response (pre-v2 behavior, byte for byte)
+// ---------------------------------------------------------------------------
+
+/// The v1 projection path recycles three connection-lifetime resources
+/// so a warm request touches the allocator only for its (tiny) spec
+/// header: the raw frame body (receive buffer), the f32 payload buffer
+/// the body decodes into — which travels to the scheduler worker, gets
+/// projected in place, and comes back — and the [`ReplySlot`]
+/// rendezvous. The response is then written straight from that projected
+/// buffer ([`protocol::write_project_ok`]); no encode-side frame
+/// allocation.
+#[allow(clippy::too_many_arguments)]
+fn serve_v1(
     mut stream: TcpStream,
     scheduler: &Scheduler,
     stats: &ServiceStats,
     shutdown: &AtomicBool,
     addr: SocketAddr,
+    opts: &ServeOptions,
+    mut head: RawHeader,
+    mut body: Vec<u8>,
 ) {
-    let mut body: Vec<u8> = Vec::new();
     let mut payload: Vec<f32> = Vec::new();
     let slot = ReplySlot::new();
     loop {
-        let ftype = match protocol::read_raw_frame(&mut stream, &mut body) {
-            Ok(t) => t,
-            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-                return; // clean disconnect
+        if head.version != V1 {
+            let _ = Frame::Error {
+                code: ErrorCode::Protocol,
+                msg: "protocol v2 frame on a v1-pinned connection".into(),
             }
-            Err(e) => {
-                // Malformed input: best-effort error frame, then close —
-                // after a framing error the stream offset is unreliable.
-                let _ = Frame::Error {
-                    code: ErrorCode::from_error(&e),
-                    msg: format!("{e}"),
-                }
-                .write_to(&mut stream);
-                return;
-            }
-        };
+            .write_to(&mut stream);
+            return;
+        }
         ServiceStats::bump(&stats.frames_in);
-        let frame = match protocol::decode_server_frame(ftype, &body, &mut payload) {
+        let decoded =
+            protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload);
+        let frame = match decoded {
             Ok(f) => f,
             Err(e) => {
                 let _ = Frame::Error {
@@ -196,49 +307,30 @@ fn handle_conn(
                         if ok.is_err() {
                             return;
                         }
-                        continue;
+                        None
                     }
                     Err(e) => {
                         ServiceStats::bump(&stats.responses_err);
-                        Frame::Error {
+                        Some(Frame::Error {
                             code: ErrorCode::from_error(&e),
                             msg: format!("{e} [request: {}]", meta.describe()),
-                        }
+                        })
                     }
                 }
             }
-            ServerFrame::Other(Frame::Ping) => Frame::Pong,
-            ServerFrame::Other(Frame::StatsRequest) => Frame::StatsResponse(stats.snapshot()),
+            ServerFrame::Other(Frame::Ping) => Some(Frame::Pong),
+            ServerFrame::Other(Frame::StatsRequest) => {
+                Some(Frame::StatsResponse(stats.snapshot()))
+            }
             ServerFrame::Other(Frame::Shutdown) => {
                 let _ = Frame::ShutdownAck.write_to(&mut stream);
-                shutdown.store(true, Ordering::Release);
-                // Unblock the accept loop so it observes the flag. A
-                // wildcard bind (0.0.0.0 / ::) is not connectable on
-                // every platform — dial loopback on the same port.
-                let mut wake = addr;
-                if wake.ip().is_unspecified() {
-                    wake.set_ip(match wake.ip() {
-                        std::net::IpAddr::V4(_) => {
-                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                        }
-                        std::net::IpAddr::V6(_) => {
-                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                        }
-                    });
-                }
-                let _ = TcpStream::connect(wake);
+                trigger_shutdown(shutdown, addr);
                 return;
             }
-            // Server-to-client frames arriving at the server are a
-            // client bug; answer once and drop the connection.
-            ServerFrame::Other(
-                Frame::Pong
-                | Frame::Project(_)
-                | Frame::ProjectOk(_)
-                | Frame::Error { .. }
-                | Frame::StatsResponse(_)
-                | Frame::ShutdownAck,
-            ) => {
+            // Server-to-client (or v2-only) frames arriving at the v1
+            // server are a client bug; answer once and drop the
+            // connection.
+            ServerFrame::Other(_) => {
                 let _ = Frame::Error {
                     code: ErrorCode::Protocol,
                     msg: "unexpected client frame".into(),
@@ -247,10 +339,403 @@ fn handle_conn(
                 return;
             }
         };
-        if reply.write_to(&mut stream).is_err() {
-            return;
+        if let Some(reply) = reply {
+            if reply.write_to(&mut stream).is_err() {
+                return;
+            }
+        }
+        head = match protocol::read_raw_frame(&mut stream, &mut body, opts.max_body_bytes) {
+            Ok(h) => h,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return; // clean disconnect
+            }
+            Err(e) => {
+                // Malformed input: best-effort error frame, then close —
+                // after a framing error the stream offset is unreliable.
+                let _ = Frame::Error {
+                    code: ErrorCode::from_error(&e),
+                    msg: format!("{e}"),
+                }
+                .write_to(&mut stream);
+                return;
+            }
+        };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2: pipelined reader/writer split
+// ---------------------------------------------------------------------------
+
+/// Count of replies owed but not yet written on one connection — every
+/// message enqueued toward the writer (project results *and* control
+/// frames) increments it; the writer decrements after handling each.
+/// The reader waits for zero before acknowledging `Shutdown` (so every
+/// in-flight request drains before the ack) and closes the connection
+/// when the count passes the hard overload bound (so a client that
+/// floods frames without ever reading replies cannot grow the writer's
+/// queue — and the server's heap — without limit).
+#[derive(Debug, Default)]
+struct InFlight {
+    n: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    /// Increment; returns the new depth (for the high-water stat).
+    fn inc(&self) -> u64 {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        *n += 1;
+        *n
+    }
+
+    fn current(&self) -> u64 {
+        *self.n.lock().expect("inflight poisoned")
+    }
+
+    fn dec(&self) {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            self.cv.notify_all();
         }
     }
+
+    fn wait_zero(&self) {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        while *n > 0 {
+            n = self.cv.wait(n).expect("inflight poisoned");
+        }
+    }
+}
+
+/// The writer half of a v2 connection: single owner of the socket's send
+/// side. Drains the reply channel in completion order — project results
+/// (possibly chunked) and reader-originated control frames — and keeps
+/// draining (without writing) after a socket error so in-flight
+/// accounting stays balanced.
+fn conn_writer(
+    mut stream: TcpStream,
+    rx: Receiver<ConnReply>,
+    stats: Arc<ServiceStats>,
+    inflight: Arc<InFlight>,
+    max_body: usize,
+) {
+    let mut dead = false;
+    for msg in rx {
+        match msg {
+            ConnReply::Project { corr, result } => {
+                match result {
+                    Ok(projected) => {
+                        ServiceStats::bump(&stats.responses_ok);
+                        ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
+                        if !dead {
+                            let fits = 4 + projected.len() * 4 <= max_body;
+                            let res = if fits {
+                                protocol::write_project_ok_v2(&mut stream, corr, &projected)
+                            } else {
+                                ServiceStats::bump(&stats.chunked_streams_out);
+                                protocol::write_project_ok_chunked(
+                                    &mut stream,
+                                    corr,
+                                    &projected,
+                                    max_body,
+                                )
+                            };
+                            dead = res.is_err();
+                        }
+                    }
+                    Err(e) => {
+                        ServiceStats::bump(&stats.responses_err);
+                        if !dead {
+                            let frame = Frame::Error {
+                                code: ErrorCode::from_error(&e),
+                                msg: format!("{e}"),
+                            };
+                            dead = frame.write_to_v2(&mut stream, corr).is_err();
+                        }
+                    }
+                }
+                inflight.dec();
+            }
+            ConnReply::Control { corr, frame } => {
+                if !dead {
+                    dead = frame.write_to_v2(&mut stream, corr).is_err();
+                }
+                inflight.dec();
+            }
+        }
+    }
+}
+
+/// The reader half of a v2 connection: decode frames, submit projection
+/// jobs (whole-frame or reassembled from chunks), route control replies
+/// through the writer channel. Never writes to the socket itself.
+#[allow(clippy::too_many_arguments)]
+fn serve_v2(
+    mut stream: TcpStream,
+    scheduler: &Arc<Scheduler>,
+    stats: &Arc<ServiceStats>,
+    shutdown: &AtomicBool,
+    addr: SocketAddr,
+    opts: &ServeOptions,
+    head: RawHeader,
+    body: Vec<u8>,
+) {
+    ServiceStats::bump(&stats.connections_v2);
+    let Ok(wstream) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<ConnReply>();
+    let inflight = Arc::new(InFlight::default());
+    let writer = {
+        let stats = Arc::clone(stats);
+        let inflight = Arc::clone(&inflight);
+        let max_body = opts.max_body_bytes;
+        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body))
+    };
+
+    // The reader loop borrows `tx` through its helper closures; it runs
+    // in its own function so the sender can be dropped afterwards (the
+    // writer exits once the last sender — ours or a pending job's — is
+    // gone).
+    let acked_shutdown =
+        v2_reader_loop(&mut stream, scheduler, stats, opts, &tx, &inflight, head, body);
+    // Close our sender; the writer drains whatever the scheduler still
+    // owes (jobs hold their own sender clones) and exits when the last
+    // one finishes — so joining here is exactly "all replies flushed".
+    drop(tx);
+    let _ = writer.join();
+    if acked_shutdown {
+        trigger_shutdown(shutdown, addr);
+    }
+}
+
+/// Decode-and-dispatch loop of a v2 connection. Returns true when the
+/// loop ended by acknowledging a `Shutdown` frame.
+#[allow(clippy::too_many_arguments)]
+fn v2_reader_loop(
+    stream: &mut TcpStream,
+    scheduler: &Arc<Scheduler>,
+    stats: &Arc<ServiceStats>,
+    opts: &ServeOptions,
+    tx: &Sender<ConnReply>,
+    inflight: &Arc<InFlight>,
+    mut head: RawHeader,
+    mut body: Vec<u8>,
+) -> bool {
+    // Open chunked request streams, keyed by correlation id; a stream
+    // that errored is "poisoned" so its remaining chunk/end frames are
+    // swallowed without generating one error reply per frame.
+    let mut streams: HashMap<u16, (ProjectMeta, ChunkAssembler)> = HashMap::new();
+    let mut poisoned: HashSet<u16> = HashSet::new();
+    // (code, message, corr) of the error that closes the connection.
+    let mut close_error: Option<(ErrorCode, String, u16)> = None;
+    let mut acked_shutdown = false;
+
+    let submit = |meta: ProjectMeta, payload: Vec<f32>, corr: u16| {
+        ServiceStats::bump(&stats.requests_total);
+        ServiceStats::bump(&stats.requests_pipelined);
+        ServiceStats::add(&stats.payload_bytes_in, 4 * payload.len() as u64);
+        let depth = inflight.inc();
+        ServiceStats::raise(&stats.inflight_max, depth);
+        // Per-connection in-flight cap: past it, answer Busy without
+        // touching the scheduler, so a client that submits but never
+        // reads cannot grow the completed-reply backlog without bound.
+        // The rejected request still holds its in-flight slot until the
+        // writer flushes the Busy frame (which is what dec()s it).
+        if depth > opts.max_inflight as u64 {
+            ServiceStats::bump(&stats.busy_rejections);
+            let _ = tx.send(ConnReply::Project { corr, result: Err(MlprojError::ServiceBusy) });
+            return;
+        }
+        let job = Job::with_channel(PlanKey::from_meta(&meta), payload, tx.clone(), corr);
+        // A Busy rejection already delivered a typed error through the
+        // channel (with this corr); nothing more to do here.
+        let _ = scheduler.try_submit(job);
+    };
+    let control = |corr: u16, frame: Frame| {
+        inflight.inc();
+        let _ = tx.send(ConnReply::Control { corr, frame });
+    };
+    let stream_error = |corr: u16, msg: String| {
+        control(corr, Frame::Error { code: ErrorCode::Protocol, msg });
+    };
+    // Hard overload bound on unwritten replies of any kind: past it the
+    // client is provably not reading (the soft cap already answers
+    // everything above `max_inflight` with Busy), so close instead of
+    // queueing — bounding the writer channel at roughly twice the soft
+    // cap. The +64 floor leaves room for the transient between a burst
+    // of soft-cap Busy replies entering the channel and the writer
+    // flushing them, so small-cap configurations don't false-trigger.
+    let soft = opts.max_inflight as u64;
+    let hard_cap = (2 * soft).max(soft + 64);
+
+    loop {
+        ServiceStats::bump(&stats.frames_in);
+        let corr = head.corr;
+        if inflight.current() > hard_cap {
+            close_error = Some((
+                ErrorCode::Busy,
+                format!("connection overloaded: {hard_cap}+ unread replies"),
+                corr,
+            ));
+            break;
+        }
+        if head.version != V2 {
+            close_error = Some((
+                ErrorCode::Protocol,
+                "protocol v1 frame on a v2-pinned connection".into(),
+                corr,
+            ));
+            break;
+        }
+        match head.ftype {
+            protocol::T_PROJECT => {
+                let mut payload = Vec::new();
+                match protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload)
+                {
+                    Ok(ServerFrame::Project(meta)) => submit(meta, payload, corr),
+                    Ok(_) => unreachable!("T_PROJECT decodes to ServerFrame::Project"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PROJECT_BEGIN => {
+                let decoded = protocol::decode_client_frame(head.version, head.ftype, &body);
+                match decoded {
+                    Ok(Frame::ProjectBegin(info)) => {
+                        poisoned.remove(&corr);
+                        if streams.contains_key(&corr) {
+                            streams.remove(&corr);
+                            poisoned.insert(corr);
+                            stream_error(
+                                corr,
+                                format!("chunked stream {corr} is already open"),
+                            );
+                        } else if streams.len() >= opts.max_streams {
+                            poisoned.insert(corr);
+                            stream_error(
+                                corr,
+                                format!(
+                                    "too many concurrent chunked streams (limit {})",
+                                    opts.max_streams
+                                ),
+                            );
+                        } else {
+                            match ChunkAssembler::new(info.total_elems, info.checksum) {
+                                Ok(asm) => {
+                                    ServiceStats::bump(&stats.chunked_streams_in);
+                                    streams.insert(corr, (info.meta, asm));
+                                }
+                                Err(e) => {
+                                    poisoned.insert(corr);
+                                    stream_error(corr, format!("{e}"));
+                                }
+                            }
+                        }
+                    }
+                    Ok(_) => unreachable!("T_PROJECT_BEGIN decodes to ProjectBegin"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PROJECT_CHUNK => {
+                if poisoned.contains(&corr) {
+                    // Remainder of a failed stream: swallow silently (the
+                    // error reply already went out once).
+                } else if let Some((_, asm)) = streams.get_mut(&corr) {
+                    match asm.push(&body) {
+                        Ok(()) => {
+                            ServiceStats::add(&stats.chunked_bytes_in, body.len() as u64)
+                        }
+                        Err(e) => {
+                            streams.remove(&corr);
+                            poisoned.insert(corr);
+                            stream_error(corr, format!("{e}"));
+                        }
+                    }
+                } else {
+                    poisoned.insert(corr);
+                    stream_error(corr, format!("chunk for unopened stream {corr}"));
+                }
+            }
+            protocol::T_PROJECT_END => {
+                let decoded = protocol::decode_client_frame(head.version, head.ftype, &body);
+                match decoded {
+                    Ok(Frame::ProjectEnd { checksum }) => {
+                        if poisoned.remove(&corr) {
+                            // Failed stream fully drained; corr is usable
+                            // again.
+                        } else if let Some((meta, asm)) = streams.remove(&corr) {
+                            if !asm.is_complete() {
+                                stream_error(
+                                    corr,
+                                    format!(
+                                        "chunked stream ended after {} of its declared elements",
+                                        asm.received()
+                                    ),
+                                );
+                            } else if !asm.checksum_ok(checksum) {
+                                ServiceStats::bump(&stats.checksum_failures);
+                                stream_error(
+                                    corr,
+                                    "chunked stream checksum mismatch".into(),
+                                );
+                            } else {
+                                match asm.into_payload() {
+                                    Ok(payload) => submit(meta, payload, corr),
+                                    Err(e) => stream_error(corr, format!("{e}")),
+                                }
+                            }
+                        } else {
+                            stream_error(corr, format!("end for unopened stream {corr}"));
+                        }
+                    }
+                    Ok(_) => unreachable!("T_PROJECT_END decodes to ProjectEnd"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PING => control(corr, Frame::Pong),
+            protocol::T_STATS_REQ => control(corr, Frame::StatsResponse(stats.snapshot())),
+            protocol::T_SHUTDOWN => {
+                // Drain every in-flight request (their replies are
+                // written by the time the count hits zero), then ack and
+                // stop the server.
+                inflight.wait_zero();
+                control(corr, Frame::ShutdownAck);
+                acked_shutdown = true;
+                break;
+            }
+            _ => {
+                close_error =
+                    Some((ErrorCode::Protocol, "unexpected client frame".into(), corr));
+                break;
+            }
+        }
+        head = match protocol::read_raw_frame(stream, &mut body, opts.max_body_bytes) {
+            Ok(h) => h,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                break; // clean disconnect; pending replies still drain
+            }
+            Err(e) => {
+                close_error = Some((ErrorCode::from_error(&e), format!("{e}"), 0));
+                break;
+            }
+        };
+    }
+
+    if let Some((code, msg, corr)) = close_error {
+        control(corr, Frame::Error { code, msg });
+    }
+    acked_shutdown
 }
 
 #[cfg(test)]
@@ -313,6 +798,70 @@ mod tests {
         match Frame::read_from(&mut bad) {
             Ok(Frame::Error { code: ErrorCode::Protocol, .. }) => {}
             other => panic!("expected protocol error frame, got {other:?}"),
+        }
+
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        Frame::Shutdown.write_to(&mut ctl).unwrap();
+        assert_eq!(Frame::read_from(&mut ctl).unwrap(), Frame::ShutdownAck);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn v2_ping_and_shutdown_pin_the_connection_version() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        // v2 pings echo the correlation id.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        Frame::Ping.write_to_v2(&mut stream, 77).unwrap();
+        let mut body = Vec::new();
+        let h =
+            protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+        assert_eq!((h.version, h.corr), (V2, 77));
+        assert_eq!(
+            protocol::decode_client_frame(h.version, h.ftype, &body).unwrap(),
+            Frame::Pong
+        );
+
+        // A v1 frame on the now-v2-pinned connection is a protocol error.
+        Frame::Ping.write_to(&mut stream).unwrap();
+        let h =
+            protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+        match protocol::decode_client_frame(h.version, h.ftype, &body).unwrap() {
+            Frame::Error { code: ErrorCode::Protocol, msg } => {
+                assert!(msg.contains("v2-pinned"), "{msg}");
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+
+        // v2 shutdown still stops the server.
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        Frame::Shutdown.write_to_v2(&mut ctl, 5).unwrap();
+        let h = protocol::read_raw_frame(&mut ctl, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+        assert_eq!(h.corr, 5);
+        assert_eq!(
+            protocol::decode_client_frame(h.version, h.ftype, &body).unwrap(),
+            Frame::ShutdownAck
+        );
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn v2_frame_on_a_v1_connection_is_rejected() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        Frame::Ping.write_to(&mut stream).unwrap(); // pins v1
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::Pong);
+        Frame::Ping.write_to_v2(&mut stream, 1).unwrap();
+        match Frame::read_from(&mut stream).unwrap() {
+            Frame::Error { code: ErrorCode::Protocol, msg } => {
+                assert!(msg.contains("v1-pinned"), "{msg}");
+            }
+            other => panic!("expected protocol error, got {other:?}"),
         }
 
         let mut ctl = TcpStream::connect(addr).unwrap();

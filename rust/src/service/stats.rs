@@ -37,6 +37,22 @@ pub struct ServiceStats {
     pub payload_bytes_out: AtomicU64,
     /// Connections accepted.
     pub connections: AtomicU64,
+    /// Connections negotiated to protocol v2 (pipelined).
+    pub connections_v2: AtomicU64,
+    /// Projection requests received on v2 (pipelined) connections.
+    pub requests_pipelined: AtomicU64,
+    /// Largest number of replies outstanding (submitted requests plus
+    /// queued control replies, not yet written back) on one connection
+    /// (monotonic high-water mark — the pipelining observable).
+    pub inflight_max: AtomicU64,
+    /// Chunked request streams opened (`ProjectBegin` accepted).
+    pub chunked_streams_in: AtomicU64,
+    /// Chunked reply streams written (`ProjectOkBegin` sent).
+    pub chunked_streams_out: AtomicU64,
+    /// Payload bytes received via chunk frames.
+    pub chunked_bytes_in: AtomicU64,
+    /// Chunked streams rejected for a checksum mismatch on `ProjectEnd`.
+    pub checksum_failures: AtomicU64,
 }
 
 impl ServiceStats {
@@ -82,6 +98,13 @@ impl ServiceStats {
             ("payload_bytes_in".into(), ld(&self.payload_bytes_in)),
             ("payload_bytes_out".into(), ld(&self.payload_bytes_out)),
             ("connections".into(), ld(&self.connections)),
+            ("connections_v2".into(), ld(&self.connections_v2)),
+            ("requests_pipelined".into(), ld(&self.requests_pipelined)),
+            ("inflight_max".into(), ld(&self.inflight_max)),
+            ("chunked_streams_in".into(), ld(&self.chunked_streams_in)),
+            ("chunked_streams_out".into(), ld(&self.chunked_streams_out)),
+            ("chunked_bytes_in".into(), ld(&self.chunked_bytes_in)),
+            ("checksum_failures".into(), ld(&self.checksum_failures)),
         ]
     }
 }

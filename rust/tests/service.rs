@@ -10,10 +10,25 @@ use mlproj::core::rng::Rng;
 use mlproj::core::tensor::Tensor;
 use mlproj::core::MlprojError;
 use mlproj::projection::{Method, Norm, ProjectionSpec};
-use mlproj::service::{Client, SchedulerConfig, Server};
+use mlproj::service::protocol::{self, Frame};
+use mlproj::service::{
+    Client, PipelinedConn, ProjectRequest, SchedulerConfig, ServeOptions, Server, WireLayout,
+};
 
 fn stat(pairs: &[(String, u64)], name: &str) -> u64 {
     pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+}
+
+fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
+    ProjectRequest {
+        norms: spec.norms.clone(),
+        eta: spec.eta,
+        l1_algo: spec.l1_algo,
+        method: spec.method,
+        layout: WireLayout::Matrix,
+        shape: vec![y.rows(), y.cols()],
+        payload: y.data().to_vec(),
+    }
 }
 
 #[test]
@@ -102,6 +117,423 @@ fn exact_and_generic_methods_round_trip_through_the_wire() {
     );
 
     client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Protocol v2 acceptance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_depth8_replies_match_sequential_v1_bit_identically() {
+    // The v2 acceptance bar: depth-8 pipelined traffic — whose replies
+    // the server may reorder freely across its workers — must, once
+    // matched by correlation id, be bit-identical to the same requests
+    // run sequentially over v1.
+    let cfg = SchedulerConfig { workers: 3, queue_depth: 128, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    // Distinct shapes and radii -> distinct plan keys, so concurrent
+    // workers can genuinely finish out of submission order.
+    let mut rng = Rng::new(71);
+    let jobs: Vec<(Matrix, ProjectionSpec)> = (0..16)
+        .map(|i| {
+            let rows = 20 + 10 * (i % 4);
+            let cols = 40 + 15 * (i % 3);
+            let y = Matrix::random_uniform(rows, cols, -2.0, 2.0, &mut rng);
+            let spec = ProjectionSpec::l1inf(0.4 + 0.2 * (i % 5) as f64);
+            (y, spec)
+        })
+        .collect();
+
+    // Sequential v1 ground truth (which itself must equal local).
+    let mut v1 = Client::connect(addr).unwrap();
+    let sequential: Vec<Vec<f32>> = jobs
+        .iter()
+        .map(|(y, spec)| {
+            let got = v1.project_matrix(spec, y).unwrap();
+            assert_eq!(got.data(), spec.project_matrix(y).unwrap().data());
+            got.data().to_vec()
+        })
+        .collect();
+
+    // Depth-8 pipelined v2 over one connection.
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let mut expected = std::collections::HashMap::new();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    let mut completion_order = Vec::new();
+    while completed < jobs.len() {
+        while submitted < jobs.len() && conn.in_flight() < 8 {
+            let (y, spec) = &jobs[submitted];
+            let corr = conn.submit(&wire_request(spec, y)).unwrap();
+            expected.insert(corr, submitted);
+            submitted += 1;
+        }
+        let (corr, result) = conn.recv().unwrap();
+        let idx = expected.remove(&corr).expect("reply matches a submitted corr");
+        assert_eq!(
+            result.unwrap(),
+            sequential[idx],
+            "pipelined request {idx} diverged from its sequential v1 twin"
+        );
+        completion_order.push(idx);
+        completed += 1;
+    }
+    assert!(expected.is_empty());
+    // All 16 completed exactly once, whatever the completion order was.
+    let mut seen = completion_order.clone();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..16).collect::<Vec<_>>());
+
+    let stats = v1.stats().unwrap();
+    assert_eq!(stat(&stats, "requests_pipelined"), 16);
+    assert_eq!(stat(&stats, "connections_v2"), 1);
+    assert!(stat(&stats, "inflight_max") >= 1);
+
+    conn.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn chunked_streams_carry_matrices_past_the_body_cap() {
+    // Server with a deliberately tiny 16 KiB frame-body cap: a 32 KiB
+    // matrix payload cannot travel as one v1 frame, but round-trips via
+    // v2 chunked streams — checksummed both ways.
+    let opts =
+        ServeOptions { max_body_bytes: 16 * 1024, max_streams: 2, ..ServeOptions::default() };
+    let server =
+        Server::bind_with("127.0.0.1:0", &SchedulerConfig::default(), opts).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(72);
+    let y = Matrix::random_uniform(64, 128, -2.0, 2.0, &mut rng); // 32 KiB payload
+    let spec = ProjectionSpec::l1inf(1.5);
+    let expect = spec.project_matrix(&y).unwrap();
+
+    // v1 can't carry it: the frame is over the server's body cap.
+    let mut v1 = Client::connect(addr).unwrap();
+    let err = v1.project_matrix(&spec, &y).unwrap_err();
+    assert!(matches!(err, MlprojError::Protocol(_)), "{err}");
+
+    // v2 chunked upload (4 KiB chunks) + chunked reply, bit-identical.
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let corr = conn.submit_chunked(&wire_request(&spec, &y), 1024).unwrap();
+    let (got_corr, result) = conn.recv().unwrap();
+    assert_eq!(got_corr, corr);
+    assert_eq!(result.unwrap(), expect.data());
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert!(stat(&stats, "chunked_streams_in") >= 1, "{stats:?}");
+    assert!(stat(&stats, "chunked_streams_out") >= 1, "{stats:?}");
+    assert_eq!(stat(&stats, "checksum_failures"), 0);
+
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn corrupted_chunk_checksum_is_rejected_and_the_connection_survives() {
+    use std::io::Write;
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let req = wire_request(
+        &ProjectionSpec::l1inf(1.0),
+        &Matrix::random_uniform(4, 8, -1.0, 1.0, &mut Rng::new(73)),
+    );
+    // Hand-rolled chunked stream whose End declares the wrong checksum.
+    let begin = Frame::ProjectBegin(protocol::BeginInfo {
+        meta: mlproj::service::ProjectMeta {
+            norms: req.norms.clone(),
+            eta: req.eta,
+            l1_algo: req.l1_algo,
+            method: req.method,
+            layout: req.layout,
+            shape: req.shape.clone(),
+        },
+        total_elems: req.payload.len() as u64,
+        checksum: protocol::ChecksumKind::Fnv1a64,
+    });
+    stream.write_all(&begin.encode_v2(5).unwrap()).unwrap();
+    stream
+        .write_all(&Frame::ProjectChunk(req.payload.clone()).encode_v2(5).unwrap())
+        .unwrap();
+    let bad = protocol::payload_fnv1a64(&req.payload) ^ 0x1;
+    stream.write_all(&Frame::ProjectEnd { checksum: bad }.encode_v2(5).unwrap()).unwrap();
+    stream.flush().unwrap();
+
+    let mut body = Vec::new();
+    let h = protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+    assert_eq!(h.corr, 5);
+    match protocol::decode_client_frame(h.version, h.ftype, &body).unwrap() {
+        Frame::Error { msg, .. } => assert!(msg.contains("checksum"), "{msg}"),
+        other => panic!("expected checksum error, got {other:?}"),
+    }
+
+    // The connection survives: a valid ping still answers.
+    Frame::Ping.write_to_v2(&mut stream, 6).unwrap();
+    let h = protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+    assert_eq!(h.corr, 6);
+    assert_eq!(
+        protocol::decode_client_frame(h.version, h.ftype, &body).unwrap(),
+        Frame::Pong
+    );
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert_eq!(stat(&stats, "checksum_failures"), 1);
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn pipelined_flood_gets_typed_busy_backpressure() {
+    // One worker, queue depth 1, no batching: a slow job followed by an
+    // unthrottled pipelined flood must produce `Busy` rejections carrying
+    // the right correlation ids — while every accepted request still
+    // returns bit-identical results.
+    let cfg = SchedulerConfig {
+        workers: 1,
+        queue_depth: 1,
+        batch_max: 1,
+        ..SchedulerConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(74);
+    // The slow anchor: a tri-level ℓ1,ℓ1,ℓ1 projection over ~110k
+    // elements keeps the single worker busy for a macroscopic time.
+    let slow_spec = ProjectionSpec::new(vec![Norm::L1, Norm::L1, Norm::L1], 2.0);
+    let mut slow_data = vec![0.0f32; 48 * 48 * 48];
+    rng.fill_uniform(&mut slow_data, -2.0, 2.0);
+    let slow_req = ProjectRequest {
+        norms: slow_spec.norms.clone(),
+        eta: slow_spec.eta,
+        l1_algo: slow_spec.l1_algo,
+        method: slow_spec.method,
+        layout: WireLayout::Tensor,
+        shape: vec![48, 48, 48],
+        payload: slow_data.clone(),
+    };
+    let slow_expect = slow_spec
+        .project_tensor(&Tensor::from_vec(vec![48, 48, 48], slow_data).unwrap())
+        .unwrap();
+
+    let fast = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+    let fast_spec = ProjectionSpec::l1inf(0.5);
+    let fast_expect = fast_spec.project_matrix(&fast).unwrap();
+    let fast_req = wire_request(&fast_spec, &fast);
+
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let mut busy = 0u64;
+    for round in 0..3 {
+        let mut pending = Vec::new();
+        pending.push(conn.submit(&slow_req).unwrap());
+        for _ in 0..32 {
+            pending.push(conn.submit(&fast_req).unwrap());
+        }
+        let slow_corr = pending[0];
+        while conn.in_flight() > 0 {
+            let (corr, result) = conn.recv().unwrap();
+            assert!(pending.contains(&corr), "untracked corr {corr}");
+            match result {
+                Ok(payload) => {
+                    if corr == slow_corr {
+                        assert_eq!(payload, slow_expect.data(), "round {round}");
+                    } else {
+                        assert_eq!(payload, fast_expect.data(), "round {round}");
+                    }
+                }
+                Err(MlprojError::ServiceBusy) => {
+                    assert_ne!(corr, slow_corr, "the first submit cannot be rejected");
+                    busy += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        if busy > 0 {
+            break;
+        }
+    }
+    assert!(busy > 0, "expected at least one Busy rejection under the flood");
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert!(stat(&stats, "busy_rejections") >= busy);
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn per_connection_inflight_cap_rejects_with_busy() {
+    // max_inflight 2: while a slow job pins the single worker, the third
+    // concurrent submission on one connection must bounce with Busy
+    // before ever reaching the scheduler queue — the bound on how much
+    // completed-reply backlog a non-reading client can accumulate.
+    let cfg = SchedulerConfig { workers: 1, queue_depth: 64, ..SchedulerConfig::default() };
+    let opts = ServeOptions { max_inflight: 2, ..ServeOptions::default() };
+    let server = Server::bind_with("127.0.0.1:0", &cfg, opts).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(77);
+    let slow_spec = ProjectionSpec::new(vec![Norm::L1, Norm::L1, Norm::L1], 2.0);
+    let mut slow_data = vec![0.0f32; 48 * 48 * 48];
+    rng.fill_uniform(&mut slow_data, -2.0, 2.0);
+    let slow_req = ProjectRequest {
+        norms: slow_spec.norms.clone(),
+        eta: slow_spec.eta,
+        l1_algo: slow_spec.l1_algo,
+        method: slow_spec.method,
+        layout: WireLayout::Tensor,
+        shape: vec![48, 48, 48],
+        payload: slow_data,
+    };
+    let fast = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+    let fast_spec = ProjectionSpec::l1inf(0.5);
+    let fast_expect = fast_spec.project_matrix(&fast).unwrap();
+    let fast_req = wire_request(&fast_spec, &fast);
+
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let mut busy = 0u64;
+    for _ in 0..3 {
+        conn.submit(&slow_req).unwrap();
+        for _ in 0..8 {
+            conn.submit(&fast_req).unwrap();
+        }
+        while conn.in_flight() > 0 {
+            let (_, result) = conn.recv().unwrap();
+            match result {
+                Ok(_) => {}
+                Err(MlprojError::ServiceBusy) => busy += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        if busy > 0 {
+            break;
+        }
+    }
+    assert!(busy > 0, "in-flight cap of 2 must reject part of a 9-deep burst");
+    // The connection stays healthy after the rejections.
+    assert_eq!(conn.project(&fast_req).unwrap(), fast_expect.data());
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_in_flight_pipelined_requests_before_acking() {
+    use std::io::Write;
+    let cfg = SchedulerConfig { workers: 1, queue_depth: 64, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(75);
+    let y = Matrix::random_uniform(64, 64, -2.0, 2.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(1.0);
+    let expect = spec.project_matrix(&y).unwrap();
+    let req = wire_request(&spec, &y);
+
+    // Submit 6 requests and the shutdown in one burst, without reading.
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    for corr in 1..=6u16 {
+        protocol::write_project_v2(&mut stream, corr, &req).unwrap();
+    }
+    stream.write_all(&Frame::Shutdown.encode_v2(99).unwrap()).unwrap();
+    stream.flush().unwrap();
+
+    // Every in-flight request must drain (in some order) before the ack.
+    let mut body = Vec::new();
+    let mut seen = Vec::new();
+    loop {
+        let h =
+            protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+        match protocol::decode_client_frame(h.version, h.ftype, &body).unwrap() {
+            Frame::ProjectOk(payload) => {
+                assert_eq!(payload, expect.data(), "corr {}", h.corr);
+                seen.push(h.corr);
+            }
+            Frame::ShutdownAck => {
+                assert_eq!(h.corr, 99);
+                break;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, (1..=6u16).collect::<Vec<_>>(), "ack must come after every reply");
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_payload_in_a_pipelined_same_key_batch_fails_alone() {
+    use std::io::Write;
+    // One worker with batching on: same-key requests coalesce into one
+    // micro-batch; a well-framed request whose payload disagrees with
+    // its shape must fail alone (typed Invalid), with its neighbors
+    // still answered bit-identically.
+    let cfg = SchedulerConfig { workers: 1, queue_depth: 64, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(76);
+    let y = Matrix::random_uniform(3, 4, -1.0, 1.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(0.7);
+    let expect = spec.project_matrix(&y).unwrap();
+    let req = wire_request(&spec, &y);
+
+    // A well-framed v2 Project whose payload is one element short:
+    // truncate the count and the body, keeping framing consistent.
+    let mut bad = Frame::Project(req.clone()).encode_v2(40).unwrap();
+    let body_len = bad.len() - protocol::HEADER_BYTES;
+    let count_off = bad.len() - 12 * 4 - 4;
+    bad[count_off..count_off + 4].copy_from_slice(&11u32.to_le_bytes());
+    bad.truncate(bad.len() - 4);
+    bad[8..12].copy_from_slice(&((body_len - 4) as u32).to_le_bytes());
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    protocol::write_project_v2(&mut stream, 1, &req).unwrap();
+    protocol::write_project_v2(&mut stream, 2, &req).unwrap();
+    stream.write_all(&bad).unwrap();
+    protocol::write_project_v2(&mut stream, 3, &req).unwrap();
+    stream.flush().unwrap();
+
+    let mut body = Vec::new();
+    let mut oks = Vec::new();
+    let mut errs = Vec::new();
+    for _ in 0..4 {
+        let h =
+            protocol::read_raw_frame(&mut stream, &mut body, protocol::MAX_BODY_BYTES).unwrap();
+        match protocol::decode_client_frame(h.version, h.ftype, &body).unwrap() {
+            Frame::ProjectOk(payload) => {
+                assert_eq!(payload, expect.data(), "corr {}", h.corr);
+                oks.push(h.corr);
+            }
+            Frame::Error { code, msg } => {
+                assert_eq!(code, mlproj::service::ErrorCode::Invalid, "{msg}");
+                errs.push(h.corr);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    oks.sort_unstable();
+    assert_eq!(oks, vec![1, 2, 3]);
+    assert_eq!(errs, vec![40]);
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
     handle.join().unwrap();
 }
 
