@@ -28,8 +28,8 @@ use mlproj::projection::l1::L1Algo;
 use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
 use mlproj::projection::{norms, Norm, ProjectionSpec};
 use mlproj::service::{
-    Client, ClientPool, PipelinedConn, ProjectRequest, SchedulerConfig, ServeOptions, Server,
-    WireLayout,
+    spawn_backends, BackendSpawnOptions, Client, ClientPool, PipelinedConn, ProjectRequest,
+    Router, RouterOptions, SchedulerConfig, ServeOptions, Server, WireLayout,
 };
 
 /// Minimal strict `--key value` argument parser.
@@ -143,6 +143,25 @@ const LOADGEN_FLAGS: &[&str] = &[
     "l1algo",
     "seed",
     "pipeline-depth",
+    "via-router",
+    "direct-addr",
+];
+const ROUTER_FLAGS: &[&str] = &[
+    "addr",
+    "backend",
+    "spawn",
+    "backend-workers",
+    "backend-queue-depth",
+    "backend-batch-max",
+    "backend-cache-cap",
+    "backend-exec-workers",
+    "backend-max-body-bytes",
+    "conns-per-backend",
+    "forward-workers",
+    "queue-depth",
+    "max-body-bytes",
+    "max-inflight",
+    "retries",
 ];
 
 const USAGE: &str = "\
@@ -158,12 +177,17 @@ USAGE:
   mlproj serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
                [--batch-max N] [--cache-cap N] [--exec-workers N]
                [--max-body-bytes B] [--max-inflight N]
+  mlproj router --addr HOST:PORT (--backend A1,A2,... | --spawn N)
+               [--backend-workers W] [--backend-max-body-bytes B]
+               [--conns-per-backend C] [--forward-workers F]
+               [--queue-depth N] [--max-body-bytes B] [--max-inflight N]
+               [--retries R]
   mlproj client project|ping|stats|shutdown --addr HOST:PORT
                [--n N] [--m M] [--eta F] [--norms L] [--l1algo A] [--seed S]
                [--chunked] [--chunk-elems N]
   mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
                  [--n N] [--m M] [--eta F] [--norms L] [--seed S]
-                 [--pipeline-depth D]
+                 [--pipeline-depth D] [--via-router [--direct-addr HOST:PORT]]
   mlproj datagen --dataset synthetic|lung --out DIR
   mlproj info [--dataset synthetic|lung] [--addr HOST:PORT]
 
@@ -197,6 +221,7 @@ fn run(argv: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&Args::parse(rest, SWEEP_FLAGS)?),
         "project" => cmd_project(&Args::parse(rest, PROJECT_FLAGS)?),
         "serve" => cmd_serve(&Args::parse(rest, SERVE_FLAGS)?),
+        "router" => cmd_router(&Args::parse(rest, ROUTER_FLAGS)?),
         "client" => cmd_client(rest),
         "loadgen" => cmd_loadgen(&Args::parse(rest, LOADGEN_FLAGS)?),
         "datagen" => cmd_datagen(&Args::parse(rest, DATAGEN_FLAGS)?),
@@ -416,6 +441,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.run()
 }
 
+fn cmd_router(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7900");
+    let defaults = RouterOptions::default();
+    let opts = RouterOptions {
+        max_body_bytes: args.usize_or("max-body-bytes", defaults.max_body_bytes)?,
+        max_inflight: args.usize_or("max-inflight", defaults.max_inflight)?,
+        conns_per_backend: args.usize_or("conns-per-backend", defaults.conns_per_backend)?,
+        forward_workers: args.usize_or("forward-workers", defaults.forward_workers)?,
+        queue_depth: args.usize_or("queue-depth", defaults.queue_depth)?,
+        retries: args.usize_or("retries", defaults.retries)?,
+        ..defaults
+    };
+    // Backends: attach to a comma-separated list, or spawn N child
+    // `mlproj serve` processes on ephemeral ports (shut down with the
+    // router).
+    let (backend_addrs, children) = match (args.get("backend"), args.get("spawn")) {
+        (Some(_), Some(_)) => {
+            return Err(MlprojError::invalid("--backend and --spawn are mutually exclusive"));
+        }
+        (Some(list), None) => {
+            let addrs: Vec<String> =
+                list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+            if addrs.is_empty() {
+                return Err(MlprojError::invalid("--backend needs at least one address"));
+            }
+            (addrs, Vec::new())
+        }
+        (None, spawn) => {
+            let count: usize = match spawn {
+                Some(v) => v.parse().map_err(|_| {
+                    MlprojError::invalid(format!("--spawn expects an unsigned integer, got `{v}`"))
+                })?,
+                None => {
+                    return Err(MlprojError::invalid(
+                        "router needs backends: --backend A1,A2,... or --spawn N",
+                    ));
+                }
+            };
+            if count == 0 {
+                return Err(MlprojError::invalid("--spawn needs at least one backend"));
+            }
+            let spawn_defaults = BackendSpawnOptions::default();
+            let spawn_opts = BackendSpawnOptions {
+                workers: args.usize_or("backend-workers", spawn_defaults.workers)?,
+                queue_depth: args.usize_or("backend-queue-depth", spawn_defaults.queue_depth)?,
+                batch_max: args.usize_or("backend-batch-max", spawn_defaults.batch_max)?,
+                cache_cap: args.usize_or("backend-cache-cap", spawn_defaults.cache_cap)?,
+                exec_workers: args
+                    .usize_or("backend-exec-workers", spawn_defaults.exec_workers)?,
+                max_body_bytes: args
+                    .usize_or("backend-max-body-bytes", spawn_defaults.max_body_bytes)?,
+            };
+            let exe = std::env::current_exe()?;
+            let (addrs, children) = spawn_backends(&exe, count, &spawn_opts)?;
+            for (i, a) in addrs.iter().enumerate() {
+                eprintln!("mlproj router: spawned backend {i} on {a}");
+            }
+            (addrs, children)
+        }
+    };
+    let router = Router::bind(addr, &backend_addrs, opts.clone())?.with_children(children);
+    eprintln!(
+        "mlproj router: listening on {} fronting {} backend(s) [{}] \
+         (conns/backend {}, forward workers {}, queue depth {}, body cap {} B, \
+          max in-flight {}, retries {})",
+        router.local_addr(),
+        backend_addrs.len(),
+        backend_addrs.join(", "),
+        opts.conns_per_backend,
+        opts.forward_workers,
+        opts.queue_depth,
+        opts.max_body_bytes,
+        opts.max_inflight,
+        opts.retries
+    );
+    router.run()
+}
+
 /// Shared --addr handling for the client-side verbs.
 fn connect_arg(args: &Args) -> Result<Client> {
     let Some(addr) = args.get("addr") else {
@@ -442,8 +545,12 @@ fn cmd_client(rest: &[String]) -> Result<()> {
         "ping" => {
             let mut client = connect_arg(&args)?;
             let t0 = Instant::now();
-            client.ping()?;
-            println!("pong in {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
+            let cap = client.ping()?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            match cap {
+                Some(cap) => println!("pong in {ms:.3} ms (body cap {cap} B)"),
+                None => println!("pong in {ms:.3} ms"),
+            }
             Ok(())
         }
         "stats" => {
@@ -589,6 +696,7 @@ fn loadgen_sequential(
 /// pooled connection with up to `depth` requests in flight. Busy
 /// rejections are resubmitted. Returns per-request latencies (ns,
 /// submit→reply), busy-retry count, and wall seconds.
+#[allow(clippy::too_many_arguments)]
 fn loadgen_pipelined(
     addr: &str,
     clients: usize,
@@ -674,6 +782,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 0)? as u64;
     let depth = args.usize_or("pipeline-depth", 1)?.max(1);
     let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+
+    if args.get("via-router").is_some() {
+        let direct = args.get("direct-addr").map(str::to_string);
+        return loadgen_via_router(&addr, direct, clients, requests, depth, &spec, n, m, seed);
+    }
+    if args.get("direct-addr").is_some() {
+        return Err(MlprojError::invalid("--direct-addr only applies with --via-router"));
+    }
 
     eprintln!(
         "loadgen: {clients} clients x {requests} requests of {n}x{m} \
@@ -773,6 +889,171 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ]);
     }
     let path = harness::emit_json_kv("BENCH_serve.json", &kv)?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+/// One loadgen pass's headline numbers.
+struct PassSeries {
+    throughput: f64,
+    p50: f64,
+    p99: f64,
+    busy: u64,
+    total: usize,
+    wall: f64,
+}
+
+/// Run the sequential (v1) pass and, at depth > 1, the pipelined (v2)
+/// pass against one address.
+#[allow(clippy::too_many_arguments)]
+fn run_load_passes(
+    addr: &str,
+    clients: usize,
+    requests: usize,
+    depth: usize,
+    spec: &ProjectionSpec,
+    n: usize,
+    m: usize,
+    seed: u64,
+) -> Result<(PassSeries, Option<PassSeries>)> {
+    let (mut lat, busy, wall) = loadgen_sequential(addr, clients, requests, spec, n, m, seed)?;
+    lat.sort_unstable();
+    let seq = PassSeries {
+        throughput: lat.len() as f64 / wall,
+        p50: percentile_ms(&lat, 50.0),
+        p99: percentile_ms(&lat, 99.0),
+        busy,
+        total: lat.len(),
+        wall,
+    };
+    let pipelined = if depth > 1 {
+        let (mut lat, busy, wall) =
+            loadgen_pipelined(addr, clients, requests, depth, spec, n, m, seed)?;
+        lat.sort_unstable();
+        Some(PassSeries {
+            throughput: lat.len() as f64 / wall,
+            p50: percentile_ms(&lat, 50.0),
+            p99: percentile_ms(&lat, 99.0),
+            busy,
+            total: lat.len(),
+            wall,
+        })
+    } else {
+        None
+    };
+    Ok((seq, pipelined))
+}
+
+/// `loadgen --via-router`: drive the same seeded workload through a
+/// router (and, with `--direct-addr`, through an equal-total-worker
+/// plain server) and emit BENCH_router.json — the cross-process
+/// datapoint the in-process shard-per-worker cache is compared against.
+#[allow(clippy::too_many_arguments)]
+fn loadgen_via_router(
+    router_addr: &str,
+    direct_addr: Option<String>,
+    clients: usize,
+    requests: usize,
+    depth: usize,
+    spec: &ProjectionSpec,
+    n: usize,
+    m: usize,
+    seed: u64,
+) -> Result<()> {
+    eprintln!(
+        "loadgen --via-router: {clients} clients x {requests} requests of {n}x{m} \
+         (norms {}, η={}, pipeline depth {depth}) against router {router_addr}",
+        mlproj::projection::operator::fmt_norms(&spec.norms),
+        spec.eta
+    );
+    // Router-side observables, as deltas over this run.
+    let mut stat_client = Client::connect(router_addr)?;
+    let before = stat_client.stats()?;
+    let (r_seq, r_pipe) =
+        run_load_passes(router_addr, clients, requests, depth, spec, n, m, seed)?;
+    let after = stat_client.stats()?;
+    let lookup = |pairs: &[(String, u64)], name: &str| {
+        pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+    };
+    let routed =
+        lookup(&after, "routed_requests").saturating_sub(lookup(&before, "routed_requests"));
+    let reconnects =
+        lookup(&after, "router_reconnects").saturating_sub(lookup(&before, "router_reconnects"));
+
+    println!(
+        "router sequential: throughput {:.1} req/s  p50 {:.3} ms  p99 {:.3} ms  \
+         ({} requests in {:.2}s, {} busy retries)",
+        r_seq.throughput, r_seq.p50, r_seq.p99, r_seq.total, r_seq.wall, r_seq.busy
+    );
+    if let Some(p) = &r_pipe {
+        println!(
+            "router pipelined (depth {depth}): throughput {:.1} req/s  p50 {:.3} ms  \
+             p99 {:.3} ms  ({} requests in {:.2}s, {} busy retries)",
+            p.throughput, p.p50, p.p99, p.total, p.wall, p.busy
+        );
+    }
+    println!("router: {routed} requests routed upstream, {reconnects} upstream reconnects");
+
+    let mut kv = vec![
+        ("clients", clients as f64),
+        ("requests_total", r_seq.total as f64),
+        ("pipeline_depth", depth as f64),
+        ("router_throughput_rps", r_seq.throughput),
+        ("router_p50_ms", r_seq.p50),
+        ("router_p99_ms", r_seq.p99),
+        ("router_busy_retries", r_seq.busy as f64),
+        ("router_routed_requests", routed as f64),
+        ("router_reconnects", reconnects as f64),
+    ];
+    if let Some(p) = &r_pipe {
+        kv.extend_from_slice(&[
+            ("router_pipelined_throughput_rps", p.throughput),
+            ("router_pipelined_p50_ms", p.p50),
+            ("router_pipelined_p99_ms", p.p99),
+            ("router_pipelined_busy_retries", p.busy as f64),
+        ]);
+    }
+
+    // The in-process baseline: the same workload against a plain server
+    // (run it with the same total worker count for a fair comparison).
+    if let Some(direct) = direct_addr {
+        eprintln!("loadgen --via-router: direct baseline against {direct}");
+        let (d_seq, d_pipe) =
+            run_load_passes(&direct, clients, requests, depth, spec, n, m, seed)?;
+        println!(
+            "direct sequential: throughput {:.1} req/s  p50 {:.3} ms  p99 {:.3} ms",
+            d_seq.throughput, d_seq.p50, d_seq.p99
+        );
+        kv.extend_from_slice(&[
+            ("direct_throughput_rps", d_seq.throughput),
+            ("direct_p50_ms", d_seq.p50),
+            ("direct_p99_ms", d_seq.p99),
+        ]);
+        let ratio = r_seq.throughput / d_seq.throughput.max(f64::MIN_POSITIVE);
+        kv.push(("router_vs_direct_throughput", ratio));
+        if let (Some(rp), Some(dp)) = (&r_pipe, &d_pipe) {
+            println!(
+                "direct pipelined (depth {depth}): throughput {:.1} req/s  p50 {:.3} ms  \
+                 p99 {:.3} ms",
+                dp.throughput, dp.p50, dp.p99
+            );
+            kv.extend_from_slice(&[
+                ("direct_pipelined_throughput_rps", dp.throughput),
+                ("direct_pipelined_p50_ms", dp.p50),
+                ("direct_pipelined_p99_ms", dp.p99),
+                (
+                    "router_vs_direct_pipelined_throughput",
+                    rp.throughput / dp.throughput.max(f64::MIN_POSITIVE),
+                ),
+            ]);
+            println!(
+                "router vs direct (pipelined): {:.2}x",
+                rp.throughput / dp.throughput.max(f64::MIN_POSITIVE)
+            );
+        }
+    }
+
+    let path = harness::emit_json_kv("BENCH_router.json", &kv)?;
     println!("json -> {}", path.display());
     Ok(())
 }

@@ -73,6 +73,23 @@ impl PlanKey {
         f64::from_bits(self.eta_bits)
     }
 
+    /// Stable FNV-1a-64 hash of the key — identical across processes,
+    /// runs, and platforms (unlike `Hash`, whose `DefaultHasher` is
+    /// per-process). The router partitions the `(spec, shape)` keyspace
+    /// across backend processes with this hash, so a given key always
+    /// lands on the same backend and that backend's plan cache stays hot
+    /// for its shard.
+    pub fn stable_hash(&self) -> u64 {
+        stable_hash_parts(
+            &self.norms,
+            self.eta_bits,
+            self.l1_algo,
+            self.method,
+            self.layout,
+            &self.shape,
+        )
+    }
+
     /// Compile a fresh plan for this key on the given backend.
     pub fn compile(&self, backend: &ExecBackend) -> Result<ProjectionPlan> {
         let spec = ProjectionSpec::new(self.norms.clone(), self.eta())
@@ -92,6 +109,39 @@ impl PlanKey {
             WireLayout::Tensor => spec.compile(&self.shape),
         }
     }
+}
+
+/// [`PlanKey::stable_hash`] over borrowed request fields — the router's
+/// per-request shard decision, computed without materializing a key (no
+/// norm/shape clones on the forward hot path).
+pub fn stable_hash_parts(
+    norms: &[Norm],
+    eta_bits: u64,
+    l1_algo: L1Algo,
+    method: Method,
+    layout: WireLayout,
+    shape: &[usize],
+) -> u64 {
+    use crate::service::protocol::{fnv1a64_update, FNV_OFFSET};
+    let mut h = FNV_OFFSET;
+    h = fnv1a64_update(h, &[norms.len() as u8]);
+    for &n in norms {
+        h = fnv1a64_update(h, &[crate::service::protocol::norm_to_u8(n)]);
+    }
+    h = fnv1a64_update(h, &eta_bits.to_le_bytes());
+    h = fnv1a64_update(
+        h,
+        &[
+            crate::service::protocol::algo_to_u8(l1_algo),
+            crate::service::protocol::method_to_u8(method),
+            layout.to_u8(),
+        ],
+    );
+    h = fnv1a64_update(h, &[shape.len() as u8]);
+    for &d in shape {
+        h = fnv1a64_update(h, &(d as u64).to_le_bytes());
+    }
+    h
 }
 
 struct Entry {
@@ -233,6 +283,28 @@ mod tests {
             layout: WireLayout::Matrix,
             shape,
         }
+    }
+
+    #[test]
+    fn stable_hash_separates_fields_and_is_deterministic() {
+        // The hash feeds the router's cross-process shard map: it must be
+        // a pure function of the key fields (no per-process randomness)
+        // and must distinguish every field.
+        let base = key(vec![3, 5], 1.0);
+        assert_eq!(base.stable_hash(), key(vec![3, 5], 1.0).stable_hash());
+        let variants = [
+            PlanKey { norms: vec![Norm::L2, Norm::L1], ..base.clone() },
+            PlanKey { eta_bits: 2.0f64.to_bits(), ..base.clone() },
+            PlanKey { l1_algo: L1Algo::Sort, ..base.clone() },
+            PlanKey { method: Method::ExactNewton, ..base.clone() },
+            PlanKey { layout: WireLayout::Tensor, ..base.clone() },
+            PlanKey { shape: vec![5, 3], ..base.clone() },
+        ];
+        let mut hashes: Vec<u64> = variants.iter().map(|k| k.stable_hash()).collect();
+        hashes.push(base.stable_hash());
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), variants.len() + 1, "field change did not change the hash");
     }
 
     #[test]

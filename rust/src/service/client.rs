@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::core::error::{MlprojError, Result};
@@ -54,10 +54,12 @@ impl Client {
         }
     }
 
-    /// Liveness probe.
-    pub fn ping(&mut self) -> Result<()> {
+    /// Liveness probe. Returns the body cap the server advertised (v1
+    /// clients never chunk, so nothing is negotiated — the cap is
+    /// informational here).
+    pub fn ping(&mut self) -> Result<Option<u64>> {
         match self.call(&Frame::Ping)? {
-            Frame::Pong => Ok(()),
+            Frame::Pong { max_body } => Ok(max_body),
             other => Err(MlprojError::Protocol(format!("expected Pong, got {other:?}"))),
         }
     }
@@ -147,10 +149,16 @@ pub struct PipelinedConn {
     /// Reused raw-frame receive buffer.
     body: Vec<u8>,
     /// Requests whose `Project` body would exceed this stream as chunked
-    /// frames instead. Defaults to the protocol-wide cap; lower it to
-    /// match a server running with a smaller `--max-body-bytes` (there
-    /// is no cap negotiation on the wire yet).
+    /// frames instead. Defaults to the protocol-wide cap;
+    /// [`PipelinedConn::ping`] auto-sets it from the cap the server
+    /// advertises in its Pong (manual
+    /// [`PipelinedConn::set_chunk_threshold`] calls stay as an override).
     chunk_threshold: usize,
+    /// True once the caller pinned the threshold by hand — negotiation
+    /// then leaves it alone.
+    threshold_overridden: bool,
+    /// The body cap the server advertised on the last Pong, if any.
+    server_max_body: Option<usize>,
 }
 
 impl PipelinedConn {
@@ -167,6 +175,8 @@ impl PipelinedConn {
             inflight: HashMap::new(),
             body: Vec::new(),
             chunk_threshold: MAX_BODY_BYTES,
+            threshold_overridden: false,
+            server_max_body: None,
         })
     }
 
@@ -177,10 +187,23 @@ impl PipelinedConn {
 
     /// Set the auto-chunk threshold in bytes (clamped to the protocol
     /// cap): requests whose frame body would exceed it upload as chunked
-    /// streams. Match this to the server's `--max-body-bytes` when that
-    /// is lowered below the default.
+    /// streams. A manual call overrides (and survives) any cap the
+    /// server advertises via [`PipelinedConn::ping`] negotiation.
     pub fn set_chunk_threshold(&mut self, bytes: usize) {
         self.chunk_threshold = bytes.clamp(64, MAX_BODY_BYTES);
+        self.threshold_overridden = true;
+    }
+
+    /// Current auto-chunk threshold in bytes.
+    pub fn chunk_threshold(&self) -> usize {
+        self.chunk_threshold
+    }
+
+    /// The body cap the server advertised on the last Pong (`None`
+    /// before the first [`PipelinedConn::ping`], or against a peer that
+    /// does not advertise one).
+    pub fn server_max_body(&self) -> Option<usize> {
+        self.server_max_body
     }
 
     fn alloc_corr(&mut self) -> Result<u16> {
@@ -358,12 +381,25 @@ impl PipelinedConn {
         }
     }
 
-    /// v2 liveness probe (call with no requests in flight).
+    /// v2 liveness probe (call with no requests in flight). Doubles as
+    /// cap negotiation: a Pong that advertises the server's body cap
+    /// auto-sets this connection's chunk threshold to it, unless the
+    /// caller pinned one manually via
+    /// [`PipelinedConn::set_chunk_threshold`].
     pub fn ping(&mut self) -> Result<()> {
         let corr = self.alloc_corr()?;
         Frame::Ping.write_to_v2(&mut self.stream, corr)?;
         match self.read_v2_frame()? {
-            (got, Frame::Pong) if got == corr => Ok(()),
+            (got, Frame::Pong { max_body }) if got == corr => {
+                if let Some(cap) = max_body {
+                    let cap = (cap.min(MAX_BODY_BYTES as u64) as usize).max(64);
+                    self.server_max_body = Some(cap);
+                    if !self.threshold_overridden {
+                        self.chunk_threshold = cap;
+                    }
+                }
+                Ok(())
+            }
             (_, other) => {
                 Err(MlprojError::Protocol(format!("expected Pong, got {other:?}")))
             }
@@ -425,31 +461,71 @@ pub struct ClientPool {
     rr: AtomicUsize,
     /// Reconnect attempts after a transport error (total tries = 1 + retries).
     retries: usize,
-    /// Auto-chunk threshold stamped onto every (re)connected connection.
+    /// Auto-chunk threshold stamped onto every (re)connected connection
+    /// (negotiated from the server's Pong at pool connect; manual
+    /// [`ClientPool::set_chunk_threshold`] calls override it).
     chunk_threshold: usize,
+    /// Connections re-established after a transport failure.
+    reconnects: AtomicU64,
 }
 
 impl ClientPool {
     /// Connect `conns` persistent connections to `addr` (eagerly — a
     /// server that refuses connections fails here, not mid-traffic).
+    /// One ping negotiates the server's body cap: every pooled (and
+    /// future reconnected) connection auto-chunks at the advertised cap.
     pub fn connect(addr: &str, conns: usize) -> Result<ClientPool> {
         let n = conns.max(1);
+        let mut first = PipelinedConn::connect(addr)?;
+        first.ping()?;
+        let chunk_threshold = first.server_max_body().unwrap_or(MAX_BODY_BYTES);
         let mut slots = Vec::with_capacity(n);
-        for _ in 0..n {
-            slots.push(Mutex::new(Some(PipelinedConn::connect(addr)?)));
+        slots.push(Mutex::new(Some(first)));
+        for _ in 1..n {
+            let mut conn = PipelinedConn::connect(addr)?;
+            conn.set_chunk_threshold(chunk_threshold);
+            slots.push(Mutex::new(Some(conn)));
         }
         Ok(ClientPool {
             addr: addr.to_string(),
             slots,
             rr: AtomicUsize::new(0),
             retries: 2,
-            chunk_threshold: MAX_BODY_BYTES,
+            chunk_threshold,
+            reconnects: AtomicU64::new(0),
         })
+    }
+
+    /// Set the reconnect budget per call (total tries = 1 + retries).
+    /// The router raises this so a backend restart inside the retry
+    /// window is survived instead of surfaced.
+    pub fn with_retries(mut self, retries: usize) -> ClientPool {
+        self.retries = retries;
+        self
     }
 
     /// Number of pooled connections.
     pub fn conns(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Connections re-established after a transport failure (the
+    /// router's `router_reconnects` observable).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// The pool's auto-chunk threshold — right after [`ClientPool::connect`]
+    /// this is the body cap the server advertised (or the protocol cap
+    /// for a legacy peer). The router clamps its own downstream cap to
+    /// the tightest backend via this.
+    pub fn chunk_threshold(&self) -> usize {
+        self.chunk_threshold
+    }
+
+    /// The server this pool dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
     }
 
     /// Set the auto-chunk threshold (see
@@ -481,10 +557,14 @@ impl ClientPool {
                 match PipelinedConn::connect(self.addr.as_str()) {
                     Ok(mut conn) => {
                         conn.set_chunk_threshold(self.chunk_threshold);
+                        self.reconnects.fetch_add(1, Ordering::Relaxed);
                         *guard = Some(conn);
                     }
                     Err(_) if attempt < self.retries => {
                         attempt += 1;
+                        // Linear backoff: a restarting backend needs a
+                        // beat before its listener is back.
+                        backoff(attempt);
                         continue;
                     }
                     Err(e) => return Err(e),
@@ -499,6 +579,7 @@ impl ClientPool {
                     *guard = None;
                     if attempt < self.retries {
                         attempt += 1;
+                        backoff(attempt);
                         continue;
                     }
                     return Err(MlprojError::Io(e));
@@ -522,13 +603,20 @@ impl ClientPool {
     }
 }
 
+/// Linear reconnect backoff (25 ms × attempt): long enough for a backend
+/// restart to land inside a router's retry budget, short enough that a
+/// genuinely dead backend fails fast.
+fn backoff(attempt: usize) {
+    std::thread::sleep(std::time::Duration::from_millis(25 * attempt as u64));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::rng::Rng;
     use crate::projection::Norm;
     use crate::service::scheduler::SchedulerConfig;
-    use crate::service::server::Server;
+    use crate::service::server::{ServeOptions, Server};
 
     #[test]
     fn client_round_trip_matches_in_process() {
@@ -612,6 +700,38 @@ mod tests {
     }
 
     #[test]
+    fn ping_negotiates_the_chunk_threshold_from_the_advertised_cap() {
+        let opts = ServeOptions { max_body_bytes: 16 * 1024, ..ServeOptions::default() };
+        let server =
+            Server::bind_with("127.0.0.1:0", &SchedulerConfig::default(), opts).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        let mut conn = PipelinedConn::connect(addr).unwrap();
+        assert_eq!(conn.chunk_threshold(), MAX_BODY_BYTES);
+        assert_eq!(conn.server_max_body(), None);
+        conn.ping().unwrap();
+        assert_eq!(conn.server_max_body(), Some(16 * 1024));
+        assert_eq!(conn.chunk_threshold(), 16 * 1024, "ping auto-sets the threshold");
+
+        // A manual threshold is an override: negotiation leaves it alone.
+        conn.set_chunk_threshold(1024);
+        conn.ping().unwrap();
+        assert_eq!(conn.chunk_threshold(), 1024);
+
+        // A pool negotiates at connect: its conns chunk at the cap.
+        let pool = ClientPool::connect(&addr.to_string(), 2).unwrap();
+        pool.with_conn(0, |c| {
+            assert_eq!(c.chunk_threshold(), 16 * 1024);
+            Ok(())
+        })
+        .unwrap();
+
+        pool.with_conn(0, |c| c.shutdown()).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn client_pool_reconnects_after_a_severed_connection() {
         let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
         let addr = server.local_addr();
@@ -637,6 +757,7 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(pool.project(&req).unwrap(), expect.data());
         }
+        assert!(pool.reconnects() >= 1, "severed sockets must count as reconnects");
 
         // Shut the server down through a pooled connection.
         pool.with_conn(0, |c| c.shutdown()).unwrap();

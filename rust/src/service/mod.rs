@@ -21,12 +21,17 @@
 //!   pinned per connection) and the clients behind `mlproj serve` /
 //!   `client` / `loadgen`: the blocking v1 [`Client`], the pipelined v2
 //!   [`PipelinedConn`], and the reconnecting [`ClientPool`].
+//! * [`router`] — `mlproj router`: fronts N backend `mlproj serve`
+//!   processes, partitioning the `(spec, shape)` keyspace across them
+//!   with a stable hash so each backend's plan cache stays hot for its
+//!   shard; chunked streams pass through frame by frame.
 //! * [`stats`] — atomics-based counters surfaced through the `Stats`
 //!   frame and `mlproj info --addr`.
 
 pub mod cache;
 pub mod client;
 pub mod protocol;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod stats;
@@ -37,6 +42,7 @@ pub use protocol::{
     BeginInfo, ChecksumKind, ChunkAssembler, ErrorCode, Frame, ProjectMeta, ProjectRequest,
     RawHeader, WireLayout,
 };
-pub use scheduler::{ConnReply, Job, ReplySlot, ReplyTo, Scheduler, SchedulerConfig};
+pub use router::{spawn_backends, BackendSpawnOptions, Router, RouterHandle, RouterOptions};
+pub use scheduler::{ConnReply, Job, PayloadPool, ReplySlot, ReplyTo, Scheduler, SchedulerConfig};
 pub use server::{ServeOptions, Server, ServerHandle};
 pub use stats::ServiceStats;

@@ -92,7 +92,7 @@ pub enum WireLayout {
 }
 
 impl WireLayout {
-    fn to_u8(self) -> u8 {
+    pub(crate) fn to_u8(self) -> u8 {
         match self {
             WireLayout::Matrix => 0,
             WireLayout::Tensor => 1,
@@ -108,7 +108,7 @@ impl WireLayout {
     }
 }
 
-fn norm_to_u8(n: Norm) -> u8 {
+pub(crate) fn norm_to_u8(n: Norm) -> u8 {
     match n {
         Norm::L1 => 0,
         Norm::L2 => 1,
@@ -125,7 +125,7 @@ fn norm_from_u8(b: u8) -> Result<Norm> {
     }
 }
 
-fn algo_to_u8(a: L1Algo) -> u8 {
+pub(crate) fn algo_to_u8(a: L1Algo) -> u8 {
     match a {
         L1Algo::Condat => 0,
         L1Algo::Sort => 1,
@@ -142,7 +142,7 @@ fn algo_from_u8(b: u8) -> Result<L1Algo> {
     }
 }
 
-fn method_to_u8(m: Method) -> u8 {
+pub(crate) fn method_to_u8(m: Method) -> u8 {
     match m {
         Method::Compositional => 0,
         Method::ExactNewton => 1,
@@ -386,7 +386,10 @@ pub struct BeginInfo {
 ///
 /// Body layouts (after the 12-byte header):
 ///
-/// * `Ping` / `Pong` / `StatsRequest` / `Shutdown` / `ShutdownAck` — empty.
+/// * `Ping` / `StatsRequest` / `Shutdown` / `ShutdownAck` — empty.
+/// * `Pong` — empty (legacy peers), or `max_body_bytes: u64`: the
+///   responder's per-frame body cap, so clients can auto-set their chunk
+///   threshold instead of being configured by hand (cap negotiation).
 /// * `Project` — `eta: f64`, `l1algo: u8`, `method: u8`, `layout: u8`,
 ///   `nnorms: u8`, `nnorms × u8`, `ndim: u8`, `ndim × u32` dims,
 ///   `count: u32`, `count × f32` payload.
@@ -411,8 +414,13 @@ pub struct BeginInfo {
 pub enum Frame {
     /// Liveness probe.
     Ping,
-    /// Liveness reply.
-    Pong,
+    /// Liveness reply, optionally advertising the responder's per-frame
+    /// body cap (`None` from legacy peers that sent an empty body).
+    Pong {
+        /// The responder's `max_body_bytes`: requests whose frame body
+        /// would exceed it must upload as chunked streams.
+        max_body: Option<u64>,
+    },
     /// A projection job.
     Project(ProjectRequest),
     /// Successful projection result (same layout/shape as the request).
@@ -454,7 +462,7 @@ impl Frame {
     fn type_byte(&self) -> u8 {
         match self {
             Frame::Ping => T_PING,
-            Frame::Pong => T_PONG,
+            Frame::Pong { .. } => T_PONG,
             Frame::Project(_) => T_PROJECT,
             Frame::ProjectOk(_) => T_PROJECT_OK,
             Frame::Error { .. } => T_ERROR,
@@ -519,11 +527,12 @@ impl Frame {
     fn encode_body(&self) -> Result<Vec<u8>> {
         let mut b = Vec::new();
         match self {
-            Frame::Ping
-            | Frame::Pong
-            | Frame::StatsRequest
-            | Frame::Shutdown
-            | Frame::ShutdownAck => {}
+            Frame::Ping | Frame::StatsRequest | Frame::Shutdown | Frame::ShutdownAck => {}
+            Frame::Pong { max_body } => {
+                if let Some(cap) = max_body {
+                    b.extend_from_slice(&cap.to_le_bytes());
+                }
+            }
             Frame::Project(req) => {
                 req.validate()?;
                 encode_spec_fields(
@@ -613,7 +622,12 @@ impl Frame {
         let mut c = Cursor { buf: body, pos: 0 };
         let frame = match ftype {
             T_PING => Frame::Ping,
-            T_PONG => Frame::Pong,
+            T_PONG => {
+                // Legacy peers send an empty Pong; cap-advertising peers
+                // append their max_body_bytes as a u64.
+                let max_body = if body.is_empty() { None } else { Some(c.u64()?) };
+                Frame::Pong { max_body }
+            }
             T_PROJECT => {
                 let meta = parse_project_meta(&mut c)?;
                 let payload = c.f32s()?;
@@ -1120,6 +1134,34 @@ fn write_chunk_frame<W: Write>(w: &mut W, corr: u16, chunk: &[f32]) -> Result<()
     Ok(())
 }
 
+/// Write one raw `ProjectChunk` frame from its wire *bytes* (already
+/// little-endian f32s) — the router's pass-through path, which forwards
+/// chunk bodies without decoding them into f32s and back. The body must
+/// be a non-empty whole number of f32s (the receiver enforces it too).
+pub fn write_chunk_bytes<W: Write>(w: &mut W, corr: u16, body: &[u8]) -> Result<()> {
+    if body.is_empty() || body.len() % 4 != 0 {
+        return Err(perr(format!(
+            "chunk body of {} bytes is not a whole number of f32s",
+            body.len()
+        )));
+    }
+    if body.len() > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "chunk body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+            body.len()
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = V2;
+    head[5] = T_PROJECT_CHUNK;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(body)?;
+    Ok(())
+}
+
 /// Checksum of a payload as it would travel on the wire (its
 /// little-endian bytes).
 pub fn payload_fnv1a64(payload: &[f32]) -> u64 {
@@ -1336,7 +1378,9 @@ mod tests {
     #[test]
     fn roundtrip_every_frame_type() {
         roundtrip(Frame::Ping);
-        roundtrip(Frame::Pong);
+        roundtrip(Frame::Pong { max_body: None });
+        roundtrip(Frame::Pong { max_body: Some(65536) });
+        roundtrip(Frame::Pong { max_body: Some(MAX_BODY_BYTES as u64) });
         roundtrip(Frame::Project(sample_request()));
         roundtrip(Frame::ProjectOk(vec![0.5, -1.0, f32::MIN, f32::MAX]));
         roundtrip(Frame::Error { code: ErrorCode::Busy, msg: "queue full".into() });
@@ -1610,6 +1654,35 @@ mod tests {
             forged[4] = V1;
             assert!(matches!(Frame::decode(&forged), Err(MlprojError::Protocol(_))));
         }
+    }
+
+    #[test]
+    fn pong_rejects_a_malformed_cap_body() {
+        // 4 stray bytes: neither the legacy empty body nor a u64 cap.
+        let mut bytes = Frame::Pong { max_body: None }.encode().unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        bytes[8..12].copy_from_slice(&4u32.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+        // 12 bytes: a u64 cap plus trailing garbage.
+        let mut bytes = Frame::Pong { max_body: Some(7) }.encode().unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        bytes[8..12].copy_from_slice(&12u32.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn write_chunk_bytes_matches_the_owned_chunk_frame() {
+        let payload = vec![0.5f32, -2.25, f32::MAX, 1e-7];
+        let mut raw = Vec::new();
+        for &x in &payload {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut streamed = Vec::new();
+        write_chunk_bytes(&mut streamed, 17, &raw).unwrap();
+        assert_eq!(streamed, Frame::ProjectChunk(payload).encode_v2(17).unwrap());
+        // Empty and misaligned bodies are refused.
+        assert!(write_chunk_bytes(&mut Vec::new(), 0, &[]).is_err());
+        assert!(write_chunk_bytes(&mut Vec::new(), 0, &[1, 2, 3]).is_err());
     }
 
     #[test]

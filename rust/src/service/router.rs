@@ -1,0 +1,1432 @@
+//! Sharded multi-process serving: `mlproj router`.
+//!
+//! The paper's multi-level projection decomposes into independent
+//! sub-projections (Prop. 6.4) — PR 2–4 scaled that *inside* one process
+//! (shard-pinned workers, micro-batching, pipelining). The router is the
+//! next rung: it fronts **N backend `mlproj serve` processes** and
+//! partitions the `(spec, shape)` keyspace across them with the stable
+//! hash [`PlanKey::stable_hash`], so every plan key always lands on the
+//! same backend and that backend's plan cache stays hot for its shard —
+//! the cross-process analogue of the in-process shard-per-worker cache.
+//!
+//! Topology:
+//!
+//! ```text
+//!            clients (v1 lockstep, v2 pipelined, v2 chunked)
+//!                     │ mlproj wire protocol
+//!              ┌──────▼──────┐
+//!              │   router    │  stable_hash(spec, shape) % N
+//!              └┬─────┬─────┬┘
+//!     ClientPool│     │     │ClientPool   (reconnect + retry)
+//!        ┌──────▼┐ ┌──▼───┐ ┌▼──────┐
+//!        │serve 0│ │serve 1│ │serve N│   one plan-cache shard each
+//!        └───────┘ └───────┘ └───────┘
+//! ```
+//!
+//! * **Downstream** the router speaks the full protocol: v1 lockstep
+//!   connections forward synchronously; v2 connections get the same
+//!   reader/writer split as the server, with forward workers carrying
+//!   requests upstream so replies return in completion order.
+//! * **Upstream** every backend gets a [`ClientPool`] of persistent
+//!   pipelined connections with reconnect-and-retry: projections are
+//!   idempotent, so a backend that dies mid-request is redialed (with
+//!   linear backoff) and the request replayed — downstream correlation
+//!   ids never notice.
+//! * **Chunked streams** pass through frame by frame: the router decides
+//!   the backend on `ProjectBegin` (the spec travels in the header),
+//!   forwards each `ProjectChunk` body verbatim on a dedicated upstream
+//!   connection, and relays the (possibly chunked) reply back without
+//!   ever holding the whole payload — a stream bigger than the body cap
+//!   costs the router one chunk of memory at a time, bounded by the
+//!   relay channel depth.
+//! * Backends are either **attached** (`--backend addr,addr,...`) or
+//!   **spawned** ([`spawn_backends`]): child `mlproj serve` processes on
+//!   ephemeral ports, shut down with the router.
+
+use std::collections::{HashMap, HashSet};
+use std::io::BufRead;
+use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
+use std::process::Child;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::core::error::{MlprojError, Result};
+use crate::service::client::{Client, ClientPool};
+use crate::service::protocol::{
+    self, ChecksumKind, ErrorCode, Frame, ProjectMeta, ProjectRequest, RawHeader, V1, V2,
+};
+use crate::service::server::trigger_shutdown;
+use crate::service::stats::ServiceStats;
+
+/// Router sizing and wire limits.
+#[derive(Debug, Clone)]
+pub struct RouterOptions {
+    /// Downstream per-frame body cap (advertised in the router's Pong;
+    /// oversized replies stream back chunked). [`Router::bind`] clamps
+    /// it to the tightest backend-advertised cap, because pass-through
+    /// chunk frames are forwarded verbatim and must fit every hop.
+    pub max_body_bytes: usize,
+    /// Concurrent chunked pass-through streams per downstream connection.
+    pub max_streams: usize,
+    /// Requests in flight per downstream v2 connection (past it: `Busy`).
+    pub max_inflight: usize,
+    /// Persistent upstream connections per backend.
+    pub conns_per_backend: usize,
+    /// Forward worker threads (each carries one upstream round trip at a
+    /// time, so this bounds cross-backend concurrency).
+    pub forward_workers: usize,
+    /// Queued-but-unforwarded requests before `Busy` rejection.
+    pub queue_depth: usize,
+    /// Upstream reconnect budget per request (see
+    /// [`ClientPool::with_retries`]).
+    pub retries: usize,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        RouterOptions {
+            max_body_bytes: protocol::MAX_BODY_BYTES,
+            max_streams: 4,
+            max_inflight: 256,
+            conns_per_backend: 2,
+            forward_workers: 8,
+            queue_depth: 128,
+            retries: 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward queue (downstream reader -> forward workers)
+// ---------------------------------------------------------------------------
+
+/// One whole-frame projection request travelling to a backend. Finished
+/// exactly once; dropping an unfinished job reports an internal error so
+/// no downstream correlation id is left dangling.
+struct ForwardJob {
+    backend: usize,
+    req: ProjectRequest,
+    corr: u16,
+    reply: Option<Sender<RouterMsg>>,
+}
+
+impl ForwardJob {
+    fn finish(mut self, result: Result<Vec<f32>>) {
+        if let Some(tx) = self.reply.take() {
+            let _ = tx.send(RouterMsg::Done { corr: self.corr, result });
+        }
+    }
+}
+
+impl Drop for ForwardJob {
+    fn drop(&mut self) {
+        if let Some(tx) = self.reply.take() {
+            let _ = tx.send(RouterMsg::Done {
+                corr: self.corr,
+                result: Err(MlprojError::Runtime(
+                    "router dropped the request before completion".into(),
+                )),
+            });
+        }
+    }
+}
+
+/// Bounded MPMC queue feeding the forward workers (the router-side twin
+/// of the scheduler's job queue; `try_push` never blocks).
+struct ForwardQueue {
+    queue: Mutex<std::collections::VecDeque<ForwardJob>>,
+    cv: Condvar,
+    depth: usize,
+    shutdown: AtomicBool,
+}
+
+impl ForwardQueue {
+    fn new(depth: usize) -> Self {
+        ForwardQueue {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            depth: depth.max(1),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue without blocking. A rejected job is finished with
+    /// `ServiceBusy` on its own correlation id.
+    fn try_push(&self, job: ForwardJob) -> Result<()> {
+        if self.shutdown.load(Ordering::Acquire) {
+            job.finish(Err(MlprojError::ServiceBusy));
+            return Err(MlprojError::ServiceBusy);
+        }
+        let mut q = self.queue.lock().expect("forward queue poisoned");
+        if q.len() >= self.depth {
+            drop(q);
+            job.finish(Err(MlprojError::ServiceBusy));
+            return Err(MlprojError::ServiceBusy);
+        }
+        q.push_back(job);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once shutdown is signalled and the queue has
+    /// drained.
+    fn pop(&self) -> Option<ForwardJob> {
+        let mut q = self.queue.lock().expect("forward queue poisoned");
+        loop {
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cv.wait(q).expect("forward queue poisoned");
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Downstream v2 writer messages
+// ---------------------------------------------------------------------------
+
+/// One message on a downstream v2 connection's writer channel.
+enum RouterMsg {
+    /// A forwarded request completed (whole reply held in memory).
+    Done {
+        corr: u16,
+        result: Result<Vec<f32>>,
+    },
+    /// A non-projection reply from the reader (Pong, Stats, ShutdownAck).
+    Control {
+        corr: u16,
+        frame: Frame,
+    },
+    /// A chunked pass-through reply: the writer drains `rx` and writes
+    /// each event contiguously under `corr` (a chunked reply may not
+    /// interleave with other frames).
+    Relay {
+        corr: u16,
+        rx: Receiver<RelayEvent>,
+    },
+}
+
+/// One frame of a relayed upstream reply, shipped bounded-buffer from
+/// the relay thread to the downstream writer.
+enum RelayEvent {
+    /// Upstream answered with a whole frame (fits the cap) or an error.
+    Whole(Result<Vec<f32>>),
+    /// Chunked reply opens: element total + checksum kind pass through.
+    Begin { total_elems: u64, checksum: ChecksumKind },
+    /// One chunk's raw wire bytes, forwarded verbatim.
+    Chunk(Vec<u8>),
+    /// Chunked reply closes with the upstream checksum.
+    End { checksum: u64 },
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// A bound (not yet running) projection router.
+pub struct Router {
+    listener: TcpListener,
+    addr: SocketAddr,
+    backends: Arc<Vec<ClientPool>>,
+    stats: Arc<ServiceStats>,
+    shutdown: Arc<AtomicBool>,
+    opts: RouterOptions,
+    queue: Arc<ForwardQueue>,
+    workers: Vec<JoinHandle<()>>,
+    /// Self-spawned backend processes (empty when attached); shut down
+    /// with the router.
+    children: Vec<Child>,
+}
+
+impl Router {
+    /// Bind `addr` and connect a [`ClientPool`] (with cap negotiation
+    /// and the router's retry budget) to every backend address. Spawns
+    /// the forward workers immediately; the accept loop starts in
+    /// [`Router::run`].
+    pub fn bind(addr: &str, backend_addrs: &[String], opts: RouterOptions) -> Result<Router> {
+        if backend_addrs.is_empty() {
+            return Err(MlprojError::invalid("router needs at least one backend"));
+        }
+        let mut opts = opts;
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stats = Arc::new(ServiceStats::new());
+        let mut backends = Vec::with_capacity(backend_addrs.len());
+        for b in backend_addrs {
+            let pool =
+                ClientPool::connect(b, opts.conns_per_backend)?.with_retries(opts.retries);
+            // The effective downstream cap is the tightest hop: chunk
+            // frames pass through verbatim, so anything the router
+            // accepts (and advertises in its Pong) must also fit every
+            // backend — each pool learned its backend's advertised cap
+            // during connect negotiation.
+            opts.max_body_bytes = opts.max_body_bytes.min(pool.chunk_threshold());
+            backends.push(pool);
+        }
+        let backends = Arc::new(backends);
+        let queue = Arc::new(ForwardQueue::new(opts.queue_depth));
+        let workers = (0..opts.forward_workers.max(1))
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let backends = Arc::clone(&backends);
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || {
+                    while let Some(job) = queue.pop() {
+                        forward_one(&backends, &stats, job);
+                    }
+                })
+            })
+            .collect();
+        Ok(Router {
+            listener,
+            addr,
+            backends,
+            stats,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            opts,
+            queue,
+            workers,
+            children: Vec::new(),
+        })
+    }
+
+    /// Adopt self-spawned backend processes: the router shuts them down
+    /// (gracefully, then by force) when it stops.
+    pub fn with_children(mut self, children: Vec<Child>) -> Router {
+        self.children = children;
+        self
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared counter block.
+    pub fn stats(&self) -> &Arc<ServiceStats> {
+        &self.stats
+    }
+
+    /// Number of backends behind this router.
+    pub fn backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Counter snapshot plus the router-only observables (the payload of
+    /// the router's `StatsResponse`).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        router_snapshot(&self.stats, &self.backends)
+    }
+
+    /// Accept and route connections until a `Shutdown` frame arrives,
+    /// then drain, stop the forward workers, and stop any self-spawned
+    /// backends. Blocks the calling thread; use [`Router::spawn`]
+    /// otherwise.
+    pub fn run(mut self) -> Result<()> {
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        let peers: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let mut next_conn_id = 0u64;
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("mlproj router: accept failed: {e}");
+                    continue;
+                }
+            };
+            ServiceStats::bump(&self.stats.connections);
+            let conn_id = next_conn_id;
+            next_conn_id += 1;
+            if let Ok(clone) = stream.try_clone() {
+                peers.lock().expect("peer map poisoned").insert(conn_id, clone);
+            }
+            let ctx = ConnCtx {
+                backends: Arc::clone(&self.backends),
+                stats: Arc::clone(&self.stats),
+                shutdown: Arc::clone(&self.shutdown),
+                addr: self.addr,
+                opts: self.opts.clone(),
+                queue: Arc::clone(&self.queue),
+            };
+            let peers_for_conn = Arc::clone(&peers);
+            conns.push(std::thread::spawn(move || {
+                handle_conn(stream, &ctx);
+                peers_for_conn.lock().expect("peer map poisoned").remove(&conn_id);
+            }));
+            conns.retain(|h| !h.is_finished());
+        }
+        for (_, peer) in peers.lock().expect("peer map poisoned").drain() {
+            let _ = peer.shutdown(NetShutdown::Both);
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        self.queue.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // Self-spawned backends stop with the router: graceful Shutdown
+        // frame first, SIGKILL if the frame cannot be delivered.
+        let addrs: Vec<String> = self.backends.iter().map(|p| p.addr().to_string()).collect();
+        for (child, addr) in self.children.iter_mut().zip(addrs) {
+            let graceful =
+                Client::connect(addr.as_str()).and_then(|mut c| c.shutdown()).is_ok();
+            if !graceful {
+                let _ = child.kill();
+            }
+            let _ = child.wait();
+        }
+        Ok(())
+    }
+
+    /// Run on a background thread; returns the bound address + join
+    /// point.
+    pub fn spawn(self) -> RouterHandle {
+        let addr = self.addr;
+        let handle = std::thread::spawn(move || self.run());
+        RouterHandle { addr, handle }
+    }
+}
+
+/// Join handle for a router running on a background thread.
+pub struct RouterHandle {
+    addr: SocketAddr,
+    handle: JoinHandle<Result<()>>,
+}
+
+impl RouterHandle {
+    /// The router's bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the router to exit (after a `Shutdown` frame).
+    pub fn join(self) -> Result<()> {
+        self.handle
+            .join()
+            .map_err(|_| MlprojError::Runtime("router thread panicked".into()))?
+    }
+}
+
+/// Pick the backend for a request: stable hash of the full plan key, so
+/// the same `(spec, shape)` always lands on the same backend process.
+fn route(meta: &ProjectMeta, n: usize) -> usize {
+    let h = crate::service::cache::stable_hash_parts(
+        &meta.norms,
+        meta.eta.to_bits(),
+        meta.l1_algo,
+        meta.method,
+        meta.layout,
+        &meta.shape,
+    );
+    (h % n as u64) as usize
+}
+
+/// [`route`] over a decoded request — no `ProjectMeta` (and no norm or
+/// shape clone) is materialized on the v2 forward hot path.
+fn route_req(req: &ProjectRequest, n: usize) -> usize {
+    let h = crate::service::cache::stable_hash_parts(
+        &req.norms,
+        req.eta.to_bits(),
+        req.l1_algo,
+        req.method,
+        req.layout,
+        &req.shape,
+    );
+    (h % n as u64) as usize
+}
+
+/// Forward one whole-frame request upstream and deliver the reply. Typed
+/// backend errors (`Busy`, `Invalid`, …) pass through; transport errors
+/// that survive the pool's reconnect budget surface as `Internal`.
+fn forward_one(backends: &[ClientPool], stats: &ServiceStats, job: ForwardJob) {
+    ServiceStats::bump(&stats.routed_requests);
+    let backend = job.backend;
+    let result = backends[backend].project(&job.req).map_err(|e| match e {
+        MlprojError::Io(e) => MlprojError::Runtime(format!(
+            "backend {backend} ({}) unavailable: {e}",
+            backends[backend].addr()
+        )),
+        other => other,
+    });
+    job.finish(result);
+}
+
+/// Build the router's `StatsResponse`: the shared counters plus
+/// router-only pairs (backend count, upstream reconnects).
+fn router_snapshot(stats: &ServiceStats, backends: &[ClientPool]) -> Vec<(String, u64)> {
+    let mut pairs = stats.snapshot();
+    pairs.push(("router_backends".into(), backends.len() as u64));
+    pairs.push((
+        "router_reconnects".into(),
+        backends.iter().map(|p| p.reconnects()).sum(),
+    ));
+    pairs
+}
+
+/// Everything one downstream connection handler needs.
+struct ConnCtx {
+    backends: Arc<Vec<ClientPool>>,
+    stats: Arc<ServiceStats>,
+    shutdown: Arc<AtomicBool>,
+    addr: SocketAddr,
+    opts: RouterOptions,
+    queue: Arc<ForwardQueue>,
+}
+
+/// Serve one downstream connection; the first frame pins its version.
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let mut body: Vec<u8> = Vec::new();
+    let first =
+        match protocol::read_raw_frame(&mut stream, &mut body, ctx.opts.max_body_bytes) {
+            Ok(h) => h,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return;
+            }
+            Err(e) => {
+                let _ = Frame::Error { code: ErrorCode::from_error(&e), msg: format!("{e}") }
+                    .write_to(&mut stream);
+                return;
+            }
+        };
+    match first.version {
+        V2 => route_v2(stream, ctx, first, body),
+        _ => route_v1(stream, ctx, first, body),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1: lockstep forwarding
+// ---------------------------------------------------------------------------
+
+/// v1 downstream connections forward synchronously on the handler
+/// thread (lockstep in, lockstep out) and recycle the reply payload as
+/// the next request's decode buffer, like the server's v1 loop.
+fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body: Vec<u8>) {
+    let mut payload: Vec<f32> = Vec::new();
+    loop {
+        if head.version != V1 {
+            let _ = Frame::Error {
+                code: ErrorCode::Protocol,
+                msg: "protocol v2 frame on a v1-pinned connection".into(),
+            }
+            .write_to(&mut stream);
+            return;
+        }
+        ServiceStats::bump(&ctx.stats.frames_in);
+        let decoded =
+            protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload);
+        let frame = match decoded {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = Frame::Error { code: ErrorCode::from_error(&e), msg: format!("{e}") }
+                    .write_to(&mut stream);
+                return;
+            }
+        };
+        let reply = match frame {
+            protocol::ServerFrame::Project(meta) => {
+                ServiceStats::bump(&ctx.stats.requests_total);
+                ServiceStats::add(&ctx.stats.payload_bytes_in, 4 * payload.len() as u64);
+                ServiceStats::bump(&ctx.stats.routed_requests);
+                let backend = route(&meta, ctx.backends.len());
+                let req = ProjectRequest {
+                    norms: meta.norms,
+                    eta: meta.eta,
+                    l1_algo: meta.l1_algo,
+                    method: meta.method,
+                    layout: meta.layout,
+                    shape: meta.shape,
+                    payload: std::mem::take(&mut payload),
+                };
+                match ctx.backends[backend].project(&req) {
+                    Ok(projected) => {
+                        ServiceStats::bump(&ctx.stats.responses_ok);
+                        ServiceStats::add(
+                            &ctx.stats.payload_bytes_out,
+                            4 * projected.len() as u64,
+                        );
+                        let ok = protocol::write_project_ok(&mut stream, &projected);
+                        payload = projected;
+                        if ok.is_err() {
+                            return;
+                        }
+                        None
+                    }
+                    Err(e) => {
+                        ServiceStats::bump(&ctx.stats.responses_err);
+                        let e = match e {
+                            MlprojError::Io(io) => MlprojError::Runtime(format!(
+                                "backend {backend} unavailable: {io}"
+                            )),
+                            other => other,
+                        };
+                        Some(Frame::Error {
+                            code: ErrorCode::from_error(&e),
+                            msg: format!("{e}"),
+                        })
+                    }
+                }
+            }
+            protocol::ServerFrame::Other(Frame::Ping) => Some(Frame::Pong {
+                max_body: Some(ctx.opts.max_body_bytes as u64),
+            }),
+            protocol::ServerFrame::Other(Frame::StatsRequest) => {
+                Some(Frame::StatsResponse(router_snapshot(&ctx.stats, &ctx.backends)))
+            }
+            protocol::ServerFrame::Other(Frame::Shutdown) => {
+                let _ = Frame::ShutdownAck.write_to(&mut stream);
+                trigger_shutdown(&ctx.shutdown, ctx.addr);
+                return;
+            }
+            protocol::ServerFrame::Other(_) => {
+                let _ = Frame::Error {
+                    code: ErrorCode::Protocol,
+                    msg: "unexpected client frame".into(),
+                }
+                .write_to(&mut stream);
+                return;
+            }
+        };
+        if let Some(reply) = reply {
+            if reply.write_to(&mut stream).is_err() {
+                return;
+            }
+        }
+        let next =
+            protocol::read_raw_frame(&mut stream, &mut body, ctx.opts.max_body_bytes);
+        head = match next {
+            Ok(h) => h,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => return,
+            Err(e) => {
+                let _ = Frame::Error { code: ErrorCode::from_error(&e), msg: format!("{e}") }
+                    .write_to(&mut stream);
+                return;
+            }
+        };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2: pipelined forwarding with chunked pass-through
+// ---------------------------------------------------------------------------
+
+/// Replies owed but not yet written on one downstream connection (the
+/// router twin of the server's `InFlight`).
+#[derive(Default)]
+struct InFlight {
+    n: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn inc(&self) -> u64 {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        *n += 1;
+        *n
+    }
+
+    fn current(&self) -> u64 {
+        *self.n.lock().expect("inflight poisoned")
+    }
+
+    fn dec(&self) {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut n = self.n.lock().expect("inflight poisoned");
+        while *n > 0 {
+            n = self.cv.wait(n).expect("inflight poisoned");
+        }
+    }
+}
+
+/// The writer half of a downstream v2 connection: drains completed
+/// forwards, control frames, and relayed chunked replies (written
+/// contiguously), and keeps draining without writing once the socket
+/// dies so in-flight accounting stays balanced.
+fn conn_writer(
+    mut stream: TcpStream,
+    rx: Receiver<RouterMsg>,
+    stats: Arc<ServiceStats>,
+    inflight: Arc<InFlight>,
+    max_body: usize,
+) {
+    let mut dead = false;
+    for msg in rx {
+        match msg {
+            RouterMsg::Done { corr, result } => {
+                write_done(&mut stream, &stats, &mut dead, corr, result, max_body);
+                inflight.dec();
+            }
+            RouterMsg::Control { corr, frame } => {
+                if !dead {
+                    dead = frame.write_to_v2(&mut stream, corr).is_err();
+                }
+                inflight.dec();
+            }
+            RouterMsg::Relay { corr, rx } => {
+                let mut closed = false;
+                for ev in rx {
+                    match ev {
+                        RelayEvent::Whole(result) => {
+                            write_done(&mut stream, &stats, &mut dead, corr, result, max_body);
+                            closed = true;
+                            break;
+                        }
+                        RelayEvent::Begin { total_elems, checksum } => {
+                            ServiceStats::bump(&stats.chunked_streams_out);
+                            if !dead {
+                                let begin = Frame::ProjectOkBegin { total_elems, checksum };
+                                dead = begin.write_to_v2(&mut stream, corr).is_err();
+                            }
+                        }
+                        RelayEvent::Chunk(bytes) => {
+                            if !dead {
+                                dead = protocol::write_chunk_bytes(&mut stream, corr, &bytes)
+                                    .is_err();
+                            }
+                        }
+                        RelayEvent::End { checksum } => {
+                            ServiceStats::bump(&stats.responses_ok);
+                            if !dead {
+                                let end = Frame::ProjectEnd { checksum };
+                                dead = end.write_to_v2(&mut stream, corr).is_err();
+                            }
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+                if !closed {
+                    // The relay thread died mid-reply: the stream offset
+                    // is unrecoverable for this corr, so the most honest
+                    // downstream outcome is a poisoned connection.
+                    ServiceStats::bump(&stats.responses_err);
+                    dead = true;
+                }
+                inflight.dec();
+            }
+        }
+    }
+}
+
+/// Write one completed forward (ok payload — chunked past the cap — or
+/// typed error) to the downstream socket.
+fn write_done(
+    stream: &mut TcpStream,
+    stats: &ServiceStats,
+    dead: &mut bool,
+    corr: u16,
+    result: Result<Vec<f32>>,
+    max_body: usize,
+) {
+    match result {
+        Ok(projected) => {
+            ServiceStats::bump(&stats.responses_ok);
+            ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
+            if !*dead {
+                let fits = 4 + projected.len() * 4 <= max_body;
+                let res = if fits {
+                    protocol::write_project_ok_v2(stream, corr, &projected)
+                } else {
+                    ServiceStats::bump(&stats.chunked_streams_out);
+                    protocol::write_project_ok_chunked(stream, corr, &projected, max_body)
+                };
+                *dead = res.is_err();
+            }
+        }
+        Err(e) => {
+            ServiceStats::bump(&stats.responses_err);
+            if !*dead {
+                let frame =
+                    Frame::Error { code: ErrorCode::from_error(&e), msg: format!("{e}") };
+                *dead = frame.write_to_v2(stream, corr).is_err();
+            }
+        }
+    }
+}
+
+/// One open chunked pass-through stream: a dedicated upstream socket the
+/// incoming chunk frames are forwarded on.
+struct PassThrough {
+    upstream: TcpStream,
+    backend: usize,
+}
+
+/// Correlation id every pass-through stream uses on its dedicated
+/// upstream connection (each stream owns its own socket, so a constant
+/// id cannot collide).
+const UPSTREAM_CORR: u16 = 1;
+
+fn route_v2(mut stream: TcpStream, ctx: &ConnCtx, head: RawHeader, body: Vec<u8>) {
+    ServiceStats::bump(&ctx.stats.connections_v2);
+    let Ok(wstream) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<RouterMsg>();
+    let inflight = Arc::new(InFlight::default());
+    let writer = {
+        let stats = Arc::clone(&ctx.stats);
+        let inflight = Arc::clone(&inflight);
+        let max_body = ctx.opts.max_body_bytes;
+        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body))
+    };
+    let acked_shutdown = v2_reader_loop(&mut stream, ctx, &tx, &inflight, head, body);
+    drop(tx);
+    let _ = writer.join();
+    if acked_shutdown {
+        trigger_shutdown(&ctx.shutdown, ctx.addr);
+    }
+}
+
+/// Decode-and-dispatch loop of a downstream v2 connection. Returns true
+/// when it ended by acknowledging `Shutdown`.
+fn v2_reader_loop(
+    stream: &mut TcpStream,
+    ctx: &ConnCtx,
+    tx: &Sender<RouterMsg>,
+    inflight: &Arc<InFlight>,
+    mut head: RawHeader,
+    mut body: Vec<u8>,
+) -> bool {
+    let mut streams: HashMap<u16, PassThrough> = HashMap::new();
+    let mut poisoned: HashSet<u16> = HashSet::new();
+    let mut close_error: Option<(ErrorCode, String, u16)> = None;
+    let mut acked_shutdown = false;
+
+    let control = |corr: u16, frame: Frame| {
+        inflight.inc();
+        let _ = tx.send(RouterMsg::Control { corr, frame });
+    };
+    let stream_error = |corr: u16, msg: String| {
+        control(corr, Frame::Error { code: ErrorCode::Protocol, msg });
+    };
+    let soft = ctx.opts.max_inflight as u64;
+    let hard_cap = (2 * soft).max(soft + 64);
+
+    loop {
+        ServiceStats::bump(&ctx.stats.frames_in);
+        let corr = head.corr;
+        if inflight.current() > hard_cap {
+            close_error = Some((
+                ErrorCode::Busy,
+                format!("connection overloaded: {hard_cap}+ unread replies"),
+                corr,
+            ));
+            break;
+        }
+        if head.version != V2 {
+            close_error = Some((
+                ErrorCode::Protocol,
+                "protocol v1 frame on a v2-pinned connection".into(),
+                corr,
+            ));
+            break;
+        }
+        match head.ftype {
+            protocol::T_PROJECT => {
+                match protocol::decode_client_frame(head.version, head.ftype, &body) {
+                    Ok(Frame::Project(req)) => {
+                        ServiceStats::bump(&ctx.stats.requests_total);
+                        ServiceStats::bump(&ctx.stats.requests_pipelined);
+                        ServiceStats::add(
+                            &ctx.stats.payload_bytes_in,
+                            4 * req.payload.len() as u64,
+                        );
+                        let depth = inflight.inc();
+                        ServiceStats::raise(&ctx.stats.inflight_max, depth);
+                        if depth > ctx.opts.max_inflight as u64 {
+                            ServiceStats::bump(&ctx.stats.busy_rejections);
+                            let _ = tx.send(RouterMsg::Done {
+                                corr,
+                                result: Err(MlprojError::ServiceBusy),
+                            });
+                        } else {
+                            let job = ForwardJob {
+                                backend: route_req(&req, ctx.backends.len()),
+                                req,
+                                corr,
+                                reply: Some(tx.clone()),
+                            };
+                            // A Busy rejection already delivered a typed
+                            // error on this corr through the channel.
+                            if ctx.queue.try_push(job).is_err() {
+                                ServiceStats::bump(&ctx.stats.busy_rejections);
+                            }
+                        }
+                    }
+                    Ok(_) => unreachable!("T_PROJECT decodes to Frame::Project"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PROJECT_BEGIN => {
+                match protocol::decode_client_frame(head.version, head.ftype, &body) {
+                    Ok(Frame::ProjectBegin(info)) => {
+                        poisoned.remove(&corr);
+                        if streams.contains_key(&corr) {
+                            streams.remove(&corr);
+                            poisoned.insert(corr);
+                            stream_error(corr, format!("chunked stream {corr} is already open"));
+                        } else if streams.len() >= ctx.opts.max_streams {
+                            poisoned.insert(corr);
+                            stream_error(
+                                corr,
+                                format!(
+                                    "too many concurrent chunked streams (limit {})",
+                                    ctx.opts.max_streams
+                                ),
+                            );
+                        } else {
+                            let backend = route(&info.meta, ctx.backends.len());
+                            match open_pass_through(ctx, backend, &info) {
+                                Ok(pt) => {
+                                    ServiceStats::bump(&ctx.stats.chunked_streams_in);
+                                    ServiceStats::bump(&ctx.stats.relayed_streams);
+                                    streams.insert(corr, pt);
+                                }
+                                Err(e) => {
+                                    poisoned.insert(corr);
+                                    control(
+                                        corr,
+                                        Frame::Error {
+                                            code: ErrorCode::from_error(&e),
+                                            msg: format!("{e}"),
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    Ok(_) => unreachable!("T_PROJECT_BEGIN decodes to ProjectBegin"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PROJECT_CHUNK => {
+                if poisoned.contains(&corr) {
+                    // Remainder of a failed stream: swallow silently.
+                } else if let Some(pt) = streams.get_mut(&corr) {
+                    ServiceStats::add(&ctx.stats.chunked_bytes_in, body.len() as u64);
+                    // Forward the chunk bytes verbatim — no f32 decode,
+                    // no reassembly; the backend validates totals and
+                    // checksums exactly as if the client dialed it.
+                    if let Err(e) =
+                        protocol::write_chunk_bytes(&mut pt.upstream, UPSTREAM_CORR, &body)
+                    {
+                        let backend = pt.backend;
+                        streams.remove(&corr);
+                        poisoned.insert(corr);
+                        control(
+                            corr,
+                            Frame::Error {
+                                code: ErrorCode::Internal,
+                                msg: format!("backend {backend} lost mid-stream: {e}"),
+                            },
+                        );
+                    }
+                } else {
+                    poisoned.insert(corr);
+                    stream_error(corr, format!("chunk for unopened stream {corr}"));
+                }
+            }
+            protocol::T_PROJECT_END => {
+                match protocol::decode_client_frame(head.version, head.ftype, &body) {
+                    Ok(Frame::ProjectEnd { checksum }) => {
+                        if poisoned.remove(&corr) {
+                            // Failed stream fully drained; corr reusable.
+                        } else if let Some(mut pt) = streams.remove(&corr) {
+                            let end = Frame::ProjectEnd { checksum };
+                            match end.write_to_v2(&mut pt.upstream, UPSTREAM_CORR) {
+                                Ok(()) => {
+                                    // The upload is upstream in full; a
+                                    // relay thread reads the backend's
+                                    // reply and feeds the writer.
+                                    inflight.inc();
+                                    let (rtx, rrx) = std::sync::mpsc::sync_channel(8);
+                                    let _ = tx.send(RouterMsg::Relay { corr, rx: rrx });
+                                    let max_body = ctx.opts.max_body_bytes;
+                                    std::thread::spawn(move || {
+                                        relay_reply(pt.upstream, rtx, max_body)
+                                    });
+                                }
+                                Err(e) => {
+                                    let backend = pt.backend;
+                                    control(
+                                        corr,
+                                        Frame::Error {
+                                            code: ErrorCode::Internal,
+                                            msg: format!(
+                                                "backend {backend} lost mid-stream: {e}"
+                                            ),
+                                        },
+                                    );
+                                }
+                            }
+                        } else {
+                            stream_error(corr, format!("end for unopened stream {corr}"));
+                        }
+                    }
+                    Ok(_) => unreachable!("T_PROJECT_END decodes to ProjectEnd"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PING => control(
+                corr,
+                Frame::Pong { max_body: Some(ctx.opts.max_body_bytes as u64) },
+            ),
+            protocol::T_STATS_REQ => {
+                control(corr, Frame::StatsResponse(router_snapshot(&ctx.stats, &ctx.backends)))
+            }
+            protocol::T_SHUTDOWN => {
+                inflight.wait_zero();
+                control(corr, Frame::ShutdownAck);
+                acked_shutdown = true;
+                break;
+            }
+            _ => {
+                close_error =
+                    Some((ErrorCode::Protocol, "unexpected client frame".into(), corr));
+                break;
+            }
+        }
+        head = match protocol::read_raw_frame(stream, &mut body, ctx.opts.max_body_bytes) {
+            Ok(h) => h,
+            Err(MlprojError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                break;
+            }
+            Err(e) => {
+                close_error = Some((ErrorCode::from_error(&e), format!("{e}"), 0));
+                break;
+            }
+        };
+    }
+
+    if let Some((code, msg, corr)) = close_error {
+        control(corr, Frame::Error { code, msg });
+    }
+    acked_shutdown
+}
+
+/// Open a dedicated upstream connection for one chunked pass-through
+/// stream and send its `ProjectBegin`. Pass-through uploads cannot be
+/// replayed (the chunks are never buffered), so unlike whole-frame
+/// forwarding this path reports rather than retries a dead backend.
+fn open_pass_through(
+    ctx: &ConnCtx,
+    backend: usize,
+    info: &protocol::BeginInfo,
+) -> Result<PassThrough> {
+    let mut upstream = TcpStream::connect(ctx.backends[backend].addr())
+        .map_err(|e| MlprojError::Runtime(format!("backend {backend} unavailable: {e}")))?;
+    let _ = upstream.set_nodelay(true);
+    let begin = Frame::ProjectBegin(info.clone());
+    begin
+        .write_to_v2(&mut upstream, UPSTREAM_CORR)
+        .map_err(|e| MlprojError::Runtime(format!("backend {backend} rejected stream: {e}")))?;
+    Ok(PassThrough { upstream, backend })
+}
+
+/// Read one backend reply off a pass-through connection and ship it to
+/// the downstream writer frame by frame. Runs on its own thread; the
+/// bounded relay channel keeps router memory at a few chunks per stream.
+fn relay_reply(mut upstream: TcpStream, rtx: SyncSender<RelayEvent>, max_body: usize) {
+    let mut body = Vec::new();
+    let fail = |rtx: &SyncSender<RelayEvent>, msg: String| {
+        let _ = rtx.send(RelayEvent::Whole(Err(MlprojError::Runtime(msg))));
+    };
+    // First frame: a whole reply, a chunked-reply open, or an error.
+    let h = match protocol::read_raw_frame(&mut upstream, &mut body, max_body) {
+        Ok(h) => h,
+        Err(e) => return fail(&rtx, format!("backend reply lost: {e}")),
+    };
+    match protocol::decode_client_frame(h.version, h.ftype, &body) {
+        Ok(Frame::ProjectOk(payload)) => {
+            let _ = rtx.send(RelayEvent::Whole(Ok(payload)));
+        }
+        Ok(Frame::Error { code, msg }) => {
+            let _ = rtx.send(RelayEvent::Whole(Err(code.into_error(msg))));
+        }
+        Ok(Frame::ProjectOkBegin { total_elems, checksum }) => {
+            if rtx.send(RelayEvent::Begin { total_elems, checksum }).is_err() {
+                return;
+            }
+            loop {
+                let h = match protocol::read_raw_frame(&mut upstream, &mut body, max_body) {
+                    Ok(h) => h,
+                    Err(e) => return fail(&rtx, format!("backend reply lost: {e}")),
+                };
+                if h.ftype == protocol::T_PROJECT_CHUNK {
+                    if rtx.send(RelayEvent::Chunk(body.clone())).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                match protocol::decode_client_frame(h.version, h.ftype, &body) {
+                    Ok(Frame::ProjectEnd { checksum }) => {
+                        let _ = rtx.send(RelayEvent::End { checksum });
+                        return;
+                    }
+                    Ok(other) => {
+                        return fail(&rtx, format!("unexpected frame {other:?} in reply"))
+                    }
+                    Err(e) => return fail(&rtx, format!("backend reply lost: {e}")),
+                }
+            }
+        }
+        Ok(other) => fail(&rtx, format!("unexpected backend reply {other:?}")),
+        Err(e) => fail(&rtx, format!("backend reply undecodable: {e}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-spawned backends
+// ---------------------------------------------------------------------------
+
+/// Sizing for self-spawned backend `mlproj serve` processes.
+#[derive(Debug, Clone)]
+pub struct BackendSpawnOptions {
+    /// Scheduler workers per backend.
+    pub workers: usize,
+    /// `serve --queue-depth`.
+    pub queue_depth: usize,
+    /// `serve --batch-max`.
+    pub batch_max: usize,
+    /// `serve --cache-cap`.
+    pub cache_cap: usize,
+    /// `serve --exec-workers`.
+    pub exec_workers: usize,
+    /// `serve --max-body-bytes`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for BackendSpawnOptions {
+    fn default() -> Self {
+        BackendSpawnOptions {
+            workers: 2,
+            queue_depth: 64,
+            batch_max: 8,
+            cache_cap: 32,
+            exec_workers: 0,
+            max_body_bytes: protocol::MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// Spawn `count` backend `mlproj serve` processes on ephemeral loopback
+/// ports, parse each child's "listening on ADDR" banner for its address,
+/// and hand back `(addresses, children)`. `exe` is the `mlproj` binary —
+/// callers pass `std::env::current_exe()`. A `count` of zero returns
+/// empty vectors (and [`Router::bind`] then rejects the empty backend
+/// list) — never a silently-substituted backend.
+pub fn spawn_backends(
+    exe: &std::path::Path,
+    count: usize,
+    opts: &BackendSpawnOptions,
+) -> Result<(Vec<String>, Vec<Child>)> {
+    let mut addrs = Vec::with_capacity(count);
+    let mut children: Vec<Child> = Vec::with_capacity(count);
+    for i in 0..count {
+        let spawned = std::process::Command::new(exe)
+            .args([
+                "serve",
+                "--addr",
+                "127.0.0.1:0",
+                "--workers",
+                &opts.workers.to_string(),
+                "--queue-depth",
+                &opts.queue_depth.to_string(),
+                "--batch-max",
+                &opts.batch_max.to_string(),
+                "--cache-cap",
+                &opts.cache_cap.to_string(),
+                "--exec-workers",
+                &opts.exec_workers.to_string(),
+                "--max-body-bytes",
+                &opts.max_body_bytes.to_string(),
+            ])
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::piped())
+            .spawn();
+        let mut child = match spawned {
+            Ok(c) => c,
+            Err(e) => {
+                kill_children(&mut children);
+                return Err(MlprojError::Runtime(format!("spawning backend {i}: {e}")));
+            }
+        };
+        let stderr = child.stderr.take().expect("stderr was piped");
+        match read_listen_banner(stderr) {
+            Ok(addr) => addrs.push(addr),
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                kill_children(&mut children);
+                return Err(MlprojError::Runtime(format!(
+                    "backend {i} failed to start: {e}"
+                )));
+            }
+        }
+        children.push(child);
+    }
+    Ok((addrs, children))
+}
+
+fn kill_children(children: &mut Vec<Child>) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Read a child's stderr until its "listening on HOST:PORT" banner and
+/// return the address; a background thread then drains the rest of the
+/// pipe so the child can never block on a full stderr buffer.
+fn read_listen_banner(stderr: std::process::ChildStderr) -> Result<String> {
+    let mut reader = std::io::BufReader::new(stderr);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(MlprojError::Runtime(
+                "backend exited before announcing its address".into(),
+            ));
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            let addr = rest.split_whitespace().next().unwrap_or("").to_string();
+            if addr.is_empty() {
+                return Err(MlprojError::Protocol(format!("unparseable banner: {line}")));
+            }
+            std::thread::spawn(move || {
+                let mut sink = std::io::sink();
+                let _ = std::io::copy(&mut reader, &mut sink);
+            });
+            return Ok(addr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::matrix::Matrix;
+    use crate::core::rng::Rng;
+    use crate::projection::{Norm, ProjectionSpec};
+    use crate::service::protocol::WireLayout;
+    use crate::service::scheduler::SchedulerConfig;
+    use crate::service::server::Server;
+
+    fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
+        ProjectRequest {
+            norms: spec.norms.clone(),
+            eta: spec.eta,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Matrix,
+            shape: vec![y.rows(), y.cols()],
+            payload: y.data().to_vec(),
+        }
+    }
+
+    fn spawn_backends_in_process(n: usize) -> (Vec<String>, Vec<crate::service::ServerHandle>) {
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+            addrs.push(server.local_addr().to_string());
+            handles.push(server.spawn());
+        }
+        (addrs, handles)
+    }
+
+    #[test]
+    fn routing_is_stable_and_spreads_distinct_keys() {
+        let metas: Vec<ProjectMeta> = (1..=32)
+            .map(|i| ProjectMeta {
+                norms: vec![Norm::Linf, Norm::L1],
+                eta: i as f64,
+                l1_algo: crate::projection::l1::L1Algo::Condat,
+                method: crate::projection::Method::Compositional,
+                layout: WireLayout::Matrix,
+                shape: vec![8, i],
+            })
+            .collect();
+        let assignments: Vec<usize> = metas.iter().map(|m| route(m, 4)).collect();
+        // Deterministic.
+        assert_eq!(assignments, metas.iter().map(|m| route(m, 4)).collect::<Vec<_>>());
+        // Every backend sees some keys (32 distinct keys over 4 shards:
+        // an empty shard would mean the hash is degenerate).
+        for b in 0..4 {
+            assert!(assignments.contains(&b), "backend {b} got no keys");
+        }
+    }
+
+    #[test]
+    fn router_round_trips_v1_and_v2_bit_identically() {
+        let (addrs, backends) = spawn_backends_in_process(2);
+        let router = Router::bind("127.0.0.1:0", &addrs, RouterOptions::default()).unwrap();
+        let raddr = router.local_addr();
+        let rhandle = router.spawn();
+
+        let mut rng = Rng::new(91);
+        let spec = ProjectionSpec::l1inf(1.1);
+
+        // v1 lockstep through the router.
+        let mut v1 = Client::connect(raddr).unwrap();
+        for _ in 0..4 {
+            let y = Matrix::random_uniform(10, 14, -2.0, 2.0, &mut rng);
+            let expect = spec.project_matrix(&y).unwrap();
+            assert_eq!(v1.project_matrix(&spec, &y).unwrap().data(), expect.data());
+        }
+
+        // v2 pipelined through the router.
+        let mut conn = crate::service::PipelinedConn::connect(raddr).unwrap();
+        conn.ping().unwrap();
+        let mut expected = std::collections::HashMap::new();
+        for i in 0..6 {
+            let y = Matrix::random_uniform(6 + i, 9, -2.0, 2.0, &mut rng);
+            let corr = conn.submit(&wire_request(&spec, &y)).unwrap();
+            expected.insert(corr, spec.project_matrix(&y).unwrap().data().to_vec());
+        }
+        while conn.in_flight() > 0 {
+            let (corr, result) = conn.recv().unwrap();
+            assert_eq!(result.unwrap(), expected.remove(&corr).unwrap());
+        }
+        assert!(expected.is_empty());
+
+        // Router stats surface the routed traffic and the backend count.
+        let stats = v1.stats().unwrap();
+        let get = |n: &str| stats.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0);
+        assert_eq!(get("router_backends"), 2);
+        assert_eq!(get("routed_requests"), 10);
+        assert_eq!(get("responses_ok"), 10);
+
+        v1.shutdown().unwrap();
+        rhandle.join().unwrap();
+        for h in backends {
+            let mut ctl = Client::connect(h.addr()).unwrap();
+            ctl.shutdown().unwrap();
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn chunked_streams_pass_through_the_router_past_the_body_cap() {
+        use crate::service::server::ServeOptions;
+        // Backends and router both capped at 16 KiB: a 32 KiB payload
+        // must travel chunked end to end (client → router → backend and
+        // back), never reassembled in router memory.
+        let cap = 16 * 1024;
+        let mut addrs = Vec::new();
+        let mut backends = Vec::new();
+        for _ in 0..2 {
+            let server = Server::bind_with(
+                "127.0.0.1:0",
+                &SchedulerConfig::default(),
+                ServeOptions { max_body_bytes: cap, ..ServeOptions::default() },
+            )
+            .unwrap();
+            addrs.push(server.local_addr().to_string());
+            backends.push(server.spawn());
+        }
+        let opts = RouterOptions { max_body_bytes: cap, ..RouterOptions::default() };
+        let router = Router::bind("127.0.0.1:0", &addrs, opts).unwrap();
+        let raddr = router.local_addr();
+        let rhandle = router.spawn();
+
+        let mut rng = Rng::new(92);
+        let y = Matrix::random_uniform(64, 128, -2.0, 2.0, &mut rng); // 32 KiB
+        let spec = ProjectionSpec::l1inf(1.4);
+        let expect = spec.project_matrix(&y).unwrap();
+
+        let mut conn = crate::service::PipelinedConn::connect(raddr).unwrap();
+        conn.ping().unwrap(); // negotiates the 16 KiB threshold
+        assert_eq!(conn.chunk_threshold(), cap);
+        let corr = conn.submit(&wire_request(&spec, &y)).unwrap();
+        let (got, result) = conn.recv().unwrap();
+        assert_eq!(got, corr);
+        assert_eq!(result.unwrap(), expect.data());
+
+        let mut ctl = Client::connect(raddr).unwrap();
+        let stats = ctl.stats().unwrap();
+        let get = |n: &str| stats.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0);
+        assert_eq!(get("relayed_streams"), 1);
+        assert!(get("chunked_streams_out") >= 1);
+
+        ctl.shutdown().unwrap();
+        rhandle.join().unwrap();
+        for h in backends {
+            let mut ctl = Client::connect(h.addr()).unwrap();
+            ctl.shutdown().unwrap();
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn router_clamps_its_advertised_cap_to_the_tightest_backend() {
+        use crate::service::server::ServeOptions;
+        // One backend at 16 KiB, one at the default: a router bound with
+        // DEFAULT options must advertise (and enforce) the tightest hop,
+        // or pass-through chunks it accepted would bounce off a backend.
+        let small = Server::bind_with(
+            "127.0.0.1:0",
+            &SchedulerConfig::default(),
+            ServeOptions { max_body_bytes: 16 * 1024, ..ServeOptions::default() },
+        )
+        .unwrap();
+        let big = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addrs = vec![small.local_addr().to_string(), big.local_addr().to_string()];
+        let (sh, bh) = (small.spawn(), big.spawn());
+
+        let router = Router::bind("127.0.0.1:0", &addrs, RouterOptions::default()).unwrap();
+        let raddr = router.local_addr();
+        let rhandle = router.spawn();
+
+        let mut conn = crate::service::PipelinedConn::connect(raddr).unwrap();
+        conn.ping().unwrap();
+        assert_eq!(conn.server_max_body(), Some(16 * 1024), "clamped to the small backend");
+
+        let mut ctl = Client::connect(raddr).unwrap();
+        ctl.shutdown().unwrap();
+        rhandle.join().unwrap();
+        for (h, a) in [sh, bh].into_iter().zip(addrs) {
+            let mut c = Client::connect(a.as_str()).unwrap();
+            c.shutdown().unwrap();
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn router_requires_at_least_one_backend() {
+        assert!(Router::bind("127.0.0.1:0", &[], RouterOptions::default()).is_err());
+    }
+}

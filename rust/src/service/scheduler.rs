@@ -118,6 +118,53 @@ impl ReplySlot {
     }
 }
 
+/// Per-connection free list of payload vectors for the pipelined (v2)
+/// request path.
+///
+/// v1's lockstep loop recycles one payload buffer trivially; v2 has many
+/// requests in flight, so buffers cycle through a shared pool instead:
+/// the reader *takes* a buffer to decode each request's payload into,
+/// the buffer travels through the scheduler (projected in place) back to
+/// the connection's writer, and the writer *puts* it back after the
+/// reply bytes hit the socket. Warm traffic therefore reuses the same
+/// payload allocations instead of allocating one vector per request
+/// (pinned by `tests/operator_alloc.rs`).
+///
+/// Bounded: at most `cap` buffers are retained (excess are dropped), so
+/// a burst does not pin its high-water memory forever.
+#[derive(Debug)]
+pub struct PayloadPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+    cap: usize,
+}
+
+impl PayloadPool {
+    /// Shared pool retaining at most `cap` spare buffers.
+    pub fn new(cap: usize) -> Arc<PayloadPool> {
+        Arc::new(PayloadPool { bufs: Mutex::new(Vec::new()), cap: cap.max(1) })
+    }
+
+    /// Pop a spare buffer (empty, capacity from its previous life) or a
+    /// fresh empty vector.
+    pub fn take(&self) -> Vec<f32> {
+        self.bufs.lock().expect("payload pool poisoned").pop().unwrap_or_default()
+    }
+
+    /// Return a spent buffer to the pool (cleared; dropped past the cap).
+    pub fn put(&self, mut buf: Vec<f32>) {
+        buf.clear();
+        let mut bufs = self.bufs.lock().expect("payload pool poisoned");
+        if bufs.len() < self.cap {
+            bufs.push(buf);
+        }
+    }
+
+    /// Spare buffers currently pooled.
+    pub fn spare(&self) -> usize {
+        self.bufs.lock().expect("payload pool poisoned").len()
+    }
+}
+
 /// One completed-request message on a pipelined connection's reply
 /// channel: scheduler workers send `Project` results, the connection's
 /// reader sends `Control` frames (Pong, StatsResponse, ShutdownAck); a
@@ -488,6 +535,23 @@ mod tests {
             layout: WireLayout::Tensor,
             shape,
         }
+    }
+
+    #[test]
+    fn payload_pool_recycles_and_bounds_buffers() {
+        let pool = PayloadPool::new(2);
+        assert_eq!(pool.take(), Vec::<f32>::new());
+        let mut a = Vec::with_capacity(64);
+        a.extend_from_slice(&[1.0f32; 8]);
+        pool.put(a);
+        let b = pool.take();
+        assert!(b.is_empty(), "pooled buffers come back cleared");
+        assert!(b.capacity() >= 64, "pooled buffers keep their capacity");
+        // The cap bounds retention.
+        pool.put(vec![0.0; 4]);
+        pool.put(vec![0.0; 4]);
+        pool.put(vec![0.0; 4]);
+        assert_eq!(pool.spare(), 2);
     }
 
     #[test]

@@ -41,7 +41,9 @@ use crate::service::cache::PlanKey;
 use crate::service::protocol::{
     self, ChunkAssembler, ErrorCode, Frame, ProjectMeta, RawHeader, ServerFrame, V1, V2,
 };
-use crate::service::scheduler::{ConnReply, Job, ReplySlot, Scheduler, SchedulerConfig};
+use crate::service::scheduler::{
+    ConnReply, Job, PayloadPool, ReplySlot, Scheduler, SchedulerConfig,
+};
 use crate::service::stats::ServiceStats;
 
 /// Server-side wire limits (distinct from the scheduler's sizing knobs).
@@ -202,8 +204,9 @@ impl ServerHandle {
 
 /// Flip the shutdown flag and dial the listener once so the accept loop
 /// observes it. A wildcard bind (0.0.0.0 / ::) is not connectable on
-/// every platform — dial loopback on the same port.
-fn trigger_shutdown(shutdown: &AtomicBool, addr: SocketAddr) {
+/// every platform — dial loopback on the same port. (Shared with the
+/// router, whose accept loop has the same shape.)
+pub(crate) fn trigger_shutdown(shutdown: &AtomicBool, addr: SocketAddr) {
     shutdown.store(true, Ordering::Release);
     let mut wake = addr;
     if wake.ip().is_unspecified() {
@@ -318,7 +321,11 @@ fn serve_v1(
                     }
                 }
             }
-            ServerFrame::Other(Frame::Ping) => Some(Frame::Pong),
+            ServerFrame::Other(Frame::Ping) => {
+                // Advertise the body cap so clients can auto-set their
+                // chunk threshold (cap negotiation).
+                Some(Frame::Pong { max_body: Some(opts.max_body_bytes as u64) })
+            }
             ServerFrame::Other(Frame::StatsRequest) => {
                 Some(Frame::StatsResponse(stats.snapshot()))
             }
@@ -420,6 +427,7 @@ fn conn_writer(
     stats: Arc<ServiceStats>,
     inflight: Arc<InFlight>,
     max_body: usize,
+    pool: Arc<PayloadPool>,
 ) {
     let mut dead = false;
     for msg in rx {
@@ -444,6 +452,10 @@ fn conn_writer(
                             };
                             dead = res.is_err();
                         }
+                        // The reply bytes are on the socket; the buffer
+                        // goes back to the connection's pool so the
+                        // reader can decode the next request into it.
+                        pool.put(projected);
                     }
                     Err(e) => {
                         ServiceStats::bump(&stats.responses_err);
@@ -488,11 +500,16 @@ fn serve_v2(
     };
     let (tx, rx) = std::sync::mpsc::channel::<ConnReply>();
     let inflight = Arc::new(InFlight::default());
+    // Payload buffers cycle reader → scheduler → writer → back here, so
+    // warm pipelined traffic decodes into recycled vectors (the v2
+    // counterpart of v1's single recycled payload buffer).
+    let pool = PayloadPool::new(opts.max_inflight.min(32));
     let writer = {
         let stats = Arc::clone(stats);
         let inflight = Arc::clone(&inflight);
         let max_body = opts.max_body_bytes;
-        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body))
+        let pool = Arc::clone(&pool);
+        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body, pool))
     };
 
     // The reader loop borrows `tx` through its helper closures; it runs
@@ -500,7 +517,7 @@ fn serve_v2(
     // writer exits once the last sender — ours or a pending job's — is
     // gone).
     let acked_shutdown =
-        v2_reader_loop(&mut stream, scheduler, stats, opts, &tx, &inflight, head, body);
+        v2_reader_loop(&mut stream, scheduler, stats, opts, &tx, &inflight, &pool, head, body);
     // Close our sender; the writer drains whatever the scheduler still
     // owes (jobs hold their own sender clones) and exits when the last
     // one finishes — so joining here is exactly "all replies flushed".
@@ -521,6 +538,7 @@ fn v2_reader_loop(
     opts: &ServeOptions,
     tx: &Sender<ConnReply>,
     inflight: &Arc<InFlight>,
+    pool: &Arc<PayloadPool>,
     mut head: RawHeader,
     mut body: Vec<u8>,
 ) -> bool {
@@ -592,7 +610,9 @@ fn v2_reader_loop(
         }
         match head.ftype {
             protocol::T_PROJECT => {
-                let mut payload = Vec::new();
+                // Recycled buffer from the connection's pool (returned by
+                // the writer once the reply is flushed).
+                let mut payload = pool.take();
                 match protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload)
                 {
                     Ok(ServerFrame::Project(meta)) => submit(meta, payload, corr),
@@ -703,7 +723,9 @@ fn v2_reader_loop(
                     }
                 }
             }
-            protocol::T_PING => control(corr, Frame::Pong),
+            protocol::T_PING => {
+                control(corr, Frame::Pong { max_body: Some(opts.max_body_bytes as u64) })
+            }
             protocol::T_STATS_REQ => control(corr, Frame::StatsResponse(stats.snapshot())),
             protocol::T_SHUTDOWN => {
                 // Drain every in-flight request (their replies are
@@ -742,6 +764,12 @@ fn v2_reader_loop(
 mod tests {
     use super::*;
 
+    /// The Pong a default-options server answers with: it advertises the
+    /// protocol-wide body cap.
+    fn default_pong() -> Frame {
+        Frame::Pong { max_body: Some(protocol::MAX_BODY_BYTES as u64) }
+    }
+
     #[test]
     fn ping_stats_shutdown_over_tcp() {
         let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
@@ -749,7 +777,7 @@ mod tests {
         let mut stream = TcpStream::connect(handle.addr()).unwrap();
 
         Frame::Ping.write_to(&mut stream).unwrap();
-        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::Pong);
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), default_pong());
 
         Frame::StatsRequest.write_to(&mut stream).unwrap();
         match Frame::read_from(&mut stream).unwrap() {
@@ -774,7 +802,7 @@ mod tests {
         // handler is provably blocked in a frame read.
         let mut idle = TcpStream::connect(addr).unwrap();
         Frame::Ping.write_to(&mut idle).unwrap();
-        assert_eq!(Frame::read_from(&mut idle).unwrap(), Frame::Pong);
+        assert_eq!(Frame::read_from(&mut idle).unwrap(), default_pong());
 
         let mut ctl = TcpStream::connect(addr).unwrap();
         Frame::Shutdown.write_to(&mut ctl).unwrap();
@@ -821,7 +849,7 @@ mod tests {
         assert_eq!((h.version, h.corr), (V2, 77));
         assert_eq!(
             protocol::decode_client_frame(h.version, h.ftype, &body).unwrap(),
-            Frame::Pong
+            default_pong()
         );
 
         // A v1 frame on the now-v2-pinned connection is a protocol error.
@@ -855,7 +883,7 @@ mod tests {
 
         let mut stream = TcpStream::connect(addr).unwrap();
         Frame::Ping.write_to(&mut stream).unwrap(); // pins v1
-        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::Pong);
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), default_pong());
         Frame::Ping.write_to_v2(&mut stream, 1).unwrap();
         match Frame::read_from(&mut stream).unwrap() {
             Frame::Error { code: ErrorCode::Protocol, msg } => {

@@ -53,6 +53,11 @@ pub struct ServiceStats {
     pub chunked_bytes_in: AtomicU64,
     /// Chunked streams rejected for a checksum mismatch on `ProjectEnd`.
     pub checksum_failures: AtomicU64,
+    /// Router only: projection requests forwarded to a backend process.
+    pub routed_requests: AtomicU64,
+    /// Router only: chunked streams passed through to a backend frame by
+    /// frame (never reassembled in router memory).
+    pub relayed_streams: AtomicU64,
 }
 
 impl ServiceStats {
@@ -105,6 +110,8 @@ impl ServiceStats {
             ("chunked_streams_out".into(), ld(&self.chunked_streams_out)),
             ("chunked_bytes_in".into(), ld(&self.chunked_bytes_in)),
             ("checksum_failures".into(), ld(&self.checksum_failures)),
+            ("routed_requests".into(), ld(&self.routed_requests)),
+            ("relayed_streams".into(), ld(&self.relayed_streams)),
         ]
     }
 }

@@ -188,6 +188,66 @@ fn warm_batch_projects_without_heap_allocation() {
 }
 
 #[test]
+fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
+    // The pipelined (v2) request path used to allocate one payload
+    // vector per request; with the per-connection PayloadPool the warm
+    // cycle — take a pooled buffer, decode the frame into it, return it
+    // after the reply — touches the allocator only for the (tiny) spec
+    // header, exactly like v1's single recycled buffer.
+    use mlproj::projection::l1::L1Algo;
+    use mlproj::projection::Method;
+    use mlproj::service::protocol::{
+        decode_server_frame, read_raw_frame, Frame, MAX_BODY_BYTES,
+    };
+    use mlproj::service::{PayloadPool, ProjectRequest, WireLayout};
+
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(48);
+    let mut payload = vec![0.0f32; 16 * 24];
+    rng.fill_uniform(&mut payload, -1.0, 1.0);
+    let req = ProjectRequest {
+        norms: vec![Norm::Linf, Norm::L1],
+        eta: 1.0,
+        l1_algo: L1Algo::Condat,
+        method: Method::Compositional,
+        layout: WireLayout::Matrix,
+        shape: vec![16, 24],
+        payload,
+    };
+    let bytes = Frame::Project(req).encode_v2(1).unwrap();
+    let pool = PayloadPool::new(4);
+    let mut body = Vec::new();
+
+    let mut cycle = |pooled: bool| -> u64 {
+        let before = alloc_calls();
+        let mut cursor = std::io::Cursor::new(&bytes[..]);
+        let h = read_raw_frame(&mut cursor, &mut body, MAX_BODY_BYTES).unwrap();
+        let mut buf = if pooled { pool.take() } else { Vec::new() };
+        decode_server_frame(h.version, h.ftype, &body, &mut buf).unwrap();
+        assert_eq!(buf.len(), 16 * 24);
+        pool.put(buf);
+        alloc_calls() - before
+    };
+
+    // Warm-up: grows the receive buffer and seeds the pool with one
+    // full-size payload buffer.
+    cycle(true);
+
+    let pooled = cycle(true);
+    let fresh = cycle(false);
+    assert!(
+        pooled <= 2,
+        "warm pooled v2 decode made {pooled} allocations \
+         (budget: the two spec-header vectors)"
+    );
+    assert!(
+        fresh > pooled,
+        "a fresh payload vector must cost extra ({fresh} vs {pooled}) — \
+         otherwise the pool pins nothing"
+    );
+}
+
+#[test]
 fn warm_scheduler_batch_executes_without_heap_allocation() {
     // The full service execution path: run_batch with a warm plan cache
     // moves each job's payload out, projects the whole batch in one

@@ -42,6 +42,8 @@ fn sample_request() -> ProjectRequest {
 fn sample_frames() -> Vec<Vec<u8>> {
     let v1_frames = vec![
         Frame::Ping,
+        Frame::Pong { max_body: None },
+        Frame::Pong { max_body: Some(65536) },
         Frame::Project(sample_request()),
         Frame::ProjectOk(vec![1.0, -2.0, 0.5]),
         Frame::Error { code: ErrorCode::Invalid, msg: "η mismatch ✓".into() },

@@ -1,4 +1,5 @@
-//! Seeded randomized differential testing of the operator layer.
+//! Seeded randomized differential testing of the operator layer and the
+//! service wire path.
 //!
 //! Every `ProjectionSpec` plan must be **bit-for-bit** identical to a
 //! naive reference recursion (built from the same shared primitives —
@@ -8,26 +9,43 @@
 //!
 //! * random shapes (rank 1–3), radii (including 0 and in-ball), norm
 //!   stacks, and ℓ1 threshold algorithms;
+//! * every `Method` variant — compositional plus the exact baselines
+//!   (`ExactNewton`, `ExactSortScan`, `ExactFlatL1`), referenced against
+//!   the legacy exact kernels;
 //! * the `Serial` and `Pool` execution backends (the paper's Prop. 6.4
 //!   parallel decomposition is aggregation-order-invariant by design,
 //!   so pooling may not change a single bit);
 //! * single-payload `project_inplace` vs `project_batch_inplace` for
-//!   batches of 1–3 (the service's cross-request batching).
+//!   batches of 1–3 (the service's cross-request batching);
+//! * **live wire traffic**: the same seeded generator drives a real
+//!   `mlproj serve` instance — and a 2-backend `mlproj router` — over
+//!   mixed v1 lockstep, v2 pipelined, and v2 chunked submissions, and
+//!   every reply must be bit-identical to the in-process plan result.
 //!
 //! Deterministic: the master seed is fixed (override with
 //! `MLPROJ_DIFF_SEED=<u64>`), each case derives its own seed from it,
 //! and every assertion message prints the case seed so a failure
 //! reproduces in isolation.
 
+use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
 use mlproj::core::sort::{l1_norm, l2_norm, max_abs};
 use mlproj::core::tensor::Tensor;
 use mlproj::projection::l1::{project_l1_inplace_with, L1Algo};
+use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
 use mlproj::projection::norms::aggregate_leading_norm;
-use mlproj::projection::{ExecBackend, Norm, ProjectionSpec};
+use mlproj::projection::{ExecBackend, Method, Norm, ProjectionSpec};
+use mlproj::service::{
+    Client, PipelinedConn, ProjectRequest, Router, RouterOptions, SchedulerConfig, Server,
+    WireLayout,
+};
 
 const CASES: usize = 200;
+/// Wire cases per target (server, router): fewer than the in-process run
+/// — every case costs real socket round trips.
+const WIRE_CASES: usize = 60;
 const DEFAULT_MASTER_SEED: u64 = 0x6D6C_7072_6F6A_0004;
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
 
 fn master_seed() -> u64 {
     std::env::var("MLPROJ_DIFF_SEED")
@@ -46,6 +64,7 @@ struct Case {
     norms: Vec<Norm>,
     eta: f64,
     algo: L1Algo,
+    method: Method,
     /// Compile through `compile_for_matrix` (column-major bi-level
     /// kernel) instead of the row-major tensor path.
     matrix_layout: bool,
@@ -62,13 +81,41 @@ fn draw_case(rng: &mut Rng) -> Case {
         (0..rank).map(|_| 1 + rng.below(7)).collect()
     };
     let flat = rank == 1 || rng.bernoulli(0.2);
-    let norms: Vec<Norm> = if flat {
+    let mut norms: Vec<Norm> = if flat {
         vec![NORMS[rng.below(3)]]
     } else {
         (0..rank).map(|_| NORMS[rng.below(3)]).collect()
     };
-    let matrix_layout = rank == 2 && !flat && rng.bernoulli(0.5);
+    let mut matrix_layout = rank == 2 && !flat && rng.bernoulli(0.5);
     let algo = ALGOS[rng.below(3)];
+    // Method: mostly compositional; the exact baselines are drawn onto
+    // the spec shapes they support (the norm stack is forced to match,
+    // keeping every generated case compile-valid).
+    let method = match rng.below(10) {
+        0 | 1 if rank == 2 => {
+            // Exact Euclidean ℓ1,∞ requires ν = [linf, l1] + matrix.
+            matrix_layout = true;
+            norms = vec![Norm::Linf, Norm::L1];
+            if rng.bernoulli(0.5) {
+                Method::ExactNewton
+            } else {
+                Method::ExactSortScan
+            }
+        }
+        2 => {
+            // Exact flat ℓ1 requires ν = [l1, l1] (or a single [l1]) —
+            // and the two-norm form only compiles against rank-2 shapes
+            // (norm count is validated against the rank first), so
+            // higher-rank draws take the flat single-norm form.
+            norms = if norms.len() == 2 {
+                vec![Norm::L1, Norm::L1]
+            } else {
+                vec![Norm::L1]
+            };
+            Method::ExactFlatL1
+        }
+        _ => Method::Compositional,
+    };
     let eta = match rng.below(6) {
         0 => 0.0,              // project everything to the origin
         1 => 1e6,              // in-ball: the projection is the identity
@@ -87,7 +134,7 @@ fn draw_case(rng: &mut Rng) -> Case {
         })
         .collect();
     let pool_workers = 1 + rng.below(3);
-    Case { shape, norms, eta, algo, matrix_layout, batch, pool_workers, payloads }
+    Case { shape, norms, eta, algo, method, matrix_layout, batch, pool_workers, payloads }
 }
 
 // ---------------------------------------------------------------------------
@@ -214,6 +261,26 @@ fn reference_bilevel_colmajor(
 }
 
 fn reference_project(case: &Case, payload: &[f32]) -> Vec<f32> {
+    // Exact methods: the legacy standalone kernels are the reference
+    // (the compiled plan must route to byte-identical arithmetic).
+    match case.method {
+        Method::ExactNewton | Method::ExactSortScan => {
+            let y = Matrix::from_col_major(case.shape[0], case.shape[1], payload.to_vec())
+                .expect("reference matrix");
+            let x = if case.method == Method::ExactNewton {
+                project_l1inf_newton(&y, case.eta)
+            } else {
+                project_l1inf_sortscan(&y, case.eta)
+            };
+            return x.data().to_vec();
+        }
+        Method::ExactFlatL1 => {
+            let mut x = payload.to_vec();
+            project_l1_inplace_with(&mut x, case.eta, case.algo);
+            return x;
+        }
+        Method::Compositional => {}
+    }
     if case.norms.len() == 1 {
         let mut x = payload.to_vec();
         case.norms[0].project_with(&mut x, case.eta, case.algo);
@@ -242,6 +309,7 @@ fn reference_project(case: &Case, payload: &[f32]) -> Vec<f32> {
 fn compile(case: &Case, backend: ExecBackend) -> mlproj::projection::ProjectionPlan {
     let spec = ProjectionSpec::new(case.norms.clone(), case.eta)
         .with_l1_algo(case.algo)
+        .with_method(case.method)
         .with_backend(backend);
     if case.matrix_layout {
         spec.compile_for_matrix(case.shape[0], case.shape[1])
@@ -255,16 +323,17 @@ fn compile(case: &Case, backend: ExecBackend) -> mlproj::projection::ProjectionP
 fn plans_match_naive_reference_across_backends_and_batching() {
     let master = master_seed();
     for i in 0..CASES {
-        let case_seed = master ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let case_seed = master ^ (i as u64).wrapping_mul(GOLDEN);
         let mut rng = Rng::new(case_seed);
         let case = draw_case(&mut rng);
         let ctx = format!(
             "case {i} (seed {case_seed}, master {master}): shape {:?} norms {:?} \
-             η={} {:?} layout={} batch={} pool={}",
+             η={} {:?} {:?} layout={} batch={} pool={}",
             case.shape,
             case.norms,
             case.eta,
             case.algo,
+            case.method,
             if case.matrix_layout { "matrix" } else { "tensor" },
             case.batch,
             case.pool_workers,
@@ -305,17 +374,20 @@ fn plans_match_naive_reference_across_backends_and_batching() {
 #[test]
 fn differential_cases_cover_the_spec_space() {
     // Guard against a silent generator regression: across the deterministic
-    // default-seed run, every rank, every algorithm, both layouts, batches
-    // > 1, and degenerate radii must all actually appear. (Always the
-    // default seed — an MLPROJ_DIFF_SEED override must not fail coverage.)
+    // default-seed run, every rank, every algorithm, every Method variant,
+    // both layouts, batches > 1, and degenerate radii must all actually
+    // appear. (Always the default seed — an MLPROJ_DIFF_SEED override must
+    // not fail coverage.)
     let master = DEFAULT_MASTER_SEED;
     let (mut ranks, mut algos, mut matrix, mut batched, mut eta0, mut inball) =
         (std::collections::HashSet::new(), std::collections::HashSet::new(), 0, 0, 0, 0);
+    let mut methods: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
     for i in 0..CASES {
-        let case_seed = master ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let case_seed = master ^ (i as u64).wrapping_mul(GOLDEN);
         let case = draw_case(&mut Rng::new(case_seed));
         ranks.insert(case.shape.len());
         algos.insert(format!("{:?}", case.algo));
+        *methods.entry(format!("{:?}", case.method)).or_insert(0) += 1;
         matrix += case.matrix_layout as usize;
         batched += (case.batch > 1) as usize;
         eta0 += (case.eta == 0.0) as usize;
@@ -323,8 +395,160 @@ fn differential_cases_cover_the_spec_space() {
     }
     assert_eq!(ranks, [1, 2, 3].into_iter().collect());
     assert_eq!(algos.len(), 3);
+    // No Method variant may silently drop out of the generator.
+    for variant in ["Compositional", "ExactNewton", "ExactSortScan", "ExactFlatL1"] {
+        let count = methods.get(variant).copied().unwrap_or(0);
+        assert!(count >= 3, "method {variant} appeared only {count} times: {methods:?}");
+    }
+    assert!(
+        methods["Compositional"] > CASES / 2,
+        "compositional must stay the dominant draw: {methods:?}"
+    );
     assert!(matrix > 10, "matrix-layout cases: {matrix}");
     assert!(batched > 50, "batched cases: {batched}");
     assert!(eta0 > 5, "η=0 cases: {eta0}");
     assert!(inball > 5, "in-ball cases: {inball}");
+}
+
+// ---------------------------------------------------------------------------
+// Live wire traffic: the same generator drives real sockets
+// ---------------------------------------------------------------------------
+
+fn case_to_request(case: &Case, payload: &[f32]) -> ProjectRequest {
+    ProjectRequest {
+        norms: case.norms.clone(),
+        eta: case.eta,
+        l1_algo: case.algo,
+        method: case.method,
+        layout: if case.matrix_layout { WireLayout::Matrix } else { WireLayout::Tensor },
+        shape: case.shape.clone(),
+        payload: payload.to_vec(),
+    }
+}
+
+/// Drive `WIRE_CASES` seeded random cases at a live service address over
+/// mixed submission modes — v1 lockstep, v2 pipelined bursts, v2 chunked
+/// streams — asserting every reply bit-identical to the in-process plan
+/// result. Failure messages carry the reproducing case seed.
+fn drive_wire_traffic(addr: &str, label: &str, salt: u64) {
+    let master = master_seed();
+    let mut v1 = Client::connect(addr).expect("v1 connect");
+    let mut conn = PipelinedConn::connect(addr).expect("v2 connect");
+    conn.ping().expect("v2 ping");
+    for i in 0..WIRE_CASES {
+        let case_seed = master ^ salt ^ (i as u64).wrapping_mul(GOLDEN);
+        let mut rng = Rng::new(case_seed);
+        let case = draw_case(&mut rng);
+        let ctx = format!(
+            "{label} wire case {i} (seed {case_seed}, salt {salt:#x}, master {master}): \
+             shape {:?} norms {:?} η={} {:?} {:?} layout={}",
+            case.shape,
+            case.norms,
+            case.eta,
+            case.algo,
+            case.method,
+            if case.matrix_layout { "matrix" } else { "tensor" },
+        );
+
+        // In-process ground truth through the exact service plan path.
+        let mut plan = compile(&case, ExecBackend::Serial);
+        let expected: Vec<Vec<f32>> = case
+            .payloads
+            .iter()
+            .map(|p| {
+                let mut x = p.clone();
+                plan.project_inplace(&mut x).expect(&ctx);
+                x
+            })
+            .collect();
+
+        match rng.below(3) {
+            0 => {
+                // v1 lockstep round trips.
+                for (b, (payload, want)) in case.payloads.iter().zip(&expected).enumerate() {
+                    let got = v1.project(case_to_request(&case, payload)).expect(&ctx);
+                    assert_eq!(&got, want, "v1 lockstep payload {b}: {ctx}");
+                }
+            }
+            1 => {
+                // v2 pipelined burst: submit the whole batch, then drain
+                // replies in whatever completion order the server picks.
+                let mut pending = std::collections::HashMap::new();
+                for (b, payload) in case.payloads.iter().enumerate() {
+                    let corr = conn.submit(&case_to_request(&case, payload)).expect(&ctx);
+                    pending.insert(corr, b);
+                }
+                while conn.in_flight() > 0 {
+                    let (corr, result) = conn.recv().expect(&ctx);
+                    let b = pending.remove(&corr).unwrap_or_else(|| {
+                        panic!("untracked correlation id {corr}: {ctx}")
+                    });
+                    assert_eq!(result.expect(&ctx), expected[b], "v2 payload {b}: {ctx}");
+                }
+                assert!(pending.is_empty(), "{ctx}");
+            }
+            _ => {
+                // Forced chunked uploads with a random (tiny) chunk size.
+                let chunk_elems = 1 + rng.below(97);
+                for (b, (payload, want)) in case.payloads.iter().zip(&expected).enumerate() {
+                    let corr = conn
+                        .submit_chunked(&case_to_request(&case, payload), chunk_elems)
+                        .expect(&ctx);
+                    let (got, result) = conn.recv().expect(&ctx);
+                    assert_eq!(got, corr, "{ctx}");
+                    assert_eq!(result.expect(&ctx), *want, "chunked payload {b}: {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_traffic_matches_in_process_plans() {
+    let cfg = SchedulerConfig { workers: 2, queue_depth: 256, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    drive_wire_traffic(&addr.to_string(), "server", 0x5EA1);
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn wire_traffic_through_the_router_matches_in_process_plans() {
+    // The same randomized stream, but through a router fronting two
+    // backend server processes (in-process here; tests/router.rs covers
+    // separate OS processes): sharding + forwarding + pass-through must
+    // not change a single reply bit.
+    let mut backend_addrs = Vec::new();
+    let mut backends = Vec::new();
+    for _ in 0..2 {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        backend_addrs.push(server.local_addr().to_string());
+        backends.push(server.spawn());
+    }
+    let router =
+        Router::bind("127.0.0.1:0", &backend_addrs, RouterOptions::default()).unwrap();
+    let raddr = router.local_addr();
+    let rhandle = router.spawn();
+
+    drive_wire_traffic(&raddr.to_string(), "router", 0x2077);
+
+    // The randomized keyspace must actually have exercised the sharding.
+    let mut ctl = Client::connect(raddr).unwrap();
+    let stats = ctl.stats().unwrap();
+    let get = |n: &str| stats.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0);
+    assert!(get("routed_requests") > 0, "{stats:?}");
+    assert_eq!(get("router_backends"), 2);
+
+    ctl.shutdown().unwrap();
+    rhandle.join().unwrap();
+    for h in backends {
+        let mut c = Client::connect(h.addr()).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
 }

@@ -1,0 +1,280 @@
+//! End-to-end tests for the sharded multi-process router.
+//!
+//! The acceptance bar: one seeded request stream must produce
+//! **bit-identical** results sent (a) direct to a single server and
+//! (b) through a router fronting ≥ 2 backend processes — including a
+//! backend killed and replaced mid-stream, recovered via the upstream
+//! pool's reconnect-and-retry without corrupting any in-flight
+//! correlation id. A separate test drives real spawned `mlproj serve`
+//! OS processes through the `spawn_backends` path the CLI uses.
+
+use std::collections::HashMap;
+
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::core::MlprojError;
+use mlproj::projection::ProjectionSpec;
+use mlproj::service::{
+    spawn_backends, BackendSpawnOptions, Client, PipelinedConn, ProjectRequest, Router,
+    RouterOptions, SchedulerConfig, Server, WireLayout,
+};
+
+fn stat(pairs: &[(String, u64)], name: &str) -> u64 {
+    pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+}
+
+fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
+    ProjectRequest {
+        norms: spec.norms.clone(),
+        eta: spec.eta,
+        l1_algo: spec.l1_algo,
+        method: spec.method,
+        layout: WireLayout::Matrix,
+        shape: vec![y.rows(), y.cols()],
+        payload: y.data().to_vec(),
+    }
+}
+
+/// Rebind a server on an address whose previous listener just shut down
+/// (the OS may need a beat to release the port).
+fn rebind(addr: &str) -> Server {
+    for _ in 0..200 {
+        match Server::bind(addr, &SchedulerConfig::default()) {
+            Ok(s) => return s,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    panic!("could not rebind a replacement backend on {addr}");
+}
+
+#[test]
+fn seeded_stream_matches_direct_even_across_a_backend_kill() {
+    // (a) the direct ground truth: one in-process server.
+    let direct = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let direct_addr = direct.local_addr();
+    let direct_handle = direct.spawn();
+
+    // (b) two backend servers behind a router.
+    let b0 = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let b0_addr = b0.local_addr().to_string();
+    let mut b0_handle = b0.spawn();
+    let b1 = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let b1_addr = b1.local_addr().to_string();
+    let b1_handle = b1.spawn();
+    let router = Router::bind(
+        "127.0.0.1:0",
+        &[b0_addr.clone(), b1_addr.clone()],
+        RouterOptions::default(),
+    )
+    .unwrap();
+    let raddr = router.local_addr();
+    let rhandle = router.spawn();
+
+    // One seeded request stream: distinct shapes and radii, so the plan
+    // keyspace genuinely spreads across both backends.
+    let mut rng = Rng::new(0xD1FF_0005);
+    let jobs: Vec<ProjectRequest> = (0..40)
+        .map(|i| {
+            let rows = 4 + (i % 5);
+            let cols = 6 + (i % 7);
+            let y = Matrix::random_uniform(rows, cols, -2.0, 2.0, &mut rng);
+            let spec = ProjectionSpec::l1inf(0.3 + 0.2 * (i % 6) as f64);
+            wire_request(&spec, &y)
+        })
+        .collect();
+
+    // (a) direct, sequentially over v1.
+    let mut dclient = Client::connect(direct_addr).unwrap();
+    let direct_results: Vec<Vec<f32>> =
+        jobs.iter().map(|r| dclient.project(r.clone()).unwrap()).collect();
+
+    // (b) through the router, pipelined at depth 6. Halfway through —
+    // with requests in flight — backend 0 is shut down and replaced on
+    // the same address: the router's pool must reconnect and replay.
+    let mut conn = PipelinedConn::connect(raddr).unwrap();
+    let mut results: Vec<Option<Vec<f32>>> = vec![None; jobs.len()];
+    let mut pending: HashMap<u16, usize> = HashMap::new();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    let mut killed = false;
+    while completed < jobs.len() {
+        while submitted < jobs.len() && conn.in_flight() < 6 {
+            let corr = conn.submit(&jobs[submitted]).unwrap();
+            pending.insert(corr, submitted);
+            submitted += 1;
+        }
+        if !killed && completed >= jobs.len() / 2 {
+            // Kill backend 0 mid-stream…
+            let mut ctl = Client::connect(b0_addr.as_str()).unwrap();
+            ctl.shutdown().unwrap();
+            b0_handle.join().unwrap();
+            // …and bring a cold replacement up on the same address. The
+            // router was never told: its pool reconnects on the broken
+            // pipe and replays the in-flight requests.
+            b0_handle = rebind(&b0_addr).spawn();
+            killed = true;
+        }
+        let (corr, result) = conn.recv().unwrap();
+        let idx = pending.remove(&corr).expect("reply for an untracked correlation id");
+        match result {
+            Ok(payload) => {
+                assert!(results[idx].is_none(), "request {idx} answered twice");
+                results[idx] = Some(payload);
+                completed += 1;
+            }
+            Err(e) => panic!("request {idx} failed across the backend kill: {e}"),
+        }
+    }
+    assert!(killed, "the kill must happen mid-stream");
+    assert!(pending.is_empty());
+
+    // Every routed reply is bit-identical to its direct twin.
+    for (i, (got, want)) in results.iter().zip(&direct_results).enumerate() {
+        assert_eq!(got.as_ref().unwrap(), want, "request {i} diverged from direct");
+    }
+
+    // The recovery is observable: the router reconnected upstream.
+    let mut ctl = Client::connect(raddr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert!(stat(&stats, "router_reconnects") >= 1, "{stats:?}");
+    assert_eq!(stat(&stats, "routed_requests"), jobs.len() as u64);
+
+    ctl.shutdown().unwrap();
+    rhandle.join().unwrap();
+    for (handle, addr) in [(b0_handle, b0_addr), (b1_handle, b1_addr)] {
+        let mut c = Client::connect(addr.as_str()).unwrap();
+        c.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+    dclient.shutdown().unwrap();
+    direct_handle.join().unwrap();
+}
+
+#[test]
+fn same_key_traffic_pins_to_one_backend_cache() {
+    // Repeated (spec, shape) traffic must land on one backend (stable
+    // sharding), so exactly one backend compiles the plan: total misses
+    // across both backends stay at 1 while hits grow.
+    let mut backend_stats = Vec::new();
+    let mut backend_addrs = Vec::new();
+    let mut backends = Vec::new();
+    // One worker per backend = one plan-cache shard, so "exactly one
+    // compile" is deterministic (several shards may each compile once).
+    let cfg = SchedulerConfig { workers: 1, ..SchedulerConfig::default() };
+    for _ in 0..2 {
+        let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+        backend_addrs.push(server.local_addr().to_string());
+        backends.push(server.spawn());
+    }
+    for a in &backend_addrs {
+        backend_stats.push(Client::connect(a.as_str()).unwrap());
+    }
+    let router =
+        Router::bind("127.0.0.1:0", &backend_addrs, RouterOptions::default()).unwrap();
+    let raddr = router.local_addr();
+    let rhandle = router.spawn();
+
+    let mut rng = Rng::new(0xCAC4E);
+    let spec = ProjectionSpec::l1inf(0.9);
+    let mut client = Client::connect(raddr).unwrap();
+    for _ in 0..8 {
+        let y = Matrix::random_uniform(12, 18, -1.0, 1.0, &mut rng);
+        let expect = spec.project_matrix(&y).unwrap();
+        assert_eq!(client.project(wire_request(&spec, &y)).unwrap(), expect.data());
+    }
+
+    let (mut misses, mut hits) = (0u64, 0u64);
+    for c in backend_stats.iter_mut() {
+        let s = c.stats().unwrap();
+        misses += stat(&s, "cache_misses");
+        hits += stat(&s, "cache_hits");
+    }
+    assert_eq!(misses, 1, "one shard owner must compile the plan exactly once");
+    assert_eq!(hits, 7, "every repeat must hit that backend's warm cache");
+
+    client.shutdown().unwrap();
+    rhandle.join().unwrap();
+    for (h, a) in backends.into_iter().zip(backend_addrs) {
+        let mut c = Client::connect(a.as_str()).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn spawned_backend_processes_serve_through_the_router() {
+    // The CLI path end to end: real child `mlproj serve` OS processes
+    // spawned on ephemeral ports, fronted by a router that shuts them
+    // down when it stops.
+    let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_mlproj"));
+    let (addrs, children) =
+        spawn_backends(&exe, 2, &BackendSpawnOptions::default()).unwrap();
+    assert_eq!(addrs.len(), 2);
+    let router = Router::bind("127.0.0.1:0", &addrs, RouterOptions::default())
+        .unwrap()
+        .with_children(children);
+    let raddr = router.local_addr();
+    let rhandle = router.spawn();
+
+    let mut rng = Rng::new(0x5AFE);
+    let mut client = Client::connect(raddr).unwrap();
+    assert!(client.ping().unwrap().is_some(), "router must advertise its body cap");
+    for i in 0..6 {
+        let y = Matrix::random_uniform(8 + i, 10, -2.0, 2.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(0.6 + 0.1 * i as f64);
+        let expect = spec.project_matrix(&y).unwrap();
+        assert_eq!(
+            client.project(wire_request(&spec, &y)).unwrap(),
+            expect.data(),
+            "request {i} through spawned processes"
+        );
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "router_backends"), 2);
+    assert_eq!(stat(&stats, "routed_requests"), 6);
+
+    // Router shutdown also stops the spawned children (run() waits on
+    // them, so join returning proves they exited).
+    client.shutdown().unwrap();
+    rhandle.join().unwrap();
+}
+
+#[test]
+fn router_surfaces_typed_errors_and_survives() {
+    let mut backend_addrs = Vec::new();
+    let mut backends = Vec::new();
+    for _ in 0..2 {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        backend_addrs.push(server.local_addr().to_string());
+        backends.push(server.spawn());
+    }
+    let router =
+        Router::bind("127.0.0.1:0", &backend_addrs, RouterOptions::default()).unwrap();
+    let raddr = router.local_addr();
+    let rhandle = router.spawn();
+
+    let mut rng = Rng::new(0xE44);
+    let y = Matrix::random_uniform(6, 9, -1.0, 1.0, &mut rng);
+    let mut client = Client::connect(raddr).unwrap();
+
+    // A semantically invalid spec comes back typed through the router…
+    let bad = ProjectionSpec::new(
+        vec![mlproj::projection::Norm::Linf; 3],
+        1.0,
+    );
+    let err = client.project(wire_request(&bad, &y)).unwrap_err();
+    assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+
+    // …and the same connection keeps working.
+    let good = ProjectionSpec::l1inf(0.8);
+    let expect = good.project_matrix(&y).unwrap();
+    assert_eq!(client.project(wire_request(&good, &y)).unwrap(), expect.data());
+
+    client.shutdown().unwrap();
+    rhandle.join().unwrap();
+    for (h, a) in backends.into_iter().zip(backend_addrs) {
+        let mut c = Client::connect(a.as_str()).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+}

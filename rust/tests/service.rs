@@ -237,6 +237,46 @@ fn chunked_streams_carry_matrices_past_the_body_cap() {
 }
 
 #[test]
+fn negotiated_cap_round_trips_an_oversized_payload_automatically() {
+    // Body-cap negotiation end to end: the server runs with a 16 KiB
+    // frame cap; the client learns it from the Pong and auto-chunks a
+    // 32 KiB payload without any manual set_chunk_threshold call —
+    // before negotiation this exact call pattern was a protocol error
+    // (see chunked_streams_carry_matrices_past_the_body_cap's v1 leg).
+    use mlproj::service::ClientPool;
+    let opts = ServeOptions { max_body_bytes: 16 * 1024, ..ServeOptions::default() };
+    let server = Server::bind_with("127.0.0.1:0", &SchedulerConfig::default(), opts).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(78);
+    let y = Matrix::random_uniform(64, 128, -2.0, 2.0, &mut rng); // 32 KiB payload
+    let spec = ProjectionSpec::l1inf(1.2);
+    let expect = spec.project_matrix(&y).unwrap();
+    let req = wire_request(&spec, &y);
+
+    // A lone pipelined connection negotiates on ping…
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    conn.ping().unwrap();
+    assert_eq!(conn.server_max_body(), Some(16 * 1024));
+    assert_eq!(conn.project(&req).unwrap(), expect.data());
+
+    // …and a pool negotiates at connect (both directions chunked: the
+    // 32 KiB reply cannot travel whole either).
+    let pool = ClientPool::connect(&addr.to_string(), 2).unwrap();
+    assert_eq!(pool.project(&req).unwrap(), expect.data());
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert!(stat(&stats, "chunked_streams_in") >= 2, "{stats:?}");
+    assert!(stat(&stats, "chunked_streams_out") >= 2, "{stats:?}");
+    assert_eq!(stat(&stats, "checksum_failures"), 0);
+
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
 fn corrupted_chunk_checksum_is_rejected_and_the_connection_survives() {
     use std::io::Write;
     let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
@@ -283,7 +323,7 @@ fn corrupted_chunk_checksum_is_rejected_and_the_connection_survives() {
     assert_eq!(h.corr, 6);
     assert_eq!(
         protocol::decode_client_frame(h.version, h.ftype, &body).unwrap(),
-        Frame::Pong
+        Frame::Pong { max_body: Some(protocol::MAX_BODY_BYTES as u64) }
     );
 
     let mut ctl = Client::connect(addr).unwrap();
