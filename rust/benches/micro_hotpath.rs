@@ -6,13 +6,18 @@
 //! Emits `target/bench_out/BENCH_hotpath.json` — flat records
 //! `{size, norms, backend, ns_per_op}` where `backend` names the
 //! measured path (`decomposed`, `fused-plan`, `fused-batch4-per-payload`,
-//! per-stage labels, `memcpy-roofline`) — alongside the CSV. The
-//! perf loop in EXPERIMENTS.md §Perf regenerates this file on every
-//! change to the kernels; CI regenerates it in fast mode on every push.
+//! per-stage labels, `memcpy-roofline`, the pinned-kernel series
+//! `scalar` / `simd-best`, and the L2-resident `fused-colmax-clip` /
+//! `two-sweep-colmax-clip` pair) — alongside the CSV. The perf loop in
+//! EXPERIMENTS.md §Perf regenerates this file on every change to the
+//! kernels; CI regenerates it in fast mode on every push and fails on a
+//! missing or malformed series.
 
 use mlproj::bench::{black_box, emit_json, Bencher, Measurement, OpRecord, Report, Series};
+use mlproj::core::kernels;
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
+use mlproj::core::simd::{self, KernelVariant};
 use mlproj::core::sort::max_abs;
 use mlproj::projection::bilevel::bilevel_l1inf_inplace;
 use mlproj::projection::l1::{soft_threshold, L1Algo};
@@ -143,6 +148,59 @@ fn main() {
     record(&mut records, &size, "memcpy-roofline", &memcpy);
     fused.points.push(memcpy);
 
+    // --- pinned kernel variants: scalar vs the dispatched best ---------
+    // Same fused ℓ1,∞ plan path as `fused-plan`, but with the kernel
+    // variant pinned explicitly, so the JSON carries a scalar baseline
+    // and a best-SIMD series at every benched shape. On a host with no
+    // SIMD support, `simd-best` degenerates to a second scalar run.
+    let best = simd::best_supported();
+    let mut variants = Series::new(format!("kernel variants {n}x{m} (best: {best})"));
+    for (label, variant) in [("scalar", KernelVariant::Scalar), ("simd-best", best)] {
+        let mut vplan = ProjectionSpec::l1inf(eta)
+            .with_kernel(variant)
+            .compile_for_matrix(n, m)
+            .expect("compile");
+        let meas = b.measure(format!("{label}({variant})"), || {
+            scratch.data_mut().copy_from_slice(y.data());
+            vplan.project_matrix_inplace(&mut scratch).expect("project");
+            black_box(&scratch);
+        });
+        record(&mut records, &size, label, &meas);
+        variants.points.push(meas);
+    }
+
+    // --- fused colmax+clamp vs two sweeps, L2-resident -----------------
+    // The [ℓ∞, ℓ∞] plan's fused kernel reads and clamps each column in
+    // one stream; the decomposed path reads it once for the column max
+    // and again for the clip. 128x1024 f32 = 512 KiB keeps the matrix
+    // L2-resident, where the second pass is cheap cache traffic — the
+    // fused win must show up even there.
+    let (fr, fc) = (128usize, 1024usize);
+    let fy = Matrix::random_uniform(fr, fc, -1.0, 1.0, &mut rng);
+    let mut fs = fy.clone();
+    let fsize = format!("{fr}x{fc}");
+    let cap = 0.99f32;
+    let two_sweep = b.measure("two-sweep-colmax-clip", || {
+        fs.data_mut().copy_from_slice(fy.data());
+        for j in 0..fc {
+            let col = fs.col_mut(j);
+            black_box(kernels::max_abs_with(best, col));
+            kernels::clamp_abs_with(best, col, cap);
+        }
+        black_box(&fs);
+    });
+    record(&mut records, &fsize, "two-sweep-colmax-clip", &two_sweep);
+    variants.points.push(two_sweep);
+    let fused_cc = b.measure("fused-colmax-clip", || {
+        fs.data_mut().copy_from_slice(fy.data());
+        for j in 0..fc {
+            black_box(kernels::colmax_clamp_with(best, fs.col_mut(j), cap));
+        }
+        black_box(&fs);
+    });
+    record(&mut records, &fsize, "fused-colmax-clip", &fused_cc);
+    variants.points.push(fused_cc);
+
     // --- l1 threshold algorithms over big vectors ----------------------
     let mut l1algos = Series::new("l1 threshold (1M elems)");
     let len = if fast { 100_000 } else { 1_000_000 };
@@ -161,6 +219,7 @@ fn main() {
     let mut rep = Report::new("Hot-path micro-benchmarks", "stage");
     rep.series.push(stages);
     rep.series.push(fused);
+    rep.series.push(variants);
     rep.series.push(l1algos);
     // table layout is per-series x-label here, so print manually:
     for s in &rep.series {

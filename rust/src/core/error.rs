@@ -24,7 +24,17 @@ pub enum MlprojError {
         ndim: usize,
     },
 
-    /// An invalid argument (e.g. negative radius).
+    /// A ball radius that is not a finite non-negative number. Caught at
+    /// `ProjectionSpec` compile time — before any kernel runs — so a
+    /// hostile wire request carrying `η = NaN` surfaces as a typed error
+    /// instead of reaching the clamp kernels (where the seed's
+    /// `f32::clamp` would panic and kill a serve worker).
+    InvalidRadius {
+        /// The offending radius.
+        eta: f64,
+    },
+
+    /// An invalid argument (e.g. a malformed norm list).
     InvalidArgument(String),
 
     /// Configuration parse / validation error.
@@ -58,6 +68,10 @@ impl std::fmt::Display for MlprojError {
                 f,
                 "norm list has {norms} entries but tensor has {ndim} axes \
                  (need one norm per axis, or a single norm)"
+            ),
+            MlprojError::InvalidRadius { eta } => write!(
+                f,
+                "invalid radius: eta must be finite and non-negative, got {eta}"
             ),
             MlprojError::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
             MlprojError::Config(msg) => write!(f, "config error: {msg}"),
@@ -116,6 +130,14 @@ mod tests {
     fn display_invalid() {
         let e = MlprojError::invalid("radius must be >= 0");
         assert_eq!(format!("{e}"), "invalid argument: radius must be >= 0");
+    }
+
+    #[test]
+    fn display_invalid_radius() {
+        let e = MlprojError::InvalidRadius { eta: f64::NAN };
+        let s = format!("{e}");
+        assert!(s.contains("finite"), "{s}");
+        assert!(s.contains("NaN"), "{s}");
     }
 
     #[test]

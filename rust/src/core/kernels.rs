@@ -3,23 +3,31 @@
 //! The paper's Table 1 puts every compositional projection at O(nm) —
 //! memory-bound work whose wall clock is dominated by how many times the
 //! matrix is streamed and how well each stream saturates the load/store
-//! units. These are the shared inner loops: chunked 8-lane bodies with
-//! independent accumulators, so the compiler can vectorize reductions
-//! that would otherwise be serial dependency chains (`max` folds, f64
-//! sums), and simple streaming transforms (`clamp`/`shrink`/`scale`)
-//! written so they autovectorize.
+//! units. The kernel *bodies* live in [`crate::core::simd`] as explicit
+//! per-ISA variants (AVX2 / AVX-512 / NEON / the original 8-lane scalar
+//! fallback); this module is the dispatching front-end:
 //!
-//! Determinism contract: every reduction here has a *fixed* association
-//! order — lane `i` accumulates elements `8k + i`, lanes combine
-//! pairwise, the remainder is folded serially — so results are
-//! reproducible across calls and across the serial/pool backends (which
-//! both call these on the same operand slices). `core::sort`'s norm
-//! helpers delegate here so legacy call sites and the fused operator
-//! kernels share bit-identical arithmetic.
+//! * The classic signatures (`max_abs(xs)`, `clamp_abs(xs, cap)`, …) run
+//!   the process-wide default variant — the widest ISA the host supports,
+//!   or whatever `MLPROJ_FORCE_KERNEL` pins. Every legacy call site gets
+//!   SIMD for free.
+//! * The `*_with(variant, …)` forms take the variant explicitly; the
+//!   compiled operator layer threads each plan's autotuned winner through
+//!   these.
+//!
+//! Determinism contract (unchanged from the seed, now enforced across
+//! ISAs): every reduction has a *fixed* association order — lane `i`
+//! accumulates elements `8k + i`, lanes combine pairwise, the remainder
+//! is folded serially — and every SIMD variant is **bit-identical** to
+//! the scalar body on all inputs (`tests/kernel_equivalence.rs`), so
+//! results are reproducible across calls, across the serial/pool
+//! backends, and across dispatch decisions. `core::sort`'s norm helpers
+//! delegate here so legacy call sites and the fused operator kernels
+//! share bit-identical arithmetic.
 
-/// Lane width of the chunked reductions. Eight f32 lanes fill one
-/// AVX2-width register; on narrower ISAs the compiler splits the lanes.
-pub const LANES: usize = 8;
+use crate::core::simd::{self, KernelVariant};
+
+pub use crate::core::simd::LANES;
 
 /// Maximum absolute value of a slice (0 for empty).
 ///
@@ -28,105 +36,104 @@ pub const LANES: usize = 8;
 /// serial fold (measured ~2× on the colmax stage — EXPERIMENTS.md §Perf).
 #[inline]
 pub fn max_abs(xs: &[f32]) -> f32 {
-    let mut lanes = [0.0f32; LANES];
-    let mut chunks = xs.chunks_exact(LANES);
-    for c in chunks.by_ref() {
-        for (acc, &x) in lanes.iter_mut().zip(c) {
-            let v = x.abs();
-            if v > *acc {
-                *acc = v;
-            }
-        }
-    }
-    let mut m = 0.0f32;
-    for &x in chunks.remainder() {
-        let v = x.abs();
-        if v > m {
-            m = v;
-        }
-    }
-    for &l in &lanes {
-        if l > m {
-            m = l;
-        }
-    }
-    m
+    simd::max_abs(simd::active_default(), xs)
+}
+
+/// [`max_abs`] with an explicit kernel variant.
+#[inline]
+pub fn max_abs_with(variant: KernelVariant, xs: &[f32]) -> f32 {
+    simd::max_abs(variant, xs)
 }
 
 /// Sum of absolute values in f64 (the ℓ1 norm), 8-lane with per-chunk
 /// f64 accumulation and a fixed pairwise lane combine.
 #[inline]
 pub fn abs_sum(xs: &[f32]) -> f64 {
-    let mut lanes = [0.0f64; LANES];
-    let mut chunks = xs.chunks_exact(LANES);
-    for c in chunks.by_ref() {
-        for (acc, &x) in lanes.iter_mut().zip(c) {
-            *acc += x.abs() as f64;
-        }
-    }
-    let mut tail = 0.0f64;
-    for &x in chunks.remainder() {
-        tail += x.abs() as f64;
-    }
-    combine_lanes(&lanes) + tail
+    simd::abs_sum(simd::active_default(), xs)
+}
+
+/// [`abs_sum`] with an explicit kernel variant.
+#[inline]
+pub fn abs_sum_with(variant: KernelVariant, xs: &[f32]) -> f64 {
+    simd::abs_sum(variant, xs)
 }
 
 /// Sum of squares in f64, 8-lane (the ℓ2 norm is `sq_sum(..).sqrt()`).
 #[inline]
 pub fn sq_sum(xs: &[f32]) -> f64 {
-    let mut lanes = [0.0f64; LANES];
-    let mut chunks = xs.chunks_exact(LANES);
-    for c in chunks.by_ref() {
-        for (acc, &x) in lanes.iter_mut().zip(c) {
-            *acc += (x as f64) * (x as f64);
-        }
-    }
-    let mut tail = 0.0f64;
-    for &x in chunks.remainder() {
-        tail += (x as f64) * (x as f64);
-    }
-    combine_lanes(&lanes) + tail
+    simd::sq_sum(simd::active_default(), xs)
 }
 
-/// Fixed pairwise reduction of the 8 lanes: ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7)).
+/// [`sq_sum`] with an explicit kernel variant.
 #[inline]
-fn combine_lanes(l: &[f64; LANES]) -> f64 {
-    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+pub fn sq_sum_with(variant: KernelVariant, xs: &[f32]) -> f64 {
+    simd::sq_sum(variant, xs)
 }
 
 /// Clamp every element to `[-cap, cap]` in place (the ℓ∞ inner step of
 /// Algorithm 2; a single streaming read-modify-write).
+///
+/// Total on any input: a NaN `cap` is a no-op instead of a panic (the
+/// seed's `f32::clamp` panicked — a hostile wire radius could kill a
+/// serve worker), NaN data passes through unchanged.
 #[inline]
 pub fn clamp_abs(xs: &mut [f32], cap: f32) {
-    for x in xs.iter_mut() {
-        *x = x.clamp(-cap, cap);
-    }
+    simd::clamp_abs(simd::active_default(), xs, cap);
+}
+
+/// [`clamp_abs`] with an explicit kernel variant.
+#[inline]
+pub fn clamp_abs_with(variant: KernelVariant, xs: &mut [f32], cap: f32) {
+    simd::clamp_abs(variant, xs, cap);
+}
+
+/// [`clamp_abs`] with nontemporal stores (bit-identical; for clip sweeps
+/// past [`simd::NT_SWEEP_BYTES`] that should bypass the cache hierarchy).
+#[inline]
+pub fn clamp_abs_nt_with(variant: KernelVariant, xs: &mut [f32], cap: f32) {
+    simd::clamp_abs_nt(variant, xs, cap);
+}
+
+/// Fused colmax+clamp: clamp to `[-cap, cap]` while returning the
+/// pre-clamp max-abs — one stream over the column instead of two.
+/// Bit-identical (result and data) to [`max_abs`] then [`clamp_abs`].
+#[inline]
+pub fn colmax_clamp_with(variant: KernelVariant, xs: &mut [f32], cap: f32) -> f32 {
+    simd::colmax_clamp(variant, xs, cap)
 }
 
 /// Soft-threshold shrinkage `x_i = sign(y_i)(|y_i| − τ)_+` in place.
 #[inline]
 pub fn shrink(xs: &mut [f32], tau: f32) {
-    for x in xs.iter_mut() {
-        let a = x.abs() - tau;
-        *x = if a > 0.0 { a.copysign(*x) } else { 0.0 };
-    }
+    simd::shrink(simd::active_default(), xs, tau);
+}
+
+/// [`shrink`] with an explicit kernel variant.
+#[inline]
+pub fn shrink_with(variant: KernelVariant, xs: &mut [f32], tau: f32) {
+    simd::shrink(variant, xs, tau);
 }
 
 /// Multiply every element by `s` in place (the ℓ2 inner step).
 #[inline]
 pub fn scale(xs: &mut [f32], s: f32) {
-    for x in xs.iter_mut() {
-        *x *= s;
-    }
+    simd::scale(simd::active_default(), xs, s);
+}
+
+/// [`scale`] with an explicit kernel variant.
+#[inline]
+pub fn scale_with(variant: KernelVariant, xs: &mut [f32], s: f32) {
+    simd::scale(variant, xs, s);
 }
 
 /// Fused abs-pass + feasibility sum: write `|src_i|` into `dst` while
 /// accumulating `Σ|src_i|` in f64 **serially** (ascending index).
 ///
-/// The serial order is deliberate: this sum feeds the `‖y‖₁ ≤ η`
-/// feasibility decision of the soft threshold, and it must be
-/// bit-identical to the decomposed two-pass implementation it fuses
-/// (clone-abs, then sum) so fused and pre-fusion paths agree exactly.
+/// The serial order is deliberate (and excluded from SIMD dispatch): this
+/// sum feeds the `‖y‖₁ ≤ η` feasibility decision of the soft threshold,
+/// and it must be bit-identical to the decomposed two-pass implementation
+/// it fuses (clone-abs, then sum) so fused and pre-fusion paths agree
+/// exactly.
 #[inline]
 pub fn abs_into_sum(src: &[f32], dst: &mut Vec<f32>) -> f64 {
     dst.clear();
@@ -158,7 +165,8 @@ mod tests {
     #[test]
     fn sums_are_exact_on_representable_values() {
         // Integer-valued f32s sum exactly in f64 regardless of order.
-        let v: Vec<f32> = (0..100).map(|i| if i % 2 == 0 { i as f32 } else { -(i as f32) }).collect();
+        let v: Vec<f32> =
+            (0..100).map(|i| if i % 2 == 0 { i as f32 } else { -(i as f32) }).collect();
         let expect: f64 = v.iter().map(|x| x.abs() as f64).sum();
         assert_eq!(abs_sum(&v), expect);
         let sq: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
@@ -189,6 +197,43 @@ mod tests {
         let mut v = vec![2.0f32, -4.0];
         scale(&mut v, 0.5);
         assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn clamp_abs_is_total_on_nan_cap_and_nan_data() {
+        // Regression: the seed used `f32::clamp`, which panics when its
+        // bounds are NaN — a hostile radius reaching a kernel would kill
+        // a serve worker. A NaN cap must now be a no-op on every variant.
+        for &variant in simd::supported() {
+            let mut v = vec![3.0f32, -2.0, f32::NAN, 0.5, -0.0, 9.0, -7.0, 1.0, 2.5];
+            let orig = v.clone();
+            clamp_abs_with(variant, &mut v, f32::NAN);
+            for (got, want) in v.iter().zip(&orig) {
+                assert_eq!(got.to_bits(), want.to_bits(), "[{variant}] NaN cap must no-op");
+            }
+            // NaN *data* passes through a finite clamp untouched.
+            clamp_abs_with(variant, &mut v, 1.0);
+            assert!(v[2].is_nan(), "[{variant}] NaN data must survive");
+            assert_eq!(v[0], 1.0, "[{variant}]");
+            assert_eq!(v[1], -1.0, "[{variant}]");
+        }
+    }
+
+    #[test]
+    fn colmax_clamp_composes_max_then_clamp() {
+        let mut rng = Rng::new(9);
+        for len in [0usize, 1, 7, 8, 9, 33, 130] {
+            let mut v = vec![0.0f32; len];
+            rng.fill_uniform(&mut v, -4.0, 4.0);
+            let mut fused = v.clone();
+            let mut twopass = v.clone();
+            let cap = 1.25f32;
+            let m_fused = colmax_clamp_with(KernelVariant::Scalar, &mut fused, cap);
+            let m_two = max_abs(&twopass);
+            clamp_abs(&mut twopass, cap);
+            assert_eq!(m_fused, m_two, "len={len}");
+            assert_eq!(fused, twopass, "len={len}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod error;
 pub mod kernels;
 pub mod matrix;
 pub mod rng;
+pub mod simd;
 pub mod sort;
 pub mod tensor;
 

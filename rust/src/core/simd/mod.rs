@@ -1,0 +1,368 @@
+//! Runtime-dispatched SIMD kernel variants.
+//!
+//! The paper's projections are O(nm) memory-bound streams (Table 1), so
+//! the kernel bodies decide how close each sweep runs to the load/store
+//! roofline. This module owns the variant axis:
+//!
+//! * [`KernelVariant`] — the candidate instruction sets: the portable
+//!   8-lane scalar bodies (`scalar`, the seed code, kept verbatim), AVX2
+//!   and AVX-512 on x86-64 (`is_x86_feature_detected!` at startup), NEON
+//!   on AArch64.
+//! * [`supported`] / [`best_supported`] — what this host can run, in
+//!   ascending preference order.
+//! * [`forced_from_env`] — the `MLPROJ_FORCE_KERNEL` override, rejected
+//!   with a typed error when the host lacks the feature.
+//! * The dispatch functions (`max_abs`, `abs_sum`, …) — each takes the
+//!   variant explicitly so a compiled `ProjectionPlan` can pin its
+//!   autotuned winner; `core::kernels` wraps them with the process-wide
+//!   default for call sites without a plan.
+//!
+//! **Bit-identity contract**: every variant of every kernel returns
+//! bit-identical results to the scalar body on all inputs, including NaN
+//! and ±0.0 — the fixed lane association (lane `i` owns elements
+//! `8k + i`, pairwise f64 combine) was designed to map 1:1 onto AVX2
+//! registers, and the SIMD bodies keep it. Variant selection is therefore
+//! purely a performance decision: the autotuner can switch variants
+//! between calls without changing a single output byte (pinned by
+//! `tests/kernel_equivalence.rs` and the differential harness).
+
+use std::sync::OnceLock;
+
+use crate::core::error::{MlprojError, Result};
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Lane width of the chunked reductions. Eight f32 lanes fill one
+/// AVX2-width register; on narrower ISAs the lanes split across two
+/// q-registers (NEON), on AVX-512 the 8×f64 sum lanes fill one zmm.
+pub const LANES: usize = 8;
+
+/// Environment variable forcing one kernel variant process-wide.
+pub const FORCE_ENV: &str = "MLPROJ_FORCE_KERNEL";
+
+/// Clip sweeps at least this large use nontemporal stores when the
+/// variant supports them: past any reasonable last-level cache there is
+/// nothing to keep warm, and write-combining stores save the read-for-
+/// ownership traffic (~1/3 of the sweep's bus time).
+pub const NT_SWEEP_BYTES: usize = 32 << 20;
+
+/// One SIMD instruction-set variant of the kernel bodies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelVariant {
+    /// Portable 8-lane scalar bodies (the autovectorized seed code).
+    #[default]
+    Scalar,
+    /// Explicit AVX2 intrinsics (x86-64).
+    Avx2,
+    /// AVX-512F recompilation of the scalar bodies (x86-64).
+    Avx512,
+    /// Explicit NEON intrinsics (AArch64).
+    Neon,
+}
+
+impl KernelVariant {
+    /// All variants, for iteration/parsing.
+    pub const ALL: [KernelVariant; 4] = [
+        KernelVariant::Scalar,
+        KernelVariant::Avx2,
+        KernelVariant::Avx512,
+        KernelVariant::Neon,
+    ];
+
+    /// Stable lowercase label ("scalar" | "avx2" | "avx512" | "neon").
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Avx2 => "avx2",
+            KernelVariant::Avx512 => "avx512",
+            KernelVariant::Neon => "neon",
+        }
+    }
+
+    /// Parse a label (case-insensitive, surrounding whitespace ignored).
+    pub fn parse(s: &str) -> Option<KernelVariant> {
+        let t = s.trim().to_ascii_lowercase();
+        KernelVariant::ALL.iter().copied().find(|v| v.label() == t)
+    }
+}
+
+impl std::fmt::Display for KernelVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+fn detect() -> Vec<KernelVariant> {
+    let mut v = vec![KernelVariant::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(KernelVariant::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            v.push(KernelVariant::Avx512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(KernelVariant::Neon);
+        }
+    }
+    v
+}
+
+/// The variants this host supports, in ascending preference order
+/// (scalar always first; the widest detected ISA last).
+pub fn supported() -> &'static [KernelVariant] {
+    static SUPPORTED: OnceLock<Vec<KernelVariant>> = OnceLock::new();
+    SUPPORTED.get_or_init(detect)
+}
+
+/// True when this host can execute `v`.
+pub fn is_supported(v: KernelVariant) -> bool {
+    supported().contains(&v)
+}
+
+/// The widest supported variant — the dispatch default when nothing is
+/// forced and no autotune measurement exists yet.
+pub fn best_supported() -> KernelVariant {
+    *supported().last().expect("scalar is always supported")
+}
+
+/// Parse `MLPROJ_FORCE_KERNEL`: `Ok(None)` when unset/empty, a typed
+/// error when the value is unknown or the host lacks the feature.
+pub fn forced_from_env() -> Result<Option<KernelVariant>> {
+    let raw = match std::env::var(FORCE_ENV) {
+        Ok(s) if !s.trim().is_empty() => s,
+        _ => return Ok(None),
+    };
+    let v = KernelVariant::parse(&raw).ok_or_else(|| {
+        MlprojError::invalid(format!(
+            "{FORCE_ENV}={raw}: unknown kernel variant (expected scalar | avx2 | avx512 | neon)"
+        ))
+    })?;
+    if !is_supported(v) {
+        return Err(MlprojError::invalid(format!(
+            "{FORCE_ENV}={raw}: variant not supported on this host (supported: {})",
+            labels(supported())
+        )));
+    }
+    Ok(Some(v))
+}
+
+/// Render a variant list as "scalar,avx2".
+pub fn labels(vs: &[KernelVariant]) -> String {
+    vs.iter().map(|v| v.label()).collect::<Vec<_>>().join(",")
+}
+
+/// Process-wide default variant: the forced one when `MLPROJ_FORCE_KERNEL`
+/// is set and valid, else [`best_supported`]. Latched on first use (env
+/// changes after that are only seen by new plan compiles, which call
+/// [`forced_from_env`] themselves). An *invalid* force falls back to
+/// `best_supported` here — the typed error surfaces at plan compile and
+/// server startup, which validate eagerly.
+pub fn active_default() -> KernelVariant {
+    static ACTIVE: OnceLock<KernelVariant> = OnceLock::new();
+    *ACTIVE.get_or_init(|| forced_from_env().ok().flatten().unwrap_or_else(best_supported))
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+//
+// Invariant: callers only pass variants obtained from `supported()` /
+// `forced_from_env()` / `best_supported()`, so the `unsafe` feature-gated
+// calls are sound. A variant foreign to the compile target (e.g. `Neon`
+// on x86-64) falls through to scalar.
+
+/// Maximum absolute value of a slice (0 for empty).
+#[inline]
+pub fn max_abs(variant: KernelVariant, xs: &[f32]) -> f32 {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::max_abs_avx2(xs) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::max_abs_avx512(xs) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::max_abs_neon(xs) },
+        _ => scalar::max_abs(xs),
+    }
+}
+
+/// Sum of absolute values in f64 (the ℓ1 norm).
+#[inline]
+pub fn abs_sum(variant: KernelVariant, xs: &[f32]) -> f64 {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::abs_sum_avx2(xs) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::abs_sum_avx512(xs) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::abs_sum_neon(xs) },
+        _ => scalar::abs_sum(xs),
+    }
+}
+
+/// Sum of squares in f64.
+#[inline]
+pub fn sq_sum(variant: KernelVariant, xs: &[f32]) -> f64 {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::sq_sum_avx2(xs) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::sq_sum_avx512(xs) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::sq_sum_neon(xs) },
+        _ => scalar::sq_sum(xs),
+    }
+}
+
+/// Clamp every element to `[-cap, cap]` in place. Total: a NaN cap is a
+/// no-op (never panics), NaN data passes through.
+#[inline]
+pub fn clamp_abs(variant: KernelVariant, xs: &mut [f32], cap: f32) {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::clamp_abs_avx2(xs, cap) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::clamp_abs_avx512(xs, cap) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::clamp_abs_neon(xs, cap) },
+        _ => scalar::clamp_abs(xs, cap),
+    }
+}
+
+/// [`clamp_abs`] with nontemporal stores where the ISA offers them
+/// (x86-64); bit-identical, caller opts in for sweeps past
+/// [`NT_SWEEP_BYTES`]. Falls back to the regular clamp elsewhere.
+#[inline]
+pub fn clamp_abs_nt(variant: KernelVariant, xs: &mut [f32], cap: f32) {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 | KernelVariant::Avx512 => unsafe {
+            // AVX-512F hosts always have AVX2; the ymm streaming body
+            // already saturates the store path.
+            x86::clamp_abs_nt_avx2(xs, cap)
+        },
+        _ => clamp_abs(variant, xs, cap),
+    }
+}
+
+/// Fused column pass: clamp to `[-cap, cap]` while returning the
+/// pre-clamp max-abs — one read+write stream where the decomposed path
+/// needs a colmax read stream plus a clip read+write stream. Both the
+/// returned max and the stored data are bit-identical to composing
+/// [`max_abs`] then [`clamp_abs`].
+#[inline]
+pub fn colmax_clamp(variant: KernelVariant, xs: &mut [f32], cap: f32) -> f32 {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::colmax_clamp_avx2(xs, cap) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::colmax_clamp_avx512(xs, cap) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::colmax_clamp_neon(xs, cap) },
+        _ => scalar::colmax_clamp(xs, cap),
+    }
+}
+
+/// Soft-threshold shrinkage `x_i = sign(y_i)(|y_i| − τ)_+` in place.
+#[inline]
+pub fn shrink(variant: KernelVariant, xs: &mut [f32], tau: f32) {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::shrink_avx2(xs, tau) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::shrink_avx512(xs, tau) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::shrink_neon(xs, tau) },
+        _ => scalar::shrink(xs, tau),
+    }
+}
+
+/// Multiply every element by `s` in place.
+#[inline]
+pub fn scale(variant: KernelVariant, xs: &mut [f32], s: f32) {
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 => unsafe { x86::scale_avx2(xs, s) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx512 => unsafe { x86::scale_avx512(xs, s) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { neon::scale_neon(xs, s) },
+        _ => scalar::scale(xs, s),
+    }
+}
+
+/// Best-effort software prefetch of the cache line at `ptr` into L1.
+/// Used by the column-max sweep to hide the next column's first-line
+/// miss; a no-op on targets without a prefetch intrinsic, and
+/// semantically a no-op everywhere (prefetches never fault).
+#[inline]
+pub fn prefetch_read(ptr: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch hints are non-faulting for any address.
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(ptr as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = ptr;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_supported_and_first() {
+        let s = supported();
+        assert_eq!(s[0], KernelVariant::Scalar);
+        assert!(is_supported(KernelVariant::Scalar));
+        assert!(is_supported(best_supported()));
+        assert!(is_supported(active_default()));
+    }
+
+    #[test]
+    fn labels_parse_roundtrip() {
+        for v in KernelVariant::ALL {
+            assert_eq!(KernelVariant::parse(v.label()), Some(v));
+            assert_eq!(KernelVariant::parse(&v.label().to_uppercase()), Some(v));
+        }
+        assert_eq!(KernelVariant::parse(" avx2 "), Some(KernelVariant::Avx2));
+        assert_eq!(KernelVariant::parse("sse9"), None);
+        assert_eq!(labels(&[KernelVariant::Scalar, KernelVariant::Avx2]), "scalar,avx2");
+    }
+
+    #[test]
+    fn foreign_arch_variants_are_unsupported() {
+        // At most one SIMD family can be native; the other family's
+        // variants must be reported unsupported, not silently accepted.
+        #[cfg(target_arch = "x86_64")]
+        assert!(!is_supported(KernelVariant::Neon));
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert!(!is_supported(KernelVariant::Avx2));
+            assert!(!is_supported(KernelVariant::Avx512));
+        }
+    }
+
+    #[test]
+    fn dispatch_with_foreign_variant_falls_back_to_scalar_bits() {
+        // The dispatch wildcard arm routes compile-target-foreign
+        // variants to scalar instead of executing garbage.
+        let data = [1.5f32, -2.0, 0.25, 7.0, -0.5, 3.0, -3.0, 0.0, 9.5];
+        #[cfg(target_arch = "x86_64")]
+        let foreign = KernelVariant::Neon;
+        #[cfg(not(target_arch = "x86_64"))]
+        let foreign = KernelVariant::Avx2;
+        assert_eq!(max_abs(foreign, &data), max_abs(KernelVariant::Scalar, &data));
+        assert_eq!(abs_sum(foreign, &data), abs_sum(KernelVariant::Scalar, &data));
+    }
+}

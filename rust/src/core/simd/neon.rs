@@ -1,0 +1,222 @@
+//! Explicit AArch64 NEON kernel bodies (two 4×f32 q-registers per 8-lane
+//! chunk, four 2×f64 accumulators for the sums).
+//!
+//! Same bit-identity rules as `simd::x86`: the fixed lane association is
+//! kept (q-register 0 holds lanes 0–3, q-register 1 lanes 4–7; the f64
+//! sum pairs spill back into the scalar `combine_lanes` order), and every
+//! max/keep decision is an explicit `vcgtq_f32` compare + `vbslq_f32`
+//! select — **not** `vmaxq_f32`, whose NaN semantics (NaN in, NaN out)
+//! differ from the scalar `if v > acc` NaN-skip.
+
+use core::arch::aarch64::*;
+
+use super::scalar;
+use super::LANES;
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max_abs_neon(xs: &[f32]) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_ptr();
+        let a0 = vabsq_f32(vld1q_f32(p));
+        let a1 = vabsq_f32(vld1q_f32(p.add(4)));
+        // a > acc ? a : acc — false for NaN, the scalar NaN-skip.
+        acc0 = vbslq_f32(vcgtq_f32(a0, acc0), a0, acc0);
+        acc1 = vbslq_f32(vcgtq_f32(a1, acc1), a1, acc1);
+    }
+    let mut lanes = [0.0f32; LANES];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut m = 0.0f32;
+    for &x in chunks.remainder() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn abs_sum_neon(xs: &[f32]) -> f64 {
+    let mut s01 = vdupq_n_f64(0.0);
+    let mut s23 = vdupq_n_f64(0.0);
+    let mut s45 = vdupq_n_f64(0.0);
+    let mut s67 = vdupq_n_f64(0.0);
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_ptr();
+        let a0 = vabsq_f32(vld1q_f32(p));
+        let a1 = vabsq_f32(vld1q_f32(p.add(4)));
+        s01 = vaddq_f64(s01, vcvt_f64_f32(vget_low_f32(a0)));
+        s23 = vaddq_f64(s23, vcvt_high_f64_f32(a0));
+        s45 = vaddq_f64(s45, vcvt_f64_f32(vget_low_f32(a1)));
+        s67 = vaddq_f64(s67, vcvt_high_f64_f32(a1));
+    }
+    let mut lanes = [0.0f64; LANES];
+    vst1q_f64(lanes.as_mut_ptr(), s01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), s23);
+    vst1q_f64(lanes.as_mut_ptr().add(4), s45);
+    vst1q_f64(lanes.as_mut_ptr().add(6), s67);
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += x.abs() as f64;
+    }
+    scalar::combine_lanes(&lanes) + tail
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn sq_sum_neon(xs: &[f32]) -> f64 {
+    let mut s01 = vdupq_n_f64(0.0);
+    let mut s23 = vdupq_n_f64(0.0);
+    let mut s45 = vdupq_n_f64(0.0);
+    let mut s67 = vdupq_n_f64(0.0);
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_ptr();
+        let x0 = vld1q_f32(p);
+        let x1 = vld1q_f32(p.add(4));
+        // Convert then square in f64 with separate mul/add, exactly like
+        // the scalar `(x as f64) * (x as f64)` accumulation (no FMA).
+        let d0 = vcvt_f64_f32(vget_low_f32(x0));
+        let d1 = vcvt_high_f64_f32(x0);
+        let d2 = vcvt_f64_f32(vget_low_f32(x1));
+        let d3 = vcvt_high_f64_f32(x1);
+        s01 = vaddq_f64(s01, vmulq_f64(d0, d0));
+        s23 = vaddq_f64(s23, vmulq_f64(d1, d1));
+        s45 = vaddq_f64(s45, vmulq_f64(d2, d2));
+        s67 = vaddq_f64(s67, vmulq_f64(d3, d3));
+    }
+    let mut lanes = [0.0f64; LANES];
+    vst1q_f64(lanes.as_mut_ptr(), s01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), s23);
+    vst1q_f64(lanes.as_mut_ptr().add(4), s45);
+    vst1q_f64(lanes.as_mut_ptr().add(6), s67);
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += (x as f64) * (x as f64);
+    }
+    scalar::combine_lanes(&lanes) + tail
+}
+
+/// One clamped q-register: `x < lo ? lo : x`, then `· > hi ? hi : ·` —
+/// compare+select, so NaN data passes through and a NaN cap is a no-op
+/// (both compares are false against NaN), matching `scalar::clamp1`.
+#[inline(always)]
+unsafe fn clamp_q(x: float32x4_t, lo: float32x4_t, hi: float32x4_t) -> float32x4_t {
+    let t = vbslq_f32(vcltq_f32(x, lo), lo, x);
+    vbslq_f32(vcgtq_f32(t, hi), hi, t)
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn clamp_abs_neon(xs: &mut [f32], cap: f32) {
+    let lo = vdupq_n_f32(-cap);
+    let hi = vdupq_n_f32(cap);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        vst1q_f32(p, clamp_q(vld1q_f32(p), lo, hi));
+        vst1q_f32(p.add(4), clamp_q(vld1q_f32(p.add(4)), lo, hi));
+    }
+    for x in chunks.into_remainder() {
+        *x = scalar::clamp1(*x, cap);
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn colmax_clamp_neon(xs: &mut [f32], cap: f32) -> f32 {
+    let lo = vdupq_n_f32(-cap);
+    let hi = vdupq_n_f32(cap);
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        let x0 = vld1q_f32(p);
+        let x1 = vld1q_f32(p.add(4));
+        let a0 = vabsq_f32(x0);
+        let a1 = vabsq_f32(x1);
+        acc0 = vbslq_f32(vcgtq_f32(a0, acc0), a0, acc0);
+        acc1 = vbslq_f32(vcgtq_f32(a1, acc1), a1, acc1);
+        vst1q_f32(p, clamp_q(x0, lo, hi));
+        vst1q_f32(p.add(4), clamp_q(x1, lo, hi));
+    }
+    let mut lanes = [0.0f32; LANES];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut m = 0.0f32;
+    for x in chunks.into_remainder() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+        *x = scalar::clamp1(*x, cap);
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn shrink_neon(xs: &mut [f32], tau: f32) {
+    let tauv = vdupq_n_f32(tau);
+    let zero = vdupq_n_f32(0.0);
+    let signbit = vdupq_n_u32(0x8000_0000);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        for half in [0usize, 4] {
+            let x = vld1q_f32(p.add(half));
+            let a = vsubq_f32(vabsq_f32(x), tauv);
+            // a > 0 keeps sign(x)·a (a's sign bit is clear when kept),
+            // else +0.0 — false for NaN, like the scalar branch.
+            let keep = vcgtq_f32(a, zero);
+            let signed = vreinterpretq_f32_u32(vorrq_u32(
+                vreinterpretq_u32_f32(a),
+                vandq_u32(vreinterpretq_u32_f32(x), signbit),
+            ));
+            vst1q_f32(p.add(half), vbslq_f32(keep, signed, zero));
+        }
+    }
+    for x in chunks.into_remainder() {
+        *x = scalar::shrink1(*x, tau);
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON (baseline on AArch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn scale_neon(xs: &mut [f32], s: f32) {
+    let sv = vdupq_n_f32(s);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        vst1q_f32(p, vmulq_f32(vld1q_f32(p), sv));
+        vst1q_f32(p.add(4), vmulq_f32(vld1q_f32(p.add(4)), sv));
+    }
+    for x in chunks.into_remainder() {
+        *x *= s;
+    }
+}

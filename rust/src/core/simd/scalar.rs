@@ -1,0 +1,173 @@
+//! Reference scalar kernel bodies — the universal fallback every SIMD
+//! variant must match bit-for-bit.
+//!
+//! These are the seed 8-lane chunked loops, moved verbatim from
+//! `core::kernels` (which now dispatches here). The lane association is
+//! the contract: lane `i` accumulates elements `8k + i`, lanes combine
+//! pairwise, the remainder folds serially. The explicit AVX2/NEON bodies
+//! in the sibling modules reproduce exactly this association, and the
+//! AVX-512 bodies *are* these functions recompiled under
+//! `#[target_feature(enable = "avx512f")]` (see `simd::x86`), so scalar
+//! stays the single source of truth for the arithmetic.
+
+use super::LANES;
+
+/// Maximum absolute value of a slice (0 for empty).
+#[inline(always)]
+pub(crate) fn max_abs(xs: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (acc, &x) in lanes.iter_mut().zip(c) {
+            let v = x.abs();
+            if v > *acc {
+                *acc = v;
+            }
+        }
+    }
+    let mut m = 0.0f32;
+    for &x in chunks.remainder() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// Sum of absolute values in f64 (the ℓ1 norm), 8-lane with per-chunk
+/// f64 accumulation and a fixed pairwise lane combine.
+#[inline(always)]
+pub(crate) fn abs_sum(xs: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (acc, &x) in lanes.iter_mut().zip(c) {
+            *acc += x.abs() as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += x.abs() as f64;
+    }
+    combine_lanes(&lanes) + tail
+}
+
+/// Sum of squares in f64, 8-lane (the ℓ2 norm is `sq_sum(..).sqrt()`).
+#[inline(always)]
+pub(crate) fn sq_sum(xs: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (acc, &x) in lanes.iter_mut().zip(c) {
+            *acc += (x as f64) * (x as f64);
+        }
+    }
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += (x as f64) * (x as f64);
+    }
+    combine_lanes(&lanes) + tail
+}
+
+/// Fixed pairwise reduction of the 8 lanes: ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7)).
+#[inline(always)]
+pub(crate) fn combine_lanes(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// One clamp step in compare-select form.
+///
+/// Bit-identical to `x.clamp(-cap, cap)` for every finite `cap ≥ 0`
+/// (including `±0.0` inputs), but total: a NaN `cap` degrades to a no-op
+/// instead of panicking (`f32::clamp` panics when min/max are NaN), and a
+/// NaN `x` passes through — exactly the semantics of the SIMD
+/// `max(lo, ·)`/`min(hi, ·)` lane sequence.
+#[inline(always)]
+pub(crate) fn clamp1(x: f32, cap: f32) -> f32 {
+    let mut v = x;
+    if v < -cap {
+        v = -cap;
+    }
+    if v > cap {
+        v = cap;
+    }
+    v
+}
+
+/// Clamp every element to `[-cap, cap]` in place.
+#[inline(always)]
+pub(crate) fn clamp_abs(xs: &mut [f32], cap: f32) {
+    for x in xs.iter_mut() {
+        *x = clamp1(*x, cap);
+    }
+}
+
+/// Fused column pass: clamp every element to `[-cap, cap]` while
+/// accumulating the *pre-clamp* max-abs in the fixed 8-lane association —
+/// one read+write stream where the decomposed path needs a read stream
+/// (colmax) plus a read+write stream (clip). The returned max is
+/// bit-identical to `max_abs` and the stored data to `clamp_abs`: for
+/// in-ball columns the clamp is a bitwise identity, so applying it
+/// unconditionally changes nothing.
+#[inline(always)]
+pub(crate) fn colmax_clamp(xs: &mut [f32], cap: f32) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        for (acc, x) in lanes.iter_mut().zip(c.iter_mut()) {
+            let v = x.abs();
+            if v > *acc {
+                *acc = v;
+            }
+            *x = clamp1(*x, cap);
+        }
+    }
+    let mut m = 0.0f32;
+    for x in chunks.into_remainder() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+        *x = clamp1(*x, cap);
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// One shrink step: `sign(x)(|x| − τ)_+` (NaN shrinks to 0, like the
+/// masked SIMD lanes: the `a > 0` keep-test is false for NaN).
+#[inline(always)]
+pub(crate) fn shrink1(x: f32, tau: f32) -> f32 {
+    let a = x.abs() - tau;
+    if a > 0.0 {
+        a.copysign(x)
+    } else {
+        0.0
+    }
+}
+
+/// Soft-threshold shrinkage `x_i = sign(y_i)(|y_i| − τ)_+` in place.
+#[inline(always)]
+pub(crate) fn shrink(xs: &mut [f32], tau: f32) {
+    for x in xs.iter_mut() {
+        *x = shrink1(*x, tau);
+    }
+}
+
+/// Multiply every element by `s` in place (the ℓ2 inner step).
+#[inline(always)]
+pub(crate) fn scale(xs: &mut [f32], s: f32) {
+    for x in xs.iter_mut() {
+        *x *= s;
+    }
+}

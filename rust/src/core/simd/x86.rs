@@ -1,0 +1,305 @@
+//! Explicit x86-64 kernel bodies: AVX2 intrinsics plus AVX-512 feature
+//! recompilations, selected at runtime by `simd::supported()`.
+//!
+//! Bit-identity strategy per operation class:
+//!
+//! * **Reductions** (`max_abs`, `abs_sum`, `sq_sum`): the scalar contract
+//!   pins lane `i` to elements `8k + i` with a pairwise combine — designed
+//!   to map 1:1 onto one 8×f32 ymm (or one 8×f64 zmm) register. The AVX2
+//!   bodies keep exactly that association: one vector accumulator, lanes
+//!   spilled and combined with the scalar `combine_lanes`, remainder
+//!   folded serially. Sums convert to f64 *before* multiplying/adding
+//!   with separate `mul_pd`/`add_pd` (intrinsics never contract into FMA,
+//!   which would change the rounding).
+//! * **Elementwise streams** (`clamp_abs`, `shrink`, `scale`): order-free,
+//!   so any width is bit-identical; the AVX2 bodies use the
+//!   `max(lo, ·)`/`min(hi, ·)` operand order whose NaN semantics match
+//!   the scalar compare-select forms (NaN data passes through, NaN
+//!   cap/τ never panics).
+//! * **AVX-512**: the scalar bodies recompiled under
+//!   `#[target_feature(enable = "avx512f")]`. The fixed 8-lane f64 sum
+//!   association fills exactly one zmm register, and the elementwise
+//!   loops autovectorize at full width — same arithmetic, same bits,
+//!   no dependence on the partially-stabilized `_mm512_*` surface.
+//!
+//! NaN compare semantics used throughout: `_mm256_max_ps(a, b)` (and
+//! `min_ps`) return operand `b` when either input is NaN, and
+//! `_CMP_GT_OQ` is false against NaN — both match the scalar `if v > acc`
+//! / `clamp1` / `shrink1` branches exactly.
+
+use core::arch::x86_64::*;
+
+use super::scalar;
+use super::LANES;
+
+/// Fold a spilled 8-lane f32 max register into the remainder max, in the
+/// scalar epilogue order (remainder first, then lanes).
+#[inline(always)]
+fn fold_max_lanes(lanes: &[f32; LANES], remainder: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in remainder {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+    }
+    for &l in lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max_abs_avx2(xs: &[f32]) -> f32 {
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let a = _mm256_andnot_ps(sign, _mm256_loadu_ps(c.as_ptr()));
+        // max_ps(a, acc): NaN `a` yields `acc` — the scalar NaN-skip.
+        acc = _mm256_max_ps(a, acc);
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    fold_max_lanes(&lanes, chunks.remainder())
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn abs_sum_avx2(xs: &[f32]) -> f64 {
+    let sign = _mm256_set1_ps(-0.0);
+    let mut lo = _mm256_setzero_pd();
+    let mut hi = _mm256_setzero_pd();
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let a = _mm256_andnot_ps(sign, _mm256_loadu_ps(c.as_ptr()));
+        lo = _mm256_add_pd(lo, _mm256_cvtps_pd(_mm256_castps256_ps128(a)));
+        hi = _mm256_add_pd(hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a)));
+    }
+    let mut lanes = [0.0f64; LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), hi);
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += x.abs() as f64;
+    }
+    scalar::combine_lanes(&lanes) + tail
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sq_sum_avx2(xs: &[f32]) -> f64 {
+    let mut lo = _mm256_setzero_pd();
+    let mut hi = _mm256_setzero_pd();
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let x = _mm256_loadu_ps(c.as_ptr());
+        // Convert then square in f64 with separate mul/add, exactly like
+        // the scalar `(x as f64) * (x as f64)` accumulation (no FMA).
+        let d0 = _mm256_cvtps_pd(_mm256_castps256_ps128(x));
+        let d1 = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(x));
+        lo = _mm256_add_pd(lo, _mm256_mul_pd(d0, d0));
+        hi = _mm256_add_pd(hi, _mm256_mul_pd(d1, d1));
+    }
+    let mut lanes = [0.0f64; LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), hi);
+    let mut tail = 0.0f64;
+    for &x in chunks.remainder() {
+        tail += (x as f64) * (x as f64);
+    }
+    scalar::combine_lanes(&lanes) + tail
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn clamp_abs_avx2(xs: &mut [f32], cap: f32) {
+    let lo = _mm256_set1_ps(-cap);
+    let hi = _mm256_set1_ps(cap);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        let x = _mm256_loadu_ps(p);
+        // max(lo, x) then min(hi, ·): NaN x passes through (second
+        // operand wins), NaN cap leaves x untouched — `clamp1` semantics.
+        let t = _mm256_min_ps(hi, _mm256_max_ps(lo, x));
+        _mm256_storeu_ps(p, t);
+    }
+    for x in chunks.into_remainder() {
+        *x = scalar::clamp1(*x, cap);
+    }
+}
+
+/// Streaming size threshold: below 32 bytes of head alignment work the
+/// vector body would never run.
+const NT_MIN: usize = 2 * LANES;
+
+/// Nontemporal clamp: same bits as [`clamp_abs_avx2`], but the aligned
+/// body uses `_mm256_stream_ps` so a huge clip sweep does not evict the
+/// working set through the cache hierarchy (write-combining stores).
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn clamp_abs_nt_avx2(xs: &mut [f32], cap: f32) {
+    if xs.len() < NT_MIN {
+        clamp_abs_avx2(xs, cap);
+        return;
+    }
+    let lo = _mm256_set1_ps(-cap);
+    let hi = _mm256_set1_ps(cap);
+    let mut p = xs.as_mut_ptr();
+    let end = p.add(xs.len());
+    // Scalar head up to 32-byte alignment (stream stores must be aligned).
+    while (p as usize) & 31 != 0 {
+        *p = scalar::clamp1(*p, cap);
+        p = p.add(1);
+    }
+    while p.add(LANES) <= end {
+        let t = _mm256_min_ps(hi, _mm256_max_ps(lo, _mm256_load_ps(p)));
+        _mm256_stream_ps(p, t);
+        p = p.add(LANES);
+    }
+    // Make the write-combining stores globally visible before returning
+    // to code that may read the buffer from another thread.
+    _mm_sfence();
+    while p < end {
+        *p = scalar::clamp1(*p, cap);
+        p = p.add(1);
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn colmax_clamp_avx2(xs: &mut [f32], cap: f32) -> f32 {
+    let sign = _mm256_set1_ps(-0.0);
+    let lo = _mm256_set1_ps(-cap);
+    let hi = _mm256_set1_ps(cap);
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        let x = _mm256_loadu_ps(p);
+        acc = _mm256_max_ps(_mm256_andnot_ps(sign, x), acc);
+        _mm256_storeu_ps(p, _mm256_min_ps(hi, _mm256_max_ps(lo, x)));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let rem = chunks.into_remainder();
+    let mut m = 0.0f32;
+    for x in rem.iter_mut() {
+        let v = x.abs();
+        if v > m {
+            m = v;
+        }
+        *x = scalar::clamp1(*x, cap);
+    }
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    m
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn shrink_avx2(xs: &mut [f32], tau: f32) {
+    let sign = _mm256_set1_ps(-0.0);
+    let tauv = _mm256_set1_ps(tau);
+    let zero = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        let x = _mm256_loadu_ps(p);
+        let a = _mm256_sub_ps(_mm256_andnot_ps(sign, x), tauv);
+        // a > 0 (ordered: false for NaN, like the scalar branch) keeps
+        // sign(x)·a, else +0.0 — `shrink1` exactly.
+        let keep = _mm256_cmp_ps::<_CMP_GT_OQ>(a, zero);
+        let signed = _mm256_or_ps(a, _mm256_and_ps(x, sign));
+        _mm256_storeu_ps(p, _mm256_and_ps(signed, keep));
+    }
+    for x in chunks.into_remainder() {
+        *x = scalar::shrink1(*x, tau);
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn scale_avx2(xs: &mut [f32], s: f32) {
+    let sv = _mm256_set1_ps(s);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for c in chunks.by_ref() {
+        let p = c.as_mut_ptr();
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), sv));
+    }
+    for x in chunks.into_remainder() {
+        *x *= s;
+    }
+}
+
+// --- AVX-512: the scalar bodies recompiled at zmm width. ------------------
+//
+// The `#[inline(always)]` scalar bodies are inlined into these carriers
+// and compiled with avx512f enabled: the 8×f64 sum accumulators land in
+// one zmm register and the streaming loops autovectorize at 16 f32 lanes.
+// Identical source ⇒ identical arithmetic ⇒ bit-identical results.
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn max_abs_avx512(xs: &[f32]) -> f32 {
+    scalar::max_abs(xs)
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn abs_sum_avx512(xs: &[f32]) -> f64 {
+    scalar::abs_sum(xs)
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn sq_sum_avx512(xs: &[f32]) -> f64 {
+    scalar::sq_sum(xs)
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn clamp_abs_avx512(xs: &mut [f32], cap: f32) {
+    scalar::clamp_abs(xs, cap);
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn colmax_clamp_avx512(xs: &mut [f32], cap: f32) -> f32 {
+    scalar::colmax_clamp(xs, cap)
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn shrink_avx512(xs: &mut [f32], tau: f32) {
+    scalar::shrink(xs, tau);
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX-512F.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn scale_avx512(xs: &mut [f32], s: f32) {
+    scalar::scale(xs, s);
+}

@@ -23,6 +23,7 @@ use mlproj::coordinator::{report, sweeps, TrainConfig, Trainer};
 use mlproj::core::error::{MlprojError, Result};
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
+use mlproj::core::simd::{self, KernelVariant};
 use mlproj::data::{csv, make_classification, make_lung, LungSpec, SyntheticSpec};
 use mlproj::projection::l1::L1Algo;
 use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
@@ -117,7 +118,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "seed", "repeats", "workers", "artifact_dir", "project_every", "verbose",
 ];
 const SWEEP_FLAGS: &[&str] = &["preset", "repeats", "out"];
-const PROJECT_FLAGS: &[&str] = &["n", "m", "eta", "workers", "norms", "l1algo", "seed"];
+const PROJECT_FLAGS: &[&str] = &["n", "m", "eta", "workers", "norms", "l1algo", "seed", "kernel"];
 const DATAGEN_FLAGS: &[&str] = &["dataset", "out"];
 const INFO_FLAGS: &[&str] = &["dataset", "addr"];
 const SERVE_FLAGS: &[&str] = &[
@@ -174,6 +175,7 @@ USAGE:
                presets: table2 table3 table4 table5 fig5_synthetic fig5_lung
   mlproj project [--n N] [--m M] [--eta F] [--workers W] [--norms linf,l1]
                  [--l1algo condat|sort|michelot] [--seed S]
+                 [--kernel scalar|avx2|avx512|neon]
   mlproj serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
                [--batch-max N] [--cache-cap N] [--exec-workers N]
                [--max-body-bytes B] [--max-inflight N]
@@ -235,6 +237,12 @@ fn run(argv: &[String]) -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+fn parse_kernel(s: &str) -> Result<KernelVariant> {
+    KernelVariant::parse(s).ok_or_else(|| {
+        MlprojError::invalid(format!("unknown --kernel `{s}` (scalar | avx2 | avx512 | neon)"))
+    })
 }
 
 fn parse_l1_algo(s: &str) -> Result<L1Algo> {
@@ -348,8 +356,13 @@ fn cmd_project(args: &Args) -> Result<()> {
         _ => 0.0, // unreachable: compile rejects other counts for a matrix
     };
 
-    let spec = ProjectionSpec::new(norm_list.clone(), eta).with_l1_algo(algo);
-    // Compiling reports norm-count/shape problems before any work runs.
+    let mut spec = ProjectionSpec::new(norm_list.clone(), eta).with_l1_algo(algo);
+    if let Some(k) = args.get("kernel") {
+        // Compile rejects variants this host cannot run.
+        spec = spec.with_kernel(parse_kernel(k)?);
+    }
+    // Compiling reports norm-count/shape/kernel problems before any work
+    // runs.
     let mut serial_plan = spec.compile_for_matrix(n, m)?;
     println!(
         "Y: {n}x{m}, ‖Y‖ν = {norm_before:.3}, η = {eta}, plan: {}",
@@ -841,6 +854,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // call executed (a lifetime high-water mark, not a per-run delta).
     let (batches, batched) = (get("batches"), get("batched_requests"));
     let batch_max = lookup(&after, "batch_size_max");
+    // Kernel autotuner observables: plans that measured ≥ 2 candidate
+    // variants this run, and which variant each new plan pinned.
+    let autotuned = get("autotuned_plans");
+    let pins = [
+        ("scalar", get("kernel_pins_scalar")),
+        ("avx2", get("kernel_pins_avx2")),
+        ("avx512", get("kernel_pins_avx512")),
+        ("neon", get("kernel_pins_neon")),
+    ];
 
     println!(
         "sequential: throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
@@ -863,6 +885,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "batching: {batches} batches, {batched} batched requests, \
          max batch size {batch_max}"
     );
+    println!(
+        "kernels: {autotuned} autotuned plans; pins scalar {} avx2 {} avx512 {} neon {}",
+        pins[0].1, pins[1].1, pins[2].1, pins[3].1
+    );
 
     let mut kv = vec![
         ("clients", clients as f64),
@@ -877,6 +903,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("batched_requests", batched as f64),
         ("batch_size_max", batch_max as f64),
         ("pipeline_depth", depth as f64),
+        ("autotuned_plans", autotuned as f64),
+        ("kernel_pins_scalar", pins[0].1 as f64),
+        ("kernel_pins_avx2", pins[1].1 as f64),
+        ("kernel_pins_avx512", pins[2].1 as f64),
+        ("kernel_pins_neon", pins[3].1 as f64),
     ];
     if let Some((rps, pp50, pp99, pbusy, pwall)) = pipelined {
         kv.extend_from_slice(&[
@@ -1086,6 +1117,18 @@ fn cmd_info(args: &Args) -> Result<()> {
     let dir = mlproj::coordinator::trainer::artifact_dir_for(&cfg);
     println!("mlproj {}", mlproj::version());
     println!("artifact dir: {dir}");
+    println!(
+        "simd kernels: supported [{}], best {}",
+        simd::labels(simd::supported()),
+        simd::best_supported()
+    );
+    match simd::forced_from_env() {
+        Ok(Some(v)) => println!("{}: forcing {v}", simd::FORCE_ENV),
+        Ok(None) => {}
+        // Surface the bad value here instead of erroring: `info` is a
+        // diagnostic command and should explain why serves will fail.
+        Err(e) => println!("{}: INVALID ({e})", simd::FORCE_ENV),
+    }
     match mlproj::runtime::ArtifactStore::open(Path::new(&dir)) {
         Ok(store) => {
             let man = &store.manifest;
@@ -1180,6 +1223,16 @@ mod tests {
         assert_eq!(parse_l1_algo("sort").unwrap(), L1Algo::Sort);
         assert_eq!(parse_l1_algo("michelot").unwrap(), L1Algo::Michelot);
         assert!(parse_l1_algo("newton").is_err());
+    }
+
+    #[test]
+    fn kernel_parsing() {
+        assert_eq!(parse_kernel("scalar").unwrap(), KernelVariant::Scalar);
+        assert_eq!(parse_kernel("avx2").unwrap(), KernelVariant::Avx2);
+        assert_eq!(parse_kernel("avx512").unwrap(), KernelVariant::Avx512);
+        assert_eq!(parse_kernel("neon").unwrap(), KernelVariant::Neon);
+        let err = parse_kernel("sse9").unwrap_err();
+        assert!(format!("{err}").contains("--kernel"), "{err}");
     }
 
     #[test]

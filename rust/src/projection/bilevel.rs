@@ -22,6 +22,14 @@
 //! [`L1Scratch`] memory; these one-shot entry points allocate only the
 //! m-length aggregate vector (the compiled operator layer doesn't even do
 //! that — see [`crate::projection::operator`]).
+//!
+//! The element sweeps (`kernels::clamp_abs` / `kernels::scale` here, the
+//! column reductions inside the threshold) run on the process-default
+//! SIMD variant ([`crate::core::simd::active_default`]); compiled plans
+//! go further and thread their per-plan *autotuned* variant through the
+//! same kernels, plus prefetch and nontemporal-store refinements — all
+//! bit-identical to these free functions by the kernel equivalence
+//! contract.
 
 use crate::core::kernels;
 use crate::core::matrix::Matrix;

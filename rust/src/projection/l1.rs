@@ -33,6 +33,12 @@
 //! [`project_l1_inplace_with`], the three `threshold_*` functions) remain
 //! as thin wrappers over the same cores, so fused and legacy paths are
 //! bit-identical by construction (pinned by `tests/fused_reference.rs`).
+//!
+//! The element streams here (`kernels::shrink`, `kernels::max_abs`)
+//! dispatch to the process-default SIMD variant; `abs_into_sum` stays
+//! deliberately serial because its feasibility sum is the one reduction
+//! whose association predates the 8-lane kernels and is pinned by the
+//! in-ball early-out contract (see `core/kernels.rs`).
 
 use crate::core::kernels;
 use crate::core::sort::sort_desc;

@@ -28,7 +28,10 @@ pub mod multilevel;
 pub mod norms;
 pub mod operator;
 
-pub use operator::{ExecBackend, Method, ProjectionPlan, ProjectionSpec, Projector, Workspace};
+pub use operator::{
+    ExecBackend, KernelDispatch, Method, ProjectionPlan, ProjectionSpec, Projector, Workspace,
+    AUTOTUNE_ROUNDS,
+};
 
 /// The norms supported at each level of a (bi/multi)-level projection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

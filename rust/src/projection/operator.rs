@@ -43,11 +43,12 @@
 
 use std::fmt;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::core::error::{MlprojError, Result};
 use crate::core::kernels;
 use crate::core::matrix::Matrix;
-use crate::core::sort::{l1_norm, l2_norm, max_abs};
+use crate::core::simd::{self, KernelVariant};
 use crate::core::tensor::Tensor;
 use crate::parallel::chunks::even_ranges;
 use crate::parallel::pool::WorkerPool;
@@ -205,7 +206,9 @@ pub struct ProjectionSpec {
     /// Norm list `ν = [q_1, …, q_r]`, leading-axis norm first; the last
     /// entry is the final vector projection carrying the radius `η`.
     pub norms: Vec<Norm>,
-    /// Ball radius `η` (≤ 0 projects to the origin, like the kernels).
+    /// Ball radius `η`. Must be finite and non-negative — validated at
+    /// compile time ([`MlprojError::InvalidRadius`]) so a hostile radius
+    /// can never reach a kernel. `η = 0` projects to the origin.
     pub eta: f64,
     /// ℓ1 threshold algorithm for every inner/outer ℓ1 step.
     pub l1_algo: L1Algo,
@@ -213,6 +216,11 @@ pub struct ProjectionSpec {
     pub method: Method,
     /// Execution backend.
     pub backend: ExecBackend,
+    /// Explicit SIMD kernel variant. `None` (default) lets the plan's
+    /// [`KernelDispatch`] autotune over every host-supported variant (or
+    /// obey `MLPROJ_FORCE_KERNEL`); `Some` pins the variant at compile
+    /// time and is rejected if the host does not support it.
+    pub kernel: Option<KernelVariant>,
 }
 
 impl ProjectionSpec {
@@ -224,6 +232,7 @@ impl ProjectionSpec {
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             backend: ExecBackend::Serial,
+            kernel: None,
         }
     }
 
@@ -265,6 +274,13 @@ impl ProjectionSpec {
         self
     }
 
+    /// Pin an explicit SIMD kernel variant (skips autotuning). Compile
+    /// fails if the host does not support `variant`.
+    pub fn with_kernel(mut self, variant: KernelVariant) -> Self {
+        self.kernel = Some(variant);
+        self
+    }
+
     /// Compile against a row-major [`Tensor`] shape (one norm per axis,
     /// or a single norm for the flattened projection).
     pub fn compile(&self, shape: &[usize]) -> Result<ProjectionPlan> {
@@ -297,11 +313,17 @@ impl ProjectionSpec {
         if self.norms.is_empty() {
             return Err(MlprojError::invalid("norm list ν must not be empty"));
         }
-        if !self.eta.is_finite() {
-            return Err(MlprojError::invalid(format!(
-                "radius eta must be finite (got {})",
-                self.eta
-            )));
+        if !self.eta.is_finite() || self.eta < 0.0 {
+            return Err(MlprojError::InvalidRadius { eta: self.eta });
+        }
+        if let Some(v) = self.kernel {
+            if !simd::is_supported(v) {
+                return Err(MlprojError::invalid(format!(
+                    "kernel variant `{v}` is not supported on this host \
+                     (supported: {})",
+                    simd::labels(simd::supported())
+                )));
+            }
         }
         if self.norms.len() != 1 && self.norms.len() != ndim {
             return Err(MlprojError::NormCountMismatch {
@@ -325,6 +347,19 @@ impl ProjectionSpec {
                         norm: self.norms[0],
                         eta: self.eta,
                         algo: self.l1_algo,
+                    })
+                } else if layout == Layout::ColMajorMatrix
+                    && (self.norms[1], self.norms[0]) == (Norm::Linf, Norm::Linf)
+                {
+                    // BP^{∞,∞}: the outer ℓ∞ threshold is pointwise
+                    // (u_j = min(v_j, η)), so column norms never need to
+                    // materialize — no aggregate buffers at all, and the
+                    // matrix is streamed once instead of twice.
+                    Box::new(FusedLinfClampKernel {
+                        rows: shape[0],
+                        cols: shape[1],
+                        eta: self.eta,
+                        backend: self.backend.clone(),
                     })
                 } else if layout == Layout::ColMajorMatrix {
                     ws.colnorms = vec![0.0; shape[1]];
@@ -415,12 +450,21 @@ impl ProjectionSpec {
                 Box::new(ExactFlatL1Kernel { eta: self.eta, algo: self.l1_algo })
             }
         };
+        // Only the column-streaming matrix kernels consume the per-call
+        // variant tag; other kernels run the process-wide default, so
+        // measuring candidates for them would pin on pure noise.
+        let tuned = layout == Layout::ColMajorMatrix
+            && self.method == Method::Compositional
+            && self.norms.len() > 1;
+        let dispatch = KernelDispatch::for_spec(self, tuned)?;
+        ws.variant = dispatch.current();
         Ok(ProjectionPlan {
             spec: self.clone(),
             shape: shape.to_vec(),
             layout,
             kernel,
             ws,
+            dispatch,
         })
     }
 }
@@ -461,6 +505,114 @@ enum Layout {
     RowMajorTensor,
 }
 
+/// Measured warmup calls per candidate before the autotuner pins a
+/// winner into the plan.
+pub const AUTOTUNE_ROUNDS: u32 = 3;
+
+/// Per-plan measuring autotuner over SIMD kernel variants.
+///
+/// The candidate kernels are **bit-identical** by construction
+/// (`tests/kernel_equivalence.rs`), so which one runs is purely a
+/// performance decision — and instead of guessing from CPUID strings,
+/// the plan *measures*: the first `AUTOTUNE_ROUNDS × |candidates|`
+/// projection calls rotate round-robin through the candidates, each call
+/// is timed, and the per-candidate minimum (the least-noise estimator for
+/// a memory-bound streaming kernel) decides the winner, which is pinned
+/// for the rest of the plan's life. A spec-pinned variant
+/// ([`ProjectionSpec::with_kernel`]) or `MLPROJ_FORCE_KERNEL` collapses
+/// the candidate set to one, pinned at compile time. Everything here is
+/// preallocated at compile: warm-path calls do zero heap allocation
+/// (`tests/operator_alloc.rs`).
+#[derive(Debug)]
+pub struct KernelDispatch {
+    /// Candidate variants (singleton when forced by spec or env).
+    candidates: Vec<KernelVariant>,
+    /// Best (minimum) per-payload nanoseconds seen per candidate.
+    best_ns: Vec<u64>,
+    /// Measured warmup calls so far.
+    calls: u32,
+    /// The pinned winner (`None` while warming up).
+    pinned: Option<KernelVariant>,
+    /// One-shot pin notification for the stats layer.
+    pin_event: Option<KernelVariant>,
+}
+
+impl KernelDispatch {
+    /// Resolve the candidate set for a spec. Precedence: an explicit
+    /// `spec.kernel` (already validated as supported) beats the
+    /// `MLPROJ_FORCE_KERNEL` env override beats autotuning over every
+    /// host-supported variant. Plans whose kernel ignores the variant tag
+    /// (`tuned = false`) pin the process default immediately.
+    fn for_spec(spec: &ProjectionSpec, tuned: bool) -> Result<KernelDispatch> {
+        let forced = simd::forced_from_env()?;
+        let candidates = match spec.kernel.or(forced) {
+            Some(v) => vec![v],
+            None if tuned => simd::supported().to_vec(),
+            None => vec![simd::active_default()],
+        };
+        let mut d = KernelDispatch {
+            best_ns: vec![u64::MAX; candidates.len()],
+            candidates,
+            calls: 0,
+            pinned: None,
+            pin_event: None,
+        };
+        if d.candidates.len() == 1 {
+            d.pinned = Some(d.candidates[0]);
+            d.pin_event = d.pinned;
+        }
+        Ok(d)
+    }
+
+    /// Variant the next call should run: the winner once pinned, else the
+    /// round-robin warmup candidate.
+    fn current(&self) -> KernelVariant {
+        match self.pinned {
+            Some(v) => v,
+            None => self.candidates[self.calls as usize % self.candidates.len()],
+        }
+    }
+
+    /// Record one measured warmup call for the candidate [`Self::current`]
+    /// returned, and pin the argmin winner once every candidate has
+    /// [`AUTOTUNE_ROUNDS`] measurements.
+    fn record(&mut self, ns_per_payload: u64) {
+        if self.pinned.is_some() {
+            return;
+        }
+        let idx = self.calls as usize % self.candidates.len();
+        if ns_per_payload < self.best_ns[idx] {
+            self.best_ns[idx] = ns_per_payload;
+        }
+        self.calls += 1;
+        if self.calls as usize >= AUTOTUNE_ROUNDS as usize * self.candidates.len() {
+            let win = self
+                .best_ns
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, ns)| *ns)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            self.pinned = Some(self.candidates[win]);
+            self.pin_event = self.pinned;
+        }
+    }
+
+    /// One-shot pin notification: `Some((winner, |candidates|))` exactly
+    /// once, on the compile (forced) or the call that pinned.
+    fn take_pin_event(&mut self) -> Option<(KernelVariant, usize)> {
+        self.pin_event.take().map(|v| (v, self.candidates.len()))
+    }
+
+    /// Label for `describe()` and logs.
+    fn describe(&self) -> String {
+        match self.pinned {
+            Some(v) => v.label().to_string(),
+            None => format!("autotune({})", simd::labels(&self.candidates)),
+        }
+    }
+}
+
 /// Preallocated scratch owned by a [`ProjectionPlan`]. All buffers are
 /// sized at compile time; projection calls only read/write them. The
 /// batch-only buffers (`taus`, `job_ptrs`, the tail of `colnorms`) grow
@@ -493,6 +645,10 @@ pub struct Workspace {
     taus: Vec<f32>,
     /// Base pointers of the payloads in the current (batched) call.
     job_ptrs: Vec<JobPtr>,
+    /// SIMD variant the current call should run, threaded from the
+    /// plan's [`KernelDispatch`] (a `Copy` tag — no heap, so it does not
+    /// count toward [`Workspace::bytes`]).
+    variant: KernelVariant,
 }
 
 impl Workspace {
@@ -544,6 +700,7 @@ pub struct ProjectionPlan {
     layout: Layout,
     kernel: Box<dyn Projector>,
     ws: Workspace,
+    dispatch: KernelDispatch,
 }
 
 impl ProjectionPlan {
@@ -562,14 +719,56 @@ impl ProjectionPlan {
         self.ws.bytes()
     }
 
-    /// Selected kernel + backend, for logs and the CLI.
+    /// Selected kernel + backend + SIMD variant, for logs and the CLI.
     pub fn describe(&self) -> String {
         format!(
-            "{} on {:?} [{}]",
+            "{} on {:?} [{}] kernel={}",
             self.kernel.describe(),
             self.shape,
-            self.spec.backend.label()
+            self.spec.backend.label(),
+            self.dispatch.describe()
         )
+    }
+
+    /// The SIMD variant the next projection call will run: the autotuned
+    /// winner once pinned, else the current warmup candidate.
+    pub fn kernel_variant(&self) -> KernelVariant {
+        self.dispatch.current()
+    }
+
+    /// `Some(winner)` once the autotuner has pinned a variant (immediately
+    /// for forced/explicit variants, after the measured warmup otherwise).
+    pub fn pinned_kernel(&self) -> Option<KernelVariant> {
+        self.dispatch.pinned
+    }
+
+    /// One-shot pin notification: `Some((winner, n_candidates))` exactly
+    /// once per plan, on the compile (single candidate) or on the call
+    /// whose measurement completed the warmup. The service bumps its
+    /// per-variant `kernel_pins_*` counters off this.
+    pub fn take_kernel_pin(&mut self) -> Option<(KernelVariant, usize)> {
+        self.dispatch.take_pin_event()
+    }
+
+    /// Run one projection call through the dispatcher: thread the current
+    /// variant into the workspace and, while the autotuner is still
+    /// warming up, time the call (normalized per payload) and feed the
+    /// measurement back. Pinned plans skip the clock entirely.
+    fn run_kernel<F>(&mut self, payloads: usize, f: F) -> Result<()>
+    where
+        F: FnOnce(&dyn Projector, &mut Workspace) -> Result<()>,
+    {
+        self.ws.variant = self.dispatch.current();
+        if self.dispatch.pinned.is_some() {
+            return f(self.kernel.as_ref(), &mut self.ws);
+        }
+        let t0 = Instant::now();
+        let out = f(self.kernel.as_ref(), &mut self.ws);
+        if out.is_ok() {
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.dispatch.record(ns / payloads.max(1) as u64);
+        }
+        out
     }
 
     /// Project a flat buffer in place (layout must match the compile
@@ -582,7 +781,7 @@ impl ProjectionPlan {
                 got: vec![data.len()],
             });
         }
-        self.kernel.project_inplace(data, &mut self.ws)
+        self.run_kernel(1, |k, ws| k.project_inplace(data, ws))
     }
 
     /// Project a batch of same-shape flat buffers, each independently,
@@ -602,7 +801,8 @@ impl ProjectionPlan {
                 });
             }
         }
-        self.kernel.project_batch(payloads, &mut self.ws)
+        let jobs = payloads.len();
+        self.run_kernel(jobs, |k, ws| k.project_batch(payloads, ws))
     }
 
     /// Project a column-major matrix in place.
@@ -618,7 +818,7 @@ impl ProjectionPlan {
                 got: vec![y.rows(), y.cols()],
             });
         }
-        self.kernel.project_inplace(y.data_mut(), &mut self.ws)
+        self.run_kernel(1, |k, ws| k.project_inplace(y.data_mut(), ws))
     }
 
     /// Project a row-major tensor in place.
@@ -634,7 +834,7 @@ impl ProjectionPlan {
                 got: y.shape().to_vec(),
             });
         }
-        self.kernel.project_inplace(y.data_mut(), &mut self.ws)
+        self.run_kernel(1, |k, ws| k.project_inplace(y.data_mut(), ws))
     }
 }
 
@@ -693,6 +893,7 @@ impl BilevelMatrixKernel {
             return Ok(());
         }
         let total = jobs * cols;
+        let variant = ws.variant;
         let Workspace { colnorms, colnorms_proj, l1, l1s, taus, job_ptrs, .. } = ws;
         if colnorms.len() < total {
             colnorms.resize(total, 0.0);
@@ -707,13 +908,21 @@ impl BilevelMatrixKernel {
             run_partitioned(&self.backend, total, move |_, (s, e)| {
                 for g in s..e {
                     let (b, j) = (g / cols, g % cols);
+                    // Overlap the next column's first-line miss with this
+                    // column's reduction (the sweep is miss-bound at
+                    // column boundaries once columns leave L1).
+                    if g + 1 < e {
+                        let (b2, j2) = ((g + 1) / cols, (g + 1) % cols);
+                        let next = unsafe { ptrs[b2].0.add(j2 * rows) };
+                        simd::prefetch_read(next);
+                    }
                     let col = unsafe {
                         std::slice::from_raw_parts(ptrs[b].0.add(j * rows), rows)
                     };
                     let n = match q {
-                        Norm::Linf => max_abs(col),
-                        Norm::L1 => l1_norm(col) as f32,
-                        Norm::L2 => l2_norm(col) as f32,
+                        Norm::Linf => kernels::max_abs_with(variant, col),
+                        Norm::L1 => kernels::abs_sum_with(variant, col) as f32,
+                        Norm::L2 => kernels::sq_sum_with(variant, col).sqrt() as f32,
                     };
                     unsafe {
                         *vp.get().add(g) = n;
@@ -747,6 +956,9 @@ impl BilevelMatrixKernel {
             }
             let v: &[f32] = colnorms;
             let taus: &[f32] = taus;
+            // Sweeps far past any LLC gain nothing from caching the
+            // stores; stream them past the hierarchy (bit-identical).
+            let nt = total * rows * std::mem::size_of::<f32>() >= simd::NT_SWEEP_BYTES;
             run_partitioned(&self.backend, total, move |_, (s, e)| {
                 for g in s..e {
                     let (b, j) = (g / cols, g % cols);
@@ -762,8 +974,10 @@ impl BilevelMatrixKernel {
                     };
                     if u <= 0.0 {
                         col.fill(0.0);
+                    } else if nt {
+                        kernels::clamp_abs_nt_with(variant, col, u);
                     } else {
-                        kernels::clamp_abs(col, u);
+                        kernels::clamp_abs_with(variant, col, u);
                     }
                 }
             });
@@ -794,11 +1008,11 @@ impl BilevelMatrixKernel {
                             std::slice::from_raw_parts_mut(base.0.add(j * rows), rows)
                         };
                         match q {
-                            Norm::Linf => kernels::clamp_abs(col, u[j].max(0.0)),
+                            Norm::Linf => kernels::clamp_abs_with(variant, col, u[j].max(0.0)),
                             Norm::L2 => {
                                 let scale =
                                     if v_b[j] > 0.0 { (u[j] / v_b[j]).max(0.0) } else { 0.0 };
-                                kernels::scale(col, scale);
+                                kernels::scale_with(variant, col, scale);
                             }
                             Norm::L1 => {
                                 // SAFETY: scratch `part` is touched only
@@ -837,6 +1051,77 @@ impl Projector for BilevelMatrixKernel {
 
     fn describe(&self) -> String {
         format!("bilevel BP^{{{},{}}} η={}", self.p, self.q, self.eta)
+    }
+}
+
+/// Fused single-stream bi-level `BP^{∞,∞}`: when both levels are ℓ∞ the
+/// outer threshold is pointwise (`u_j = min(v_j, η)`), so the decomposed
+/// path's two sweeps — a colmax sweep materializing `v`, then a guarded
+/// clamp sweep — collapse into ONE read+write stream per column
+/// ([`kernels::colmax_clamp_with`]).
+///
+/// Bit-identical to the decomposed path: a column with `v_j ≤ η` skips
+/// the guarded clamp there, and skips it *bitwise* here too (every
+/// element satisfies `|x| ≤ v_j ≤ η`, so the compare-select clamp stores
+/// each value back unchanged, including `-η` and `-0.0`); a column with
+/// `v_j > η` clamps to exactly `u_j = η` on both paths. NaN data passes
+/// through either way. The colmax the stream computes for free is what
+/// the decomposed stage 1 produced; with a pointwise threshold nothing
+/// downstream needs it, so it is discarded.
+struct FusedLinfClampKernel {
+    rows: usize,
+    cols: usize,
+    eta: f64,
+    backend: ExecBackend,
+}
+
+impl FusedLinfClampKernel {
+    fn run(&self, jobs: usize, ws: &mut Workspace) -> Result<()> {
+        let (rows, cols) = (self.rows, self.cols);
+        if rows == 0 || cols == 0 || jobs == 0 {
+            return Ok(());
+        }
+        // Same cap computation as the outer ℓ∞ projection
+        // (`project_linf_inplace`), so the bits match the generic path.
+        let cap = self.eta.max(0.0) as f32;
+        let variant = ws.variant;
+        let ptrs: &[JobPtr] = &ws.job_ptrs;
+        let total = jobs * cols;
+        run_partitioned(&self.backend, total, move |_, (s, e)| {
+            for g in s..e {
+                let (b, j) = (g / cols, g % cols);
+                if g + 1 < e {
+                    let (b2, j2) = ((g + 1) / cols, (g + 1) % cols);
+                    let next = unsafe { ptrs[b2].0.add(j2 * rows) };
+                    simd::prefetch_read(next);
+                }
+                let col = unsafe {
+                    std::slice::from_raw_parts_mut(ptrs[b].0.add(j * rows), rows)
+                };
+                let _ = kernels::colmax_clamp_with(variant, col, cap);
+            }
+        });
+        Ok(())
+    }
+}
+
+impl Projector for FusedLinfClampKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        ws.job_ptrs.clear();
+        ws.job_ptrs.push(JobPtr(data.as_mut_ptr()));
+        self.run(1, ws)
+    }
+
+    fn project_batch(&self, payloads: &mut [Vec<f32>], ws: &mut Workspace) -> Result<()> {
+        ws.job_ptrs.clear();
+        for p in payloads.iter_mut() {
+            ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
+        }
+        self.run(payloads.len(), ws)
+    }
+
+    fn describe(&self) -> String {
+        format!("bilevel BP^{{linf,linf}} η={} (fused colmax+clamp)", self.eta)
     }
 }
 
@@ -1163,6 +1448,7 @@ mod tests {
         let d = plan.describe();
         assert!(d.contains("bilevel"), "{d}");
         assert!(d.contains("serial"), "{d}");
+        assert!(d.contains("kernel="), "{d}");
         let plan = ProjectionSpec::trilevel_l1infinf(1.0)
             .with_backend(ExecBackend::pool(2))
             .compile(&[2, 3, 4])
@@ -1286,5 +1572,110 @@ mod tests {
     fn backend_labels() {
         assert_eq!(ExecBackend::Serial.label(), "serial");
         assert_eq!(ExecBackend::pool(3).label(), "pool(3)");
+    }
+
+    #[test]
+    fn compile_rejects_non_finite_or_negative_radius() {
+        // Regression: a hostile wire request with η = NaN used to reach
+        // `f32::clamp`, which panics on NaN bounds — killing the worker.
+        // Now every bad radius dies at compile with a typed error.
+        for eta in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -1e-300] {
+            let err = ProjectionSpec::l1inf(eta).compile_for_matrix(3, 4).unwrap_err();
+            assert!(matches!(err, MlprojError::InvalidRadius { .. }), "eta={eta}: {err}");
+            let err = ProjectionSpec::flat(Norm::L2, eta).compile(&[8]).unwrap_err();
+            assert!(matches!(err, MlprojError::InvalidRadius { .. }), "eta={eta}: {err}");
+        }
+        // η = 0 stays legal (projects to the origin).
+        ProjectionSpec::l1inf(0.0).compile_for_matrix(3, 4).unwrap();
+    }
+
+    #[test]
+    fn explicit_kernel_pins_at_compile_and_rejects_unsupported() {
+        let plan = ProjectionSpec::l1inf(1.0)
+            .with_kernel(KernelVariant::Scalar)
+            .compile_for_matrix(3, 4)
+            .unwrap();
+        assert_eq!(plan.pinned_kernel(), Some(KernelVariant::Scalar));
+        assert_eq!(plan.kernel_variant(), KernelVariant::Scalar);
+        // Some variant is always foreign to the host (NEON on x86, AVX on
+        // AArch64): pinning it must fail the compile, loudly.
+        let foreign = KernelVariant::ALL.iter().copied().find(|&v| !simd::is_supported(v));
+        if let Some(v) = foreign {
+            let err = ProjectionSpec::l1inf(1.0)
+                .with_kernel(v)
+                .compile_for_matrix(3, 4)
+                .unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("not supported"), "{msg}");
+            assert!(msg.contains(v.label()), "{msg}");
+        }
+    }
+
+    #[test]
+    fn autotune_measures_then_pins_and_reports_once() {
+        if simd::forced_from_env().unwrap_or(None).is_some() {
+            return; // a forced variant pins at compile; nothing to tune
+        }
+        let mut rng = Rng::new(7);
+        let mut plan = ProjectionSpec::l1inf(1.3).compile_for_matrix(16, 24).unwrap();
+        let candidates = simd::supported().len();
+        assert!(plan.pinned_kernel().is_none() || candidates == 1);
+        let mut data = vec![0.0f32; 16 * 24];
+        for _ in 0..AUTOTUNE_ROUNDS as usize * candidates {
+            assert!(plan.pinned_kernel().is_none() || candidates == 1);
+            rng.fill_uniform(&mut data, -2.0, 2.0);
+            plan.project_inplace(&mut data).unwrap();
+        }
+        // Warmup complete: a winner is pinned, reported exactly once.
+        let pinned = plan.pinned_kernel().expect("warmup must pin a winner");
+        assert!(simd::is_supported(pinned));
+        let (winner, n) = plan.take_kernel_pin().expect("pin event fires once");
+        assert_eq!(winner, pinned);
+        assert_eq!(n, candidates);
+        assert!(plan.take_kernel_pin().is_none(), "pin event is one-shot");
+        assert_eq!(plan.kernel_variant(), pinned, "pinned variant sticks");
+    }
+
+    #[test]
+    fn fused_linf_linf_matches_generic_reference_bitwise() {
+        // The fused single-stream BP^{∞,∞} kernel must be bit-identical
+        // to the decomposed reference: colmax per column, outer pointwise
+        // min with η, guarded clamp. Mixed magnitudes so some columns are
+        // in-ball (must be untouched bitwise) and some clip.
+        let mut rng = Rng::new(41);
+        for backend in [ExecBackend::Serial, ExecBackend::pool(3)] {
+            for (rows, cols) in [(1usize, 1usize), (7, 5), (32, 17)] {
+                let spec = ProjectionSpec::bilevel(Norm::Linf, Norm::Linf, 0.8)
+                    .with_backend(backend.clone());
+                let mut plan = spec.compile_for_matrix(rows, cols).unwrap();
+                assert!(plan.describe().contains("fused"), "{}", plan.describe());
+                let mut data = vec![0.0f32; rows * cols];
+                rng.fill_uniform(&mut data, -2.0, 2.0);
+                for j in 0..cols / 2 {
+                    // Shrink even columns inside the ball.
+                    for x in &mut data[2 * j * rows..(2 * j + 1) * rows] {
+                        *x *= 0.1;
+                    }
+                }
+                let mut want = data.clone();
+                for j in 0..cols {
+                    let col = &mut want[j * rows..(j + 1) * rows];
+                    let v = col.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                    let u = v.min(0.8);
+                    if u < v {
+                        for x in col.iter_mut() {
+                            *x = x.clamp(-u, u);
+                        }
+                    }
+                }
+                plan.project_inplace(&mut data).unwrap();
+                assert_eq!(data, want, "{rows}x{cols}");
+                // Batched calls run the same fused stages.
+                let mut batch = vec![data.clone(), want.clone()];
+                plan.project_batch_inplace(&mut batch).unwrap();
+                assert_eq!(batch[0], want);
+                assert_eq!(batch[1], want);
+            }
+        }
     }
 }

@@ -255,7 +255,17 @@ impl ShardedPlanCache {
         };
         let mut shard = self.shards[idx].lock().expect("plan-cache shard poisoned");
         let plan = shard.get_or_compile(key, backend)?;
-        Ok(f(plan))
+        let out = f(plan);
+        // Harvest the one-shot kernel-pin event (fires at compile for
+        // forced/explicit variants, after the measured warmup otherwise)
+        // into the per-variant counters.
+        if let Some((variant, candidates)) = plan.take_kernel_pin() {
+            ServiceStats::bump(self.stats.kernel_pin_counter(variant));
+            if candidates >= 2 {
+                ServiceStats::bump(&self.stats.autotuned_plans);
+            }
+        }
+        Ok(out)
     }
 
     /// Total cached plans across all shards.
@@ -394,6 +404,38 @@ mod tests {
             .project_matrix_inplace(&mut again)
             .unwrap();
         assert_eq!(again.data(), expect.data());
+    }
+
+    #[test]
+    fn kernel_pin_is_counted_once_per_plan() {
+        use crate::core::simd;
+        use crate::projection::AUTOTUNE_ROUNDS;
+        let stats = Arc::new(ServiceStats::new());
+        let cache = ShardedPlanCache::new(1, 4, Arc::clone(&stats));
+        let k = key(vec![8, 8], 1.0);
+        // Drive the plan through its full autotune warmup and beyond.
+        let calls = AUTOTUNE_ROUNDS as usize * simd::supported().len() + 2;
+        let mut data = vec![0.25f32; 64];
+        for _ in 0..calls {
+            cache
+                .with_plan(None, &k, &ExecBackend::Serial, |plan| {
+                    plan.project_inplace(&mut data).unwrap()
+                })
+                .unwrap();
+        }
+        let pins: u64 = [
+            &stats.kernel_pins_scalar,
+            &stats.kernel_pins_avx2,
+            &stats.kernel_pins_avx512,
+            &stats.kernel_pins_neon,
+        ]
+        .iter()
+        .map(|c| c.load(Ordering::Relaxed))
+        .sum();
+        assert_eq!(pins, 1, "exactly one pin event per plan");
+        if simd::forced_from_env().unwrap_or(None).is_none() && simd::supported().len() >= 2 {
+            assert_eq!(stats.autotuned_plans.load(Ordering::Relaxed), 1);
+        }
     }
 
     #[test]

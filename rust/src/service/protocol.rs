@@ -201,6 +201,7 @@ impl ErrorCode {
             MlprojError::ServiceBusy => ErrorCode::Busy,
             MlprojError::Protocol(_) => ErrorCode::Protocol,
             MlprojError::InvalidArgument(_)
+            | MlprojError::InvalidRadius { .. }
             | MlprojError::NormCountMismatch { .. }
             | MlprojError::ShapeMismatch { .. } => ErrorCode::Invalid,
             _ => ErrorCode::Internal,
@@ -1522,6 +1523,11 @@ mod tests {
             ErrorCode::Protocol
         );
         assert_eq!(ErrorCode::from_error(&MlprojError::invalid("x")), ErrorCode::Invalid);
+        // A hostile radius is a client error, not a server crash.
+        assert_eq!(
+            ErrorCode::from_error(&MlprojError::InvalidRadius { eta: f64::NAN }),
+            ErrorCode::Invalid
+        );
         assert_eq!(
             ErrorCode::from_error(&MlprojError::Runtime("x".into())),
             ErrorCode::Internal

@@ -95,6 +95,9 @@ impl Server {
 
     /// Like [`Server::bind`], with explicit wire limits.
     pub fn bind_with(addr: &str, cfg: &SchedulerConfig, opts: ServeOptions) -> Result<Server> {
+        // Validate `MLPROJ_FORCE_KERNEL` eagerly: a typo'd or unsupported
+        // variant must fail the bind, not every request's plan compile.
+        crate::core::simd::forced_from_env()?;
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let stats = Arc::new(ServiceStats::new());

@@ -3,6 +3,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::core::simd::KernelVariant;
+
 /// Atomics-based service counters. One instance is shared (via `Arc`)
 /// between the server's connection handlers, the scheduler workers and
 /// the plan cache; every field is monotonically increasing.
@@ -58,6 +60,17 @@ pub struct ServiceStats {
     /// Router only: chunked streams passed through to a backend frame by
     /// frame (never reassembled in router memory).
     pub relayed_streams: AtomicU64,
+    /// Plans whose kernel autotuner measured ≥ 2 candidate variants
+    /// before pinning (forced/explicit variants pin without measuring).
+    pub autotuned_plans: AtomicU64,
+    /// Plans that pinned the scalar kernel variant.
+    pub kernel_pins_scalar: AtomicU64,
+    /// Plans that pinned the AVX2 kernel variant.
+    pub kernel_pins_avx2: AtomicU64,
+    /// Plans that pinned the AVX-512 kernel variant.
+    pub kernel_pins_avx512: AtomicU64,
+    /// Plans that pinned the NEON kernel variant.
+    pub kernel_pins_neon: AtomicU64,
 }
 
 impl ServiceStats {
@@ -112,7 +125,22 @@ impl ServiceStats {
             ("checksum_failures".into(), ld(&self.checksum_failures)),
             ("routed_requests".into(), ld(&self.routed_requests)),
             ("relayed_streams".into(), ld(&self.relayed_streams)),
+            ("autotuned_plans".into(), ld(&self.autotuned_plans)),
+            ("kernel_pins_scalar".into(), ld(&self.kernel_pins_scalar)),
+            ("kernel_pins_avx2".into(), ld(&self.kernel_pins_avx2)),
+            ("kernel_pins_avx512".into(), ld(&self.kernel_pins_avx512)),
+            ("kernel_pins_neon".into(), ld(&self.kernel_pins_neon)),
         ]
+    }
+
+    /// The `kernel_pins_*` counter for one SIMD variant.
+    pub fn kernel_pin_counter(&self, variant: KernelVariant) -> &AtomicU64 {
+        match variant {
+            KernelVariant::Scalar => &self.kernel_pins_scalar,
+            KernelVariant::Avx2 => &self.kernel_pins_avx2,
+            KernelVariant::Avx512 => &self.kernel_pins_avx512,
+            KernelVariant::Neon => &self.kernel_pins_neon,
+        }
     }
 }
 
@@ -143,6 +171,20 @@ mod tests {
         assert_eq!(s.batch_size_max.load(Ordering::Relaxed), 7);
         let snap = s.snapshot();
         assert!(snap.iter().any(|(n, v)| n == "batch_size_max" && *v == 7));
+    }
+
+    #[test]
+    fn kernel_pin_counters_map_per_variant() {
+        let s = ServiceStats::new();
+        ServiceStats::bump(s.kernel_pin_counter(KernelVariant::Scalar));
+        ServiceStats::bump(s.kernel_pin_counter(KernelVariant::Avx2));
+        ServiceStats::bump(s.kernel_pin_counter(KernelVariant::Avx2));
+        let snap = s.snapshot();
+        let get = |name: &str| snap.iter().find(|(n, _)| n == name).unwrap().1;
+        assert_eq!(get("kernel_pins_scalar"), 1);
+        assert_eq!(get("kernel_pins_avx2"), 2);
+        assert_eq!(get("kernel_pins_avx512"), 0);
+        assert_eq!(get("kernel_pins_neon"), 0);
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Exhaustive bit-identity suite for the SIMD kernel variants.
+//!
+//! Every variant `simd::supported()` reports must return **bit-identical**
+//! results to the portable scalar bodies on every input — including NaN,
+//! ±0.0, huge magnitudes, empty slices, every remainder length around the
+//! 8-lane chunking, and misaligned sub-slices. This is the contract that
+//! lets the plan autotuner switch variants between calls without changing
+//! a single output byte, and it is what `tests/fused_reference.rs` and
+//! `tests/randomized_differential.rs` lean on transitively.
+//!
+//! The suite iterates `simd::supported()` explicitly (pinning plans with
+//! `with_kernel`), so it is meaningful both bare and when CI reruns it
+//! under `MLPROJ_FORCE_KERNEL=scalar`.
+
+use mlproj::core::kernels;
+use mlproj::core::rng::Rng;
+use mlproj::core::simd::{self, KernelVariant};
+
+/// Lengths covering empty, every lane remainder around one and two
+/// 8-lane chunks, and a few odd tails beyond 128.
+fn probe_lengths() -> Vec<usize> {
+    (0..=130).collect()
+}
+
+/// Deterministic data with special values sprinkled in: exact zeros of
+/// both signs, a NaN, huge and tiny magnitudes — everything a hostile
+/// wire payload can carry.
+fn probe_data(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed.wrapping_add(len as u64));
+    let mut v = vec![0.0f32; len];
+    rng.fill_uniform(&mut v, -8.0, 8.0);
+    for (i, x) in v.iter_mut().enumerate() {
+        match i % 17 {
+            2 => *x = 0.0,
+            5 => *x = -0.0,
+            7 => *x = f32::NAN,
+            11 => *x = 1.0e30,
+            13 => *x = -1.0e30,
+            15 => *x = 1.0e-38,
+            _ => {}
+        }
+    }
+    v
+}
+
+/// The caps/thresholds each in-place kernel is probed with. A NaN cap
+/// must be a total no-op (the seed's `f32::clamp` panicked on it), and a
+/// negative cap must at least be deterministic and identical everywhere.
+const CAPS: [f32; 6] = [0.0, 0.75, 4.0, 1.0e30, -1.0, f32::NAN];
+
+fn non_scalar_supported() -> Vec<KernelVariant> {
+    simd::supported().iter().copied().filter(|&v| v != KernelVariant::Scalar).collect()
+}
+
+fn assert_bits_eq_slice(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i} diverged ({x} vs {y})");
+    }
+}
+
+#[test]
+fn reductions_match_scalar_bitwise_at_every_length_and_offset() {
+    for variant in non_scalar_supported() {
+        for len in probe_lengths() {
+            // Pad so a misaligned sub-slice of every offset exists.
+            let padded = probe_data(len + simd::LANES, 9001);
+            for off in 0..simd::LANES {
+                let xs = &padded[off..off + len];
+                let ctx = format!("{variant} len={len} off={off}");
+                assert_eq!(
+                    kernels::max_abs_with(variant, xs).to_bits(),
+                    kernels::max_abs_with(KernelVariant::Scalar, xs).to_bits(),
+                    "max_abs {ctx}"
+                );
+                assert_eq!(
+                    kernels::abs_sum_with(variant, xs).to_bits(),
+                    kernels::abs_sum_with(KernelVariant::Scalar, xs).to_bits(),
+                    "abs_sum {ctx}"
+                );
+                assert_eq!(
+                    kernels::sq_sum_with(variant, xs).to_bits(),
+                    kernels::sq_sum_with(KernelVariant::Scalar, xs).to_bits(),
+                    "sq_sum {ctx}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn inplace_sweeps_match_scalar_bitwise_at_every_length_and_offset() {
+    for variant in non_scalar_supported() {
+        for len in probe_lengths() {
+            let padded = probe_data(len + simd::LANES, 4242);
+            for off in [0usize, 1, 3, 7] {
+                let base = &padded[off..off + len];
+                for cap in CAPS {
+                    let ctx = format!("{variant} len={len} off={off} cap={cap}");
+                    let (mut a, mut b) = (base.to_vec(), base.to_vec());
+                    kernels::clamp_abs_with(KernelVariant::Scalar, &mut a, cap);
+                    kernels::clamp_abs_with(variant, &mut b, cap);
+                    assert_bits_eq_slice(&a, &b, &format!("clamp_abs {ctx}"));
+
+                    let (mut a, mut b) = (base.to_vec(), base.to_vec());
+                    kernels::shrink_with(KernelVariant::Scalar, &mut a, cap);
+                    kernels::shrink_with(variant, &mut b, cap);
+                    assert_bits_eq_slice(&a, &b, &format!("shrink {ctx}"));
+
+                    let (mut a, mut b) = (base.to_vec(), base.to_vec());
+                    kernels::scale_with(KernelVariant::Scalar, &mut a, cap);
+                    kernels::scale_with(variant, &mut b, cap);
+                    assert_bits_eq_slice(&a, &b, &format!("scale {ctx}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nontemporal_clamp_matches_regular_clamp_bitwise() {
+    // The NT body differs only in how stores retire; prove it on slices
+    // spanning the alignment head/tail peeling (small) and many NT
+    // blocks (large), both aligned and offset.
+    for variant in simd::supported().iter().copied() {
+        for len in [0usize, 1, 7, 15, 16, 17, 63, 130, 100_003] {
+            let padded = probe_data(len + simd::LANES, 7777);
+            for off in [0usize, 1, 5] {
+                let base = &padded[off..off + len];
+                for cap in [0.5f32, 1.0e30, f32::NAN] {
+                    let (mut a, mut b) = (base.to_vec(), base.to_vec());
+                    kernels::clamp_abs_with(KernelVariant::Scalar, &mut a, cap);
+                    kernels::clamp_abs_nt_with(variant, &mut b, cap);
+                    assert_bits_eq_slice(
+                        &a,
+                        &b,
+                        &format!("clamp_abs_nt {variant} len={len} off={off} cap={cap}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_colmax_clamp_equals_composed_max_then_clamp() {
+    // Fused single-stream kernel == max_abs followed by clamp_abs, both
+    // the returned max and every stored element, on every variant.
+    for variant in simd::supported().iter().copied() {
+        for len in probe_lengths() {
+            let padded = probe_data(len + simd::LANES, 31337);
+            for off in [0usize, 2, 6] {
+                let base = &padded[off..off + len];
+                for cap in CAPS {
+                    let mut composed = base.to_vec();
+                    let want_max = kernels::max_abs_with(KernelVariant::Scalar, &composed);
+                    kernels::clamp_abs_with(KernelVariant::Scalar, &mut composed, cap);
+
+                    let mut fused = base.to_vec();
+                    let got_max = kernels::colmax_clamp_with(variant, &mut fused, cap);
+                    let ctx = format!("colmax_clamp {variant} len={len} off={off} cap={cap}");
+                    assert_eq!(got_max.to_bits(), want_max.to_bits(), "{ctx}: max");
+                    assert_bits_eq_slice(&composed, &fused, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn large_randomized_slices_match_scalar_bitwise() {
+    // A few big slices (crossing many chunks and any internal unrolling)
+    // with fresh random data per seed.
+    for variant in non_scalar_supported() {
+        for seed in [1u64, 2, 3] {
+            let len = 65_536 + 11 * seed as usize;
+            let data = probe_data(len, 100 + seed);
+            assert_eq!(
+                kernels::max_abs_with(variant, &data).to_bits(),
+                kernels::max_abs_with(KernelVariant::Scalar, &data).to_bits(),
+                "max_abs {variant} seed={seed}"
+            );
+            assert_eq!(
+                kernels::abs_sum_with(variant, &data).to_bits(),
+                kernels::abs_sum_with(KernelVariant::Scalar, &data).to_bits(),
+                "abs_sum {variant} seed={seed}"
+            );
+            assert_eq!(
+                kernels::sq_sum_with(variant, &data).to_bits(),
+                kernels::sq_sum_with(KernelVariant::Scalar, &data).to_bits(),
+                "sq_sum {variant} seed={seed}"
+            );
+            let (mut a, mut b) = (data.clone(), data.clone());
+            kernels::clamp_abs_with(KernelVariant::Scalar, &mut a, 2.5);
+            kernels::clamp_abs_with(variant, &mut b, 2.5);
+            assert_bits_eq_slice(&a, &b, &format!("clamp_abs {variant} seed={seed}"));
+            let (mut a, mut b) = (data.clone(), data);
+            kernels::shrink_with(KernelVariant::Scalar, &mut a, 0.25);
+            kernels::shrink_with(variant, &mut b, 0.25);
+            assert_bits_eq_slice(&a, &b, &format!("shrink {variant} seed={seed}"));
+        }
+    }
+}
+
+#[test]
+fn pinned_plans_project_bit_identically_across_variants() {
+    // End to end: the same bi-level projection, one plan per supported
+    // variant pinned via `with_kernel`, must emit byte-identical results
+    // — single payloads and batches — on both the ℓ1,∞ path and the
+    // fused [ℓ∞, ℓ∞] path.
+    use mlproj::core::matrix::Matrix;
+    use mlproj::projection::{Norm, ProjectionSpec};
+
+    let shapes = [(1usize, 1usize), (7, 5), (32, 48), (65, 129)];
+    let specs: [(&str, Vec<Norm>, f64); 3] = [
+        ("l1inf", vec![Norm::Linf, Norm::L1], 1.25),
+        ("linflinf", vec![Norm::Linf, Norm::Linf], 0.8),
+        ("l2l1", vec![Norm::L1, Norm::L2], 2.0),
+    ];
+    let mut rng = Rng::new(2024);
+    for (rows, cols) in shapes {
+        let y = Matrix::random_uniform(rows, cols, -2.0, 2.0, &mut rng);
+        let batch: Vec<Vec<f32>> = (0..3)
+            .map(|_| Matrix::random_uniform(rows, cols, -2.0, 2.0, &mut rng).data().to_vec())
+            .collect();
+        for (name, norms, eta) in &specs {
+            let mut want: Option<Vec<f32>> = None;
+            let mut want_batch: Option<Vec<Vec<f32>>> = None;
+            for variant in simd::supported().iter().copied() {
+                let mut plan = ProjectionSpec::new(norms.clone(), *eta)
+                    .with_kernel(variant)
+                    .compile_for_matrix(rows, cols)
+                    .unwrap();
+                assert_eq!(plan.kernel_variant(), variant, "{name}: pin ignored");
+
+                let mut x = y.clone();
+                plan.project_matrix_inplace(&mut x).unwrap();
+                let mut b = batch.clone();
+                plan.project_batch_inplace(&mut b).unwrap();
+
+                match (&want, &want_batch) {
+                    (None, None) => {
+                        want = Some(x.data().to_vec());
+                        want_batch = Some(b);
+                    }
+                    (Some(w), Some(wb)) => {
+                        let ctx = format!("{name} {rows}x{cols} {variant}");
+                        assert_bits_eq_slice(w, x.data(), &ctx);
+                        for (j, (wj, bj)) in wb.iter().zip(b.iter()).enumerate() {
+                            assert_bits_eq_slice(wj, bj, &format!("{ctx} batch[{j}]"));
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pinned_tensor_plans_project_bit_identically_across_variants() {
+    // Multi-level tensor path (the paper's Algorithm 5 shape) across
+    // variants: stage sweeps all route through the dispatched kernels.
+    use mlproj::core::tensor::Tensor;
+    use mlproj::projection::{Norm, ProjectionSpec};
+
+    let shape = vec![3usize, 8, 17];
+    let mut rng = Rng::new(77);
+    let mut data = vec![0.0f32; shape.iter().product()];
+    rng.fill_uniform(&mut data, -1.5, 1.5);
+    let y = Tensor::from_vec(shape.clone(), data).unwrap();
+    let norms = vec![Norm::Linf, Norm::Linf, Norm::L1];
+
+    let mut want: Option<Vec<f32>> = None;
+    for variant in simd::supported().iter().copied() {
+        let mut plan = ProjectionSpec::new(norms.clone(), 0.6)
+            .with_kernel(variant)
+            .compile(y.shape())
+            .unwrap();
+        let mut x = y.clone();
+        plan.project_tensor_inplace(&mut x).unwrap();
+        match &want {
+            None => want = Some(x.data().to_vec()),
+            Some(w) => assert_bits_eq_slice(w, x.data(), &format!("tensor {variant}")),
+        }
+    }
+}
+
+#[test]
+fn unsupported_explicit_kernel_is_rejected_at_compile() {
+    // The cross-family variant is never supported (NEON on x86-64, AVX2
+    // on AArch64), so this exercises the rejection path on every host
+    // without touching the process environment.
+    use mlproj::projection::{Norm, ProjectionSpec};
+    let foreign = KernelVariant::ALL
+        .iter()
+        .copied()
+        .find(|&v| !simd::is_supported(v))
+        .expect("at least one family is always foreign");
+    let err = ProjectionSpec::new(vec![Norm::Linf, Norm::L1], 1.0)
+        .with_kernel(foreign)
+        .compile_for_matrix(8, 8)
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("not supported"), "{msg}");
+    assert!(msg.contains(foreign.label()), "{msg}");
+}

@@ -165,6 +165,36 @@ fn warm_trilevel_l1_final_projects_without_heap_allocation() {
 }
 
 #[test]
+fn autotune_warmup_projects_without_heap_allocation() {
+    // The measuring kernel dispatcher must not weaken the zero-alloc
+    // pin: candidate and timing storage is sized at compile, so the
+    // *entire* warmup window — round-robin measurement through every
+    // supported variant, then the pin itself — runs allocation-free
+    // after the first call.
+    use mlproj::core::matrix::Matrix;
+    use mlproj::projection::AUTOTUNE_ROUNDS;
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(49);
+    let y = Matrix::random_uniform(16, 24, -1.0, 1.0, &mut rng);
+    let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(16, 24).unwrap();
+    let mut x = y.clone();
+    plan.project_matrix_inplace(&mut x).unwrap();
+
+    let candidates = mlproj::core::simd::supported().len();
+    let calls = AUTOTUNE_ROUNDS as usize * candidates + 2;
+    let mut bufs: Vec<Matrix> = (0..calls).map(|_| y.clone()).collect();
+    let before = alloc_calls();
+    for b in &mut bufs {
+        plan.project_matrix_inplace(b).unwrap();
+    }
+    let after = alloc_calls();
+    assert_eq!(after - before, 0, "autotune warmup allocated {} times", after - before);
+    // Whether measured (multi-candidate) or pinned at compile (forced /
+    // single-variant host), the window must end with a pinned winner.
+    assert!(plan.pinned_kernel().is_some(), "plan failed to pin after the warmup window");
+}
+
+#[test]
 fn warm_batch_projects_without_heap_allocation() {
     // A batched plan call grows its workspace on the first batch and is
     // allocation-free afterwards (the service's cross-request batching).
