@@ -1,0 +1,123 @@
+//! Telemetry overhead series → `target/bench_out/BENCH_obs.json`.
+//!
+//! Two levels of evidence that observability stays off the hot path:
+//!
+//! * primitive costs — ns per histogram `record`, per sampled trace
+//!   capture, and per disabled-telemetry no-op call (the branch a
+//!   telemetry-off server pays);
+//! * end-to-end — the same warm single-client serve loop against one
+//!   server with telemetry enabled and one with `MLPROJ_TELEMETRY=off`,
+//!   reported as `overhead_pct`.
+//!
+//! The end-to-end delta rides on loopback TCP, so single runs are noisy;
+//! the JSON carries both raw medians so regressions are judged from the
+//! primitive costs plus the trend, not one jittery percentage.
+
+use mlproj::bench::harness::{self, black_box, Bencher};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::projection::ProjectionSpec;
+use mlproj::service::telemetry::STAGE_COUNT;
+use mlproj::service::{Client, SchedulerConfig, Server, Stage, Telemetry, TraceRecord};
+
+/// Inner iterations per timed sample, so per-op costs in the low-ns
+/// range are measurable above timer resolution.
+const INNER: u64 = 4096;
+
+/// Median ns of one warm client→server→client round trip, with the
+/// server's telemetry enabled or forced off via the env knob.
+fn serve_round_trip_ns(
+    bencher: &Bencher,
+    telemetry_off: bool,
+    spec: &ProjectionSpec,
+    y: &Matrix,
+) -> f64 {
+    if telemetry_off {
+        std::env::set_var("MLPROJ_TELEMETRY", "off");
+    } else {
+        std::env::remove_var("MLPROJ_TELEMETRY");
+    }
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let handle = server.spawn();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    // Warm: compile + cache the plan, settle the autotuner.
+    for _ in 0..8 {
+        client.project_matrix(spec, y).unwrap();
+    }
+    let label = if telemetry_off { "serve off" } else { "serve on" };
+    let m = bencher.measure(label, || {
+        black_box(client.project_matrix(spec, y).unwrap());
+    });
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    m.median.as_nanos() as f64
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+
+    // -- primitive costs ---------------------------------------------------
+    let telemetry = Telemetry::with_options(true, 1, u64::MAX, 1024);
+    let m = bencher.measure("record", || {
+        for i in 0..INNER {
+            telemetry.record(Stage::Project, black_box(i * 17 + 3));
+        }
+    });
+    let record_ns = m.median.as_nanos() as f64 / INNER as f64;
+
+    let rec = TraceRecord {
+        corr: 1,
+        kernel: None,
+        batch_size: 1,
+        key_hash: 0x5EED,
+        stage_ns: [5; STAGE_COUNT],
+    };
+    let m = bencher.measure("trace capture", || {
+        for _ in 0..INNER {
+            if telemetry.should_trace(black_box(100)) {
+                telemetry.capture_trace(&rec);
+            }
+        }
+    });
+    let trace_capture_ns = m.median.as_nanos() as f64 / INNER as f64;
+
+    let disabled = Telemetry::disabled();
+    let m = bencher.measure("record disabled", || {
+        for i in 0..INNER {
+            disabled.record(Stage::Project, black_box(i));
+        }
+    });
+    let record_disabled_ns = m.median.as_nanos() as f64 / INNER as f64;
+
+    println!(
+        "primitives: record {record_ns:.1} ns/op, sampled trace capture \
+         {trace_capture_ns:.1} ns/op, disabled no-op {record_disabled_ns:.2} ns/op"
+    );
+
+    // -- end-to-end serve path, telemetry on vs off ------------------------
+    let mut rng = Rng::new(7);
+    let y = Matrix::random_uniform(64, 512, -1.0, 1.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(1.0);
+    let serve_on_ns = serve_round_trip_ns(&bencher, false, &spec, &y);
+    let serve_off_ns = serve_round_trip_ns(&bencher, true, &spec, &y);
+    let overhead_pct = (serve_on_ns - serve_off_ns) / serve_off_ns * 100.0;
+    println!(
+        "serve round trip: telemetry on {:.1} µs, off {:.1} µs, overhead {overhead_pct:+.2}%",
+        serve_on_ns / 1e3,
+        serve_off_ns / 1e3
+    );
+
+    harness::exit_on_emit_error(harness::emit_json_kv(
+        "BENCH_obs.json",
+        &[
+            ("record_ns", record_ns),
+            ("trace_sampled_capture_ns", trace_capture_ns),
+            ("record_disabled_ns", record_disabled_ns),
+            ("serve_on_ns", serve_on_ns),
+            ("serve_off_ns", serve_off_ns),
+            ("overhead_pct", overhead_pct),
+        ],
+    ));
+    let path = std::path::Path::new(harness::BENCH_OUT_DIR).join("BENCH_obs.json");
+    println!("json -> {}", path.display());
+}

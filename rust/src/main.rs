@@ -5,7 +5,8 @@
 //!   sweep   — a paper preset (table2..table5, fig5_synthetic, fig5_lung)
 //!   project — project a random matrix, compare methods (quick demo)
 //!   serve   — run the batched projection service on a TCP address
-//!   client  — talk to a running service (project | ping | stats | shutdown)
+//!   client  — talk to a running service (project | ping | stats | trace | shutdown)
+//!   top     — live per-stage latency dashboard over StatsV2
 //!   loadgen — drive a service concurrently and emit BENCH_serve.json
 //!   datagen — emit a dataset as CSV
 //!   info    — artifact/platform diagnostics (+ live service stats)
@@ -29,8 +30,9 @@ use mlproj::projection::l1::L1Algo;
 use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
 use mlproj::projection::{norms, Norm, ProjectionSpec};
 use mlproj::service::{
-    spawn_backends, BackendSpawnOptions, Client, ClientPool, PipelinedConn, ProjectRequest,
-    Router, RouterOptions, SchedulerConfig, ServeOptions, Server, WireLayout,
+    spawn_backends, BackendSpawnOptions, Client, ClientPool, LatencyHistogram, PipelinedConn,
+    ProjectRequest, Router, RouterOptions, SchedulerConfig, ServeOptions, Server, Stage,
+    StatsV2, TraceRecord, WireLayout,
 };
 
 /// Minimal strict `--key value` argument parser.
@@ -133,6 +135,7 @@ const SERVE_FLAGS: &[&str] = &[
 ];
 const CLIENT_FLAGS: &[&str] =
     &["addr", "n", "m", "eta", "norms", "l1algo", "seed", "chunked", "chunk-elems"];
+const TOP_FLAGS: &[&str] = &["addr", "interval", "count"];
 const LOADGEN_FLAGS: &[&str] = &[
     "addr",
     "clients",
@@ -184,9 +187,11 @@ USAGE:
                [--conns-per-backend C] [--forward-workers F]
                [--queue-depth N] [--max-body-bytes B] [--max-inflight N]
                [--retries R]
-  mlproj client project|ping|stats|shutdown --addr HOST:PORT
+  mlproj client project|ping|stats|trace|shutdown --addr HOST:PORT
                [--n N] [--m M] [--eta F] [--norms L] [--l1algo A] [--seed S]
                [--chunked] [--chunk-elems N]
+  mlproj top --addr HOST:PORT [--interval SECS] [--count N]
+               live per-stage latency dashboard (StatsV2; N=0 runs forever)
   mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
                  [--n N] [--m M] [--eta F] [--norms L] [--seed S]
                  [--pipeline-depth D] [--via-router [--direct-addr HOST:PORT]]
@@ -225,6 +230,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&Args::parse(rest, SERVE_FLAGS)?),
         "router" => cmd_router(&Args::parse(rest, ROUTER_FLAGS)?),
         "client" => cmd_client(rest),
+        "top" => cmd_top(&Args::parse(rest, TOP_FLAGS)?),
         "loadgen" => cmd_loadgen(&Args::parse(rest, LOADGEN_FLAGS)?),
         "datagen" => cmd_datagen(&Args::parse(rest, DATAGEN_FLAGS)?),
         "info" => cmd_info(&Args::parse(rest, INFO_FLAGS)?),
@@ -547,10 +553,123 @@ fn print_stats(pairs: &[(String, u64)]) {
     }
 }
 
+/// Render one StatsV2 payload: the flat counters, then a per-stage
+/// latency table per section (`local` on a server; `router` / `merged` /
+/// one per backend through a router), then the per-plan project-time
+/// distributions.
+fn render_stats_v2(stats: &StatsV2) {
+    print_stats(&stats.counters);
+    for section in &stats.sections {
+        println!("\n[{}]", section.label);
+        println!(
+            "  {:<10} {:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "stage", "count", "mean µs", "p50 µs", "p90 µs", "p99 µs", "p999 µs"
+        );
+        for (stage, hist) in &section.stages {
+            let q = |p: f64| hist.quantile_ns(p) as f64 / 1e3;
+            println!(
+                "  {:<10} {:>9} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+                stage.name(),
+                hist.count(),
+                hist.mean_ns() as f64 / 1e3,
+                q(0.50),
+                q(0.90),
+                q(0.99),
+                q(0.999)
+            );
+        }
+    }
+    if !stats.plans.is_empty() {
+        println!("\n[plans]");
+        println!(
+            "  {:<40} {:>9} {:>10} {:>10} {:>10}",
+            "plan", "count", "mean µs", "p50 µs", "p99 µs"
+        );
+        for plan in &stats.plans {
+            let label: &str = if plan.label.is_empty() { "?" } else { &plan.label };
+            println!(
+                "  {:<40} {:>9} {:>10.1} {:>10.1} {:>10.1}",
+                label,
+                plan.hist.count(),
+                plan.hist.mean_ns() as f64 / 1e3,
+                plan.hist.quantile_ns(0.50) as f64 / 1e3,
+                plan.hist.quantile_ns(0.99) as f64 / 1e3
+            );
+        }
+    }
+}
+
+/// Render the sampled-trace ring dump, one request per line.
+fn render_traces(traces: &[TraceRecord]) {
+    if traces.is_empty() {
+        println!(
+            "trace ring is empty (requests are sampled 1-in-N; \
+             see MLPROJ_TRACE_SAMPLE / MLPROJ_TRACE_SLOW_US)"
+        );
+        return;
+    }
+    println!(
+        "{:>5}  {:>7}  {:>5}  {:<16}  {:>10}  {:>10}  {:>11}  {:>10}",
+        "corr", "kernel", "batch", "plan key", "decode µs", "queue µs", "project µs", "total µs"
+    );
+    for t in traces {
+        let us = |s: Stage| t.stage_ns[s as usize] as f64 / 1e3;
+        println!(
+            "{:>5}  {:>7}  {:>5}  {:<16x}  {:>10.1}  {:>10.1}  {:>11.1}  {:>10.1}",
+            t.corr,
+            t.kernel.map_or("-", |k| k.label()),
+            t.batch_size,
+            t.key_hash,
+            us(Stage::Decode),
+            us(Stage::Queue),
+            us(Stage::Project),
+            t.total_ns() as f64 / 1e3
+        );
+    }
+}
+
+fn cmd_top(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        return Err(MlprojError::invalid("--addr HOST:PORT is required"));
+    };
+    let interval = args.f64_or("interval", 2.0)?.max(0.05);
+    let ticks = args.usize_or("count", 0)?; // 0 = run until interrupted
+    let mut client = Client::connect(addr)?;
+    let mut last: Option<(Instant, u64)> = None;
+    let mut tick = 0usize;
+    loop {
+        let stats = match client.stats_v2() {
+            Ok(s) => s,
+            // The server restarted under us: redial once per tick.
+            Err(MlprojError::Io(_)) => {
+                client = Client::connect(addr)?;
+                client.stats_v2()?
+            }
+            Err(e) => return Err(e),
+        };
+        let now = Instant::now();
+        let total = stats.counter("requests_total").unwrap_or(0);
+        let rps = last.map_or(0.0, |(t, c)| {
+            total.saturating_sub(c) as f64 / now.duration_since(t).as_secs_f64().max(1e-9)
+        });
+        last = Some((now, total));
+        // ANSI clear + cursor home; a dumb pipe just sees successive
+        // reports separated by the escape bytes.
+        print!("\x1b[2J\x1b[H");
+        println!("mlproj top — {addr}   {rps:.1} req/s   (tick {tick}, every {interval}s)");
+        render_stats_v2(&stats);
+        tick += 1;
+        if ticks != 0 && tick >= ticks {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+}
+
 fn cmd_client(rest: &[String]) -> Result<()> {
     let Some(action) = rest.first() else {
         return Err(MlprojError::invalid(
-            "client needs an action: project | ping | stats | shutdown",
+            "client needs an action: project | ping | stats | trace | shutdown",
         ));
     };
     let args = Args::parse(&rest[1..], CLIENT_FLAGS)?;
@@ -567,7 +686,17 @@ fn cmd_client(rest: &[String]) -> Result<()> {
             Ok(())
         }
         "stats" => {
-            print_stats(&connect_arg(&args)?.stats()?);
+            match connect_arg(&args)?.stats_v2() {
+                Ok(v2) => render_stats_v2(&v2),
+                // A pre-StatsV2 server answers the unknown frame with an
+                // error (and may drop the connection); fall back to the
+                // v1 counter scrape on a fresh one.
+                Err(_) => print_stats(&connect_arg(&args)?.stats()?),
+            }
+            Ok(())
+        }
+        "trace" => {
+            render_traces(&connect_arg(&args)?.trace()?);
             Ok(())
         }
         "shutdown" => {
@@ -638,19 +767,31 @@ fn cmd_client(rest: &[String]) -> Result<()> {
             Ok(())
         }
         other => Err(MlprojError::invalid(format!(
-            "unknown client action `{other}` (project | ping | stats | shutdown)"
+            "unknown client action `{other}` (project | ping | stats | trace | shutdown)"
         ))),
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted nanosecond series, ms.
-fn percentile_ms(sorted_ns: &[u64], p: f64) -> f64 {
-    if sorted_ns.is_empty() {
-        return 0.0;
+/// Histogram-derived latency quantiles of one loadgen pass, in ms.
+struct LatSummary {
+    p50: f64,
+    p90: f64,
+    p99: f64,
+    p999: f64,
+}
+
+/// Collapse a nanosecond latency series through the same log-bucketed
+/// [`LatencyHistogram`] the service reports over StatsV2, so loadgen
+/// numbers and server-side numbers are directly comparable (both carry
+/// at most one power-of-two bucket of estimation error).
+fn summarize_ns(latencies_ns: &[u64]) -> LatSummary {
+    let hist = LatencyHistogram::new();
+    for &ns in latencies_ns {
+        hist.record(ns);
     }
-    let rank = ((p / 100.0) * sorted_ns.len() as f64).ceil() as usize;
-    let idx = rank.clamp(1, sorted_ns.len()) - 1;
-    sorted_ns[idx] as f64 / 1e6
+    let snap = hist.snapshot();
+    let q = |p: f64| snap.quantile_ns(p) as f64 / 1e6;
+    LatSummary { p50: q(0.50), p90: q(0.90), p99: q(0.99), p999: q(0.999) }
 }
 
 /// Sequential (v1, lockstep) loadgen pass: `clients` threads, each
@@ -817,21 +958,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     // Sequential (v1) series — also the baseline the pipelined series is
     // compared against.
-    let (mut latencies, busy_retries, wall_secs) =
+    let (latencies, busy_retries, wall_secs) =
         loadgen_sequential(&addr, clients, requests, &spec, n, m, seed)?;
-    latencies.sort_unstable();
     let total = latencies.len();
     let throughput = total as f64 / wall_secs;
-    let p50 = percentile_ms(&latencies, 50.0);
-    let p99 = percentile_ms(&latencies, 99.0);
+    let lat = summarize_ns(&latencies);
 
     // Pipelined (v2) series, when requested.
     let pipelined = if depth > 1 {
-        let (mut lat, busy, wall) =
+        let (plat, busy, wall) =
             loadgen_pipelined(&addr, clients, requests, depth, &spec, n, m, seed)?;
-        lat.sort_unstable();
-        let rps = lat.len() as f64 / wall;
-        Some((rps, percentile_ms(&lat, 50.0), percentile_ms(&lat, 99.0), busy, wall))
+        let rps = plat.len() as f64 / wall;
+        Some((rps, summarize_ns(&plat), busy, wall))
     } else {
         None
     };
@@ -865,14 +1003,20 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     ];
 
     println!(
-        "sequential: throughput {throughput:.1} req/s  p50 {p50:.3} ms  p99 {p99:.3} ms  \
-         ({total} requests in {wall_secs:.2}s, {busy_retries} busy retries)"
+        "sequential: throughput {throughput:.1} req/s  p50 {:.3} ms  p90 {:.3} ms  \
+         p99 {:.3} ms  p999 {:.3} ms  ({total} requests in {wall_secs:.2}s, \
+         {busy_retries} busy retries)",
+        lat.p50, lat.p90, lat.p99, lat.p999
     );
-    if let Some((rps, pp50, pp99, pbusy, pwall)) = pipelined {
+    if let Some((rps, ref plat, pbusy, pwall)) = pipelined {
         println!(
-            "pipelined (depth {depth}): throughput {rps:.1} req/s  p50 {pp50:.3} ms  \
-             p99 {pp99:.3} ms  ({} requests in {pwall:.2}s, {pbusy} busy retries, \
-             speedup {:.2}x)",
+            "pipelined (depth {depth}): throughput {rps:.1} req/s  p50 {:.3} ms  \
+             p90 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms  ({} requests in {pwall:.2}s, \
+             {pbusy} busy retries, speedup {:.2}x)",
+            plat.p50,
+            plat.p90,
+            plat.p99,
+            plat.p999,
             clients * requests,
             rps / throughput.max(f64::MIN_POSITIVE)
         );
@@ -895,8 +1039,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("requests_total", total as f64),
         ("wall_secs", wall_secs),
         ("throughput_rps", throughput),
-        ("p50_ms", p50),
-        ("p99_ms", p99),
+        ("p50_ms", lat.p50),
+        ("p90_ms", lat.p90),
+        ("p99_ms", lat.p99),
+        ("p999_ms", lat.p999),
         ("cache_hit_rate", hit_rate),
         ("busy_retries", busy_retries as f64),
         ("batches", batches as f64),
@@ -909,11 +1055,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ("kernel_pins_avx512", pins[2].1 as f64),
         ("kernel_pins_neon", pins[3].1 as f64),
     ];
-    if let Some((rps, pp50, pp99, pbusy, pwall)) = pipelined {
+    if let Some((rps, ref plat, pbusy, pwall)) = pipelined {
         kv.extend_from_slice(&[
             ("pipelined_throughput_rps", rps),
-            ("pipelined_p50_ms", pp50),
-            ("pipelined_p99_ms", pp99),
+            ("pipelined_p50_ms", plat.p50),
+            ("pipelined_p90_ms", plat.p90),
+            ("pipelined_p99_ms", plat.p99),
+            ("pipelined_p999_ms", plat.p999),
             ("pipelined_busy_retries", pbusy as f64),
             ("pipelined_wall_secs", pwall),
             ("pipelined_speedup", rps / throughput.max(f64::MIN_POSITIVE)),
@@ -927,8 +1075,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 /// One loadgen pass's headline numbers.
 struct PassSeries {
     throughput: f64,
-    p50: f64,
-    p99: f64,
+    lat: LatSummary,
     busy: u64,
     total: usize,
     wall: f64,
@@ -947,24 +1094,20 @@ fn run_load_passes(
     m: usize,
     seed: u64,
 ) -> Result<(PassSeries, Option<PassSeries>)> {
-    let (mut lat, busy, wall) = loadgen_sequential(addr, clients, requests, spec, n, m, seed)?;
-    lat.sort_unstable();
+    let (lat, busy, wall) = loadgen_sequential(addr, clients, requests, spec, n, m, seed)?;
     let seq = PassSeries {
         throughput: lat.len() as f64 / wall,
-        p50: percentile_ms(&lat, 50.0),
-        p99: percentile_ms(&lat, 99.0),
+        lat: summarize_ns(&lat),
         busy,
         total: lat.len(),
         wall,
     };
     let pipelined = if depth > 1 {
-        let (mut lat, busy, wall) =
+        let (lat, busy, wall) =
             loadgen_pipelined(addr, clients, requests, depth, spec, n, m, seed)?;
-        lat.sort_unstable();
         Some(PassSeries {
             throughput: lat.len() as f64 / wall,
-            p50: percentile_ms(&lat, 50.0),
-            p99: percentile_ms(&lat, 99.0),
+            lat: summarize_ns(&lat),
             busy,
             total: lat.len(),
             wall,
@@ -1012,15 +1155,23 @@ fn loadgen_via_router(
         lookup(&after, "router_reconnects").saturating_sub(lookup(&before, "router_reconnects"));
 
     println!(
-        "router sequential: throughput {:.1} req/s  p50 {:.3} ms  p99 {:.3} ms  \
-         ({} requests in {:.2}s, {} busy retries)",
-        r_seq.throughput, r_seq.p50, r_seq.p99, r_seq.total, r_seq.wall, r_seq.busy
+        "router sequential: throughput {:.1} req/s  p50 {:.3} ms  p90 {:.3} ms  \
+         p99 {:.3} ms  p999 {:.3} ms  ({} requests in {:.2}s, {} busy retries)",
+        r_seq.throughput,
+        r_seq.lat.p50,
+        r_seq.lat.p90,
+        r_seq.lat.p99,
+        r_seq.lat.p999,
+        r_seq.total,
+        r_seq.wall,
+        r_seq.busy
     );
     if let Some(p) = &r_pipe {
         println!(
             "router pipelined (depth {depth}): throughput {:.1} req/s  p50 {:.3} ms  \
-             p99 {:.3} ms  ({} requests in {:.2}s, {} busy retries)",
-            p.throughput, p.p50, p.p99, p.total, p.wall, p.busy
+             p90 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms  ({} requests in {:.2}s, \
+             {} busy retries)",
+            p.throughput, p.lat.p50, p.lat.p90, p.lat.p99, p.lat.p999, p.total, p.wall, p.busy
         );
     }
     println!("router: {routed} requests routed upstream, {reconnects} upstream reconnects");
@@ -1030,8 +1181,10 @@ fn loadgen_via_router(
         ("requests_total", r_seq.total as f64),
         ("pipeline_depth", depth as f64),
         ("router_throughput_rps", r_seq.throughput),
-        ("router_p50_ms", r_seq.p50),
-        ("router_p99_ms", r_seq.p99),
+        ("router_p50_ms", r_seq.lat.p50),
+        ("router_p90_ms", r_seq.lat.p90),
+        ("router_p99_ms", r_seq.lat.p99),
+        ("router_p999_ms", r_seq.lat.p999),
         ("router_busy_retries", r_seq.busy as f64),
         ("router_routed_requests", routed as f64),
         ("router_reconnects", reconnects as f64),
@@ -1039,8 +1192,10 @@ fn loadgen_via_router(
     if let Some(p) = &r_pipe {
         kv.extend_from_slice(&[
             ("router_pipelined_throughput_rps", p.throughput),
-            ("router_pipelined_p50_ms", p.p50),
-            ("router_pipelined_p99_ms", p.p99),
+            ("router_pipelined_p50_ms", p.lat.p50),
+            ("router_pipelined_p90_ms", p.lat.p90),
+            ("router_pipelined_p99_ms", p.lat.p99),
+            ("router_pipelined_p999_ms", p.lat.p999),
             ("router_pipelined_busy_retries", p.busy as f64),
         ]);
     }
@@ -1053,12 +1208,14 @@ fn loadgen_via_router(
             run_load_passes(&direct, clients, requests, depth, spec, n, m, seed)?;
         println!(
             "direct sequential: throughput {:.1} req/s  p50 {:.3} ms  p99 {:.3} ms",
-            d_seq.throughput, d_seq.p50, d_seq.p99
+            d_seq.throughput, d_seq.lat.p50, d_seq.lat.p99
         );
         kv.extend_from_slice(&[
             ("direct_throughput_rps", d_seq.throughput),
-            ("direct_p50_ms", d_seq.p50),
-            ("direct_p99_ms", d_seq.p99),
+            ("direct_p50_ms", d_seq.lat.p50),
+            ("direct_p90_ms", d_seq.lat.p90),
+            ("direct_p99_ms", d_seq.lat.p99),
+            ("direct_p999_ms", d_seq.lat.p999),
         ]);
         let ratio = r_seq.throughput / d_seq.throughput.max(f64::MIN_POSITIVE);
         kv.push(("router_vs_direct_throughput", ratio));
@@ -1066,12 +1223,14 @@ fn loadgen_via_router(
             println!(
                 "direct pipelined (depth {depth}): throughput {:.1} req/s  p50 {:.3} ms  \
                  p99 {:.3} ms",
-                dp.throughput, dp.p50, dp.p99
+                dp.throughput, dp.lat.p50, dp.lat.p99
             );
             kv.extend_from_slice(&[
                 ("direct_pipelined_throughput_rps", dp.throughput),
-                ("direct_pipelined_p50_ms", dp.p50),
-                ("direct_pipelined_p99_ms", dp.p99),
+                ("direct_pipelined_p50_ms", dp.lat.p50),
+                ("direct_pipelined_p90_ms", dp.lat.p90),
+                ("direct_pipelined_p99_ms", dp.lat.p99),
+                ("direct_pipelined_p999_ms", dp.lat.p999),
                 (
                     "router_vs_direct_pipelined_throughput",
                     rp.throughput / dp.throughput.max(f64::MIN_POSITIVE),
@@ -1236,12 +1395,17 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_nearest_rank() {
-        let ns: Vec<u64> = (1..=100).map(|i| i * 1_000_000).collect();
-        assert_eq!(percentile_ms(&ns, 50.0), 50.0);
-        assert_eq!(percentile_ms(&ns, 99.0), 99.0);
-        assert_eq!(percentile_ms(&ns, 100.0), 100.0);
-        assert_eq!(percentile_ms(&[], 50.0), 0.0);
-        assert_eq!(percentile_ms(&[2_000_000], 99.0), 2.0);
+    fn summarize_ns_quantiles_are_monotone_and_bucket_bounded() {
+        // 1 µs .. 1 ms, uniformly spread.
+        let ns: Vec<u64> = (1..=1000).map(|i| i * 1_000).collect();
+        let s = summarize_ns(&ns);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999, "quantiles must be ordered");
+        // Log-bucket estimates sit in [exact, 2 * exact): the exact p50
+        // sample is 0.5 ms, the exact p999 sample is 0.999 ms.
+        assert!((0.5..1.0).contains(&s.p50), "p50 {} out of bucket range", s.p50);
+        assert!((0.999..2.0).contains(&s.p999), "p999 {} out of bucket range", s.p999);
+        let empty = summarize_ns(&[]);
+        assert_eq!(empty.p50, 0.0);
+        assert_eq!(empty.p999, 0.0);
     }
 }

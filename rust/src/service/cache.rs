@@ -16,12 +16,14 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::core::error::Result;
 use crate::projection::l1::L1Algo;
 use crate::projection::{ExecBackend, Method, Norm, ProjectionPlan, ProjectionSpec};
 use crate::service::protocol::{ProjectRequest, WireLayout};
 use crate::service::stats::ServiceStats;
+use crate::service::telemetry::{Stage, Telemetry};
 
 /// Cache key: the full projection spec (minus execution backend, which is
 /// server configuration) plus layout and shape. `eta` is keyed by its bit
@@ -174,6 +176,11 @@ impl PlanCache {
         self.map.is_empty()
     }
 
+    /// True when `key` is resident (no recency bump).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.map.contains_key(key)
+    }
+
     /// Look up (or compile and insert) the plan for `key`, bumping its
     /// recency. Evicts the least-recently-used plan at capacity.
     pub fn get_or_compile(
@@ -210,16 +217,29 @@ impl PlanCache {
 pub struct ShardedPlanCache {
     shards: Vec<Mutex<PlanCache>>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
 }
 
 impl ShardedPlanCache {
     /// `shards` shards (min 1), each holding up to `cap_per_shard` plans.
+    /// Telemetry starts disabled; attach a live recorder with
+    /// [`ShardedPlanCache::with_telemetry`].
     pub fn new(shards: usize, cap_per_shard: usize, stats: Arc<ServiceStats>) -> Self {
         let n = shards.max(1);
         let shards = (0..n)
             .map(|_| Mutex::new(PlanCache::new(cap_per_shard, Arc::clone(&stats))))
             .collect();
-        ShardedPlanCache { shards, stats }
+        ShardedPlanCache { shards, stats, telemetry: Arc::new(Telemetry::disabled()) }
+    }
+
+    /// Attach a telemetry recorder: every [`ShardedPlanCache::with_plan`]
+    /// call feeds the aggregate [`Stage::Project`] histogram and the
+    /// per-plan project-time histogram keyed by
+    /// [`PlanKey::stable_hash`] — the "harvested through the plan cache"
+    /// path, mirroring how kernel-pin events are collected.
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> Self {
+        self.telemetry = telemetry;
+        self
     }
 
     /// Number of shards.
@@ -254,8 +274,30 @@ impl ShardedPlanCache {
             None => self.shard_for(key),
         };
         let mut shard = self.shards[idx].lock().expect("plan-cache shard poisoned");
+        let telemetry_on = self.telemetry.is_enabled();
+        let key_hash = if telemetry_on { key.stable_hash() } else { 0 };
+        let fresh = telemetry_on && !shard.contains(key);
         let plan = shard.get_or_compile(key, backend)?;
+        if fresh {
+            // Compile path — the one place a plan's label string is
+            // allocated (never on the warm record path).
+            self.telemetry.register_plan_label(key_hash, || {
+                let dims: Vec<String> = key.shape.iter().map(|d| d.to_string()).collect();
+                format!(
+                    "{} η={} {}",
+                    crate::projection::operator::fmt_norms(&key.norms),
+                    key.eta(),
+                    dims.join("x")
+                )
+            });
+        }
+        let t0 = if telemetry_on { Some(Instant::now()) } else { None };
         let out = f(plan);
+        if let Some(t0) = t0 {
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.telemetry.record(Stage::Project, ns);
+            self.telemetry.record_plan(key_hash, ns);
+        }
         // Harvest the one-shot kernel-pin event (fires at compile for
         // forced/explicit variants, after the measured warmup otherwise)
         // into the per-variant counters.
@@ -436,6 +478,30 @@ mod tests {
         if simd::forced_from_env().unwrap_or(None).is_none() && simd::supported().len() >= 2 {
             assert_eq!(stats.autotuned_plans.load(Ordering::Relaxed), 1);
         }
+    }
+
+    #[test]
+    fn with_plan_feeds_project_histograms_through_the_cache() {
+        let stats = Arc::new(ServiceStats::new());
+        let telemetry = Arc::new(Telemetry::with_options(true, 0, u64::MAX, 8));
+        let cache = ShardedPlanCache::new(1, 4, stats).with_telemetry(Arc::clone(&telemetry));
+        let k = key(vec![4, 4], 1.0);
+        let mut data = vec![0.1f32; 16];
+        for _ in 0..3 {
+            cache
+                .with_plan(None, &k, &ExecBackend::Serial, |plan| {
+                    plan.project_inplace(&mut data).unwrap()
+                })
+                .unwrap();
+        }
+        let snaps = telemetry.stage_snapshots();
+        let (_, project) = &snaps[Stage::Project as usize];
+        assert_eq!(project.count(), 3, "every with_plan call lands in Stage::Project");
+        let plans = telemetry.plan_snapshots();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].key_hash, k.stable_hash());
+        assert_eq!(plans[0].hist.count(), 3);
+        assert!(plans[0].label.contains("4x4"), "got label `{}`", plans[0].label);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::projection::ProjectionSpec;
 use crate::service::protocol::{
     self, ChunkAssembler, Frame, ProjectRequest, WireLayout, MAX_BODY_BYTES, V2,
 };
+use crate::service::telemetry::{StatsV2, TraceRecord};
 
 /// A connected service client.
 pub struct Client {
@@ -69,6 +70,26 @@ impl Client {
         match self.call(&Frame::StatsRequest)? {
             Frame::StatsResponse(pairs) => Ok(pairs),
             other => Err(MlprojError::Protocol(format!("expected stats, got {other:?}"))),
+        }
+    }
+
+    /// Fetch the server's v2 stats: counters plus per-stage latency
+    /// histograms (and, through a router, per-backend + merged
+    /// sections). Servers predating the frame answer with a protocol
+    /// error, which surfaces as `Err` — callers can fall back to
+    /// [`Client::stats`].
+    pub fn stats_v2(&mut self) -> Result<StatsV2> {
+        match self.call(&Frame::StatsV2Request)? {
+            Frame::StatsV2Response(stats) => Ok(stats),
+            other => Err(MlprojError::Protocol(format!("expected stats v2, got {other:?}"))),
+        }
+    }
+
+    /// Fetch the server's sampled-trace ring (oldest first).
+    pub fn trace(&mut self) -> Result<Vec<TraceRecord>> {
+        match self.call(&Frame::TraceRequest)? {
+            Frame::TraceResponse(records) => Ok(records),
+            other => Err(MlprojError::Protocol(format!("expected traces, got {other:?}"))),
         }
     }
 
@@ -651,6 +672,40 @@ mod tests {
             shape: vec![y.rows(), y.cols()],
             payload: y.data().to_vec(),
         }
+    }
+
+    #[test]
+    fn stats_v2_and_trace_reflect_served_requests() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut client = Client::connect(handle.addr()).unwrap();
+
+        let mut rng = Rng::new(22);
+        let y = Matrix::random_uniform(10, 30, -2.0, 2.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(1.0);
+        client.project_matrix(&spec, &y).unwrap();
+
+        let v1 = client.stats().unwrap();
+        let v2 = client.stats_v2().unwrap();
+        // v2 carries the same counter vector v1 serves; counters only
+        // grow, so the later scrape must dominate the earlier one.
+        for (name, value) in &v1 {
+            assert!(
+                v2.counter(name).is_some_and(|v| v >= *value),
+                "counter {name} missing or regressed in v2"
+            );
+        }
+        let local = v2.section("local").expect("server stats carry a local section");
+        let project = local.stage(crate::service::telemetry::Stage::Project).unwrap();
+        assert!(project.count() >= 1, "project stage histogram must be non-empty");
+
+        // The deterministic sampler captures the first request.
+        let traces = client.trace().unwrap();
+        assert!(!traces.is_empty(), "first request must be trace-sampled");
+        assert!(traces[0].stage_ns[crate::service::telemetry::Stage::Project as usize] > 0);
+
+        client.shutdown().unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

@@ -27,6 +27,9 @@
 //!   shard; chunked streams pass through frame by frame.
 //! * [`stats`] — atomics-based counters surfaced through the `Stats`
 //!   frame and `mlproj info --addr`.
+//! * [`telemetry`] — lock-free per-stage latency histograms, per-plan
+//!   project-time histograms and a sampled request-trace ring, surfaced
+//!   through the `StatsV2`/`Trace` frames and `mlproj top`.
 
 pub mod cache;
 pub mod client;
@@ -35,6 +38,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod stats;
+pub mod telemetry;
 
 pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
 pub use client::{Client, ClientPool, PipelinedConn};
@@ -46,3 +50,7 @@ pub use router::{spawn_backends, BackendSpawnOptions, Router, RouterHandle, Rout
 pub use scheduler::{ConnReply, Job, PayloadPool, ReplySlot, ReplyTo, Scheduler, SchedulerConfig};
 pub use server::{ServeOptions, Server, ServerHandle};
 pub use stats::ServiceStats;
+pub use telemetry::{
+    HistSnapshot, LatencyHistogram, PlanHist, Stage, StatsSection, StatsV2, Telemetry,
+    TraceRecord, TraceRing,
+};

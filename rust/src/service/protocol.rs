@@ -47,6 +47,10 @@ use crate::core::error::{MlprojError, Result};
 use crate::projection::l1::L1Algo;
 use crate::projection::operator::fmt_norms;
 use crate::projection::{Method, Norm};
+use crate::service::telemetry::{
+    kernel_code, kernel_from_code, HistSnapshot, PlanHist, Stage, StatsSection, StatsV2,
+    TraceRecord, HIST_BUCKETS, STAGE_COUNT,
+};
 
 /// Frame magic: identifies an mlproj service stream.
 pub const MAGIC: [u8; 4] = *b"MLPJ";
@@ -317,6 +321,13 @@ pub(crate) const T_PROJECT_BEGIN: u8 = 10;
 pub(crate) const T_PROJECT_CHUNK: u8 = 11;
 pub(crate) const T_PROJECT_END: u8 = 12;
 pub(crate) const T_PROJECT_OK_BEGIN: u8 = 13;
+// Telemetry frames — valid under either protocol version (pre-telemetry
+// peers answer them with an `unknown frame type` error, which clients
+// treat as "fall back to v1 stats").
+pub(crate) const T_STATS_V2_REQ: u8 = 14;
+pub(crate) const T_STATS_V2_RESP: u8 = 15;
+pub(crate) const T_TRACE_REQ: u8 = 16;
+pub(crate) const T_TRACE_RESP: u8 = 17;
 
 // ---------------------------------------------------------------------------
 // Checksums (v2 chunked streams)
@@ -411,6 +422,20 @@ pub struct BeginInfo {
 /// * `ProjectOkBegin` — `total_elems: u64`, `checksum_kind: u8`; the
 ///   reply-direction `Begin`, followed by `ProjectChunk`s and one
 ///   `ProjectEnd`.
+///
+/// Telemetry frames (either version):
+///
+/// * `StatsV2Request` / `TraceRequest` — empty.
+/// * `StatsV2Response` — the v1 counter pairs (same layout as
+///   `StatsResponse`), then histogram sections (`nsections: u16`, each
+///   `label_len: u16` + UTF-8 label, `nstages: u8`, each `stage: u8` +
+///   histogram), then per-plan histograms (`nplans: u16`, each
+///   `key_hash: u64`, `label_len: u16` + label, histogram). A histogram
+///   is `sum_ns: u64`, `nonzero: u8`, then `nonzero ×` (`bucket: u8`,
+///   `count: u64`) sparse bucket pairs.
+/// * `TraceResponse` — `n: u16`, then `n ×` (`corr: u16`, `kernel: u8`,
+///   `batch_size: u32`, `key_hash: u64`, `nstages: u8`, `nstages × u64`
+///   per-stage ns in `Stage` order).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Liveness probe.
@@ -457,6 +482,15 @@ pub enum Frame {
         /// Checksum the closing `ProjectEnd` carries.
         checksum: ChecksumKind,
     },
+    /// Ask the server for its StatsV2 payload (counters + histograms).
+    StatsV2Request,
+    /// StatsV2 reply: counters, per-stage histogram sections and
+    /// per-plan project-time histograms.
+    StatsV2Response(StatsV2),
+    /// Ask the server for its sampled trace records.
+    TraceRequest,
+    /// Trace reply: the surviving trace-ring records, oldest first.
+    TraceResponse(Vec<TraceRecord>),
 }
 
 impl Frame {
@@ -475,6 +509,10 @@ impl Frame {
             Frame::ProjectChunk(_) => T_PROJECT_CHUNK,
             Frame::ProjectEnd { .. } => T_PROJECT_END,
             Frame::ProjectOkBegin { .. } => T_PROJECT_OK_BEGIN,
+            Frame::StatsV2Request => T_STATS_V2_REQ,
+            Frame::StatsV2Response(_) => T_STATS_V2_RESP,
+            Frame::TraceRequest => T_TRACE_REQ,
+            Frame::TraceResponse(_) => T_TRACE_RESP,
         }
     }
 
@@ -528,7 +566,12 @@ impl Frame {
     fn encode_body(&self) -> Result<Vec<u8>> {
         let mut b = Vec::new();
         match self {
-            Frame::Ping | Frame::StatsRequest | Frame::Shutdown | Frame::ShutdownAck => {}
+            Frame::Ping
+            | Frame::StatsRequest
+            | Frame::Shutdown
+            | Frame::ShutdownAck
+            | Frame::StatsV2Request
+            | Frame::TraceRequest => {}
             Frame::Pong { max_body } => {
                 if let Some(cap) = max_body {
                     b.extend_from_slice(&cap.to_le_bytes());
@@ -579,16 +622,24 @@ impl Frame {
                 b.extend_from_slice(bytes);
             }
             Frame::StatsResponse(pairs) => {
-                let n = u32::try_from(pairs.len())
-                    .map_err(|_| perr("too many stats counters"))?;
+                encode_counter_pairs(&mut b, pairs.iter().map(|(n, v)| (n.as_str(), *v)))?;
+            }
+            Frame::StatsV2Response(stats) => {
+                encode_stats_v2(&mut b, stats)?;
+            }
+            Frame::TraceResponse(records) => {
+                let n = u16::try_from(records.len())
+                    .map_err(|_| perr("too many trace records"))?;
                 b.extend_from_slice(&n.to_le_bytes());
-                for (name, value) in pairs {
-                    let bytes = name.as_bytes();
-                    let len = u16::try_from(bytes.len())
-                        .map_err(|_| perr(format!("counter name `{name}` too long")))?;
-                    b.extend_from_slice(&len.to_le_bytes());
-                    b.extend_from_slice(bytes);
-                    b.extend_from_slice(&value.to_le_bytes());
+                for rec in records {
+                    b.extend_from_slice(&rec.corr.to_le_bytes());
+                    b.push(kernel_code(rec.kernel));
+                    b.extend_from_slice(&rec.batch_size.to_le_bytes());
+                    b.extend_from_slice(&rec.key_hash.to_le_bytes());
+                    b.push(STAGE_COUNT as u8);
+                    for ns in rec.stage_ns {
+                        b.extend_from_slice(&ns.to_le_bytes());
+                    }
                 }
             }
         }
@@ -655,18 +706,7 @@ impl Frame {
                 Frame::Error { code, msg }
             }
             T_STATS_REQ => Frame::StatsRequest,
-            T_STATS_RESP => {
-                let n = c.u32()? as usize;
-                let mut pairs = Vec::with_capacity(n.min(1024));
-                for _ in 0..n {
-                    let len = c.u16()? as usize;
-                    let name = String::from_utf8(c.take(len)?.to_vec())
-                        .map_err(|_| perr("counter name is not valid UTF-8"))?;
-                    let value = c.u64()?;
-                    pairs.push((name, value));
-                }
-                Frame::StatsResponse(pairs)
-            }
+            T_STATS_RESP => Frame::StatsResponse(decode_counter_pairs(&mut c)?),
             T_SHUTDOWN => Frame::Shutdown,
             T_SHUTDOWN_ACK => Frame::ShutdownAck,
             T_PROJECT_BEGIN => {
@@ -688,6 +728,30 @@ impl Frame {
                 check_stream_total(total_elems)?;
                 let checksum = ChecksumKind::from_u8(c.u8()?)?;
                 Frame::ProjectOkBegin { total_elems, checksum }
+            }
+            T_STATS_V2_REQ => Frame::StatsV2Request,
+            T_STATS_V2_RESP => Frame::StatsV2Response(decode_stats_v2(&mut c)?),
+            T_TRACE_REQ => Frame::TraceRequest,
+            T_TRACE_RESP => {
+                let n = c.u16()? as usize;
+                let mut records = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let corr = c.u16()?;
+                    let kernel = kernel_from_code(c.u8()?);
+                    let batch_size = c.u32()?;
+                    let key_hash = c.u64()?;
+                    let nstages = c.u8()? as usize;
+                    let mut stage_ns = [0u64; STAGE_COUNT];
+                    for i in 0..nstages {
+                        let ns = c.u64()?;
+                        // Tolerate future senders with extra stages.
+                        if i < STAGE_COUNT {
+                            stage_ns[i] = ns;
+                        }
+                    }
+                    records.push(TraceRecord { corr, kernel, batch_size, key_hash, stage_ns });
+                }
+                Frame::TraceResponse(records)
             }
             other => return Err(perr(format!("unknown frame type {other}"))),
         };
@@ -821,6 +885,193 @@ fn parse_project_meta(c: &mut Cursor) -> Result<ProjectMeta> {
         shape.push(c.u32()? as usize);
     }
     Ok(ProjectMeta { norms, eta, l1_algo, method, layout, shape })
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry payload encoding (StatsV2 + traces)
+// ---------------------------------------------------------------------------
+
+/// Encode counter pairs (`n: u32`, then `name_len: u16` + name +
+/// `value: u64` each) — the body layout shared by `StatsResponse` and
+/// the counter block of `StatsV2Response`.
+fn encode_counter_pairs<'a, I>(b: &mut Vec<u8>, pairs: I) -> Result<()>
+where
+    I: ExactSizeIterator<Item = (&'a str, u64)>,
+{
+    let n = u32::try_from(pairs.len()).map_err(|_| perr("too many stats counters"))?;
+    b.extend_from_slice(&n.to_le_bytes());
+    for (name, value) in pairs {
+        let bytes = name.as_bytes();
+        let len = u16::try_from(bytes.len())
+            .map_err(|_| perr(format!("counter name `{name}` too long")))?;
+        b.extend_from_slice(&len.to_le_bytes());
+        b.extend_from_slice(bytes);
+        b.extend_from_slice(&value.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn decode_counter_pairs(c: &mut Cursor) -> Result<Vec<(String, u64)>> {
+    let n = c.u32()? as usize;
+    let mut pairs = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let len = c.u16()? as usize;
+        let name = String::from_utf8(c.take(len)?.to_vec())
+            .map_err(|_| perr("counter name is not valid UTF-8"))?;
+        let value = c.u64()?;
+        pairs.push((name, value));
+    }
+    Ok(pairs)
+}
+
+/// Encode one histogram snapshot sparsely: `sum_ns: u64`, `nonzero: u8`,
+/// then one (`bucket: u8`, `count: u64`) pair per non-empty bucket.
+fn encode_hist(b: &mut Vec<u8>, h: &HistSnapshot) {
+    b.extend_from_slice(&h.sum_ns.to_le_bytes());
+    let nonzero = h.counts.iter().filter(|&&c| c != 0).count() as u8;
+    b.push(nonzero);
+    for (i, &count) in h.counts.iter().enumerate() {
+        if count != 0 {
+            b.push(i as u8);
+            b.extend_from_slice(&count.to_le_bytes());
+        }
+    }
+}
+
+fn decode_hist(c: &mut Cursor) -> Result<HistSnapshot> {
+    let sum_ns = c.u64()?;
+    let n = c.u8()? as usize;
+    let mut counts = [0u64; HIST_BUCKETS];
+    for _ in 0..n {
+        let i = c.u8()? as usize;
+        if i >= HIST_BUCKETS {
+            return Err(perr(format!(
+                "histogram bucket index {i} out of range (max {})",
+                HIST_BUCKETS - 1
+            )));
+        }
+        counts[i] = c.u64()?;
+    }
+    Ok(HistSnapshot { counts, sum_ns })
+}
+
+fn encode_label(b: &mut Vec<u8>, label: &str) -> Result<()> {
+    let bytes = label.as_bytes();
+    let len =
+        u16::try_from(bytes.len()).map_err(|_| perr(format!("label `{label}` too long")))?;
+    b.extend_from_slice(&len.to_le_bytes());
+    b.extend_from_slice(bytes);
+    Ok(())
+}
+
+fn decode_label(c: &mut Cursor) -> Result<String> {
+    let len = c.u16()? as usize;
+    String::from_utf8(c.take(len)?.to_vec()).map_err(|_| perr("label is not valid UTF-8"))
+}
+
+fn encode_stats_v2(b: &mut Vec<u8>, stats: &StatsV2) -> Result<()> {
+    encode_counter_pairs(b, stats.counters.iter().map(|(n, v)| (n.as_str(), *v)))?;
+    let nsec =
+        u16::try_from(stats.sections.len()).map_err(|_| perr("too many histogram sections"))?;
+    b.extend_from_slice(&nsec.to_le_bytes());
+    for sec in &stats.sections {
+        encode_label(b, &sec.label)?;
+        let nstages =
+            u8::try_from(sec.stages.len()).map_err(|_| perr("too many stages in a section"))?;
+        b.push(nstages);
+        for (stage, hist) in &sec.stages {
+            b.push(*stage as u8);
+            encode_hist(b, hist);
+        }
+    }
+    let nplans =
+        u16::try_from(stats.plans.len()).map_err(|_| perr("too many plan histograms"))?;
+    b.extend_from_slice(&nplans.to_le_bytes());
+    for plan in &stats.plans {
+        b.extend_from_slice(&plan.key_hash.to_le_bytes());
+        encode_label(b, &plan.label)?;
+        encode_hist(b, &plan.hist);
+    }
+    Ok(())
+}
+
+fn decode_stats_v2(c: &mut Cursor) -> Result<StatsV2> {
+    let counters = decode_counter_pairs(c)?;
+    let nsec = c.u16()? as usize;
+    let mut sections = Vec::with_capacity(nsec.min(64));
+    for _ in 0..nsec {
+        let label = decode_label(c)?;
+        let nstages = c.u8()? as usize;
+        let mut stages = Vec::with_capacity(nstages);
+        for _ in 0..nstages {
+            let sb = c.u8()?;
+            let stage =
+                Stage::from_u8(sb).ok_or_else(|| perr(format!("unknown stage byte {sb}")))?;
+            stages.push((stage, decode_hist(c)?));
+        }
+        sections.push(StatsSection { label, stages });
+    }
+    let nplans = c.u16()? as usize;
+    let mut plans = Vec::with_capacity(nplans.min(256));
+    for _ in 0..nplans {
+        let key_hash = c.u64()?;
+        let label = decode_label(c)?;
+        plans.push(PlanHist { key_hash, label, hist: decode_hist(c)? });
+    }
+    Ok(StatsV2 { counters, sections, plans })
+}
+
+/// Write a `StatsResponse` frame directly from static-name counter pairs
+/// — the server scrape path, which never materialises owned `String`
+/// names (the satellite of `ServiceStats::snapshot` returning
+/// `&'static str`).
+pub fn write_stats_response<W: Write>(
+    w: &mut W,
+    version: u8,
+    corr: u16,
+    pairs: &[(&str, u64)],
+) -> Result<()> {
+    let mut body = Vec::new();
+    encode_counter_pairs(&mut body, pairs.iter().copied())?;
+    write_frame_bytes(w, version, T_STATS_RESP, corr, &body)
+}
+
+/// Write a `StatsV2Response` frame at either protocol version.
+pub fn write_stats_v2_response<W: Write>(
+    w: &mut W,
+    version: u8,
+    corr: u16,
+    stats: &StatsV2,
+) -> Result<()> {
+    let mut body = Vec::new();
+    encode_stats_v2(&mut body, stats)?;
+    write_frame_bytes(w, version, T_STATS_V2_RESP, corr, &body)
+}
+
+/// Write one already-encoded frame body under a fresh header.
+fn write_frame_bytes<W: Write>(
+    w: &mut W,
+    version: u8,
+    ftype: u8,
+    corr: u16,
+    body: &[u8],
+) -> Result<()> {
+    if body.len() > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "frame body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+            body.len()
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = version;
+    head[5] = ftype;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -1393,6 +1644,105 @@ mod tests {
         ]));
         roundtrip(Frame::Shutdown);
         roundtrip(Frame::ShutdownAck);
+    }
+
+    fn sample_hist(seed: u64) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        counts[0] = seed;
+        counts[5] = seed + 3;
+        counts[HIST_BUCKETS - 1] = 7;
+        HistSnapshot { counts, sum_ns: seed * 1000 }
+    }
+
+    #[test]
+    fn roundtrip_telemetry_frames() {
+        use crate::core::simd::KernelVariant;
+
+        roundtrip(Frame::StatsV2Request);
+        roundtrip(Frame::TraceRequest);
+        roundtrip(Frame::StatsV2Response(StatsV2::default()));
+        let stats = StatsV2 {
+            counters: vec![("requests_total".into(), 42), ("cache_hits".into(), u64::MAX)],
+            sections: vec![
+                StatsSection {
+                    label: "local".into(),
+                    stages: Stage::ALL
+                        .iter()
+                        .map(|&s| (s, sample_hist(s as u64 + 1)))
+                        .collect(),
+                },
+                StatsSection { label: "backend0 127.0.0.1:1".into(), stages: vec![] },
+            ],
+            plans: vec![
+                PlanHist {
+                    key_hash: 0xdead_beef,
+                    label: "matrix 64x256 linf,l1".into(),
+                    hist: sample_hist(9),
+                },
+                PlanHist { key_hash: 0, label: "(overflow)".into(), hist: HistSnapshot::empty() },
+            ],
+        };
+        roundtrip(Frame::StatsV2Response(stats));
+        roundtrip(Frame::TraceResponse(vec![]));
+        roundtrip(Frame::TraceResponse(vec![
+            TraceRecord {
+                corr: 7,
+                kernel: Some(KernelVariant::Avx2),
+                batch_size: 3,
+                key_hash: 0x1234_5678_9abc_def0,
+                stage_ns: [1, 2, 3, 4, 5, 6],
+            },
+            TraceRecord::default(),
+        ]));
+    }
+
+    #[test]
+    fn telemetry_frames_travel_under_both_versions() {
+        // The telemetry types sit outside the v2-only gate: a v1-only
+        // client can scrape StatsV2 from a new server.
+        let frame = Frame::StatsV2Request;
+        let v1 = frame.encode().unwrap();
+        assert_eq!(v1[4], V1);
+        assert_eq!(Frame::decode(&v1).unwrap(), frame);
+        let v2 = frame.encode_v2(9).unwrap();
+        assert_eq!(v2[4], V2);
+        assert_eq!(Frame::decode(&v2).unwrap(), frame);
+    }
+
+    #[test]
+    fn rejects_bad_stage_and_bucket_bytes_in_stats_v2() {
+        let stats = StatsV2 {
+            counters: vec![],
+            sections: vec![StatsSection {
+                label: "x".into(),
+                stages: vec![(Stage::Decode, sample_hist(1))],
+            }],
+            plans: vec![],
+        };
+        let bytes = Frame::StatsV2Response(stats).encode().unwrap();
+        // Body layout: counters n (4), nsections (2), label_len + "x"
+        // (3), nstages (1) -> stage byte at body offset 10; the
+        // histogram behind it is sum_ns (8) + nonzero (1) -> first
+        // bucket index at body offset 20.
+        let mut bad = bytes.clone();
+        bad[HEADER_BYTES + 10] = 99;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+        let mut bad = bytes;
+        bad[HEADER_BYTES + 20] = HIST_BUCKETS as u8;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn write_stats_response_matches_frame_encoding() {
+        let pairs = [("requests_total", 42u64), ("cache_hits", 7u64)];
+        let mut direct = Vec::new();
+        write_stats_response(&mut direct, V1, 0, &pairs).unwrap();
+        let via_frame = Frame::StatsResponse(
+            pairs.iter().map(|(n, v)| (n.to_string(), *v)).collect(),
+        )
+        .encode()
+        .unwrap();
+        assert_eq!(direct, via_frame, "direct writer must emit identical bytes");
     }
 
     #[test]

@@ -51,6 +51,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::core::error::{MlprojError, Result};
 use crate::service::client::{Client, ClientPool};
@@ -59,6 +60,9 @@ use crate::service::protocol::{
 };
 use crate::service::server::trigger_shutdown;
 use crate::service::stats::ServiceStats;
+use crate::service::telemetry::{
+    local_stats_v2, PlanHist, Stage, StatsSection, StatsV2, Telemetry, TraceRecord, STAGE_COUNT,
+};
 
 /// Router sizing and wire limits.
 #[derive(Debug, Clone)]
@@ -110,6 +114,13 @@ struct ForwardJob {
     req: ProjectRequest,
     corr: u16,
     reply: Option<Sender<RouterMsg>>,
+    /// Stable plan-key hash (doubles as the routing hash), kept for
+    /// trace records.
+    key_hash: u64,
+    /// Downstream frame-decode duration, threaded into trace records.
+    decode_ns: u64,
+    /// Enqueue time, for the router's queue-wait stage histogram.
+    t_enqueue: Instant,
 }
 
 impl ForwardJob {
@@ -240,6 +251,7 @@ pub struct Router {
     addr: SocketAddr,
     backends: Arc<Vec<ClientPool>>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
     shutdown: Arc<AtomicBool>,
     opts: RouterOptions,
     queue: Arc<ForwardQueue>,
@@ -275,15 +287,17 @@ impl Router {
             backends.push(pool);
         }
         let backends = Arc::new(backends);
+        let telemetry = Arc::new(Telemetry::from_env());
         let queue = Arc::new(ForwardQueue::new(opts.queue_depth));
         let workers = (0..opts.forward_workers.max(1))
             .map(|_| {
                 let queue = Arc::clone(&queue);
                 let backends = Arc::clone(&backends);
                 let stats = Arc::clone(&stats);
+                let telemetry = Arc::clone(&telemetry);
                 std::thread::spawn(move || {
                     while let Some(job) = queue.pop() {
-                        forward_one(&backends, &stats, job);
+                        forward_one(&backends, &stats, &telemetry, job);
                     }
                 })
             })
@@ -293,6 +307,7 @@ impl Router {
             addr,
             backends,
             stats,
+            telemetry,
             shutdown: Arc::new(AtomicBool::new(false)),
             opts,
             queue,
@@ -324,9 +339,15 @@ impl Router {
     }
 
     /// Counter snapshot plus the router-only observables (the payload of
-    /// the router's `StatsResponse`).
-    pub fn snapshot(&self) -> Vec<(String, u64)> {
+    /// the router's `StatsResponse`). Names are `&'static str` like
+    /// [`ServiceStats::snapshot`], so a scrape allocates no name strings.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
         router_snapshot(&self.stats, &self.backends)
+    }
+
+    /// The router's telemetry recorder.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Accept and route connections until a `Shutdown` frame arrives,
@@ -357,6 +378,7 @@ impl Router {
             let ctx = ConnCtx {
                 backends: Arc::clone(&self.backends),
                 stats: Arc::clone(&self.stats),
+                telemetry: Arc::clone(&self.telemetry),
                 shutdown: Arc::clone(&self.shutdown),
                 addr: self.addr,
                 opts: self.opts.clone(),
@@ -422,40 +444,64 @@ impl RouterHandle {
     }
 }
 
-/// Pick the backend for a request: stable hash of the full plan key, so
-/// the same `(spec, shape)` always lands on the same backend process.
-fn route(meta: &ProjectMeta, n: usize) -> usize {
-    let h = crate::service::cache::stable_hash_parts(
+/// Stable plan-key hash of a request header — the routing key *and* the
+/// trace/plan-histogram key (the same hash backends derive via
+/// [`crate::service::cache::PlanKey::stable_hash`]).
+fn meta_stable_hash(meta: &ProjectMeta) -> u64 {
+    crate::service::cache::stable_hash_parts(
         &meta.norms,
         meta.eta.to_bits(),
         meta.l1_algo,
         meta.method,
         meta.layout,
         &meta.shape,
-    );
-    (h % n as u64) as usize
+    )
 }
 
-/// [`route`] over a decoded request — no `ProjectMeta` (and no norm or
-/// shape clone) is materialized on the v2 forward hot path.
-fn route_req(req: &ProjectRequest, n: usize) -> usize {
-    let h = crate::service::cache::stable_hash_parts(
+/// [`meta_stable_hash`] over a decoded request — no `ProjectMeta` (and
+/// no norm or shape clone) is materialized on the v2 forward hot path.
+fn req_stable_hash(req: &ProjectRequest) -> u64 {
+    crate::service::cache::stable_hash_parts(
         &req.norms,
         req.eta.to_bits(),
         req.l1_algo,
         req.method,
         req.layout,
         &req.shape,
-    );
-    (h % n as u64) as usize
+    )
+}
+
+/// Pick the backend for a request: stable hash of the full plan key, so
+/// the same `(spec, shape)` always lands on the same backend process.
+fn route(meta: &ProjectMeta, n: usize) -> usize {
+    (meta_stable_hash(meta) % n as u64) as usize
 }
 
 /// Forward one whole-frame request upstream and deliver the reply. Typed
 /// backend errors (`Busy`, `Invalid`, …) pass through; transport errors
 /// that survive the pool's reconnect budget surface as `Internal`.
-fn forward_one(backends: &[ClientPool], stats: &ServiceStats, job: ForwardJob) {
+///
+/// The router's "project" stage is the whole upstream round trip (the
+/// work a forward worker blocks on), and its queue stage is the forward
+/// queue's wait — so a fleet scrape reads the router section with the
+/// same stage vocabulary as a backend section.
+fn forward_one(
+    backends: &[ClientPool],
+    stats: &ServiceStats,
+    telemetry: &Telemetry,
+    job: ForwardJob,
+) {
     ServiceStats::bump(&stats.routed_requests);
     let backend = job.backend;
+    let telemetry_on = telemetry.is_enabled();
+    let queue_ns = if telemetry_on {
+        let ns = Instant::now().saturating_duration_since(job.t_enqueue).as_nanos() as u64;
+        telemetry.record(Stage::Queue, ns);
+        ns
+    } else {
+        0
+    };
+    let t0 = if telemetry_on { Some(Instant::now()) } else { None };
     let result = backends[backend].project(&job.req).map_err(|e| match e {
         MlprojError::Io(e) => MlprojError::Runtime(format!(
             "backend {backend} ({}) unavailable: {e}",
@@ -463,25 +509,88 @@ fn forward_one(backends: &[ClientPool], stats: &ServiceStats, job: ForwardJob) {
         )),
         other => other,
     });
+    if let Some(t0) = t0 {
+        let project_ns = t0.elapsed().as_nanos() as u64;
+        telemetry.record(Stage::Project, project_ns);
+        if result.is_ok() && telemetry.should_trace(project_ns) {
+            let mut stage_ns = [0u64; STAGE_COUNT];
+            stage_ns[Stage::Decode as usize] = job.decode_ns;
+            stage_ns[Stage::Queue as usize] = queue_ns;
+            stage_ns[Stage::Project as usize] = project_ns;
+            telemetry.capture_trace(&TraceRecord {
+                corr: job.corr,
+                kernel: None, // the kernel runs on the backend
+                batch_size: 1,
+                key_hash: job.key_hash,
+                stage_ns,
+            });
+        }
+    }
     job.finish(result);
 }
 
 /// Build the router's `StatsResponse`: the shared counters plus
 /// router-only pairs (backend count, upstream reconnects).
-fn router_snapshot(stats: &ServiceStats, backends: &[ClientPool]) -> Vec<(String, u64)> {
+fn router_snapshot(stats: &ServiceStats, backends: &[ClientPool]) -> Vec<(&'static str, u64)> {
     let mut pairs = stats.snapshot();
-    pairs.push(("router_backends".into(), backends.len() as u64));
-    pairs.push((
-        "router_reconnects".into(),
-        backends.iter().map(|p| p.reconnects()).sum(),
-    ));
+    pairs.push(("router_backends", backends.len() as u64));
+    pairs.push(("router_reconnects", backends.iter().map(|p| p.reconnects()).sum()));
     pairs
+}
+
+/// Build the router's `StatsV2`: its own counters and stage section,
+/// then one section per backend (scraped over a fresh control
+/// connection) plus a `merged` section and a merged per-plan list, so a
+/// fleet reads as one distribution. A backend that cannot be scraped is
+/// skipped (the dashboard sees the sections that answered).
+fn router_stats_v2(
+    stats: &ServiceStats,
+    backends: &[ClientPool],
+    telemetry: &Telemetry,
+) -> StatsV2 {
+    let mut out = local_stats_v2(router_snapshot(stats, backends), telemetry, "router");
+    let mut merged: Vec<(Stage, crate::service::telemetry::HistSnapshot)> = Vec::new();
+    let mut plans: Vec<PlanHist> = std::mem::take(&mut out.plans);
+    for (i, pool) in backends.iter().enumerate() {
+        let fetched = Client::connect(pool.addr()).and_then(|mut c| c.stats_v2());
+        let Ok(backend_stats) = fetched else { continue };
+        for section in backend_stats.sections {
+            for (stage, hist) in &section.stages {
+                match merged.iter_mut().find(|(s, _)| s == stage) {
+                    Some((_, acc)) => acc.merge(hist),
+                    None => merged.push((*stage, hist.clone())),
+                }
+            }
+            out.sections.push(StatsSection {
+                label: format!("backend{i} {}", pool.addr()),
+                stages: section.stages,
+            });
+        }
+        for plan in backend_stats.plans {
+            match plans.iter_mut().find(|p| p.key_hash == plan.key_hash) {
+                Some(acc) => {
+                    acc.hist.merge(&plan.hist);
+                    if acc.label.is_empty() {
+                        acc.label = plan.label;
+                    }
+                }
+                None => plans.push(plan),
+            }
+        }
+    }
+    if !merged.is_empty() {
+        merged.sort_by_key(|(s, _)| *s as u8);
+        out.sections.insert(1, StatsSection { label: "merged".into(), stages: merged });
+    }
+    out.plans = plans;
+    out
 }
 
 /// Everything one downstream connection handler needs.
 struct ConnCtx {
     backends: Arc<Vec<ClientPool>>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
     shutdown: Arc<AtomicBool>,
     addr: SocketAddr,
     opts: RouterOptions,
@@ -517,6 +626,7 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
 /// thread (lockstep in, lockstep out) and recycle the reply payload as
 /// the next request's decode buffer, like the server's v1 loop.
 fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body: Vec<u8>) {
+    let telemetry = &ctx.telemetry;
     let mut payload: Vec<f32> = Vec::new();
     loop {
         if head.version != V1 {
@@ -528,8 +638,14 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
             return;
         }
         ServiceStats::bump(&ctx.stats.frames_in);
+        let t_dec = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
         let decoded =
             protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload);
+        let decode_ns = t_dec.map_or(0, |t0| {
+            let ns = t0.elapsed().as_nanos() as u64;
+            telemetry.record(Stage::Decode, ns);
+            ns
+        });
         let frame = match decoded {
             Ok(f) => f,
             Err(e) => {
@@ -543,7 +659,8 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
                 ServiceStats::bump(&ctx.stats.requests_total);
                 ServiceStats::add(&ctx.stats.payload_bytes_in, 4 * payload.len() as u64);
                 ServiceStats::bump(&ctx.stats.routed_requests);
-                let backend = route(&meta, ctx.backends.len());
+                let key_hash = meta_stable_hash(&meta);
+                let backend = (key_hash % ctx.backends.len() as u64) as usize;
                 let req = ProjectRequest {
                     norms: meta.norms,
                     eta: meta.eta,
@@ -553,14 +670,43 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
                     shape: meta.shape,
                     payload: std::mem::take(&mut payload),
                 };
-                match ctx.backends[backend].project(&req) {
+                // Lockstep forwarding has no queue; the upstream round
+                // trip is the router's project stage.
+                let t0 = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
+                let outcome = ctx.backends[backend].project(&req);
+                if let Some(t0) = t0 {
+                    let project_ns = t0.elapsed().as_nanos() as u64;
+                    telemetry.record(Stage::Project, project_ns);
+                    if outcome.is_ok() && telemetry.should_trace(project_ns) {
+                        let mut stage_ns = [0u64; STAGE_COUNT];
+                        stage_ns[Stage::Decode as usize] = decode_ns;
+                        stage_ns[Stage::Project as usize] = project_ns;
+                        telemetry.capture_trace(&TraceRecord {
+                            corr: 0,
+                            kernel: None,
+                            batch_size: 1,
+                            key_hash,
+                            stage_ns,
+                        });
+                    }
+                }
+                match outcome {
                     Ok(projected) => {
+                        let t_ser =
+                            if telemetry.is_enabled() { Some(Instant::now()) } else { None };
                         ServiceStats::bump(&ctx.stats.responses_ok);
                         ServiceStats::add(
                             &ctx.stats.payload_bytes_out,
                             4 * projected.len() as u64,
                         );
+                        let t_wr = t_ser.map(|t0| {
+                            telemetry.record(Stage::Serialize, t0.elapsed().as_nanos() as u64);
+                            Instant::now()
+                        });
                         let ok = protocol::write_project_ok(&mut stream, &projected);
+                        if let Some(t0) = t_wr {
+                            telemetry.record(Stage::Write, t0.elapsed().as_nanos() as u64);
+                        }
                         payload = projected;
                         if ok.is_err() {
                             return;
@@ -586,7 +732,21 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
                 max_body: Some(ctx.opts.max_body_bytes as u64),
             }),
             protocol::ServerFrame::Other(Frame::StatsRequest) => {
-                Some(Frame::StatsResponse(router_snapshot(&ctx.stats, &ctx.backends)))
+                let snap = router_snapshot(&ctx.stats, &ctx.backends);
+                if protocol::write_stats_response(&mut stream, V1, 0, &snap).is_err() {
+                    return;
+                }
+                None
+            }
+            protocol::ServerFrame::Other(Frame::StatsV2Request) => {
+                let merged = router_stats_v2(&ctx.stats, &ctx.backends, telemetry);
+                if protocol::write_stats_v2_response(&mut stream, V1, 0, &merged).is_err() {
+                    return;
+                }
+                None
+            }
+            protocol::ServerFrame::Other(Frame::TraceRequest) => {
+                Some(Frame::TraceResponse(telemetry.trace_snapshot()))
             }
             protocol::ServerFrame::Other(Frame::Shutdown) => {
                 let _ = Frame::ShutdownAck.write_to(&mut stream);
@@ -668,6 +828,7 @@ fn conn_writer(
     mut stream: TcpStream,
     rx: Receiver<RouterMsg>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
     inflight: Arc<InFlight>,
     max_body: usize,
 ) {
@@ -675,7 +836,7 @@ fn conn_writer(
     for msg in rx {
         match msg {
             RouterMsg::Done { corr, result } => {
-                write_done(&mut stream, &stats, &mut dead, corr, result, max_body);
+                write_done(&mut stream, &stats, &telemetry, &mut dead, corr, result, max_body);
                 inflight.dec();
             }
             RouterMsg::Control { corr, frame } => {
@@ -689,7 +850,15 @@ fn conn_writer(
                 for ev in rx {
                     match ev {
                         RelayEvent::Whole(result) => {
-                            write_done(&mut stream, &stats, &mut dead, corr, result, max_body);
+                            write_done(
+                                &mut stream,
+                                &stats,
+                                &telemetry,
+                                &mut dead,
+                                corr,
+                                result,
+                                max_body,
+                            );
                             closed = true;
                             break;
                         }
@@ -735,6 +904,7 @@ fn conn_writer(
 fn write_done(
     stream: &mut TcpStream,
     stats: &ServiceStats,
+    telemetry: &Telemetry,
     dead: &mut bool,
     corr: u16,
     result: Result<Vec<f32>>,
@@ -742,16 +912,24 @@ fn write_done(
 ) {
     match result {
         Ok(projected) => {
+            let t_ser = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
             ServiceStats::bump(&stats.responses_ok);
             ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
             if !*dead {
                 let fits = 4 + projected.len() * 4 <= max_body;
+                let t_wr = t_ser.map(|t0| {
+                    telemetry.record(Stage::Serialize, t0.elapsed().as_nanos() as u64);
+                    Instant::now()
+                });
                 let res = if fits {
                     protocol::write_project_ok_v2(stream, corr, &projected)
                 } else {
                     ServiceStats::bump(&stats.chunked_streams_out);
                     protocol::write_project_ok_chunked(stream, corr, &projected, max_body)
                 };
+                if let Some(t0) = t_wr {
+                    telemetry.record(Stage::Write, t0.elapsed().as_nanos() as u64);
+                }
                 *dead = res.is_err();
             }
         }
@@ -787,9 +965,12 @@ fn route_v2(mut stream: TcpStream, ctx: &ConnCtx, head: RawHeader, body: Vec<u8>
     let inflight = Arc::new(InFlight::default());
     let writer = {
         let stats = Arc::clone(&ctx.stats);
+        let telemetry = Arc::clone(&ctx.telemetry);
         let inflight = Arc::clone(&inflight);
         let max_body = ctx.opts.max_body_bytes;
-        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body))
+        std::thread::spawn(move || {
+            conn_writer(wstream, rx, stats, telemetry, inflight, max_body)
+        })
     };
     let acked_shutdown = v2_reader_loop(&mut stream, ctx, &tx, &inflight, head, body);
     drop(tx);
@@ -845,7 +1026,15 @@ fn v2_reader_loop(
         }
         match head.ftype {
             protocol::T_PROJECT => {
-                match protocol::decode_client_frame(head.version, head.ftype, &body) {
+                let t_dec =
+                    if ctx.telemetry.is_enabled() { Some(Instant::now()) } else { None };
+                let decoded = protocol::decode_client_frame(head.version, head.ftype, &body);
+                let decode_ns = t_dec.map_or(0, |t0| {
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    ctx.telemetry.record(Stage::Decode, ns);
+                    ns
+                });
+                match decoded {
                     Ok(Frame::Project(req)) => {
                         ServiceStats::bump(&ctx.stats.requests_total);
                         ServiceStats::bump(&ctx.stats.requests_pipelined);
@@ -862,11 +1051,15 @@ fn v2_reader_loop(
                                 result: Err(MlprojError::ServiceBusy),
                             });
                         } else {
+                            let key_hash = req_stable_hash(&req);
                             let job = ForwardJob {
-                                backend: route_req(&req, ctx.backends.len()),
+                                backend: (key_hash % ctx.backends.len() as u64) as usize,
                                 req,
                                 corr,
                                 reply: Some(tx.clone()),
+                                key_hash,
+                                decode_ns,
+                                t_enqueue: Instant::now(),
                             };
                             // A Busy rejection already delivered a typed
                             // error on this corr through the channel.
@@ -1003,7 +1196,21 @@ fn v2_reader_loop(
                 Frame::Pong { max_body: Some(ctx.opts.max_body_bytes as u64) },
             ),
             protocol::T_STATS_REQ => {
-                control(corr, Frame::StatsResponse(router_snapshot(&ctx.stats, &ctx.backends)))
+                let pairs = router_snapshot(&ctx.stats, &ctx.backends)
+                    .into_iter()
+                    .map(|(n, v)| (n.to_string(), v));
+                control(corr, Frame::StatsResponse(pairs.collect()))
+            }
+            protocol::T_STATS_V2_REQ => control(
+                corr,
+                Frame::StatsV2Response(router_stats_v2(
+                    &ctx.stats,
+                    &ctx.backends,
+                    &ctx.telemetry,
+                )),
+            ),
+            protocol::T_TRACE_REQ => {
+                control(corr, Frame::TraceResponse(ctx.telemetry.trace_snapshot()))
             }
             protocol::T_SHUTDOWN => {
                 inflight.wait_zero();

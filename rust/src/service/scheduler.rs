@@ -34,12 +34,14 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::core::error::{MlprojError, Result};
 use crate::projection::ExecBackend;
 use crate::service::cache::{PlanKey, ShardedPlanCache};
 use crate::service::protocol::{ErrorCode, ProjectRequest};
 use crate::service::stats::ServiceStats;
+use crate::service::telemetry::{Stage, Telemetry, TraceRecord, STAGE_COUNT};
 
 /// Scheduler + cache sizing knobs (CLI flags map 1:1 onto these).
 #[derive(Debug, Clone)]
@@ -227,12 +229,22 @@ pub struct Job {
     pub payload: Vec<f32>,
     /// Reply route; `None` once the job has been finished.
     reply: Option<ReplyTo>,
+    /// Submit time, for the queue-wait stage histogram.
+    t_enqueue: Instant,
+    /// The request's frame-decode duration (threaded into traces).
+    decode_ns: u64,
 }
 
 impl Job {
     /// New job answering on `reply`.
     pub fn new(key: PlanKey, payload: Vec<f32>, reply: Arc<ReplySlot>) -> Job {
-        Job { key, payload, reply: Some(ReplyTo::Slot(reply)) }
+        Job {
+            key,
+            payload,
+            reply: Some(ReplyTo::Slot(reply)),
+            t_enqueue: Instant::now(),
+            decode_ns: 0,
+        }
     }
 
     /// New pipelined job answering on a connection's reply channel,
@@ -243,7 +255,29 @@ impl Job {
         tx: std::sync::mpsc::Sender<ConnReply>,
         corr: u16,
     ) -> Job {
-        Job { key, payload, reply: Some(ReplyTo::Channel { tx, corr }) }
+        Job {
+            key,
+            payload,
+            reply: Some(ReplyTo::Channel { tx, corr }),
+            t_enqueue: Instant::now(),
+            decode_ns: 0,
+        }
+    }
+
+    /// Attach the request's frame-decode duration so its trace record
+    /// carries the decode stage too.
+    pub fn with_decode_ns(mut self, ns: u64) -> Job {
+        self.decode_ns = ns;
+        self
+    }
+
+    /// Correlation id of the originating request (0 for slot-routed
+    /// v1/in-process jobs).
+    fn corr(&self) -> u16 {
+        match &self.reply {
+            Some(ReplyTo::Channel { corr, .. }) => *corr,
+            _ => 0,
+        }
     }
 
     /// Deliver the result. Every job is finished exactly once; a job
@@ -357,16 +391,31 @@ pub struct Scheduler {
     queue: Arc<JobQueue>,
     cache: Arc<ShardedPlanCache>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Scheduler {
-    /// Spawn the workers described by `cfg`. The plan cache is sharded
-    /// one-shard-per-worker and shares `stats` with the caller.
+    /// Spawn the workers described by `cfg` with telemetry configured
+    /// from the environment (`MLPROJ_TELEMETRY` etc.). The plan cache is
+    /// sharded one-shard-per-worker and shares `stats` with the caller.
     pub fn new(cfg: &SchedulerConfig, stats: Arc<ServiceStats>) -> Self {
+        Scheduler::with_telemetry(cfg, stats, Arc::new(Telemetry::from_env()))
+    }
+
+    /// Spawn the workers described by `cfg`, recording stage latencies
+    /// and traces into `telemetry`.
+    pub fn with_telemetry(
+        cfg: &SchedulerConfig,
+        stats: Arc<ServiceStats>,
+        telemetry: Arc<Telemetry>,
+    ) -> Self {
         let workers = cfg.workers.max(1);
         let queue = Arc::new(JobQueue::new(cfg.queue_depth));
-        let cache = Arc::new(ShardedPlanCache::new(workers, cfg.cache_cap, Arc::clone(&stats)));
+        let cache = Arc::new(
+            ShardedPlanCache::new(workers, cfg.cache_cap, Arc::clone(&stats))
+                .with_telemetry(Arc::clone(&telemetry)),
+        );
         let batch_max = cfg.batch_max.max(1);
         let exec_workers = cfg.exec_workers;
         let handles = (0..workers)
@@ -374,6 +423,7 @@ impl Scheduler {
                 let queue = Arc::clone(&queue);
                 let cache = Arc::clone(&cache);
                 let stats = Arc::clone(&stats);
+                let telemetry = Arc::clone(&telemetry);
                 std::thread::spawn(move || {
                     // One execution backend per worker: either inline
                     // serial kernels or a private pool realizing the
@@ -390,18 +440,38 @@ impl Scheduler {
                     let mut payloads: Vec<Vec<f32>> = Vec::new();
                     while let Some(job) = queue.pop() {
                         batch.push(job);
-                        queue.fill_batch(&mut batch, batch_max);
-                        run_batch(w, &cache, &stats, &backend, &mut batch, &mut payloads);
+                        if telemetry.is_enabled() {
+                            let t0 = Instant::now();
+                            queue.fill_batch(&mut batch, batch_max);
+                            telemetry.record(Stage::Batch, t0.elapsed().as_nanos() as u64);
+                        } else {
+                            queue.fill_batch(&mut batch, batch_max);
+                        }
+                        run_batch(
+                            w,
+                            &cache,
+                            &stats,
+                            &telemetry,
+                            &backend,
+                            &mut batch,
+                            &mut payloads,
+                        );
                     }
                 })
             })
             .collect();
-        Scheduler { queue, cache, stats, handles: Mutex::new(handles) }
+        Scheduler { queue, cache, stats, telemetry, handles: Mutex::new(handles) }
     }
 
     /// The sharded plan cache (exposed for stats/tests).
     pub fn cache(&self) -> &Arc<ShardedPlanCache> {
         &self.cache
+    }
+
+    /// The telemetry recorder (exposed so connection handlers can record
+    /// decode/serialize/write stages and serve `StatsV2`/`Trace`).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Enqueue a job without blocking; `ServiceBusy` under backpressure.
@@ -449,12 +519,23 @@ pub fn run_batch(
     worker: usize,
     cache: &ShardedPlanCache,
     stats: &ServiceStats,
+    telemetry: &Telemetry,
     backend: &ExecBackend,
     batch: &mut Vec<Job>,
     payloads: &mut Vec<Vec<f32>>,
 ) {
     if batch.is_empty() {
         return;
+    }
+    let telemetry_on = telemetry.is_enabled();
+    // Queue-wait per job: submit time -> worker pickup. Recorded before
+    // the shape pre-check so rejected jobs still show their wait.
+    let t_run = if telemetry_on { Some(Instant::now()) } else { None };
+    if let Some(t_run) = t_run {
+        for job in batch.iter() {
+            let ns = t_run.saturating_duration_since(job.t_enqueue).as_nanos() as u64;
+            telemetry.record(Stage::Queue, ns);
+        }
     }
     ServiceStats::bump(&stats.batches);
     ServiceStats::raise(&stats.batch_size_max, batch.len() as u64);
@@ -485,13 +566,41 @@ pub fn run_batch(
     for job in batch.iter_mut() {
         payloads.push(std::mem::take(&mut job.payload));
     }
+    let mut kernel = None;
+    let key_hash = if telemetry_on { batch[0].key.stable_hash() } else { 0 };
+    let t_project = if telemetry_on { Some(Instant::now()) } else { None };
     let outcome = {
         let key = &batch[0].key;
-        cache.with_plan(Some(worker), key, backend, |plan| plan.project_batch_inplace(payloads))
+        cache.with_plan(Some(worker), key, backend, |plan| {
+            kernel = plan.pinned_kernel();
+            plan.project_batch_inplace(payloads)
+        })
     };
+    let project_ns = t_project.map(|t0| t0.elapsed().as_nanos() as u64).unwrap_or(0);
     match outcome {
         Ok(Ok(())) => {
+            let batch_size = batch.len() as u32;
             for (job, payload) in batch.drain(..).zip(payloads.drain(..)) {
+                // Sampled tracing: stack-only record construction, so a
+                // warm worker still allocates nothing. Stages downstream
+                // of this point (serialize/write) and the shared batch
+                // stage read 0 in traces; histograms carry them.
+                if telemetry_on && telemetry.should_trace(project_ns) {
+                    let mut stage_ns = [0u64; STAGE_COUNT];
+                    stage_ns[Stage::Decode as usize] = job.decode_ns;
+                    if let Some(t_run) = t_run {
+                        stage_ns[Stage::Queue as usize] =
+                            t_run.saturating_duration_since(job.t_enqueue).as_nanos() as u64;
+                    }
+                    stage_ns[Stage::Project as usize] = project_ns;
+                    telemetry.capture_trace(&TraceRecord {
+                        corr: job.corr(),
+                        kernel,
+                        batch_size,
+                        key_hash,
+                        stage_ns,
+                    });
+                }
                 job.finish(Ok(payload));
             }
         }
@@ -739,7 +848,7 @@ mod tests {
             .map(|(y, s)| Job::new(key.clone(), y.data().to_vec(), Arc::clone(s)))
             .collect();
         let mut payloads = Vec::new();
-        run_batch(0, &cache, &stats, &backend, &mut batch, &mut payloads);
+        run_batch(0, &cache, &stats, &Telemetry::disabled(), &backend, &mut batch, &mut payloads);
         for (y, slot) in inputs.iter().zip(&slots) {
             let expect = ProjectionSpec::l1inf(0.9).project_matrix(y).unwrap();
             assert_eq!(&slot.take().unwrap()[..], expect.data());
@@ -769,9 +878,63 @@ mod tests {
             Job::new(key.clone(), vec![0.5; 12], Arc::clone(&good_slot)),
             Job::new(key.clone(), vec![0.5; 11], Arc::clone(&bad_slot)),
         ];
-        run_batch(0, &cache, &stats, &backend, &mut batch, &mut Vec::new());
+        run_batch(
+            0,
+            &cache,
+            &stats,
+            &Telemetry::disabled(),
+            &backend,
+            &mut batch,
+            &mut Vec::new(),
+        );
         assert!(good_slot.take().is_ok());
         assert!(matches!(bad_slot.take(), Err(MlprojError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn run_batch_records_stages_and_traces_every_job_at_sample_one() {
+        let stats = Arc::new(ServiceStats::new());
+        let telemetry = Arc::new(Telemetry::with_options(true, 1, u64::MAX, 16));
+        let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats))
+            .with_telemetry(Arc::clone(&telemetry));
+        let backend = ExecBackend::Serial;
+        let key = PlanKey {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta_bits: 0.8f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![4, 6],
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut batch: Vec<Job> = (0..3u16)
+            .map(|corr| {
+                Job::with_channel(key.clone(), vec![0.5; 24], tx.clone(), corr + 10)
+                    .with_decode_ns(777)
+            })
+            .collect();
+        run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut Vec::new());
+        for _ in 0..3 {
+            match rx.recv().unwrap() {
+                ConnReply::Project { result, .. } => assert!(result.is_ok()),
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        let stages = telemetry.stage_snapshots();
+        let count_of = |s: Stage| stages[s as usize].1.count();
+        assert_eq!(count_of(Stage::Queue), 3, "queue wait recorded per job");
+        assert_eq!(count_of(Stage::Project), 1, "one batched projection");
+        // sample_every=1 traces every job; records carry the request
+        // context the dashboard needs.
+        let traces = telemetry.trace_snapshot();
+        assert_eq!(traces.len(), 3);
+        for t in &traces {
+            assert!((10..13).contains(&t.corr));
+            assert_eq!(t.batch_size, 3);
+            assert_eq!(t.key_hash, key.stable_hash());
+            assert_eq!(t.stage_ns[Stage::Decode as usize], 777);
+            assert!(t.stage_ns[Stage::Project as usize] > 0);
+        }
     }
 
     #[test]

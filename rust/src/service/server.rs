@@ -35,6 +35,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::core::error::{MlprojError, Result};
 use crate::service::cache::PlanKey;
@@ -45,6 +46,7 @@ use crate::service::scheduler::{
     ConnReply, Job, PayloadPool, ReplySlot, Scheduler, SchedulerConfig,
 };
 use crate::service::stats::ServiceStats;
+use crate::service::telemetry::{local_stats_v2, Stage, Telemetry};
 
 /// Server-side wire limits (distinct from the scheduler's sizing knobs).
 #[derive(Debug, Clone)]
@@ -272,6 +274,7 @@ fn serve_v1(
     mut head: RawHeader,
     mut body: Vec<u8>,
 ) {
+    let telemetry = scheduler.telemetry();
     let mut payload: Vec<f32> = Vec::new();
     let slot = ReplySlot::new();
     loop {
@@ -284,8 +287,16 @@ fn serve_v1(
             return;
         }
         ServiceStats::bump(&stats.frames_in);
+        // Decode stage: frame parse only (the raw read is client think
+        // time, not server work).
+        let t_dec = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
         let decoded =
             protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload);
+        let decode_ns = t_dec.map_or(0, |t0| {
+            let ns = t0.elapsed().as_nanos() as u64;
+            telemetry.record(Stage::Decode, ns);
+            ns
+        });
         let frame = match decoded {
             Ok(f) => f,
             Err(e) => {
@@ -303,12 +314,27 @@ fn serve_v1(
                 ServiceStats::add(&stats.payload_bytes_in, 4 * payload.len() as u64);
                 let key = PlanKey::from_meta(&meta);
                 slot.reset();
-                let job = Job::new(key, std::mem::take(&mut payload), Arc::clone(&slot));
+                let job = Job::new(key, std::mem::take(&mut payload), Arc::clone(&slot))
+                    .with_decode_ns(decode_ns);
                 match scheduler.try_submit(job).and_then(|()| slot.take()) {
                     Ok(projected) => {
+                        // Serialize stage: reply accounting + header
+                        // assembly up to the socket write (v1 replies are
+                        // written zero-copy from the projected buffer, so
+                        // this is deliberately tiny). Write stage: the
+                        // blocking socket write itself.
+                        let t_ser =
+                            if telemetry.is_enabled() { Some(Instant::now()) } else { None };
                         ServiceStats::bump(&stats.responses_ok);
                         ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
+                        let t_wr = t_ser.map(|t0| {
+                            telemetry.record(Stage::Serialize, t0.elapsed().as_nanos() as u64);
+                            Instant::now()
+                        });
                         let ok = protocol::write_project_ok(&mut stream, &projected);
+                        if let Some(t0) = t_wr {
+                            telemetry.record(Stage::Write, t0.elapsed().as_nanos() as u64);
+                        }
                         payload = projected; // recycle for the next request
                         if ok.is_err() {
                             return;
@@ -330,7 +356,24 @@ fn serve_v1(
                 Some(Frame::Pong { max_body: Some(opts.max_body_bytes as u64) })
             }
             ServerFrame::Other(Frame::StatsRequest) => {
-                Some(Frame::StatsResponse(stats.snapshot()))
+                // Direct writer: the snapshot's &'static names go straight
+                // to the wire, so a scrape allocates no per-name strings
+                // (byte-identical to the Frame::StatsResponse encoding).
+                if protocol::write_stats_response(&mut stream, V1, 0, &stats.snapshot()).is_err()
+                {
+                    return;
+                }
+                None
+            }
+            ServerFrame::Other(Frame::StatsV2Request) => {
+                let v2 = local_stats_v2(stats.snapshot(), telemetry, "local");
+                if protocol::write_stats_v2_response(&mut stream, V1, 0, &v2).is_err() {
+                    return;
+                }
+                None
+            }
+            ServerFrame::Other(Frame::TraceRequest) => {
+                Some(Frame::TraceResponse(telemetry.trace_snapshot()))
             }
             ServerFrame::Other(Frame::Shutdown) => {
                 let _ = Frame::ShutdownAck.write_to(&mut stream);
@@ -428,6 +471,7 @@ fn conn_writer(
     mut stream: TcpStream,
     rx: Receiver<ConnReply>,
     stats: Arc<ServiceStats>,
+    telemetry: Arc<Telemetry>,
     inflight: Arc<InFlight>,
     max_body: usize,
     pool: Arc<PayloadPool>,
@@ -438,10 +482,21 @@ fn conn_writer(
             ConnReply::Project { corr, result } => {
                 match result {
                     Ok(projected) => {
+                        // Serialize stage: reply accounting + the
+                        // fits/chunked decision up to the socket write;
+                        // Write stage: the socket write itself (whole
+                        // frame or the full chunked stream).
+                        let t_ser =
+                            if telemetry.is_enabled() { Some(Instant::now()) } else { None };
                         ServiceStats::bump(&stats.responses_ok);
                         ServiceStats::add(&stats.payload_bytes_out, 4 * projected.len() as u64);
                         if !dead {
                             let fits = 4 + projected.len() * 4 <= max_body;
+                            let t_wr = t_ser.map(|t0| {
+                                telemetry
+                                    .record(Stage::Serialize, t0.elapsed().as_nanos() as u64);
+                                Instant::now()
+                            });
                             let res = if fits {
                                 protocol::write_project_ok_v2(&mut stream, corr, &projected)
                             } else {
@@ -453,6 +508,9 @@ fn conn_writer(
                                     max_body,
                                 )
                             };
+                            if let Some(t0) = t_wr {
+                                telemetry.record(Stage::Write, t0.elapsed().as_nanos() as u64);
+                            }
                             dead = res.is_err();
                         }
                         // The reply bytes are on the socket; the buffer
@@ -509,10 +567,13 @@ fn serve_v2(
     let pool = PayloadPool::new(opts.max_inflight.min(32));
     let writer = {
         let stats = Arc::clone(stats);
+        let telemetry = Arc::clone(scheduler.telemetry());
         let inflight = Arc::clone(&inflight);
         let max_body = opts.max_body_bytes;
         let pool = Arc::clone(&pool);
-        std::thread::spawn(move || conn_writer(wstream, rx, stats, inflight, max_body, pool))
+        std::thread::spawn(move || {
+            conn_writer(wstream, rx, stats, telemetry, inflight, max_body, pool)
+        })
     };
 
     // The reader loop borrows `tx` through its helper closures; it runs
@@ -553,8 +614,9 @@ fn v2_reader_loop(
     // (code, message, corr) of the error that closes the connection.
     let mut close_error: Option<(ErrorCode, String, u16)> = None;
     let mut acked_shutdown = false;
+    let telemetry = scheduler.telemetry();
 
-    let submit = |meta: ProjectMeta, payload: Vec<f32>, corr: u16| {
+    let submit = |meta: ProjectMeta, payload: Vec<f32>, corr: u16, decode_ns: u64| {
         ServiceStats::bump(&stats.requests_total);
         ServiceStats::bump(&stats.requests_pipelined);
         ServiceStats::add(&stats.payload_bytes_in, 4 * payload.len() as u64);
@@ -570,7 +632,8 @@ fn v2_reader_loop(
             let _ = tx.send(ConnReply::Project { corr, result: Err(MlprojError::ServiceBusy) });
             return;
         }
-        let job = Job::with_channel(PlanKey::from_meta(&meta), payload, tx.clone(), corr);
+        let job = Job::with_channel(PlanKey::from_meta(&meta), payload, tx.clone(), corr)
+            .with_decode_ns(decode_ns);
         // A Busy rejection already delivered a typed error through the
         // channel (with this corr); nothing more to do here.
         let _ = scheduler.try_submit(job);
@@ -616,9 +679,16 @@ fn v2_reader_loop(
                 // Recycled buffer from the connection's pool (returned by
                 // the writer once the reply is flushed).
                 let mut payload = pool.take();
-                match protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload)
-                {
-                    Ok(ServerFrame::Project(meta)) => submit(meta, payload, corr),
+                let t_dec = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
+                let decoded =
+                    protocol::decode_server_frame(head.version, head.ftype, &body, &mut payload);
+                let decode_ns = t_dec.map_or(0, |t0| {
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    telemetry.record(Stage::Decode, ns);
+                    ns
+                });
+                match decoded {
+                    Ok(ServerFrame::Project(meta)) => submit(meta, payload, corr, decode_ns),
                     Ok(_) => unreachable!("T_PROJECT decodes to ServerFrame::Project"),
                     Err(e) => {
                         close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
@@ -711,7 +781,9 @@ fn v2_reader_loop(
                                 );
                             } else {
                                 match asm.into_payload() {
-                                    Ok(payload) => submit(meta, payload, corr),
+                                    // Chunked decode work was paid frame
+                                    // by frame; no single decode span.
+                                    Ok(payload) => submit(meta, payload, corr, 0),
                                     Err(e) => stream_error(corr, format!("{e}")),
                                 }
                             }
@@ -729,7 +801,20 @@ fn v2_reader_loop(
             protocol::T_PING => {
                 control(corr, Frame::Pong { max_body: Some(opts.max_body_bytes as u64) })
             }
-            protocol::T_STATS_REQ => control(corr, Frame::StatsResponse(stats.snapshot())),
+            protocol::T_STATS_REQ => {
+                // The writer owns the socket, so a v2 scrape rides the
+                // reply channel as an owned frame (cold path; the name
+                // strings here are the price of pipelining the scrape).
+                let pairs = stats.snapshot().into_iter().map(|(n, v)| (n.to_string(), v));
+                control(corr, Frame::StatsResponse(pairs.collect()))
+            }
+            protocol::T_STATS_V2_REQ => control(
+                corr,
+                Frame::StatsV2Response(local_stats_v2(stats.snapshot(), telemetry, "local")),
+            ),
+            protocol::T_TRACE_REQ => {
+                control(corr, Frame::TraceResponse(telemetry.trace_snapshot()))
+            }
             protocol::T_SHUTDOWN => {
                 // Drain every in-flight request (their replies are
                 // written by the time the count hits zero), then ack and
@@ -788,6 +873,33 @@ mod tests {
                 assert!(pairs.iter().any(|(n, _)| n == "requests_total"));
             }
             other => panic!("expected stats, got {other:?}"),
+        }
+
+        Frame::Shutdown.write_to(&mut stream).unwrap();
+        assert_eq!(Frame::read_from(&mut stream).unwrap(), Frame::ShutdownAck);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn stats_v2_and_trace_round_trip_on_a_v1_connection() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+        Frame::StatsV2Request.write_to(&mut stream).unwrap();
+        match Frame::read_from(&mut stream).unwrap() {
+            Frame::StatsV2Response(s) => {
+                assert!(s.counter("requests_total").is_some());
+                assert_eq!(s.sections.len(), 1);
+                assert_eq!(s.sections[0].label, "local");
+            }
+            other => panic!("expected StatsV2, got {other:?}"),
+        }
+
+        Frame::TraceRequest.write_to(&mut stream).unwrap();
+        match Frame::read_from(&mut stream).unwrap() {
+            Frame::TraceResponse(_) => {}
+            other => panic!("expected TraceResponse, got {other:?}"),
         }
 
         Frame::Shutdown.write_to(&mut stream).unwrap();

@@ -98,38 +98,40 @@ impl ServiceStats {
     }
 
     /// Snapshot every counter as stable `(name, value)` pairs — the
-    /// payload of the `StatsResponse` frame.
-    pub fn snapshot(&self) -> Vec<(String, u64)> {
+    /// payload of the `StatsResponse` frame and the counter block of
+    /// StatsV2. Names are `&'static str`, so a scrape allocates only the
+    /// vector itself, never per-name strings.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
         let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
         vec![
-            ("frames_in".into(), ld(&self.frames_in)),
-            ("requests_total".into(), ld(&self.requests_total)),
-            ("responses_ok".into(), ld(&self.responses_ok)),
-            ("responses_err".into(), ld(&self.responses_err)),
-            ("busy_rejections".into(), ld(&self.busy_rejections)),
-            ("batches".into(), ld(&self.batches)),
-            ("batched_requests".into(), ld(&self.batched_requests)),
-            ("batch_size_max".into(), ld(&self.batch_size_max)),
-            ("cache_hits".into(), ld(&self.cache_hits)),
-            ("cache_misses".into(), ld(&self.cache_misses)),
-            ("cache_evictions".into(), ld(&self.cache_evictions)),
-            ("payload_bytes_in".into(), ld(&self.payload_bytes_in)),
-            ("payload_bytes_out".into(), ld(&self.payload_bytes_out)),
-            ("connections".into(), ld(&self.connections)),
-            ("connections_v2".into(), ld(&self.connections_v2)),
-            ("requests_pipelined".into(), ld(&self.requests_pipelined)),
-            ("inflight_max".into(), ld(&self.inflight_max)),
-            ("chunked_streams_in".into(), ld(&self.chunked_streams_in)),
-            ("chunked_streams_out".into(), ld(&self.chunked_streams_out)),
-            ("chunked_bytes_in".into(), ld(&self.chunked_bytes_in)),
-            ("checksum_failures".into(), ld(&self.checksum_failures)),
-            ("routed_requests".into(), ld(&self.routed_requests)),
-            ("relayed_streams".into(), ld(&self.relayed_streams)),
-            ("autotuned_plans".into(), ld(&self.autotuned_plans)),
-            ("kernel_pins_scalar".into(), ld(&self.kernel_pins_scalar)),
-            ("kernel_pins_avx2".into(), ld(&self.kernel_pins_avx2)),
-            ("kernel_pins_avx512".into(), ld(&self.kernel_pins_avx512)),
-            ("kernel_pins_neon".into(), ld(&self.kernel_pins_neon)),
+            ("frames_in", ld(&self.frames_in)),
+            ("requests_total", ld(&self.requests_total)),
+            ("responses_ok", ld(&self.responses_ok)),
+            ("responses_err", ld(&self.responses_err)),
+            ("busy_rejections", ld(&self.busy_rejections)),
+            ("batches", ld(&self.batches)),
+            ("batched_requests", ld(&self.batched_requests)),
+            ("batch_size_max", ld(&self.batch_size_max)),
+            ("cache_hits", ld(&self.cache_hits)),
+            ("cache_misses", ld(&self.cache_misses)),
+            ("cache_evictions", ld(&self.cache_evictions)),
+            ("payload_bytes_in", ld(&self.payload_bytes_in)),
+            ("payload_bytes_out", ld(&self.payload_bytes_out)),
+            ("connections", ld(&self.connections)),
+            ("connections_v2", ld(&self.connections_v2)),
+            ("requests_pipelined", ld(&self.requests_pipelined)),
+            ("inflight_max", ld(&self.inflight_max)),
+            ("chunked_streams_in", ld(&self.chunked_streams_in)),
+            ("chunked_streams_out", ld(&self.chunked_streams_out)),
+            ("chunked_bytes_in", ld(&self.chunked_bytes_in)),
+            ("checksum_failures", ld(&self.checksum_failures)),
+            ("routed_requests", ld(&self.routed_requests)),
+            ("relayed_streams", ld(&self.relayed_streams)),
+            ("autotuned_plans", ld(&self.autotuned_plans)),
+            ("kernel_pins_scalar", ld(&self.kernel_pins_scalar)),
+            ("kernel_pins_avx2", ld(&self.kernel_pins_avx2)),
+            ("kernel_pins_avx512", ld(&self.kernel_pins_avx512)),
+            ("kernel_pins_neon", ld(&self.kernel_pins_neon)),
         ]
     }
 
@@ -155,7 +157,7 @@ mod tests {
         ServiceStats::bump(&s.requests_total);
         ServiceStats::add(&s.payload_bytes_in, 1024);
         let snap = s.snapshot();
-        let get = |name: &str| snap.iter().find(|(n, _)| n == name).unwrap().1;
+        let get = |name: &str| snap.iter().find(|(n, _)| *n == name).unwrap().1;
         assert_eq!(get("requests_total"), 2);
         assert_eq!(get("payload_bytes_in"), 1024);
         assert_eq!(get("responses_ok"), 0);
@@ -170,7 +172,7 @@ mod tests {
         ServiceStats::raise(&s.batch_size_max, 2);
         assert_eq!(s.batch_size_max.load(Ordering::Relaxed), 7);
         let snap = s.snapshot();
-        assert!(snap.iter().any(|(n, v)| n == "batch_size_max" && *v == 7));
+        assert!(snap.iter().any(|(n, v)| *n == "batch_size_max" && *v == 7));
     }
 
     #[test]
@@ -180,7 +182,7 @@ mod tests {
         ServiceStats::bump(s.kernel_pin_counter(KernelVariant::Avx2));
         ServiceStats::bump(s.kernel_pin_counter(KernelVariant::Avx2));
         let snap = s.snapshot();
-        let get = |name: &str| snap.iter().find(|(n, _)| n == name).unwrap().1;
+        let get = |name: &str| snap.iter().find(|(n, _)| *n == name).unwrap().1;
         assert_eq!(get("kernel_pins_scalar"), 1);
         assert_eq!(get("kernel_pins_avx2"), 2);
         assert_eq!(get("kernel_pins_avx512"), 0);
@@ -191,7 +193,7 @@ mod tests {
     fn snapshot_names_are_unique() {
         let s = ServiceStats::new();
         let snap = s.snapshot();
-        let mut names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        let mut names: Vec<&str> = snap.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), snap.len());

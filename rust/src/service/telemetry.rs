@@ -1,0 +1,1022 @@
+//! End-to-end service telemetry: lock-free per-stage latency histograms,
+//! per-plan project-time histograms, and a sampled request-trace ring.
+//!
+//! Everything on the warm path is allocation-free and lock-free:
+//!
+//! * [`LatencyHistogram`] — power-of-2 nanosecond buckets held in
+//!   `AtomicU64`s. Recording is a relaxed `fetch_add` into one bucket;
+//!   quantiles (p50/p90/p99/p999) are derived from bucket counts at
+//!   scrape time, and snapshots merge by bucket-wise addition, so a
+//!   router can fold N backend distributions into one.
+//! * [`Telemetry`] — one histogram per pipeline [`Stage`] (decode,
+//!   queue wait, batch assembly, project, serialize, write), a
+//!   fixed-size open-addressed table of per-plan project histograms
+//!   (keyed by [`PlanKey::stable_hash`](crate::service::PlanKey)), and
+//!   the trace ring. A disabled instance early-returns from every
+//!   recording call — the `BENCH_obs.json` overhead series compares the
+//!   two paths in one binary.
+//! * [`TraceRing`] — a fixed-size ring of [`TraceRecord`]s (correlation
+//!   id, plan-key hash, per-stage ns, kernel variant, batch size) with
+//!   seqlock slots: writers claim a slot by bumping an atomic cursor and
+//!   never block; a torn slot is dropped by the reader, never surfaced.
+//!   A deterministic 1-in-N sampler picks which requests to capture, and
+//!   requests slower than `MLPROJ_TRACE_SLOW_US` are force-captured
+//!   regardless of the sampler.
+//!
+//! Environment knobs (read once at construction):
+//!
+//! * `MLPROJ_TELEMETRY=off|0` — disable all recording (no-op recorder).
+//! * `MLPROJ_TRACE_SAMPLE=N` — trace every Nth request (default 64;
+//!   0 disables sampling, leaving only the slow-request path).
+//! * `MLPROJ_TRACE_SLOW_US=T` — force-capture requests whose summed
+//!   stage time is at least `T` microseconds (default: off).
+//! * `MLPROJ_TRACE_RING=N` — trace ring capacity (default 256).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::core::simd::KernelVariant;
+
+/// Number of histogram buckets. Bucket 0 counts zero-duration samples;
+/// bucket `k >= 1` counts durations in `[2^(k-1), 2^k)` ns. The top
+/// bucket saturates: with 48 buckets it absorbs everything from
+/// `2^46` ns (~20 hours) up.
+pub const HIST_BUCKETS: usize = 48;
+
+/// Bucket index for a duration: 0 for 0 ns, otherwise
+/// `floor(log2(ns)) + 1`, clamped to the saturating top bucket.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of a bucket, in ns.
+#[inline]
+pub fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket, in ns (the quantile estimate a
+/// bucket reports). The saturating top bucket reports its lower edge
+/// doubled rather than `u64::MAX` so dashboards stay finite.
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i.min(HIST_BUCKETS - 1)) - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// A lock-free log-bucketed latency histogram. Recording is one relaxed
+/// `fetch_add` per sample (plus the running ns sum); snapshots are
+/// consistent enough for monitoring (buckets are read one by one, so a
+/// snapshot taken mid-record may be off by in-flight samples, never
+/// corrupt).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// New empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Copy the current bucket counts out.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned, mergeable copy of a histogram's buckets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket sample counts (see [`bucket_index`]).
+    pub counts: [u64; HIST_BUCKETS],
+    /// Sum of all recorded durations, in ns.
+    pub sum_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistSnapshot {
+    /// A snapshot with no samples.
+    pub fn empty() -> Self {
+        HistSnapshot { counts: [0; HIST_BUCKETS], sum_ns: 0 }
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Mean duration in ns (0 for an empty snapshot).
+    pub fn mean_ns(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum_ns / n
+        }
+    }
+
+    /// Fold another snapshot into this one (bucket-wise addition —
+    /// commutative and associative, so fleet-wide merge order is
+    /// irrelevant).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Quantile estimate in ns: the upper bound of the bucket holding
+    /// the `q`-quantile sample (nearest-rank). The estimate `e` of a
+    /// sample `v` satisfies `v <= e < v + width(bucket(v))` — at most
+    /// one bucket width of error. Returns 0 for an empty snapshot.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline stages
+// ---------------------------------------------------------------------------
+
+/// Number of pipeline stages.
+pub const STAGE_COUNT: usize = 6;
+
+/// The instrumented pipeline stages, in request order. Discriminants are
+/// wire-stable (StatsV2 and trace frames carry them as `u8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Frame-body decode (parse only, not the socket read).
+    Decode = 0,
+    /// Job-queue wait: submit to worker dequeue.
+    Queue = 1,
+    /// Same-key micro-batch assembly in the worker.
+    Batch = 2,
+    /// The projection call itself (per batch).
+    Project = 3,
+    /// Reply preparation before the socket write (error formatting,
+    /// chunking setup).
+    Serialize = 4,
+    /// The reply socket write.
+    Write = 5,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Decode,
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Project,
+        Stage::Serialize,
+        Stage::Write,
+    ];
+
+    /// Stable lowercase label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Project => "project",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+
+    /// Inverse of the wire discriminant.
+    pub fn from_u8(b: u8) -> Option<Stage> {
+        Stage::ALL.get(b as usize).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace ring
+// ---------------------------------------------------------------------------
+
+/// One sampled request trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceRecord {
+    /// Correlation id of the request (0 on v1 lockstep connections).
+    pub corr: u16,
+    /// Kernel variant the plan had pinned when the batch ran (`None`
+    /// while the autotuner is still measuring).
+    pub kernel: Option<KernelVariant>,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: u32,
+    /// [`PlanKey::stable_hash`](crate::service::PlanKey) of the request.
+    pub key_hash: u64,
+    /// Per-stage nanoseconds, indexed by [`Stage`] discriminant. Stages
+    /// downstream of the capture point (serialize/write) and the shared
+    /// batch-assembly stage read 0; the histograms carry those.
+    pub stage_ns: [u64; STAGE_COUNT],
+}
+
+impl TraceRecord {
+    /// Sum of the recorded stage durations.
+    pub fn total_ns(&self) -> u64 {
+        self.stage_ns.iter().sum()
+    }
+}
+
+/// Wire code for an optional kernel variant (0 = none).
+pub fn kernel_code(k: Option<KernelVariant>) -> u8 {
+    match k {
+        None => 0,
+        Some(KernelVariant::Scalar) => 1,
+        Some(KernelVariant::Avx2) => 2,
+        Some(KernelVariant::Avx512) => 3,
+        Some(KernelVariant::Neon) => 4,
+    }
+}
+
+/// Inverse of [`kernel_code`] (unknown codes decode as `None`).
+pub fn kernel_from_code(b: u8) -> Option<KernelVariant> {
+    match b {
+        1 => Some(KernelVariant::Scalar),
+        2 => Some(KernelVariant::Avx2),
+        3 => Some(KernelVariant::Avx512),
+        4 => Some(KernelVariant::Neon),
+        _ => None,
+    }
+}
+
+/// Words per trace slot: header (corr | kernel | batch), key hash, and
+/// one word per stage.
+const SLOT_WORDS: usize = 2 + STAGE_COUNT;
+
+/// One seqlock-guarded slot. Writers bump `seq` to odd, store the words,
+/// then publish by bumping to even; a reader that observes an odd or
+/// changed `seq` drops the slot instead of surfacing torn data.
+struct TraceSlot {
+    seq: AtomicU64,
+    words: [AtomicU64; SLOT_WORDS],
+}
+
+impl TraceSlot {
+    fn new() -> Self {
+        TraceSlot {
+            seq: AtomicU64::new(0),
+            words: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Fixed-size lock-free ring of trace records. Capacity is set at
+/// construction; capture never allocates and never blocks (two writers
+/// racing for the same wrapped slot: the loser drops its record).
+pub struct TraceRing {
+    slots: Box<[TraceSlot]>,
+    cursor: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing").field("capacity", &self.slots.len()).finish()
+    }
+}
+
+impl TraceRing {
+    /// Ring with room for `capacity` records (min 1).
+    pub fn new(capacity: usize) -> Self {
+        TraceRing {
+            slots: (0..capacity.max(1)).map(|_| TraceSlot::new()).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store one record (allocation-free; drops the record instead of
+    /// blocking if the claimed slot is mid-write by a lapped writer).
+    pub fn capture(&self, rec: &TraceRecord) {
+        let idx = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        let slot = &self.slots[idx];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        if seq & 1 == 1 {
+            return;
+        }
+        if slot
+            .seq
+            .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        let header = rec.corr as u64
+            | ((kernel_code(rec.kernel) as u64) << 16)
+            | ((rec.batch_size as u64) << 32);
+        slot.words[0].store(header, Ordering::Relaxed);
+        slot.words[1].store(rec.key_hash, Ordering::Relaxed);
+        for (w, ns) in slot.words[2..].iter().zip(rec.stage_ns.iter()) {
+            w.store(*ns, Ordering::Relaxed);
+        }
+        slot.seq.store(seq + 2, Ordering::Release);
+    }
+
+    /// Copy out every published record, newest capture position last.
+    /// Scrape-path only (allocates the result vector).
+    pub fn drain_snapshot(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        let end = self.cursor.load(Ordering::Relaxed) as usize;
+        let n = self.slots.len();
+        // Walk the ring in capture order: oldest surviving slot first.
+        for off in 0..n {
+            let idx = (end + off) % n;
+            let slot = &self.slots[idx];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue;
+            }
+            let header = slot.words[0].load(Ordering::Relaxed);
+            let key_hash = slot.words[1].load(Ordering::Relaxed);
+            let mut stage_ns = [0u64; STAGE_COUNT];
+            for (ns, w) in stage_ns.iter_mut().zip(slot.words[2..].iter()) {
+                *ns = w.load(Ordering::Relaxed);
+            }
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue; // torn by a concurrent writer — drop it
+            }
+            out.push(TraceRecord {
+                corr: header as u16,
+                kernel: kernel_from_code((header >> 16) as u8),
+                batch_size: (header >> 32) as u32,
+                key_hash,
+                stage_ns,
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-plan project histograms
+// ---------------------------------------------------------------------------
+
+/// Slots in the fixed per-plan histogram table. Plans past the table
+/// capacity aggregate into one shared overflow histogram (cache capacity
+/// defaults to 32 shards * entries well under this).
+const PLAN_SLOTS: usize = 64;
+
+/// Open-addressed, insert-only table of per-plan-key histograms. The
+/// warm path is a short linear probe over atomic hashes; label strings
+/// are registered once per plan on the (already allocating) compile
+/// path, never on record.
+struct PlanTable {
+    hashes: [AtomicU64; PLAN_SLOTS],
+    hists: [LatencyHistogram; PLAN_SLOTS],
+    /// Everything that did not fit the fixed table.
+    overflow: LatencyHistogram,
+    /// key_hash -> human label ("matrix 64x256 linf,l1"), cold inserts
+    /// only.
+    labels: Mutex<Vec<(u64, String)>>,
+}
+
+impl PlanTable {
+    fn new() -> Self {
+        PlanTable {
+            hashes: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| LatencyHistogram::new()),
+            overflow: LatencyHistogram::new(),
+            labels: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Map the reserved empty sentinel away (hash 0 would look like a
+    /// free slot).
+    #[inline]
+    fn key(hash: u64) -> u64 {
+        if hash == 0 {
+            1
+        } else {
+            hash
+        }
+    }
+
+    #[inline]
+    fn record(&self, key_hash: u64, ns: u64) {
+        let key = Self::key(key_hash);
+        let start = key as usize % PLAN_SLOTS;
+        for off in 0..PLAN_SLOTS {
+            let i = (start + off) % PLAN_SLOTS;
+            let cur = self.hashes[i].load(Ordering::Relaxed);
+            if cur == key {
+                self.hists[i].record(ns);
+                return;
+            }
+            if cur == 0 {
+                match self.hashes[i].compare_exchange(
+                    0,
+                    key,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        self.hists[i].record(ns);
+                        return;
+                    }
+                    Err(raced) if raced == key => {
+                        self.hists[i].record(ns);
+                        return;
+                    }
+                    Err(_) => continue,
+                }
+            }
+        }
+        self.overflow.record(ns);
+    }
+
+    fn register_label(&self, key_hash: u64, label: impl FnOnce() -> String) {
+        let key = Self::key(key_hash);
+        let mut labels = self.labels.lock().expect("plan label registry poisoned");
+        if !labels.iter().any(|(h, _)| *h == key) {
+            labels.push((key, label()));
+        }
+    }
+
+    fn snapshot(&self) -> Vec<PlanHist> {
+        let labels = self.labels.lock().expect("plan label registry poisoned");
+        let mut out = Vec::new();
+        for i in 0..PLAN_SLOTS {
+            let hash = self.hashes[i].load(Ordering::Acquire);
+            if hash == 0 {
+                continue;
+            }
+            let snap = self.hists[i].snapshot();
+            if snap.is_empty() {
+                continue;
+            }
+            let label = labels
+                .iter()
+                .find(|(h, _)| *h == hash)
+                .map(|(_, l)| l.clone())
+                .unwrap_or_default();
+            out.push(PlanHist { key_hash: hash, label, hist: snap });
+        }
+        let overflow = self.overflow.snapshot();
+        if !overflow.is_empty() {
+            out.push(PlanHist { key_hash: 0, label: "(overflow)".into(), hist: overflow });
+        }
+        out
+    }
+}
+
+/// One per-plan project-time distribution, as carried in StatsV2.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanHist {
+    /// Stable plan-key hash (0 for the overflow aggregate).
+    pub key_hash: u64,
+    /// Human-readable plan label (may be empty when the scrape raced the
+    /// label registration).
+    pub label: String,
+    /// Project-time distribution for this plan.
+    pub hist: HistSnapshot,
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry front-end
+// ---------------------------------------------------------------------------
+
+/// Default 1-in-N trace sampling rate.
+const DEFAULT_TRACE_SAMPLE: u64 = 64;
+/// Default trace ring capacity.
+const DEFAULT_TRACE_RING: usize = 256;
+
+/// The per-process telemetry recorder: per-stage histograms, per-plan
+/// project histograms, and the sampled trace ring. Shared via `Arc`
+/// between connection handlers, scheduler workers and the plan cache.
+#[derive(Debug)]
+pub struct Telemetry {
+    enabled: bool,
+    stages: [LatencyHistogram; STAGE_COUNT],
+    plans: PlanTable,
+    ring: TraceRing,
+    /// Trace every Nth request (0 = sampling off).
+    sample_every: u64,
+    sample_ctr: AtomicU64,
+    /// Force-capture threshold on a trace's summed stage ns.
+    slow_ns: u64,
+}
+
+impl std::fmt::Debug for PlanTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanTable").finish()
+    }
+}
+
+impl Telemetry {
+    /// Build a recorder with explicit knobs.
+    pub fn with_options(
+        enabled: bool,
+        sample_every: u64,
+        slow_ns: u64,
+        ring_capacity: usize,
+    ) -> Self {
+        Telemetry {
+            enabled,
+            stages: std::array::from_fn(|_| LatencyHistogram::new()),
+            plans: PlanTable::new(),
+            ring: TraceRing::new(ring_capacity),
+            sample_every,
+            sample_ctr: AtomicU64::new(0),
+            slow_ns,
+        }
+    }
+
+    /// Enabled recorder with the environment knobs applied.
+    pub fn from_env() -> Self {
+        let enabled = !matches!(
+            std::env::var("MLPROJ_TELEMETRY").as_deref(),
+            Ok("off") | Ok("0") | Ok("false")
+        );
+        let sample_every = std::env::var("MLPROJ_TRACE_SAMPLE")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(DEFAULT_TRACE_SAMPLE);
+        let slow_ns = std::env::var("MLPROJ_TRACE_SLOW_US")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .map(|us| us.saturating_mul(1_000))
+            .unwrap_or(u64::MAX);
+        Telemetry::with_options(enabled, sample_every, slow_ns, DEFAULT_TRACE_RING)
+    }
+
+    /// A recorder whose every recording call is a no-op (the "telemetry
+    /// compiled out" baseline of the overhead bench).
+    pub fn disabled() -> Self {
+        Telemetry::with_options(false, 0, u64::MAX, 1)
+    }
+
+    /// True when recording is active.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one stage duration.
+    #[inline]
+    pub fn record(&self, stage: Stage, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.stages[stage as usize].record(ns);
+    }
+
+    /// Record one per-plan project duration (also feeds the aggregate
+    /// [`Stage::Project`] histogram through the caller).
+    #[inline]
+    pub fn record_plan(&self, key_hash: u64, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.plans.record(key_hash, ns);
+    }
+
+    /// Register a plan's human label (cold path — at most one allocation
+    /// per plan, on the compile/miss path).
+    pub fn register_plan_label(&self, key_hash: u64, label: impl FnOnce() -> String) {
+        if !self.enabled {
+            return;
+        }
+        self.plans.register_label(key_hash, label);
+    }
+
+    /// Deterministic capture decision for one finished request: every
+    /// `sample_every`th request, plus everything at or past the slow
+    /// threshold.
+    #[inline]
+    pub fn should_trace(&self, total_ns: u64) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        if total_ns >= self.slow_ns {
+            return true;
+        }
+        self.sample_every != 0
+            && self.sample_ctr.fetch_add(1, Ordering::Relaxed) % self.sample_every == 0
+    }
+
+    /// Store one trace record (call only after [`Telemetry::should_trace`]
+    /// said yes; allocation-free).
+    #[inline]
+    pub fn capture_trace(&self, rec: &TraceRecord) {
+        if !self.enabled {
+            return;
+        }
+        self.ring.capture(rec);
+    }
+
+    /// Snapshot every stage histogram, in [`Stage::ALL`] order.
+    pub fn stage_snapshots(&self) -> Vec<(Stage, HistSnapshot)> {
+        Stage::ALL
+            .iter()
+            .map(|&s| (s, self.stages[s as usize].snapshot()))
+            .collect()
+    }
+
+    /// Snapshot the per-plan project histograms.
+    pub fn plan_snapshots(&self) -> Vec<PlanHist> {
+        self.plans.snapshot()
+    }
+
+    /// Copy out the surviving trace records.
+    pub fn trace_snapshot(&self) -> Vec<TraceRecord> {
+        self.ring.drain_snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StatsV2 payload
+// ---------------------------------------------------------------------------
+
+/// One labelled set of stage histograms inside StatsV2: a server reports
+/// a single `local` section; a router reports `router` (its own stages),
+/// `merged` (all backends folded together) and one section per backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSection {
+    /// Section label (`local`, `router`, `merged`, `backend0 <addr>`…).
+    pub label: String,
+    /// Per-stage snapshots, in [`Stage::ALL`] order (sparse on the wire).
+    pub stages: Vec<(Stage, HistSnapshot)>,
+}
+
+impl StatsSection {
+    /// The snapshot for one stage, if present.
+    pub fn stage(&self, want: Stage) -> Option<&HistSnapshot> {
+        self.stages.iter().find(|(s, _)| *s == want).map(|(_, h)| h)
+    }
+}
+
+/// The StatsV2 frame payload: the v1 counters plus histogram sections
+/// and per-plan project distributions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsV2 {
+    /// The flat counters (same pairs as the v1 `Stats` frame).
+    pub counters: Vec<(String, u64)>,
+    /// Histogram sections (first section is the reporting process's own).
+    pub sections: Vec<StatsSection>,
+    /// Per-plan project-time distributions.
+    pub plans: Vec<PlanHist>,
+}
+
+impl StatsV2 {
+    /// Look up one counter by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// The first section with this label.
+    pub fn section(&self, label: &str) -> Option<&StatsSection> {
+        self.sections.iter().find(|s| s.label == label)
+    }
+}
+
+/// Build a process-local StatsV2 payload from counters + telemetry.
+pub fn local_stats_v2(
+    counters: Vec<(&'static str, u64)>,
+    telemetry: &Telemetry,
+    section_label: &str,
+) -> StatsV2 {
+    StatsV2 {
+        counters: counters.into_iter().map(|(n, v)| (n.to_string(), v)).collect(),
+        sections: vec![StatsSection {
+            label: section_label.to_string(),
+            stages: telemetry.stage_snapshots(),
+        }],
+        plans: telemetry.plan_snapshots(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- satellite: histogram correctness ---------------------------------
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        for k in 1..20 {
+            let lo = 1u64 << (k - 1);
+            let hi = (1u64 << k) - 1;
+            assert_eq!(bucket_index(lo), k, "lower edge of bucket {k}");
+            assert_eq!(bucket_index(hi), k, "upper edge of bucket {k}");
+            assert_eq!(bucket_index(hi + 1), k + 1, "first value past bucket {k}");
+            assert_eq!(bucket_lower(k), lo);
+            assert_eq!(bucket_upper(k), hi);
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let mk = |vals: &[u64]| {
+            let h = LatencyHistogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 5, 5, 900]);
+        let b = mk(&[0, 3, 1_000_000]);
+        let c = mk(&[7, 7, 7, 12345]);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must be commutative");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+        assert_eq!(ab_c.count(), 10);
+        assert_eq!(ab_c.sum_ns, a.sum_ns + b.sum_ns + c.sum_ns);
+    }
+
+    #[test]
+    fn quantile_error_is_bounded_by_one_bucket_width() {
+        // All mass at a single value v: every quantile estimate e must
+        // satisfy v <= e < v + width(bucket(v)).
+        for v in [1u64, 2, 3, 17, 255, 256, 999_999, 1 << 30] {
+            let h = LatencyHistogram::new();
+            for _ in 0..100 {
+                h.record(v);
+            }
+            let snap = h.snapshot();
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let e = snap.quantile_ns(q);
+                let width = bucket_upper(bucket_index(v)) - bucket_lower(bucket_index(v)) + 1;
+                assert!(e >= v, "estimate {e} below sample {v}");
+                assert!(e < v + width, "estimate {e} off by more than a bucket from {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_order_and_split_mixed_mass() {
+        let h = LatencyHistogram::new();
+        // 90 fast samples (~1us), 10 slow (~1ms).
+        for _ in 0..90 {
+            h.record(1_000);
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        let snap = h.snapshot();
+        let p50 = snap.quantile_ns(0.5);
+        let p90 = snap.quantile_ns(0.9);
+        let p99 = snap.quantile_ns(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p50 < 3_000, "p50 must sit in the fast mode, got {p50}");
+        assert!(p99 >= 1_000_000, "p99 must sit in the slow mode, got {p99}");
+    }
+
+    #[test]
+    fn top_bucket_saturates() {
+        let h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record(1u64 << 60);
+        let snap = h.snapshot();
+        assert_eq!(snap.counts[HIST_BUCKETS - 1], 3, "huge samples all saturate the top");
+        assert_eq!(snap.count(), 3);
+        assert_eq!(snap.quantile_ns(0.5), bucket_upper(HIST_BUCKETS - 1));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(LatencyHistogram::new());
+        let threads = 8;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.record(t * 1_000 + i % 7);
+                    }
+                })
+            })
+            .collect();
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), threads * per, "relaxed counting must not drop samples");
+    }
+
+    // -- trace ring --------------------------------------------------------
+
+    fn rec(corr: u16, key_hash: u64) -> TraceRecord {
+        TraceRecord {
+            corr,
+            kernel: Some(KernelVariant::Scalar),
+            batch_size: 4,
+            key_hash,
+            stage_ns: [10, 20, 30, 40, 0, 0],
+        }
+    }
+
+    #[test]
+    fn trace_ring_keeps_the_newest_capacity_records() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u16 {
+            ring.capture(&rec(i, 100 + i as u64));
+        }
+        let got = ring.drain_snapshot();
+        assert_eq!(got.len(), 4);
+        let corrs: Vec<u16> = got.iter().map(|r| r.corr).collect();
+        assert_eq!(corrs, vec![6, 7, 8, 9], "ring keeps the newest records in order");
+        assert_eq!(got[0].kernel, Some(KernelVariant::Scalar));
+        assert_eq!(got[0].batch_size, 4);
+        assert_eq!(got[0].total_ns(), 100);
+    }
+
+    #[test]
+    fn trace_ring_concurrent_capture_stays_well_formed() {
+        use std::sync::Arc;
+        let ring = Arc::new(TraceRing::new(32));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..1_000u64 {
+                        ring.capture(&TraceRecord {
+                            corr: t as u16,
+                            kernel: None,
+                            batch_size: t,
+                            key_hash: (t as u64) << 32 | i,
+                            stage_ns: [t as u64; STAGE_COUNT],
+                        });
+                    }
+                })
+            })
+            .collect();
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        // Every surfaced record must be internally consistent (all
+        // fields from the same writer), never torn across writers.
+        for r in ring.drain_snapshot() {
+            let t = r.corr as u64;
+            assert_eq!(r.batch_size as u64, t);
+            assert_eq!(r.key_hash >> 32, t);
+            assert_eq!(r.stage_ns, [t; STAGE_COUNT]);
+        }
+    }
+
+    // -- sampling ----------------------------------------------------------
+
+    #[test]
+    fn sampler_is_deterministic_one_in_n() {
+        let t = Telemetry::with_options(true, 4, u64::MAX, 8);
+        let picks: Vec<bool> = (0..12).map(|_| t.should_trace(10)).collect();
+        assert_eq!(
+            picks,
+            vec![
+                true, false, false, false, true, false, false, false, true, false, false,
+                false
+            ]
+        );
+    }
+
+    #[test]
+    fn slow_threshold_forces_capture() {
+        // Sampling off entirely: only the slow path captures.
+        let t = Telemetry::with_options(true, 0, 1_000_000, 8);
+        assert!(!t.should_trace(999_999));
+        assert!(t.should_trace(1_000_000));
+        assert!(t.should_trace(u64::MAX));
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let t = Telemetry::disabled();
+        t.record(Stage::Project, 123);
+        t.record_plan(42, 123);
+        assert!(!t.should_trace(u64::MAX));
+        t.capture_trace(&rec(1, 2));
+        assert!(t.stage_snapshots().iter().all(|(_, h)| h.is_empty()));
+        assert!(t.plan_snapshots().is_empty());
+        assert!(t.trace_snapshot().is_empty());
+    }
+
+    // -- per-plan table ----------------------------------------------------
+
+    #[test]
+    fn plan_table_separates_keys_and_registers_labels() {
+        let t = Telemetry::with_options(true, 0, u64::MAX, 8);
+        t.register_plan_label(7, || "matrix 16x24 linf,l1".into());
+        t.record_plan(7, 100);
+        t.record_plan(7, 200);
+        t.record_plan(9, 5_000);
+        let plans = t.plan_snapshots();
+        assert_eq!(plans.len(), 2);
+        let p7 = plans.iter().find(|p| p.key_hash == 7).unwrap();
+        assert_eq!(p7.label, "matrix 16x24 linf,l1");
+        assert_eq!(p7.hist.count(), 2);
+        let p9 = plans.iter().find(|p| p.key_hash == 9).unwrap();
+        assert!(p9.label.is_empty(), "unregistered plans surface without a label");
+        assert_eq!(p9.hist.count(), 1);
+    }
+
+    #[test]
+    fn plan_table_overflow_aggregates_past_capacity() {
+        let t = Telemetry::with_options(true, 0, u64::MAX, 8);
+        // More distinct keys than PLAN_SLOTS: the surplus lands in the
+        // overflow aggregate instead of being dropped.
+        let keys = (PLAN_SLOTS + 10) as u64;
+        for k in 1..=keys {
+            t.record_plan(k, 50);
+        }
+        let plans = t.plan_snapshots();
+        let total: u64 = plans.iter().map(|p| p.hist.count()).sum();
+        assert_eq!(total, keys, "no sample may vanish on table overflow");
+        assert!(plans.iter().any(|p| p.label == "(overflow)"));
+    }
+
+    #[test]
+    fn stage_snapshots_cover_all_stages_in_order() {
+        let t = Telemetry::with_options(true, 0, u64::MAX, 8);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            t.record(*s, (i as u64 + 1) * 100);
+        }
+        let snaps = t.stage_snapshots();
+        assert_eq!(snaps.len(), STAGE_COUNT);
+        for (i, (s, h)) in snaps.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+            assert_eq!(h.count(), 1);
+            assert_eq!(Stage::from_u8(i as u8), Some(*s));
+        }
+        assert_eq!(Stage::from_u8(STAGE_COUNT as u8), None);
+    }
+}

@@ -282,17 +282,24 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
     // The full service execution path: run_batch with a warm plan cache
     // moves each job's payload out, projects the whole batch in one
     // pooled call, and replies through reusable slots — zero allocations
-    // once warm. This is the counting-allocator proof behind the
-    // "receive buffer → send buffer" hot path.
+    // once warm. Telemetry runs fully enabled with 1-in-1 trace sampling,
+    // so the measured window also pins stage/plan histogram recording and
+    // trace-ring capture at zero allocations. This is the
+    // counting-allocator proof behind the "receive buffer → send buffer"
+    // hot path.
     use mlproj::core::matrix::Matrix;
     use mlproj::projection::{ExecBackend, Method};
     use mlproj::service::scheduler::{run_batch, Job, ReplySlot};
-    use mlproj::service::{PlanKey, ShardedPlanCache, ServiceStats, WireLayout};
+    use mlproj::service::{PlanKey, ServiceStats, ShardedPlanCache, Telemetry, WireLayout};
     use std::sync::Arc;
 
     let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let stats = Arc::new(ServiceStats::new());
-    let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats));
+    // Enabled, sample every request, 16-slot trace ring: the measured
+    // pass records every stage histogram AND captures a trace per job.
+    let telemetry = Arc::new(Telemetry::with_options(true, 1, u64::MAX, 16));
+    let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats))
+        .with_telemetry(Arc::clone(&telemetry));
     let backend = ExecBackend::Serial;
     let key = PlanKey {
         norms: vec![Norm::Linf, Norm::L1],
@@ -313,7 +320,7 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
         .map(|s| Job::new(key.clone(), payload_for(&mut rng).data().to_vec(), Arc::clone(s)))
         .collect();
     let mut payload_bufs: Vec<Vec<f32>> = Vec::with_capacity(B);
-    run_batch(0, &cache, &stats, &backend, &mut batch, &mut payload_bufs);
+    run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut payload_bufs);
     // Recover the payload vectors from the slots: the warm measured pass
     // reuses them, exactly like a connection handler recycles its buffer.
     let mut recycled: Vec<Vec<f32>> = slots.iter().map(|s| s.take().unwrap()).collect();
@@ -326,17 +333,30 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
     }
 
     let before = alloc_calls();
-    run_batch(0, &cache, &stats, &backend, &mut batch, &mut payload_bufs);
+    run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut payload_bufs);
     let after = alloc_calls();
     assert_eq!(
         after - before,
         0,
-        "warm scheduler batch allocated {} times",
+        "warm scheduler batch (telemetry enabled, 1-in-1 tracing) allocated {} times",
         after - before
     );
     for slot in &slots {
         assert!(slot.take().is_ok());
     }
+    // The measured pass really exercised the telemetry warm path.
+    let queue = telemetry
+        .stage_snapshots()
+        .into_iter()
+        .find(|(s, _)| *s == mlproj::service::Stage::Queue)
+        .map(|(_, h)| h.count())
+        .unwrap_or(0);
+    assert!(queue >= 2 * B as u64, "both passes must record queue-wait per job");
+    assert_eq!(
+        telemetry.trace_snapshot().len(),
+        2 * B,
+        "1-in-1 sampling must capture a trace per job in both passes"
+    );
     assert_eq!(
         stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
         1,

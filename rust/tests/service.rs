@@ -578,6 +578,68 @@ fn malformed_payload_in_a_pipelined_same_key_batch_fails_alone() {
 }
 
 #[test]
+fn v1_only_client_round_trips_stats_against_the_telemetry_server() {
+    use std::io::{Read, Write};
+    // Backward compatibility: a legacy client that only speaks the
+    // original v1 vocabulary (Ping, Project, StatsRequest, Shutdown) and
+    // has never heard of StatsV2/Trace frames must keep working against
+    // a telemetry-enabled server, byte-for-byte at the framing level.
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    // Serve one projection first so the counters are non-trivial.
+    let mut warm = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(81);
+    let y = Matrix::random_uniform(8, 16, -1.0, 1.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(0.9);
+    warm.project_matrix(&spec, &y).unwrap();
+
+    // Hand-rolled legacy frames: magic | version=1 | type | corr=0 |
+    // body_len=0. Type 6 is the v1 StatsRequest.
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut frame = Vec::from(*b"MLPJ");
+    frame.push(1); // version 1
+    frame.push(6); // T_STATS_REQ
+    frame.extend_from_slice(&0u16.to_le_bytes());
+    frame.extend_from_slice(&0u32.to_le_bytes());
+    stream.write_all(&frame).unwrap();
+
+    let mut head = [0u8; 12];
+    stream.read_exact(&mut head).unwrap();
+    assert_eq!(&head[0..4], b"MLPJ");
+    assert_eq!(head[4], 1, "a v1 request must get a v1 reply");
+    assert_eq!(head[5], 7, "a v1 StatsRequest must get the v1 StatsResponse type");
+    let body_len = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    let mut body = vec![0u8; body_len];
+    stream.read_exact(&mut body).unwrap();
+
+    // The v1 body is `count:u32` then `name_len:u16 | name | value:u64`
+    // per counter; walk it and pick out responses_ok.
+    let count = u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
+    assert!(count >= 10, "v1 stats must still carry the full counter set");
+    let mut off = 4;
+    let mut responses_ok = None;
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(body[off..off + 2].try_into().unwrap()) as usize;
+        off += 2;
+        let name = std::str::from_utf8(&body[off..off + nlen]).unwrap().to_string();
+        off += nlen;
+        let value = u64::from_le_bytes(body[off..off + 8].try_into().unwrap());
+        off += 8;
+        if name == "responses_ok" {
+            responses_ok = Some(value);
+        }
+    }
+    assert_eq!(off, body.len(), "v1 stats body must parse exactly");
+    assert_eq!(responses_ok, Some(1), "the warm projection must be counted");
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
 fn remote_errors_are_typed_and_connection_survives() {
     let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
     let handle = server.spawn();
