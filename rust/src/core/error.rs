@@ -54,6 +54,24 @@ pub enum MlprojError {
     /// at capacity (backpressure; retry later).
     ServiceBusy,
 
+    /// The request's deadline expired before a worker could run it; the
+    /// service dropped it instead of computing a result nobody is
+    /// waiting for.
+    DeadlineExceeded,
+
+    /// The service shed this request under overload because its priority
+    /// class lost to higher classes at a queue high-water mark. Unlike
+    /// `ServiceBusy` (queue full for everyone), shedding is a policy
+    /// decision — retrying immediately at the same class will likely
+    /// shed again.
+    Shed,
+
+    /// A client-side read deadline elapsed while waiting for a reply
+    /// (hung or wedged server). Client-local — never travels on the
+    /// wire; the connection is unusable afterwards (a late reply would
+    /// desync frame boundaries) and must be reopened.
+    Timeout,
+
     /// Underlying IO error.
     Io(std::io::Error),
 }
@@ -80,6 +98,15 @@ impl std::fmt::Display for MlprojError {
             MlprojError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             MlprojError::ServiceBusy => {
                 write!(f, "service busy: job queue at capacity, retry later")
+            }
+            MlprojError::DeadlineExceeded => {
+                write!(f, "deadline exceeded: request expired before execution")
+            }
+            MlprojError::Shed => {
+                write!(f, "request shed: dropped under overload (priority class lost)")
+            }
+            MlprojError::Timeout => {
+                write!(f, "timeout: no reply within the client read deadline")
             }
             MlprojError::Io(e) => write!(f, "{e}"),
         }
@@ -154,6 +181,13 @@ mod tests {
         assert_eq!(format!("{e}"), "protocol error: bad magic");
         let e = MlprojError::ServiceBusy;
         assert!(format!("{e}").contains("busy"));
+    }
+
+    #[test]
+    fn display_overload_variants() {
+        assert!(format!("{}", MlprojError::DeadlineExceeded).contains("deadline"));
+        assert!(format!("{}", MlprojError::Shed).contains("shed"));
+        assert!(format!("{}", MlprojError::Timeout).contains("timeout"));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use mlproj::bench::harness;
 use mlproj::coordinator::{report, sweeps, TrainConfig, Trainer};
@@ -31,7 +31,7 @@ use mlproj::projection::operator::{parse_norms, ExecBackend, Method};
 use mlproj::projection::{norms, Norm, ProjectionSpec};
 use mlproj::service::{
     spawn_backends, BackendSpawnOptions, Client, ClientPool, LatencyHistogram, PipelinedConn,
-    ProjectRequest, Router, RouterOptions, SchedulerConfig, ServeOptions, Server, Stage,
+    ProjectRequest, Qos, Router, RouterOptions, SchedulerConfig, ServeOptions, Server, Stage,
     StatsV2, TraceRecord, WireLayout,
 };
 
@@ -149,6 +149,15 @@ const LOADGEN_FLAGS: &[&str] = &[
     "pipeline-depth",
     "via-router",
     "direct-addr",
+    "open",
+    "rate",
+    "rate-x",
+    "duration-s",
+    "burst-on-ms",
+    "burst-off-ms",
+    "deadline-us",
+    "slo-ms",
+    "read-timeout-ms",
 ];
 const ROUTER_FLAGS: &[&str] = &[
     "addr",
@@ -195,6 +204,12 @@ USAGE:
   mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
                  [--n N] [--m M] [--eta F] [--norms L] [--seed S]
                  [--pipeline-depth D] [--via-router [--direct-addr HOST:PORT]]
+                 [--open [--rate RPS | --rate-x X] [--duration-s S]
+                  [--burst-on-ms MS --burst-off-ms MS] [--deadline-us US]
+                  [--slo-ms MS] [--read-timeout-ms MS]]
+                 --open drives an open-loop (Poisson or bursty) arrival
+                 schedule over a mixed-priority tenant population and
+                 emits BENCH_slo.json with per-class latency/shed counts
   mlproj datagen --dataset synthetic|lung --out DIR
   mlproj info [--dataset synthetic|lung] [--addr HOST:PORT]
 
@@ -732,6 +747,7 @@ fn cmd_client(rest: &[String]) -> Result<()> {
                     layout: WireLayout::Matrix,
                     shape: vec![y.rows(), y.cols()],
                     payload: y.data().to_vec(),
+                    qos: Qos::default(),
                 };
                 let t0 = Instant::now();
                 let corr = conn.submit_chunked(&req, chunk_elems)?;
@@ -878,6 +894,7 @@ fn loadgen_pipelined(
                 layout: WireLayout::Matrix,
                 shape: vec![n, m],
                 payload: y.data().to_vec(),
+                qos: Qos::default(),
             };
             // The whole window replays from scratch if the pool
             // reconnects mid-run (idempotent requests).
@@ -937,6 +954,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let depth = args.usize_or("pipeline-depth", 1)?.max(1);
     let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
 
+    if args.get("open").is_some() {
+        if args.get("via-router").is_some() {
+            return Err(MlprojError::invalid(
+                "--open drives whatever --addr points at (router or server); \
+                 drop --via-router",
+            ));
+        }
+        return loadgen_open(args, &addr, clients, &spec, n, m, seed);
+    }
     if args.get("via-router").is_some() {
         let direct = args.get("direct-addr").map(str::to_string);
         return loadgen_via_router(&addr, direct, clients, requests, depth, &spec, n, m, seed);
@@ -1068,6 +1094,356 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ]);
     }
     let path = harness::emit_json_kv("BENCH_serve.json", &kv)?;
+    println!("json -> {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop (SLO) load generation
+// ---------------------------------------------------------------------------
+
+/// Per-priority-class accounting for one open-loop run. Latencies are
+/// measured from each request's *intended* (scheduled) send time, so a
+/// stalled connection inflates the recorded latency instead of silently
+/// thinning the arrival process (coordinated omission).
+#[derive(Default)]
+struct ClassAgg {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    expired: u64,
+    busy: u64,
+    errs: u64,
+    /// Replies that arrived, but after the SLO bound.
+    late: u64,
+    latencies_ns: Vec<u64>,
+}
+
+impl ClassAgg {
+    fn merge(&mut self, other: ClassAgg) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.expired += other.expired;
+        self.busy += other.busy;
+        self.errs += other.errs;
+        self.late += other.late;
+        self.latencies_ns.extend(other.latencies_ns);
+    }
+
+    /// Everything that broke the SLO: late replies plus every request
+    /// that was shed, expired, bounced busy, or failed outright.
+    fn slo_violations(&self) -> u64 {
+        self.late + self.shed + self.expired + self.busy + self.errs
+    }
+}
+
+/// Intended send times (ns offsets from the run start) for one tenant:
+/// Poisson arrivals at `rate` req/s via inverse-CDF exponential gaps,
+/// optionally gated by an on/off burst cycle. An arrival landing in an
+/// off window is deferred to the start of the next on window — deferral
+/// (rather than thinning) is what piles arrivals up at the window edge
+/// and makes the bursts bursty.
+fn open_schedule(
+    rate: f64,
+    duration_s: f64,
+    burst_on_ms: u64,
+    burst_off_ms: u64,
+    rng: &mut Rng,
+) -> Vec<u64> {
+    let horizon_ns = (duration_s * 1e9) as u64;
+    let mut t = 0f64;
+    let mut out = Vec::new();
+    while (t as u64) < horizon_ns {
+        let gap_s = -(1.0 - rng.uniform()).ln() / rate;
+        t += gap_s * 1e9;
+        let mut at = t as u64;
+        if burst_on_ms > 0 && burst_off_ms > 0 {
+            let cycle = (burst_on_ms + burst_off_ms) * 1_000_000;
+            let on = burst_on_ms * 1_000_000;
+            let phase = at % cycle;
+            if phase >= on {
+                at += cycle - phase;
+            }
+        }
+        if at < horizon_ns {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Sleep until `at_ns` on the run clock; a send already behind schedule
+/// goes out immediately (the backlog shows up as latency, never as a
+/// thinned schedule).
+fn sleep_until(t0: Instant, at_ns: u64) {
+    let now = t0.elapsed().as_nanos() as u64;
+    if at_ns > now {
+        std::thread::sleep(Duration::from_nanos(at_ns - now));
+    }
+}
+
+/// Fold one reply into the class accounting.
+fn tally(agg: &mut ClassAgg, lat_ns: u64, slo_ns: u64, outcome: &Result<()>) {
+    match outcome {
+        Ok(()) => {
+            agg.ok += 1;
+            agg.latencies_ns.push(lat_ns);
+            if slo_ns > 0 && lat_ns > slo_ns {
+                agg.late += 1;
+            }
+        }
+        Err(MlprojError::Shed) => agg.shed += 1,
+        Err(MlprojError::DeadlineExceeded) => agg.expired += 1,
+        Err(MlprojError::ServiceBusy) => agg.busy += 1,
+        Err(_) => agg.errs += 1,
+    }
+}
+
+/// One v1 (lockstep) tenant: every request is a full round trip, so a
+/// slow server pushes later sends behind schedule — the intended-time
+/// latency accounting charges that backlog to the server, which is the
+/// whole point of the open-loop model.
+fn open_tenant_v1(
+    addr: &str,
+    req: &ProjectRequest,
+    schedule: &[u64],
+    t0: Instant,
+    slo_ns: u64,
+    read_timeout: Option<Duration>,
+) -> Result<ClassAgg> {
+    let mut client = Client::connect(addr)?;
+    client.set_read_timeout(read_timeout)?;
+    let mut agg = ClassAgg::default();
+    for &at in schedule {
+        sleep_until(t0, at);
+        agg.sent += 1;
+        let outcome = client.project(req.clone()).map(|_| ());
+        let lat = (t0.elapsed().as_nanos() as u64).saturating_sub(at);
+        let transport_dead =
+            matches!(outcome, Err(MlprojError::Io(_)) | Err(MlprojError::Timeout));
+        tally(&mut agg, lat, slo_ns, &outcome);
+        if transport_dead {
+            client = Client::connect(addr)?;
+            client.set_read_timeout(read_timeout)?;
+        }
+    }
+    Ok(agg)
+}
+
+/// One v2 tenant (pipelined at `chunk_elems == 0`, chunked otherwise):
+/// sends fire on the arrival schedule with up to `WINDOW` requests in
+/// flight; replies are drained when the window fills and at the end.
+/// Chunked submissions always run at the default class — the chunk
+/// stream carries no QoS trailer by design.
+fn open_tenant_v2(
+    addr: &str,
+    req: &ProjectRequest,
+    chunk_elems: usize,
+    schedule: &[u64],
+    t0: Instant,
+    slo_ns: u64,
+    read_timeout: Option<Duration>,
+) -> Result<ClassAgg> {
+    const WINDOW: usize = 64;
+    let mut conn = PipelinedConn::connect(addr)?;
+    conn.set_read_timeout(read_timeout)?;
+    let mut agg = ClassAgg::default();
+    let mut intended: HashMap<u16, u64> = HashMap::new();
+    for &at in schedule {
+        while conn.in_flight() >= WINDOW {
+            recv_open(&mut conn, &mut intended, &mut agg, t0, slo_ns)?;
+        }
+        sleep_until(t0, at);
+        agg.sent += 1;
+        let corr = if chunk_elems > 0 {
+            conn.submit_chunked(req, chunk_elems)?
+        } else {
+            conn.submit(req)?
+        };
+        intended.insert(corr, at);
+    }
+    while conn.in_flight() > 0 {
+        recv_open(&mut conn, &mut intended, &mut agg, t0, slo_ns)?;
+    }
+    Ok(agg)
+}
+
+/// Drain one pipelined reply and account it against its intended send
+/// time.
+fn recv_open(
+    conn: &mut PipelinedConn,
+    intended: &mut HashMap<u16, u64>,
+    agg: &mut ClassAgg,
+    t0: Instant,
+    slo_ns: u64,
+) -> Result<()> {
+    let (corr, result) = conn.recv()?;
+    let at = intended.remove(&corr).unwrap_or(0);
+    let lat = (t0.elapsed().as_nanos() as u64).saturating_sub(at);
+    tally(agg, lat, slo_ns, &result.map(|_| ()));
+    Ok(())
+}
+
+/// `loadgen --open`: open-loop traffic over a mixed tenant population.
+///
+/// Tenants cycle through three wire modes (v1 lockstep, v2 pipelined,
+/// v2 chunked) and through the four priority classes; each runs its own
+/// Poisson (or bursty) arrival schedule at an equal share of the offered
+/// rate. Emits BENCH_slo.json with per-class counts and quantiles — the
+/// graceful-degradation artifact CI gates on.
+#[allow(clippy::too_many_arguments)]
+fn loadgen_open(
+    args: &Args,
+    addr: &str,
+    tenants: usize,
+    spec: &ProjectionSpec,
+    n: usize,
+    m: usize,
+    seed: u64,
+) -> Result<()> {
+    let duration_s = args.f64_or("duration-s", 5.0)?.max(0.1);
+    let rate = args.f64_or("rate", 0.0)?;
+    let rate_x = args.f64_or("rate-x", 0.0)?;
+    let burst_on_ms = args.usize_or("burst-on-ms", 0)? as u64;
+    let burst_off_ms = args.usize_or("burst-off-ms", 0)? as u64;
+    let deadline_us = args.usize_or("deadline-us", 0)?;
+    if deadline_us > u32::MAX as usize {
+        return Err(MlprojError::invalid("--deadline-us must fit in 32 bits"));
+    }
+    let slo_ms = args.f64_or("slo-ms", 50.0)?;
+    let slo_ns =
+        if deadline_us > 0 { deadline_us as u64 * 1_000 } else { (slo_ms * 1e6) as u64 };
+    let read_timeout_ms = args.usize_or("read-timeout-ms", 0)?;
+    let read_timeout =
+        (read_timeout_ms > 0).then(|| Duration::from_millis(read_timeout_ms as u64));
+
+    let offered_rps = if rate > 0.0 {
+        rate
+    } else {
+        // Calibrate: a short closed-loop pass estimates this
+        // (server, shape) pair's capacity, and the open-loop schedule
+        // offers a multiple of it — `--rate-x 4` means 4x overload
+        // wherever this server's capacity happens to sit.
+        let x = if rate_x > 0.0 { rate_x } else { 1.0 };
+        eprintln!("loadgen --open: calibrating capacity (target {x:.2}x)...");
+        let (lat, _busy, wall) =
+            loadgen_sequential(addr, tenants.clamp(1, 4), 32, spec, n, m, seed ^ 0xCA11)?;
+        (lat.len() as f64 / wall.max(1e-9)) * x
+    }
+    .max(1.0);
+
+    eprintln!(
+        "loadgen --open: {tenants} tenants offering {offered_rps:.0} req/s of {n}x{m} \
+         for {duration_s:.1}s against {addr} ({})",
+        if burst_on_ms > 0 && burst_off_ms > 0 { "bursty" } else { "poisson" }
+    );
+
+    let per_tenant = offered_rps / tenants.max(1) as f64;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..tenants {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        let mut sched_rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(t as u64 + 1));
+        let schedule =
+            open_schedule(per_tenant, duration_s, burst_on_ms, burst_off_ms, &mut sched_rng);
+        let mode = t % 3;
+        let class =
+            if mode == 2 { Qos::DEFAULT_CLASS } else { (t % Qos::CLASSES) as u8 };
+        let qos = Qos::new(class, deadline_us as u32)?;
+        let payload_seed = seed + 7000 + t as u64;
+        handles.push(std::thread::spawn(move || -> Result<(u8, ClassAgg)> {
+            let mut rng = Rng::new(payload_seed);
+            let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
+            let req = ProjectRequest {
+                norms: spec.norms.clone(),
+                eta: spec.eta,
+                l1_algo: spec.l1_algo,
+                method: spec.method,
+                layout: WireLayout::Matrix,
+                shape: vec![n, m],
+                payload: y.data().to_vec(),
+                qos,
+            };
+            let agg = match mode {
+                0 => open_tenant_v1(&addr, &req, &schedule, t0, slo_ns, read_timeout)?,
+                1 => open_tenant_v2(&addr, &req, 0, &schedule, t0, slo_ns, read_timeout)?,
+                _ => open_tenant_v2(&addr, &req, 2048, &schedule, t0, slo_ns, read_timeout)?,
+            };
+            Ok((class, agg))
+        }));
+    }
+    let mut per_class: Vec<ClassAgg> = (0..Qos::CLASSES).map(|_| ClassAgg::default()).collect();
+    for h in handles {
+        let (class, agg) = h
+            .join()
+            .map_err(|_| MlprojError::Runtime("open-loop tenant thread panicked".into()))??;
+        per_class[class as usize].merge(agg);
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut owned: Vec<(String, f64)> = vec![
+        ("tenants".into(), tenants as f64),
+        ("offered_rps".into(), offered_rps),
+        ("duration_s".into(), duration_s),
+        ("wall_secs".into(), wall),
+        ("deadline_us".into(), deadline_us as f64),
+        ("slo_ms".into(), slo_ns as f64 / 1e6),
+        ("burst_on_ms".into(), burst_on_ms as f64),
+        ("burst_off_ms".into(), burst_off_ms as f64),
+    ];
+    let (mut sent_total, mut ok_total, mut good_total) = (0u64, 0u64, 0u64);
+    for (c, agg) in per_class.iter().enumerate() {
+        sent_total += agg.sent;
+        ok_total += agg.ok;
+        good_total += agg.ok - agg.late;
+        let lat = summarize_ns(&agg.latencies_ns);
+        if agg.sent > 0 {
+            println!(
+                "class {c}: sent {:6}  ok {:6}  shed {:5}  expired {:5}  busy {:5}  \
+                 errs {:3}  p50 {:.3} ms  p90 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms  \
+                 slo-violations {}",
+                agg.sent,
+                agg.ok,
+                agg.shed,
+                agg.expired,
+                agg.busy,
+                agg.errs,
+                lat.p50,
+                lat.p90,
+                lat.p99,
+                lat.p999,
+                agg.slo_violations()
+            );
+        }
+        for (k, v) in [
+            ("sent", agg.sent as f64),
+            ("ok", agg.ok as f64),
+            ("shed", agg.shed as f64),
+            ("expired", agg.expired as f64),
+            ("busy", agg.busy as f64),
+            ("errs", agg.errs as f64),
+            ("slo_violations", agg.slo_violations() as f64),
+            ("p50_ms", lat.p50),
+            ("p90_ms", lat.p90),
+            ("p99_ms", lat.p99),
+            ("p999_ms", lat.p999),
+        ] {
+            owned.push((format!("c{c}_{k}"), v));
+        }
+    }
+    owned.push(("sent_total".into(), sent_total as f64));
+    owned.push(("achieved_rps".into(), ok_total as f64 / wall));
+    owned.push(("goodput_rps".into(), good_total as f64 / wall));
+    println!(
+        "open loop: offered {offered_rps:.0} rps, achieved {:.0} rps ok, \
+         goodput {:.0} rps within SLO ({sent_total} sent in {wall:.2}s)",
+        ok_total as f64 / wall,
+        good_total as f64 / wall
+    );
+    let kv: Vec<(&str, f64)> = owned.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let path = harness::emit_json_kv("BENCH_slo.json", &kv)?;
     println!("json -> {}", path.display());
     Ok(())
 }
@@ -1392,6 +1768,61 @@ mod tests {
         assert_eq!(parse_kernel("neon").unwrap(), KernelVariant::Neon);
         let err = parse_kernel("sse9").unwrap_err();
         assert!(format!("{err}").contains("--kernel"), "{err}");
+    }
+
+    #[test]
+    fn open_schedule_is_deterministic_sorted_and_respects_the_horizon() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let s1 = open_schedule(1000.0, 0.5, 0, 0, &mut a);
+        let s2 = open_schedule(1000.0, 0.5, 0, 0, &mut b);
+        assert_eq!(s1, s2, "same seed, same schedule");
+        assert!(s1.iter().all(|&t| t < 500_000_000), "arrival past the horizon");
+        assert!(s1.windows(2).all(|w| w[0] <= w[1]), "arrivals must be ordered");
+        // ~500 expected arrivals; Poisson noise stays well inside these
+        // bounds (they are ~11 standard deviations wide).
+        assert!(s1.len() > 250 && s1.len() < 1000, "got {} arrivals", s1.len());
+    }
+
+    #[test]
+    fn open_schedule_burst_gating_defers_off_window_arrivals() {
+        let mut rng = Rng::new(11);
+        // 20 ms on / 80 ms off: every arrival must land inside an on
+        // window (deferral snaps off-window arrivals to the next window
+        // start, it never thins them away).
+        let s = open_schedule(2000.0, 0.4, 20, 80, &mut rng);
+        assert!(!s.is_empty());
+        let cycle = 100_000_000u64;
+        let on = 20_000_000u64;
+        assert!(
+            s.iter().all(|&t| t % cycle < on),
+            "arrival outside the on window"
+        );
+    }
+
+    #[test]
+    fn tally_classifies_typed_overload_outcomes() {
+        let mut agg = ClassAgg::default();
+        tally(&mut agg, 1_000, 1_000_000, &Ok(()));
+        tally(&mut agg, 2_000_000, 1_000_000, &Ok(())); // over the SLO
+        tally(&mut agg, 0, 1_000_000, &Err(MlprojError::Shed));
+        tally(&mut agg, 0, 1_000_000, &Err(MlprojError::DeadlineExceeded));
+        tally(&mut agg, 0, 1_000_000, &Err(MlprojError::ServiceBusy));
+        tally(&mut agg, 0, 1_000_000, &Err(MlprojError::invalid("boom")));
+        assert_eq!(agg.ok, 2);
+        assert_eq!(agg.late, 1);
+        assert_eq!(agg.shed, 1);
+        assert_eq!(agg.expired, 1);
+        assert_eq!(agg.busy, 1);
+        assert_eq!(agg.errs, 1);
+        assert_eq!(agg.latencies_ns.len(), 2);
+        // Late replies and every typed failure count against the SLO.
+        assert_eq!(agg.slo_violations(), 5);
+
+        let mut merged = ClassAgg::default();
+        merged.merge(agg);
+        assert_eq!(merged.ok, 2);
+        assert_eq!(merged.slo_violations(), 5);
     }
 
     #[test]

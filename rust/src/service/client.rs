@@ -22,13 +22,16 @@ use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::core::error::{MlprojError, Result};
 use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
 use crate::core::tensor::Tensor;
 use crate::projection::ProjectionSpec;
 use crate::service::protocol::{
-    self, ChunkAssembler, Frame, ProjectRequest, WireLayout, MAX_BODY_BYTES, V2,
+    self, ChunkAssembler, Frame, ProjectRequest, Qos, WireLayout, MAX_BODY_BYTES, QOS_TRAILER_BYTES,
+    V2,
 };
 use crate::service::telemetry::{StatsV2, TraceRecord};
 
@@ -46,10 +49,19 @@ impl Client {
         Ok(Client { stream })
     }
 
+    /// Bound every reply read by `timeout` (`None` disables, the
+    /// default). An elapsed deadline surfaces as
+    /// [`MlprojError::Timeout`]; the connection must then be reopened —
+    /// a late reply would land mid-frame and desync the stream.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
     /// Send one frame and read the reply, unwrapping `Error` frames.
     fn call(&mut self, frame: &Frame) -> Result<Frame> {
         frame.write_to(&mut self.stream)?;
-        match Frame::read_from(&mut self.stream)? {
+        match Frame::read_from(&mut self.stream).map_err(map_timeout)? {
             Frame::Error { code, msg } => Err(code.into_error(msg)),
             reply => Ok(reply),
         }
@@ -128,6 +140,7 @@ impl Client {
             layout: WireLayout::Matrix,
             shape: vec![y.rows(), y.cols()],
             payload: y.data().to_vec(),
+            qos: Qos::default(),
         };
         Matrix::from_col_major(y.rows(), y.cols(), self.project(req)?)
     }
@@ -142,6 +155,7 @@ impl Client {
             layout: WireLayout::Tensor,
             shape: y.shape().to_vec(),
             payload: y.data().to_vec(),
+            qos: Qos::default(),
         };
         Tensor::from_vec(y.shape().to_vec(), self.project(req)?)
     }
@@ -206,6 +220,16 @@ impl PipelinedConn {
         self.inflight.len()
     }
 
+    /// Bound every blocking reply read by `timeout` (`None` disables,
+    /// the default). This is a hang guard, not a pacing tool: when
+    /// [`PipelinedConn::recv`] returns [`MlprojError::Timeout`] the
+    /// connection is dead — a reply arriving after the partial read
+    /// would desync frame boundaries — and must be reopened.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
     /// Set the auto-chunk threshold in bytes (clamped to the protocol
     /// cap): requests whose frame body would exceed it upload as chunked
     /// streams. A manual call overrides (and survives) any cap the
@@ -240,9 +264,11 @@ impl PipelinedConn {
         }
     }
 
-    /// Wire size of the request's `Project` body.
+    /// Wire size of the request's `Project` body (including the qos
+    /// trailer, present only for non-default qos).
     fn project_body_len(req: &ProjectRequest) -> usize {
-        13 + req.norms.len() + 4 * req.shape.len() + 4 + 4 * req.payload.len()
+        let trailer = if req.qos.is_default() { 0 } else { QOS_TRAILER_BYTES };
+        13 + req.norms.len() + 4 * req.shape.len() + 4 + 4 * req.payload.len() + trailer
     }
 
     /// Send one projection request without waiting for its reply;
@@ -263,6 +289,8 @@ impl PipelinedConn {
     /// Send one projection request as an explicit chunked stream
     /// (`ProjectBegin` / `ProjectChunk` / checksummed `ProjectEnd`) with
     /// at most `chunk_elems` elements per chunk, regardless of size.
+    /// Chunked uploads carry no qos trailer — they run at the default
+    /// class (deadline-sensitive traffic should stay whole-frame).
     pub fn submit_chunked(&mut self, req: &ProjectRequest, chunk_elems: usize) -> Result<u16> {
         let corr = self.alloc_corr()?;
         protocol::write_project_chunked(&mut self.stream, corr, req, chunk_elems)?;
@@ -330,7 +358,8 @@ impl PipelinedConn {
         let mut asm = ChunkAssembler::new(total_elems, checksum)?;
         let mut body = Vec::new();
         loop {
-            let h = protocol::read_raw_frame(&mut self.stream, &mut body, MAX_BODY_BYTES)?;
+            let h = protocol::read_raw_frame(&mut self.stream, &mut body, MAX_BODY_BYTES)
+                .map_err(map_timeout)?;
             if h.version != V2 || h.corr != corr {
                 return Err(MlprojError::Protocol(format!(
                     "interleaved frame (corr {}) inside chunked reply {corr}",
@@ -373,7 +402,7 @@ impl PipelinedConn {
             Ok(h) => h,
             Err(e) => {
                 self.body = body;
-                return Err(e);
+                return Err(map_timeout(e));
             }
         };
         let frame = protocol::decode_client_frame(h.version, h.ftype, &body);
@@ -486,6 +515,9 @@ pub struct ClientPool {
     /// (negotiated from the server's Pong at pool connect; manual
     /// [`ClientPool::set_chunk_threshold`] calls override it).
     chunk_threshold: usize,
+    /// Read deadline stamped onto every (re)connected connection
+    /// (`None` = block forever, the default).
+    read_timeout: Option<Duration>,
     /// Connections re-established after a transport failure.
     reconnects: AtomicU64,
 }
@@ -513,6 +545,7 @@ impl ClientPool {
             rr: AtomicUsize::new(0),
             retries: 2,
             chunk_threshold,
+            read_timeout: None,
             reconnects: AtomicU64::new(0),
         })
     }
@@ -522,6 +555,21 @@ impl ClientPool {
     /// window is survived instead of surfaced.
     pub fn with_retries(mut self, retries: usize) -> ClientPool {
         self.retries = retries;
+        self
+    }
+
+    /// Bound reply reads on every pooled (and future reconnected)
+    /// connection by `timeout`. A timed-out call surfaces as
+    /// [`MlprojError::Timeout`] and is **not** replayed — unlike a broken
+    /// pipe, the request may still be executing on the wedged server, so
+    /// retrying doubles the load exactly when the server is struggling.
+    pub fn with_read_timeout(mut self, timeout: Option<Duration>) -> ClientPool {
+        self.read_timeout = timeout;
+        for slot in &self.slots {
+            if let Some(conn) = slot.lock().expect("client pool slot poisoned").as_mut() {
+                let _ = conn.set_read_timeout(timeout);
+            }
+        }
         self
     }
 
@@ -570,7 +618,8 @@ impl ClientPool {
         i: usize,
         mut f: impl FnMut(&mut PipelinedConn) -> Result<R>,
     ) -> Result<R> {
-        let slot = &self.slots[i % self.slots.len()];
+        let slot_idx = i % self.slots.len();
+        let slot = &self.slots[slot_idx];
         let mut guard = slot.lock().expect("client pool slot poisoned");
         let mut attempt = 0;
         loop {
@@ -578,14 +627,15 @@ impl ClientPool {
                 match PipelinedConn::connect(self.addr.as_str()) {
                     Ok(mut conn) => {
                         conn.set_chunk_threshold(self.chunk_threshold);
+                        let _ = conn.set_read_timeout(self.read_timeout);
                         self.reconnects.fetch_add(1, Ordering::Relaxed);
                         *guard = Some(conn);
                     }
                     Err(_) if attempt < self.retries => {
                         attempt += 1;
-                        // Linear backoff: a restarting backend needs a
-                        // beat before its listener is back.
-                        backoff(attempt);
+                        // A restarting backend needs a beat before its
+                        // listener is back.
+                        std::thread::sleep(backoff_delay(attempt, slot_idx as u64));
                         continue;
                     }
                     Err(e) => return Err(e),
@@ -600,7 +650,7 @@ impl ClientPool {
                     *guard = None;
                     if attempt < self.retries {
                         attempt += 1;
-                        backoff(attempt);
+                        std::thread::sleep(backoff_delay(attempt, slot_idx as u64));
                         continue;
                     }
                     return Err(MlprojError::Io(e));
@@ -608,6 +658,14 @@ impl ClientPool {
                 // Protocol confusion poisons the connection but is not
                 // retried — replaying onto a desynced server helps nobody.
                 Err(e @ MlprojError::Protocol(_)) => {
+                    *guard = None;
+                    return Err(e);
+                }
+                // A timed-out read leaves the request possibly still
+                // executing server-side: drop the (desynced) connection
+                // but never replay — that would double the load on a
+                // server that is already too slow to answer.
+                Err(e @ MlprojError::Timeout) => {
                     *guard = None;
                     return Err(e);
                 }
@@ -624,11 +682,34 @@ impl ClientPool {
     }
 }
 
-/// Linear reconnect backoff (25 ms × attempt): long enough for a backend
-/// restart to land inside a router's retry budget, short enough that a
-/// genuinely dead backend fails fast.
-fn backoff(attempt: usize) {
-    std::thread::sleep(std::time::Duration::from_millis(25 * attempt as u64));
+/// Fold a socket-level read deadline into the typed
+/// [`MlprojError::Timeout`] (platforms disagree on whether an elapsed
+/// `set_read_timeout` reads back as `WouldBlock` or `TimedOut`).
+fn map_timeout(e: MlprojError) -> MlprojError {
+    match e {
+        MlprojError::Io(io)
+            if matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            MlprojError::Timeout
+        }
+        other => other,
+    }
+}
+
+/// Reconnect backoff schedule: linear 25 ms × attempt capped at 250 ms,
+/// with ±25% deterministic jitter derived from `seed` (per pool slot) so
+/// a fleet of clients severed by one backend restart doesn't redial in
+/// lockstep. Pure — the sleep happens at the call site — so tests can
+/// pin the schedule without waiting it out.
+fn backoff_delay(attempt: usize, seed: u64) -> Duration {
+    let base_ms = (25 * attempt as u64).min(250);
+    // Draw jitter in [0, base/2) and recenter: delay ∈ [¾·base, 1¼·base).
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt as u64);
+    let jitter = rng.next_u64() % (base_ms / 2).max(1);
+    Duration::from_millis(base_ms - base_ms / 4 + jitter)
 }
 
 #[cfg(test)]
@@ -671,6 +752,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![y.rows(), y.cols()],
             payload: y.data().to_vec(),
+            qos: Qos::default(),
         }
     }
 
@@ -815,6 +897,76 @@ mod tests {
         assert!(pool.reconnects() >= 1, "severed sockets must count as reconnects");
 
         // Shut the server down through a pooled connection.
+        pool.with_conn(0, |c| c.shutdown()).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn backoff_delay_is_capped_jittered_and_deterministic() {
+        for attempt in 1..=20 {
+            for seed in 0..8u64 {
+                let d = backoff_delay(attempt, seed);
+                let base = (25 * attempt as u64).min(250);
+                assert!(
+                    d >= Duration::from_millis(base - base / 4)
+                        && d < Duration::from_millis(base + base / 4),
+                    "attempt {attempt} seed {seed}: {d:?} outside ±25% of {base}ms"
+                );
+            }
+        }
+        // Same inputs, same delay — no hidden entropy.
+        assert_eq!(backoff_delay(3, 7), backoff_delay(3, 7));
+        // Different slots spread out (the anti-thundering-herd point).
+        let spread: std::collections::HashSet<Duration> =
+            (0..8u64).map(|s| backoff_delay(10, s)).collect();
+        assert!(spread.len() > 1, "slot seeds must spread the delays");
+        // The cap holds for arbitrarily deep retry loops.
+        assert!(backoff_delay(10_000, 1) < Duration::from_millis(313));
+    }
+
+    #[test]
+    fn stalled_server_surfaces_as_typed_timeout() {
+        // A listener that accepts and never answers: the client's read
+        // deadline must fire as MlprojError::Timeout, not hang or
+        // surface as a raw Io error.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stall = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (stream2, _) = listener.accept().unwrap();
+            // Hold the sockets open (without replying) until dropped.
+            (stream, stream2)
+        });
+
+        let mut client = Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let err = client.ping().unwrap_err();
+        assert!(matches!(err, MlprojError::Timeout), "{err}");
+
+        let mut conn = PipelinedConn::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let err = conn.ping().unwrap_err();
+        assert!(matches!(err, MlprojError::Timeout), "{err}");
+
+        drop(stall.join().unwrap());
+    }
+
+    #[test]
+    fn pool_read_timeout_is_stamped_and_not_replayed() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let handle = server.spawn();
+
+        // A generous deadline: requests against a live server succeed.
+        let pool = ClientPool::connect(&addr.to_string(), 1)
+            .unwrap()
+            .with_read_timeout(Some(Duration::from_secs(5)));
+        let mut rng = Rng::new(34);
+        let y = Matrix::random_uniform(6, 9, -1.0, 1.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(0.9);
+        let req = wire_request(&spec, &y);
+        assert_eq!(pool.project(&req).unwrap(), spec.project_matrix(&y).unwrap().data());
+
         pool.with_conn(0, |c| c.shutdown()).unwrap();
         handle.join().unwrap();
     }

@@ -44,10 +44,12 @@ pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
 pub use client::{Client, ClientPool, PipelinedConn};
 pub use protocol::{
     BeginInfo, ChecksumKind, ChunkAssembler, ErrorCode, Frame, ProjectMeta, ProjectRequest,
-    RawHeader, WireLayout,
+    Qos, RawHeader, WireLayout,
 };
 pub use router::{spawn_backends, BackendSpawnOptions, Router, RouterHandle, RouterOptions};
-pub use scheduler::{ConnReply, Job, PayloadPool, ReplySlot, ReplyTo, Scheduler, SchedulerConfig};
+pub use scheduler::{
+    ConnReply, Job, JobQueue, PayloadPool, ReplySlot, ReplyTo, Scheduler, SchedulerConfig,
+};
 pub use server::{ServeOptions, Server, ServerHandle};
 pub use stats::ServiceStats;
 pub use telemetry::{

@@ -177,6 +177,11 @@ pub enum ErrorCode {
     Invalid,
     /// Server-side failure unrelated to the request contents.
     Internal,
+    /// The request's deadline expired before a worker ran it.
+    DeadlineExceeded,
+    /// Dropped under overload: the request's priority class lost to
+    /// higher classes at a queue high-water mark.
+    Shed,
 }
 
 impl ErrorCode {
@@ -186,6 +191,8 @@ impl ErrorCode {
             ErrorCode::Protocol => 2,
             ErrorCode::Invalid => 3,
             ErrorCode::Internal => 4,
+            ErrorCode::DeadlineExceeded => 5,
+            ErrorCode::Shed => 6,
         }
     }
 
@@ -195,6 +202,8 @@ impl ErrorCode {
             2 => Ok(ErrorCode::Protocol),
             3 => Ok(ErrorCode::Invalid),
             4 => Ok(ErrorCode::Internal),
+            5 => Ok(ErrorCode::DeadlineExceeded),
+            6 => Ok(ErrorCode::Shed),
             other => Err(perr(format!("unknown error code {other}"))),
         }
     }
@@ -203,6 +212,8 @@ impl ErrorCode {
     pub fn from_error(e: &MlprojError) -> Self {
         match e {
             MlprojError::ServiceBusy => ErrorCode::Busy,
+            MlprojError::DeadlineExceeded => ErrorCode::DeadlineExceeded,
+            MlprojError::Shed => ErrorCode::Shed,
             MlprojError::Protocol(_) => ErrorCode::Protocol,
             MlprojError::InvalidArgument(_)
             | MlprojError::InvalidRadius { .. }
@@ -216,10 +227,96 @@ impl ErrorCode {
     pub fn into_error(self, msg: String) -> MlprojError {
         match self {
             ErrorCode::Busy => MlprojError::ServiceBusy,
+            ErrorCode::DeadlineExceeded => MlprojError::DeadlineExceeded,
+            ErrorCode::Shed => MlprojError::Shed,
             ErrorCode::Protocol => MlprojError::Protocol(msg),
             ErrorCode::Invalid => MlprojError::InvalidArgument(msg),
             ErrorCode::Internal => MlprojError::Runtime(msg),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request QoS (priority class + deadline)
+// ---------------------------------------------------------------------------
+
+/// Per-request quality of service: a 2-bit priority class and an
+/// optional deadline budget.
+///
+/// Travels as an **optional 5-byte trailer** after a `Project` payload
+/// (`class: u8`, `deadline_us: u32` little-endian). A default QoS emits
+/// no trailer at all, so legacy frames — v1 and v2 alike — stay
+/// byte-identical; decoders accept exactly zero (legacy) or five
+/// remaining bytes. Chunked uploads (`ProjectBegin` streams) carry no
+/// trailer and run at the default class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Qos {
+    /// Priority class `0..=3`; higher classes shed later under
+    /// overload, and [`Qos::PROTECTED`] is never policy-shed.
+    pub class: u8,
+    /// Deadline budget in microseconds measured from admission;
+    /// `0` means no deadline.
+    pub deadline_us: u32,
+}
+
+impl Qos {
+    /// Number of priority classes (the class field is 2 bits).
+    pub const CLASSES: usize = 4;
+    /// Highest class: never shed by admission policy, only by a
+    /// completely full queue.
+    pub const PROTECTED: u8 = 3;
+    /// The class a request without a trailer runs at.
+    pub const DEFAULT_CLASS: u8 = 1;
+
+    /// A validated QoS; rejects classes outside `0..=3`.
+    pub fn new(class: u8, deadline_us: u32) -> Result<Qos> {
+        if class as usize >= Qos::CLASSES {
+            return Err(perr(format!(
+                "priority class {class} out of range (0..={})",
+                Qos::CLASSES - 1
+            )));
+        }
+        Ok(Qos { class, deadline_us })
+    }
+
+    /// True when this QoS would emit no wire trailer.
+    pub fn is_default(&self) -> bool {
+        *self == Qos::default()
+    }
+}
+
+impl Default for Qos {
+    fn default() -> Qos {
+        Qos { class: Qos::DEFAULT_CLASS, deadline_us: 0 }
+    }
+}
+
+/// Byte length of the optional QoS trailer.
+const QOS_TRAILER_BYTES: usize = 5;
+
+/// Append the QoS trailer to a `Project` body — only when non-default,
+/// so legacy peers keep seeing their exact bytes.
+fn encode_qos_trailer(b: &mut Vec<u8>, qos: &Qos) {
+    if !qos.is_default() {
+        b.push(qos.class);
+        b.extend_from_slice(&qos.deadline_us.to_le_bytes());
+    }
+}
+
+/// Parse the optional QoS trailer after a `Project` payload: zero
+/// remaining bytes (legacy frame) or exactly [`QOS_TRAILER_BYTES`]. Any
+/// other remainder is a framing error.
+fn parse_qos_trailer(c: &mut Cursor) -> Result<Qos> {
+    match c.buf.len() - c.pos {
+        0 => Ok(Qos::default()),
+        QOS_TRAILER_BYTES => {
+            let class = c.u8()?;
+            let deadline_us = c.u32()?;
+            Qos::new(class, deadline_us)
+        }
+        n => Err(perr(format!(
+            "{n} trailing bytes after the payload are not a {QOS_TRAILER_BYTES}-byte qos trailer"
+        ))),
     }
 }
 
@@ -245,6 +342,9 @@ pub struct ProjectMeta {
     pub layout: WireLayout,
     /// Shape (`[rows, cols]` for matrices, one entry per axis otherwise).
     pub shape: Vec<usize>,
+    /// Priority class + deadline budget (default for legacy frames and
+    /// chunked streams).
+    pub qos: Qos,
 }
 
 impl ProjectMeta {
@@ -274,6 +374,9 @@ pub struct ProjectRequest {
     pub shape: Vec<usize>,
     /// Flat payload, length = product of `shape`.
     pub payload: Vec<f32>,
+    /// Priority class + deadline budget (default = class 1, no
+    /// deadline; emits no wire bytes).
+    pub qos: Qos,
 }
 
 impl ProjectRequest {
@@ -299,6 +402,7 @@ impl ProjectRequest {
                 self.shape
             )));
         }
+        Qos::new(self.qos.class, self.qos.deadline_us)?;
         validate_spec(&self.norms, &self.shape, self.layout)
     }
 }
@@ -583,6 +687,7 @@ impl Frame {
                     &mut b, &req.norms, req.eta, req.l1_algo, req.method, req.layout, &req.shape,
                 )?;
                 write_f32s(&mut b, &req.payload)?;
+                encode_qos_trailer(&mut b, &req.qos);
             }
             Frame::ProjectBegin(info) => {
                 validate_meta(&info.meta)?;
@@ -683,6 +788,7 @@ impl Frame {
             T_PROJECT => {
                 let meta = parse_project_meta(&mut c)?;
                 let payload = c.f32s()?;
+                let qos = parse_qos_trailer(&mut c)?;
                 // Framing only — semantic checks (payload vs shape, rank
                 // vs layout) are NOT applied here: a fully-framed but
                 // invalid request must get a typed `Invalid` reply from
@@ -695,6 +801,7 @@ impl Frame {
                     layout: meta.layout,
                     shape: meta.shape,
                     payload,
+                    qos,
                 })
             }
             T_PROJECT_OK => Frame::ProjectOk(c.f32s()?),
@@ -884,7 +991,7 @@ fn parse_project_meta(c: &mut Cursor) -> Result<ProjectMeta> {
     for _ in 0..ndim {
         shape.push(c.u32()? as usize);
     }
-    Ok(ProjectMeta { norms, eta, l1_algo, method, layout, shape })
+    Ok(ProjectMeta { norms, eta, l1_algo, method, layout, shape, qos: Qos::default() })
 }
 
 // ---------------------------------------------------------------------------
@@ -1135,11 +1242,9 @@ pub fn decode_server_frame(
         return Ok(ServerFrame::Other(Frame::decode_body(version, ftype, body)?));
     }
     let mut c = Cursor { buf: body, pos: 0 };
-    let meta = parse_project_meta(&mut c)?;
+    let mut meta = parse_project_meta(&mut c)?;
     c.f32s_into(payload)?;
-    if c.pos != body.len() {
-        return Err(perr(format!("{} trailing bytes after frame body", body.len() - c.pos)));
-    }
+    meta.qos = parse_qos_trailer(&mut c)?;
     Ok(ServerFrame::Project(meta))
 }
 
@@ -1344,7 +1449,8 @@ pub fn write_project_v2<W: Write>(w: &mut W, corr: u16, req: &ProjectRequest) ->
     )?;
     let count = u32::try_from(req.payload.len())
         .map_err(|_| perr("payload exceeds u32 element count"))?;
-    let body_len = spec.len() + 4 + req.payload.len() * 4;
+    let trailer = if req.qos.is_default() { 0 } else { QOS_TRAILER_BYTES };
+    let body_len = spec.len() + 4 + req.payload.len() * 4 + trailer;
     if body_len > MAX_BODY_BYTES {
         return Err(perr(format!(
             "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap \
@@ -1361,6 +1467,12 @@ pub fn write_project_v2<W: Write>(w: &mut W, corr: u16, req: &ProjectRequest) ->
     w.write_all(&spec)?;
     w.write_all(&count.to_le_bytes())?;
     write_payload_bytes(w, &req.payload)?;
+    if trailer != 0 {
+        let mut tail = [0u8; QOS_TRAILER_BYTES];
+        tail[0] = req.qos.class;
+        tail[1..5].copy_from_slice(&req.qos.deadline_us.to_le_bytes());
+        w.write_all(&tail)?;
+    }
     w.flush()?;
     Ok(())
 }
@@ -1451,6 +1563,9 @@ pub fn write_project_chunked<W: Write>(
             method: req.method,
             layout: req.layout,
             shape: req.shape.clone(),
+            // Chunked uploads carry no qos trailer: they run at the
+            // default class regardless of the request's field.
+            qos: Qos::default(),
         },
         total_elems: req.payload.len() as u64,
         checksum: ChecksumKind::Fnv1a64,
@@ -1617,6 +1732,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![2, 3],
             payload: vec![1.0, -2.0, 3.5, 0.0, -0.25, 7.0],
+            qos: Qos::default(),
         }
     }
 
@@ -1637,6 +1753,8 @@ mod tests {
         roundtrip(Frame::ProjectOk(vec![0.5, -1.0, f32::MIN, f32::MAX]));
         roundtrip(Frame::Error { code: ErrorCode::Busy, msg: "queue full".into() });
         roundtrip(Frame::Error { code: ErrorCode::Invalid, msg: "η∞ unicode ✓".into() });
+        roundtrip(Frame::Error { code: ErrorCode::DeadlineExceeded, msg: "expired".into() });
+        roundtrip(Frame::Error { code: ErrorCode::Shed, msg: "class 0 shed".into() });
         roundtrip(Frame::StatsRequest);
         roundtrip(Frame::StatsResponse(vec![
             ("requests_total".into(), 42),
@@ -1760,6 +1878,7 @@ mod tests {
                         layout: WireLayout::Tensor,
                         shape: vec![4],
                         payload: vec![0.0; 4],
+                        qos: Qos::default(),
                     };
                     roundtrip(Frame::Project(req));
                 }
@@ -1777,8 +1896,102 @@ mod tests {
             layout: WireLayout::Tensor,
             shape: vec![2, 3, 4],
             payload: (0..24).map(|i| i as f32 * 0.5).collect(),
+            qos: Qos::default(),
         };
         roundtrip(Frame::Project(req));
+    }
+
+    #[test]
+    fn qos_trailer_roundtrips_under_both_decode_paths() {
+        let mut req = sample_request();
+        req.qos = Qos { class: Qos::PROTECTED, deadline_us: 2_500 };
+        roundtrip(Frame::Project(req.clone()));
+
+        // The server's buffer-reusing decode path sees the same qos.
+        let bytes = Frame::Project(req.clone()).encode().unwrap();
+        let mut payload = Vec::new();
+        let frame = decode_server_frame(
+            bytes[4],
+            bytes[5],
+            &bytes[HEADER_BYTES..],
+            &mut payload,
+        )
+        .unwrap();
+        match frame {
+            ServerFrame::Project(meta) => {
+                assert_eq!(meta.qos, req.qos);
+                assert_eq!(payload, req.payload);
+            }
+            other => panic!("expected Project, got {other:?}"),
+        }
+
+        // The streaming v2 writer emits the same bytes as Frame::encode
+        // modulo the version/corr header bytes.
+        let mut direct = Vec::new();
+        write_project_v2(&mut direct, 7, &req).unwrap();
+        assert_eq!(direct[4], V2);
+        assert_eq!(u16::from_le_bytes(direct[6..8].try_into().unwrap()), 7);
+        assert_eq!(&direct[HEADER_BYTES..], &bytes[HEADER_BYTES..]);
+    }
+
+    #[test]
+    fn default_qos_keeps_legacy_project_bytes_pinned() {
+        // A default-QoS request must emit the exact pre-QoS layout: no
+        // trailer byte anywhere, under v1 and v2 framing alike.
+        let req = ProjectRequest {
+            norms: vec![Norm::Linf],
+            eta: 1.0,
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            layout: WireLayout::Tensor,
+            shape: vec![2],
+            payload: vec![1.0, -1.0],
+            qos: Qos::default(),
+        };
+        let bytes = Frame::Project(req.clone()).encode().unwrap();
+        let mut expect = vec![b'M', b'L', b'P', b'J', V1, T_PROJECT, 0, 0];
+        let mut body: Vec<u8> = Vec::new();
+        body.extend_from_slice(&1.0f64.to_le_bytes()); // eta
+        body.extend_from_slice(&[0, 0, 1]); // l1algo, method, layout
+        body.push(1); // nnorms
+        body.push(2); // linf
+        body.push(1); // ndim
+        body.extend_from_slice(&2u32.to_le_bytes()); // dim 0
+        body.extend_from_slice(&2u32.to_le_bytes()); // count
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        body.extend_from_slice(&(-1.0f32).to_le_bytes());
+        expect.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        expect.extend_from_slice(&body);
+        assert_eq!(bytes, expect, "legacy v1 Project bytes are pinned");
+
+        let mut v2 = Vec::new();
+        write_project_v2(&mut v2, 3, &req).unwrap();
+        assert_eq!(&v2[HEADER_BYTES..], &bytes[HEADER_BYTES..], "v2 body matches v1 body");
+    }
+
+    #[test]
+    fn rejects_malformed_qos_trailers() {
+        let mut req = sample_request();
+        req.qos = Qos { class: 0, deadline_us: 1_000 };
+        let bytes = Frame::Project(req).encode().unwrap();
+
+        // Trailer cut to 3 bytes (not 0, not 5): framing error.
+        let mut cut = bytes.clone();
+        cut.truncate(cut.len() - 2);
+        let body_len = (cut.len() - HEADER_BYTES) as u32;
+        cut[8..12].copy_from_slice(&body_len.to_le_bytes());
+        assert!(matches!(Frame::decode(&cut), Err(MlprojError::Protocol(_))));
+
+        // Class byte out of range: rejected, not wrapped.
+        let class_off = bytes.len() - QOS_TRAILER_BYTES;
+        let mut bad = bytes;
+        bad[class_off] = Qos::CLASSES as u8;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+
+        // Encode-side: an out-of-range class never reaches the wire.
+        let mut req = sample_request();
+        req.qos = Qos { class: 9, deadline_us: 0 };
+        assert!(Frame::Project(req).encode().is_err());
     }
 
     #[test]
@@ -1887,6 +2100,20 @@ mod tests {
             ErrorCode::Invalid.into_error("m".into()),
             MlprojError::InvalidArgument(m) if m == "m"
         ));
+        // Overload verdicts round-trip as their own unit variants — a
+        // shed is not a retry-now Busy.
+        assert_eq!(
+            ErrorCode::from_error(&MlprojError::DeadlineExceeded),
+            ErrorCode::DeadlineExceeded
+        );
+        assert_eq!(ErrorCode::from_error(&MlprojError::Shed), ErrorCode::Shed);
+        assert!(matches!(
+            ErrorCode::DeadlineExceeded.into_error(String::new()),
+            MlprojError::DeadlineExceeded
+        ));
+        assert!(matches!(ErrorCode::Shed.into_error(String::new()), MlprojError::Shed));
+        // Client-local timeouts never travel as themselves.
+        assert_eq!(ErrorCode::from_error(&MlprojError::Timeout), ErrorCode::Internal);
     }
 
     #[test]
@@ -1992,6 +2219,7 @@ mod tests {
                 method: Method::Compositional,
                 layout: WireLayout::Matrix,
                 shape: vec![2, 3],
+                qos: Qos::default(),
             },
             total_elems: 6,
             checksum: ChecksumKind::Fnv1a64,

@@ -47,7 +47,7 @@ use std::collections::{HashMap, HashSet};
 use std::io::BufRead;
 use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
 use std::process::Child;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -56,7 +56,7 @@ use std::time::Instant;
 use crate::core::error::{MlprojError, Result};
 use crate::service::client::{Client, ClientPool};
 use crate::service::protocol::{
-    self, ChecksumKind, ErrorCode, Frame, ProjectMeta, ProjectRequest, RawHeader, V1, V2,
+    self, ChecksumKind, ErrorCode, Frame, ProjectMeta, ProjectRequest, Qos, RawHeader, V1, V2,
 };
 use crate::service::server::trigger_shutdown;
 use crate::service::stats::ServiceStats;
@@ -255,6 +255,9 @@ pub struct Router {
     shutdown: Arc<AtomicBool>,
     opts: RouterOptions,
     queue: Arc<ForwardQueue>,
+    /// Per-backend consecutive-`Busy` streak (reset on any success) —
+    /// the overload signal behind front-door class shedding.
+    busy_streaks: Arc<Vec<AtomicU64>>,
     workers: Vec<JoinHandle<()>>,
     /// Self-spawned backend processes (empty when attached); shut down
     /// with the router.
@@ -289,15 +292,18 @@ impl Router {
         let backends = Arc::new(backends);
         let telemetry = Arc::new(Telemetry::from_env());
         let queue = Arc::new(ForwardQueue::new(opts.queue_depth));
+        let busy_streaks: Arc<Vec<AtomicU64>> =
+            Arc::new((0..backends.len()).map(|_| AtomicU64::new(0)).collect());
         let workers = (0..opts.forward_workers.max(1))
             .map(|_| {
                 let queue = Arc::clone(&queue);
                 let backends = Arc::clone(&backends);
                 let stats = Arc::clone(&stats);
                 let telemetry = Arc::clone(&telemetry);
+                let busy_streaks = Arc::clone(&busy_streaks);
                 std::thread::spawn(move || {
                     while let Some(job) = queue.pop() {
-                        forward_one(&backends, &stats, &telemetry, job);
+                        forward_one(&backends, &stats, &telemetry, &busy_streaks, job);
                     }
                 })
             })
@@ -311,6 +317,7 @@ impl Router {
             shutdown: Arc::new(AtomicBool::new(false)),
             opts,
             queue,
+            busy_streaks,
             workers,
             children: Vec::new(),
         })
@@ -383,6 +390,7 @@ impl Router {
                 addr: self.addr,
                 opts: self.opts.clone(),
                 queue: Arc::clone(&self.queue),
+                busy_streaks: Arc::clone(&self.busy_streaks),
             };
             let peers_for_conn = Arc::clone(&peers);
             conns.push(std::thread::spawn(move || {
@@ -489,7 +497,8 @@ fn forward_one(
     backends: &[ClientPool],
     stats: &ServiceStats,
     telemetry: &Telemetry,
-    job: ForwardJob,
+    busy_streaks: &[AtomicU64],
+    mut job: ForwardJob,
 ) {
     ServiceStats::bump(&stats.routed_requests);
     let backend = job.backend;
@@ -501,6 +510,21 @@ fn forward_one(
     } else {
         0
     };
+    // Queue wait counts against the request's deadline budget: an
+    // already-expired job answers typed without burning an upstream
+    // round trip, and a survivor forwards only its *remaining* budget so
+    // the backend's own expiry check measures the whole pipeline.
+    if job.req.qos.deadline_us > 0 {
+        let elapsed_us =
+            Instant::now().saturating_duration_since(job.t_enqueue).as_micros() as u64;
+        let budget_us = job.req.qos.deadline_us as u64;
+        if elapsed_us >= budget_us {
+            ServiceStats::bump(&stats.expired_jobs);
+            job.finish(Err(MlprojError::DeadlineExceeded));
+            return;
+        }
+        job.req.qos.deadline_us = (budget_us - elapsed_us) as u32;
+    }
     let t0 = if telemetry_on { Some(Instant::now()) } else { None };
     let result = backends[backend].project(&job.req).map_err(|e| match e {
         MlprojError::Io(e) => MlprojError::Runtime(format!(
@@ -509,6 +533,18 @@ fn forward_one(
         )),
         other => other,
     });
+    match &result {
+        Ok(_) => {
+            busy_streaks[backend].store(0, Ordering::Relaxed);
+            if job.req.qos.deadline_us > 0 {
+                ServiceStats::bump(&stats.deadline_met);
+            }
+        }
+        Err(MlprojError::ServiceBusy) => {
+            busy_streaks[backend].fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {}
+    }
     if let Some(t0) = t0 {
         let project_ns = t0.elapsed().as_nanos() as u64;
         telemetry.record(Stage::Project, project_ns);
@@ -595,6 +631,20 @@ struct ConnCtx {
     addr: SocketAddr,
     opts: RouterOptions,
     queue: Arc<ForwardQueue>,
+    busy_streaks: Arc<Vec<AtomicU64>>,
+}
+
+/// Busy-streak length at which the router stops forwarding a class to a
+/// struggling backend (front-door shedding): the lower the class, the
+/// sooner it sheds. The protected class is never front-door shed — the
+/// backend's own admission control is the only authority that may refuse
+/// it.
+fn shed_streak(class: u8) -> u64 {
+    if class >= Qos::PROTECTED {
+        u64::MAX
+    } else {
+        2u64 << class // class 0 sheds after 2 consecutive Busy, 1 after 4, 2 after 8
+    }
 }
 
 /// Serve one downstream connection; the first frame pins its version.
@@ -669,6 +719,7 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
                     layout: meta.layout,
                     shape: meta.shape,
                     payload: std::mem::take(&mut payload),
+                    qos: meta.qos,
                 };
                 // Lockstep forwarding has no queue; the upstream round
                 // trip is the router's project stage.
@@ -1052,19 +1103,35 @@ fn v2_reader_loop(
                             });
                         } else {
                             let key_hash = req_stable_hash(&req);
-                            let job = ForwardJob {
-                                backend: (key_hash % ctx.backends.len() as u64) as usize,
-                                req,
-                                corr,
-                                reply: Some(tx.clone()),
-                                key_hash,
-                                decode_ns,
-                                t_enqueue: Instant::now(),
-                            };
-                            // A Busy rejection already delivered a typed
-                            // error on this corr through the channel.
-                            if ctx.queue.try_push(job).is_err() {
-                                ServiceStats::bump(&ctx.stats.busy_rejections);
+                            let backend = (key_hash % ctx.backends.len() as u64) as usize;
+                            // Front door: a backend answering Busy over
+                            // and over is overloaded — stop forwarding
+                            // the expendable classes to it instead of
+                            // paying a round trip to learn what we
+                            // already know. Sheds lowest class first.
+                            let streak = ctx.busy_streaks[backend].load(Ordering::Relaxed);
+                            if streak >= shed_streak(req.qos.class) {
+                                ServiceStats::bump(&ctx.stats.shed_jobs);
+                                let _ = tx.send(RouterMsg::Done {
+                                    corr,
+                                    result: Err(MlprojError::Shed),
+                                });
+                            } else {
+                                let job = ForwardJob {
+                                    backend,
+                                    req,
+                                    corr,
+                                    reply: Some(tx.clone()),
+                                    key_hash,
+                                    decode_ns,
+                                    t_enqueue: Instant::now(),
+                                };
+                                // A Busy rejection already delivered a
+                                // typed error on this corr through the
+                                // channel.
+                                if ctx.queue.try_push(job).is_err() {
+                                    ServiceStats::bump(&ctx.stats.busy_rejections);
+                                }
                             }
                         }
                     }
@@ -1461,6 +1528,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![y.rows(), y.cols()],
             payload: y.data().to_vec(),
+            qos: Qos::default(),
         }
     }
 
@@ -1485,6 +1553,7 @@ mod tests {
                 method: crate::projection::Method::Compositional,
                 layout: WireLayout::Matrix,
                 shape: vec![8, i],
+                qos: Qos::default(),
             })
             .collect();
         let assignments: Vec<usize> = metas.iter().map(|m| route(m, 4)).collect();
@@ -1635,5 +1704,62 @@ mod tests {
     #[test]
     fn router_requires_at_least_one_backend() {
         assert!(Router::bind("127.0.0.1:0", &[], RouterOptions::default()).is_err());
+    }
+
+    #[test]
+    fn front_door_shed_thresholds_scale_with_class() {
+        // Lower classes shed earlier; the protected class never sheds at
+        // the front door no matter how long the Busy streak runs.
+        assert_eq!(shed_streak(0), 2);
+        assert_eq!(shed_streak(1), 4);
+        assert_eq!(shed_streak(2), 8);
+        assert_eq!(shed_streak(Qos::PROTECTED), u64::MAX);
+        assert!(shed_streak(0) < shed_streak(1));
+        assert!(shed_streak(1) < shed_streak(2));
+    }
+
+    #[test]
+    fn qos_propagates_through_the_router_to_the_backend() {
+        let (addrs, backends) = spawn_backends_in_process(1);
+        let router = Router::bind("127.0.0.1:0", &addrs, RouterOptions::default()).unwrap();
+        let raddr = router.local_addr();
+        let rhandle = router.spawn();
+
+        let mut rng = Rng::new(93);
+        let spec = ProjectionSpec::l1inf(0.9);
+        let y = Matrix::random_uniform(8, 12, -1.0, 1.0, &mut rng);
+        let expect = spec.project_matrix(&y).unwrap();
+        let mut req = wire_request(&spec, &y);
+        req.qos = Qos::new(Qos::PROTECTED, 10_000_000).unwrap(); // 10 s budget
+
+        let mut conn = crate::service::PipelinedConn::connect(raddr).unwrap();
+        let corr = conn.submit(&req).unwrap();
+        let (got, result) = conn.recv().unwrap();
+        assert_eq!(got, corr);
+        assert_eq!(result.unwrap(), expect.data());
+
+        // The backend — not just the router — saw the deadline: its own
+        // deadline_met counter ticked, so the qos trailer survived the
+        // hop with a (shrunken) remaining budget.
+        let mut bctl = Client::connect(addrs[0].as_str()).unwrap();
+        let bstats = bctl.stats().unwrap();
+        let met =
+            bstats.iter().find(|(k, _)| *k == "deadline_met").map(|(_, v)| *v).unwrap_or(0);
+        assert_eq!(met, 1, "backend deadline_met should tick once");
+
+        // The router counted the met deadline on its own stats too.
+        let mut ctl = Client::connect(raddr).unwrap();
+        let rstats = ctl.stats().unwrap();
+        let rmet =
+            rstats.iter().find(|(k, _)| *k == "deadline_met").map(|(_, v)| *v).unwrap_or(0);
+        assert_eq!(rmet, 1, "router deadline_met should tick once");
+
+        ctl.shutdown().unwrap();
+        rhandle.join().unwrap();
+        for h in backends {
+            let mut c = Client::connect(h.addr()).unwrap();
+            c.shutdown().unwrap();
+            h.join().unwrap();
+        }
     }
 }

@@ -34,12 +34,12 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::core::error::{MlprojError, Result};
 use crate::projection::ExecBackend;
 use crate::service::cache::{PlanKey, ShardedPlanCache};
-use crate::service::protocol::{ErrorCode, ProjectRequest};
+use crate::service::protocol::{ErrorCode, ProjectRequest, Qos};
 use crate::service::stats::ServiceStats;
 use crate::service::telemetry::{Stage, Telemetry, TraceRecord, STAGE_COUNT};
 
@@ -233,6 +233,10 @@ pub struct Job {
     t_enqueue: Instant,
     /// The request's frame-decode duration (threaded into traces).
     decode_ns: u64,
+    /// Priority class `0..=3` (higher sheds later; 3 is protected).
+    class: u8,
+    /// Absolute expiry instant (`None` = no deadline).
+    deadline: Option<Instant>,
 }
 
 impl Job {
@@ -244,6 +248,8 @@ impl Job {
             reply: Some(ReplyTo::Slot(reply)),
             t_enqueue: Instant::now(),
             decode_ns: 0,
+            class: Qos::DEFAULT_CLASS,
+            deadline: None,
         }
     }
 
@@ -261,6 +267,8 @@ impl Job {
             reply: Some(ReplyTo::Channel { tx, corr }),
             t_enqueue: Instant::now(),
             decode_ns: 0,
+            class: Qos::DEFAULT_CLASS,
+            deadline: None,
         }
     }
 
@@ -269,6 +277,25 @@ impl Job {
     pub fn with_decode_ns(mut self, ns: u64) -> Job {
         self.decode_ns = ns;
         self
+    }
+
+    /// Attach the request's QoS: priority class and deadline budget
+    /// (measured from enqueue time, so queue wait counts against it).
+    pub fn with_qos(mut self, qos: &Qos) -> Job {
+        self.class = qos.class.min(Qos::PROTECTED);
+        self.deadline = (qos.deadline_us > 0)
+            .then(|| self.t_enqueue + Duration::from_micros(qos.deadline_us as u64));
+        self
+    }
+
+    /// The job's priority class.
+    pub fn class(&self) -> u8 {
+        self.class
+    }
+
+    /// True once the job's deadline (if any) has passed `now`.
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now > d)
     }
 
     /// Correlation id of the originating request (0 for slot-routed
@@ -301,13 +328,51 @@ impl Drop for Job {
 }
 
 /// Clone an error by round-tripping it through its wire classification —
-/// one error may need to fan out to every job of a failed batch.
+/// one error may need to fan out to every job of a failed batch. Unit
+/// variants clone without formatting (the overload path allocates
+/// nothing).
 fn clone_error(e: &MlprojError) -> MlprojError {
-    ErrorCode::from_error(e).into_error(format!("{e}"))
+    match e {
+        MlprojError::ServiceBusy => MlprojError::ServiceBusy,
+        MlprojError::DeadlineExceeded => MlprojError::DeadlineExceeded,
+        MlprojError::Shed => MlprojError::Shed,
+        other => ErrorCode::from_error(other).into_error(format!("{other}")),
+    }
+}
+
+/// Queue length at which a class starts being shed, for a queue of
+/// `depth` slots. Class 3 ([`Qos::PROTECTED`]) is admitted to the last
+/// slot; lower classes give up headroom earlier — class 0 at half the
+/// queue, classes 1 and 2 near the top (for small queues the integer
+/// fractions collapse to `depth`, preserving pre-QoS behaviour).
+fn admit_limit(depth: usize, class: u8) -> usize {
+    match class {
+        0 => (depth - depth / 2).max(1),
+        1 => (depth - depth / 8).max(1),
+        2 => (depth - depth / 16).max(1),
+        _ => depth,
+    }
+}
+
+/// Scale the same-key micro-batch window with queue depth: the base
+/// window when the queue is mostly idle (latency-optimal), 2× past half
+/// full, 4× past three-quarters full (throughput-optimal — batch harder
+/// exactly when queueing delay already dominates).
+fn adaptive_batch_max(base: usize, qlen: usize, depth: usize) -> usize {
+    if qlen * 4 >= depth * 3 {
+        base * 4
+    } else if qlen * 2 >= depth {
+        base * 2
+    } else {
+        base
+    }
 }
 
 /// Bounded MPMC job queue (mutex + condvar; `try_push` never blocks).
-struct JobQueue {
+/// Public so the allocation-audit and overload tests can drive the
+/// admission path directly, without racing a live worker.
+#[doc(hidden)]
+pub struct JobQueue {
     queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
     depth: usize,
@@ -315,7 +380,8 @@ struct JobQueue {
 }
 
 impl JobQueue {
-    fn new(depth: usize) -> Self {
+    /// New queue bounded at `depth` jobs.
+    pub fn new(depth: usize) -> Self {
         JobQueue {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -324,31 +390,70 @@ impl JobQueue {
         }
     }
 
-    /// Enqueue without blocking; `ServiceBusy` when full or shutting
-    /// down. A rejected job is *finished* with `ServiceBusy` (not merely
-    /// dropped), so channel-routed submitters see a typed `Busy` reply
-    /// with the right correlation id rather than a generic teardown
-    /// error.
-    fn try_push(&self, job: Job) -> Result<()> {
+    /// Enqueue without blocking, with class-aware admission:
+    ///
+    /// * past the job's class high-water mark (but below a full queue)
+    ///   the job is **shed** — finished with [`MlprojError::Shed`];
+    /// * at a full queue, an arrival of a *higher* class evicts the
+    ///   oldest queued job of the lowest class below it (the victim is
+    ///   finished with `Shed`) and takes its slot;
+    /// * otherwise the arrival is rejected with `ServiceBusy`.
+    ///
+    /// Every rejected or evicted job is *finished* (not merely dropped),
+    /// so channel-routed submitters see a typed reply with the right
+    /// correlation id rather than a generic teardown error. Counters:
+    /// sheds bump `stats.shed_jobs`, full-queue rejections bump
+    /// `stats.busy_rejections`.
+    pub fn try_push(&self, job: Job, stats: &ServiceStats) -> Result<()> {
         if self.shutdown.load(Ordering::Acquire) {
+            ServiceStats::bump(&stats.busy_rejections);
             job.finish(Err(MlprojError::ServiceBusy));
             return Err(MlprojError::ServiceBusy);
         }
         let mut q = self.queue.lock().expect("job queue poisoned");
-        if q.len() >= self.depth {
+        let len = q.len();
+        if len >= self.depth {
+            // Full queue: a higher-class arrival may evict the oldest
+            // queued job of the lowest class below its own.
+            let victim = q
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| j.class < job.class)
+                .min_by_key(|(i, j)| (j.class, *i))
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    let evicted = q.remove(i).expect("index checked");
+                    q.push_back(job);
+                    drop(q);
+                    ServiceStats::bump(&stats.shed_jobs);
+                    evicted.finish(Err(MlprojError::Shed));
+                    self.cv.notify_one();
+                    Ok(())
+                }
+                None => {
+                    drop(q);
+                    ServiceStats::bump(&stats.busy_rejections);
+                    job.finish(Err(MlprojError::ServiceBusy));
+                    Err(MlprojError::ServiceBusy)
+                }
+            }
+        } else if len >= admit_limit(self.depth, job.class) {
             drop(q);
-            job.finish(Err(MlprojError::ServiceBusy));
-            return Err(MlprojError::ServiceBusy);
+            ServiceStats::bump(&stats.shed_jobs);
+            job.finish(Err(MlprojError::Shed));
+            Err(MlprojError::Shed)
+        } else {
+            q.push_back(job);
+            drop(q);
+            self.cv.notify_one();
+            Ok(())
         }
-        q.push_back(job);
-        drop(q);
-        self.cv.notify_one();
-        Ok(())
     }
 
     /// Blocking pop; `None` once shutdown is signalled *and* the queue
     /// has drained (pending jobs are always completed).
-    fn pop(&self) -> Option<Job> {
+    pub fn pop(&self) -> Option<Job> {
         let mut q = self.queue.lock().expect("job queue poisoned");
         loop {
             if let Some(job) = q.pop_front() {
@@ -362,16 +467,18 @@ impl JobQueue {
     }
 
     /// Steal every queued job whose key matches `batch[0]`, preserving
-    /// the relative order of the rest; at most `batch_max` jobs total.
-    /// `batch` must arrive holding exactly the first job.
-    fn fill_batch(&self, batch: &mut Vec<Job>, batch_max: usize) {
+    /// the relative order of the rest. The window is `batch_max` scaled
+    /// by [`adaptive_batch_max`]: wider as the queue fills. `batch` must
+    /// arrive holding exactly the first job.
+    pub fn fill_batch(&self, batch: &mut Vec<Job>, batch_max: usize) {
         debug_assert_eq!(batch.len(), 1);
         if batch_max <= 1 {
             return;
         }
         let mut q = self.queue.lock().expect("job queue poisoned");
+        let window = adaptive_batch_max(batch_max, q.len(), self.depth);
         let mut i = 0;
-        while i < q.len() && batch.len() < batch_max {
+        while i < q.len() && batch.len() < window {
             if q[i].key == batch[0].key {
                 batch.push(q.remove(i).expect("index checked"));
             } else {
@@ -380,7 +487,8 @@ impl JobQueue {
         }
     }
 
-    fn begin_shutdown(&self) {
+    /// Signal shutdown and wake every waiter.
+    pub fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
         self.cv.notify_all();
     }
@@ -474,12 +582,11 @@ impl Scheduler {
         &self.telemetry
     }
 
-    /// Enqueue a job without blocking; `ServiceBusy` under backpressure.
+    /// Enqueue a job without blocking; `ServiceBusy` when the queue is
+    /// full, `Shed` when the job's class lost at its high-water mark
+    /// (counters bump inside the queue's admission path).
     pub fn try_submit(&self, job: Job) -> Result<()> {
-        self.queue.try_push(job).map_err(|e| {
-            ServiceStats::bump(&self.stats.busy_rejections);
-            e
-        })
+        self.queue.try_push(job, &self.stats)
     }
 
     /// Convenience for one-shot callers: enqueue a wire request and
@@ -542,6 +649,26 @@ pub fn run_batch(
     if batch.len() >= 2 {
         ServiceStats::add(&stats.batched_requests, batch.len() as u64);
     }
+    // Deadline expiry at dequeue: a job whose budget ran out in the
+    // queue gets a typed reply and never reaches the kernel — computing
+    // a result nobody waits for only deepens the overload.
+    let has_deadlines = batch.iter().any(|j| j.deadline.is_some());
+    if has_deadlines {
+        let now = t_run.unwrap_or_else(Instant::now);
+        let mut i = 0;
+        while i < batch.len() {
+            if batch[i].expired(now) {
+                let job = batch.remove(i);
+                ServiceStats::bump(&stats.expired_jobs);
+                job.finish(Err(MlprojError::DeadlineExceeded));
+            } else {
+                i += 1;
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
+    }
     // Answer jobs whose payload length cannot match the plan's shape
     // individually, so one malformed request never fails its batch.
     let want = batch[0].key.shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
@@ -580,7 +707,13 @@ pub fn run_batch(
     match outcome {
         Ok(Ok(())) => {
             let batch_size = batch.len() as u32;
+            let t_done = has_deadlines.then(Instant::now);
             for (job, payload) in batch.drain(..).zip(payloads.drain(..)) {
+                if let (Some(done), Some(deadline)) = (t_done, job.deadline) {
+                    if done <= deadline {
+                        ServiceStats::bump(&stats.deadline_met);
+                    }
+                }
                 // Sampled tracing: stack-only record construction, so a
                 // warm worker still allocates nothing. Stages downstream
                 // of this point (serialize/write) and the shared batch
@@ -632,6 +765,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![y.rows(), y.cols()],
             payload: y.data().to_vec(),
+            qos: Qos::default(),
         }
     }
 
@@ -723,11 +857,13 @@ mod tests {
         // A full queue must answer a pipelined job with ServiceBusy on
         // its own corr id — not a generic teardown error.
         let q = JobQueue::new(1);
+        let stats = ServiceStats::new();
         let (tx, rx) = std::sync::mpsc::channel();
         let key = test_key(vec![2]);
-        q.try_push(Job::with_channel(key.clone(), vec![0.0; 2], tx.clone(), 1)).unwrap();
+        q.try_push(Job::with_channel(key.clone(), vec![0.0; 2], tx.clone(), 1), &stats)
+            .unwrap();
         assert!(matches!(
-            q.try_push(Job::with_channel(key, vec![0.0; 2], tx, 2)),
+            q.try_push(Job::with_channel(key, vec![0.0; 2], tx, 2), &stats),
             Err(MlprojError::ServiceBusy)
         ));
         match rx.recv().unwrap() {
@@ -741,22 +877,135 @@ mod tests {
     #[test]
     fn queue_rejects_when_full_and_drains_on_shutdown() {
         let q = JobQueue::new(2);
+        let stats = ServiceStats::new();
         let slot = ReplySlot::new();
         let mk = || Job::new(test_key(vec![4]), vec![0.0; 4], Arc::clone(&slot));
-        q.try_push(mk()).unwrap();
-        q.try_push(mk()).unwrap();
-        assert!(matches!(q.try_push(mk()), Err(MlprojError::ServiceBusy)));
+        q.try_push(mk(), &stats).unwrap();
+        q.try_push(mk(), &stats).unwrap();
+        assert!(matches!(q.try_push(mk(), &stats), Err(MlprojError::ServiceBusy)));
         // Shutdown still drains queued jobs before pop() returns None.
         q.begin_shutdown();
-        assert!(matches!(q.try_push(mk()), Err(MlprojError::ServiceBusy)));
+        assert!(matches!(q.try_push(mk(), &stats), Err(MlprojError::ServiceBusy)));
         assert!(q.pop().is_some());
         assert!(q.pop().is_some());
         assert!(q.pop().is_none());
     }
 
     #[test]
+    fn admission_sheds_low_classes_at_their_watermarks() {
+        use std::sync::atomic::Ordering as O;
+        // Depth 16: class 0 sheds at 8 queued, class 1 at 14, class 2 at
+        // 15, class 3 only when full.
+        assert_eq!(admit_limit(16, 0), 8);
+        assert_eq!(admit_limit(16, 1), 14);
+        assert_eq!(admit_limit(16, 2), 15);
+        assert_eq!(admit_limit(16, 3), 16);
+        // Small queues collapse to pre-QoS behaviour for classes 1+.
+        assert_eq!(admit_limit(2, 1), 2);
+        assert_eq!(admit_limit(2, 0), 1);
+
+        let q = JobQueue::new(16);
+        let stats = ServiceStats::new();
+        let slot = ReplySlot::new();
+        let mk = |class: u8| {
+            Job::new(test_key(vec![4]), vec![0.0; 4], Arc::clone(&slot))
+                .with_qos(&Qos { class, deadline_us: 0 })
+        };
+        for _ in 0..8 {
+            q.try_push(mk(1), &stats).unwrap();
+        }
+        // Half full: class 0 sheds with a typed error, class 1 admits.
+        assert!(matches!(q.try_push(mk(0), &stats), Err(MlprojError::Shed)));
+        assert!(matches!(slot.take(), Err(MlprojError::Shed)));
+        q.try_push(mk(1), &stats).unwrap();
+        assert_eq!(stats.shed_jobs.load(O::Relaxed), 1);
+        assert_eq!(stats.busy_rejections.load(O::Relaxed), 0);
+    }
+
+    #[test]
+    fn full_queue_evicts_the_lowest_class_for_a_protected_arrival() {
+        use std::sync::atomic::Ordering as O;
+        let q = JobQueue::new(2);
+        let stats = ServiceStats::new();
+        let low = ReplySlot::new();
+        let mid = ReplySlot::new();
+        let hi = ReplySlot::new();
+        let mk = |class: u8, slot: &Arc<ReplySlot>| {
+            Job::new(test_key(vec![4]), vec![0.0; 4], Arc::clone(slot))
+                .with_qos(&Qos { class, deadline_us: 0 })
+        };
+        q.try_push(mk(0, &low), &stats).unwrap();
+        q.try_push(mk(2, &mid), &stats).unwrap();
+        // Full queue: the protected arrival evicts the class-0 job.
+        q.try_push(mk(3, &hi), &stats).unwrap();
+        assert!(matches!(low.take(), Err(MlprojError::Shed)));
+        assert_eq!(stats.shed_jobs.load(O::Relaxed), 1);
+        // The queue now holds class 2 + class 3; another protected
+        // arrival evicts the class-2 job, and once the queue is all
+        // protected, a protected arrival gets Busy (never a shed).
+        let hi2 = ReplySlot::new();
+        q.try_push(mk(3, &hi2), &stats).unwrap();
+        assert!(matches!(mid.take(), Err(MlprojError::Shed)));
+        let hi3 = ReplySlot::new();
+        assert!(matches!(q.try_push(mk(3, &hi3), &stats), Err(MlprojError::ServiceBusy)));
+        assert!(matches!(hi3.take(), Err(MlprojError::ServiceBusy)));
+        assert_eq!(stats.shed_jobs.load(O::Relaxed), 2);
+        assert_eq!(stats.busy_rejections.load(O::Relaxed), 1);
+        // The surviving jobs are both protected.
+        assert_eq!(q.pop().unwrap().class(), 3);
+        assert_eq!(q.pop().unwrap().class(), 3);
+    }
+
+    #[test]
+    fn adaptive_batch_window_widens_with_queue_depth() {
+        assert_eq!(adaptive_batch_max(8, 0, 64), 8);
+        assert_eq!(adaptive_batch_max(8, 31, 64), 8);
+        assert_eq!(adaptive_batch_max(8, 32, 64), 16, "2x past half full");
+        assert_eq!(adaptive_batch_max(8, 48, 64), 32, "4x past three quarters");
+        assert_eq!(adaptive_batch_max(8, 64, 64), 32);
+    }
+
+    #[test]
+    fn expired_jobs_are_dropped_at_dequeue_with_a_typed_reply() {
+        use std::sync::atomic::Ordering as O;
+        let stats = Arc::new(ServiceStats::new());
+        let cache = ShardedPlanCache::new(1, 8, Arc::clone(&stats));
+        let backend = ExecBackend::Serial;
+        let key = PlanKey {
+            norms: vec![Norm::Linf, Norm::L1],
+            eta_bits: 1.0f64.to_bits(),
+            l1_algo: crate::projection::l1::L1Algo::Condat,
+            method: crate::projection::Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![3, 4],
+        };
+        let expired_slot = ReplySlot::new();
+        let live_slot = ReplySlot::new();
+        let expired = Job::new(key.clone(), vec![0.5; 12], Arc::clone(&expired_slot))
+            .with_qos(&Qos { class: 1, deadline_us: 1 });
+        let live = Job::new(key.clone(), vec![0.5; 12], Arc::clone(&live_slot))
+            .with_qos(&Qos { class: 1, deadline_us: 10_000_000 });
+        std::thread::sleep(Duration::from_millis(5)); // 1µs budget long gone
+        let mut batch = vec![expired, live];
+        run_batch(
+            0,
+            &cache,
+            &stats,
+            &Telemetry::disabled(),
+            &backend,
+            &mut batch,
+            &mut Vec::new(),
+        );
+        assert!(matches!(expired_slot.take(), Err(MlprojError::DeadlineExceeded)));
+        assert!(live_slot.take().is_ok(), "in-budget job still runs");
+        assert_eq!(stats.expired_jobs.load(O::Relaxed), 1);
+        assert_eq!(stats.deadline_met.load(O::Relaxed), 1);
+    }
+
+    #[test]
     fn fill_batch_coalesces_only_matching_keys() {
         let q = JobQueue::new(16);
+        let stats = ServiceStats::new();
         let slot = ReplySlot::new();
         let key_a = test_key(vec![4]);
         let key_b = test_key(vec![8]);
@@ -764,10 +1013,10 @@ mod tests {
             Job::new(k.clone(), vec![tag; k.shape[0]], Arc::clone(&slot))
         };
         // Queue: A1 B1 A2 A3; first dequeued job is A0.
-        q.try_push(mk(&key_a, 1.0)).unwrap();
-        q.try_push(mk(&key_b, 9.0)).unwrap();
-        q.try_push(mk(&key_a, 2.0)).unwrap();
-        q.try_push(mk(&key_a, 3.0)).unwrap();
+        q.try_push(mk(&key_a, 1.0), &stats).unwrap();
+        q.try_push(mk(&key_b, 9.0), &stats).unwrap();
+        q.try_push(mk(&key_a, 2.0), &stats).unwrap();
+        q.try_push(mk(&key_a, 3.0), &stats).unwrap();
         let mut batch = vec![mk(&key_a, 0.0)];
         q.fill_batch(&mut batch, 3);
         // batch_max=3: A0 + A1 + A2; A3 and B1 stay queued, order kept.
@@ -784,9 +1033,10 @@ mod tests {
     #[test]
     fn fill_batch_disabled_at_one() {
         let q = JobQueue::new(4);
+        let stats = ServiceStats::new();
         let slot = ReplySlot::new();
         let key = test_key(vec![2]);
-        q.try_push(Job::new(key.clone(), vec![0.0; 2], Arc::clone(&slot))).unwrap();
+        q.try_push(Job::new(key.clone(), vec![0.0; 2], Arc::clone(&slot)), &stats).unwrap();
         let mut batch = vec![Job::new(key, vec![1.0; 2], slot)];
         q.fill_batch(&mut batch, 1);
         assert_eq!(batch.len(), 1);
@@ -950,6 +1200,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![3, 4],
             payload: vec![0.0; 12],
+            qos: Qos::default(),
         };
         let err = sched.submit_and_wait(bad).unwrap_err();
         assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
@@ -969,6 +1220,7 @@ mod tests {
             layout: WireLayout::Matrix,
             shape: vec![3, 4],
             payload: vec![0.0; 12],
+            qos: Qos::default(),
         };
         bad.payload.pop(); // 11 elements for a 3x4 shape
         let err = sched.submit_and_wait(bad).unwrap_err();

@@ -315,7 +315,8 @@ fn serve_v1(
                 let key = PlanKey::from_meta(&meta);
                 slot.reset();
                 let job = Job::new(key, std::mem::take(&mut payload), Arc::clone(&slot))
-                    .with_decode_ns(decode_ns);
+                    .with_decode_ns(decode_ns)
+                    .with_qos(&meta.qos);
                 match scheduler.try_submit(job).and_then(|()| slot.take()) {
                     Ok(projected) => {
                         // Serialize stage: reply accounting + header
@@ -633,7 +634,8 @@ fn v2_reader_loop(
             return;
         }
         let job = Job::with_channel(PlanKey::from_meta(&meta), payload, tx.clone(), corr)
-            .with_decode_ns(decode_ns);
+            .with_decode_ns(decode_ns)
+            .with_qos(&meta.qos);
         // A Busy rejection already delivered a typed error through the
         // channel (with this corr); nothing more to do here.
         let _ = scheduler.try_submit(job);

@@ -20,6 +20,14 @@ pub struct ServiceStats {
     pub responses_err: AtomicU64,
     /// Requests rejected with `Busy` because the job queue was full.
     pub busy_rejections: AtomicU64,
+    /// Requests shed under overload (priority class lost at a queue
+    /// high-water mark; answered with a typed `Shed` error).
+    pub shed_jobs: AtomicU64,
+    /// Requests whose deadline expired before execution (answered with a
+    /// typed `DeadlineExceeded` error, never computed).
+    pub expired_jobs: AtomicU64,
+    /// Deadline-carrying requests that completed within their budget.
+    pub deadline_met: AtomicU64,
     /// Micro-batches executed by scheduler workers.
     pub batches: AtomicU64,
     /// Requests that rode in a batch of size ≥ 2.
@@ -109,6 +117,9 @@ impl ServiceStats {
             ("responses_ok", ld(&self.responses_ok)),
             ("responses_err", ld(&self.responses_err)),
             ("busy_rejections", ld(&self.busy_rejections)),
+            ("shed_jobs", ld(&self.shed_jobs)),
+            ("expired_jobs", ld(&self.expired_jobs)),
+            ("deadline_met", ld(&self.deadline_met)),
             ("batches", ld(&self.batches)),
             ("batched_requests", ld(&self.batched_requests)),
             ("batch_size_max", ld(&self.batch_size_max)),

@@ -229,7 +229,7 @@ fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
     use mlproj::service::protocol::{
         decode_server_frame, read_raw_frame, Frame, MAX_BODY_BYTES,
     };
-    use mlproj::service::{PayloadPool, ProjectRequest, WireLayout};
+    use mlproj::service::{PayloadPool, ProjectRequest, Qos, WireLayout};
 
     let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let mut rng = Rng::new(48);
@@ -243,6 +243,7 @@ fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
         layout: WireLayout::Matrix,
         shape: vec![16, 24],
         payload,
+        qos: Qos::default(),
     };
     let bytes = Frame::Project(req).encode_v2(1).unwrap();
     let pool = PayloadPool::new(4);
@@ -275,6 +276,85 @@ fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
         "a fresh payload vector must cost extra ({fresh} vs {pooled}) — \
          otherwise the pool pins nothing"
     );
+}
+
+#[test]
+fn warm_admission_and_shed_decisions_allocate_nothing() {
+    // The overload control plane must not cost allocations exactly when
+    // the process is starved: with a warm queue, every `try_push`
+    // outcome — admit, watermark shed, full-queue eviction, typed Busy
+    // rejection — and the matching pops run allocation-free. Sheds and
+    // evictions *finish* their jobs with unit-variant errors through
+    // reusable `ReplySlot`s, so the typed replies are free too.
+    use mlproj::projection::l1::L1Algo;
+    use mlproj::projection::Method;
+    use mlproj::service::scheduler::{Job, JobQueue, ReplySlot};
+    use mlproj::service::{PlanKey, Qos, ServiceStats, WireLayout};
+
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let stats = ServiceStats::new();
+    const DEPTH: usize = 8;
+    let queue = JobQueue::new(DEPTH);
+    let key = PlanKey {
+        norms: vec![Norm::Linf, Norm::L1],
+        eta_bits: 1.0f64.to_bits(),
+        l1_algo: L1Algo::Condat,
+        method: Method::Compositional,
+        layout: WireLayout::Matrix,
+        shape: vec![16, 24],
+    };
+    let mk_job = |class: u8| {
+        Job::new(key.clone(), vec![0.0f32; 4], ReplySlot::new())
+            .with_qos(&Qos::new(class, 0).unwrap())
+    };
+
+    // Warm-up: grow the deque to full depth once, then drain it.
+    for _ in 0..DEPTH {
+        queue.try_push(mk_job(Qos::PROTECTED), &stats).unwrap();
+    }
+    for _ in 0..DEPTH {
+        let mut job = queue.pop().unwrap();
+        let p = std::mem::take(&mut job.payload);
+        job.finish(Ok(p));
+    }
+
+    // Pre-build every job (key clones allocate) outside the window.
+    let first_low = mk_job(0);
+    let head: Vec<Job> = (0..4).map(|_| mk_job(Qos::PROTECTED)).collect();
+    let watermark_low = mk_job(0);
+    let tail: Vec<Job> = (0..3).map(|_| mk_job(Qos::PROTECTED)).collect();
+    let evictor = mk_job(Qos::PROTECTED);
+    let rejected = mk_job(Qos::PROTECTED);
+
+    let before = alloc_calls();
+    queue.try_push(first_low, &stats).unwrap();
+    for j in head {
+        queue.try_push(j, &stats).unwrap();
+    }
+    // Past class 0's high-water mark: shed with a typed reply.
+    assert!(queue.try_push(watermark_low, &stats).is_err());
+    for j in tail {
+        queue.try_push(j, &stats).unwrap();
+    }
+    // Full queue: the protected arrival evicts the queued class-0 job…
+    queue.try_push(evictor, &stats).unwrap();
+    // …and with only protected jobs left, the next arrival gets Busy.
+    assert!(queue.try_push(rejected, &stats).is_err());
+    for _ in 0..DEPTH {
+        let mut job = queue.pop().unwrap();
+        let p = std::mem::take(&mut job.payload);
+        job.finish(Ok(p));
+    }
+    let after = alloc_calls();
+    assert_eq!(
+        after - before,
+        0,
+        "warm admission/shed/evict decisions allocated {} times",
+        after - before
+    );
+
+    assert_eq!(stats.shed_jobs.load(Ordering::Relaxed), 2, "watermark shed + eviction");
+    assert_eq!(stats.busy_rejections.load(Ordering::Relaxed), 1, "full protected queue");
 }
 
 #[test]

@@ -11,7 +11,7 @@ use mlproj::projection::l1::L1Algo;
 use mlproj::projection::{Method, Norm};
 use mlproj::service::protocol::{
     self, decode_client_frame, decode_server_frame, read_raw_frame, BeginInfo, ChecksumKind,
-    Frame, ProjectMeta, ProjectRequest, WireLayout, HEADER_BYTES, MAX_BODY_BYTES,
+    Frame, ProjectMeta, ProjectRequest, Qos, WireLayout, HEADER_BYTES, MAX_BODY_BYTES,
 };
 use mlproj::service::ErrorCode;
 
@@ -23,6 +23,7 @@ fn sample_meta() -> ProjectMeta {
         method: Method::Compositional,
         layout: WireLayout::Matrix,
         shape: vec![3, 4],
+        qos: Qos::default(),
     }
 }
 
@@ -35,7 +36,16 @@ fn sample_request() -> ProjectRequest {
         layout: WireLayout::Matrix,
         shape: vec![3, 4],
         payload: (0..12).map(|i| i as f32 - 6.0).collect(),
+        qos: Qos::default(),
     }
+}
+
+/// [`sample_request`] with a non-default QoS, so the optional trailer is
+/// actually on the wire for the truncation and bit-flip sweeps.
+fn sample_request_qos() -> ProjectRequest {
+    let mut req = sample_request();
+    req.qos = Qos::new(Qos::PROTECTED, 250_000).unwrap();
+    req
 }
 
 /// Every frame shape the protocol can produce, in both wire versions.
@@ -45,6 +55,7 @@ fn sample_frames() -> Vec<Vec<u8>> {
         Frame::Pong { max_body: None },
         Frame::Pong { max_body: Some(65536) },
         Frame::Project(sample_request()),
+        Frame::Project(sample_request_qos()),
         Frame::ProjectOk(vec![1.0, -2.0, 0.5]),
         Frame::Error { code: ErrorCode::Invalid, msg: "η mismatch ✓".into() },
         Frame::StatsRequest,
@@ -151,6 +162,39 @@ fn oversized_and_lying_length_fields_are_rejected_before_allocation() {
     let total_off = begin.len() - 9; // total_elems u64 + checksum u8 tail
     begin[total_off..total_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
     assert!(matches!(Frame::decode(&begin), Err(MlprojError::Protocol(_))));
+}
+
+#[test]
+fn malformed_qos_trailers_are_rejected_in_both_versions() {
+    // The trailer is all-or-nothing: a Project body may end in exactly 0
+    // or exactly 5 extra bytes. Partially-present trailers and
+    // out-of-range class bytes must both fail typed, never skew the
+    // payload decode.
+    for (label, bytes) in [
+        ("v1", Frame::Project(sample_request_qos()).encode().unwrap()),
+        ("v2", Frame::Project(sample_request_qos()).encode_v2(7).unwrap()),
+    ] {
+        // Chop 1..=4 trailer bytes (and fix the header length so framing
+        // itself stays valid).
+        for chop in 1..=4usize {
+            let mut cut = bytes.clone();
+            cut.truncate(bytes.len() - chop);
+            let body_len = (cut.len() - HEADER_BYTES) as u32;
+            cut[8..12].copy_from_slice(&body_len.to_le_bytes());
+            assert!(
+                matches!(Frame::decode(&cut), Err(MlprojError::Protocol(_))),
+                "{label}: {chop}-byte-short trailer decoded"
+            );
+        }
+        // Class byte out of range (the trailer's first byte).
+        let mut bad_class = bytes.clone();
+        let class_off = bad_class.len() - 5;
+        bad_class[class_off] = 9;
+        assert!(
+            matches!(Frame::decode(&bad_class), Err(MlprojError::Protocol(_))),
+            "{label}: class 9 decoded"
+        );
+    }
 }
 
 #[test]

@@ -31,13 +31,14 @@ use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
 use mlproj::core::sort::{l1_norm, l2_norm, max_abs};
 use mlproj::core::tensor::Tensor;
+use mlproj::core::MlprojError;
 use mlproj::projection::l1::{project_l1_inplace_with, L1Algo};
 use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
 use mlproj::projection::norms::aggregate_leading_norm;
 use mlproj::projection::{ExecBackend, Method, Norm, ProjectionSpec};
 use mlproj::service::{
-    Client, PipelinedConn, ProjectRequest, Router, RouterOptions, SchedulerConfig, Server,
-    WireLayout,
+    Client, PipelinedConn, ProjectRequest, Qos, Router, RouterOptions, SchedulerConfig,
+    Server, WireLayout,
 };
 
 const CASES: usize = 200;
@@ -423,6 +424,7 @@ fn case_to_request(case: &Case, payload: &[f32]) -> ProjectRequest {
         layout: if case.matrix_layout { WireLayout::Matrix } else { WireLayout::Tensor },
         shape: case.shape.clone(),
         payload: payload.to_vec(),
+        qos: Qos::default(),
     }
 }
 
@@ -513,6 +515,121 @@ fn wire_traffic_matches_in_process_plans() {
     drive_wire_traffic(&addr.to_string(), "server", 0x5EA1);
 
     let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn overloaded_wire_replies_remain_bit_identical() {
+    // Induced overload: a deliberately starved server (1 worker, 4-slot
+    // queue) is flooded with mixed-priority pipelined traffic behind a
+    // slow protected anchor job. Typed overload outcomes — Shed /
+    // ServiceBusy / DeadlineExceeded — are expected and tolerated, but
+    // two invariants must hold for every single reply: (a) any reply
+    // that *succeeds* is bit-identical to the in-process plan result,
+    // and (b) any reply that fails carries a typed overload error, never
+    // a corrupted payload or a generic teardown message.
+    let master = master_seed();
+    let cfg = SchedulerConfig { workers: 1, queue_depth: 4, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    // Three slow tri-level anchors with distinct radii (distinct plan
+    // keys, so same-key micro-batching cannot coalesce them): the first
+    // occupies the worker, the second carries a 1µs deadline it cannot
+    // survive queued behind the first, the third fills the queue.
+    let mut rng = Rng::new(master ^ 0x0BAD);
+    let mut slow_data = vec![0.0f32; 48 * 48 * 48];
+    rng.fill_uniform(&mut slow_data, -2.0, 2.0);
+    let slow_reqs: Vec<(ProjectRequest, Vec<f32>)> = [2.0, 1.9, 1.8]
+        .iter()
+        .map(|&eta| {
+            let spec = ProjectionSpec::new(vec![Norm::L1, Norm::L1, Norm::L1], eta);
+            let expect = spec
+                .project_tensor(&Tensor::from_vec(vec![48, 48, 48], slow_data.clone()).unwrap())
+                .unwrap();
+            let req = ProjectRequest {
+                norms: spec.norms.clone(),
+                eta: spec.eta,
+                l1_algo: spec.l1_algo,
+                method: spec.method,
+                layout: WireLayout::Tensor,
+                shape: vec![48, 48, 48],
+                payload: slow_data.clone(),
+                qos: Qos::new(Qos::PROTECTED, 0).unwrap(),
+            };
+            (req, expect.into_vec())
+        })
+        .collect();
+
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let (mut ok, mut shed, mut busy, mut expired) = (0u64, 0u64, 0u64, 0u64);
+    const ROUNDS: usize = 4;
+    for round in 0..ROUNDS {
+        let case_seed = master ^ 0x0BAD ^ (round as u64).wrapping_mul(GOLDEN);
+        let case = draw_case(&mut Rng::new(case_seed));
+        let mut plan = compile(&case, ExecBackend::Serial);
+        let mut case_expect = case.payloads[0].clone();
+        let ctx = format!("overload round {round} (seed {case_seed}, master {master})");
+        plan.project_inplace(&mut case_expect).expect(&ctx);
+
+        // corr → the bit-exact payload this submission must produce if
+        // it succeeds at all.
+        let mut expect_for: std::collections::HashMap<u16, &[f32]> =
+            std::collections::HashMap::new();
+        for (i, (req, expect)) in slow_reqs.iter().enumerate() {
+            let mut req = req.clone();
+            if i == 1 {
+                req.qos = Qos::new(Qos::PROTECTED, 1).expect(&ctx);
+            }
+            let corr = conn.submit(&req).expect(&ctx);
+            expect_for.insert(corr, expect);
+        }
+        // The burst: one small request per class, submitted while the
+        // worker is pinned on the anchor and protected jobs hold the
+        // queue — class 0 sheds at its half-queue watermark, and once
+        // the queue fills, higher-class arrivals evict the lowest
+        // queued class below them (whose jobs reply Shed) or bounce
+        // Busy when no victim exists.
+        for class in 0..Qos::CLASSES as u8 {
+            let mut req = case_to_request(&case, &case.payloads[0]);
+            req.qos = Qos::new(class, 0).expect(&ctx);
+            let corr = conn.submit(&req).expect(&ctx);
+            expect_for.insert(corr, &case_expect);
+        }
+
+        while conn.in_flight() > 0 {
+            let (corr, result) = conn.recv().expect(&ctx);
+            let want = expect_for
+                .remove(&corr)
+                .unwrap_or_else(|| panic!("untracked correlation id {corr}: {ctx}"));
+            match result {
+                Ok(got) => {
+                    assert_eq!(got, want, "overloaded success diverged (corr {corr}): {ctx}");
+                    ok += 1;
+                }
+                Err(MlprojError::Shed) => shed += 1,
+                Err(MlprojError::ServiceBusy) => busy += 1,
+                Err(MlprojError::DeadlineExceeded) => expired += 1,
+                Err(e) => panic!("non-overload error under overload: {e}: {ctx}"),
+            }
+        }
+        assert!(expect_for.is_empty(), "unanswered submissions: {ctx}");
+    }
+
+    // The run genuinely degraded — and degraded *gracefully*.
+    assert!(ok >= ROUNDS as u64, "the protected anchor must complete every round");
+    assert!(shed >= 1, "no class was ever shed: ok={ok} busy={busy} expired={expired}");
+    assert!(expired >= 1, "the 1µs-deadline anchor never expired");
+
+    // The typed replies we counted are the same events the server
+    // counted: nothing was dropped silently.
+    let mut ctl = Client::connect(addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    let get = |n: &str| stats.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0);
+    assert_eq!(get("shed_jobs"), shed, "{stats:?}");
+    assert_eq!(get("expired_jobs"), expired, "{stats:?}");
     ctl.shutdown().unwrap();
     handle.join().unwrap();
 }

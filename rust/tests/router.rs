@@ -15,8 +15,8 @@ use mlproj::core::rng::Rng;
 use mlproj::core::MlprojError;
 use mlproj::projection::ProjectionSpec;
 use mlproj::service::{
-    spawn_backends, BackendSpawnOptions, Client, PipelinedConn, ProjectRequest, Router,
-    RouterOptions, SchedulerConfig, Server, WireLayout,
+    spawn_backends, BackendSpawnOptions, Client, PipelinedConn, ProjectRequest, Qos,
+    Router, RouterOptions, SchedulerConfig, Server, WireLayout,
 };
 
 fn stat(pairs: &[(String, u64)], name: &str) -> u64 {
@@ -32,6 +32,7 @@ fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
         layout: WireLayout::Matrix,
         shape: vec![y.rows(), y.cols()],
         payload: y.data().to_vec(),
+        qos: Qos::default(),
     }
 }
 

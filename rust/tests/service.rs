@@ -12,7 +12,8 @@ use mlproj::core::MlprojError;
 use mlproj::projection::{Method, Norm, ProjectionSpec};
 use mlproj::service::protocol::{self, Frame};
 use mlproj::service::{
-    Client, PipelinedConn, ProjectRequest, SchedulerConfig, ServeOptions, Server, WireLayout,
+    Client, PipelinedConn, ProjectRequest, Qos, SchedulerConfig, ServeOptions, Server,
+    WireLayout,
 };
 
 fn stat(pairs: &[(String, u64)], name: &str) -> u64 {
@@ -28,6 +29,7 @@ fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
         layout: WireLayout::Matrix,
         shape: vec![y.rows(), y.cols()],
         payload: y.data().to_vec(),
+        qos: Qos::default(),
     }
 }
 
@@ -297,6 +299,7 @@ fn corrupted_chunk_checksum_is_rejected_and_the_connection_survives() {
             method: req.method,
             layout: req.layout,
             shape: req.shape.clone(),
+            qos: Qos::default(),
         },
         total_elems: req.payload.len() as u64,
         checksum: protocol::ChecksumKind::Fnv1a64,
@@ -363,6 +366,7 @@ fn pipelined_flood_gets_typed_busy_backpressure() {
         layout: WireLayout::Tensor,
         shape: vec![48, 48, 48],
         payload: slow_data.clone(),
+        qos: Qos::default(),
     };
     let slow_expect = slow_spec
         .project_tensor(&Tensor::from_vec(vec![48, 48, 48], slow_data).unwrap())
@@ -437,6 +441,7 @@ fn per_connection_inflight_cap_rejects_with_busy() {
         layout: WireLayout::Tensor,
         shape: vec![48, 48, 48],
         payload: slow_data,
+        qos: Qos::default(),
     };
     let fast = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
     let fast_spec = ProjectionSpec::l1inf(0.5);
