@@ -1349,9 +1349,16 @@ fn loadgen_open(
         let schedule =
             open_schedule(per_tenant, duration_s, burst_on_ms, burst_off_ms, &mut sched_rng);
         let mode = t % 3;
-        let class =
-            if mode == 2 { Qos::DEFAULT_CLASS } else { (t % Qos::CLASSES) as u8 };
-        let qos = Qos::new(class, deadline_us as u32)?;
+        // Chunked streams carry no QoS trailer (the client refuses to
+        // chunk a QoS'd request), so chunked tenants run fully default:
+        // default class AND no deadline — their SLO is still measured
+        // client-side against `slo_ns`.
+        let qos = if mode == 2 {
+            Qos::default()
+        } else {
+            Qos::new((t % Qos::CLASSES) as u8, deadline_us as u32)?
+        };
+        let class = qos.class;
         let payload_seed = seed + 7000 + t as u64;
         handles.push(std::thread::spawn(move || -> Result<(u8, ClassAgg)> {
             let mut rng = Rng::new(payload_seed);

@@ -274,9 +274,13 @@ impl PipelinedConn {
     /// Send one projection request without waiting for its reply;
     /// returns the correlation id to match against [`PipelinedConn::recv`].
     /// Payloads past the chunk threshold (default: the frame-body cap)
-    /// stream automatically as chunked frames.
+    /// stream automatically as chunked frames — except non-default-QoS
+    /// requests, which are refused with a typed error instead (chunked
+    /// streams carry no QoS trailer, so auto-chunking would silently
+    /// strip their class and deadline at the backend).
     pub fn submit(&mut self, req: &ProjectRequest) -> Result<u16> {
         if Self::project_body_len(req) > self.chunk_threshold {
+            Self::reject_chunked_qos(req)?;
             let elems = (self.chunk_threshold / 4).clamp(1, DEFAULT_CHUNK_ELEMS);
             return self.submit_chunked(req, elems);
         }
@@ -286,12 +290,32 @@ impl PipelinedConn {
         Ok(corr)
     }
 
+    /// Chunked streams have no QoS trailer on the wire, so a request
+    /// carrying a class or deadline cannot travel chunked without the
+    /// backend silently treating it as default-class traffic. Refuse,
+    /// typed, so the caller decides: drop the QoS or stay whole-frame.
+    fn reject_chunked_qos(req: &ProjectRequest) -> Result<()> {
+        if req.qos.is_default() {
+            Ok(())
+        } else {
+            Err(MlprojError::invalid(format!(
+                "a non-default-QoS request (class {}, deadline {} µs) cannot be chunked: \
+                 chunked streams carry no QoS trailer, so its class and deadline would be \
+                 silently dropped — send it whole-frame (raise the chunk threshold) or at \
+                 the default QoS",
+                req.qos.class, req.qos.deadline_us
+            )))
+        }
+    }
+
     /// Send one projection request as an explicit chunked stream
     /// (`ProjectBegin` / `ProjectChunk` / checksummed `ProjectEnd`) with
     /// at most `chunk_elems` elements per chunk, regardless of size.
-    /// Chunked uploads carry no qos trailer — they run at the default
-    /// class (deadline-sensitive traffic should stay whole-frame).
+    /// Chunked uploads carry no qos trailer, so only default-QoS
+    /// requests may travel chunked (deadline-sensitive traffic must stay
+    /// whole-frame); others are refused with a typed error.
     pub fn submit_chunked(&mut self, req: &ProjectRequest, chunk_elems: usize) -> Result<u16> {
+        Self::reject_chunked_qos(req)?;
         let corr = self.alloc_corr()?;
         protocol::write_project_chunked(&mut self.stream, corr, req, chunk_elems)?;
         self.inflight.insert(corr, req.payload.len());
@@ -830,6 +854,42 @@ mod tests {
         let corr = conn.submit_chunked(&wire_request(&spec, &y), 64).unwrap();
         let (got_corr, result) = conn.recv().unwrap();
         assert_eq!(got_corr, corr);
+        assert_eq!(result.unwrap(), expect.data());
+
+        conn.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn qos_requests_refuse_to_chunk_instead_of_dropping_their_class() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut conn = PipelinedConn::connect(handle.addr()).unwrap();
+        conn.set_chunk_threshold(256);
+
+        let mut rng = Rng::new(33);
+        let y = Matrix::random_uniform(16, 40, -2.0, 2.0, &mut rng); // body > threshold
+        let spec = ProjectionSpec::l1inf(1.0);
+        let mut req = wire_request(&spec, &y);
+        req.qos = Qos::new(2, 5_000_000).unwrap();
+
+        // Chunked streams carry no QoS trailer, so both the auto-chunk
+        // path and the explicit one refuse a QoS'd request, typed,
+        // without sending anything — silently demoting it to the
+        // default class at the backend is never an option.
+        let err = conn.submit(&req).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+        let err = conn.submit_chunked(&req, 64).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidArgument(_)), "{err}");
+        assert_eq!(conn.in_flight(), 0, "refused requests must not leak corr ids");
+
+        // The connection stays healthy: the same payload at the default
+        // QoS auto-chunks and round-trips bit-identically.
+        req.qos = Qos::default();
+        let expect = spec.project_matrix(&y).unwrap();
+        let corr = conn.submit(&req).unwrap();
+        let (got, result) = conn.recv().unwrap();
+        assert_eq!(got, corr);
         assert_eq!(result.unwrap(), expect.data());
 
         conn.shutdown().unwrap();

@@ -291,8 +291,10 @@ impl Default for Qos {
     }
 }
 
-/// Byte length of the optional QoS trailer.
-const QOS_TRAILER_BYTES: usize = 5;
+/// Byte length of the optional QoS trailer. `pub(crate)` so the client
+/// can size whole frames (auto-chunk decisions) without re-deriving the
+/// trailer layout.
+pub(crate) const QOS_TRAILER_BYTES: usize = 5;
 
 /// Append the QoS trailer to a `Project` body — only when non-default,
 /// so legacy peers keep seeing their exact bytes.

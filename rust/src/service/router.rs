@@ -258,6 +258,9 @@ pub struct Router {
     /// Per-backend consecutive-`Busy` streak (reset on any success) —
     /// the overload signal behind front-door class shedding.
     busy_streaks: Arc<Vec<AtomicU64>>,
+    /// Per-backend count of front-door shed decisions, driving the
+    /// half-open probe cadence (see [`should_shed`]).
+    shed_ticks: Arc<Vec<AtomicU64>>,
     workers: Vec<JoinHandle<()>>,
     /// Self-spawned backend processes (empty when attached); shut down
     /// with the router.
@@ -294,6 +297,8 @@ impl Router {
         let queue = Arc::new(ForwardQueue::new(opts.queue_depth));
         let busy_streaks: Arc<Vec<AtomicU64>> =
             Arc::new((0..backends.len()).map(|_| AtomicU64::new(0)).collect());
+        let shed_ticks: Arc<Vec<AtomicU64>> =
+            Arc::new((0..backends.len()).map(|_| AtomicU64::new(0)).collect());
         let workers = (0..opts.forward_workers.max(1))
             .map(|_| {
                 let queue = Arc::clone(&queue);
@@ -318,6 +323,7 @@ impl Router {
             opts,
             queue,
             busy_streaks,
+            shed_ticks,
             workers,
             children: Vec::new(),
         })
@@ -391,6 +397,7 @@ impl Router {
                 opts: self.opts.clone(),
                 queue: Arc::clone(&self.queue),
                 busy_streaks: Arc::clone(&self.busy_streaks),
+                shed_ticks: Arc::clone(&self.shed_ticks),
             };
             let peers_for_conn = Arc::clone(&peers);
             conns.push(std::thread::spawn(move || {
@@ -513,11 +520,13 @@ fn forward_one(
     // Queue wait counts against the request's deadline budget: an
     // already-expired job answers typed without burning an upstream
     // round trip, and a survivor forwards only its *remaining* budget so
-    // the backend's own expiry check measures the whole pipeline.
-    if job.req.qos.deadline_us > 0 {
+    // the backend's own expiry check measures the whole pipeline. The
+    // original budget is kept aside — met/missed is judged against it,
+    // not the shrunken copy the backend sees.
+    let budget_us = job.req.qos.deadline_us as u64;
+    if budget_us > 0 {
         let elapsed_us =
             Instant::now().saturating_duration_since(job.t_enqueue).as_micros() as u64;
-        let budget_us = job.req.qos.deadline_us as u64;
         if elapsed_us >= budget_us {
             ServiceStats::bump(&stats.expired_jobs);
             job.finish(Err(MlprojError::DeadlineExceeded));
@@ -536,7 +545,14 @@ fn forward_one(
     match &result {
         Ok(_) => {
             busy_streaks[backend].store(0, Ordering::Relaxed);
-            if job.req.qos.deadline_us > 0 {
+            // Met only when the reply actually beat the original budget:
+            // a backend may admit a request within its remaining budget
+            // and still answer late — that reply succeeds but missed its
+            // deadline, and counting it would overstate SLO attainment.
+            if budget_us > 0
+                && Instant::now().saturating_duration_since(job.t_enqueue).as_micros() as u64
+                    <= budget_us
+            {
                 ServiceStats::bump(&stats.deadline_met);
             }
         }
@@ -632,6 +648,7 @@ struct ConnCtx {
     opts: RouterOptions,
     queue: Arc<ForwardQueue>,
     busy_streaks: Arc<Vec<AtomicU64>>,
+    shed_ticks: Arc<Vec<AtomicU64>>,
 }
 
 /// Busy-streak length at which the router stops forwarding a class to a
@@ -645,6 +662,25 @@ fn shed_streak(class: u8) -> u64 {
     } else {
         2u64 << class // class 0 sheds after 2 consecutive Busy, 1 after 4, 2 after 8
     }
+}
+
+/// Of every `SHED_PROBE_EVERY` consecutive front-door shed decisions for
+/// one backend, the last is forwarded anyway as a half-open probe.
+const SHED_PROBE_EVERY: u64 = 16;
+
+/// Front-door shed decision with half-open recovery. A class whose
+/// busy-streak threshold has been crossed is shed — except that every
+/// [`SHED_PROBE_EVERY`]th would-be-shed request per backend goes through
+/// as a probe. A probe that succeeds resets the backend's streak (in
+/// [`forward_one`]) and reopens every class; a probe that bounces `Busy`
+/// keeps the door shut. Without the probe, a backend whose streak
+/// crossed a class's threshold would stay black-holed for that class
+/// forever once it recovered.
+fn should_shed(streak: u64, class: u8, shed_tick: &AtomicU64) -> bool {
+    if streak < shed_streak(class) {
+        return false;
+    }
+    shed_tick.fetch_add(1, Ordering::Relaxed) % SHED_PROBE_EVERY != SHED_PROBE_EVERY - 1
 }
 
 /// Serve one downstream connection; the first frame pins its version.
@@ -1108,9 +1144,11 @@ fn v2_reader_loop(
                             // and over is overloaded — stop forwarding
                             // the expendable classes to it instead of
                             // paying a round trip to learn what we
-                            // already know. Sheds lowest class first.
+                            // already know. Sheds lowest class first;
+                            // periodic probes re-test the backend so a
+                            // recovered one reopens (see should_shed).
                             let streak = ctx.busy_streaks[backend].load(Ordering::Relaxed);
-                            if streak >= shed_streak(req.qos.class) {
+                            if should_shed(streak, req.qos.class, &ctx.shed_ticks[backend]) {
                                 ServiceStats::bump(&ctx.stats.shed_jobs);
                                 let _ = tx.send(RouterMsg::Done {
                                     corr,
@@ -1716,6 +1754,36 @@ mod tests {
         assert_eq!(shed_streak(Qos::PROTECTED), u64::MAX);
         assert!(shed_streak(0) < shed_streak(1));
         assert!(shed_streak(1) < shed_streak(2));
+    }
+
+    #[test]
+    fn front_door_shed_probes_reopen_a_shed_class() {
+        let tick = AtomicU64::new(0);
+        // Below the class threshold nothing sheds and the probe counter
+        // never advances.
+        assert!(!should_shed(1, 0, &tick));
+        assert!(!should_shed(3, 1, &tick));
+        assert_eq!(tick.load(Ordering::Relaxed), 0);
+        // At/above threshold the class sheds — but exactly one request
+        // out of every SHED_PROBE_EVERY goes through as a half-open
+        // probe, so a recovered backend can reset its streak and reopen.
+        let mut probes = 0u64;
+        for i in 0..3 * SHED_PROBE_EVERY {
+            if !should_shed(100, 0, &tick) {
+                probes += 1;
+                assert_eq!(
+                    i % SHED_PROBE_EVERY,
+                    SHED_PROBE_EVERY - 1,
+                    "probe fired off-cadence at decision {i}"
+                );
+            }
+        }
+        assert_eq!(probes, 3, "one probe per SHED_PROBE_EVERY decisions");
+        // The protected class is never front-door shed, no matter the
+        // streak, and never consumes a probe slot.
+        let before = tick.load(Ordering::Relaxed);
+        assert!(!should_shed(1 << 40, Qos::PROTECTED, &tick));
+        assert_eq!(tick.load(Ordering::Relaxed), before);
     }
 
     #[test]
