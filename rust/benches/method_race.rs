@@ -1,0 +1,166 @@
+//! Method race: the exact projection family vs its bi-level /
+//! compositional counterparts, per norm family.
+//!
+//! Three groups, one matrix of seeded uniform data:
+//!
+//! * **l1inf** — ν = [linf, l1]: the bi-level surrogate (compositional
+//!   kernel) vs the presorted exact baselines (`ExactNewton`,
+//!   `ExactSortScan`) vs the sort-free Chau–Wohlberg `ExactLinf1Newton`;
+//! * **intersect** — Su–Yu ℓ1∩ℓ2 and ℓ1∩ℓ∞ vs the naive feasible
+//!   composition `P_{B2/B∞} ∘ P_{B1}` (feasible but not the nearest
+//!   point — the distance gap is the point of the exact solver);
+//! * **l21** — ν = [l2, l1]: the compositional bi-level ℓ2,1 vs the
+//!   energy-aggregated `BilevelL21Energy` (`proj_l21ball`-style).
+//!
+//! Per entrant: median wall time, Euclidean distance to the input (what
+//! exactness buys), and the zero-column fraction (the sparsity the SAE
+//! trainer actually consumes). Emits the flat KV artifact
+//! `target/bench_out/BENCH_methods.json`; CI gates on its keys.
+//!
+//! `MLPROJ_BENCH_FAST=1 cargo bench --bench method_race` for a quick pass.
+
+use mlproj::bench::{black_box, emit_json_kv, Bencher};
+use mlproj::core::matrix::Matrix;
+use mlproj::core::rng::Rng;
+use mlproj::projection::{Method, Norm, ProjectionSpec};
+
+fn dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn zero_col_fraction(x: &[f32], rows: usize, cols: usize) -> f64 {
+    let zero =
+        (0..cols).filter(|&j| x[j * rows..(j + 1) * rows].iter().all(|&v| v == 0.0)).count();
+    zero as f64 / cols.max(1) as f64
+}
+
+fn main() {
+    let fast = std::env::var("MLPROJ_BENCH_FAST").is_ok();
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(29);
+    let (n, m) = if fast { (100, 1000) } else { (400, 4000) };
+    let y = Matrix::random_uniform(n, m, -1.0, 1.0, &mut rng);
+    let mut kv: Vec<(String, f64)> = vec![("n".into(), n as f64), ("m".into(), m as f64)];
+
+    // --- group 1: exact vs bi-level on the ℓ1,∞ ball -------------------
+    let eta = 1.0;
+    println!("== l1inf (η={eta}) ==");
+    let l1inf_race: [(&str, Method); 4] = [
+        ("bilevel", Method::Compositional),
+        ("exact_newton", Method::ExactNewton),
+        ("exact_sortscan", Method::ExactSortScan),
+        ("exact_linf1_newton", Method::ExactLinf1Newton),
+    ];
+    for (label, method) in l1inf_race {
+        let spec = ProjectionSpec::l1inf(eta).with_method(method);
+        let mut plan = spec.compile_for_matrix(n, m).expect("compile");
+        let mut x = y.clone();
+        let meas = b.measure(format!("l1inf {label}"), || {
+            x.data_mut().copy_from_slice(y.data());
+            plan.project_matrix_inplace(&mut x).expect("project");
+            black_box(&x);
+        });
+        let d = dist(x.data(), y.data());
+        let z = zero_col_fraction(x.data(), n, m);
+        println!(
+            "l1inf  {label:20} {:10.3} ms  dist {d:12.4}  zero-cols {z:.3}",
+            meas.median_ms()
+        );
+        kv.push((format!("l1inf_{label}_ms"), meas.median_ms()));
+        kv.push((format!("l1inf_{label}_dist"), d));
+        kv.push((format!("l1inf_{label}_zero_cols"), z));
+    }
+
+    // --- group 2: exact intersections vs the feasible composition ------
+    let flat_shape = vec![n * m];
+    let l1: f64 = y.data().iter().map(|v| v.abs() as f64).sum();
+    let l2: f64 = y.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let linf: f64 = y.data().iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64));
+    println!("== intersect (‖y‖₁={l1:.1}, ‖y‖₂={l2:.1}, ‖y‖∞={linf:.2}) ==");
+    let isect_race: [(&str, Method, Norm, f64); 2] = [
+        ("l1l2", Method::IntersectL1L2, Norm::L2, 0.25 * l2),
+        ("l1linf", Method::IntersectL1Linf, Norm::Linf, 0.10 * linf),
+    ];
+    for (label, method, second, eta2) in isect_race {
+        let eta_i = 0.05 * l1;
+        let spec = ProjectionSpec::new(vec![Norm::L1, second], eta_i)
+            .with_method(method)
+            .with_eta2(eta2);
+        let mut plan = spec.compile(&flat_shape).expect("compile");
+        let mut x = y.data().to_vec();
+        let meas = b.measure(format!("intersect {label}"), || {
+            x.copy_from_slice(y.data());
+            plan.project_inplace(&mut x).expect("project");
+            black_box(&x);
+        });
+        let d = dist(&x, y.data());
+        println!(
+            "isect  {label:20} {:10.3} ms  dist {d:12.4}",
+            meas.median_ms()
+        );
+        kv.push((format!("intersect_{label}_ms"), meas.median_ms()));
+        kv.push((format!("intersect_{label}_dist"), d));
+
+        // The feasible-but-not-nearest composition P_second ∘ P_l1.
+        let mut p1 = ProjectionSpec::flat(Norm::L1, eta_i).compile(&flat_shape).expect("compile");
+        let mut p2 = ProjectionSpec::flat(second, eta2).compile(&flat_shape).expect("compile");
+        let meas = b.measure(format!("compose {label}"), || {
+            x.copy_from_slice(y.data());
+            p1.project_inplace(&mut x).expect("project");
+            p2.project_inplace(&mut x).expect("project");
+            black_box(&x);
+        });
+        let d = dist(&x, y.data());
+        println!(
+            "isect  {label:13}compose {:10.3} ms  dist {d:12.4}",
+            meas.median_ms()
+        );
+        kv.push((format!("intersect_{label}_compose_ms"), meas.median_ms()));
+        kv.push((format!("intersect_{label}_compose_dist"), d));
+    }
+
+    // --- group 3: energy-aggregated vs compositional bi-level ℓ2,1 -----
+    let col_l2_sum: f64 = (0..m)
+        .map(|j| {
+            y.data()[j * n..(j + 1) * n]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .sum();
+    let eta21 = 0.02 * col_l2_sum;
+    println!("== l21 (η={eta21:.2}) ==");
+    let l21_race: [(&str, Method); 2] =
+        [("bilevel", Method::Compositional), ("energy", Method::BilevelL21Energy)];
+    for (label, method) in l21_race {
+        let spec = ProjectionSpec::bilevel(Norm::L1, Norm::L2, eta21).with_method(method);
+        let mut plan = spec.compile_for_matrix(n, m).expect("compile");
+        let mut x = y.clone();
+        let meas = b.measure(format!("l21 {label}"), || {
+            x.data_mut().copy_from_slice(y.data());
+            plan.project_matrix_inplace(&mut x).expect("project");
+            black_box(&x);
+        });
+        let d = dist(x.data(), y.data());
+        let z = zero_col_fraction(x.data(), n, m);
+        println!(
+            "l21    {label:20} {:10.3} ms  dist {d:12.4}  zero-cols {z:.3}",
+            meas.median_ms()
+        );
+        kv.push((format!("l21_{label}_ms"), meas.median_ms()));
+        kv.push((format!("l21_{label}_dist"), d));
+        kv.push((format!("l21_{label}_zero_cols"), z));
+    }
+
+    let refs: Vec<(&str, f64)> = kv.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let path = mlproj::bench::exit_on_emit_error(emit_json_kv("BENCH_methods.json", &refs));
+    println!("json -> {}", path.display());
+}

@@ -29,6 +29,14 @@ pub enum ProjectionKind {
     ExactL1InfSortScan,
     /// Exact ℓ_{1,1} (flattened ℓ1; unstructured comparator).
     ExactL11,
+    /// Exact ℓ_{∞,1}, sort-free Newton (Chau–Wohlberg).
+    ExactLinf1,
+    /// Su–Yu projection onto `B^1_η ∩ B^2_{η₂}` (needs `eta2`).
+    IntersectL1L2,
+    /// Su–Yu projection onto `B^1_η ∩ B^∞_{η₂}` (needs `eta2`).
+    IntersectL1Linf,
+    /// Energy-aggregated bi-level ℓ_{2,1} (`proj_l21ball`-style).
+    BilevelL21Energy,
     /// Bi-level ℓ_{1,∞} through the AOT Pallas artifact (PJRT path).
     PallasHlo,
 }
@@ -45,6 +53,10 @@ impl ProjectionKind {
             "exact_l1inf" | "exact_l1inf_newton" | "chu" => ProjectionKind::ExactL1InfNewton,
             "exact_l1inf_sortscan" | "quattoni" => ProjectionKind::ExactL1InfSortScan,
             "exact_l11" | "l11" => ProjectionKind::ExactL11,
+            "exact_linf1" | "exact_linf1_newton" | "chau" => ProjectionKind::ExactLinf1,
+            "intersect_l1l2" => ProjectionKind::IntersectL1L2,
+            "intersect_l1linf" => ProjectionKind::IntersectL1Linf,
+            "bilevel_l21_energy" | "l21_energy" => ProjectionKind::BilevelL21Energy,
             "pallas" | "pallas_hlo" => ProjectionKind::PallasHlo,
             other => {
                 return Err(MlprojError::Config(format!("unknown projection `{other}`")))
@@ -63,6 +75,10 @@ impl ProjectionKind {
             ProjectionKind::ExactL1InfNewton => "exact_l1inf",
             ProjectionKind::ExactL1InfSortScan => "exact_l1inf_sortscan",
             ProjectionKind::ExactL11 => "exact_l11",
+            ProjectionKind::ExactLinf1 => "exact_linf1",
+            ProjectionKind::IntersectL1L2 => "intersect_l1l2",
+            ProjectionKind::IntersectL1Linf => "intersect_l1linf",
+            ProjectionKind::BilevelL21Energy => "bilevel_l21_energy",
             ProjectionKind::PallasHlo => "pallas_hlo",
         }
     }
@@ -71,7 +87,9 @@ impl ProjectionKind {
     /// attach a pool via [`ProjectionSpec::with_backend`]). `None` for the
     /// unconstrained baseline and for [`ProjectionKind::PallasHlo`], which
     /// runs through the AOT artifact instead of the native operator.
-    pub fn spec(&self, eta: f64) -> Option<ProjectionSpec> {
+    /// `eta2` is the second radius of the intersection kinds; every other
+    /// kind ignores it.
+    pub fn spec(&self, eta: f64, eta2: f64) -> Option<ProjectionSpec> {
         match self {
             ProjectionKind::None | ProjectionKind::PallasHlo => None,
             ProjectionKind::BilevelL1Inf => Some(ProjectionSpec::l1inf(eta)),
@@ -87,6 +105,15 @@ impl ProjectionKind {
             ProjectionKind::ExactL11 => Some(
                 ProjectionSpec::bilevel(Norm::L1, Norm::L1, eta)
                     .with_method(Method::ExactFlatL1),
+            ),
+            ProjectionKind::ExactLinf1 => {
+                Some(ProjectionSpec::l1inf(eta).with_method(Method::ExactLinf1Newton))
+            }
+            ProjectionKind::IntersectL1L2 => Some(ProjectionSpec::intersect_l1l2(eta, eta2)),
+            ProjectionKind::IntersectL1Linf => Some(ProjectionSpec::intersect_l1linf(eta, eta2)),
+            ProjectionKind::BilevelL21Energy => Some(
+                ProjectionSpec::bilevel(Norm::L1, Norm::L2, eta)
+                    .with_method(Method::BilevelL21Energy),
             ),
         }
     }
@@ -145,6 +172,10 @@ pub struct TrainConfig {
     pub projection: ProjectionKind,
     /// Ball radius η.
     pub eta: f64,
+    /// Second ball radius η₂ (used only by the intersection projections;
+    /// defaults to 1.0 so flipping `projection` alone never zeroes the
+    /// weights).
+    pub eta2: f64,
     /// Epochs of the first descent.
     pub epochs1: usize,
     /// Epochs of the second (masked) descent.
@@ -174,6 +205,7 @@ impl Default for TrainConfig {
             dataset: DatasetKind::Synthetic,
             projection: ProjectionKind::BilevelL1Inf,
             eta: 1.0,
+            eta2: 1.0,
             epochs1: 30,
             epochs2: 30,
             lr: 1e-3,
@@ -217,6 +249,7 @@ impl TrainConfig {
             "dataset" => self.dataset = DatasetKind::parse(v)?,
             "projection" => self.projection = ProjectionKind::parse(v)?,
             "eta" => self.eta = parse_num(key, v)?,
+            "eta2" => self.eta2 = parse_num(key, v)?,
             "epochs1" => self.epochs1 = parse_num::<f64>(key, v)? as usize,
             "epochs2" => self.epochs2 = parse_num::<f64>(key, v)? as usize,
             "lr" => self.lr = parse_num::<f64>(key, v)? as f32,
@@ -238,6 +271,9 @@ impl TrainConfig {
     pub fn validate(&self) -> Result<()> {
         if self.eta < 0.0 {
             return Err(MlprojError::Config("eta must be >= 0".into()));
+        }
+        if self.eta2 < 0.0 {
+            return Err(MlprojError::Config("eta2 must be >= 0".into()));
         }
         if !(0.0 < self.test_frac && self.test_frac < 1.0) {
             return Err(MlprojError::Config("test_frac must be in (0,1)".into()));
@@ -292,6 +328,7 @@ mod tests {
              dataset = \"lung\"\n\
              projection = bilevel_l1inf\n\
              eta = 1.5   # radius\n\
+             eta2 = 0.7\n\
              epochs1 = 10\n\
              epochs2 = 20\n\
              lr = 0.01\n\
@@ -303,6 +340,7 @@ mod tests {
         assert_eq!(cfg.dataset, DatasetKind::Lung);
         assert_eq!(cfg.projection, ProjectionKind::BilevelL1Inf);
         assert!((cfg.eta - 1.5).abs() < 1e-12);
+        assert!((cfg.eta2 - 0.7).abs() < 1e-12);
         assert_eq!(cfg.epochs1, 10);
         assert_eq!(cfg.epochs2, 20);
         assert_eq!(cfg.repeats, 3);
@@ -328,6 +366,9 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.test_frac = 1.5;
         assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.eta2 = -0.1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -338,40 +379,107 @@ mod tests {
             ProjectionKind::ExactL1InfSortScan
         );
         assert_eq!(ProjectionKind::parse("baseline").unwrap(), ProjectionKind::None);
-        for k in [
-            ProjectionKind::None,
-            ProjectionKind::BilevelL1Inf,
-            ProjectionKind::BilevelL11,
-            ProjectionKind::BilevelL12,
-            ProjectionKind::BilevelL21,
-            ProjectionKind::ExactL1InfNewton,
-            ProjectionKind::ExactL1InfSortScan,
-            ProjectionKind::ExactL11,
-            ProjectionKind::PallasHlo,
-        ] {
+        assert_eq!(ProjectionKind::parse("chau").unwrap(), ProjectionKind::ExactLinf1);
+        assert_eq!(
+            ProjectionKind::parse("l21_energy").unwrap(),
+            ProjectionKind::BilevelL21Energy
+        );
+        for k in ALL_KINDS {
             assert_eq!(ProjectionKind::parse(k.label()).unwrap(), k);
+        }
+    }
+
+    /// Every [`ProjectionKind`] variant, via a compile-time-exhaustive
+    /// match: adding a variant without extending this list will not build.
+    const ALL_KINDS: [ProjectionKind; 13] = [
+        ProjectionKind::None,
+        ProjectionKind::BilevelL1Inf,
+        ProjectionKind::BilevelL11,
+        ProjectionKind::BilevelL12,
+        ProjectionKind::BilevelL21,
+        ProjectionKind::ExactL1InfNewton,
+        ProjectionKind::ExactL1InfSortScan,
+        ProjectionKind::ExactL11,
+        ProjectionKind::ExactLinf1,
+        ProjectionKind::IntersectL1L2,
+        ProjectionKind::IntersectL1Linf,
+        ProjectionKind::BilevelL21Energy,
+        ProjectionKind::PallasHlo,
+    ];
+
+    fn kind_index(k: ProjectionKind) -> usize {
+        match k {
+            ProjectionKind::None => 0,
+            ProjectionKind::BilevelL1Inf => 1,
+            ProjectionKind::BilevelL11 => 2,
+            ProjectionKind::BilevelL12 => 3,
+            ProjectionKind::BilevelL21 => 4,
+            ProjectionKind::ExactL1InfNewton => 5,
+            ProjectionKind::ExactL1InfSortScan => 6,
+            ProjectionKind::ExactL11 => 7,
+            ProjectionKind::ExactLinf1 => 8,
+            ProjectionKind::IntersectL1L2 => 9,
+            ProjectionKind::IntersectL1Linf => 10,
+            ProjectionKind::BilevelL21Energy => 11,
+            ProjectionKind::PallasHlo => 12,
+        }
+    }
+
+    #[test]
+    fn all_kinds_list_is_exhaustive_and_every_method_is_reachable() {
+        for (i, &k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(kind_index(k), i, "{} out of order", k.label());
+        }
+        // Every operator-layer `Method` is reachable from some config
+        // token — the coordinator can drive the full method family.
+        for method in Method::ALL {
+            assert!(
+                ALL_KINDS
+                    .iter()
+                    .filter_map(|k| k.spec(1.0, 0.5))
+                    .any(|s| s.method == method),
+                "no ProjectionKind reaches method `{}`",
+                method.label()
+            );
         }
     }
 
     #[test]
     fn projection_kind_specs_map_to_operator() {
-        let spec = ProjectionKind::BilevelL1Inf.spec(1.5).unwrap();
+        let spec = ProjectionKind::BilevelL1Inf.spec(1.5, 0.0).unwrap();
         assert_eq!(spec.norms, vec![Norm::Linf, Norm::L1]);
         assert_eq!(spec.method, Method::Compositional);
         assert!((spec.eta - 1.5).abs() < 1e-12);
 
-        let spec = ProjectionKind::BilevelL21.spec(1.0).unwrap();
+        let spec = ProjectionKind::BilevelL21.spec(1.0, 0.0).unwrap();
         assert_eq!(spec.norms, vec![Norm::L1, Norm::L2]);
 
-        let spec = ProjectionKind::ExactL1InfNewton.spec(2.0).unwrap();
+        let spec = ProjectionKind::ExactL1InfNewton.spec(2.0, 0.0).unwrap();
         assert_eq!(spec.method, Method::ExactNewton);
         assert_eq!(spec.norms, vec![Norm::Linf, Norm::L1]);
 
-        let spec = ProjectionKind::ExactL11.spec(2.0).unwrap();
+        let spec = ProjectionKind::ExactL11.spec(2.0, 0.0).unwrap();
         assert_eq!(spec.method, Method::ExactFlatL1);
 
-        assert!(ProjectionKind::None.spec(1.0).is_none());
-        assert!(ProjectionKind::PallasHlo.spec(1.0).is_none());
+        let spec = ProjectionKind::ExactLinf1.spec(2.0, 0.0).unwrap();
+        assert_eq!(spec.method, Method::ExactLinf1Newton);
+        assert_eq!(spec.norms, vec![Norm::Linf, Norm::L1]);
+
+        let spec = ProjectionKind::IntersectL1L2.spec(2.0, 0.5).unwrap();
+        assert_eq!(spec.method, Method::IntersectL1L2);
+        assert_eq!(spec.norms, vec![Norm::L1, Norm::L2]);
+        assert!((spec.eta2 - 0.5).abs() < 1e-12);
+
+        let spec = ProjectionKind::IntersectL1Linf.spec(2.0, 0.5).unwrap();
+        assert_eq!(spec.method, Method::IntersectL1Linf);
+        assert_eq!(spec.norms, vec![Norm::L1, Norm::Linf]);
+
+        let spec = ProjectionKind::BilevelL21Energy.spec(2.0, 0.0).unwrap();
+        assert_eq!(spec.method, Method::BilevelL21Energy);
+        assert_eq!(spec.norms, vec![Norm::L2, Norm::L1]);
+
+        assert!(ProjectionKind::None.spec(1.0, 0.0).is_none());
+        assert!(ProjectionKind::PallasHlo.spec(1.0, 0.0).is_none());
 
         assert!(ProjectionKind::BilevelL1Inf.pooled());
         assert!(ProjectionKind::BilevelL12.pooled());

@@ -165,7 +165,7 @@ impl Trainer {
         }
         let mut fm = state.w1_feature_matrix()?;
         if self.plan.is_none() {
-            let mut spec = kind.spec(eta).ok_or_else(|| {
+            let mut spec = kind.spec(eta, self.cfg.eta2).ok_or_else(|| {
                 MlprojError::Config(format!(
                     "projection kind `{}` has no native operator",
                     kind.label()

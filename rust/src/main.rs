@@ -116,11 +116,12 @@ impl Args {
 }
 
 const TRAIN_FLAGS: &[&str] = &[
-    "config", "dataset", "projection", "eta", "epochs1", "epochs2", "lr", "alpha", "test_frac",
-    "seed", "repeats", "workers", "artifact_dir", "project_every", "verbose",
+    "config", "dataset", "projection", "eta", "eta2", "epochs1", "epochs2", "lr", "alpha",
+    "test_frac", "seed", "repeats", "workers", "artifact_dir", "project_every", "verbose",
 ];
 const SWEEP_FLAGS: &[&str] = &["preset", "repeats", "out"];
-const PROJECT_FLAGS: &[&str] = &["n", "m", "eta", "workers", "norms", "l1algo", "seed", "kernel"];
+const PROJECT_FLAGS: &[&str] =
+    &["n", "m", "eta", "eta2", "workers", "norms", "l1algo", "method", "seed", "kernel"];
 const DATAGEN_FLAGS: &[&str] = &["dataset", "out"];
 const INFO_FLAGS: &[&str] = &["dataset", "addr"];
 const SERVE_FLAGS: &[&str] = &[
@@ -133,8 +134,10 @@ const SERVE_FLAGS: &[&str] = &[
     "max-body-bytes",
     "max-inflight",
 ];
-const CLIENT_FLAGS: &[&str] =
-    &["addr", "n", "m", "eta", "norms", "l1algo", "seed", "chunked", "chunk-elems"];
+const CLIENT_FLAGS: &[&str] = &[
+    "addr", "n", "m", "eta", "eta2", "norms", "l1algo", "method", "seed", "chunked",
+    "chunk-elems",
+];
 const TOP_FLAGS: &[&str] = &["addr", "interval", "count"];
 const LOADGEN_FLAGS: &[&str] = &[
     "addr",
@@ -143,8 +146,10 @@ const LOADGEN_FLAGS: &[&str] = &[
     "n",
     "m",
     "eta",
+    "eta2",
     "norms",
     "l1algo",
+    "methods",
     "seed",
     "pipeline-depth",
     "via-router",
@@ -188,6 +193,12 @@ USAGE:
   mlproj project [--n N] [--m M] [--eta F] [--workers W] [--norms linf,l1]
                  [--l1algo condat|sort|michelot] [--seed S]
                  [--kernel scalar|avx2|avx512|neon]
+                 [--method M] [--eta2 F]
+                 methods: compositional | exact_newton | exact_sortscan |
+                 exact_flat_l1 | exact_linf1_newton | intersect_l1l2 |
+                 intersect_l1linf | bilevel_l21_energy; --method picks the
+                 norm list for you (override with --norms); the intersect_*
+                 methods need a second radius --eta2
   mlproj serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
                [--batch-max N] [--cache-cap N] [--exec-workers N]
                [--max-body-bytes B] [--max-inflight N]
@@ -198,11 +209,12 @@ USAGE:
                [--retries R]
   mlproj client project|ping|stats|trace|shutdown --addr HOST:PORT
                [--n N] [--m M] [--eta F] [--norms L] [--l1algo A] [--seed S]
-               [--chunked] [--chunk-elems N]
+               [--method M] [--eta2 F] [--chunked] [--chunk-elems N]
   mlproj top --addr HOST:PORT [--interval SECS] [--count N]
                live per-stage latency dashboard (StatsV2; N=0 runs forever)
   mlproj loadgen --addr HOST:PORT [--clients C] [--requests R]
                  [--n N] [--m M] [--eta F] [--norms L] [--seed S]
+                 [--methods M1,M2,...] [--eta2 F]
                  [--pipeline-depth D] [--via-router [--direct-addr HOST:PORT]]
                  [--open [--rate RPS | --rate-x X] [--duration-s S]
                   [--burst-on-ms MS --burst-off-ms MS] [--deadline-us US]
@@ -277,6 +289,69 @@ fn parse_l1_algo(s: &str) -> Result<L1Algo> {
     }
 }
 
+fn parse_method(s: &str) -> Result<Method> {
+    Method::parse(s).ok_or_else(|| {
+        let labels: Vec<&str> = Method::ALL.iter().map(|m| m.label()).collect();
+        MlprojError::invalid(format!("unknown --method `{s}` ({})", labels.join(" | ")))
+    })
+}
+
+/// The norm list a method family requires — `None` for `Compositional`,
+/// which projects whatever `--norms` says.
+fn method_norms(method: Method) -> Option<Vec<Norm>> {
+    match method {
+        Method::Compositional => None,
+        Method::ExactNewton | Method::ExactSortScan | Method::ExactLinf1Newton => {
+            Some(vec![Norm::Linf, Norm::L1])
+        }
+        Method::ExactFlatL1 => Some(vec![Norm::L1, Norm::L1]),
+        Method::IntersectL1L2 => Some(vec![Norm::L1, Norm::L2]),
+        Method::IntersectL1Linf => Some(vec![Norm::L1, Norm::Linf]),
+        Method::BilevelL21Energy => Some(vec![Norm::L2, Norm::L1]),
+    }
+}
+
+/// Resolve `--method`/`--eta2`/`--norms` into (norm list, method, eta2):
+/// the method derives its norm list unless `--norms` overrides it, the
+/// intersection methods require an explicit `--eta2`, and `--eta2` on any
+/// other method is an error rather than silently ignored.
+fn method_args(args: &Args, methods_key: &str) -> Result<(Option<Method>, f64)> {
+    let method = args.get(methods_key).map(parse_method).transpose()?;
+    let eta2 = args.f64_or("eta2", 0.0)?;
+    let needs = method.is_some_and(|m| m.needs_eta2());
+    if needs && args.get("eta2").is_none() {
+        return Err(MlprojError::invalid(format!(
+            "--method {} projects onto the intersection of two balls and needs --eta2",
+            method.expect("checked above").label()
+        )));
+    }
+    if !needs && args.get("eta2").is_some() {
+        return Err(MlprojError::invalid(
+            "--eta2 only applies to the intersection methods \
+             (--method intersect_l1l2 | intersect_l1linf)",
+        ));
+    }
+    Ok((method, eta2))
+}
+
+/// The CLI spec for a (possibly defaulted) method choice.
+fn spec_for_cli(
+    norm_list: Vec<Norm>,
+    eta: f64,
+    eta2: f64,
+    algo: L1Algo,
+    method: Option<Method>,
+) -> ProjectionSpec {
+    let mut spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+    if let Some(m) = method {
+        spec = spec.with_method(m);
+        if m.needs_eta2() {
+            spec = spec.with_eta2(eta2);
+        }
+    }
+    spec
+}
+
 /// Build a TrainConfig from `--config FILE` plus CLI overrides.
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = match args.get("config") {
@@ -284,8 +359,8 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
         None => TrainConfig::default(),
     };
     for key in [
-        "dataset", "projection", "eta", "epochs1", "epochs2", "lr", "alpha", "test_frac",
-        "seed", "repeats", "workers", "artifact_dir", "project_every",
+        "dataset", "projection", "eta", "eta2", "epochs1", "epochs2", "lr", "alpha",
+        "test_frac", "seed", "repeats", "workers", "artifact_dir", "project_every",
     ] {
         if let Some(v) = args.get(key) {
             cfg.apply(key, v)?;
@@ -366,8 +441,13 @@ fn cmd_project(args: &Args) -> Result<()> {
     let m = args.usize_or("m", 10000)?;
     let eta = args.f64_or("eta", 1.0)?;
     let workers = args.usize_or("workers", mlproj::parallel::default_workers())?;
-    // Bad --norms values surface as a clean CLI error (no panic).
-    let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
+    let (method, eta2) = method_args(args, "method")?;
+    // Bad --norms values surface as a clean CLI error (no panic). A
+    // `--method` derives its own norm list unless `--norms` overrides it.
+    let norm_list = match method.and_then(method_norms) {
+        Some(required) if args.get("norms").is_none() => required,
+        _ => parse_norms(args.get_or("norms", "linf,l1"))?,
+    };
     let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
     let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
     let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
@@ -377,7 +457,7 @@ fn cmd_project(args: &Args) -> Result<()> {
         _ => 0.0, // unreachable: compile rejects other counts for a matrix
     };
 
-    let mut spec = ProjectionSpec::new(norm_list.clone(), eta).with_l1_algo(algo);
+    let mut spec = spec_for_cli(norm_list.clone(), eta, eta2, algo, method);
     if let Some(k) = args.get("kernel") {
         // Compile rejects variants this host cannot run.
         spec = spec.with_kernel(parse_kernel(k)?);
@@ -416,8 +496,9 @@ fn cmd_project(args: &Args) -> Result<()> {
         x_serial.data() == x_pool.data()
     );
 
-    // For the paper's headline combination, also race the exact baseline.
-    if norm_list == [Norm::Linf, Norm::L1] {
+    // For the paper's headline combination, also race the exact baseline
+    // (only when the bi-level method is the one being measured).
+    if spec.method == Method::Compositional && norm_list == [Norm::Linf, Norm::L1] {
         let mut exact_plan = spec
             .with_method(Method::ExactNewton)
             .compile_for_matrix(n, m)?;
@@ -723,11 +804,15 @@ fn cmd_client(rest: &[String]) -> Result<()> {
             let n = args.usize_or("n", 256)?;
             let m = args.usize_or("m", 1024)?;
             let eta = args.f64_or("eta", 1.0)?;
-            let norm_list = parse_norms(args.get_or("norms", "linf,l1"))?;
+            let (method, eta2) = method_args(&args, "method")?;
+            let norm_list = match method.and_then(method_norms) {
+                Some(required) if args.get("norms").is_none() => required,
+                _ => parse_norms(args.get_or("norms", "linf,l1"))?,
+            };
             let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
             let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
             let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
-            let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+            let spec = spec_for_cli(norm_list, eta, eta2, algo, method);
 
             if args.get("chunked").is_some() {
                 // Protocol v2: stream the payload as chunked frames with
@@ -742,6 +827,7 @@ fn cmd_client(rest: &[String]) -> Result<()> {
                 let req = ProjectRequest {
                     norms: spec.norms.clone(),
                     eta: spec.eta,
+                    eta2: spec.eta2,
                     l1_algo: spec.l1_algo,
                     method: spec.method,
                     layout: WireLayout::Matrix,
@@ -811,13 +897,15 @@ fn summarize_ns(latencies_ns: &[u64]) -> LatSummary {
 }
 
 /// Sequential (v1, lockstep) loadgen pass: `clients` threads, each
-/// running `requests` request/response round trips. Returns per-request
-/// latencies (ns), busy-retry count, and wall seconds.
+/// running `requests` request/response round trips. Client `c` uses
+/// `specs[c % specs.len()]`, so a method mix stripes across clients.
+/// Returns per-request latencies (ns), busy-retry count, and wall
+/// seconds.
 fn loadgen_sequential(
     addr: &str,
     clients: usize,
     requests: usize,
-    spec: &ProjectionSpec,
+    specs: &[ProjectionSpec],
     n: usize,
     m: usize,
     seed: u64,
@@ -826,7 +914,7 @@ fn loadgen_sequential(
     let mut handles = Vec::new();
     for c in 0..clients {
         let addr = addr.to_string();
-        let spec = spec.clone();
+        let spec = specs[c % specs.len()].clone();
         handles.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
             let mut client = Client::connect(addr.as_str())?;
             let mut rng = Rng::new(seed + c as u64 + 1);
@@ -864,15 +952,17 @@ fn loadgen_sequential(
 
 /// Pipelined (v2) loadgen pass: `clients` threads, each driving one
 /// pooled connection with up to `depth` requests in flight. Busy
-/// rejections are resubmitted. Returns per-request latencies (ns,
-/// submit→reply), busy-retry count, and wall seconds.
+/// rejections are resubmitted. Client `c` uses `specs[c % specs.len()]`
+/// (method-mix striping, matching the sequential pass). Returns
+/// per-request latencies (ns, submit→reply), busy-retry count, and wall
+/// seconds.
 #[allow(clippy::too_many_arguments)]
 fn loadgen_pipelined(
     addr: &str,
     clients: usize,
     requests: usize,
     depth: usize,
-    spec: &ProjectionSpec,
+    specs: &[ProjectionSpec],
     n: usize,
     m: usize,
     seed: u64,
@@ -882,13 +972,14 @@ fn loadgen_pipelined(
     let mut handles = Vec::new();
     for c in 0..clients {
         let pool = std::sync::Arc::clone(&pool);
-        let spec = spec.clone();
+        let spec = specs[c % specs.len()].clone();
         handles.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
             let mut rng = Rng::new(seed + 2000 + c as u64);
             let y = Matrix::random_uniform(n, m, 0.0, 1.0, &mut rng);
             let req = ProjectRequest {
                 norms: spec.norms.clone(),
                 eta: spec.eta,
+                eta2: spec.eta2,
                 l1_algo: spec.l1_algo,
                 method: spec.method,
                 layout: WireLayout::Matrix,
@@ -952,29 +1043,74 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let algo = parse_l1_algo(args.get_or("l1algo", "condat"))?;
     let seed = args.usize_or("seed", 0)? as u64;
     let depth = args.usize_or("pipeline-depth", 1)?.max(1);
-    let spec = ProjectionSpec::new(norm_list, eta).with_l1_algo(algo);
+    // `--methods a,b,c` drives a method mix: client `c` (and its whole
+    // request stream) uses method `c % mix_len`, with the norm list each
+    // method requires.
+    let methods: Vec<Method> = match args.get("methods") {
+        Some(list) => {
+            let parsed: Result<Vec<Method>> =
+                list.split(',').map(|s| parse_method(s.trim())).collect();
+            let parsed = parsed?;
+            if parsed.is_empty() {
+                return Err(MlprojError::invalid("--methods needs at least one method"));
+            }
+            parsed
+        }
+        None => Vec::new(),
+    };
+    let eta2 = args.f64_or("eta2", 0.0)?;
+    let needs_eta2 = methods.iter().any(|m| m.needs_eta2());
+    if needs_eta2 && args.get("eta2").is_none() {
+        return Err(MlprojError::invalid(
+            "the --methods mix includes an intersection method and needs --eta2",
+        ));
+    }
+    if !needs_eta2 && args.get("eta2").is_some() {
+        return Err(MlprojError::invalid(
+            "--eta2 only applies when --methods includes an intersection method",
+        ));
+    }
+    let specs: Vec<ProjectionSpec> = if methods.is_empty() {
+        vec![ProjectionSpec::new(norm_list, eta).with_l1_algo(algo)]
+    } else {
+        methods
+            .iter()
+            .map(|&mth| {
+                let norms = method_norms(mth).unwrap_or_else(|| norm_list.clone());
+                spec_for_cli(norms, eta, eta2, algo, Some(mth))
+            })
+            .collect()
+    };
 
-    if args.get("open").is_some() {
-        if args.get("via-router").is_some() {
+    if args.get("open").is_some() || args.get("via-router").is_some() {
+        if specs.len() > 1 {
             return Err(MlprojError::invalid(
-                "--open drives whatever --addr points at (router or server); \
-                 drop --via-router",
+                "--methods mixes apply to the closed-loop path; \
+                 use a single method with --open or --via-router",
             ));
         }
-        return loadgen_open(args, &addr, clients, &spec, n, m, seed);
-    }
-    if args.get("via-router").is_some() {
+        let spec = &specs[0];
+        if args.get("open").is_some() {
+            if args.get("via-router").is_some() {
+                return Err(MlprojError::invalid(
+                    "--open drives whatever --addr points at (router or server); \
+                     drop --via-router",
+                ));
+            }
+            return loadgen_open(args, &addr, clients, spec, n, m, seed);
+        }
         let direct = args.get("direct-addr").map(str::to_string);
-        return loadgen_via_router(&addr, direct, clients, requests, depth, &spec, n, m, seed);
+        return loadgen_via_router(&addr, direct, clients, requests, depth, spec, n, m, seed);
     }
     if args.get("direct-addr").is_some() {
         return Err(MlprojError::invalid("--direct-addr only applies with --via-router"));
     }
 
+    let mix: Vec<&str> = specs.iter().map(|s| s.method.label()).collect();
     eprintln!(
         "loadgen: {clients} clients x {requests} requests of {n}x{m} \
-         (norms {}, η={eta}, pipeline depth {depth}) against {addr}",
-        mlproj::projection::operator::fmt_norms(&spec.norms)
+         (methods [{}], η={eta}, pipeline depth {depth}) against {addr}",
+        mix.join(",")
     );
 
     // Snapshot server counters up front so the report reflects *this*
@@ -985,7 +1121,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // Sequential (v1) series — also the baseline the pipelined series is
     // compared against.
     let (latencies, busy_retries, wall_secs) =
-        loadgen_sequential(&addr, clients, requests, &spec, n, m, seed)?;
+        loadgen_sequential(&addr, clients, requests, &specs, n, m, seed)?;
     let total = latencies.len();
     let throughput = total as f64 / wall_secs;
     let lat = summarize_ns(&latencies);
@@ -993,7 +1129,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // Pipelined (v2) series, when requested.
     let pipelined = if depth > 1 {
         let (plat, busy, wall) =
-            loadgen_pipelined(&addr, clients, requests, depth, &spec, n, m, seed)?;
+            loadgen_pipelined(&addr, clients, requests, depth, &specs, n, m, seed)?;
         let rps = plat.len() as f64 / wall;
         Some((rps, summarize_ns(&plat), busy, wall))
     } else {
@@ -1327,8 +1463,9 @@ fn loadgen_open(
         // wherever this server's capacity happens to sit.
         let x = if rate_x > 0.0 { rate_x } else { 1.0 };
         eprintln!("loadgen --open: calibrating capacity (target {x:.2}x)...");
+        let specs = std::slice::from_ref(spec);
         let (lat, _busy, wall) =
-            loadgen_sequential(addr, tenants.clamp(1, 4), 32, spec, n, m, seed ^ 0xCA11)?;
+            loadgen_sequential(addr, tenants.clamp(1, 4), 32, specs, n, m, seed ^ 0xCA11)?;
         (lat.len() as f64 / wall.max(1e-9)) * x
     }
     .max(1.0);
@@ -1366,6 +1503,7 @@ fn loadgen_open(
             let req = ProjectRequest {
                 norms: spec.norms.clone(),
                 eta: spec.eta,
+                eta2: spec.eta2,
                 l1_algo: spec.l1_algo,
                 method: spec.method,
                 layout: WireLayout::Matrix,
@@ -1477,7 +1615,8 @@ fn run_load_passes(
     m: usize,
     seed: u64,
 ) -> Result<(PassSeries, Option<PassSeries>)> {
-    let (lat, busy, wall) = loadgen_sequential(addr, clients, requests, spec, n, m, seed)?;
+    let (lat, busy, wall) =
+        loadgen_sequential(addr, clients, requests, std::slice::from_ref(spec), n, m, seed)?;
     let seq = PassSeries {
         throughput: lat.len() as f64 / wall,
         lat: summarize_ns(&lat),
@@ -1486,8 +1625,9 @@ fn run_load_passes(
         wall,
     };
     let pipelined = if depth > 1 {
+        let specs = std::slice::from_ref(spec);
         let (lat, busy, wall) =
-            loadgen_pipelined(addr, clients, requests, depth, spec, n, m, seed)?;
+            loadgen_pipelined(addr, clients, requests, depth, specs, n, m, seed)?;
         Some(PassSeries {
             throughput: lat.len() as f64 / wall,
             lat: summarize_ns(&lat),

@@ -167,6 +167,48 @@ pub fn bilevel_l21_inplace(y: &mut Matrix, eta: f64) {
     }
 }
 
+/// Bi-level ℓ_{2,1} projection, energy-aggregated (`proj_l21ball`-style,
+/// Barlaud et al.), in place.
+///
+/// Aggregates each column by its **squared** ℓ2 energy `W_j = Σ_i y_ij²`,
+/// ℓ1-projects the energy vector, then ℓ2-projects column j to the
+/// projected energy `u_j` used *directly* as the radius (no square
+/// root — the defining quirk of the reference implementation). Because
+/// `u_j ≤ W_j` and `Σ u_j ≤ η`, the result satisfies
+/// `Σ_j ‖x_j‖₂ ≤ Σ_j min(‖y_j‖₂, u_j) ≤ η`, i.e. it is feasible for the
+/// ℓ_{2,1} mixed-norm ball, while weighting the outer threshold by
+/// energy instead of amplitude (columns with large energy survive
+/// disproportionately — a harder sparsity bias than [`bilevel_l21_inplace`]).
+pub fn bilevel_l21_energy_inplace(y: &mut Matrix, eta: f64) {
+    let m = y.cols();
+    if m == 0 || y.rows() == 0 {
+        return;
+    }
+    // Sweep 1 (fused): W = per-column squared energy and Σ W in one pass.
+    let mut w: Vec<f32> = Vec::with_capacity(m);
+    let mut sum = 0.0f64;
+    for j in 0..m {
+        let e = kernels::sq_sum(y.col(j)) as f32;
+        w.push(e);
+        sum += e as f64;
+    }
+    let mut scratch = L1Scratch::with_capacity(m);
+    let tau = threshold_on_nonneg(&w, sum, eta, L1Algo::Condat, &mut scratch) as f32;
+    if tau <= 0.0 {
+        return; // energy vector already inside the ℓ1 ball
+    }
+    // Sweep 2: pull column j into the ℓ2 ball of radius u_j = (W_j − τ)_+.
+    for j in 0..m {
+        let u = (w[j] - tau).max(0.0);
+        let col = y.col_mut(j);
+        if u == 0.0 {
+            col.fill(0.0);
+        } else {
+            project_l2_inplace(col, u as f64);
+        }
+    }
+}
+
 /// Generic bi-level `BP_η^{p,q}` (Algorithm 1) for any supported (p, q).
 ///
 /// Dispatches to the specialized kernels above when they exist; otherwise
@@ -219,6 +261,13 @@ pub fn bilevel_l12(y: &Matrix, eta: f64) -> Matrix {
 pub fn bilevel_l21(y: &Matrix, eta: f64) -> Matrix {
     let mut x = y.clone();
     bilevel_l21_inplace(&mut x, eta);
+    x
+}
+
+/// Out-of-place energy-aggregated bi-level ℓ_{2,1}.
+pub fn bilevel_l21_energy(y: &Matrix, eta: f64) -> Matrix {
+    let mut x = y.clone();
+    bilevel_l21_energy_inplace(&mut x, eta);
     x
 }
 
@@ -400,6 +449,57 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn l21_energy_hand_example() {
+        // W = [4, 1], eta = 3 -> tau = 1, u = [3, 0]: column 1 already
+        // inside its radius (‖·‖₂ = 2 ≤ 3), column 2 zeroed.
+        let y = Matrix::from_col_major(2, 2, vec![2.0, 0.0, 1.0, 0.0]).unwrap();
+        let x = bilevel_l21_energy(&y, 3.0);
+        assert_eq!(x.col(0), &[2.0, 0.0]);
+        assert_eq!(x.col(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn l21_energy_identity_inside_and_zero_radius() {
+        // Inside = the *energy* vector fits the ℓ1 ball: Σ_j ‖y_j‖₂² ≤ η.
+        let y = Matrix::from_col_major(2, 2, vec![0.1, 0.2, 0.3, 0.1]).unwrap();
+        assert_eq!(bilevel_l21_energy(&y, 10.0), y);
+        let x = bilevel_l21_energy(&y, 0.0);
+        assert!(x.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_l21_energy_feasible_for_l21_mixed_norm() {
+        forall(
+            407,
+            64,
+            |r| {
+                let y = rand_matrix(r, 8, 8, 3.0);
+                let eta = r.uniform_range(0.1, 6.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = bilevel_l21_energy(y, *eta);
+                // Σ u_j ≤ η and ‖x_j‖₂ ≤ u_j give Σ_j ‖x_j‖₂ ≤ η.
+                let n = lpq_norm(&x, Norm::L1, Norm::L2);
+                if n <= eta + 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("infeasible: {n} > {eta}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn l21_energy_zeroes_low_energy_columns() {
+        let mut rng = Rng::new(19);
+        let y = Matrix::random_uniform(20, 30, -1.0, 1.0, &mut rng);
+        let x = bilevel_l21_energy(&y, 1.5);
+        assert!(x.zero_cols() > 0, "expected zeroed columns");
+        assert!(lpq_norm(&x, Norm::L1, Norm::L2) <= 1.5 + 1e-3);
     }
 
     #[test]

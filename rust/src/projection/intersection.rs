@@ -1,0 +1,637 @@
+//! Exact Euclidean projection onto the *intersection* of an ℓ1 ball and
+//! an ℓ2 or ℓ∞ ball (Su & Yu, arxiv 1206.4638).
+//!
+//! This is a genuinely different spec shape from everything else in the
+//! projection family: the two norms are a **conjunction of constraints**
+//! on the same flattened vector —
+//!
+//! * [`project_l1l2_with_scratch`]:  `{x : ‖x‖₁ ≤ η, ‖x‖₂ ≤ η₂}`
+//! * [`project_l1linf_with_scratch`]: `{x : ‖x‖₁ ≤ η, ‖x‖∞ ≤ η₂}`
+//!
+//! — not a composition of per-axis projections, so the operator layer
+//! routes these through [`crate::projection::Method::IntersectL1L2`] /
+//! [`Method::IntersectL1Linf`](crate::projection::Method) with a second
+//! radius `η₂` carried end to end (spec, plan key, wire).
+//!
+//! Both projections follow the Su–Yu KKT case analysis:
+//!
+//! * **ℓ1 ∩ ℓ2**: the solution is `x = β·S(y, λ)` (soft threshold, then
+//!   a radial shrink). After ruling out the inactive/single-constraint
+//!   cases, both constraints are tight and λ solves the monotone ratio
+//!   equation `‖S(y,λ)‖₁ / ‖S(y,λ)‖₂ = η/η₂`; the crossing segment is
+//!   located by one pass over the descending magnitudes (prefix sums
+//!   make the ratio O(1) per segment) and resolved by bisection inside
+//!   that segment to f64 precision.
+//! * **ℓ1 ∩ ℓ∞**: the solution is `x_i = sign(y_i)·min(η₂, (|y_i|−λ)₊)`
+//!   with λ the root of the piecewise-linear, decreasing
+//!   `h(λ) = Σ_i min(η₂, (|y_i|−λ)₊) = η` (λ = 0 when the box-clamped
+//!   input is already ℓ1-feasible). The root is found exactly by a
+//!   breakpoint sweep — and the breakpoint sort uses `f64::total_cmp`,
+//!   the NaN-total-order discipline this PR retires the
+//!   `partial_cmp().unwrap()` hazard in favour of.
+//!
+//! Both solvers run allocation-free against a caller-owned
+//! [`IntersectScratch`] (compiled plans preallocate one per shape);
+//! the `*_inplace` wrappers allocate a fresh scratch for one-shot use.
+
+/// Reusable working memory for the intersection solvers: the sorted
+/// magnitude list (ℓ1∩ℓ2) and the breakpoint event list (ℓ1∩ℓ∞).
+#[derive(Debug, Default)]
+pub struct IntersectScratch {
+    /// |y| sorted descending (f64 scan arithmetic).
+    abs: Vec<f64>,
+    /// λ-breakpoints for the box sweep: `(λ, enters_linear_region)`.
+    events: Vec<(f64, bool)>,
+}
+
+impl IntersectScratch {
+    /// Empty scratch (grows on first use).
+    pub fn new() -> Self {
+        IntersectScratch::default()
+    }
+
+    /// Scratch pre-sized for inputs of length `n` — no further
+    /// allocation for either solver on inputs up to that length.
+    pub fn with_capacity(n: usize) -> Self {
+        IntersectScratch {
+            abs: Vec::with_capacity(n),
+            events: Vec::with_capacity(2 * n),
+        }
+    }
+
+    /// Bytes of backing capacity (for workspace accounting).
+    pub fn bytes(&self) -> usize {
+        self.abs.capacity() * std::mem::size_of::<f64>()
+            + self.events.capacity() * std::mem::size_of::<(f64, bool)>()
+    }
+}
+
+/// Soft-threshold `xs` by `tau`, optionally rescaling by `beta`:
+/// `x_i = β·sign(x_i)·(|x_i| − τ)₊`.
+fn shrink_scale(xs: &mut [f32], tau: f64, beta: f64) {
+    let t = tau as f32;
+    let b = beta as f32;
+    for v in xs.iter_mut() {
+        let a = (v.abs() - t).max(0.0) * b;
+        *v = a.copysign(*v);
+    }
+}
+
+/// Exact projection onto `{x : ‖x‖₁ ≤ eta, ‖x‖₂ ≤ eta2}`, in place.
+pub fn project_l1l2_with_scratch(
+    xs: &mut [f32],
+    eta: f64,
+    eta2: f64,
+    s: &mut IntersectScratch,
+) {
+    let n = xs.len();
+    if n == 0 {
+        return;
+    }
+    if eta <= 0.0 || eta2 <= 0.0 {
+        xs.fill(0.0);
+        return;
+    }
+    let mut l1 = 0.0f64;
+    let mut l2sq = 0.0f64;
+    for &v in xs.iter() {
+        let a = v.abs() as f64;
+        l1 += a;
+        l2sq += a * a;
+    }
+    let l2 = l2sq.sqrt();
+    // Case 1: both constraints inactive.
+    if l1 <= eta && l2 <= eta2 {
+        return;
+    }
+    // Case 2: ℓ2-only. Radial scaling preserves the ℓ1/ℓ2 ratio, so the
+    // scaled point is ℓ1-feasible iff `l1·(η₂/l2) ≤ η`.
+    if l2 > eta2 && l1 * (eta2 / l2) <= eta {
+        let f = (eta2 / l2) as f32;
+        for v in xs.iter_mut() {
+            *v *= f;
+        }
+        return;
+    }
+    // Reaching here implies `l1 > eta` (otherwise case 2 returned).
+    s.abs.clear();
+    s.abs.extend(xs.iter().map(|&v| v.abs() as f64));
+    s.abs.sort_unstable_by(|a, b| b.total_cmp(a));
+    let abs = &s.abs[..];
+    // Case 3: ℓ1-only. Soft threshold τ with Σ(a_i − τ)₊ = η (classic
+    // descending pivot rule); accept when the thresholded vector is
+    // already inside the ℓ2 ball. Note this always fires when η ≤ η₂
+    // (then ‖S(y,τ)‖₂ ≤ ‖S(y,τ)‖₁ ≤ η ≤ η₂), so case 4 has η > η₂.
+    let mut tau = 0.0f64;
+    let mut kk = 0usize;
+    let mut acc = 0.0f64;
+    for (k, &a) in abs.iter().enumerate() {
+        let cand = (acc + a - eta) / (k + 1) as f64;
+        if a > cand {
+            tau = cand;
+            kk = k + 1;
+            acc += a;
+        } else {
+            break;
+        }
+    }
+    tau = tau.max(0.0);
+    let mut t2sq = 0.0f64;
+    for &a in &abs[..kk] {
+        let d = (a - tau).max(0.0);
+        t2sq += d * d;
+    }
+    if t2sq.sqrt() <= eta2 {
+        shrink_scale(xs, tau, 1.0);
+        return;
+    }
+    // Case 4: both tight — x = β·S(y, λ) with
+    // `g1(λ)/g2(λ) = η/η₂` where g1 = ‖S(y,λ)‖₁, g2 = ‖S(y,λ)‖₂.
+    // The ratio is continuous and decreasing in λ (Cauchy–Schwarz), so
+    // one pass over the k-survivor segments finds the crossing; the
+    // segment prefix sums make g1/g2 O(1), and bisection inside the
+    // segment pins λ to f64 precision.
+    let target = eta / eta2;
+    let mut p = 0.0f64; // Σ_{i≤k} a_i
+    let mut q = 0.0f64; // Σ_{i≤k} a_i²
+    for k in 1..=n {
+        let a = abs[k - 1];
+        p += a;
+        q += a * a;
+        let hi = a;
+        let lo = if k < n { abs[k] } else { 0.0 };
+        let kf = k as f64;
+        let g1 = p - kf * lo;
+        let g2 = (q - 2.0 * lo * p + kf * lo * lo).max(0.0).sqrt();
+        if g2 > 0.0 && g1 >= target * g2 {
+            // Crossing inside [lo, hi]: r(lo) ≥ target > r(hi).
+            let (mut blo, mut bhi) = (lo, hi);
+            for _ in 0..100 {
+                let mid = 0.5 * (blo + bhi);
+                let g1m = p - kf * mid;
+                let g2m = (q - 2.0 * mid * p + kf * mid * mid).max(0.0).sqrt();
+                if g1m >= target * g2m {
+                    blo = mid;
+                } else {
+                    bhi = mid;
+                }
+            }
+            let lambda = blo;
+            let g2l = (q - 2.0 * lambda * p + kf * lambda * lambda).max(0.0).sqrt();
+            let beta = if g2l > 0.0 { eta2 / g2l } else { 0.0 };
+            shrink_scale(xs, lambda, beta.min(1.0));
+            return;
+        }
+    }
+    // Numerical corner (non-finite input, total cancellation): fall back
+    // to the feasible composition — threshold to the ℓ1 ball, then pull
+    // radially into the ℓ2 ball.
+    shrink_scale(xs, tau, 1.0);
+    let mut sq = 0.0f64;
+    for &v in xs.iter() {
+        sq += (v as f64) * (v as f64);
+    }
+    let nrm = sq.sqrt();
+    if nrm > eta2 {
+        let f = (eta2 / nrm) as f32;
+        for v in xs.iter_mut() {
+            *v *= f;
+        }
+    }
+}
+
+/// Exact projection onto `{x : ‖x‖₁ ≤ eta, ‖x‖∞ ≤ eta2}`, in place.
+pub fn project_l1linf_with_scratch(
+    xs: &mut [f32],
+    eta: f64,
+    eta2: f64,
+    s: &mut IntersectScratch,
+) {
+    let n = xs.len();
+    if n == 0 {
+        return;
+    }
+    if eta <= 0.0 || eta2 <= 0.0 {
+        xs.fill(0.0);
+        return;
+    }
+    // λ = 0 candidate: box-clamp alone already ℓ1-feasible.
+    let mut h0 = 0.0f64;
+    let mut maxa = 0.0f64;
+    for &v in xs.iter() {
+        let a = v.abs() as f64;
+        h0 += a.min(eta2);
+        if a > maxa {
+            maxa = a;
+        }
+    }
+    if h0 <= eta {
+        let cap = eta2 as f32;
+        for v in xs.iter_mut() {
+            *v = v.clamp(-cap, cap);
+        }
+        return;
+    }
+    // Both constraints interact: x_i = sign(y_i)·min(η₂, (|y_i| − λ)₊)
+    // with λ the root of h(λ) = Σ_i min(η₂, (|y_i| − λ)₊) = η. h is
+    // piecewise linear and decreasing with breakpoints where an entry
+    // enters the linear region (λ = a_i) or saturates at the box
+    // (λ = a_i − η₂); sweep the breakpoints from above and solve the
+    // linear segment that brackets η.
+    s.events.clear();
+    for &v in xs.iter() {
+        let a = v.abs() as f64;
+        if a > 0.0 {
+            s.events.push((a, true));
+            if a - eta2 > 0.0 {
+                s.events.push((a - eta2, false));
+            }
+        }
+    }
+    // NaN-total-order sort (the `partial_cmp().unwrap()` hazard class
+    // this PR retires); kind breaks value ties for determinism.
+    s.events.sort_unstable_by(|x, y| y.0.total_cmp(&x.0).then(x.1.cmp(&y.1)));
+    let ev = &s.events[..];
+    let mut hi_cnt = 0usize; // entries saturated at η₂ below this λ
+    let mut mid_cnt = 0usize; // entries in the linear (a_i − λ) region
+    let mut mid_sum = 0.0f64; // Σ a_i over the linear region
+    let mut lambda = 0.0f64;
+    let mut found = false;
+    let mut i = 0usize;
+    while i < ev.len() {
+        let seg_hi = ev[i].0;
+        // Apply every event tied at this λ before testing the segment
+        // below it.
+        while i < ev.len() && ev[i].0 >= seg_hi {
+            let (lam, enter) = ev[i];
+            if enter {
+                mid_cnt += 1;
+                mid_sum += lam;
+            } else {
+                mid_cnt -= 1;
+                mid_sum -= lam + eta2;
+                hi_cnt += 1;
+            }
+            i += 1;
+        }
+        let seg_lo = if i < ev.len() { ev[i].0 } else { 0.0 };
+        // On [seg_lo, seg_hi]: h(λ) = η₂·hi + (S_mid − λ·mid).
+        if mid_cnt > 0 {
+            let cand = (eta2 * hi_cnt as f64 + mid_sum - eta) / mid_cnt as f64;
+            if cand >= seg_lo && cand <= seg_hi {
+                lambda = cand.max(0.0);
+                found = true;
+                break;
+            }
+        }
+    }
+    if !found {
+        // Pathological input (non-finite entries, plateau hits): fall
+        // back to monotone bisection on h — h(0) > η guarantees a root
+        // in (0, max|y|].
+        let (mut blo, mut bhi) = (0.0f64, maxa.max(1.0));
+        for _ in 0..100 {
+            let mid = 0.5 * (blo + bhi);
+            let mut h = 0.0f64;
+            for &v in xs.iter() {
+                h += ((v.abs() as f64 - mid).max(0.0)).min(eta2);
+            }
+            if h >= eta {
+                blo = mid;
+            } else {
+                bhi = mid;
+            }
+        }
+        lambda = blo;
+    }
+    let lam = lambda as f32;
+    let cap = eta2 as f32;
+    for v in xs.iter_mut() {
+        let a = ((v.abs() - lam).max(0.0)).min(cap);
+        *v = a.copysign(*v);
+    }
+}
+
+/// One-shot [`project_l1l2_with_scratch`] with a fresh scratch.
+pub fn project_l1l2_inplace(xs: &mut [f32], eta: f64, eta2: f64) {
+    let mut s = IntersectScratch::with_capacity(xs.len());
+    project_l1l2_with_scratch(xs, eta, eta2, &mut s);
+}
+
+/// One-shot [`project_l1linf_with_scratch`] with a fresh scratch.
+pub fn project_l1linf_inplace(xs: &mut [f32], eta: f64, eta2: f64) {
+    let mut s = IntersectScratch::with_capacity(xs.len());
+    project_l1linf_inplace_impl(xs, eta, eta2, &mut s);
+}
+
+fn project_l1linf_inplace_impl(xs: &mut [f32], eta: f64, eta2: f64, s: &mut IntersectScratch) {
+    project_l1linf_with_scratch(xs, eta, eta2, s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::{forall, gen_vec};
+    use crate::core::rng::Rng;
+    use crate::core::sort::{l1_norm, l2_norm, max_abs};
+    use crate::projection::l1::project_l1_inplace_with;
+    use crate::projection::l1::L1Algo;
+
+    /// Slow reference: alternating projections onto the two balls
+    /// (POCS). Converges to a point *in* the intersection (not the
+    /// projection), so it only certifies feasibility targets; the
+    /// optimality checks below use the variational inequality instead.
+    fn in_intersection_l1l2(x: &[f32], eta: f64, eta2: f64, tol: f64) -> bool {
+        l1_norm(x) <= eta + tol && l2_norm(x) <= eta2 + tol
+    }
+
+    #[test]
+    fn identity_when_both_inactive() {
+        let mut x = vec![0.1f32, -0.2, 0.05];
+        let y = x.clone();
+        project_l1l2_inplace(&mut x, 10.0, 10.0);
+        assert_eq!(x, y);
+        project_l1linf_inplace(&mut x, 10.0, 10.0);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn zero_radius_zeroes() {
+        for eta_pair in [(0.0, 1.0), (1.0, 0.0)] {
+            let mut x = vec![1.0f32, -2.0, 3.0];
+            project_l1l2_inplace(&mut x, eta_pair.0, eta_pair.1);
+            assert!(x.iter().all(|&v| v == 0.0), "{eta_pair:?}");
+            let mut x = vec![1.0f32, -2.0, 3.0];
+            project_l1linf_inplace(&mut x, eta_pair.0, eta_pair.1);
+            assert!(x.iter().all(|&v| v == 0.0), "{eta_pair:?}");
+        }
+    }
+
+    #[test]
+    fn l1l2_reduces_to_l1_when_l1_ball_is_inside() {
+        // η ≤ η₂ ⟹ the ℓ1 ball is contained in the ℓ2 ball: the
+        // intersection projection IS the ℓ1 projection.
+        let mut rng = Rng::new(11);
+        for _ in 0..30 {
+            let x0 = gen_vec(&mut rng, 20, 3.0);
+            let eta = rng.uniform_range(0.1, 2.0);
+            let mut a = x0.clone();
+            project_l1l2_inplace(&mut a, eta, eta + 1.0);
+            let mut b = x0.clone();
+            project_l1_inplace_with(&mut b, eta, L1Algo::Condat);
+            crate::core::check::assert_close(&a, &b, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn l1l2_reduces_to_l2_when_l2_ball_is_inside() {
+        // η ≥ η₂·√n ⟹ the ℓ2 ball is contained in the ℓ1 ball.
+        let mut rng = Rng::new(13);
+        for _ in 0..30 {
+            let x0 = gen_vec(&mut rng, 12, 3.0);
+            let n = x0.len() as f64;
+            let eta2 = rng.uniform_range(0.1, 1.5);
+            let eta = eta2 * n.sqrt() + 0.01;
+            let mut a = x0.clone();
+            project_l1l2_inplace(&mut a, eta, eta2);
+            let l2 = l2_norm(&x0);
+            let mut b = x0.clone();
+            if l2 > eta2 {
+                let f = (eta2 / l2) as f32;
+                for v in b.iter_mut() {
+                    *v *= f;
+                }
+            }
+            crate::core::check::assert_close(&a, &b, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_l1l2_feasible_and_tight_when_cut() {
+        forall(
+            541,
+            128,
+            |r| {
+                let x = gen_vec(r, 24, 3.0);
+                let eta = r.uniform_range(0.05, 6.0);
+                let eta2 = r.uniform_range(0.05, 3.0);
+                (x, eta, eta2)
+            },
+            |(x0, eta, eta2)| {
+                let mut x = x0.clone();
+                project_l1l2_with_scratch(&mut x, *eta, *eta2, &mut IntersectScratch::new());
+                if !in_intersection_l1l2(&x, *eta, *eta2, 1e-3) {
+                    return Err(format!(
+                        "infeasible: l1={} (η={eta}) l2={} (η₂={eta2})",
+                        l1_norm(&x),
+                        l2_norm(&x)
+                    ));
+                }
+                // If the input moved, at least one constraint is tight.
+                let moved = x.iter().zip(x0).any(|(a, b)| (a - b).abs() > 1e-6);
+                if moved {
+                    let l1_tight = (l1_norm(&x) - eta).abs() < 1e-2 * (1.0 + eta);
+                    let l2_tight = (l2_norm(&x) - eta2).abs() < 1e-2 * (1.0 + eta2);
+                    if !l1_tight && !l2_tight {
+                        return Err(format!(
+                            "cut but neither constraint tight: l1={} l2={}",
+                            l1_norm(&x),
+                            l2_norm(&x)
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l1l2_is_the_closest_feasible_point() {
+        // Variational check: for the true projection x of y, every
+        // feasible z satisfies ⟨y − x, z − x⟩ ≤ 0. Probe with feasible
+        // points generated by projecting random perturbations.
+        forall(
+            542,
+            64,
+            |r| {
+                let y = gen_vec(r, 12, 2.5);
+                let eta = r.uniform_range(0.2, 4.0);
+                let eta2 = r.uniform_range(0.2, 2.0);
+                let probe = gen_vec(r, 12, 2.5);
+                (y, eta, eta2, probe)
+            },
+            |(y, eta, eta2, probe)| {
+                let mut x = y.clone();
+                project_l1l2_inplace(&mut x, *eta, *eta2);
+                // Build a feasible probe z of the same length as y.
+                let mut z = vec![0.0f32; y.len()];
+                for (zi, pi) in z.iter_mut().zip(probe.iter().cycle()) {
+                    *zi = *pi;
+                }
+                project_l1l2_inplace(&mut z, *eta, *eta2);
+                let mut ip = 0.0f64;
+                for i in 0..y.len() {
+                    ip += ((y[i] - x[i]) as f64) * ((z[i] - x[i]) as f64);
+                }
+                if ip <= 1e-3 * (1.0 + eta + eta2) {
+                    Ok(())
+                } else {
+                    Err(format!("variational inequality violated: ⟨y−x, z−x⟩ = {ip}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l1linf_feasible_and_tight_when_cut() {
+        forall(
+            543,
+            128,
+            |r| {
+                let x = gen_vec(r, 24, 3.0);
+                let eta = r.uniform_range(0.05, 6.0);
+                let eta2 = r.uniform_range(0.05, 2.5);
+                (x, eta, eta2)
+            },
+            |(x0, eta, eta2)| {
+                let mut x = x0.clone();
+                project_l1linf_with_scratch(
+                    &mut x,
+                    *eta,
+                    *eta2,
+                    &mut IntersectScratch::new(),
+                );
+                if l1_norm(&x) > eta + 1e-3 {
+                    return Err(format!("ℓ1 infeasible: {} > {eta}", l1_norm(&x)));
+                }
+                if max_abs(&x) as f64 > eta2 + 1e-5 {
+                    return Err(format!("ℓ∞ infeasible: {} > {eta2}", max_abs(&x)));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_l1linf_is_the_closest_feasible_point() {
+        forall(
+            544,
+            64,
+            |r| {
+                let y = gen_vec(r, 12, 2.5);
+                let eta = r.uniform_range(0.2, 4.0);
+                let eta2 = r.uniform_range(0.2, 1.5);
+                let probe = gen_vec(r, 12, 2.5);
+                (y, eta, eta2, probe)
+            },
+            |(y, eta, eta2, probe)| {
+                let mut x = y.clone();
+                project_l1linf_inplace(&mut x, *eta, *eta2);
+                let mut z = vec![0.0f32; y.len()];
+                for (zi, pi) in z.iter_mut().zip(probe.iter().cycle()) {
+                    *zi = *pi;
+                }
+                project_l1linf_inplace(&mut z, *eta, *eta2);
+                let mut ip = 0.0f64;
+                for i in 0..y.len() {
+                    ip += ((y[i] - x[i]) as f64) * ((z[i] - x[i]) as f64);
+                }
+                if ip <= 1e-3 * (1.0 + eta + eta2) {
+                    Ok(())
+                } else {
+                    Err(format!("variational inequality violated: ⟨y−x, z−x⟩ = {ip}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            545,
+            48,
+            |r| {
+                let x = gen_vec(r, 16, 3.0);
+                let eta = r.uniform_range(0.1, 4.0);
+                let eta2 = r.uniform_range(0.1, 2.0);
+                (x, eta, eta2)
+            },
+            |(x0, eta, eta2)| {
+                for linf in [false, true] {
+                    let mut once = x0.clone();
+                    let mut s = IntersectScratch::new();
+                    if linf {
+                        project_l1linf_with_scratch(&mut once, *eta, *eta2, &mut s);
+                    } else {
+                        project_l1l2_with_scratch(&mut once, *eta, *eta2, &mut s);
+                    }
+                    let mut twice = once.clone();
+                    if linf {
+                        project_l1linf_with_scratch(&mut twice, *eta, *eta2, &mut s);
+                    } else {
+                        project_l1l2_with_scratch(&mut twice, *eta, *eta2, &mut s);
+                    }
+                    crate::core::check::assert_close(&once, &twice, 1e-4)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn l1linf_hand_worked() {
+        // y = (3, 2, 1), η = 3, η₂ = 1.5. Clamp-only gives ℓ1 = 4.5 > 3,
+        // so λ solves Σ min(1.5, (a_i − λ)₊) = 3. At λ = 0.5:
+        // min(1.5, 2.5) + min(1.5, 1.5) + min(1.5, 0.5) = 3.5; at λ = 0.75:
+        // 1.5 + 1.25 + 0.25 = 3.0 ✓ → x = (1.5, 1.25, 0.25).
+        let mut x = vec![3.0f32, 2.0, 1.0];
+        project_l1linf_inplace(&mut x, 3.0, 1.5);
+        crate::core::check::assert_close(&x, &[1.5, 1.25, 0.25], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn l1l2_hand_worked_both_tight() {
+        // y = (2, 1), η = 1.2, η₂ = 1.0 → both constraints bind:
+        // λ ∈ (0,1) with 2 survivors; g1 = 3 − 2λ, g2² = 5 − 6λ + 2λ²,
+        // ratio target 1.2 ⟹ (3−2λ)² = 1.44(5−6λ+2λ²)
+        // ⟹ 1.12λ² − 3.36λ + 1.8 = 0 ⟹ λ = (3.36 − √(11.2896−8.064))/2.24
+        // = (3.36 − 1.79598…)/2.24 ≈ 0.698222…; β = 1.2/g1(λ)·… check
+        // numerically below via the constraints instead.
+        let mut x = vec![2.0f32, 1.0];
+        project_l1l2_inplace(&mut x, 1.2, 1.0);
+        assert!((l1_norm(&x) - 1.2).abs() < 1e-4, "l1={}", l1_norm(&x));
+        assert!((l2_norm(&x) - 1.0).abs() < 1e-4, "l2={}", l2_norm(&x));
+        assert!(x[0] > x[1] && x[1] > 0.0, "{x:?} keeps ordering");
+    }
+
+    #[test]
+    fn non_finite_input_does_not_panic() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut x = vec![1.0f32, bad, -0.5];
+            project_l1l2_inplace(&mut x, 1.0, 0.8);
+            let mut x = vec![1.0f32, bad, -0.5];
+            project_l1linf_inplace(&mut x, 1.0, 0.8);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let mut rng = Rng::new(99);
+        let mut s = IntersectScratch::with_capacity(32);
+        for _ in 0..20 {
+            let x0 = gen_vec(&mut rng, 32, 2.0);
+            let eta = rng.uniform_range(0.1, 3.0);
+            let eta2 = rng.uniform_range(0.1, 1.5);
+            let mut a = x0.clone();
+            project_l1l2_with_scratch(&mut a, eta, eta2, &mut s);
+            let mut b = x0.clone();
+            project_l1l2_inplace(&mut b, eta, eta2);
+            assert_eq!(a, b);
+            let mut a = x0.clone();
+            project_l1linf_with_scratch(&mut a, eta, eta2, &mut s);
+            let mut b = x0.clone();
+            project_l1linf_inplace(&mut b, eta, eta2);
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -96,7 +96,10 @@ fn apply_caps(y: &Matrix, caps: &[f64]) -> Matrix {
     for j in 0..x.cols() {
         let t = caps[j] as f32;
         let col = x.col_mut(j);
-        if t <= 0.0 {
+        // `!(t > 0)` (not `t <= 0`) so a NaN cap — possible only when the
+        // column itself carried non-finite entries — zeroes the column
+        // instead of handing clamp() NaN bounds, which would panic.
+        if !(t > 0.0) {
             col.fill(0.0);
         } else {
             for v in col.iter_mut() {
@@ -190,8 +193,12 @@ pub fn project_l1inf_sortscan(y: &Matrix, eta: f64) -> Matrix {
     }
     // Tied breakpoints of the *same column* must be processed in ascending
     // k order (each event advances k by exactly one), so k is a tiebreaker.
+    // total_cmp, not partial_cmp().unwrap(): a NaN breakpoint (non-finite
+    // payload reaching a raw call) must not panic the sort — the operator
+    // boundary rejects non-finite input, but this free function stays
+    // panic-free on any bit pattern.
     events.sort_unstable_by(|a, b| {
-        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
     });
 
     // State per column: current active count k_j (0 = dead).
@@ -287,6 +294,20 @@ mod tests {
         let y = Matrix::from_col_major(2, 1, vec![1.0, 2.0]).unwrap();
         assert!(project_l1inf_newton(&y, 0.0).data().iter().all(|&v| v == 0.0));
         assert!(project_l1inf_sortscan(&y, 0.0).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn non_finite_entries_do_not_panic_the_sortscan() {
+        // Regression: the event sort used partial_cmp().unwrap(), so one
+        // NaN payload entry panicked the whole sweep (and, through the
+        // scheduler, a worker thread). The serve path now rejects
+        // non-finite payloads up front, but the free functions themselves
+        // must also stay panic-free on any bit pattern.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let y = Matrix::from_col_major(2, 2, vec![3.0, bad, 1.0, 1.0]).unwrap();
+            let _ = project_l1inf_sortscan(&y, 2.0);
+            let _ = project_l1inf_newton(&y, 2.0);
+        }
     }
 
     #[test]

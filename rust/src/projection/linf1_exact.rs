@@ -1,0 +1,333 @@
+//! Exact Euclidean projection onto the ℓ_{∞,1} ball, Chau–Wohlberg style
+//! (arxiv 1806.10041) — a *sort-free* Newton root search.
+//!
+//! Naming note: with groups = columns, the set Chau & Wohlberg call the
+//! ℓ_{∞,1} ball — `{X : Σ_j ‖x_j‖_∞ ≤ η}` — is exactly the set this
+//! repo (following the source paper and Quattoni et al.) calls the
+//! ℓ_{1,∞} ball. The two communities order the subscripts oppositely;
+//! the *projection* is the same, so this module is a third exact solver
+//! for the same ball as [`crate::projection::l1inf_exact`], with a
+//! different cost profile:
+//!
+//! * `l1inf_exact` presorts every column (O(nm log n)) and then resolves
+//!   per-column caps by binary search over breakpoints;
+//! * this module never sorts: the outer semismooth Newton iteration on
+//!   `θ(λ) = Σ_j t_j(λ) − η` evaluates each per-column cap `t_j(λ)` with
+//!   a Michelot-style active-set scan ([`cap_root`]) — plain O(n) passes
+//!   over unsorted magnitudes. Work shifts from one big upfront sort to
+//!   a few cheap streaming scans per Newton step, which is the regime
+//!   the Chau–Wohlberg paper targets (few active columns, few steps).
+//!
+//! The per-column subproblem is the scalar root of
+//! `s_j(t) = Σ_i (|y_ij| − t)_+ = λ` (the ℓ1 soft-threshold equation),
+//! so `t_j(λ)` is the soft threshold of column j at radius λ and the
+//! KKT system matches `l1inf_exact` exactly: `s_j(t_j) = λ` on active
+//! columns, `t_j = 0` for columns with `‖y_j‖_1 ≤ λ`, `Σ_j t_j = η`.
+
+use crate::core::matrix::Matrix;
+
+/// Solve `Σ_i (|a_i| − t)_+ = λ` for `t ≥ 0` by Michelot-style
+/// active-set shrinking over the *unsorted* magnitudes, returning
+/// `(t, active_count)`. `total` must be `Σ_i |a_i|` (f64). A column with
+/// `total ≤ λ` is dead: `(0, 0)`.
+///
+/// The iteration `t ← (Σ_{|a_i| > t} |a_i| − λ) / #{|a_i| > t}` starts
+/// from the all-active mean and increases monotonically; it terminates
+/// when the active set stops shrinking (finite, ≤ n passes; typically a
+/// handful). No allocation, no sort.
+pub(crate) fn cap_root(col: &[f32], total: f64, lambda: f64) -> (f64, usize) {
+    if total <= lambda {
+        return (0.0, 0);
+    }
+    let n = col.len();
+    let mut t = (total - lambda) / n as f64;
+    let mut active = n;
+    loop {
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for &v in col {
+            let a = v.abs() as f64;
+            if a > t {
+                sum += a;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            // No magnitude strictly exceeds t, so t sits on the tied
+            // maxima (λ = 0 always lands here with t = the column max).
+            // The semismooth right-derivative needs the tie
+            // multiplicity, not the column length: for λ′ slightly
+            // above λ the cap drops below the ties and exactly those
+            // elements become active. Returning n here flattens the
+            // Newton slope by ~rows×, overshoots the root on the first
+            // step, and the monotonicity guard then exits with an
+            // over-shrunk (feasible but non-optimal) projection.
+            let ties = col.iter().filter(|v| (v.abs() as f64) >= t).count();
+            return (t.max(0.0), ties.max(1));
+        }
+        let next = (sum - lambda) / count as f64;
+        if count == active || next <= t {
+            return (next.max(0.0), count);
+        }
+        t = next;
+        active = count;
+    }
+}
+
+/// In-place sort-free exact projection over column-major data. `totals`
+/// and `caps` are caller-provided scratch of length `cols`, so compiled
+/// plans run this without touching the allocator. Returns the Newton
+/// iteration count.
+pub fn project_linf1_cols_inplace(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    eta: f64,
+    totals: &mut [f64],
+    caps: &mut [f64],
+) -> usize {
+    if rows == 0 || cols == 0 {
+        return 0;
+    }
+    debug_assert_eq!(data.len(), rows * cols);
+    debug_assert!(totals.len() >= cols && caps.len() >= cols);
+    if eta <= 0.0 {
+        data.fill(0.0);
+        return 0;
+    }
+    // One pass: per-column ℓ1 totals and the ℓ1,∞ feasibility sum.
+    let mut norm = 0.0f64;
+    for j in 0..cols {
+        let col = &data[j * rows..(j + 1) * rows];
+        let mut sum = 0.0f64;
+        let mut vmax = 0.0f64;
+        for &v in col {
+            let a = v.abs() as f64;
+            sum += a;
+            if a > vmax {
+                vmax = a;
+            }
+        }
+        totals[j] = sum;
+        norm += vmax;
+    }
+    if norm <= eta {
+        return 0;
+    }
+    // Semismooth Newton on θ(λ) = Σ_j t_j(λ) − η, exactly as in
+    // `l1inf_exact::project_l1inf_newton` — only the t_j(λ) oracle
+    // differs (scan instead of sorted binary search).
+    let tol = 1e-10 * (1.0 + eta);
+    let mut lambda = 0.0f64;
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        let mut theta = -eta;
+        let mut slope = 0.0f64;
+        for j in 0..cols {
+            let col = &data[j * rows..(j + 1) * rows];
+            let (t, k) = cap_root(col, totals[j], lambda);
+            caps[j] = t;
+            theta += t;
+            if k > 0 {
+                slope -= 1.0 / k as f64;
+            }
+        }
+        if theta.abs() <= tol || slope == 0.0 || iters > 200 {
+            break;
+        }
+        let next = lambda - theta / slope;
+        if !(next > lambda) {
+            break; // converged to machine precision
+        }
+        lambda = next;
+    }
+    // Apply per-column caps in place. `!(t > 0)` (not `t <= 0`) keeps a
+    // hypothetical NaN cap away from clamp()'s NaN-bounds panic — same
+    // discipline as `l1inf_exact::apply_caps`.
+    for j in 0..cols {
+        let t = caps[j] as f32;
+        let col = &mut data[j * rows..(j + 1) * rows];
+        if !(t > 0.0) {
+            col.fill(0.0);
+        } else {
+            for v in col.iter_mut() {
+                *v = v.clamp(-t, t);
+            }
+        }
+    }
+    iters
+}
+
+/// Exact ℓ_{∞,1} (= ℓ_{1,∞}) projection, sort-free Newton. Out-of-place
+/// convenience over [`project_linf1_cols_inplace`].
+pub fn project_linf1_newton(y: &Matrix, eta: f64) -> Matrix {
+    project_linf1_newton_stats(y, eta).0
+}
+
+/// Newton variant also reporting the iteration count.
+pub fn project_linf1_newton_stats(y: &Matrix, eta: f64) -> (Matrix, usize) {
+    let (rows, cols) = (y.rows(), y.cols());
+    let mut x = y.clone();
+    if rows == 0 || cols == 0 {
+        return (x, 0);
+    }
+    let mut totals = vec![0.0f64; cols];
+    let mut caps = vec![0.0f64; cols];
+    let iters =
+        project_linf1_cols_inplace(x.data_mut(), rows, cols, eta, &mut totals, &mut caps);
+    (x, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::check::forall;
+    use crate::core::rng::Rng;
+    use crate::projection::l1inf_exact::project_l1inf_newton;
+    use crate::projection::norms::l1inf_norm;
+
+    fn rand_matrix(r: &mut Rng, max_n: usize, max_m: usize, scale: f32) -> Matrix {
+        let n = 1 + r.below(max_n);
+        let m = 1 + r.below(max_m);
+        Matrix::random_uniform(n, m, -scale, scale, r)
+    }
+
+    #[test]
+    fn hand_worked_2x2_matches_sorted_solver() {
+        // Same instance as l1inf_exact::hand_worked_2x2: columns (3,1)
+        // and (1,1), η = 2 → λ = 4/3, caps (5/3, 1/3).
+        let y = Matrix::from_col_major(2, 2, vec![3.0, 1.0, 1.0, 1.0]).unwrap();
+        let x = project_linf1_newton(&y, 2.0);
+        assert!((x.get(0, 0) - 5.0 / 3.0).abs() < 1e-5, "{x:?}");
+        assert!((x.get(1, 0) - 1.0).abs() < 1e-5);
+        assert!((x.get(0, 1) - 1.0 / 3.0).abs() < 1e-5);
+        assert!((x.get(1, 1) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn identity_inside_ball_and_zero_radius() {
+        let y = Matrix::from_col_major(2, 2, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        assert_eq!(project_linf1_newton(&y, 5.0), y);
+        assert!(project_linf1_newton(&y, 0.0).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cap_root_matches_definition() {
+        // Column (3, 1), λ = 4/3: t solves (3−t) + (1−t)_+ = 4/3.
+        // With both active: t = (4 − 4/3)/2 = 4/3 > 1 → only 3 active:
+        // t = 3 − 4/3 = 5/3, k = 1.
+        let (t, k) = cap_root(&[3.0, 1.0], 4.0, 4.0 / 3.0);
+        assert!((t - 5.0 / 3.0).abs() < 1e-12, "t={t}");
+        assert_eq!(k, 1);
+        // Dead column: total ≤ λ.
+        assert_eq!(cap_root(&[0.5, 0.25], 0.75, 1.0), (0.0, 0));
+        // λ = 0: cap = column max, and the reported active count is the
+        // tie multiplicity at the max (the Newton slope depends on it).
+        let (t, k) = cap_root(&[2.0, -2.0, 1.0], 5.0, 0.0);
+        assert!((t - 2.0).abs() < 1e-12, "t={t}");
+        assert_eq!(k, 2);
+        let (t, k) = cap_root(&[3.0, 1.0], 4.0, 0.0);
+        assert!((t - 3.0).abs() < 1e-12, "t={t}");
+        assert_eq!(k, 1);
+    }
+
+    #[test]
+    fn prop_sortfree_equals_sorted_newton() {
+        // The whole point: same ball, same projection — only the solver
+        // differs. Compare against the presorted Newton baseline.
+        forall(
+            521,
+            96,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.01, 8.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let a = project_linf1_newton(y, *eta);
+                let b = project_l1inf_newton(y, *eta);
+                crate::core::check::assert_close(a.data(), b.data(), 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_feasible_and_tight() {
+        forall(
+            522,
+            64,
+            |r| {
+                let y = rand_matrix(r, 10, 10, 4.0);
+                let eta = r.uniform_range(0.01, 6.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let x = project_linf1_newton(y, *eta);
+                let nx = l1inf_norm(&x);
+                if nx > eta + 1e-4 {
+                    return Err(format!("infeasible {nx} > {eta}"));
+                }
+                if l1inf_norm(y) > *eta && (nx - eta).abs() > 1e-3 * (1.0 + eta) {
+                    return Err(format!("not tight: {nx} vs {eta}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            523,
+            48,
+            |r| {
+                let y = rand_matrix(r, 8, 8, 3.0);
+                let eta = r.uniform_range(0.1, 4.0);
+                (y, eta)
+            },
+            |(y, eta)| {
+                let once = project_linf1_newton(y, *eta);
+                let twice = project_linf1_newton(&once, *eta);
+                crate::core::check::assert_close(once.data(), twice.data(), 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn ties_at_column_max() {
+        let y = Matrix::from_col_major(3, 2, vec![2.0, 2.0, 1.0, 2.0, 2.0, 2.0]).unwrap();
+        let x = project_linf1_newton(&y, 1.0);
+        assert!(l1inf_norm(&x) <= 1.0 + 1e-5);
+        assert!((l1inf_norm(&x) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn newton_iterations_bounded() {
+        let mut rng = Rng::new(79);
+        let y = Matrix::random_uniform(100, 50, 0.0, 1.0, &mut rng);
+        let (_, iters) = project_linf1_newton_stats(&y, 1.0);
+        assert!(iters < 100, "iters={iters}");
+    }
+
+    #[test]
+    fn columns_of_zeros_stay_zero() {
+        let mut y = Matrix::zeros(3, 3);
+        y.set(0, 1, 5.0);
+        let x = project_linf1_newton(&y, 1.0);
+        assert!(x.col(0).iter().all(|&v| v == 0.0));
+        assert!(x.col(2).iter().all(|&v| v == 0.0));
+        assert!((x.get(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_finite_input_does_not_panic() {
+        // The operator boundary rejects non-finite payloads before any
+        // kernel runs; the standalone solver must still never panic on
+        // them (garbage-in, garbage-out — but no worker death).
+        let y =
+            Matrix::from_col_major(2, 2, vec![f32::NAN, 1.0, f32::INFINITY, -1.0]).unwrap();
+        let x = project_linf1_newton(&y, 1.0);
+        assert_eq!((x.rows(), x.cols()), (2, 2));
+    }
+}

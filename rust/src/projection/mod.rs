@@ -6,11 +6,17 @@
 //! * [`l1`], [`l2`], [`linf`] — the scalar (vector) ball projections the
 //!   bi-level method composes (ℓ1 in three variants: sort, Michelot,
 //!   Condat; plus weighted-ℓ1).
-//! * [`bilevel`] — the new bi-level `BP_η^{p,q}` family (Algorithms 1–4, 7).
+//! * [`bilevel`] — the new bi-level `BP_η^{p,q}` family (Algorithms 1–4, 7),
+//!   including the energy-aggregated ℓ2,1 variant.
 //! * [`l1inf_exact`] — exact Euclidean `P^{1,∞}` baselines (sort-scan
 //!   Quattoni-style; semismooth-Newton Chu/Chau-style).
+//! * [`linf1_exact`] — exact Euclidean projection onto the ℓ∞,1 ball
+//!   (Chau–Wohlberg sort-free Newton root search).
 //! * [`l1l2_exact`] — exact `P^{1,1}` and `P^{1,2}` (which coincides with
 //!   the bi-level ℓ1,2).
+//! * [`intersection`] — exact projection onto the *intersection* of an
+//!   ℓ1 ball with an ℓ2 or ℓ∞ ball (Su–Yu) — constraint conjunction,
+//!   not composition.
 //! * [`multilevel`] — tri-level and generic multi-level tensor projection
 //!   (Algorithms 5, 6, 9, 10).
 //! * [`operator`] — the compiled operator layer (spec → plan → execute)
@@ -19,11 +25,13 @@
 //! * [`norms`] — `ℓ_p`, `ℓ_{p,q}` and multi-level norm evaluation.
 
 pub mod bilevel;
+pub mod intersection;
 pub mod l1;
 pub mod l1inf_exact;
 pub mod l1l2_exact;
 pub mod l2;
 pub mod linf;
+pub mod linf1_exact;
 pub mod multilevel;
 pub mod norms;
 pub mod operator;

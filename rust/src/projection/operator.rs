@@ -33,6 +33,9 @@
 //! | `ν = [q_1, …, q_r]`                       | `MP_η^ν` (Definition 6.2, Alg. 6) |
 //! | `Method::ExactNewton` / `ExactSortScan`   | exact Euclidean `P^{1,∞}` (§4.2) |
 //! | `Method::ExactFlatL1`                     | exact ℓ_{1,1} (flattened ℓ1)    |
+//! | `Method::ExactLinf1Newton`                | exact `P^{1,∞}` — Chau–Wohlberg sort-free Newton |
+//! | `Method::IntersectL1L2` / `IntersectL1Linf` | Su–Yu projection onto `B^1_η ∩ B^{2/∞}_{η₂}` |
+//! | `Method::BilevelL21Energy`                | energy-aggregated bi-level ℓ_{2,1} (`proj_l21ball`) |
 //! | `ExecBackend::Pool`                       | Prop. 6.4 parallel decomposition |
 //!
 //! Serial and pool execution share one code path: every parallel stage is
@@ -52,10 +55,12 @@ use crate::core::simd::{self, KernelVariant};
 use crate::core::tensor::Tensor;
 use crate::parallel::chunks::even_ranges;
 use crate::parallel::pool::WorkerPool;
+use crate::projection::intersection::{self, IntersectScratch};
 use crate::projection::l1::{
     project_l1_with_scratch, threshold_on_nonneg, L1Algo, L1Scratch,
 };
-use crate::projection::{l1inf_exact, Norm};
+use crate::projection::l2::project_l2_inplace;
+use crate::projection::{l1inf_exact, linf1_exact, Norm};
 
 /// Chunks per worker the range partitions target (load balancing for
 /// data-dependent inner ℓ1 projections).
@@ -184,9 +189,42 @@ pub enum Method {
     /// Exact ℓ_{1,1}: a single flattened-ℓ1 projection. Requires
     /// `ν = [L1, L1]` (or a single `[L1]`).
     ExactFlatL1,
+    /// Exact Euclidean ℓ_{1,∞} via the Chau–Wohlberg **sort-free** Newton
+    /// root search (arxiv 1806.10041 — "ℓ∞,1" in that paper's naming):
+    /// outer semismooth Newton on the multiplier, inner Michelot-style
+    /// active-set scan per column instead of a presort. Requires
+    /// `ν = [Linf, L1]` and the matrix layout.
+    ExactLinf1Newton,
+    /// Exact projection onto the intersection `B^1_η ∩ B^2_{η₂}` of an
+    /// ℓ1 and an ℓ2 ball (Su–Yu, arxiv 1206.4638) over the flattened
+    /// payload. Requires `ν = [L1, L2]` (a constraint conjunction, not a
+    /// composition) and a second radius [`ProjectionSpec::eta2`].
+    IntersectL1L2,
+    /// Exact projection onto `B^1_η ∩ B^∞_{η₂}` (Su–Yu) over the
+    /// flattened payload. Requires `ν = [L1, Linf]` and `eta2`.
+    IntersectL1Linf,
+    /// Energy-aggregated bi-level ℓ_{2,1} (`proj_l21ball`-style, Barlaud
+    /// et al.): ℓ1-project the per-column **squared** energies, use the
+    /// projected energies directly as per-column ℓ2 radii. Requires
+    /// `ν = [L2, L1]` and the matrix layout.
+    BilevelL21Energy,
 }
 
 impl Method {
+    /// Every variant, in wire-byte order ([`crate::service::protocol`]).
+    /// The `exhaustive()` match below makes forgetting to extend this
+    /// list a compile error (mirrors [`KernelVariant::ALL`]).
+    pub const ALL: [Method; 8] = [
+        Method::Compositional,
+        Method::ExactNewton,
+        Method::ExactSortScan,
+        Method::ExactFlatL1,
+        Method::ExactLinf1Newton,
+        Method::IntersectL1L2,
+        Method::IntersectL1Linf,
+        Method::BilevelL21Energy,
+    ];
+
     /// Short label for reports.
     pub fn label(&self) -> &'static str {
         match self {
@@ -194,6 +232,39 @@ impl Method {
             Method::ExactNewton => "exact_newton",
             Method::ExactSortScan => "exact_sortscan",
             Method::ExactFlatL1 => "exact_flat_l1",
+            Method::ExactLinf1Newton => "exact_linf1_newton",
+            Method::IntersectL1L2 => "intersect_l1l2",
+            Method::IntersectL1Linf => "intersect_l1linf",
+            Method::BilevelL21Energy => "bilevel_l21_energy",
+        }
+    }
+
+    /// Parse a [`Method::label`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<Method> {
+        let t = s.trim().to_ascii_lowercase();
+        Method::ALL.iter().copied().find(|m| m.label() == t)
+    }
+
+    /// Whether this method consumes the second radius
+    /// [`ProjectionSpec::eta2`] (the intersection methods only).
+    pub fn needs_eta2(&self) -> bool {
+        matches!(self, Method::IntersectL1L2 | Method::IntersectL1Linf)
+    }
+
+    /// Compile-time exhaustiveness pin for [`Method::ALL`]: every variant
+    /// must map to its index in `ALL`. Adding a variant without extending
+    /// `ALL` fails to compile here; reordering fails the round-trip test.
+    #[doc(hidden)]
+    pub fn exhaustive_index(&self) -> usize {
+        match self {
+            Method::Compositional => 0,
+            Method::ExactNewton => 1,
+            Method::ExactSortScan => 2,
+            Method::ExactFlatL1 => 3,
+            Method::ExactLinf1Newton => 4,
+            Method::IntersectL1L2 => 5,
+            Method::IntersectL1Linf => 6,
+            Method::BilevelL21Energy => 7,
         }
     }
 }
@@ -210,6 +281,10 @@ pub struct ProjectionSpec {
     /// compile time ([`MlprojError::InvalidRadius`]) so a hostile radius
     /// can never reach a kernel. `η = 0` projects to the origin.
     pub eta: f64,
+    /// Second ball radius `η₂` for the intersection methods
+    /// ([`Method::needs_eta2`]); must be `0.0` (the default) for every
+    /// other method so specs stay canonical for plan-cache keying.
+    pub eta2: f64,
     /// ℓ1 threshold algorithm for every inner/outer ℓ1 step.
     pub l1_algo: L1Algo,
     /// Algorithm family.
@@ -229,11 +304,28 @@ impl ProjectionSpec {
         ProjectionSpec {
             norms,
             eta,
+            eta2: 0.0,
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             backend: ExecBackend::Serial,
             kernel: None,
         }
+    }
+
+    /// Su–Yu intersection `B^1_η ∩ B^2_{η₂}`: `ν = [L1, L2]`,
+    /// [`Method::IntersectL1L2`].
+    pub fn intersect_l1l2(eta: f64, eta2: f64) -> Self {
+        ProjectionSpec::new(vec![Norm::L1, Norm::L2], eta)
+            .with_method(Method::IntersectL1L2)
+            .with_eta2(eta2)
+    }
+
+    /// Su–Yu intersection `B^1_η ∩ B^∞_{η₂}`: `ν = [L1, Linf]`,
+    /// [`Method::IntersectL1Linf`].
+    pub fn intersect_l1linf(eta: f64, eta2: f64) -> Self {
+        ProjectionSpec::new(vec![Norm::L1, Norm::Linf], eta)
+            .with_method(Method::IntersectL1Linf)
+            .with_eta2(eta2)
     }
 
     /// Bi-level ℓ_{1,∞} (Algorithm 2): `ν = [Linf, L1]`.
@@ -271,6 +363,13 @@ impl ProjectionSpec {
     /// Replace the method family.
     pub fn with_method(mut self, method: Method) -> Self {
         self.method = method;
+        self
+    }
+
+    /// Set the second radius `η₂` (intersection methods only — validated
+    /// at compile time).
+    pub fn with_eta2(mut self, eta2: f64) -> Self {
+        self.eta2 = eta2;
         self
     }
 
@@ -316,6 +415,18 @@ impl ProjectionSpec {
         if !self.eta.is_finite() || self.eta < 0.0 {
             return Err(MlprojError::InvalidRadius { eta: self.eta });
         }
+        if self.method.needs_eta2() {
+            if !self.eta2.is_finite() || self.eta2 < 0.0 {
+                return Err(MlprojError::InvalidRadius { eta: self.eta2 });
+            }
+        } else if self.eta2 != 0.0 {
+            return Err(MlprojError::invalid(format!(
+                "eta2 = {} is only meaningful for the intersection methods \
+                 (method `{}` takes a single radius)",
+                self.eta2,
+                self.method.label()
+            )));
+        }
         if let Some(v) = self.kernel {
             if !simd::is_supported(v) {
                 return Err(MlprojError::invalid(format!(
@@ -325,7 +436,10 @@ impl ProjectionSpec {
                 )));
             }
         }
-        if self.norms.len() != 1 && self.norms.len() != ndim {
+        // The intersection methods constrain the *flattened* payload with
+        // two norms regardless of its rank, so the one-norm-per-axis rule
+        // does not apply to them.
+        if self.norms.len() != 1 && self.norms.len() != ndim && !self.method.needs_eta2() {
             return Err(MlprojError::NormCountMismatch {
                 norms: self.norms.len(),
                 ndim,
@@ -449,6 +563,66 @@ impl ProjectionSpec {
                 ws.l1 = L1Scratch::with_capacity(shape.iter().product());
                 Box::new(ExactFlatL1Kernel { eta: self.eta, algo: self.l1_algo })
             }
+            Method::ExactLinf1Newton => {
+                if layout != Layout::ColMajorMatrix {
+                    return Err(MlprojError::invalid(
+                        "exact_linf1_newton requires the matrix layout \
+                         (use compile_for_matrix)",
+                    ));
+                }
+                if self.norms != [Norm::Linf, Norm::L1] {
+                    return Err(MlprojError::invalid(format!(
+                        "exact_linf1_newton requires ν = [linf, l1], got {}",
+                        fmt_norms(&self.norms)
+                    )));
+                }
+                // Column totals reuse the f64 accumulator buffer; the cap
+                // roots get their own (both warm-path, zero-alloc).
+                ws.acc = vec![0.0f64; shape[1]];
+                ws.caps = vec![0.0f64; shape[1]];
+                Box::new(ExactLinf1Kernel {
+                    rows: shape[0],
+                    cols: shape[1],
+                    eta: self.eta,
+                })
+            }
+            Method::IntersectL1L2 | Method::IntersectL1Linf => {
+                let linf = self.method == Method::IntersectL1Linf;
+                let want: &[Norm] =
+                    if linf { &[Norm::L1, Norm::Linf] } else { &[Norm::L1, Norm::L2] };
+                if self.norms != want {
+                    return Err(MlprojError::invalid(format!(
+                        "{} requires ν = [{}], got {}",
+                        self.method.label(),
+                        fmt_norms(want),
+                        fmt_norms(&self.norms)
+                    )));
+                }
+                ws.isect = IntersectScratch::with_capacity(shape.iter().product());
+                Box::new(IntersectKernel { eta: self.eta, eta2: self.eta2, linf })
+            }
+            Method::BilevelL21Energy => {
+                if layout != Layout::ColMajorMatrix {
+                    return Err(MlprojError::invalid(
+                        "bilevel_l21_energy requires the matrix layout \
+                         (use compile_for_matrix)",
+                    ));
+                }
+                if self.norms != [Norm::L2, Norm::L1] {
+                    return Err(MlprojError::invalid(format!(
+                        "bilevel_l21_energy requires ν = [l2, l1], got {}",
+                        fmt_norms(&self.norms)
+                    )));
+                }
+                ws.colnorms = vec![0.0; shape[1]];
+                ws.l1 = L1Scratch::with_capacity(shape[1]);
+                Box::new(BilevelL21EnergyKernel {
+                    rows: shape[0],
+                    cols: shape[1],
+                    eta: self.eta,
+                    algo: self.l1_algo,
+                })
+            }
         };
         // Only the column-streaming matrix kernels consume the per-call
         // variant tag; other kernels run the process-wide default, so
@@ -466,6 +640,27 @@ impl ProjectionSpec {
             ws,
             dispatch,
         })
+    }
+}
+
+/// Reject non-finite payload entries at the operator boundary. Every
+/// plan entry point runs this scan before touching a kernel, so one
+/// poisoned request fails with a typed [`MlprojError::InvalidArgument`]
+/// (wire `ErrorCode::Invalid`) instead of panicking a sort inside a
+/// worker thread or silently spreading NaN through a shared batch.
+fn check_finite(data: &[f32]) -> Result<()> {
+    // A single f64 sum maps any NaN/±Inf entry to a non-finite
+    // accumulator — one branch at the end instead of one per element.
+    let mut acc = 0.0f64;
+    for &v in data {
+        acc += v as f64;
+    }
+    if acc.is_finite() {
+        Ok(())
+    } else {
+        Err(MlprojError::invalid(
+            "non-finite payload entry (NaN or ±Inf): projection requires finite input",
+        ))
     }
 }
 
@@ -643,6 +838,11 @@ pub struct Workspace {
     l1s: Vec<L1Scratch>,
     /// Per-payload soft thresholds of a batched bi-level call.
     taus: Vec<f32>,
+    /// Per-column cap roots for the exact ℓ∞,1 Newton kernel.
+    caps: Vec<f64>,
+    /// Sorted-magnitude / breakpoint scratch for the intersection
+    /// methods.
+    isect: IntersectScratch,
     /// Base pointers of the payloads in the current (batched) call.
     job_ptrs: Vec<JobPtr>,
     /// SIMD variant the current call should run, threaded from the
@@ -662,10 +862,11 @@ impl Workspace {
             + self.fibers.len()
             + self.taus.capacity();
         f32s * std::mem::size_of::<f32>()
-            + self.acc.len() * std::mem::size_of::<f64>()
+            + (self.acc.len() + self.caps.len()) * std::mem::size_of::<f64>()
             + self.l1.bytes()
             + self.l1s.iter().map(L1Scratch::bytes).sum::<usize>()
             + self.job_ptrs.capacity() * std::mem::size_of::<JobPtr>()
+            + self.isect.bytes()
     }
 }
 
@@ -781,6 +982,7 @@ impl ProjectionPlan {
                 got: vec![data.len()],
             });
         }
+        check_finite(data)?;
         self.run_kernel(1, |k, ws| k.project_inplace(data, ws))
     }
 
@@ -801,6 +1003,9 @@ impl ProjectionPlan {
                 });
             }
         }
+        for p in payloads.iter() {
+            check_finite(p)?;
+        }
         let jobs = payloads.len();
         self.run_kernel(jobs, |k, ws| k.project_batch(payloads, ws))
     }
@@ -818,6 +1023,7 @@ impl ProjectionPlan {
                 got: vec![y.rows(), y.cols()],
             });
         }
+        check_finite(y.data())?;
         self.run_kernel(1, |k, ws| k.project_inplace(y.data_mut(), ws))
     }
 
@@ -834,6 +1040,7 @@ impl ProjectionPlan {
                 got: y.shape().to_vec(),
             });
         }
+        check_finite(y.data())?;
         self.run_kernel(1, |k, ws| k.project_inplace(y.data_mut(), ws))
     }
 }
@@ -1399,6 +1606,115 @@ impl Projector for ExactFlatL1Kernel {
     }
 }
 
+/// Exact ℓ_{1,∞} via the Chau–Wohlberg sort-free Newton root search.
+/// Fully in-place over the column-major buffer; column totals and cap
+/// roots live in plan-owned scratch, so warm calls are allocation-free —
+/// unlike the presorted [`ExactL1InfKernel`] baselines.
+struct ExactLinf1Kernel {
+    rows: usize,
+    cols: usize,
+    eta: f64,
+}
+
+impl Projector for ExactLinf1Kernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        linf1_exact::project_linf1_cols_inplace(
+            data,
+            self.rows,
+            self.cols,
+            self.eta,
+            &mut ws.acc,
+            &mut ws.caps,
+        );
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("exact P^{{1,∞}} (sort-free newton) η={}", self.eta)
+    }
+}
+
+/// Su–Yu projection onto the intersection of an ℓ1 ball (radius η) with
+/// an ℓ2 or ℓ∞ ball (radius η₂), over the flattened payload. Runs in
+/// plan-owned [`IntersectScratch`] — allocation-free once warm.
+struct IntersectKernel {
+    eta: f64,
+    eta2: f64,
+    /// `true` → ℓ1 ∩ ℓ∞; `false` → ℓ1 ∩ ℓ2.
+    linf: bool,
+}
+
+impl Projector for IntersectKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        if self.linf {
+            intersection::project_l1linf_with_scratch(data, self.eta, self.eta2, &mut ws.isect);
+        } else {
+            intersection::project_l1l2_with_scratch(data, self.eta, self.eta2, &mut ws.isect);
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "intersect B^1_η ∩ B^{}_η₂ η={} η₂={}",
+            if self.linf { "∞" } else { "2" },
+            self.eta,
+            self.eta2
+        )
+    }
+}
+
+/// Energy-aggregated bi-level ℓ_{2,1} (`proj_l21ball`-style): ℓ1-project
+/// the per-column squared energies, then pull each shrunk column into
+/// the ℓ2 ball whose radius is its projected energy. Streams the matrix
+/// twice through the plan's SIMD variant; the energy vector and the
+/// threshold scratch are plan-owned, so warm calls are allocation-free.
+/// Bit-identical to [`crate::projection::bilevel::bilevel_l21_energy_inplace`]
+/// when compiled with the same ℓ1 threshold algorithm (same scan order,
+/// f64 accumulation, kernel equivalence contract).
+struct BilevelL21EnergyKernel {
+    rows: usize,
+    cols: usize,
+    eta: f64,
+    algo: L1Algo,
+}
+
+impl Projector for BilevelL21EnergyKernel {
+    fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
+        let (rows, cols) = (self.rows, self.cols);
+        if rows == 0 || cols == 0 {
+            return Ok(());
+        }
+        let variant = ws.variant;
+        let Workspace { colnorms, l1, .. } = ws;
+        let w = &mut colnorms[..cols];
+        let mut sum = 0.0f64;
+        for (j, wj) in w.iter_mut().enumerate() {
+            let e = kernels::sq_sum_with(variant, &data[j * rows..(j + 1) * rows]) as f32;
+            *wj = e;
+            sum += e as f64;
+        }
+        let tau = threshold_on_nonneg(w, sum, self.eta, self.algo, l1) as f32;
+        if tau <= 0.0 {
+            return Ok(());
+        }
+        for (j, &wj) in w.iter().enumerate() {
+            let u = (wj - tau).max(0.0);
+            let col = &mut data[j * rows..(j + 1) * rows];
+            if u == 0.0 {
+                col.fill(0.0);
+            } else {
+                project_l2_inplace(col, u as f64);
+            }
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("bilevel BP^{{2,1}} (energy-aggregated) η={}", self.eta)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1676,6 +1992,160 @@ mod tests {
                 assert_eq!(batch[0], want);
                 assert_eq!(batch[1], want);
             }
+        }
+    }
+
+    #[test]
+    fn method_all_is_exhaustive_with_unique_labels() {
+        for (i, m) in Method::ALL.iter().enumerate() {
+            assert_eq!(m.exhaustive_index(), i, "{} out of order in ALL", m.label());
+            assert_eq!(Method::parse(m.label()), Some(*m));
+        }
+        let labels: std::collections::HashSet<_> =
+            Method::ALL.iter().map(|m| m.label()).collect();
+        assert_eq!(labels.len(), Method::ALL.len(), "duplicate method label");
+        assert_eq!(Method::parse("no_such_method"), None);
+    }
+
+    #[test]
+    fn exact_linf1_plan_matches_free_function() {
+        let mut rng = Rng::new(61);
+        for (rows, cols) in [(1usize, 1usize), (6, 9), (24, 13)] {
+            let spec = ProjectionSpec::l1inf(1.7).with_method(Method::ExactLinf1Newton);
+            let mut plan = spec.compile_for_matrix(rows, cols).unwrap();
+            assert!(plan.describe().contains("sort-free"), "{}", plan.describe());
+            let y = Matrix::random_uniform(rows, cols, -3.0, 3.0, &mut rng);
+            let want = linf1_exact::project_linf1_newton(&y, 1.7);
+            let mut got = y.clone();
+            plan.project_matrix_inplace(&mut got).unwrap();
+            assert_eq!(got.data(), want.data(), "{rows}x{cols}");
+            // Warm second call reuses the scratch and stays identical.
+            let mut again = y.clone();
+            plan.project_matrix_inplace(&mut again).unwrap();
+            assert_eq!(again.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn intersect_plans_match_free_functions_and_need_eta2() {
+        let mut rng = Rng::new(67);
+        for linf in [false, true] {
+            let spec = if linf {
+                ProjectionSpec::intersect_l1linf(1.4, 0.6)
+            } else {
+                ProjectionSpec::intersect_l1l2(1.4, 0.6)
+            };
+            // Flat, matrix, and tensor shapes all project the flattened
+            // payload — the norm pair is a constraint conjunction, not
+            // one-norm-per-axis.
+            let mut plan = spec.compile(&[3, 4, 2]).unwrap();
+            let mut data = vec![0.0f32; 24];
+            rng.fill_uniform(&mut data, -2.0, 2.0);
+            let mut want = data.clone();
+            if linf {
+                intersection::project_l1linf_inplace(&mut want, 1.4, 0.6);
+            } else {
+                intersection::project_l1l2_inplace(&mut want, 1.4, 0.6);
+            }
+            plan.project_inplace(&mut data).unwrap();
+            assert_eq!(data, want);
+        }
+        // η₂ is validated like η…
+        let err = ProjectionSpec::intersect_l1l2(1.0, f64::NAN).compile(&[8]).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidRadius { .. }), "{err}");
+        let err = ProjectionSpec::intersect_l1linf(1.0, -0.5).compile(&[8]).unwrap_err();
+        assert!(matches!(err, MlprojError::InvalidRadius { .. }), "{err}");
+        // …and must stay zero for single-radius methods.
+        let err = ProjectionSpec::l1inf(1.0).with_eta2(0.5).compile_for_matrix(3, 4).unwrap_err();
+        assert!(format!("{err}").contains("eta2"), "{err}");
+    }
+
+    #[test]
+    fn bilevel_l21_energy_plan_matches_free_function() {
+        use crate::projection::bilevel;
+        let mut rng = Rng::new(71);
+        for (rows, cols) in [(1usize, 1usize), (5, 8), (16, 20)] {
+            let spec = ProjectionSpec::bilevel(Norm::L1, Norm::L2, 2.2)
+                .with_method(Method::BilevelL21Energy);
+            let mut plan = spec.compile_for_matrix(rows, cols).unwrap();
+            let y = Matrix::random_uniform(rows, cols, -2.0, 2.0, &mut rng);
+            let want = bilevel::bilevel_l21_energy(&y, 2.2);
+            let mut got = y.clone();
+            plan.project_matrix_inplace(&mut got).unwrap();
+            assert_eq!(got.data(), want.data(), "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn new_methods_reject_wrong_norm_lists_and_layouts() {
+        // Wrong norm list for each method family.
+        let err = ProjectionSpec::new(vec![Norm::L1, Norm::L1], 1.0)
+            .with_method(Method::ExactLinf1Newton)
+            .compile_for_matrix(3, 4)
+            .unwrap_err();
+        assert!(format!("{err}").contains("linf, l1"), "{err}");
+        let err = ProjectionSpec::new(vec![Norm::L2, Norm::L1], 1.0)
+            .with_method(Method::IntersectL1L2)
+            .with_eta2(1.0)
+            .compile(&[8])
+            .unwrap_err();
+        assert!(format!("{err}").contains("l1,l2"), "{err}");
+        let err = ProjectionSpec::new(vec![Norm::L1, Norm::L1], 1.0)
+            .with_method(Method::BilevelL21Energy)
+            .compile_for_matrix(3, 4)
+            .unwrap_err();
+        assert!(format!("{err}").contains("l2, l1"), "{err}");
+        // Matrix-only methods reject the tensor layout.
+        let err = ProjectionSpec::l1inf(1.0)
+            .with_method(Method::ExactLinf1Newton)
+            .compile(&[3, 4])
+            .unwrap_err();
+        assert!(format!("{err}").contains("matrix layout"), "{err}");
+        let err = ProjectionSpec::bilevel(Norm::L1, Norm::L2, 1.0)
+            .with_method(Method::BilevelL21Energy)
+            .compile(&[3, 4])
+            .unwrap_err();
+        assert!(format!("{err}").contains("matrix layout"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_payloads_rejected_at_every_entry_point() {
+        // The headline regression of this change: a poisoned payload must
+        // fail with a typed InvalidArgument — never panic a kernel sort —
+        // and must leave the plan fully usable for the next caller.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for method in [Method::ExactSortScan, Method::ExactNewton, Method::ExactLinf1Newton]
+            {
+                let mut plan = ProjectionSpec::l1inf(1.0)
+                    .with_method(method)
+                    .compile_for_matrix(2, 3)
+                    .unwrap();
+                let mut data = vec![0.5f32, bad, -0.25, 0.1, 0.2, -0.3];
+                let err = plan.project_inplace(&mut data).unwrap_err();
+                assert!(
+                    matches!(err, MlprojError::InvalidArgument { .. }),
+                    "{}: {err}",
+                    method.label()
+                );
+                // One poisoned payload inside a batch fails the batch with
+                // the typed error, not a worker panic.
+                let mut batch =
+                    vec![vec![0.1f32; 6], vec![0.5, bad, -0.25, 0.1, 0.2, -0.3]];
+                assert!(plan.project_batch_inplace(&mut batch).is_err());
+                // The plan still serves clean traffic afterwards.
+                let mut clean = vec![0.9f32, -0.8, 0.7, -0.6, 0.5, -0.4];
+                plan.project_inplace(&mut clean).unwrap();
+            }
+            let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(2, 2).unwrap();
+            let mut m = Matrix::from_col_major(2, 2, vec![1.0, bad, 0.5, 0.25]).unwrap();
+            assert!(plan.project_matrix_inplace(&mut m).is_err());
+            let mut plan = ProjectionSpec::trilevel_l1infinf(1.0).compile(&[2, 2, 2]).unwrap();
+            let mut t = Tensor::from_vec(
+                vec![2, 2, 2],
+                vec![bad, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            )
+            .unwrap();
+            assert!(plan.project_tensor_inplace(&mut t).is_err());
         }
     }
 }

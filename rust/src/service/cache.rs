@@ -34,6 +34,9 @@ pub struct PlanKey {
     pub norms: Vec<Norm>,
     /// `η` as IEEE-754 bits (exact match; no epsilon aliasing).
     pub eta_bits: u64,
+    /// `η₂` as IEEE-754 bits — `0.0f64.to_bits()` (zero) for every
+    /// non-intersection method, so legacy keys stay canonical.
+    pub eta2_bits: u64,
     /// ℓ1 threshold algorithm.
     pub l1_algo: L1Algo,
     /// Algorithm family.
@@ -50,6 +53,7 @@ impl PlanKey {
         PlanKey {
             norms: req.norms.clone(),
             eta_bits: req.eta.to_bits(),
+            eta2_bits: req.eta2.to_bits(),
             l1_algo: req.l1_algo,
             method: req.method,
             layout: req.layout,
@@ -63,6 +67,7 @@ impl PlanKey {
         PlanKey {
             norms: meta.norms.clone(),
             eta_bits: meta.eta.to_bits(),
+            eta2_bits: meta.eta2.to_bits(),
             l1_algo: meta.l1_algo,
             method: meta.method,
             layout: meta.layout,
@@ -75,6 +80,12 @@ impl PlanKey {
         f64::from_bits(self.eta_bits)
     }
 
+    /// The second radius `η₂` (zero unless the method intersects two
+    /// balls).
+    pub fn eta2(&self) -> f64 {
+        f64::from_bits(self.eta2_bits)
+    }
+
     /// Stable FNV-1a-64 hash of the key — identical across processes,
     /// runs, and platforms (unlike `Hash`, whose `DefaultHasher` is
     /// per-process). The router partitions the `(spec, shape)` keyspace
@@ -85,6 +96,7 @@ impl PlanKey {
         stable_hash_parts(
             &self.norms,
             self.eta_bits,
+            self.eta2_bits,
             self.l1_algo,
             self.method,
             self.layout,
@@ -95,6 +107,7 @@ impl PlanKey {
     /// Compile a fresh plan for this key on the given backend.
     pub fn compile(&self, backend: &ExecBackend) -> Result<ProjectionPlan> {
         let spec = ProjectionSpec::new(self.norms.clone(), self.eta())
+            .with_eta2(self.eta2())
             .with_l1_algo(self.l1_algo)
             .with_method(self.method)
             .with_backend(backend.clone());
@@ -119,6 +132,7 @@ impl PlanKey {
 pub fn stable_hash_parts(
     norms: &[Norm],
     eta_bits: u64,
+    eta2_bits: u64,
     l1_algo: L1Algo,
     method: Method,
     layout: WireLayout,
@@ -131,6 +145,7 @@ pub fn stable_hash_parts(
         h = fnv1a64_update(h, &[crate::service::protocol::norm_to_u8(n)]);
     }
     h = fnv1a64_update(h, &eta_bits.to_le_bytes());
+    h = fnv1a64_update(h, &eta2_bits.to_le_bytes());
     h = fnv1a64_update(
         h,
         &[
@@ -330,6 +345,7 @@ mod tests {
         PlanKey {
             norms: vec![Norm::Linf, Norm::L1],
             eta_bits: eta.to_bits(),
+            eta2_bits: 0,
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             layout: WireLayout::Matrix,
@@ -347,6 +363,7 @@ mod tests {
         let variants = [
             PlanKey { norms: vec![Norm::L2, Norm::L1], ..base.clone() },
             PlanKey { eta_bits: 2.0f64.to_bits(), ..base.clone() },
+            PlanKey { eta2_bits: 0.5f64.to_bits(), ..base.clone() },
             PlanKey { l1_algo: L1Algo::Sort, ..base.clone() },
             PlanKey { method: Method::ExactNewton, ..base.clone() },
             PlanKey { layout: WireLayout::Tensor, ..base.clone() },
@@ -412,6 +429,7 @@ mod tests {
         let bad = PlanKey {
             norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
             eta_bits: 1.0f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             layout: WireLayout::Matrix,

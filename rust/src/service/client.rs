@@ -135,6 +135,7 @@ impl Client {
         let req = ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Matrix,
@@ -150,6 +151,7 @@ impl Client {
         let req = ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Tensor,
@@ -771,6 +773,7 @@ mod tests {
         ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Matrix,

@@ -147,11 +147,18 @@ fn algo_from_u8(b: u8) -> Result<L1Algo> {
 }
 
 pub(crate) fn method_to_u8(m: Method) -> u8 {
+    // Exhaustive by construction: a new `Method` variant fails to
+    // compile here until it gets a wire byte, and the round-trip test
+    // walks `Method::ALL` so encode/decode can't silently desync.
     match m {
         Method::Compositional => 0,
         Method::ExactNewton => 1,
         Method::ExactSortScan => 2,
         Method::ExactFlatL1 => 3,
+        Method::ExactLinf1Newton => 4,
+        Method::IntersectL1L2 => 5,
+        Method::IntersectL1Linf => 6,
+        Method::BilevelL21Energy => 7,
     }
 }
 
@@ -161,6 +168,10 @@ fn method_from_u8(b: u8) -> Result<Method> {
         1 => Ok(Method::ExactNewton),
         2 => Ok(Method::ExactSortScan),
         3 => Ok(Method::ExactFlatL1),
+        4 => Ok(Method::ExactLinf1Newton),
+        5 => Ok(Method::IntersectL1L2),
+        6 => Ok(Method::IntersectL1Linf),
+        7 => Ok(Method::BilevelL21Energy),
         other => Err(perr(format!("unknown method byte {other}"))),
     }
 }
@@ -336,6 +347,9 @@ pub struct ProjectMeta {
     pub norms: Vec<Norm>,
     /// Ball radius `η`.
     pub eta: f64,
+    /// Second radius `η₂` — on the wire only for the intersection
+    /// methods ([`Method::needs_eta2`]); `0.0` otherwise.
+    pub eta2: f64,
     /// ℓ1 threshold algorithm.
     pub l1_algo: L1Algo,
     /// Algorithm family.
@@ -366,6 +380,9 @@ pub struct ProjectRequest {
     pub norms: Vec<Norm>,
     /// Ball radius `η`.
     pub eta: f64,
+    /// Second radius `η₂` — meaningful (and on the wire) only for the
+    /// intersection methods; `0.0` otherwise.
+    pub eta2: f64,
     /// ℓ1 threshold algorithm.
     pub l1_algo: L1Algo,
     /// Algorithm family.
@@ -686,7 +703,8 @@ impl Frame {
             Frame::Project(req) => {
                 req.validate()?;
                 encode_spec_fields(
-                    &mut b, &req.norms, req.eta, req.l1_algo, req.method, req.layout, &req.shape,
+                    &mut b, &req.norms, req.eta, req.eta2, req.l1_algo, req.method, req.layout,
+                    &req.shape,
                 )?;
                 write_f32s(&mut b, &req.payload)?;
                 encode_qos_trailer(&mut b, &req.qos);
@@ -695,7 +713,7 @@ impl Frame {
                 validate_meta(&info.meta)?;
                 let m = &info.meta;
                 encode_spec_fields(
-                    &mut b, &m.norms, m.eta, m.l1_algo, m.method, m.layout, &m.shape,
+                    &mut b, &m.norms, m.eta, m.eta2, m.l1_algo, m.method, m.layout, &m.shape,
                 )?;
                 check_stream_total(info.total_elems)?;
                 b.extend_from_slice(&info.total_elems.to_le_bytes());
@@ -798,6 +816,7 @@ impl Frame {
                 Frame::Project(ProjectRequest {
                     norms: meta.norms,
                     eta: meta.eta,
+                    eta2: meta.eta2,
                     l1_algo: meta.l1_algo,
                     method: meta.method,
                     layout: meta.layout,
@@ -914,11 +933,14 @@ pub fn decode_client_frame(version: u8, ftype: u8, body: &[u8]) -> Result<Frame>
 }
 
 /// Encode the spec fields shared by `Project` and `ProjectBegin` bodies
-/// (everything up to the payload/total).
+/// (everything up to the payload/total). The second radius `eta2` rides
+/// after the shape dims and *only* when the method is an intersection —
+/// legacy single-radius bodies stay byte-for-byte what they always were.
 fn encode_spec_fields(
     b: &mut Vec<u8>,
     norms: &[Norm],
     eta: f64,
+    eta2: f64,
     l1_algo: L1Algo,
     method: Method,
     layout: WireLayout,
@@ -936,6 +958,9 @@ fn encode_spec_fields(
     for &d in shape {
         let d = u32::try_from(d).map_err(|_| perr(format!("dimension {d} exceeds u32")))?;
         b.extend_from_slice(&d.to_le_bytes());
+    }
+    if method.needs_eta2() {
+        b.extend_from_slice(&eta2.to_le_bytes());
     }
     Ok(())
 }
@@ -993,7 +1018,14 @@ fn parse_project_meta(c: &mut Cursor) -> Result<ProjectMeta> {
     for _ in 0..ndim {
         shape.push(c.u32()? as usize);
     }
-    Ok(ProjectMeta { norms, eta, l1_algo, method, layout, shape, qos: Qos::default() })
+    // The second radius is present exactly when the method byte (parsed
+    // above) says the spec is an intersection of two balls.
+    let eta2 = if method.needs_eta2() {
+        f64::from_le_bytes(c.take(8)?.try_into().unwrap())
+    } else {
+        0.0
+    };
+    Ok(ProjectMeta { norms, eta, eta2, l1_algo, method, layout, shape, qos: Qos::default() })
 }
 
 // ---------------------------------------------------------------------------
@@ -1447,7 +1479,7 @@ pub fn write_project_v2<W: Write>(w: &mut W, corr: u16, req: &ProjectRequest) ->
     req.validate()?;
     let mut spec = Vec::new();
     encode_spec_fields(
-        &mut spec, &req.norms, req.eta, req.l1_algo, req.method, req.layout, &req.shape,
+        &mut spec, &req.norms, req.eta, req.eta2, req.l1_algo, req.method, req.layout, &req.shape,
     )?;
     let count = u32::try_from(req.payload.len())
         .map_err(|_| perr("payload exceeds u32 element count"))?;
@@ -1561,6 +1593,7 @@ pub fn write_project_chunked<W: Write>(
         meta: ProjectMeta {
             norms: req.norms.clone(),
             eta: req.eta,
+            eta2: req.eta2,
             l1_algo: req.l1_algo,
             method: req.method,
             layout: req.layout,
@@ -1729,6 +1762,7 @@ mod tests {
         ProjectRequest {
             norms: vec![Norm::Linf, Norm::L1],
             eta: 1.5,
+            eta2: 0.0,
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1867,14 +1901,15 @@ mod tests {
 
     #[test]
     fn roundtrip_all_enum_codes() {
-        for method in
-            [Method::Compositional, Method::ExactNewton, Method::ExactSortScan, Method::ExactFlatL1]
-        {
+        // `Method::ALL` (not a hand-list) so a future variant that forgets
+        // its wire byte fails here rather than in the field.
+        for method in Method::ALL {
             for algo in [L1Algo::Condat, L1Algo::Sort, L1Algo::Michelot] {
                 for norm in [Norm::L1, Norm::L2, Norm::Linf] {
                     let req = ProjectRequest {
                         norms: vec![norm],
                         eta: 0.5,
+                        eta2: if method.needs_eta2() { 0.75 } else { 0.0 },
                         l1_algo: algo,
                         method,
                         layout: WireLayout::Tensor,
@@ -1893,6 +1928,7 @@ mod tests {
         let req = ProjectRequest {
             norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
             eta: 2.0,
+            eta2: 0.0,
             l1_algo: L1Algo::Sort,
             method: Method::Compositional,
             layout: WireLayout::Tensor,
@@ -1943,6 +1979,7 @@ mod tests {
         let req = ProjectRequest {
             norms: vec![Norm::Linf],
             eta: 1.0,
+            eta2: 0.0,
             l1_algo: L1Algo::Condat,
             method: Method::Compositional,
             layout: WireLayout::Tensor,
@@ -2077,6 +2114,32 @@ mod tests {
         // layout byte.
         let mut bad = bytes;
         bad[HEADER_BYTES + 10] = 77;
+        assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn intersection_eta2_rides_the_wire_and_truncation_is_a_framing_error() {
+        let mut req = sample_request();
+        req.method = Method::IntersectL1L2;
+        req.eta2 = 0.75;
+        roundtrip(Frame::Project(req.clone()));
+
+        // Single-radius bodies must NOT grow: the same spec under a
+        // legacy method encodes 8 bytes shorter.
+        let isect = Frame::Project(req.clone()).encode().unwrap();
+        let mut legacy = req.clone();
+        legacy.method = Method::Compositional;
+        legacy.eta2 = 0.0;
+        let legacy = Frame::Project(legacy).encode().unwrap();
+        assert_eq!(isect.len(), legacy.len() + 8, "eta2 costs exactly 8 bytes");
+
+        // Chop the body mid-eta2 (drop payload + trailer + 4 of eta2's
+        // 8 bytes) and patch the declared length: framing error, not a
+        // silent zero radius.
+        let spec_len = 8 + 1 + 1 + 1 + 1 + 2 + 1 + 8 + 8; // eta..dims + eta2
+        let mut bad = isect[..HEADER_BYTES + spec_len - 4].to_vec();
+        let body_len = (bad.len() - HEADER_BYTES) as u32;
+        bad[8..12].copy_from_slice(&body_len.to_le_bytes());
         assert!(matches!(Frame::decode(&bad), Err(MlprojError::Protocol(_))));
     }
 
@@ -2217,6 +2280,7 @@ mod tests {
             meta: ProjectMeta {
                 norms: vec![Norm::Linf, Norm::L1],
                 eta: 1.5,
+                eta2: 0.0,
                 l1_algo: L1Algo::Condat,
                 method: Method::Compositional,
                 layout: WireLayout::Matrix,

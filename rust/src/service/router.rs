@@ -466,6 +466,7 @@ fn meta_stable_hash(meta: &ProjectMeta) -> u64 {
     crate::service::cache::stable_hash_parts(
         &meta.norms,
         meta.eta.to_bits(),
+        meta.eta2.to_bits(),
         meta.l1_algo,
         meta.method,
         meta.layout,
@@ -479,6 +480,7 @@ fn req_stable_hash(req: &ProjectRequest) -> u64 {
     crate::service::cache::stable_hash_parts(
         &req.norms,
         req.eta.to_bits(),
+        req.eta2.to_bits(),
         req.l1_algo,
         req.method,
         req.layout,
@@ -750,6 +752,7 @@ fn route_v1(mut stream: TcpStream, ctx: &ConnCtx, mut head: RawHeader, mut body:
                 let req = ProjectRequest {
                     norms: meta.norms,
                     eta: meta.eta,
+                    eta2: meta.eta2,
                     l1_algo: meta.l1_algo,
                     method: meta.method,
                     layout: meta.layout,
@@ -1561,6 +1564,7 @@ mod tests {
         ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Matrix,
@@ -1587,6 +1591,7 @@ mod tests {
             .map(|i| ProjectMeta {
                 norms: vec![Norm::Linf, Norm::L1],
                 eta: i as f64,
+                eta2: 0.0,
                 l1_algo: crate::projection::l1::L1Algo::Condat,
                 method: crate::projection::Method::Compositional,
                 layout: WireLayout::Matrix,

@@ -688,6 +688,30 @@ pub fn run_batch(
     if batch.is_empty() {
         return;
     }
+    // Same per-job isolation for non-finite payloads: the operator layer
+    // rejects them, but a batch call fails as a unit — one poisoned
+    // request must not take its batchmates with it. A lone job skips the
+    // extra scan (whole-batch failure IS individual failure there, and
+    // the operator boundary still rejects it).
+    if batch.len() >= 2 {
+        let mut i = 0;
+        while i < batch.len() {
+            // Finite f32s cannot overflow an f64 sum, so a non-finite
+            // sum pinpoints a NaN/±Inf entry.
+            let sum: f64 = batch[i].payload.iter().map(|&v| v as f64).sum();
+            if sum.is_finite() {
+                i += 1;
+            } else {
+                let job = batch.remove(i);
+                job.finish(Err(MlprojError::invalid(
+                    "non-finite payload entry (NaN or ±Inf): projection requires finite input",
+                )));
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
+    }
     // Move the payloads out of the jobs (buffer reuse, not copies).
     payloads.clear();
     for job in batch.iter_mut() {
@@ -760,6 +784,7 @@ mod tests {
         ProjectRequest {
             norms: vec![Norm::Linf, Norm::L1],
             eta,
+            eta2: 0.0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -773,6 +798,7 @@ mod tests {
         PlanKey {
             norms: vec![Norm::L1],
             eta_bits: 1.0f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Tensor,
@@ -974,6 +1000,7 @@ mod tests {
         let key = PlanKey {
             norms: vec![Norm::Linf, Norm::L1],
             eta_bits: 1.0f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1084,6 +1111,7 @@ mod tests {
         let key = PlanKey {
             norms: vec![Norm::Linf, Norm::L1],
             eta_bits: 0.9f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1117,6 +1145,7 @@ mod tests {
         let key = PlanKey {
             norms: vec![Norm::Linf, Norm::L1],
             eta_bits: 1.0f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1151,6 +1180,7 @@ mod tests {
         let key = PlanKey {
             norms: vec![Norm::Linf, Norm::L1],
             eta_bits: 0.8f64.to_bits(),
+            eta2_bits: 0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1195,6 +1225,7 @@ mod tests {
         let bad = ProjectRequest {
             norms: vec![Norm::Linf, Norm::Linf, Norm::L1],
             eta: 1.0,
+            eta2: 0.0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,
@@ -1215,6 +1246,7 @@ mod tests {
         let mut bad = ProjectRequest {
             norms: vec![Norm::Linf, Norm::L1],
             eta: 1.0,
+            eta2: 0.0,
             l1_algo: crate::projection::l1::L1Algo::Condat,
             method: crate::projection::Method::Compositional,
             layout: WireLayout::Matrix,

@@ -140,6 +140,46 @@ fn warm_l1_plans_project_without_heap_allocation() {
 }
 
 #[test]
+fn warm_method_family_plans_project_without_heap_allocation() {
+    // The new exact-family kernels are workspace-backed too: the
+    // sort-free ℓ∞,1 Newton (column totals + cap roots), both Su–Yu
+    // intersections (IntersectScratch: sorted magnitudes / breakpoint
+    // events), and the energy-aggregated bi-level ℓ2,1 (energy vector +
+    // L1Scratch) all pin to zero per-call heap allocations once warm.
+    // Radii are chosen so every kernel takes its scratch-using branch,
+    // not an early degenerate return.
+    use mlproj::core::matrix::Matrix;
+    use mlproj::projection::Method;
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(50);
+    let y = Matrix::random_uniform(24, 40, -1.0, 1.0, &mut rng);
+    let specs = [
+        ProjectionSpec::l1inf(1.5).with_method(Method::ExactLinf1Newton),
+        ProjectionSpec::intersect_l1l2(6.0, 2.0),
+        ProjectionSpec::intersect_l1linf(6.0, 0.5),
+        ProjectionSpec::bilevel(Norm::L1, Norm::L2, 1.5).with_method(Method::BilevelL21Energy),
+    ];
+    for spec in specs {
+        let method = spec.method;
+        let mut plan = spec.compile_for_matrix(24, 40).unwrap();
+        let mut x = y.clone();
+        plan.project_matrix_inplace(&mut x).unwrap();
+
+        let mut x2 = y.clone();
+        let before = alloc_calls();
+        plan.project_matrix_inplace(&mut x2).unwrap();
+        let after = alloc_calls();
+        assert_eq!(
+            after - before,
+            0,
+            "warm {method:?} plan allocated {} times",
+            after - before
+        );
+        assert_ne!(x2.data(), y.data(), "{method:?} did no work");
+    }
+}
+
+#[test]
 fn warm_trilevel_l1_final_projects_without_heap_allocation() {
     // Tri-level ℓ1,∞,∞ — the paper's Algorithm 5 — ends in an ℓ1
     // projection; with the workspace scratch it is allocation-free too.
@@ -238,6 +278,7 @@ fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
     let req = ProjectRequest {
         norms: vec![Norm::Linf, Norm::L1],
         eta: 1.0,
+        eta2: 0.0,
         l1_algo: L1Algo::Condat,
         method: Method::Compositional,
         layout: WireLayout::Matrix,
@@ -298,6 +339,7 @@ fn warm_admission_and_shed_decisions_allocate_nothing() {
     let key = PlanKey {
         norms: vec![Norm::Linf, Norm::L1],
         eta_bits: 1.0f64.to_bits(),
+        eta2_bits: 0,
         l1_algo: L1Algo::Condat,
         method: Method::Compositional,
         layout: WireLayout::Matrix,
@@ -384,6 +426,7 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
     let key = PlanKey {
         norms: vec![Norm::Linf, Norm::L1],
         eta_bits: 1.0f64.to_bits(),
+        eta2_bits: 0,
         l1_algo: mlproj::projection::l1::L1Algo::Condat,
         method: Method::Compositional,
         layout: WireLayout::Matrix,

@@ -62,6 +62,7 @@ fn aggressor(addr: &str, class: u8, seed: u64) -> Tally {
         reqs.push(ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Tensor,
@@ -133,6 +134,7 @@ fn protected_class_survives_a_sustained_flood() {
         let req = ProjectRequest {
             norms: spec.norms.clone(),
             eta: spec.eta,
+            eta2: spec.eta2,
             l1_algo: spec.l1_algo,
             method: spec.method,
             layout: WireLayout::Matrix,

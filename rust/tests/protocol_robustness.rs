@@ -19,6 +19,7 @@ fn sample_meta() -> ProjectMeta {
     ProjectMeta {
         norms: vec![Norm::Linf, Norm::L1],
         eta: 1.25,
+        eta2: 0.0,
         l1_algo: L1Algo::Condat,
         method: Method::Compositional,
         layout: WireLayout::Matrix,
@@ -31,6 +32,7 @@ fn sample_request() -> ProjectRequest {
     ProjectRequest {
         norms: vec![Norm::Linf, Norm::L1],
         eta: 1.25,
+        eta2: 0.0,
         l1_algo: L1Algo::Condat,
         method: Method::Compositional,
         layout: WireLayout::Matrix,

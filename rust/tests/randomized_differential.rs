@@ -9,9 +9,12 @@
 //!
 //! * random shapes (rank 1–3), radii (including 0 and in-ball), norm
 //!   stacks, and ℓ1 threshold algorithms;
-//! * every `Method` variant — compositional plus the exact baselines
-//!   (`ExactNewton`, `ExactSortScan`, `ExactFlatL1`), referenced against
-//!   the legacy exact kernels;
+//! * every `Method` variant — compositional, the exact baselines
+//!   (`ExactNewton`, `ExactSortScan`, `ExactFlatL1`), the Chau–Wohlberg
+//!   `ExactLinf1Newton`, the Su–Yu intersections (`IntersectL1L2`,
+//!   `IntersectL1Linf`, with a second radius η₂ riding the wire), and
+//!   the energy-aggregated `BilevelL21Energy` — each referenced against
+//!   a standalone kernel or an inline naive transcription;
 //! * the `Serial` and `Pool` execution backends (the paper's Prop. 6.4
 //!   parallel decomposition is aggregation-order-invariant by design,
 //!   so pooling may not change a single bit);
@@ -27,13 +30,17 @@
 //! and every assertion message prints the case seed so a failure
 //! reproduces in isolation.
 
+use mlproj::core::kernels;
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
 use mlproj::core::sort::{l1_norm, l2_norm, max_abs};
 use mlproj::core::tensor::Tensor;
 use mlproj::core::MlprojError;
-use mlproj::projection::l1::{project_l1_inplace_with, L1Algo};
+use mlproj::projection::intersection::{project_l1l2_inplace, project_l1linf_inplace};
+use mlproj::projection::l1::{project_l1_inplace_with, threshold_on_nonneg, L1Algo, L1Scratch};
 use mlproj::projection::l1inf_exact::{project_l1inf_newton, project_l1inf_sortscan};
+use mlproj::projection::l2::project_l2_inplace;
+use mlproj::projection::linf1_exact::project_linf1_newton;
 use mlproj::projection::norms::aggregate_leading_norm;
 use mlproj::projection::{ExecBackend, Method, Norm, ProjectionSpec};
 use mlproj::service::{
@@ -64,6 +71,9 @@ struct Case {
     shape: Vec<usize>,
     norms: Vec<Norm>,
     eta: f64,
+    /// Second radius — drawn only for the intersection methods, `0.0`
+    /// everywhere else (the spec validator enforces exactly that).
+    eta2: f64,
     algo: L1Algo,
     method: Method,
     /// Compile through `compile_for_matrix` (column-major bi-level
@@ -89,10 +99,11 @@ fn draw_case(rng: &mut Rng) -> Case {
     };
     let mut matrix_layout = rank == 2 && !flat && rng.bernoulli(0.5);
     let algo = ALGOS[rng.below(3)];
-    // Method: mostly compositional; the exact baselines are drawn onto
-    // the spec shapes they support (the norm stack is forced to match,
-    // keeping every generated case compile-valid).
-    let method = match rng.below(10) {
+    // Method: mostly compositional; the exact/intersection methods are
+    // drawn onto the spec shapes they support (the norm stack is forced
+    // to match, keeping every generated case compile-valid).
+    let mut eta2 = 0.0;
+    let method = match rng.below(12) {
         0 | 1 if rank == 2 => {
             // Exact Euclidean ℓ1,∞ requires ν = [linf, l1] + matrix.
             matrix_layout = true;
@@ -115,6 +126,42 @@ fn draw_case(rng: &mut Rng) -> Case {
             };
             Method::ExactFlatL1
         }
+        3 | 4 if rank == 2 => {
+            // Chau–Wohlberg exact ℓ∞,1: the same spec shape as the
+            // presorted ℓ1,∞ baselines (ν = [linf, l1] + matrix).
+            matrix_layout = true;
+            norms = vec![Norm::Linf, Norm::L1];
+            Method::ExactLinf1Newton
+        }
+        5 | 6 if rank == 2 => {
+            // Energy-aggregated bi-level ℓ2,1 (ν = [l2, l1] + matrix).
+            matrix_layout = true;
+            norms = vec![Norm::L2, Norm::L1];
+            Method::BilevelL21Energy
+        }
+        7 | 8 => {
+            // Su–Yu intersections run on the flattened payload at any
+            // rank: the two-norm list is the constraint pair, not a
+            // per-level stack. η₂ in-ball ~1/5 of the time so the
+            // single-constraint degenerate branch stays covered.
+            matrix_layout = false;
+            let linf = rng.bernoulli(0.5);
+            norms = if linf {
+                vec![Norm::L1, Norm::Linf]
+            } else {
+                vec![Norm::L1, Norm::L2]
+            };
+            eta2 = if rng.bernoulli(0.2) {
+                1e6
+            } else {
+                rng.uniform_range(0.05, 2.5)
+            };
+            if linf {
+                Method::IntersectL1Linf
+            } else {
+                Method::IntersectL1L2
+            }
+        }
         _ => Method::Compositional,
     };
     let eta = match rng.below(6) {
@@ -135,7 +182,7 @@ fn draw_case(rng: &mut Rng) -> Case {
         })
         .collect();
     let pool_workers = 1 + rng.below(3);
-    Case { shape, norms, eta, algo, method, matrix_layout, batch, pool_workers, payloads }
+    Case { shape, norms, eta, eta2, algo, method, matrix_layout, batch, pool_workers, payloads }
 }
 
 // ---------------------------------------------------------------------------
@@ -280,6 +327,54 @@ fn reference_project(case: &Case, payload: &[f32]) -> Vec<f32> {
             project_l1_inplace_with(&mut x, case.eta, case.algo);
             return x;
         }
+        Method::ExactLinf1Newton => {
+            let y = Matrix::from_col_major(case.shape[0], case.shape[1], payload.to_vec())
+                .expect("reference matrix");
+            return project_linf1_newton(&y, case.eta).data().to_vec();
+        }
+        Method::IntersectL1L2 => {
+            let mut x = payload.to_vec();
+            project_l1l2_inplace(&mut x, case.eta, case.eta2);
+            return x;
+        }
+        Method::IntersectL1Linf => {
+            let mut x = payload.to_vec();
+            project_l1linf_inplace(&mut x, case.eta, case.eta2);
+            return x;
+        }
+        Method::BilevelL21Energy => {
+            // Inline naive transcription of the energy-aggregated kernel
+            // (the `bilevel::bilevel_l21_energy_inplace` free function
+            // pins Condat; the plan honours the case's ℓ1 algorithm, so
+            // the reference must too).
+            let (rows, cols) = (case.shape[0], case.shape[1]);
+            let mut x = payload.to_vec();
+            if rows == 0 || cols == 0 {
+                return x;
+            }
+            let mut w = Vec::with_capacity(cols);
+            let mut sum = 0.0f64;
+            for j in 0..cols {
+                let e = kernels::sq_sum(&payload[j * rows..(j + 1) * rows]) as f32;
+                w.push(e);
+                sum += e as f64;
+            }
+            let mut scratch = L1Scratch::with_capacity(cols);
+            let tau = threshold_on_nonneg(&w, sum, case.eta, case.algo, &mut scratch) as f32;
+            if tau <= 0.0 {
+                return x;
+            }
+            for j in 0..cols {
+                let u = (w[j] - tau).max(0.0);
+                let col = &mut x[j * rows..(j + 1) * rows];
+                if u == 0.0 {
+                    col.fill(0.0);
+                } else {
+                    project_l2_inplace(col, u as f64);
+                }
+            }
+            return x;
+        }
         Method::Compositional => {}
     }
     if case.norms.len() == 1 {
@@ -311,6 +406,7 @@ fn compile(case: &Case, backend: ExecBackend) -> mlproj::projection::ProjectionP
     let spec = ProjectionSpec::new(case.norms.clone(), case.eta)
         .with_l1_algo(case.algo)
         .with_method(case.method)
+        .with_eta2(case.eta2)
         .with_backend(backend);
     if case.matrix_layout {
         spec.compile_for_matrix(case.shape[0], case.shape[1])
@@ -396,9 +492,12 @@ fn differential_cases_cover_the_spec_space() {
     }
     assert_eq!(ranks, [1, 2, 3].into_iter().collect());
     assert_eq!(algos.len(), 3);
-    // No Method variant may silently drop out of the generator.
-    for variant in ["Compositional", "ExactNewton", "ExactSortScan", "ExactFlatL1"] {
-        let count = methods.get(variant).copied().unwrap_or(0);
+    // No Method variant may silently drop out of the generator — this
+    // list must stay in lockstep with `Method::ALL`.
+    let labels: Vec<String> = Method::ALL.iter().map(|m| format!("{m:?}")).collect();
+    assert_eq!(labels.len(), 8, "new Method variants must join the generator: {labels:?}");
+    for variant in &labels {
+        let count = methods.get(variant.as_str()).copied().unwrap_or(0);
         assert!(count >= 3, "method {variant} appeared only {count} times: {methods:?}");
     }
     assert!(
@@ -419,6 +518,7 @@ fn case_to_request(case: &Case, payload: &[f32]) -> ProjectRequest {
     ProjectRequest {
         norms: case.norms.clone(),
         eta: case.eta,
+        eta2: case.eta2,
         l1_algo: case.algo,
         method: case.method,
         layout: if case.matrix_layout { WireLayout::Matrix } else { WireLayout::Tensor },

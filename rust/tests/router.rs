@@ -27,6 +27,7 @@ fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
     ProjectRequest {
         norms: spec.norms.clone(),
         eta: spec.eta,
+        eta2: spec.eta2,
         l1_algo: spec.l1_algo,
         method: spec.method,
         layout: WireLayout::Matrix,

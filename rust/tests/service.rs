@@ -24,6 +24,7 @@ fn wire_request(spec: &ProjectionSpec, y: &Matrix) -> ProjectRequest {
     ProjectRequest {
         norms: spec.norms.clone(),
         eta: spec.eta,
+        eta2: spec.eta2,
         l1_algo: spec.l1_algo,
         method: spec.method,
         layout: WireLayout::Matrix,
@@ -118,7 +119,111 @@ fn exact_and_generic_methods_round_trip_through_the_wire() {
         l2l1.project_matrix(&y).unwrap().data()
     );
 
+    // The rest of the exact family, one request per new method byte:
+    // the Chau–Wohlberg sort-free ℓ∞,1, both Su–Yu intersections (η₂
+    // rides the wire), and the energy-aggregated bi-level ℓ2,1.
+    let family = [
+        ProjectionSpec::l1inf(1.0).with_method(Method::ExactLinf1Newton),
+        ProjectionSpec::intersect_l1l2(3.0, 0.9),
+        ProjectionSpec::intersect_l1linf(3.0, 0.4),
+        ProjectionSpec::bilevel(Norm::L1, Norm::L2, 0.8).with_method(Method::BilevelL21Energy),
+    ];
+    for spec in family {
+        assert_eq!(
+            client.project_matrix(&spec, &y).unwrap().data(),
+            spec.project_matrix(&y).unwrap().data(),
+            "method {:?} diverged through the wire",
+            spec.method
+        );
+    }
+
     client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn non_finite_payloads_get_typed_invalid_replies_and_the_server_keeps_serving() {
+    // The headline regression for this family: a NaN payload routed into
+    // the presorted ExactSortScan kernel used to panic a worker thread
+    // inside a `partial_cmp().unwrap()` sort. Now the operator boundary
+    // rejects non-finite input with a typed Invalid reply, and both the
+    // connection and the server outlive the poisoned request.
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let handle = server.spawn();
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let mut rng = Rng::new(11);
+    let clean = Matrix::random_uniform(8, 24, -1.0, 1.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(1.0).with_method(Method::ExactSortScan);
+    let expect = spec.project_matrix(&clean).unwrap();
+
+    for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        let mut req = wire_request(&spec, &clean);
+        req.payload[37] = poison;
+        let err = client.project(req).unwrap_err();
+        assert!(
+            matches!(err, MlprojError::InvalidArgument(ref m) if m.contains("non-finite")),
+            "want typed InvalidArgument(non-finite), got {err:?}"
+        );
+        // Same connection, next request: the server kept serving.
+        assert_eq!(client.project_matrix(&spec, &clean).unwrap().data(), expect.data());
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "responses_err"), 3);
+    assert_eq!(stat(&stats, "responses_ok"), 3);
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn non_finite_payload_in_a_same_key_batch_fails_alone() {
+    // Per-job isolation: three same-key pipelined requests coalesce into
+    // one micro-batch on a single worker; the poisoned one must come
+    // back typed Invalid while its batchmates are answered
+    // bit-identically.
+    let cfg = SchedulerConfig { workers: 1, queue_depth: 64, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut rng = Rng::new(77);
+    let y = Matrix::random_uniform(3, 4, -1.0, 1.0, &mut rng);
+    let spec = ProjectionSpec::l1inf(0.7);
+    let expect = spec.project_matrix(&y).unwrap();
+    let req = wire_request(&spec, &y);
+    let mut bad = req.clone();
+    bad.payload[5] = f32::NAN;
+
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    let mut corrs = vec![conn.submit(&req).unwrap()];
+    let bad_corr = conn.submit(&bad).unwrap();
+    corrs.push(conn.submit(&req).unwrap());
+
+    let (mut oks, mut errs) = (Vec::new(), Vec::new());
+    while conn.in_flight() > 0 {
+        let (corr, result) = conn.recv().unwrap();
+        match result {
+            Ok(payload) => {
+                assert_eq!(payload, expect.data(), "corr {corr}");
+                oks.push(corr);
+            }
+            Err(err) => {
+                assert!(
+                    matches!(err, MlprojError::InvalidArgument(ref m) if m.contains("non-finite")),
+                    "corr {corr}: {err:?}"
+                );
+                errs.push(corr);
+            }
+        }
+    }
+    oks.sort_unstable();
+    corrs.sort_unstable();
+    assert_eq!(oks, corrs, "both clean batchmates must succeed");
+    assert_eq!(errs, vec![bad_corr], "exactly the poisoned job must fail");
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
     handle.join().unwrap();
 }
 
@@ -295,6 +400,7 @@ fn corrupted_chunk_checksum_is_rejected_and_the_connection_survives() {
         meta: mlproj::service::ProjectMeta {
             norms: req.norms.clone(),
             eta: req.eta,
+            eta2: req.eta2,
             l1_algo: req.l1_algo,
             method: req.method,
             layout: req.layout,
@@ -361,6 +467,7 @@ fn pipelined_flood_gets_typed_busy_backpressure() {
     let slow_req = ProjectRequest {
         norms: slow_spec.norms.clone(),
         eta: slow_spec.eta,
+        eta2: slow_spec.eta2,
         l1_algo: slow_spec.l1_algo,
         method: slow_spec.method,
         layout: WireLayout::Tensor,
@@ -436,6 +543,7 @@ fn per_connection_inflight_cap_rejects_with_busy() {
     let slow_req = ProjectRequest {
         norms: slow_spec.norms.clone(),
         eta: slow_spec.eta,
+        eta2: slow_spec.eta2,
         l1_algo: slow_spec.l1_algo,
         method: slow_spec.method,
         layout: WireLayout::Tensor,
