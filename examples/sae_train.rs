@@ -46,7 +46,8 @@ fn main() {
     println!("loss curve (bi-level run, every 5 epochs):");
     for (e, chunk) in proj.loss_curve.chunks(5).enumerate() {
         let line: Vec<String> = chunk.iter().map(|l| format!("{l:.4}")).collect();
-        let phase = if e * 5 < 30 { "d1" } else { "d2" };
+        // The d1/d2 boundary sits at epochs1, wherever the config put it.
+        let phase = if e * 5 < cfg.epochs1 { "d1" } else { "d2" };
         println!("  [{phase}] epochs {:3}..{:3}: {}", e * 5, e * 5 + chunk.len(), line.join(" "));
     }
 

@@ -366,6 +366,17 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.test_frac = 1.5;
         assert!(cfg.validate().is_err());
+        // The open-interval edges themselves are invalid: 0.0 would make
+        // the test split empty, 1.0 the train split.
+        let mut cfg = TrainConfig::default();
+        cfg.test_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.test_frac = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.test_frac = f64::NAN;
+        assert!(cfg.validate().is_err());
         let mut cfg = TrainConfig::default();
         cfg.eta2 = -0.1;
         assert!(cfg.validate().is_err());

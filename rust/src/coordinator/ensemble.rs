@@ -1,0 +1,632 @@
+//! One-pass ensemble SAE training across K projection radii.
+//!
+//! Sweeping the radius η is how the paper's sparsity↔accuracy trade-off
+//! (Fig. 4/5) is mapped out, and the naive sweep is K full
+//! double-descent runs. But the members of such a sweep share
+//! everything until the first projection touches the weights: same
+//! dataset, same init, same descent-1 prefix. [`EnsembleTrainer`]
+//! exploits that — it runs the shared prefix once, forks K member
+//! states, and from the first projection event on trains the members in
+//! lockstep, issuing each event's K projections as *one* batched call:
+//!
+//! * **Local**: the operator layer's "same shape, many radii" fast path
+//!   ([`ProjectionPlan::project_batch_inplace_radii`]) when the kernel
+//!   supports it, per-member plans otherwise.
+//! * **Remote, multi frame** ([`WireMode::Multi`]): a single
+//!   `ProjectMulti` frame carrying K payloads + K radii to `mlproj
+//!   serve`, which coalesces them into the same kernel call.
+//! * **Remote, pipelined** ([`WireMode::Pipelined`]): K ordinary
+//!   `Project` frames in flight on one [`PipelinedConn`]; at the final
+//!   projection event each member's descent 2 starts the moment *its*
+//!   reply lands, overlapping compute with siblings still in flight.
+//!
+//! Steps are computed by the in-process [`NativeSae`] engine, so the
+//! ensemble needs neither compiled artifacts nor (in local mode) a
+//! server — `cargo test` exercises the whole path hermetically.
+//!
+//! The ensemble's epoch/projection order per member is exactly
+//! [`Trainer::run_once`]'s (cadence events included), so K=1 degenerates
+//! to a plain double-descent run and [`EnsembleTrainer::run_sequential`]
+//! — the naive K-pass baseline raced by `mlproj ensemble` — is bitwise
+//! comparable.
+//!
+//! [`Trainer::run_once`]: crate::coordinator::trainer::Trainer::run_once
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::config::{DatasetKind, ProjectionKind, TrainConfig};
+use crate::coordinator::metrics::accuracy;
+use crate::coordinator::native::NativeSae;
+use crate::coordinator::params::SaeState;
+use crate::coordinator::trainer::build_dataset;
+use crate::core::error::{MlprojError, Result};
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::SyntheticSpec;
+use crate::projection::operator::{ProjectionPlan, ProjectionSpec};
+use crate::service::{PipelinedConn, ProjectMultiRequest, ProjectRequest, Qos, WireLayout};
+
+/// How remote projections travel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    /// One `ProjectMulti` frame per event (K payloads, K radii).
+    Multi,
+    /// K pipelined `Project` frames per event, replies in completion
+    /// order.
+    Pipelined,
+}
+
+/// Where the ensemble's projections execute.
+#[derive(Debug, Clone)]
+pub enum EnsembleBackend {
+    /// In-process through the operator layer (no server needed).
+    Local,
+    /// Over the wire to a protocol-v2 `mlproj serve`.
+    Remote {
+        /// `HOST:PORT` of the server.
+        addr: String,
+        /// Frame strategy.
+        mode: WireMode,
+    },
+}
+
+/// Configuration for a K-radius ensemble run.
+#[derive(Debug, Clone)]
+pub struct EnsembleConfig {
+    /// Base training config. `epochs1/epochs2/lr/alpha/test_frac/seed/
+    /// project_every/projection/dataset` are honored; `eta` is ignored
+    /// in favor of [`EnsembleConfig::etas`].
+    pub base: TrainConfig,
+    /// One radius per ensemble member (any order, need not be distinct).
+    pub etas: Vec<f64>,
+    /// Hidden width `h` of the native SAE.
+    pub hidden: usize,
+    /// Training batch size.
+    pub batch: usize,
+    /// Synthetic-dataset sample-count override (`0` = generator
+    /// default). Ignored for LUNG.
+    pub n_samples: usize,
+    /// Synthetic-dataset feature-count override (`0` = generator
+    /// default). Ignored for LUNG.
+    pub n_features: usize,
+}
+
+impl EnsembleConfig {
+    /// A config with no members — fill in [`EnsembleConfig::etas`]
+    /// before use.
+    pub fn new(base: TrainConfig) -> Self {
+        EnsembleConfig {
+            base,
+            etas: Vec::new(),
+            hidden: 64,
+            batch: 32,
+            n_samples: 0,
+            n_features: 0,
+        }
+    }
+
+    /// Reject configs the ensemble cannot run.
+    pub fn validate(&self) -> Result<()> {
+        self.base.validate()?;
+        if self.etas.is_empty() {
+            return Err(MlprojError::Config("ensemble needs at least one radius (--etas)".into()));
+        }
+        for (i, &eta) in self.etas.iter().enumerate() {
+            if !eta.is_finite() || eta < 0.0 {
+                return Err(MlprojError::Config(format!(
+                    "ensemble radius {i} is {eta}; radii must be finite and non-negative"
+                )));
+            }
+        }
+        if self.hidden == 0 || self.batch == 0 {
+            return Err(MlprojError::Config("hidden width and batch size must be >= 1".into()));
+        }
+        match self.base.projection {
+            ProjectionKind::None => Err(MlprojError::Config(
+                "an ensemble over radii needs a projection; `none` has no radius to sweep".into(),
+            )),
+            ProjectionKind::PallasHlo => Err(MlprojError::Config(
+                "the pallas artifact path is single-radius; pick a native projection kind".into(),
+            )),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One ensemble member's outcome — a point on the sparsity↔accuracy
+/// Pareto front.
+#[derive(Debug, Clone)]
+pub struct MemberResult {
+    /// The member's radius η.
+    pub eta: f64,
+    /// Held-out accuracy, percent.
+    pub accuracy_pct: f64,
+    /// Structured sparsity (share of dead features), percent.
+    pub sparsity_pct: f64,
+    /// Surviving feature count after the final projection.
+    pub features_alive: usize,
+    /// Projection wall time attributed to this member, ms: its share of
+    /// every coalesced event (event wall / K) plus, on the pipelined
+    /// final event, its own submit→reply wall.
+    pub projection_ms: f64,
+    /// Mean batch loss per epoch (shared prefix + member epochs).
+    pub loss_curve: Vec<f32>,
+}
+
+/// The full ensemble outcome.
+#[derive(Debug, Clone)]
+pub struct EnsembleResult {
+    /// Per-member results, in [`EnsembleConfig::etas`] order.
+    pub members: Vec<MemberResult>,
+    /// End-to-end wall time of the run.
+    pub wall_secs: f64,
+    /// Descent-1 epochs executed once and shared by every member.
+    pub shared_epochs: usize,
+}
+
+impl EnsembleResult {
+    /// `(η, sparsity %, accuracy %)` triples sorted by ascending η —
+    /// the experiment artifact's Pareto front.
+    pub fn pareto(&self) -> Vec<(f64, f64, f64)> {
+        let mut pts: Vec<(f64, f64, f64)> = self
+            .members
+            .iter()
+            .map(|m| (m.eta, m.sparsity_pct, m.accuracy_pct))
+            .collect();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        pts
+    }
+}
+
+/// Projection machinery for one run, chosen once from the backend.
+enum Proj {
+    /// One plan, per-payload radii (the many-radii kernel fast path).
+    Batched(Box<ProjectionPlan>),
+    /// One plan per member (kernels without the radii path).
+    PerMember(Vec<ProjectionPlan>),
+    /// A protocol-v2 connection to `mlproj serve`.
+    Remote(Box<PipelinedConn>, WireMode),
+}
+
+/// The K-radius one-pass trainer. See the module docs for the protocol.
+pub struct EnsembleTrainer {
+    cfg: EnsembleConfig,
+    backend: EnsembleBackend,
+    /// Per-phase log lines when true.
+    pub verbose: bool,
+}
+
+impl EnsembleTrainer {
+    /// Validate the config and bind the backend.
+    pub fn new(cfg: EnsembleConfig, backend: EnsembleBackend) -> Result<Self> {
+        cfg.validate()?;
+        Ok(EnsembleTrainer { cfg, backend, verbose: false })
+    }
+
+    /// One-pass ensemble training: shared prefix, fork, lockstep
+    /// members with batched projection events.
+    pub fn run(&self) -> Result<EnsembleResult> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let kcount = cfg.etas.len();
+        let mut rng = Rng::new(cfg.base.seed);
+        let (train, test) = build_dataset(&cfg.base, self.synthetic_size(), &mut rng)?;
+        let mut engine = NativeSae::new(train.d, cfg.hidden, train.k);
+        let mut state0 = SaeState::init_dims(train.d, cfg.hidden, train.k, &mut rng);
+
+        // Members diverge at the first projection event; everything
+        // before it runs once. With a cadence that is the first
+        // `project_every` epochs, otherwise all of descent 1.
+        let cadence = cfg.base.project_every;
+        let shared = if cadence > 0 { cadence.min(cfg.base.epochs1) } else { cfg.base.epochs1 };
+        let mut shared_losses = Vec::with_capacity(shared);
+        for _ in 0..shared {
+            shared_losses.push(self.run_epoch(&mut engine, &mut state0, &train)?);
+        }
+        if self.verbose {
+            eprintln!("[ensemble] shared prefix: {shared} epochs, forking K={kcount}");
+        }
+
+        let mut states: Vec<SaeState> = (0..kcount).map(|_| state0.clone()).collect();
+        let mut curves: Vec<Vec<f32>> = vec![shared_losses; kcount];
+        let mut proj_ms = vec![0.0f64; kcount];
+        let mut alive = vec![train.d; kcount];
+        let mut proj = self.make_proj(&cfg.etas, cfg.hidden, train.d)?;
+
+        // Remaining descent 1 in lockstep, cadence events batched
+        // across members (Trainer::run_once order: project after epoch
+        // `e` when `(e+1) % cadence == 0`).
+        if cadence > 0 && shared > 0 && shared % cadence == 0 {
+            self.project_all(&mut proj, &cfg.etas, &mut states, &mut proj_ms, &mut alive)?;
+        }
+        for completed in shared + 1..=cfg.base.epochs1 {
+            for (i, st) in states.iter_mut().enumerate() {
+                curves[i].push(self.run_epoch(&mut engine, st, &train)?);
+            }
+            if cadence > 0 && completed % cadence == 0 {
+                self.project_all(&mut proj, &cfg.etas, &mut states, &mut proj_ms, &mut alive)?;
+            }
+        }
+
+        // Final projection event + descent 2 + evaluation. On the
+        // pipelined wire the event overlaps with member compute;
+        // everywhere else it is one batched call.
+        let mut members: Vec<Option<MemberResult>> = (0..kcount).map(|_| None).collect();
+        if let Proj::Remote(conn, WireMode::Pipelined) = &mut proj {
+            let ev0 = Instant::now();
+            let mut by_corr = HashMap::new();
+            for (i, st) in states.iter().enumerate() {
+                let req = self.single_request(st, cfg.etas[i])?;
+                by_corr.insert(conn.submit(&req)?, i);
+            }
+            while !by_corr.is_empty() {
+                let (corr, res) = conn.recv()?;
+                let i = by_corr.remove(&corr).ok_or_else(|| {
+                    MlprojError::Protocol(format!("reply for unknown correlation id {corr}"))
+                })?;
+                let m = Matrix::from_col_major(cfg.hidden, train.d, res?)?;
+                alive[i] = states[i].set_projected_w1(&m)?;
+                proj_ms[i] += ev0.elapsed().as_secs_f64() * 1e3;
+                // This member's descent 2 runs while siblings' replies
+                // are still in flight — the pipelining payoff.
+                let mr = self.finish_member(&mut engine, &mut states[i], &train, &test, i)?;
+                members[i] = Some(self.member_result(i, mr, &states[i], &curves, &proj_ms, &alive));
+            }
+        } else {
+            self.project_all(&mut proj, &cfg.etas, &mut states, &mut proj_ms, &mut alive)?;
+            for i in 0..kcount {
+                let mr = self.finish_member(&mut engine, &mut states[i], &train, &test, i)?;
+                members[i] = Some(self.member_result(i, mr, &states[i], &curves, &proj_ms, &alive));
+            }
+        }
+
+        let members = members.into_iter().map(|m| m.expect("every member finished")).collect();
+        Ok(EnsembleResult { members, wall_secs: t0.elapsed().as_secs_f64(), shared_epochs: shared })
+    }
+
+    /// The naive baseline: K full, independent double-descent passes
+    /// (dataset rebuilt and state re-initialized from the same seed per
+    /// member, so member 0 of a K=1 ensemble is bitwise this).
+    pub fn run_sequential(&self) -> Result<EnsembleResult> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let mut members = Vec::with_capacity(cfg.etas.len());
+        for (i, &eta) in cfg.etas.iter().enumerate() {
+            let mut rng = Rng::new(cfg.base.seed);
+            let (train, test) = build_dataset(&cfg.base, self.synthetic_size(), &mut rng)?;
+            let mut engine = NativeSae::new(train.d, cfg.hidden, train.k);
+            let mut state = SaeState::init_dims(train.d, cfg.hidden, train.k, &mut rng);
+            let etas = [eta];
+            let mut proj = self.make_proj(&etas, cfg.hidden, train.d)?;
+            let mut curve = Vec::new();
+            let mut proj_ms = [0.0f64];
+            let mut alive = [train.d];
+            let cadence = cfg.base.project_every;
+            for epoch in 0..cfg.base.epochs1 {
+                curve.push(self.run_epoch(&mut engine, &mut state, &train)?);
+                if cadence > 0 && (epoch + 1) % cadence == 0 {
+                    let one = std::slice::from_mut(&mut state);
+                    self.project_all(&mut proj, &etas, one, &mut proj_ms, &mut alive)?;
+                }
+            }
+            {
+                let one = std::slice::from_mut(&mut state);
+                self.project_all(&mut proj, &etas, one, &mut proj_ms, &mut alive)?;
+            }
+            let (extra, acc_pct) = self.finish_member(&mut engine, &mut state, &train, &test, i)?;
+            curve.extend(extra);
+            members.push(MemberResult {
+                eta,
+                accuracy_pct: acc_pct,
+                sparsity_pct: state.sparsity_pct(),
+                features_alive: alive[0],
+                projection_ms: proj_ms[0],
+                loss_curve: curve,
+            });
+        }
+        Ok(EnsembleResult { members, wall_secs: t0.elapsed().as_secs_f64(), shared_epochs: 0 })
+    }
+
+    /// Descent 2 + held-out evaluation for one member. Returns the
+    /// member's descent-2 loss curve and accuracy percent.
+    fn finish_member(
+        &self,
+        engine: &mut NativeSae,
+        state: &mut SaeState,
+        train: &Dataset,
+        test: &Dataset,
+        idx: usize,
+    ) -> Result<(Vec<f32>, f64)> {
+        let mut extra = Vec::with_capacity(self.cfg.base.epochs2);
+        for _ in 0..self.cfg.base.epochs2 {
+            extra.push(self.run_epoch(engine, state, train)?);
+        }
+        if test.n == 0 {
+            return Err(MlprojError::Config(
+                "empty test split: no held-out samples to evaluate (check test_frac)".into(),
+            ));
+        }
+        let logits = engine.logits(state, &test.x, test.n)?;
+        let acc_pct = 100.0 * accuracy(&logits, state.k, &test.y, test.n);
+        if self.verbose {
+            eprintln!(
+                "[ensemble] member {idx} η={} acc {acc_pct:.2}% sparsity {:.2}%",
+                self.cfg.etas.get(idx).copied().unwrap_or(f64::NAN),
+                state.sparsity_pct()
+            );
+        }
+        Ok((extra, acc_pct))
+    }
+
+    fn member_result(
+        &self,
+        i: usize,
+        (extra, acc_pct): (Vec<f32>, f64),
+        state: &SaeState,
+        curves: &[Vec<f32>],
+        proj_ms: &[f64],
+        alive: &[usize],
+    ) -> MemberResult {
+        let mut loss_curve = curves[i].clone();
+        loss_curve.extend(extra);
+        MemberResult {
+            eta: self.cfg.etas[i],
+            accuracy_pct: acc_pct,
+            sparsity_pct: state.sparsity_pct(),
+            features_alive: alive[i],
+            projection_ms: proj_ms[i],
+            loss_curve,
+        }
+    }
+
+    /// One epoch over wrap-padded full batches; mean batch loss.
+    fn run_epoch(
+        &self,
+        engine: &mut NativeSae,
+        state: &mut SaeState,
+        train: &Dataset,
+    ) -> Result<f32> {
+        let (lr, alpha) = (self.cfg.base.lr, self.cfg.base.alpha);
+        let batches = train.batches(self.cfg.batch);
+        let nb = batches.len();
+        let mut total = 0.0f64;
+        for (x, y) in &batches {
+            let (loss, _acc) = engine.train_step(state, x, y, self.cfg.batch, lr, alpha)?;
+            total += loss as f64;
+        }
+        Ok((total / nb.max(1) as f64) as f32)
+    }
+
+    /// One projection event for every member in `states`, through
+    /// whichever machinery `proj` holds; wall time is split evenly.
+    fn project_all(
+        &self,
+        proj: &mut Proj,
+        etas: &[f64],
+        states: &mut [SaeState],
+        proj_ms: &mut [f64],
+        alive: &mut [usize],
+    ) -> Result<()> {
+        let (h, d) = (states[0].h, states[0].d);
+        let t0 = Instant::now();
+        match proj {
+            Proj::Batched(plan) => {
+                let mut payloads = feature_payloads(states)?;
+                plan.project_batch_inplace_radii(&mut payloads, etas)?;
+                for ((st, p), a) in states.iter_mut().zip(payloads).zip(alive.iter_mut()) {
+                    *a = st.set_projected_w1(&Matrix::from_col_major(h, d, p)?)?;
+                }
+            }
+            Proj::PerMember(plans) => {
+                for (i, st) in states.iter_mut().enumerate() {
+                    let mut fm = st.w1_feature_matrix()?;
+                    plans[i].project_matrix_inplace(&mut fm)?;
+                    alive[i] = st.set_projected_w1(&fm)?;
+                }
+            }
+            Proj::Remote(conn, WireMode::Multi) => {
+                let spec = self.spec_for(etas[0])?;
+                let req = ProjectMultiRequest {
+                    norms: spec.norms.clone(),
+                    etas: etas.to_vec(),
+                    eta2: spec.eta2,
+                    l1_algo: spec.l1_algo,
+                    method: spec.method,
+                    layout: WireLayout::Matrix,
+                    shape: vec![h, d],
+                    payloads: feature_payloads(states)?,
+                };
+                let results = conn.project_multi(&req)?;
+                for ((st, res), a) in states.iter_mut().zip(results).zip(alive.iter_mut()) {
+                    *a = st.set_projected_w1(&Matrix::from_col_major(h, d, res?)?)?;
+                }
+            }
+            Proj::Remote(conn, WireMode::Pipelined) => {
+                let mut by_corr = HashMap::new();
+                for (i, st) in states.iter().enumerate() {
+                    let req = self.single_request(st, etas[i])?;
+                    by_corr.insert(conn.submit(&req)?, i);
+                }
+                // Lockstep event: descent continues for everyone only
+                // after the slowest reply, so collect them all.
+                while !by_corr.is_empty() {
+                    let (corr, res) = conn.recv()?;
+                    let i = by_corr.remove(&corr).ok_or_else(|| {
+                        MlprojError::Protocol(format!("reply for unknown correlation id {corr}"))
+                    })?;
+                    alive[i] = states[i].set_projected_w1(&Matrix::from_col_major(h, d, res?)?)?;
+                }
+            }
+        }
+        let share = t0.elapsed().as_secs_f64() * 1e3 / states.len() as f64;
+        for ms in proj_ms.iter_mut() {
+            *ms += share;
+        }
+        Ok(())
+    }
+
+    /// Choose the projection machinery once per run.
+    fn make_proj(&self, etas: &[f64], h: usize, d: usize) -> Result<Proj> {
+        match &self.backend {
+            EnsembleBackend::Local => {
+                let lead = self.spec_for(etas[0])?.compile_for_matrix(h, d)?;
+                if lead.supports_multi_radius() {
+                    Ok(Proj::Batched(Box::new(lead)))
+                } else {
+                    let mut plans = Vec::with_capacity(etas.len());
+                    plans.push(lead);
+                    for &eta in &etas[1..] {
+                        plans.push(self.spec_for(eta)?.compile_for_matrix(h, d)?);
+                    }
+                    Ok(Proj::PerMember(plans))
+                }
+            }
+            EnsembleBackend::Remote { addr, mode } => {
+                let mut conn = PipelinedConn::connect(addr.as_str())?;
+                conn.ping()?; // negotiate the server's frame-size cap
+                Ok(Proj::Remote(Box::new(conn), *mode))
+            }
+        }
+    }
+
+    fn spec_for(&self, eta: f64) -> Result<ProjectionSpec> {
+        self.cfg.base.projection.spec(eta, self.cfg.base.eta2).ok_or_else(|| {
+            MlprojError::Config(format!(
+                "projection kind `{}` has no native operator",
+                self.cfg.base.projection.label()
+            ))
+        })
+    }
+
+    fn single_request(&self, state: &SaeState, eta: f64) -> Result<ProjectRequest> {
+        let spec = self.spec_for(eta)?;
+        let fm = state.w1_feature_matrix()?;
+        Ok(ProjectRequest {
+            norms: spec.norms.clone(),
+            eta: spec.eta,
+            eta2: spec.eta2,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Matrix,
+            shape: vec![fm.rows(), fm.cols()],
+            payload: fm.data().to_vec(),
+            qos: Qos::default(),
+        })
+    }
+
+    fn synthetic_size(&self) -> Option<(usize, usize)> {
+        if self.cfg.base.dataset != DatasetKind::Synthetic
+            || (self.cfg.n_samples == 0 && self.cfg.n_features == 0)
+        {
+            return None;
+        }
+        let spec = SyntheticSpec::default();
+        Some((
+            if self.cfg.n_samples == 0 { spec.n_samples } else { self.cfg.n_samples },
+            if self.cfg.n_features == 0 { spec.n_features } else { self.cfg.n_features },
+        ))
+    }
+}
+
+/// Feature-major w1 payloads for every member, one flat vec each.
+fn feature_payloads(states: &[SaeState]) -> Result<Vec<Vec<f32>>> {
+    states.iter().map(|s| Ok(s.w1_feature_matrix()?.data().to_vec())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(etas: Vec<f64>) -> EnsembleConfig {
+        let base = TrainConfig {
+            epochs1: 3,
+            epochs2: 2,
+            seed: 11,
+            projection: ProjectionKind::BilevelL1Inf,
+            ..TrainConfig::default()
+        };
+        let mut cfg = EnsembleConfig::new(base);
+        cfg.etas = etas;
+        cfg.hidden = 8;
+        cfg.batch = 16;
+        cfg.n_samples = 48;
+        cfg.n_features = 12;
+        cfg
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let cfg = tiny_cfg(vec![]);
+        assert!(matches!(cfg.validate(), Err(MlprojError::Config(_))), "empty etas");
+        let cfg = tiny_cfg(vec![1.0, f64::NAN]);
+        assert!(cfg.validate().is_err(), "non-finite radius");
+        let cfg = tiny_cfg(vec![1.0, -0.5]);
+        assert!(cfg.validate().is_err(), "negative radius");
+        let mut cfg = tiny_cfg(vec![1.0]);
+        cfg.hidden = 0;
+        assert!(cfg.validate().is_err(), "zero hidden");
+        let mut cfg = tiny_cfg(vec![1.0]);
+        cfg.base.projection = ProjectionKind::None;
+        assert!(cfg.validate().is_err(), "projection none");
+        let mut cfg = tiny_cfg(vec![1.0]);
+        cfg.base.projection = ProjectionKind::PallasHlo;
+        assert!(cfg.validate().is_err(), "pallas path");
+        assert!(tiny_cfg(vec![0.5, 1.0]).validate().is_ok());
+    }
+
+    /// A K=1 ensemble is a plain double-descent run: the one-pass path
+    /// and the sequential baseline must agree bitwise.
+    #[test]
+    fn k1_ensemble_degenerates_to_sequential() {
+        let mut cfg = tiny_cfg(vec![0.8]);
+        cfg.base.project_every = 2;
+        let tr = EnsembleTrainer::new(cfg, EnsembleBackend::Local).unwrap();
+        let one = tr.run().unwrap();
+        let seq = tr.run_sequential().unwrap();
+        assert_eq!(one.members.len(), 1);
+        let (a, b) = (&one.members[0], &seq.members[0]);
+        assert_eq!(a.loss_curve, b.loss_curve, "loss curves must match bitwise");
+        assert_eq!(a.accuracy_pct, b.accuracy_pct);
+        assert_eq!(a.sparsity_pct, b.sparsity_pct);
+        assert_eq!(a.features_alive, b.features_alive);
+        assert_eq!(one.shared_epochs, 2);
+    }
+
+    /// Growing η loosens the ball: the (ℓ1,∞) threshold is
+    /// non-increasing in η, so the dead-feature set — and with it the
+    /// sparsity — is non-increasing along the Pareto front.
+    #[test]
+    fn pareto_front_sparsity_monotone_in_eta() {
+        let cfg = tiny_cfg(vec![2.0, 0.1, 0.5]);
+        let tr = EnsembleTrainer::new(cfg, EnsembleBackend::Local).unwrap();
+        let res = tr.run().unwrap();
+        let front = res.pareto();
+        assert_eq!(front.len(), 3);
+        assert!(front.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by eta");
+        assert!(
+            front.windows(2).all(|w| w[0].1 >= w[1].1),
+            "sparsity must not grow with eta: {front:?}"
+        );
+        // The tight radius must actually kill features on this scale.
+        assert!(front[0].1 > 0.0, "η=0.1 should zero at least one feature");
+        for m in &res.members {
+            assert!(m.accuracy_pct.is_finite() && m.projection_ms >= 0.0);
+            assert_eq!(m.loss_curve.len(), 3 + 2);
+        }
+    }
+
+    /// Shared-prefix accounting: with no cadence the fork happens after
+    /// all of descent 1.
+    #[test]
+    fn shared_prefix_spans_descent1_without_cadence() {
+        let cfg = tiny_cfg(vec![0.3, 1.0]);
+        let tr = EnsembleTrainer::new(cfg, EnsembleBackend::Local).unwrap();
+        let res = tr.run().unwrap();
+        assert_eq!(res.shared_epochs, 3);
+        // Shared prefix means identical loss curves through epoch 3.
+        let (a, b) = (&res.members[0].loss_curve, &res.members[1].loss_curve);
+        assert_eq!(a[..3], b[..3]);
+    }
+}

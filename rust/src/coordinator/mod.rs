@@ -1,13 +1,20 @@
 //! Layer-3 coordinator: config system, SAE double-descent trainer,
-//! metrics, experiment presets and report rendering.
+//! the native step engine and K-radius ensemble trainer, metrics,
+//! experiment presets and report rendering.
 
 pub mod config;
+pub mod ensemble;
 pub mod metrics;
+pub mod native;
 pub mod params;
 pub mod report;
 pub mod sweeps;
 pub mod trainer;
 
 pub use config::{DatasetKind, ProjectionKind, TrainConfig};
+pub use ensemble::{
+    EnsembleBackend, EnsembleConfig, EnsembleResult, EnsembleTrainer, MemberResult, WireMode,
+};
 pub use metrics::{Aggregate, RunResult};
+pub use native::NativeSae;
 pub use trainer::Trainer;

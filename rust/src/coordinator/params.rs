@@ -51,7 +51,12 @@ impl SaeState {
     /// He-style init matching `model.init_params` in spirit (the exact
     /// draws differ — determinism within Rust is what matters here).
     pub fn init(man: &Manifest, rng: &mut Rng) -> Self {
-        let (d, h, k) = (man.d, man.h, man.k);
+        Self::init_dims(man.d, man.h, man.k, rng)
+    }
+
+    /// Init from raw dimensions — the native-engine path, which has no
+    /// artifact manifest to read dims from.
+    pub fn init_dims(d: usize, h: usize, k: usize, rng: &mut Rng) -> Self {
         let mut params = Vec::with_capacity(N_PARAMS);
         for shape in param_shapes(d, h, k) {
             let mut a = HostArray::zeros(&shape);

@@ -43,6 +43,10 @@ pub struct Trainer {
     cfg: TrainConfig,
     /// Lazily compiled projection plan (shape is fixed by the manifest).
     plan: Option<ProjectionPlan>,
+    /// Projection wall time accrued by the current run — *every*
+    /// projection counts, cadence events included, not just the final
+    /// Alg. 8 event. Reset at the top of [`Trainer::run_once`].
+    proj_accum_ms: f64,
     /// Per-epoch log lines when true.
     pub verbose: bool,
 }
@@ -55,7 +59,7 @@ impl Trainer {
         let dir = artifact_dir_for(&cfg);
         let store = ArtifactStore::open(Path::new(&dir))?;
         let pool = Arc::new(WorkerPool::new(cfg.workers));
-        Ok(Trainer { store, pool, cfg, plan: None, verbose: false })
+        Ok(Trainer { store, pool, cfg, plan: None, proj_accum_ms: 0.0, verbose: false })
     }
 
     /// The loaded manifest.
@@ -78,8 +82,9 @@ impl Trainer {
     /// One full double-descent run with the given seed.
     pub fn run_once(&mut self, seed: u64) -> Result<RunResult> {
         let t0 = Instant::now();
+        self.proj_accum_ms = 0.0;
         let mut rng = Rng::new(seed);
-        let (train, test) = self.build_dataset(&mut rng)?;
+        let (train, test) = build_dataset(&self.cfg, None, &mut rng)?;
         let man = self.store.manifest.clone();
         if train.d != man.d {
             return Err(MlprojError::Config(format!(
@@ -106,12 +111,9 @@ impl Trainer {
         }
 
         // Projection + mask extraction (Alg. 8 lines 5–6).
-        let mut projection_ms = 0.0;
         let mut features_alive = state.d;
         if self.cfg.projection != ProjectionKind::None {
-            let tp = Instant::now();
             features_alive = self.project_state(&mut state)?;
-            projection_ms = tp.elapsed().as_secs_f64() * 1e3;
         }
 
         // Descent 2 (masked).
@@ -130,7 +132,11 @@ impl Trainer {
             loss_curve,
             features_alive,
             wall_secs: t0.elapsed().as_secs_f64(),
-            projection_ms,
+            // Total across every projection this run — the cadence
+            // events of descent 1 plus the main event. (Timing only the
+            // final call understated the projection bill whenever
+            // `project_every` fired mid-descent.)
+            projection_ms: self.proj_accum_ms,
         })
     }
 
@@ -150,8 +156,16 @@ impl Trainer {
     }
 
     /// Apply the configured projection to w1's feature-major view.
-    /// Returns the surviving feature count.
+    /// Returns the surviving feature count. Every call — cadence events
+    /// included — adds its wall time to the run's projection bill.
     fn project_state(&mut self, state: &mut SaeState) -> Result<usize> {
+        let tp = Instant::now();
+        let out = self.project_state_inner(state);
+        self.proj_accum_ms += tp.elapsed().as_secs_f64() * 1e3;
+        out
+    }
+
+    fn project_state_inner(&mut self, state: &mut SaeState) -> Result<usize> {
         let eta = self.cfg.eta;
         let kind = self.cfg.projection;
         if kind == ProjectionKind::PallasHlo {
@@ -194,6 +208,13 @@ impl Trainer {
     /// Held-out accuracy via the `predict` executable (wrap-padded
     /// fixed-size batches; each test sample counted exactly once).
     fn evaluate(&mut self, state: &SaeState, test: &Dataset) -> Result<f64> {
+        if test.n == 0 {
+            // Without this guard the wrap-padded batch loop divides by
+            // test.n and reports NaN accuracy instead of failing.
+            return Err(MlprojError::Config(
+                "empty test split: no held-out samples to evaluate (check test_frac)".into(),
+            ));
+        }
         let man = self.store.manifest.clone();
         let eb = man.eval_batch;
         let nb = test.n.div_ceil(eb);
@@ -216,26 +237,43 @@ impl Trainer {
         Ok(correct_weighted / test.n as f64)
     }
 
-    /// Build + preprocess the configured dataset.
-    fn build_dataset(&self, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
-        let raw = match self.cfg.dataset {
-            DatasetKind::Synthetic => {
-                let spec = SyntheticSpec { seed: rng.next_u64(), ..Default::default() };
-                make_classification(&spec).dataset
+}
+
+/// Build + preprocess the configured dataset: generate, log-transform
+/// (LUNG), split, standardize with train-fitted moments.
+///
+/// `synthetic_size` overrides the synthetic generator's `(n_samples,
+/// n_features)` — the ensemble trainer and smoke tests shrink the
+/// problem without forking a whole config surface. `None` keeps the
+/// spec defaults; the override is ignored for LUNG, whose shape is
+/// fixed by the generator.
+pub fn build_dataset(
+    cfg: &TrainConfig,
+    synthetic_size: Option<(usize, usize)>,
+    rng: &mut Rng,
+) -> Result<(Dataset, Dataset)> {
+    let raw = match cfg.dataset {
+        DatasetKind::Synthetic => {
+            let mut spec = SyntheticSpec { seed: rng.next_u64(), ..Default::default() };
+            if let Some((n, d)) = synthetic_size {
+                spec.n_samples = n;
+                spec.n_features = d;
+                spec.n_informative = spec.n_informative.min(d);
             }
-            DatasetKind::Lung => {
-                let spec = LungSpec { seed: rng.next_u64(), ..Default::default() };
-                let mut ds = make_lung(&spec).dataset;
-                ds.log1p(); // the paper's heteroscedasticity reduction
-                ds
-            }
-        };
-        let (mut train, mut test) = raw.split(self.cfg.test_frac, rng);
-        let (mean, std) = train.fit_standardize();
-        train.apply_standardize(&mean, &std);
-        test.apply_standardize(&mean, &std);
-        Ok((train, test))
-    }
+            make_classification(&spec).dataset
+        }
+        DatasetKind::Lung => {
+            let spec = LungSpec { seed: rng.next_u64(), ..Default::default() };
+            let mut ds = make_lung(&spec).dataset;
+            ds.log1p(); // the paper's heteroscedasticity reduction
+            ds
+        }
+    };
+    let (mut train, mut test) = raw.split(cfg.test_frac, rng);
+    let (mean, std) = train.fit_standardize();
+    train.apply_standardize(&mean, &std);
+    test.apply_standardize(&mean, &std);
+    Ok((train, test))
 }
 
 /// Artifact directory layout: `<artifact_dir>/<dataset>/manifest.txt`.

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train   — one SAE double-descent experiment (config file + overrides)
+//!   ensemble — K-radius one-pass ensemble vs K sequential passes; emits
+//!             the sparsity↔accuracy Pareto front as BENCH_ensemble.json
 //!   sweep   — a paper preset (table2..table5, fig5_synthetic, fig5_lung)
 //!   project — project a random matrix, compare methods (quick demo)
 //!   serve   — run the batched projection service on a TCP address
@@ -20,7 +22,10 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use mlproj::bench::harness;
-use mlproj::coordinator::{report, sweeps, TrainConfig, Trainer};
+use mlproj::coordinator::{
+    report, sweeps, EnsembleBackend, EnsembleConfig, EnsembleTrainer, TrainConfig, Trainer,
+    WireMode,
+};
 use mlproj::core::error::{MlprojError, Result};
 use mlproj::core::matrix::Matrix;
 use mlproj::core::rng::Rng;
@@ -120,6 +125,26 @@ const TRAIN_FLAGS: &[&str] = &[
     "test_frac", "seed", "repeats", "workers", "artifact_dir", "project_every", "verbose",
 ];
 const SWEEP_FLAGS: &[&str] = &["preset", "repeats", "out"];
+const ENSEMBLE_FLAGS: &[&str] = &[
+    "dataset",
+    "projection",
+    "eta2",
+    "epochs1",
+    "epochs2",
+    "lr",
+    "alpha",
+    "test_frac",
+    "seed",
+    "project_every",
+    "etas",
+    "hidden",
+    "batch",
+    "n",
+    "d",
+    "addr",
+    "wire",
+    "verbose",
+];
 const PROJECT_FLAGS: &[&str] =
     &["n", "m", "eta", "eta2", "workers", "norms", "l1algo", "method", "seed", "kernel"];
 const DATAGEN_FLAGS: &[&str] = &["dataset", "out"];
@@ -188,6 +213,14 @@ mlproj — multi-level projection reproduction (Perez & Barlaud 2024)
 USAGE:
   mlproj train [--config FILE] [--dataset synthetic|lung] [--projection P]
                [--eta F] [--epochs1 N] [--epochs2 N] [--repeats N] [--verbose]
+  mlproj ensemble [--etas F1,F2,...] [--projection P] [--epochs1 N]
+               [--epochs2 N] [--project_every N] [--hidden H] [--batch B]
+               [--n SAMPLES] [--d FEATURES] [--seed S]
+               [--addr HOST:PORT [--wire multi|pipelined]] [--verbose]
+               trains K radius variants in one pass (native step engine;
+               no artifacts needed), races the naive K sequential passes,
+               and emits the Pareto front as BENCH_ensemble.json; --addr
+               sends projections to a live protocol-v2 `mlproj serve`
   mlproj sweep --preset NAME [--repeats N] [--out FILE]
                presets: table2 table3 table4 table5 fig5_synthetic fig5_lung
   mlproj project [--n N] [--m M] [--eta F] [--workers W] [--norms linf,l1]
@@ -252,6 +285,7 @@ fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "train" => cmd_train(&Args::parse(rest, TRAIN_FLAGS)?),
+        "ensemble" => cmd_ensemble(&Args::parse(rest, ENSEMBLE_FLAGS)?),
         "sweep" => cmd_sweep(&Args::parse(rest, SWEEP_FLAGS)?),
         "project" => cmd_project(&Args::parse(rest, PROJECT_FLAGS)?),
         "serve" => cmd_serve(&Args::parse(rest, SERVE_FLAGS)?),
@@ -394,6 +428,99 @@ fn cmd_train(args: &Args) -> Result<()> {
         "aggregate [{} η={}]: accuracy {:.2} ± {:.2} %   sparsity {:.2} ± {:.2} %",
         agg.label, agg.eta, agg.acc_mean, agg.acc_std, agg.sparsity_mean, agg.sparsity_std
     );
+    Ok(())
+}
+
+/// K-radius one-pass ensemble vs the naive K sequential passes.
+fn cmd_ensemble(args: &Args) -> Result<()> {
+    // Small-but-meaningful defaults: the verb must finish in CI smoke
+    // time at its defaults, and scale up via flags.
+    let mut base = TrainConfig { epochs1: 6, epochs2: 4, ..TrainConfig::default() };
+    for key in [
+        "dataset", "projection", "eta2", "epochs1", "epochs2", "lr", "alpha", "test_frac",
+        "seed", "project_every",
+    ] {
+        if let Some(v) = args.get(key) {
+            base.apply(key, v)?;
+        }
+    }
+    let etas = args
+        .get_or("etas", "0.5,1,2,4")
+        .split(',')
+        .map(|t| {
+            t.trim().parse::<f64>().map_err(|_| {
+                MlprojError::invalid(format!(
+                    "--etas expects comma-separated numbers, got `{t}`"
+                ))
+            })
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    let mut cfg = EnsembleConfig::new(base);
+    cfg.etas = etas;
+    cfg.hidden = args.usize_or("hidden", 32)?;
+    cfg.batch = args.usize_or("batch", 32)?;
+    cfg.n_samples = args.usize_or("n", 256)?;
+    cfg.n_features = args.usize_or("d", 64)?;
+    let (backend, wire_label, wire_code) = match args.get("addr") {
+        None => (EnsembleBackend::Local, "local", 0.0),
+        Some(addr) => {
+            let (mode, label, code) = match args.get_or("wire", "multi") {
+                "multi" => (WireMode::Multi, "remote-multi", 1.0),
+                "pipelined" => (WireMode::Pipelined, "remote-pipelined", 2.0),
+                other => {
+                    return Err(MlprojError::invalid(format!(
+                        "unknown --wire `{other}` (multi | pipelined)"
+                    )))
+                }
+            };
+            (EnsembleBackend::Remote { addr: addr.to_string(), mode }, label, code)
+        }
+    };
+    let k = cfg.etas.len();
+    eprintln!(
+        "ensemble: K={k} radii {:?} projection={} backend={wire_label} epochs {}+{}",
+        cfg.etas,
+        cfg.base.projection.label(),
+        cfg.base.epochs1,
+        cfg.base.epochs2
+    );
+    let (epochs1, epochs2) = (cfg.base.epochs1, cfg.base.epochs2);
+    let mut trainer = EnsembleTrainer::new(cfg, backend)?;
+    trainer.verbose = args.get("verbose").is_some();
+
+    let one = trainer.run()?;
+    let seq = trainer.run_sequential()?;
+    let speedup = seq.wall_secs / one.wall_secs.max(1e-9);
+
+    println!("Pareto front (ascending η):");
+    for (eta, sparsity, acc) in one.pareto() {
+        println!("  η={eta:<8} sparsity {sparsity:6.2}%   accuracy {acc:6.2}%");
+    }
+    println!(
+        "one-pass {:.2}s vs {k} sequential passes {:.2}s -> speedup x{speedup:.2} \
+         ({} shared epochs)",
+        one.wall_secs, seq.wall_secs, one.shared_epochs
+    );
+
+    let mut owned: Vec<(String, f64)> = vec![
+        ("k".into(), k as f64),
+        ("epochs1".into(), epochs1 as f64),
+        ("epochs2".into(), epochs2 as f64),
+        ("shared_epochs".into(), one.shared_epochs as f64),
+        ("wire_mode".into(), wire_code),
+        ("onepass_wall_ms".into(), one.wall_secs * 1e3),
+        ("sequential_wall_ms".into(), seq.wall_secs * 1e3),
+        ("speedup".into(), speedup),
+    ];
+    for (i, m) in one.members.iter().enumerate() {
+        owned.push((format!("m{i}_eta"), m.eta));
+        owned.push((format!("m{i}_sparsity_pct"), m.sparsity_pct));
+        owned.push((format!("m{i}_accuracy_pct"), m.accuracy_pct));
+        owned.push((format!("m{i}_projection_ms"), m.projection_ms));
+    }
+    let kv: Vec<(&str, f64)> = owned.iter().map(|(key, v)| (key.as_str(), *v)).collect();
+    let path = harness::emit_json_kv("BENCH_ensemble.json", &kv)?;
+    println!("json -> {}", path.display());
     Ok(())
 }
 

@@ -889,6 +889,32 @@ pub trait Projector: Send {
         Ok(())
     }
 
+    /// Whether this kernel supports the "same shape, many radii" batch
+    /// form ([`Projector::project_batch_radii`]). Only the bi-level
+    /// matrix family does: its radius enters solely through the outer
+    /// threshold over the (radius-independent) column aggregates, so one
+    /// colmax pass serves every radius. Kernels that bake the radius into
+    /// compiled workspace state (the exact solvers) keep the default.
+    fn supports_radii(&self) -> bool {
+        false
+    }
+
+    /// Project a batch of same-shape payloads where payload `b` uses
+    /// radius `etas[b]` instead of the plan's compiled η. Bit-identical
+    /// to compiling one plan per radius and projecting each payload
+    /// through its own. Kernels that cannot share work across radii
+    /// reject the call.
+    fn project_batch_radii(
+        &self,
+        _payloads: &mut [Vec<f32>],
+        _etas: &[f64],
+        _ws: &mut Workspace,
+    ) -> Result<()> {
+        Err(MlprojError::invalid(
+            "this projection method has no multi-radius batch form",
+        ))
+    }
+
     /// Human-readable description of the selected path.
     fn describe(&self) -> String;
 }
@@ -1010,6 +1036,52 @@ impl ProjectionPlan {
         self.run_kernel(jobs, |k, ws| k.project_batch(payloads, ws))
     }
 
+    /// Whether [`ProjectionPlan::project_batch_inplace_radii`] is
+    /// available for this plan's kernel.
+    pub fn supports_multi_radius(&self) -> bool {
+        self.kernel.supports_radii()
+    }
+
+    /// Project a batch of same-shape flat buffers where payload `b` uses
+    /// radius `etas[b]` in place of the plan's compiled η — the "same
+    /// shape, many radii" fast path. One workspace (and for the bi-level
+    /// matrix family one column-aggregate pass) is shared across all
+    /// radii; results are bit-identical to compiling a plan per radius
+    /// and calling [`ProjectionPlan::project_inplace`] on each payload.
+    /// Warm calls are allocation-free, like the uniform batch path.
+    pub fn project_batch_inplace_radii(
+        &mut self,
+        payloads: &mut [Vec<f32>],
+        etas: &[f64],
+    ) -> Result<()> {
+        if payloads.len() != etas.len() {
+            return Err(MlprojError::invalid(format!(
+                "multi-radius batch: {} payloads but {} radii",
+                payloads.len(),
+                etas.len()
+            )));
+        }
+        for &eta in etas {
+            if !eta.is_finite() || eta < 0.0 {
+                return Err(MlprojError::InvalidRadius { eta });
+            }
+        }
+        let want: usize = self.shape.iter().product();
+        for p in payloads.iter() {
+            if p.len() != want {
+                return Err(MlprojError::ShapeMismatch {
+                    expected: vec![want],
+                    got: vec![p.len()],
+                });
+            }
+        }
+        for p in payloads.iter() {
+            check_finite(p)?;
+        }
+        let jobs = payloads.len();
+        self.run_kernel(jobs, |k, ws| k.project_batch_radii(payloads, etas, ws))
+    }
+
     /// Project a column-major matrix in place.
     pub fn project_matrix_inplace(&mut self, y: &mut Matrix) -> Result<()> {
         if self.layout != Layout::ColMajorMatrix {
@@ -1093,8 +1165,11 @@ struct BilevelMatrixKernel {
 impl BilevelMatrixKernel {
     /// Project the `jobs` payloads whose base pointers sit in
     /// `ws.job_ptrs`. Each payload is an independent projection with the
-    /// plan's radius; stage partitioning spans all of them.
-    fn run(&self, jobs: usize, ws: &mut Workspace) -> Result<()> {
+    /// plan's radius — or, when `etas` is given, with its own per-payload
+    /// radius (the stage-1 column aggregates are radius-independent, so
+    /// the multi-radius form shares them) — and stage partitioning spans
+    /// all of them.
+    fn run(&self, jobs: usize, etas: Option<&[f64]>, ws: &mut Workspace) -> Result<()> {
         let (rows, cols) = (self.rows, self.cols);
         if rows == 0 || cols == 0 || jobs == 0 {
             return Ok(());
@@ -1154,7 +1229,8 @@ impl BilevelMatrixKernel {
                 for &x in v {
                     sum += x as f64;
                 }
-                let tau = threshold_on_nonneg(v, sum, self.eta, self.algo, l1) as f32;
+                let eta = etas.map_or(self.eta, |e| e[b]);
+                let tau = threshold_on_nonneg(v, sum, eta, self.algo, l1) as f32;
                 taus[b] = tau;
                 any_cut |= tau > 0.0;
             }
@@ -1194,13 +1270,12 @@ impl BilevelMatrixKernel {
         // per-column q re-projection (inner ℓ1 uses one scratch per
         // concurrent task).
         for b in 0..jobs {
+            let eta = etas.map_or(self.eta, |e| e[b]);
             let v_b = &colnorms[b * cols..(b + 1) * cols];
             colnorms_proj.copy_from_slice(v_b);
             match self.p {
-                Norm::L1 => {
-                    project_l1_with_scratch(colnorms_proj, self.eta, self.algo, l1)
-                }
-                p => p.project_with(colnorms_proj, self.eta, self.algo),
+                Norm::L1 => project_l1_with_scratch(colnorms_proj, eta, self.algo, l1),
+                p => p.project_with(colnorms_proj, eta, self.algo),
             }
             let u: &[f32] = colnorms_proj;
             let q = self.q;
@@ -1245,7 +1320,7 @@ impl Projector for BilevelMatrixKernel {
     fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
         ws.job_ptrs.clear();
         ws.job_ptrs.push(JobPtr(data.as_mut_ptr()));
-        self.run(1, ws)
+        self.run(1, None, ws)
     }
 
     fn project_batch(&self, payloads: &mut [Vec<f32>], ws: &mut Workspace) -> Result<()> {
@@ -1253,7 +1328,24 @@ impl Projector for BilevelMatrixKernel {
         for p in payloads.iter_mut() {
             ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
         }
-        self.run(payloads.len(), ws)
+        self.run(payloads.len(), None, ws)
+    }
+
+    fn supports_radii(&self) -> bool {
+        true
+    }
+
+    fn project_batch_radii(
+        &self,
+        payloads: &mut [Vec<f32>],
+        etas: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        ws.job_ptrs.clear();
+        for p in payloads.iter_mut() {
+            ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
+        }
+        self.run(payloads.len(), Some(etas), ws)
     }
 
     fn describe(&self) -> String {
@@ -1283,13 +1375,14 @@ struct FusedLinfClampKernel {
 }
 
 impl FusedLinfClampKernel {
-    fn run(&self, jobs: usize, ws: &mut Workspace) -> Result<()> {
+    fn run(&self, jobs: usize, etas: Option<&[f64]>, ws: &mut Workspace) -> Result<()> {
         let (rows, cols) = (self.rows, self.cols);
         if rows == 0 || cols == 0 || jobs == 0 {
             return Ok(());
         }
         // Same cap computation as the outer ℓ∞ projection
         // (`project_linf_inplace`), so the bits match the generic path.
+        // With per-payload radii the cap is indexed per payload instead.
         let cap = self.eta.max(0.0) as f32;
         let variant = ws.variant;
         let ptrs: &[JobPtr] = &ws.job_ptrs;
@@ -1305,6 +1398,7 @@ impl FusedLinfClampKernel {
                 let col = unsafe {
                     std::slice::from_raw_parts_mut(ptrs[b].0.add(j * rows), rows)
                 };
+                let cap = etas.map_or(cap, |e| e[b].max(0.0) as f32);
                 let _ = kernels::colmax_clamp_with(variant, col, cap);
             }
         });
@@ -1316,7 +1410,7 @@ impl Projector for FusedLinfClampKernel {
     fn project_inplace(&self, data: &mut [f32], ws: &mut Workspace) -> Result<()> {
         ws.job_ptrs.clear();
         ws.job_ptrs.push(JobPtr(data.as_mut_ptr()));
-        self.run(1, ws)
+        self.run(1, None, ws)
     }
 
     fn project_batch(&self, payloads: &mut [Vec<f32>], ws: &mut Workspace) -> Result<()> {
@@ -1324,7 +1418,24 @@ impl Projector for FusedLinfClampKernel {
         for p in payloads.iter_mut() {
             ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
         }
-        self.run(payloads.len(), ws)
+        self.run(payloads.len(), None, ws)
+    }
+
+    fn supports_radii(&self) -> bool {
+        true
+    }
+
+    fn project_batch_radii(
+        &self,
+        payloads: &mut [Vec<f32>],
+        etas: &[f64],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        ws.job_ptrs.clear();
+        for p in payloads.iter_mut() {
+            ws.job_ptrs.push(JobPtr(p.as_mut_ptr()));
+        }
+        self.run(payloads.len(), Some(etas), ws)
     }
 
     fn describe(&self) -> String {

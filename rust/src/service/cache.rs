@@ -104,6 +104,33 @@ impl PlanKey {
         )
     }
 
+    /// Whether a plan compiled for this key supports the "same shape,
+    /// many radii" batch form: the compositional bi-level matrix family
+    /// (two norms over a 2-D column-major payload), whose kernels share
+    /// the radius-independent column-aggregate pass across radii. This
+    /// is exactly the condition under which `compile_layout` selects
+    /// `BilevelMatrixKernel` or `FusedLinfClampKernel` — the two kernels
+    /// overriding `Projector::supports_radii`.
+    pub fn multi_radius_eligible(&self) -> bool {
+        self.method == Method::Compositional
+            && self.layout == WireLayout::Matrix
+            && self.norms.len() == 2
+            && self.shape.len() == 2
+    }
+
+    /// True when `other` differs from `self` at most in the radius `η` —
+    /// the scheduler's coalescing test for the multi-radius batch form.
+    /// Everything that selects the kernel (norms, method, algo, layout,
+    /// shape, `η₂`) must match; only `eta_bits` may differ.
+    pub fn same_except_eta(&self, other: &PlanKey) -> bool {
+        self.norms == other.norms
+            && self.eta2_bits == other.eta2_bits
+            && self.l1_algo == other.l1_algo
+            && self.method == other.method
+            && self.layout == other.layout
+            && self.shape == other.shape
+    }
+
     /// Compile a fresh plan for this key on the given backend.
     pub fn compile(&self, backend: &ExecBackend) -> Result<ProjectionPlan> {
         let spec = ProjectionSpec::new(self.norms.clone(), self.eta())

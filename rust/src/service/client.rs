@@ -30,8 +30,8 @@ use crate::core::rng::Rng;
 use crate::core::tensor::Tensor;
 use crate::projection::ProjectionSpec;
 use crate::service::protocol::{
-    self, ChunkAssembler, Frame, ProjectRequest, Qos, WireLayout, MAX_BODY_BYTES, QOS_TRAILER_BYTES,
-    V2,
+    self, ChunkAssembler, Frame, ProjectMultiRequest, ProjectRequest, Qos, WireLayout,
+    MAX_BODY_BYTES, QOS_TRAILER_BYTES, V2,
 };
 use crate::service::telemetry::{StatsV2, TraceRecord};
 
@@ -170,6 +170,20 @@ impl Client {
 /// Default chunk size for auto-chunked payloads (1 MiB of f32s).
 const DEFAULT_CHUNK_ELEMS: usize = 1 << 18;
 
+/// The reply shape one in-flight correlation id expects.
+enum Inflight {
+    /// Single projection: the payload element count the reply must match.
+    Single(usize),
+    /// Multi-radius ensemble: member count and per-member element count.
+    Multi { k: usize, elems: usize },
+}
+
+/// A completed request, matched back to its in-flight kind.
+enum Completed {
+    Single(Result<Vec<f32>>),
+    Multi(Vec<Result<Vec<f32>>>),
+}
+
 /// One protocol-v2 connection with correlation-id-tracked in-flight
 /// requests.
 ///
@@ -181,8 +195,8 @@ const DEFAULT_CHUNK_ELEMS: usize = 1 << 18;
 pub struct PipelinedConn {
     stream: TcpStream,
     next_corr: u16,
-    /// corr → payload element count of the request (replies must match).
-    inflight: HashMap<u16, usize>,
+    /// corr → expected reply shape of the request (replies must match).
+    inflight: HashMap<u16, Inflight>,
     /// Reused raw-frame receive buffer.
     body: Vec<u8>,
     /// Requests whose `Project` body would exceed this stream as chunked
@@ -288,7 +302,43 @@ impl PipelinedConn {
         }
         let corr = self.alloc_corr()?;
         protocol::write_project_v2(&mut self.stream, corr, req)?;
-        self.inflight.insert(corr, req.payload.len());
+        self.inflight.insert(corr, Inflight::Single(req.payload.len()));
+        Ok(corr)
+    }
+
+    /// Wire size of the request's `ProjectMulti` body (spec fields, the
+    /// member count, K radii, K count-prefixed payloads).
+    fn multi_body_len(req: &ProjectMultiRequest) -> usize {
+        let k = req.payloads.len();
+        let elems = req.payloads.first().map_or(0, |p| p.len());
+        13 + req.norms.len() + 4 * req.shape.len() + 2 + 8 * k + k * (4 + 4 * elems)
+    }
+
+    /// Send one multi-radius ensemble request (K same-shape payloads,
+    /// one radius each) without waiting; returns the correlation id to
+    /// match against [`PipelinedConn::recv_multi`]. The multi frame has
+    /// no chunked form, so the whole body must fit the chunk threshold
+    /// (the server's advertised cap after a ping) — oversized ensembles
+    /// are refused with a typed error and should be split across plain
+    /// [`PipelinedConn::submit`] calls instead. Members ride at the
+    /// default QoS class with no deadline.
+    pub fn submit_multi(&mut self, req: &ProjectMultiRequest) -> Result<u16> {
+        let body = Self::multi_body_len(req);
+        if body > self.chunk_threshold {
+            return Err(MlprojError::invalid(format!(
+                "multi-radius frame body of {body} bytes exceeds the {}-byte cap and the \
+                 multi frame has no chunked form — split the ensemble across pipelined \
+                 Project frames",
+                self.chunk_threshold
+            )));
+        }
+        let corr = self.alloc_corr()?;
+        protocol::write_project_multi_v2(&mut self.stream, corr, req)?;
+        let kind = Inflight::Multi {
+            k: req.payloads.len(),
+            elems: req.payloads.first().map_or(0, |p| p.len()),
+        };
+        self.inflight.insert(corr, kind);
         Ok(corr)
     }
 
@@ -320,7 +370,7 @@ impl PipelinedConn {
         Self::reject_chunked_qos(req)?;
         let corr = self.alloc_corr()?;
         protocol::write_project_chunked(&mut self.stream, corr, req, chunk_elems)?;
-        self.inflight.insert(corr, req.payload.len());
+        self.inflight.insert(corr, Inflight::Single(req.payload.len()));
         Ok(corr)
     }
 
@@ -330,20 +380,45 @@ impl PipelinedConn {
     /// `Invalid`, …) is `Ok((corr, Err(_)))` and the connection stays
     /// usable.
     pub fn recv(&mut self) -> Result<(u16, Result<Vec<f32>>)> {
+        match self.recv_any()? {
+            (corr, Completed::Single(result)) => Ok((corr, result)),
+            (corr, Completed::Multi(_)) => Err(MlprojError::Protocol(format!(
+                "multi-radius reply {corr} surfaced through recv(); drain it with recv_multi()"
+            ))),
+        }
+    }
+
+    /// Block for the next completed multi-radius ensemble, in server
+    /// completion order. The outer `Err` is a transport/protocol
+    /// failure; per-member server errors come back typed in their slot
+    /// (request order) and the connection stays usable.
+    pub fn recv_multi(&mut self) -> Result<(u16, Vec<Result<Vec<f32>>>)> {
+        match self.recv_any()? {
+            (corr, Completed::Multi(results)) => Ok((corr, results)),
+            (corr, Completed::Single(_)) => Err(MlprojError::Protocol(format!(
+                "single-projection reply {corr} surfaced through recv_multi(); \
+                 drain it with recv()"
+            ))),
+        }
+    }
+
+    /// Read the next reply of either kind and match it to its in-flight
+    /// request.
+    fn recv_any(&mut self) -> Result<(u16, Completed)> {
         let (corr, frame) = self.read_v2_frame()?;
         match frame {
             Frame::ProjectOk(payload) => {
-                let expected = self.take_inflight(corr)?;
+                let expected = self.take_single(corr)?;
                 if payload.len() != expected {
                     return Err(MlprojError::Protocol(format!(
                         "server returned {} elements for a {expected}-element request",
                         payload.len()
                     )));
                 }
-                Ok((corr, Ok(payload)))
+                Ok((corr, Completed::Single(Ok(payload))))
             }
             Frame::ProjectOkBegin { total_elems, checksum } => {
-                let expected = self.take_inflight(corr)?;
+                let expected = self.take_single(corr)?;
                 let payload = self.recv_chunked(corr, total_elems, checksum)?;
                 if payload.len() != expected {
                     return Err(MlprojError::Protocol(format!(
@@ -351,19 +426,56 @@ impl PipelinedConn {
                         payload.len()
                     )));
                 }
-                Ok((corr, Ok(payload)))
+                Ok((corr, Completed::Single(Ok(payload))))
+            }
+            Frame::ProjectMultiOk(members) => {
+                let (k, elems) = match self.take_inflight(corr)? {
+                    Inflight::Multi { k, elems } => (k, elems),
+                    Inflight::Single(_) => {
+                        return Err(MlprojError::Protocol(
+                            "multi-radius reply for a single-projection request".into(),
+                        ));
+                    }
+                };
+                if members.len() != k {
+                    return Err(MlprojError::Protocol(format!(
+                        "server returned {} members for a {k}-member ensemble",
+                        members.len()
+                    )));
+                }
+                let mut results = Vec::with_capacity(k);
+                for m in members {
+                    results.push(match m {
+                        Ok(payload) => {
+                            if payload.len() != elems {
+                                return Err(MlprojError::Protocol(format!(
+                                    "server returned {} elements for a {elems}-element member",
+                                    payload.len()
+                                )));
+                            }
+                            Ok(payload)
+                        }
+                        Err((code, msg)) => Err(code.into_error(msg)),
+                    });
+                }
+                Ok((corr, Completed::Multi(results)))
             }
             Frame::Error { code, msg } => {
-                let err = code.into_error(msg);
                 // A corr we are tracking: a per-request failure (also
                 // covers stream-level errors for requests we uploaded
                 // chunked); the connection stays usable. An untracked
                 // corr (the server reserves 0 for pre-request framing
                 // errors) is a connection-level failure.
-                if self.inflight.remove(&corr).is_some() {
-                    Ok((corr, Err(err)))
-                } else {
-                    Err(err)
+                match self.inflight.remove(&corr) {
+                    Some(Inflight::Single(_)) => {
+                        Ok((corr, Completed::Single(Err(code.into_error(msg)))))
+                    }
+                    Some(Inflight::Multi { k, .. }) => {
+                        let results =
+                            (0..k).map(|_| Err(code.into_error(msg.clone()))).collect();
+                        Ok((corr, Completed::Multi(results)))
+                    }
+                    None => Err(code.into_error(msg)),
                 }
             }
             other => Err(MlprojError::Protocol(format!(
@@ -415,10 +527,19 @@ impl PipelinedConn {
         }
     }
 
-    fn take_inflight(&mut self, corr: u16) -> Result<usize> {
+    fn take_inflight(&mut self, corr: u16) -> Result<Inflight> {
         self.inflight.remove(&corr).ok_or_else(|| {
             MlprojError::Protocol(format!("reply for unknown correlation id {corr}"))
         })
+    }
+
+    fn take_single(&mut self, corr: u16) -> Result<usize> {
+        match self.take_inflight(corr)? {
+            Inflight::Single(elems) => Ok(elems),
+            Inflight::Multi { .. } => Err(MlprojError::Protocol(
+                "single-projection reply for a multi-radius request".into(),
+            )),
+        }
     }
 
     fn read_v2_frame(&mut self) -> Result<(u16, Frame)> {
@@ -457,6 +578,20 @@ impl PipelinedConn {
         }
     }
 
+    /// Submit one multi-radius ensemble and block for *its* reply — the
+    /// ensemble counterpart of [`PipelinedConn::project`]. Per-member
+    /// failures come back typed in their slot (request order); the
+    /// connection stays usable.
+    pub fn project_multi(&mut self, req: &ProjectMultiRequest) -> Result<Vec<Result<Vec<f32>>>> {
+        let corr = self.submit_multi(req)?;
+        loop {
+            let (got, results) = self.recv_multi()?;
+            if got == corr {
+                return Ok(results);
+            }
+        }
+    }
+
     /// v2 liveness probe (call with no requests in flight). Doubles as
     /// cap negotiation: a Pong that advertises the server's body cap
     /// auto-sets this connection's chunk threshold to it, unless the
@@ -491,7 +626,7 @@ impl PipelinedConn {
         loop {
             match self.read_v2_frame()? {
                 (got, Frame::ShutdownAck) if got == corr => return Ok(()),
-                (got, Frame::ProjectOk(_) | Frame::Error { .. })
+                (got, Frame::ProjectOk(_) | Frame::ProjectMultiOk(_) | Frame::Error { .. })
                     if self.inflight.remove(&got).is_some() => {}
                 (got, Frame::ProjectOkBegin { total_elems, checksum })
                     if self.inflight.remove(&got).is_some() =>
@@ -858,6 +993,75 @@ mod tests {
         let (got_corr, result) = conn.recv().unwrap();
         assert_eq!(got_corr, corr);
         assert_eq!(result.unwrap(), expect.data());
+
+        conn.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    fn multi_request(spec: &ProjectionSpec, etas: &[f64], y: &Matrix) -> ProjectMultiRequest {
+        ProjectMultiRequest {
+            norms: spec.norms.clone(),
+            etas: etas.to_vec(),
+            eta2: spec.eta2,
+            l1_algo: spec.l1_algo,
+            method: spec.method,
+            layout: WireLayout::Matrix,
+            shape: vec![y.rows(), y.cols()],
+            payloads: vec![y.data().to_vec(); etas.len()],
+        }
+    }
+
+    #[test]
+    fn multi_radius_round_trip_matches_per_radius_plans() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut conn = PipelinedConn::connect(handle.addr()).unwrap();
+
+        let mut rng = Rng::new(41);
+        let y = Matrix::random_uniform(14, 33, -2.0, 2.0, &mut rng);
+        let etas = [0.4f64, 1.1, 2.7];
+        let spec = ProjectionSpec::l1inf(1.0);
+        let results = conn.project_multi(&multi_request(&spec, &etas, &y)).unwrap();
+        assert_eq!(results.len(), etas.len());
+        for (i, r) in results.into_iter().enumerate() {
+            let expect = ProjectionSpec::l1inf(etas[i]).project_matrix(&y).unwrap();
+            assert_eq!(r.unwrap(), expect.data(), "member {i} must be bit-identical");
+        }
+
+        conn.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn multi_radius_members_fail_alone() {
+        let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+        let handle = server.spawn();
+        let mut conn = PipelinedConn::connect(handle.addr()).unwrap();
+
+        let mut rng = Rng::new(42);
+        let y = Matrix::random_uniform(9, 21, -2.0, 2.0, &mut rng);
+        let spec = ProjectionSpec::l1inf(1.0);
+
+        // A NaN-poisoned middle member fails typed; its siblings still
+        // project bit-identically.
+        let mut req = multi_request(&spec, &[0.7, 0.7, 1.9], &y);
+        req.payloads[1][5] = f32::NAN;
+        let results = conn.project_multi(&req).unwrap();
+        assert!(
+            matches!(results[1], Err(MlprojError::InvalidArgument(_))),
+            "{:?}",
+            results[1]
+        );
+        for (i, eta) in [(0usize, 0.7f64), (2, 1.9)] {
+            let expect = ProjectionSpec::l1inf(eta).project_matrix(&y).unwrap();
+            assert_eq!(results[i].as_ref().unwrap(), expect.data(), "member {i}");
+        }
+
+        // A hostile radius fails alone too.
+        let req = multi_request(&spec, &[0.7, -3.0, 1.9], &y);
+        let results = conn.project_multi(&req).unwrap();
+        assert!(results[1].is_err(), "negative radius must fail its member");
+        assert!(results[0].is_ok() && results[2].is_ok(), "siblings must survive");
 
         conn.shutdown().unwrap();
         handle.join().unwrap();

@@ -43,12 +43,13 @@ pub mod telemetry;
 pub use cache::{PlanCache, PlanKey, ShardedPlanCache};
 pub use client::{Client, ClientPool, PipelinedConn};
 pub use protocol::{
-    BeginInfo, ChecksumKind, ChunkAssembler, ErrorCode, Frame, ProjectMeta, ProjectRequest,
-    Qos, RawHeader, WireLayout,
+    BeginInfo, ChecksumKind, ChunkAssembler, ErrorCode, Frame, MultiMemberResult, ProjectMeta,
+    ProjectMultiRequest, ProjectRequest, Qos, RawHeader, WireLayout,
 };
 pub use router::{spawn_backends, BackendSpawnOptions, Router, RouterHandle, RouterOptions};
 pub use scheduler::{
-    ConnReply, Job, JobQueue, PayloadPool, ReplySlot, ReplyTo, Scheduler, SchedulerConfig,
+    ConnReply, Job, JobQueue, MultiAgg, PayloadPool, ReplySlot, ReplyTo, Scheduler,
+    SchedulerConfig,
 };
 pub use server::{ServeOptions, Server, ServerHandle};
 pub use stats::ServiceStats;

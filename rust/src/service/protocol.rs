@@ -426,6 +426,82 @@ impl ProjectRequest {
     }
 }
 
+/// A multi-radius projection job: K same-shape payloads sharing one spec
+/// (norms, method, ℓ1 algorithm, layout, shape, `η₂`), each projected
+/// with its own radius `etas[i]` — the ensemble trainer's per-step
+/// traffic, coalescible server-side into one "same shape, many radii"
+/// kernel call. Members ride at the default QoS class with no deadline
+/// (an aggregate reply has no meaningful per-member deadline semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProjectMultiRequest {
+    /// Norm list `ν`, leading-axis norm first.
+    pub norms: Vec<Norm>,
+    /// Per-member ball radii, one per payload.
+    pub etas: Vec<f64>,
+    /// Second radius `η₂` shared by every member — meaningful (and on
+    /// the wire) only for the intersection methods; `0.0` otherwise.
+    pub eta2: f64,
+    /// ℓ1 threshold algorithm.
+    pub l1_algo: L1Algo,
+    /// Algorithm family.
+    pub method: Method,
+    /// Payload layout.
+    pub layout: WireLayout,
+    /// Shape (`[rows, cols]` for matrices, one entry per axis otherwise).
+    pub shape: Vec<usize>,
+    /// Flat member payloads, each of length = product of `shape`.
+    pub payloads: Vec<Vec<f32>>,
+}
+
+impl ProjectMultiRequest {
+    /// Short human-readable label ("linf,l1 K=4 64x32").
+    pub fn describe(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{} K={} {}", fmt_norms(&self.norms), self.etas.len(), dims.join("x"))
+    }
+
+    /// Encode-side hygiene (the multi-frame counterpart of
+    /// [`ProjectRequest::validate`]): member count in `1..=u16::MAX`,
+    /// one radius per payload, every payload matching the shape.
+    fn validate(&self) -> Result<()> {
+        if self.payloads.is_empty() || self.payloads.len() > u16::MAX as usize {
+            return Err(perr(format!(
+                "multi-radius member count {} out of range (1..={})",
+                self.payloads.len(),
+                u16::MAX
+            )));
+        }
+        if self.etas.len() != self.payloads.len() {
+            return Err(perr(format!(
+                "multi-radius request: {} payloads but {} radii",
+                self.payloads.len(),
+                self.etas.len()
+            )));
+        }
+        let want = self
+            .shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| perr(format!("shape {:?} element count overflows", self.shape)))?;
+        for (i, p) in self.payloads.iter().enumerate() {
+            if p.len() != want {
+                return Err(perr(format!(
+                    "member {i} has {} elements but shape {:?} needs {want}",
+                    p.len(),
+                    self.shape
+                )));
+            }
+        }
+        validate_spec(&self.norms, &self.shape, self.layout)
+    }
+}
+
+/// One member's outcome inside a [`Frame::ProjectMultiOk`] reply: the
+/// projected payload, or the member's wire error classification +
+/// message (members fail individually; the aggregate frame always
+/// carries every slot in request order).
+pub type MultiMemberResult = std::result::Result<Vec<f32>, (ErrorCode, String)>;
+
 // ---------------------------------------------------------------------------
 // Frames
 // ---------------------------------------------------------------------------
@@ -451,6 +527,10 @@ pub(crate) const T_STATS_V2_REQ: u8 = 14;
 pub(crate) const T_STATS_V2_RESP: u8 = 15;
 pub(crate) const T_TRACE_REQ: u8 = 16;
 pub(crate) const T_TRACE_RESP: u8 = 17;
+// v2-only multi-radius frames: K same-shape payloads sharing one spec,
+// each with its own radius η, answered as one aggregate reply.
+pub(crate) const T_PROJECT_MULTI: u8 = 18;
+pub(crate) const T_PROJECT_MULTI_OK: u8 = 19;
 
 // ---------------------------------------------------------------------------
 // Checksums (v2 chunked streams)
@@ -614,6 +694,16 @@ pub enum Frame {
     TraceRequest,
     /// Trace reply: the surviving trace-ring records, oldest first.
     TraceResponse(Vec<TraceRecord>),
+    /// v2: a multi-radius projection job (K same-shape payloads, one
+    /// spec, per-member radii). Body: the `Project` spec fields (`eta`
+    /// carries `etas[0]`, ignored on decode), then `k: u16`, `k × f64`
+    /// radii, and `k ×` (`count: u32`, `count × f32`) member payloads.
+    ProjectMulti(ProjectMultiRequest),
+    /// v2: aggregate multi-radius reply, member results in request
+    /// order. Body: `k: u16`, then per member `status: u8` — `0` +
+    /// (`count: u32`, `count × f32`) payload, or `1` + (`code: u8`,
+    /// `msg_len: u32`, UTF-8 message).
+    ProjectMultiOk(Vec<MultiMemberResult>),
 }
 
 impl Frame {
@@ -636,6 +726,8 @@ impl Frame {
             Frame::StatsV2Response(_) => T_STATS_V2_RESP,
             Frame::TraceRequest => T_TRACE_REQ,
             Frame::TraceResponse(_) => T_TRACE_RESP,
+            Frame::ProjectMulti(_) => T_PROJECT_MULTI,
+            Frame::ProjectMultiOk(_) => T_PROJECT_MULTI_OK,
         }
     }
 
@@ -647,6 +739,8 @@ impl Frame {
                 | Frame::ProjectChunk(_)
                 | Frame::ProjectEnd { .. }
                 | Frame::ProjectOkBegin { .. }
+                | Frame::ProjectMulti(_)
+                | Frame::ProjectMultiOk(_)
         )
     }
 
@@ -752,6 +846,42 @@ impl Frame {
             Frame::StatsV2Response(stats) => {
                 encode_stats_v2(&mut b, stats)?;
             }
+            Frame::ProjectMulti(req) => {
+                req.validate()?;
+                encode_spec_fields(
+                    &mut b, &req.norms, req.etas[0], req.eta2, req.l1_algo, req.method,
+                    req.layout, &req.shape,
+                )?;
+                b.extend_from_slice(&(req.etas.len() as u16).to_le_bytes());
+                for &eta in &req.etas {
+                    b.extend_from_slice(&eta.to_le_bytes());
+                }
+                for p in &req.payloads {
+                    write_f32s(&mut b, p)?;
+                }
+            }
+            Frame::ProjectMultiOk(results) => {
+                let k = u16::try_from(results.len())
+                    .map_err(|_| perr("too many multi-radius members"))?;
+                b.extend_from_slice(&k.to_le_bytes());
+                for r in results {
+                    match r {
+                        Ok(payload) => {
+                            b.push(0);
+                            write_f32s(&mut b, payload)?;
+                        }
+                        Err((code, msg)) => {
+                            b.push(1);
+                            b.push(code.to_u8());
+                            let bytes = msg.as_bytes();
+                            let len = u32::try_from(bytes.len())
+                                .map_err(|_| perr("error message exceeds u32 length"))?;
+                            b.extend_from_slice(&len.to_le_bytes());
+                            b.extend_from_slice(bytes);
+                        }
+                    }
+                }
+            }
             Frame::TraceResponse(records) => {
                 let n = u16::try_from(records.len())
                     .map_err(|_| perr("too many trace records"))?;
@@ -791,7 +921,11 @@ impl Frame {
     }
 
     fn decode_body(version: u8, ftype: u8, body: &[u8]) -> Result<Frame> {
-        if version == V1 && (T_PROJECT_BEGIN..=T_PROJECT_OK_BEGIN).contains(&ftype) {
+        if version == V1
+            && ((T_PROJECT_BEGIN..=T_PROJECT_OK_BEGIN).contains(&ftype)
+                || ftype == T_PROJECT_MULTI
+                || ftype == T_PROJECT_MULTI_OK)
+        {
             return Err(perr(format!(
                 "frame type {ftype} requires protocol v2 (header says v1)"
             )));
@@ -856,6 +990,56 @@ impl Frame {
                 check_stream_total(total_elems)?;
                 let checksum = ChecksumKind::from_u8(c.u8()?)?;
                 Frame::ProjectOkBegin { total_elems, checksum }
+            }
+            T_PROJECT_MULTI => {
+                let meta = parse_project_meta(&mut c)?;
+                let k = c.u16()? as usize;
+                if k == 0 {
+                    return Err(perr("multi-radius frame declares zero members"));
+                }
+                let mut etas = Vec::with_capacity(k);
+                for _ in 0..k {
+                    etas.push(f64::from_le_bytes(c.take(8)?.try_into().unwrap()));
+                }
+                let mut payloads = Vec::with_capacity(k);
+                for _ in 0..k {
+                    payloads.push(c.f32s()?);
+                }
+                // As with `Project`, only framing is checked here; a
+                // fully-framed but invalid member gets its typed error
+                // from the plan/projection layer, alone.
+                Frame::ProjectMulti(ProjectMultiRequest {
+                    norms: meta.norms,
+                    etas,
+                    eta2: meta.eta2,
+                    l1_algo: meta.l1_algo,
+                    method: meta.method,
+                    layout: meta.layout,
+                    shape: meta.shape,
+                    payloads,
+                })
+            }
+            T_PROJECT_MULTI_OK => {
+                let k = c.u16()? as usize;
+                let mut results: Vec<MultiMemberResult> = Vec::with_capacity(k.min(1024));
+                for _ in 0..k {
+                    match c.u8()? {
+                        0 => results.push(Ok(c.f32s()?)),
+                        1 => {
+                            let code = ErrorCode::from_u8(c.u8()?)?;
+                            let len = c.u32()? as usize;
+                            let msg = String::from_utf8(c.take(len)?.to_vec())
+                                .map_err(|_| perr("error message is not valid UTF-8"))?;
+                            results.push(Err((code, msg)));
+                        }
+                        other => {
+                            return Err(perr(format!(
+                                "unknown multi-radius member status byte {other}"
+                            )))
+                        }
+                    }
+                }
+                Frame::ProjectMultiOk(results)
             }
             T_STATS_V2_REQ => Frame::StatsV2Request,
             T_STATS_V2_RESP => Frame::StatsV2Response(decode_stats_v2(&mut c)?),
@@ -1506,6 +1690,52 @@ pub fn write_project_v2<W: Write>(w: &mut W, corr: u16, req: &ProjectRequest) ->
         tail[0] = req.qos.class;
         tail[1..5].copy_from_slice(&req.qos.deadline_us.to_le_bytes());
         w.write_all(&tail)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a v2 multi-radius `ProjectMulti` frame carrying `corr`,
+/// streaming the K member payloads from the borrowed request (no clone
+/// into a `Frame`). The multi frame has no chunked form: the whole body
+/// must fit the cap — oversized ensembles split across plain pipelined
+/// `Project` frames instead.
+pub fn write_project_multi_v2<W: Write>(
+    w: &mut W,
+    corr: u16,
+    req: &ProjectMultiRequest,
+) -> Result<()> {
+    req.validate()?;
+    let mut spec = Vec::new();
+    encode_spec_fields(
+        &mut spec, &req.norms, req.etas[0], req.eta2, req.l1_algo, req.method, req.layout,
+        &req.shape,
+    )?;
+    let k = req.payloads.len();
+    let elems = req.payloads[0].len();
+    let count = u32::try_from(elems).map_err(|_| perr("payload exceeds u32 element count"))?;
+    let body_len = spec.len() + 2 + 8 * k + k * (4 + 4 * elems);
+    if body_len > MAX_BODY_BYTES {
+        return Err(perr(format!(
+            "multi-radius frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte \
+             cap (split the ensemble across pipelined Project frames)"
+        )));
+    }
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = V2;
+    head[5] = T_PROJECT_MULTI;
+    head[6..8].copy_from_slice(&corr.to_le_bytes());
+    head[8..12].copy_from_slice(&(body_len as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&spec)?;
+    w.write_all(&(k as u16).to_le_bytes())?;
+    for &eta in &req.etas {
+        w.write_all(&eta.to_le_bytes())?;
+    }
+    for p in &req.payloads {
+        w.write_all(&count.to_le_bytes())?;
+        write_payload_bytes(w, p)?;
     }
     w.flush()?;
     Ok(())
@@ -2304,6 +2534,69 @@ mod tests {
             forged[4] = V1;
             assert!(matches!(Frame::decode(&forged), Err(MlprojError::Protocol(_))));
         }
+    }
+
+    fn sample_multi_request() -> ProjectMultiRequest {
+        ProjectMultiRequest {
+            norms: vec![Norm::Linf, Norm::L1],
+            etas: vec![0.5, 1.5, 3.0],
+            eta2: 0.0,
+            l1_algo: L1Algo::Condat,
+            method: Method::Compositional,
+            layout: WireLayout::Matrix,
+            shape: vec![2, 3],
+            payloads: vec![
+                vec![1.0, -2.0, 3.5, 0.0, -0.25, 7.0],
+                vec![0.5, 0.5, -0.5, -0.5, 2.0, -2.0],
+                vec![9.0, -9.0, 0.0, 1.0, -1.0, 0.125],
+            ],
+        }
+    }
+
+    #[test]
+    fn multi_radius_frames_roundtrip_under_v2_and_v1_rejects_them() {
+        let req = Frame::ProjectMulti(sample_multi_request());
+        let ok = Frame::ProjectMultiOk(vec![
+            Ok(vec![0.5, -1.0, f32::MAX]),
+            Err((ErrorCode::Invalid, "payload 1 contains NaN".into())),
+            Ok(vec![]),
+        ]);
+        for frame in [req, ok] {
+            assert!(matches!(frame.encode(), Err(MlprojError::Protocol(_))), "{frame:?}");
+            let bytes = frame.encode_v2(7).unwrap();
+            assert_eq!(Frame::decode(&bytes).unwrap(), frame, "{frame:?}");
+            let mut forged = bytes.clone();
+            forged[4] = V1;
+            assert!(matches!(Frame::decode(&forged), Err(MlprojError::Protocol(_))));
+        }
+    }
+
+    #[test]
+    fn multi_radius_encode_rejects_member_disagreement() {
+        // Radii/payload count mismatch.
+        let mut req = sample_multi_request();
+        req.etas.pop();
+        let frame = Frame::ProjectMulti(req);
+        assert!(matches!(frame.encode_v2(0), Err(MlprojError::Protocol(_))));
+        // A member whose payload length disagrees with the shared shape.
+        let mut req = sample_multi_request();
+        req.payloads[1].pop();
+        let frame = Frame::ProjectMulti(req);
+        assert!(matches!(frame.encode_v2(0), Err(MlprojError::Protocol(_))));
+        // Zero members never leaves the client.
+        let mut req = sample_multi_request();
+        req.etas.clear();
+        req.payloads.clear();
+        let frame = Frame::ProjectMulti(req);
+        assert!(matches!(frame.encode_v2(0), Err(MlprojError::Protocol(_))));
+    }
+
+    #[test]
+    fn write_project_multi_v2_matches_frame_encoding() {
+        let req = sample_multi_request();
+        let mut streamed = Vec::new();
+        write_project_multi_v2(&mut streamed, 0xBEEF, &req).unwrap();
+        assert_eq!(streamed, Frame::ProjectMulti(req).encode_v2(0xBEEF).unwrap());
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! [`ProjectionPlan::project_batch_inplace`]: crate::projection::ProjectionPlan::project_batch_inplace
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -188,6 +188,67 @@ pub enum ConnReply {
         /// The frame to write.
         frame: crate::service::protocol::Frame,
     },
+    /// A finished multi-radius request: per-member results in request
+    /// order, assembled by [`MultiAgg`] and written as one
+    /// `ProjectMultiOk` frame.
+    MultiProject {
+        /// Correlation id copied from the request frame.
+        corr: u16,
+        /// Per-member projected payloads or typed errors, request order.
+        results: Vec<Result<Vec<f32>>>,
+    },
+}
+
+/// Fan-in aggregator for a multi-radius request: its K member jobs each
+/// deliver into a fixed slot, and the last delivery posts the assembled
+/// reply (member order preserved) to the connection's writer channel.
+/// Members dropped unfinished deliver through [`Job`]'s `Drop`, so the
+/// aggregate always completes.
+#[derive(Debug)]
+pub struct MultiAgg {
+    corr: u16,
+    tx: std::sync::mpsc::Sender<ConnReply>,
+    slots: Mutex<Vec<Option<Result<Vec<f32>>>>>,
+    remaining: AtomicUsize,
+}
+
+impl MultiAgg {
+    /// New aggregator expecting `k` member deliveries for correlation id
+    /// `corr`, replying on `tx`.
+    pub fn new(k: usize, tx: std::sync::mpsc::Sender<ConnReply>, corr: u16) -> Arc<MultiAgg> {
+        Arc::new(MultiAgg {
+            corr,
+            tx,
+            slots: Mutex::new((0..k).map(|_| None).collect()),
+            remaining: AtomicUsize::new(k),
+        })
+    }
+
+    /// Deliver member `idx`'s result; the final delivery sends the
+    /// assembled multi reply (a disconnected writer drops it, exactly
+    /// like a single-projection reply).
+    fn deliver(&self, idx: usize, result: Result<Vec<f32>>) {
+        {
+            let mut slots = self.slots.lock().expect("multi slots poisoned");
+            debug_assert!(slots[idx].is_none(), "multi member {idx} delivered twice");
+            slots[idx] = Some(result);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let slots =
+                std::mem::take(&mut *self.slots.lock().expect("multi slots poisoned"));
+            let results = slots
+                .into_iter()
+                .map(|r| {
+                    r.unwrap_or_else(|| {
+                        Err(MlprojError::Runtime(
+                            "scheduler dropped the job before completion".into(),
+                        ))
+                    })
+                })
+                .collect();
+            let _ = self.tx.send(ConnReply::MultiProject { corr: self.corr, results });
+        }
+    }
 }
 
 /// Where a job's result is delivered: a blocking [`ReplySlot`]
@@ -205,6 +266,15 @@ pub enum ReplyTo {
         /// Correlation id of the originating request.
         corr: u16,
     },
+    /// One member of a multi-radius request: delivery fills slot `idx`
+    /// in the shared aggregator; the last member posts the combined
+    /// reply.
+    Multi {
+        /// Shared fan-in aggregator for the whole request.
+        agg: Arc<MultiAgg>,
+        /// This member's slot in the aggregate reply.
+        idx: usize,
+    },
 }
 
 impl ReplyTo {
@@ -216,6 +286,7 @@ impl ReplyTo {
                 // the result.
                 let _ = tx.send(ConnReply::Project { corr, result });
             }
+            ReplyTo::Multi { agg, idx } => agg.deliver(idx, result),
         }
     }
 }
@@ -272,6 +343,20 @@ impl Job {
         }
     }
 
+    /// New member job of a multi-radius request, delivering into slot
+    /// `idx` of the shared aggregator.
+    pub fn with_multi(key: PlanKey, payload: Vec<f32>, agg: Arc<MultiAgg>, idx: usize) -> Job {
+        Job {
+            key,
+            payload,
+            reply: Some(ReplyTo::Multi { agg, idx }),
+            t_enqueue: Instant::now(),
+            decode_ns: 0,
+            class: Qos::DEFAULT_CLASS,
+            deadline: None,
+        }
+    }
+
     /// Attach the request's frame-decode duration so its trace record
     /// carries the decode stage too.
     pub fn with_decode_ns(mut self, ns: u64) -> Job {
@@ -303,6 +388,7 @@ impl Job {
     fn corr(&self) -> u16 {
         match &self.reply {
             Some(ReplyTo::Channel { corr, .. }) => *corr,
+            Some(ReplyTo::Multi { agg, .. }) => agg.corr,
             _ => 0,
         }
     }
@@ -470,16 +556,28 @@ impl JobQueue {
     /// the relative order of the rest. The window is `batch_max` scaled
     /// by [`adaptive_batch_max`]: wider as the queue fills. `batch` must
     /// arrive holding exactly the first job.
+    ///
+    /// When the leading key is multi-radius eligible
+    /// ([`PlanKey::multi_radius_eligible`]) the match is relaxed to
+    /// "same except η": jobs that differ only in radius coalesce into
+    /// one batch and run through the per-radius kernel form — the
+    /// (shape, method) coalescing the many-radii ensemble traffic needs.
     pub fn fill_batch(&self, batch: &mut Vec<Job>, batch_max: usize) {
         debug_assert_eq!(batch.len(), 1);
         if batch_max <= 1 {
             return;
         }
+        let lead_multi = batch[0].key.multi_radius_eligible();
         let mut q = self.queue.lock().expect("job queue poisoned");
         let window = adaptive_batch_max(batch_max, q.len(), self.depth);
         let mut i = 0;
         while i < q.len() && batch.len() < window {
-            if q[i].key == batch[0].key {
+            let matches = if lead_multi {
+                q[i].key.same_except_eta(&batch[0].key)
+            } else {
+                q[i].key == batch[0].key
+            };
+            if matches {
                 batch.push(q.remove(i).expect("index checked"));
             } else {
                 i += 1;
@@ -543,9 +641,11 @@ impl Scheduler {
                         ExecBackend::Serial
                     };
                     // Worker-owned, warm-reused buffers: the batch under
-                    // execution and the payloads moved out of it.
+                    // execution, the payloads moved out of it, and the
+                    // per-member radii of a mixed-η batch.
                     let mut batch: Vec<Job> = Vec::new();
                     let mut payloads: Vec<Vec<f32>> = Vec::new();
+                    let mut etas: Vec<f64> = Vec::new();
                     while let Some(job) = queue.pop() {
                         batch.push(job);
                         if telemetry.is_enabled() {
@@ -563,6 +663,7 @@ impl Scheduler {
                             &backend,
                             &mut batch,
                             &mut payloads,
+                            &mut etas,
                         );
                     }
                 })
@@ -615,13 +716,17 @@ impl Drop for Scheduler {
     }
 }
 
-/// Execute one same-key batch: a single plan lookup on the worker's own
-/// cache shard, then one pooled [`project_batch_inplace`] over every
-/// payload. `batch` is drained; `payloads` is caller-owned scratch so a
-/// warm worker allocates nothing. Public so the allocation-audit tests
+/// Execute one same-key (or same-except-η, for the multi-radius family)
+/// batch: a single plan lookup on the worker's own cache shard, then one
+/// pooled [`project_batch_inplace`] — or, when the coalesced radii
+/// differ, one [`project_batch_inplace_radii`] — over every payload.
+/// `batch` is drained; `payloads` and `etas` are caller-owned scratch so
+/// a warm worker allocates nothing. Public so the allocation-audit tests
 /// can drive the exact worker body.
 ///
 /// [`project_batch_inplace`]: crate::projection::ProjectionPlan::project_batch_inplace
+/// [`project_batch_inplace_radii`]: crate::projection::ProjectionPlan::project_batch_inplace_radii
+#[allow(clippy::too_many_arguments)]
 pub fn run_batch(
     worker: usize,
     cache: &ShardedPlanCache,
@@ -630,6 +735,7 @@ pub fn run_batch(
     backend: &ExecBackend,
     batch: &mut Vec<Job>,
     payloads: &mut Vec<Vec<f32>>,
+    etas: &mut Vec<f64>,
 ) {
     if batch.is_empty() {
         return;
@@ -712,6 +818,35 @@ pub fn run_batch(
             return;
         }
     }
+    // A coalesced batch may mix radii (fill_batch admits that only for
+    // multi-radius-eligible keys). The uniform path validates η once at
+    // plan compile; here each member's η must be swept *individually*
+    // first — a hostile radius fails alone, never its batchmates — and
+    // the survivors run through the per-radius kernel form against the
+    // lead key's compiled plan (bit-identical to one plan per radius).
+    if batch.iter().any(|j| j.key.eta_bits != batch[0].key.eta_bits) {
+        let mut i = 0;
+        while i < batch.len() {
+            let eta = batch[i].key.eta();
+            if eta.is_finite() && eta >= 0.0 {
+                i += 1;
+            } else {
+                let job = batch.remove(i);
+                job.finish(Err(MlprojError::InvalidRadius { eta }));
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
+    }
+    let mixed = batch.iter().any(|j| j.key.eta_bits != batch[0].key.eta_bits);
+    if mixed {
+        ServiceStats::bump(&stats.multi_radius_batches);
+    }
+    etas.clear();
+    for job in batch.iter() {
+        etas.push(job.key.eta());
+    }
     // Move the payloads out of the jobs (buffer reuse, not copies).
     payloads.clear();
     for job in batch.iter_mut() {
@@ -724,7 +859,11 @@ pub fn run_batch(
         let key = &batch[0].key;
         cache.with_plan(Some(worker), key, backend, |plan| {
             kernel = plan.pinned_kernel();
-            plan.project_batch_inplace(payloads)
+            if mixed {
+                plan.project_batch_inplace_radii(payloads, etas)
+            } else {
+                plan.project_batch_inplace(payloads)
+            }
         })
     };
     let project_ns = t_project.map(|t0| t0.elapsed().as_nanos() as u64).unwrap_or(0);
@@ -1022,6 +1161,7 @@ mod tests {
             &backend,
             &mut batch,
             &mut Vec::new(),
+            &mut Vec::new(),
         );
         assert!(matches!(expired_slot.take(), Err(MlprojError::DeadlineExceeded)));
         assert!(live_slot.take().is_ok(), "in-budget job still runs");
@@ -1126,7 +1266,16 @@ mod tests {
             .map(|(y, s)| Job::new(key.clone(), y.data().to_vec(), Arc::clone(s)))
             .collect();
         let mut payloads = Vec::new();
-        run_batch(0, &cache, &stats, &Telemetry::disabled(), &backend, &mut batch, &mut payloads);
+        run_batch(
+            0,
+            &cache,
+            &stats,
+            &Telemetry::disabled(),
+            &backend,
+            &mut batch,
+            &mut payloads,
+            &mut Vec::new(),
+        );
         for (y, slot) in inputs.iter().zip(&slots) {
             let expect = ProjectionSpec::l1inf(0.9).project_matrix(y).unwrap();
             assert_eq!(&slot.take().unwrap()[..], expect.data());
@@ -1165,6 +1314,7 @@ mod tests {
             &backend,
             &mut batch,
             &mut Vec::new(),
+            &mut Vec::new(),
         );
         assert!(good_slot.take().is_ok());
         assert!(matches!(bad_slot.take(), Err(MlprojError::ShapeMismatch { .. })));
@@ -1193,7 +1343,16 @@ mod tests {
                     .with_decode_ns(777)
             })
             .collect();
-        run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut Vec::new());
+        run_batch(
+            0,
+            &cache,
+            &stats,
+            &telemetry,
+            &backend,
+            &mut batch,
+            &mut Vec::new(),
+            &mut Vec::new(),
+        );
         for _ in 0..3 {
             match rx.recv().unwrap() {
                 ConnReply::Project { result, .. } => assert!(result.is_ok()),

@@ -43,7 +43,7 @@ use crate::service::protocol::{
     self, ChunkAssembler, ErrorCode, Frame, ProjectMeta, RawHeader, ServerFrame, V1, V2,
 };
 use crate::service::scheduler::{
-    ConnReply, Job, PayloadPool, ReplySlot, Scheduler, SchedulerConfig,
+    ConnReply, Job, MultiAgg, PayloadPool, ReplySlot, Scheduler, SchedulerConfig,
 };
 use crate::service::stats::ServiceStats;
 use crate::service::telemetry::{local_stats_v2, Stage, Telemetry};
@@ -538,6 +538,40 @@ fn conn_writer(
                 }
                 inflight.dec();
             }
+            ConnReply::MultiProject { corr, results } => {
+                // One aggregate frame per multi-radius request; member
+                // results are classified to wire errors here so the
+                // frame layer stays error-type agnostic.
+                let t_ser = if telemetry.is_enabled() { Some(Instant::now()) } else { None };
+                let members: Vec<protocol::MultiMemberResult> = results
+                    .into_iter()
+                    .map(|r| match r {
+                        Ok(projected) => {
+                            ServiceStats::bump(&stats.responses_ok);
+                            ServiceStats::add(
+                                &stats.payload_bytes_out,
+                                4 * projected.len() as u64,
+                            );
+                            Ok(projected)
+                        }
+                        Err(e) => {
+                            ServiceStats::bump(&stats.responses_err);
+                            Err((ErrorCode::from_error(&e), format!("{e}")))
+                        }
+                    })
+                    .collect();
+                if !dead {
+                    let t_wr = t_ser.map(|t0| {
+                        telemetry.record(Stage::Serialize, t0.elapsed().as_nanos() as u64);
+                        Instant::now()
+                    });
+                    dead = Frame::ProjectMultiOk(members).write_to_v2(&mut stream, corr).is_err();
+                    if let Some(t0) = t_wr {
+                        telemetry.record(Stage::Write, t0.elapsed().as_nanos() as u64);
+                    }
+                }
+                inflight.dec();
+            }
         }
     }
 }
@@ -639,6 +673,45 @@ fn v2_reader_loop(
         // A Busy rejection already delivered a typed error through the
         // channel (with this corr); nothing more to do here.
         let _ = scheduler.try_submit(job);
+    };
+    // Fan a multi-radius request out as K member jobs sharing one
+    // aggregator; the last member's delivery posts the aggregate reply.
+    // Member keys differ only in η, and the members enter the queue
+    // back-to-back, so an eligible family coalesces into one mixed-η
+    // micro-batch. The whole aggregate holds ONE in-flight slot (one
+    // reply frame), decremented when the writer flushes it.
+    let submit_multi = |req: protocol::ProjectMultiRequest, corr: u16| {
+        let k = req.payloads.len();
+        ServiceStats::add(&stats.requests_total, k as u64);
+        ServiceStats::add(&stats.requests_pipelined, k as u64);
+        for p in &req.payloads {
+            ServiceStats::add(&stats.payload_bytes_in, 4 * p.len() as u64);
+        }
+        let depth = inflight.inc();
+        ServiceStats::raise(&stats.inflight_max, depth);
+        if depth > opts.max_inflight as u64 {
+            ServiceStats::bump(&stats.busy_rejections);
+            let results = (0..k).map(|_| Err(MlprojError::ServiceBusy)).collect();
+            let _ = tx.send(ConnReply::MultiProject { corr, results });
+            return;
+        }
+        let agg = MultiAgg::new(k, tx.clone(), corr);
+        let etas = req.etas;
+        for (idx, (payload, eta)) in req.payloads.into_iter().zip(etas).enumerate() {
+            let key = PlanKey {
+                norms: req.norms.clone(),
+                eta_bits: eta.to_bits(),
+                eta2_bits: req.eta2.to_bits(),
+                l1_algo: req.l1_algo,
+                method: req.method,
+                layout: req.layout,
+                shape: req.shape.clone(),
+            };
+            // A rejected member (Busy/Shed) is *finished* by the queue's
+            // admission path, which delivers into its aggregate slot —
+            // the other members proceed normally.
+            let _ = scheduler.try_submit(Job::with_multi(key, payload, Arc::clone(&agg), idx));
+        }
     };
     let control = |corr: u16, frame: Frame| {
         inflight.inc();
@@ -794,6 +867,19 @@ fn v2_reader_loop(
                         }
                     }
                     Ok(_) => unreachable!("T_PROJECT_END decodes to ProjectEnd"),
+                    Err(e) => {
+                        close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
+                        break;
+                    }
+                }
+            }
+            protocol::T_PROJECT_MULTI => {
+                // Aggregate frame, decoded whole (per-member payload
+                // vectors are handed straight to the member jobs).
+                let decoded = protocol::decode_client_frame(head.version, head.ftype, &body);
+                match decoded {
+                    Ok(Frame::ProjectMulti(req)) => submit_multi(req, corr),
+                    Ok(_) => unreachable!("T_PROJECT_MULTI decodes to ProjectMulti"),
                     Err(e) => {
                         close_error = Some((ErrorCode::from_error(&e), format!("{e}"), corr));
                         break;

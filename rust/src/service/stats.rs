@@ -32,6 +32,9 @@ pub struct ServiceStats {
     pub batches: AtomicU64,
     /// Requests that rode in a batch of size ≥ 2.
     pub batched_requests: AtomicU64,
+    /// Micro-batches whose members coalesced across *different* radii
+    /// (the "same shape, many radii" fast path).
+    pub multi_radius_batches: AtomicU64,
     /// Largest micro-batch executed so far (monotonic high-water mark,
     /// not a delta — the observable for the cross-request batching win).
     pub batch_size_max: AtomicU64,
@@ -122,6 +125,7 @@ impl ServiceStats {
             ("deadline_met", ld(&self.deadline_met)),
             ("batches", ld(&self.batches)),
             ("batched_requests", ld(&self.batched_requests)),
+            ("multi_radius_batches", ld(&self.multi_radius_batches)),
             ("batch_size_max", ld(&self.batch_size_max)),
             ("cache_hits", ld(&self.cache_hits)),
             ("cache_misses", ld(&self.cache_misses)),

@@ -258,6 +258,37 @@ fn warm_batch_projects_without_heap_allocation() {
 }
 
 #[test]
+fn warm_multi_radius_batch_projects_without_heap_allocation() {
+    // The ensemble fast path: one plan, K payloads, K distinct radii in a
+    // single `project_batch_inplace_radii` call. Same bar as the uniform
+    // batch — the per-payload radius substitution must ride the existing
+    // workspace, not allocate.
+    use mlproj::core::matrix::Matrix;
+    let _guard = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(51);
+    let mut plan = ProjectionSpec::l1inf(1.0).compile_for_matrix(16, 24).unwrap();
+    assert!(plan.supports_multi_radius(), "compositional bi-level plan must coalesce radii");
+    let etas = [0.25, 1.0, 2.5, 40.0];
+    let mk_batch = |rng: &mut Rng| -> Vec<Vec<f32>> {
+        (0..etas.len())
+            .map(|_| Matrix::random_uniform(16, 24, -1.0, 1.0, rng).data().to_vec())
+            .collect()
+    };
+    let mut warm = mk_batch(&mut rng);
+    plan.project_batch_inplace_radii(&mut warm, &etas).unwrap();
+
+    let mut batch = mk_batch(&mut rng);
+    let originals = batch.clone();
+    let before = alloc_calls();
+    plan.project_batch_inplace_radii(&mut batch, &etas).unwrap();
+    let after = alloc_calls();
+    assert_eq!(after - before, 0, "warm multi-radius batch allocated {} times", after - before);
+    // The tight radii did real work; the in-ball radius left its payload alone.
+    assert_ne!(batch[0], originals[0], "η=0.25 member did no work");
+    assert_eq!(batch[3], originals[3], "η=40 member should already be inside the ball");
+}
+
+#[test]
 fn pooled_v2_payload_decode_allocates_nothing_for_the_payload() {
     // The pipelined (v2) request path used to allocate one payload
     // vector per request; with the per-connection PayloadPool the warm
@@ -443,7 +474,17 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
         .map(|s| Job::new(key.clone(), payload_for(&mut rng).data().to_vec(), Arc::clone(s)))
         .collect();
     let mut payload_bufs: Vec<Vec<f32>> = Vec::with_capacity(B);
-    run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut payload_bufs);
+    let mut eta_bufs: Vec<f64> = Vec::with_capacity(B);
+    run_batch(
+        0,
+        &cache,
+        &stats,
+        &telemetry,
+        &backend,
+        &mut batch,
+        &mut payload_bufs,
+        &mut eta_bufs,
+    );
     // Recover the payload vectors from the slots: the warm measured pass
     // reuses them, exactly like a connection handler recycles its buffer.
     let mut recycled: Vec<Vec<f32>> = slots.iter().map(|s| s.take().unwrap()).collect();
@@ -456,7 +497,16 @@ fn warm_scheduler_batch_executes_without_heap_allocation() {
     }
 
     let before = alloc_calls();
-    run_batch(0, &cache, &stats, &telemetry, &backend, &mut batch, &mut payload_bufs);
+    run_batch(
+        0,
+        &cache,
+        &stats,
+        &telemetry,
+        &backend,
+        &mut batch,
+        &mut payload_bufs,
+        &mut eta_bufs,
+    );
     let after = alloc_calls();
     assert_eq!(
         after - before,

@@ -44,8 +44,8 @@ use mlproj::projection::linf1_exact::project_linf1_newton;
 use mlproj::projection::norms::aggregate_leading_norm;
 use mlproj::projection::{ExecBackend, Method, Norm, ProjectionSpec};
 use mlproj::service::{
-    Client, PipelinedConn, ProjectRequest, Qos, Router, RouterOptions, SchedulerConfig,
-    Server, WireLayout,
+    Client, PipelinedConn, ProjectMultiRequest, ProjectRequest, Qos, Router, RouterOptions,
+    SchedulerConfig, Server, WireLayout,
 };
 
 const CASES: usize = 200;
@@ -730,6 +730,217 @@ fn overloaded_wire_replies_remain_bit_identical() {
     let get = |n: &str| stats.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap_or(0);
     assert_eq!(get("shed_jobs"), shed, "{stats:?}");
     assert_eq!(get("expired_jobs"), expired, "{stats:?}");
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-radius frames: the ensemble trainer's wire path
+// ---------------------------------------------------------------------------
+
+/// One multi-radius wire scenario: a spec family the `ProjectMulti`
+/// frame must carry, whatever the kernel's multi-radius eligibility.
+struct MultiCase {
+    method: Method,
+    norms: Vec<Norm>,
+    layout: WireLayout,
+    shape: Vec<usize>,
+    eta2: f64,
+}
+
+fn multi_cases() -> Vec<MultiCase> {
+    let mat = |method, norms: Vec<Norm>, shape: Vec<usize>| MultiCase {
+        method,
+        norms,
+        layout: WireLayout::Matrix,
+        shape,
+        eta2: 0.0,
+    };
+    vec![
+        // The coalescible fast path: compositional bi-level matrix
+        // kernels dispatch one batched call with per-payload radii.
+        mat(Method::Compositional, vec![Norm::Linf, Norm::L1], vec![9, 14]),
+        mat(Method::Compositional, vec![Norm::L2, Norm::L1], vec![7, 11]),
+        // Every exact method rides the same frame; distinct radii mean
+        // distinct plan keys, so these run per-member server-side.
+        mat(Method::ExactNewton, vec![Norm::Linf, Norm::L1], vec![8, 12]),
+        mat(Method::ExactSortScan, vec![Norm::Linf, Norm::L1], vec![8, 12]),
+        mat(Method::ExactLinf1Newton, vec![Norm::Linf, Norm::L1], vec![6, 13]),
+        mat(Method::BilevelL21Energy, vec![Norm::L2, Norm::L1], vec![6, 10]),
+        MultiCase {
+            method: Method::ExactFlatL1,
+            norms: vec![Norm::L1],
+            layout: WireLayout::Tensor,
+            shape: vec![40],
+            eta2: 0.0,
+        },
+        MultiCase {
+            method: Method::IntersectL1L2,
+            norms: vec![Norm::L1, Norm::L2],
+            layout: WireLayout::Tensor,
+            shape: vec![30],
+            eta2: 1.3,
+        },
+        MultiCase {
+            method: Method::IntersectL1Linf,
+            norms: vec![Norm::L1, Norm::Linf],
+            layout: WireLayout::Tensor,
+            shape: vec![30],
+            eta2: 0.8,
+        },
+    ]
+}
+
+/// Fresh single-radius plan result for one member — the ground truth a
+/// multi-frame member must reproduce bit-for-bit.
+fn single_radius_expected(mc: &MultiCase, eta: f64, payload: &[f32], ctx: &str) -> Vec<f32> {
+    let spec = ProjectionSpec::new(mc.norms.clone(), eta)
+        .with_l1_algo(L1Algo::Condat)
+        .with_method(mc.method)
+        .with_eta2(mc.eta2);
+    let mut plan = if mc.layout == WireLayout::Matrix {
+        spec.compile_for_matrix(mc.shape[0], mc.shape[1]).expect(ctx)
+    } else {
+        spec.compile(&mc.shape).expect(ctx)
+    };
+    let mut x = payload.to_vec();
+    plan.project_inplace(&mut x).expect(ctx);
+    x
+}
+
+#[test]
+fn multi_radius_wire_matches_per_radius_plans_for_every_method() {
+    // Every Method family, K radii per frame (degenerate 0, ordinary,
+    // and in-ball 1e6 included): each member's wire reply must be
+    // bit-identical to a fresh in-process single-radius plan.
+    let cfg = SchedulerConfig { workers: 2, queue_depth: 256, ..SchedulerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", &cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    conn.ping().unwrap();
+
+    let master = master_seed();
+    let etas = [0.0, 0.6, 1.7, 1e6];
+    let mut covered = std::collections::HashSet::new();
+    for (ci, mc) in multi_cases().iter().enumerate() {
+        covered.insert(format!("{:?}", mc.method));
+        let case_seed = master ^ 0xE15 ^ (ci as u64).wrapping_mul(GOLDEN);
+        let mut rng = Rng::new(case_seed);
+        let len: usize = mc.shape.iter().product();
+        let payloads: Vec<Vec<f32>> = (0..etas.len())
+            .map(|_| {
+                let mut d = vec![0.0f32; len];
+                rng.fill_uniform(&mut d, -2.0, 2.0);
+                d
+            })
+            .collect();
+        let ctx = format!(
+            "multi case {ci} (seed {case_seed}): {:?} {:?} shape {:?}",
+            mc.method, mc.norms, mc.shape
+        );
+        let expected: Vec<Vec<f32>> = etas
+            .iter()
+            .zip(&payloads)
+            .map(|(&eta, p)| single_radius_expected(mc, eta, p, &ctx))
+            .collect();
+        let req = ProjectMultiRequest {
+            norms: mc.norms.clone(),
+            etas: etas.to_vec(),
+            eta2: mc.eta2,
+            l1_algo: L1Algo::Condat,
+            method: mc.method,
+            layout: mc.layout,
+            shape: mc.shape.clone(),
+            payloads,
+        };
+        let results = conn.project_multi(&req).expect(&ctx);
+        assert_eq!(results.len(), etas.len(), "{ctx}");
+        for (m, (res, want)) in results.into_iter().zip(&expected).enumerate() {
+            assert_eq!(&res.expect(&ctx), want, "member {m} diverged: {ctx}");
+        }
+    }
+    // Lockstep with Method::ALL: a new variant must join this test.
+    assert_eq!(covered.len(), Method::ALL.len(), "cover every method family: {covered:?}");
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn multi_radius_poisoned_member_fails_alone_over_the_wire() {
+    // PR 9's invariant carried to the aggregate frame: one member with a
+    // non-finite payload (or a hostile radius) fails with a typed error
+    // while its siblings' replies stay bit-identical.
+    let server = Server::bind("127.0.0.1:0", &SchedulerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let mut conn = PipelinedConn::connect(addr).unwrap();
+    conn.ping().unwrap();
+
+    let mc = MultiCase {
+        method: Method::Compositional,
+        norms: vec![Norm::Linf, Norm::L1],
+        layout: WireLayout::Matrix,
+        shape: vec![10, 12],
+        eta2: 0.0,
+    };
+    let mut rng = Rng::new(master_seed() ^ 0xF00D);
+    let len = 10 * 12;
+    let mut payloads: Vec<Vec<f32>> = (0..3)
+        .map(|_| {
+            let mut d = vec![0.0f32; len];
+            rng.fill_uniform(&mut d, -2.0, 2.0);
+            d
+        })
+        .collect();
+
+    // Case 1: NaN in the middle member.
+    let etas = [0.5, 1.1, 2.3];
+    payloads[1][17] = f32::NAN;
+    let want0 = single_radius_expected(&mc, etas[0], &payloads[0], "poisoned member 0");
+    let want2 = single_radius_expected(&mc, etas[2], &payloads[2], "poisoned member 2");
+    let req = ProjectMultiRequest {
+        norms: mc.norms.clone(),
+        etas: etas.to_vec(),
+        eta2: 0.0,
+        l1_algo: L1Algo::Condat,
+        method: mc.method,
+        layout: mc.layout,
+        shape: mc.shape.clone(),
+        payloads: payloads.clone(),
+    };
+    let results = conn.project_multi(&req).expect("poisoned frame");
+    assert_eq!(results[0].as_ref().expect("member 0"), &want0);
+    assert!(
+        matches!(&results[1], Err(MlprojError::InvalidArgument(_))),
+        "NaN member must fail typed, got {:?}",
+        results[1]
+    );
+    assert_eq!(results[2].as_ref().expect("member 2"), &want2);
+
+    // Case 2: clean payloads, one hostile (negative) radius.
+    payloads[1][17] = 0.25;
+    let etas = [0.5, -3.0, 2.3];
+    let want0 = single_radius_expected(&mc, etas[0], &payloads[0], "hostile member 0");
+    let want2 = single_radius_expected(&mc, etas[2], &payloads[2], "hostile member 2");
+    let req = ProjectMultiRequest {
+        norms: mc.norms.clone(),
+        etas: etas.to_vec(),
+        eta2: 0.0,
+        l1_algo: L1Algo::Condat,
+        method: mc.method,
+        layout: mc.layout,
+        shape: mc.shape.clone(),
+        payloads,
+    };
+    let results = conn.project_multi(&req).expect("hostile-radius frame");
+    assert_eq!(results[0].as_ref().expect("member 0"), &want0);
+    assert!(results[1].is_err(), "negative radius must fail, got {:?}", results[1]);
+    assert_eq!(results[2].as_ref().expect("member 2"), &want2);
+
+    let mut ctl = Client::connect(addr).unwrap();
     ctl.shutdown().unwrap();
     handle.join().unwrap();
 }
